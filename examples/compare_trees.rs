@@ -1,0 +1,82 @@
+//! Side-by-side engine comparison on one workload: runs the paper's
+//! baseline matrix (vanilla, sequence spec, SpecInfer, Sequoia, vLLM-Spec,
+//! Yggdrasil) over a handful of prompts and prints the Fig. 6-style
+//! AAL / step-latency / TPOT table plus greedy-output equality checks.
+//!
+//! ```bash
+//! cargo run --release --example compare_trees [dataset] [n_prompts]
+//! ```
+
+use yggdrasil::baselines::build_engine;
+use yggdrasil::corpus::PromptSet;
+use yggdrasil::engine::{profiling, Engine};
+use yggdrasil::metrics::Table;
+use yggdrasil::runtime::Runtime;
+
+fn main() -> yggdrasil::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(|s| s.as_str()).unwrap_or("c4s").to_string();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let max_new = 48;
+
+    let artifacts = std::path::Path::new("artifacts");
+    let rt = Runtime::load(artifacts, &["dft-xs", "tgt-sm"])?;
+    let lat = profiling::load_or_profile(
+        &rt,
+        "dft-xs",
+        "tgt-sm",
+        Some(&artifacts.join("profile.json")),
+        5,
+    )?;
+    let prompts = PromptSet::load(artifacts, &dataset)?;
+
+    let mut table = Table::new(&["engine", "AAL", "step_ms", "tpot_ms", "greedy_match"])
+        .with_title(&format!("engine comparison on {dataset} ({n} prompts × {max_new} tokens)"));
+
+    // Reference greedy outputs from the vanilla engine.
+    let mut vanilla = build_engine(&rt, "vanilla", ("dft-xs", "tgt-sm"), &lat)?;
+    let _ = vanilla.generate(&prompts.prompts[0], 4)?; // warm compiles
+    let mut reference = Vec::new();
+    let mut v_aal = 0.0;
+    let mut v_step = 0.0;
+    let mut v_tpot = 0.0;
+    for p in prompts.prompts.iter().take(n) {
+        let g = vanilla.generate(p, max_new)?;
+        v_aal += g.aal();
+        v_step += g.step_latency();
+        v_tpot += g.tpot();
+        reference.push(g.tokens);
+    }
+    table.row(&[
+        "vanilla".into(),
+        format!("{:.2}", v_aal / n as f64),
+        format!("{:.2}", v_step * 1e3 / n as f64),
+        format!("{:.2}", v_tpot * 1e3 / n as f64),
+        "reference".into(),
+    ]);
+
+    for name in ["seqspec", "specinfer", "sequoia", "vllmspec", "yggdrasil"] {
+        let mut e = build_engine(&rt, name, ("dft-xs", "tgt-sm"), &lat)?;
+        let _ = e.generate(&prompts.prompts[0], 4)?; // warm compiles
+        let mut aal = 0.0;
+        let mut step = 0.0;
+        let mut tpot = 0.0;
+        let mut matches = 0usize;
+        for (i, p) in prompts.prompts.iter().take(n).enumerate() {
+            let g = e.generate(p, max_new)?;
+            aal += g.aal();
+            step += g.step_latency();
+            tpot += g.tpot();
+            matches += (g.tokens == reference[i]) as usize;
+        }
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", aal / n as f64),
+            format!("{:.2}", step * 1e3 / n as f64),
+            format!("{:.2}", tpot * 1e3 / n as f64),
+            format!("{matches}/{n}"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT artifacts, build the full Yggdrasil engine and
+//! decode one prompt, printing tokens as they are accepted.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use yggdrasil::config::EngineConfig;
+use yggdrasil::corpus::PromptSet;
+use yggdrasil::engine::{profile_latency_model, Engine, SpecDecoder};
+use yggdrasil::runtime::Runtime;
+
+fn main() -> yggdrasil::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+
+    // 1. Load the runtime: compiles the static-width HLO graphs lazily and
+    //    uploads the weight blobs as resident device buffers.
+    let rt = Runtime::load(artifacts, &["dft-xs", "tgt-sm"])?;
+
+    // 2. Profile the hardware latency curves T_drafter(W) / T_verifier(W)
+    //    that drive the Eq. 3 latency-aware objective.
+    let lat = profile_latency_model(&rt, "dft-xs", "tgt-sm", 3)?;
+    println!(
+        "latency curves: T_d(1)={:.2}ms T_d(8)={:.2}ms | T_v(1)={:.2}ms T_v(64)={:.2}ms",
+        lat.t_draft(1) * 1e3,
+        lat.t_draft(8) * 1e3,
+        lat.t_verify(1) * 1e3,
+        lat.t_verify(64) * 1e3
+    );
+
+    // 3. Build the engine (EGT drafting + pruning + stage scheduling).
+    let mut engine = SpecDecoder::new(&rt, EngineConfig::default(), lat, None);
+    println!("engine: {}", engine.name());
+
+    // 4. Decode one of the bundled dataset prompts, streaming tokens.
+    let prompts = PromptSet::load(artifacts, "c4s")?;
+    let prompt = &prompts.prompts[0];
+    print!("tokens: ");
+    let g = engine.generate_with(prompt, 48, &mut |toks| {
+        for t in toks {
+            print!("{t} ");
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    })?;
+    println!();
+    println!(
+        "\n{} tokens in {} verification steps — AAL {:.2}, {:.2} ms/token",
+        g.tokens.len(),
+        g.iterations,
+        g.aal(),
+        g.tpot() * 1e3
+    );
+    let r = &g.recorder;
+    println!(
+        "stage means (ms): head={:.2} tree={:.2} verify={:.2} accept={:.3} bookkeep={:.3}",
+        r.mean("stage.head_draft") * 1e3,
+        r.mean("stage.tree_draft") * 1e3,
+        r.mean("stage.verify") * 1e3,
+        r.mean("stage.accept") * 1e3,
+        r.mean("stage.bookkeep") * 1e3,
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end serving driver (the repository's mandated E2E validation):
+//! spins up the TCP server with the full Yggdrasil engine on the real
+//! artifacts, fires a batch of concurrent client requests from the bundled
+//! datasets, and reports per-request and aggregate latency/throughput —
+//! the serving-paper analog of "load a small real model and serve batched
+//! requests".
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use std::time::Instant;
+
+use yggdrasil::config::EngineConfig;
+use yggdrasil::corpus::PromptSet;
+use yggdrasil::engine::{profiling, SpecDecoder};
+use yggdrasil::runtime::Runtime;
+use yggdrasil::server::{Client, Server};
+
+fn main() -> yggdrasil::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let quick = std::env::var("YGG_QUICK").is_ok();
+    let n_requests: usize = if quick { 4 } else { 12 };
+    let max_new = if quick { 24 } else { 48 };
+
+    // Engine + server.
+    let rt = Runtime::load(artifacts, &["dft-xs", "tgt-sm"])?;
+    let lat = profiling::load_or_profile(
+        &rt,
+        "dft-xs",
+        "tgt-sm",
+        Some(&artifacts.join("profile.json")),
+        5,
+    )?;
+    let engine = SpecDecoder::new(&rt, EngineConfig::default(), lat, None);
+    let srv = Server::spawn("127.0.0.1:0", Box::new(engine), 64, true)?;
+    println!("server listening on {}", srv.addr);
+
+    // Workload: prompts from all three datasets, round-robin.
+    let mut prompts = Vec::new();
+    for ds in yggdrasil::corpus::DATASETS {
+        let ps = PromptSet::load(artifacts, ds)?;
+        prompts.extend(ps.prompts.into_iter().take(n_requests.div_ceil(3)));
+    }
+    prompts.truncate(n_requests);
+
+    // Fire concurrent clients (FCFS on the single-tenant engine).
+    let t0 = Instant::now();
+    let addr = srv.addr;
+    let handles: Vec<_> = prompts
+        .into_iter()
+        .enumerate()
+        .map(|(i, prompt)| {
+            std::thread::spawn(move || -> yggdrasil::Result<(usize, f64, usize, f64, f64)> {
+                let mut c = Client::connect(&addr)?;
+                let t = Instant::now();
+                let r = c.generate(i as u64, &prompt, max_new)?;
+                Ok((i, t.elapsed().as_secs_f64(), r.tokens.len(), r.aal, r.tpot_ms))
+            })
+        })
+        .collect();
+
+    let mut total_tokens = 0usize;
+    let mut latencies = Vec::new();
+    println!("\n  req   e2e_ms  tokens    AAL   engine_tpot_ms");
+    for h in handles {
+        let (i, secs, tokens, aal, tpot_ms) = h.join().unwrap()?;
+        println!("  {i:>3} {:>8.1} {tokens:>7} {aal:>6.2} {tpot_ms:>15.2}", secs * 1e3);
+        total_tokens += tokens;
+        latencies.push(secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    println!(
+        "\n{} requests / {} tokens in {:.2}s — throughput {:.1} tok/s, e2e p50 {:.0}ms p99 {:.0}ms",
+        n_requests,
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall,
+        p50 * 1e3,
+        p99 * 1e3
+    );
+    println!(
+        "server stats: {} requests, {} tokens, {} errors",
+        srv.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+        srv.stats.tokens.load(std::sync::atomic::Ordering::Relaxed),
+        srv.stats.errors.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Tree explorer: visualises what the Equal-Growth Tree actually builds
+//! for a context — the grown tree, the Eq. 3-pruned verification subtree,
+//! and what the verifier accepted — using the real models.
+//!
+//! ```bash
+//! cargo run --release --example tree_explorer [prompt_index]
+//! ```
+
+use yggdrasil::config::width_for;
+use yggdrasil::engine::{profiling, Session};
+use yggdrasil::objective::AcceptanceStats;
+use yggdrasil::pruning::prune_for_objective;
+use yggdrasil::runtime::Runtime;
+use yggdrasil::sampling::{argmax, softmax_inplace, top_k};
+use yggdrasil::tree::{grow_step, Frontier, TokenTree};
+
+fn main() -> yggdrasil::Result<()> {
+    let idx: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let artifacts = std::path::Path::new("artifacts");
+    let rt = Runtime::load(artifacts, &["dft-xs", "tgt-sm"])?;
+    let lat = profiling::load_or_profile(
+        &rt,
+        "dft-xs",
+        "tgt-sm",
+        Some(&artifacts.join("profile.json")),
+        3,
+    )?;
+    let prompts = yggdrasil::corpus::PromptSet::load(artifacts, "c4s")?;
+    let prompt = &prompts.prompts[idx];
+
+    let mut sess = Session::new(&rt, "dft-xs", "tgt-sm", 0, true)?;
+    sess.prefill(prompt)?;
+    let root = *sess.committed.last().unwrap();
+    let root_pos = (sess.committed_len() - 1) as i32;
+    println!("prompt: {prompt:?}\nroot token: {root} at position {root_pos}\n");
+
+    // --- grow an EGT by hand (depth 4, width 4, top-8 candidates) -------
+    let (depth, width, branch) = (4usize, 4usize, 8usize);
+    let mut tree = TokenTree::new(root);
+    let mut dslots = vec![None::<u32>];
+    let mut frontier = Frontier::new(depth);
+    let vocab = sess.drafter.spec.vocab;
+
+    // head draft
+    let slot = sess.drafter.slots.alloc(1).unwrap()[0];
+    dslots[0] = Some(slot);
+    let mask = sess
+        .drafter
+        .slots
+        .mask_builder()
+        .build(&tree, &[0], &dslots, 1)
+        .to_vec();
+    let req = sess
+        .drafter
+        .padded_request(1, &[root], &[root_pos], &[slot], &mask, sess.exec_mode());
+    let reply = sess.rt.forward(req)?;
+    let mut probs = reply.logits[..vocab].to_vec();
+    softmax_inplace(&mut probs, 1.0);
+    let cands: Vec<(u32, f32)> = top_k(&probs, branch).into_iter().map(|(i, p)| (i as u32, p)).collect();
+    frontier.push_candidates(&tree, 0, cands);
+
+    for step in 0..depth {
+        let ids = grow_step(&mut tree, &mut frontier, width);
+        if ids.is_empty() {
+            break;
+        }
+        dslots.resize(tree.len(), None);
+        let slots = sess.drafter.slots.alloc(ids.len()).unwrap();
+        for (i, &id) in ids.iter().enumerate() {
+            dslots[id] = Some(slots[i]);
+        }
+        let tokens: Vec<u32> = ids.iter().map(|&i| tree.token(i)).collect();
+        let positions: Vec<i32> = ids.iter().map(|&i| root_pos + tree.depth(i) as i32).collect();
+        let w = width_for(ids.len()).unwrap();
+        let mask = sess.drafter.slots.mask_builder().build(&tree, &ids, &dslots, w).to_vec();
+        let req = sess
+            .drafter
+            .padded_request(w, &tokens, &positions, &slots, &mask, sess.exec_mode());
+        let reply = sess.rt.forward(req)?;
+        for (i, &id) in ids.iter().enumerate() {
+            let mut probs = reply.logits[i * vocab..(i + 1) * vocab].to_vec();
+            softmax_inplace(&mut probs, 1.0);
+            let cands: Vec<(u32, f32)> =
+                top_k(&probs, branch).into_iter().map(|(j, p)| (j as u32, p)).collect();
+            frontier.push_candidates(&tree, id, cands);
+        }
+        println!("growth step {step}: +{} nodes (equal growth)", ids.len());
+    }
+
+    println!("\ngrown tree ({} nodes, expected AAL {:.2}):", tree.len(), tree.expected_aal());
+    println!("{}", tree.render(None));
+
+    // --- prune to the Eq. 3-optimal verification subtree ----------------
+    let (keep, w_verify) = prune_for_objective(&tree, &lat, &vec![width; depth], 32);
+    println!(
+        "pruned to {} nodes (graph width {w_verify}) by the latency-aware DP:",
+        keep.len()
+    );
+    let (sub, _) = tree.induced_subtree(&keep);
+    println!("{}", sub.render(None));
+
+    // --- verify and walk --------------------------------------------------
+    let vslots = sess.target.slots.alloc(keep.len()).unwrap();
+    let mut vslot_of = vec![None::<u32>; tree.len()];
+    for (i, &n) in keep.iter().enumerate() {
+        vslot_of[n] = Some(vslots[i]);
+    }
+    let tokens: Vec<u32> = keep.iter().map(|&i| tree.token(i)).collect();
+    let positions: Vec<i32> = keep.iter().map(|&i| root_pos + tree.depth(i) as i32).collect();
+    let mask = sess
+        .target
+        .slots
+        .mask_builder()
+        .build(&tree, &keep, &vslot_of, w_verify)
+        .to_vec();
+    let req = sess
+        .target
+        .padded_request(w_verify, &tokens, &positions, &vslots, &mask, sess.exec_mode());
+    let reply = sess.rt.forward(req)?;
+    let tvocab = sess.target.spec.vocab;
+
+    let mut cur = 0usize;
+    let mut accepted = vec![0usize];
+    loop {
+        let row_i = keep.iter().position(|&k| k == cur).unwrap();
+        let truth = argmax(&reply.logits[row_i * tvocab..(row_i + 1) * tvocab]) as u32;
+        match tree
+            .children(cur)
+            .iter()
+            .find(|&&c| keep.contains(&c) && tree.token(c) == truth)
+        {
+            Some(&c) => {
+                accepted.push(c);
+                cur = c;
+            }
+            None => {
+                println!(
+                    "accepted path: {:?} (+ bonus token {truth})",
+                    accepted.iter().map(|&n| tree.token(n)).collect::<Vec<_>>()
+                );
+                break;
+            }
+        }
+    }
+    println!("accepted {} draft tokens + 1 bonus", accepted.len() - 1);
+
+    // A taste of the width selector with live stats:
+    let stats = AcceptanceStats::default();
+    for w in [1usize, 2, 4, 8] {
+        println!(
+            "expected AAL at depth {depth} width {w}: {:.2} (prior q={:.2})",
+            stats.expected_aal(depth, w),
+            stats.q(w)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,265 @@
+"""AOT compiler driver: python runs ONCE here, never at serve time.
+
+Produces under ``artifacts/``:
+
+  * ``<model>_w<W>.hlo.txt``  — HLO *text* per (model, width): the static
+    forward graphs the Rust runtime compiles with PJRT. Text, not
+    ``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit ids that
+    xla_extension 0.5.1 rejects; the text parser reassigns ids.
+  * ``<model>.weights.bin``   — f32 little-endian weight blob in manifest
+    tensor order (all four models trained at build time on the chainlang
+    corpus — see language.py / train.py).
+  * ``manifest.json``         — model shapes, tensor offsets, graph files,
+    calling convention, dataset prompt files, golden-vector index.
+  * ``prompts_<dataset>.json``— synthetic prompt sets (paper-dataset analogs).
+  * ``golden_<model>.bin``    — seeded input/output vectors for the Rust
+    runtime integration test (exact-numerics cross-check).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--fast]``
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs
+from .configs import GRAPH_WIDTHS, MODELS, DATASETS
+from .language import ChainLang
+from .train import agreement_stats, greedy_agreement, lm_train
+from .model import (
+    forward_cached,
+    flat_to_params,
+    make_cached_fn,
+    param_spec,
+    params_to_flat,
+    sample_batch,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_weights(out_dir, fast, force):
+    """Trains the model zoo on the chainlang corpus (see language.py /
+    train.py); returns params per model plus held-out agreement stats.
+    Weight blobs are cached on disk — re-running is a no-op."""
+    # Per-model training budgets calibrated for the single-core CPU box:
+    # the targets need the most steps to absorb the second-order structure.
+    steps = {
+        "tgt-sm": 150 if fast else 340,
+        "tgt-lg": 100 if fast else 220,
+        "dft-xs": 150 if fast else 320,
+        "dft-sm": 150 if fast else 320,
+    }
+    lang = ChainLang()
+    # Large corpus so models must generalise the transition structure
+    # instead of memorising sequences (4096 seqs >> any model's capacity
+    # to rote-learn at these sizes).
+    corpus = lang.sample_fast(np.random.default_rng(7), 96 if fast else 4096, 64)
+    held = lang.sample_fast(np.random.default_rng(999), 32, 64)
+
+    all_params, stats = {}, {}
+
+    def blob_path(name):
+        return os.path.join(out_dir, f"{name}.weights.bin")
+
+    for name in ["tgt-sm", "tgt-lg", "dft-xs", "dft-sm"]:
+        cfg = MODELS[name]
+        path = blob_path(name)
+        if os.path.exists(path) and not force:
+            flat = np.fromfile(path, dtype="<f4")
+            print(f"[aot] {name}: reusing cached weights ({len(flat)} params)")
+            all_params[name] = flat_to_params(flat, cfg)
+            stats[name] = {"cached": True}
+            continue
+        t0 = time.time()
+        params, st = lm_train(cfg, corpus, steps=steps[name], held_out=held)
+        params_to_flat(params, cfg).astype("<f4").tofile(path)
+        all_params[name] = params
+        stats[name] = st
+        print(f"[aot] {name}: trained in {time.time()-t0:.1f}s -> {path}")
+
+    # Held-out acceptance structure: the numbers the decode-time AAL
+    # ultimately comes from (recorded into the manifest for provenance).
+    tgt_cfg = MODELS["tgt-sm"]
+    for dft in ["dft-xs", "dft-sm"]:
+        for tgt in ["tgt-sm", "tgt-lg"]:
+            a = agreement_stats(
+                all_params[tgt], MODELS[tgt], all_params[dft], MODELS[dft], held[:16]
+            )
+            a["greedy_agreement"] = greedy_agreement(
+                all_params[tgt], MODELS[tgt], all_params[dft], MODELS[dft],
+                held[0, :32],
+            )
+            stats[f"{dft}->{tgt}"] = a
+            print(f"[aot] {dft}->{tgt}: {a}")
+    _ = tgt_cfg
+    return all_params, stats, corpus
+
+
+def lower_graphs(out_dir, force):
+    """Lower forward_cached for every (model, width) to HLO text."""
+    graph_index = {}
+    for name, cfg in MODELS.items():
+        graph_index[name] = {}
+        for w in GRAPH_WIDTHS:
+            fname = f"{name}_w{w}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            graph_index[name][str(w)] = fname
+            if os.path.exists(path) and not force:
+                continue
+            t0 = time.time()
+            fn, example = make_cached_fn(cfg, w)
+            lowered = jax.jit(fn).lower(*example)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot] lowered {fname}: {len(text)/1e6:.2f} MB "
+                  f"({time.time()-t0:.1f}s)")
+    return graph_index
+
+
+def build_datasets(out_dir, params, corpus):
+    """Synthetic prompt sets standing in for C4 / Wikipedia / CNN-Daily."""
+    tcfg = MODELS["tgt-sm"]
+    rng = np.random.default_rng(99)
+    files = {}
+    for ds, spec in DATASETS.items():
+        key = jax.random.PRNGKey(abs(hash(ds)) % (2**31))
+        n, plen = configs.PROMPTS_PER_DATASET, configs.PROMPT_LEN
+        n_model = int(n * (1.0 - spec["random_frac"]))
+        prompts = []
+        if n_model:
+            seeds = jax.random.randint(key, (n_model, 2), 0, tcfg.vocab)
+            # sample from the world model at the dataset temperature
+            toks = np.asarray(
+                sample_batch(params["tgt-sm"], key, seeds, tcfg,
+                             steps=plen - 2, temperature=spec["temperature"])
+            )
+            prompts.extend(toks[:, :plen].tolist())
+        while len(prompts) < n:
+            prompts.append(rng.integers(0, tcfg.vocab, plen).tolist())
+        fname = f"prompts_{ds}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump({"dataset": ds, "spec": spec, "prompts": prompts}, f)
+        files[ds] = fname
+        print(f"[aot] dataset {ds}: {len(prompts)} prompts -> {fname}")
+    return files
+
+
+def build_golden(out_dir, all_params):
+    """Seeded input/output vectors per model (width 4) for the Rust
+    runtime's exact-numerics integration test.
+
+    Layout (all f32 LE except noted): tokens i32[W], positions i32[W],
+    slots i32[W], mask f32[W,C], cache f32[L,2,C,H,Dh] (zeros, not
+    stored), then outputs logits f32[W,V], hidden f32[W,D],
+    cache_checksum f32[1] (sum of returned cache).
+    """
+    index = {}
+    w = 4
+    for name, cfg in MODELS.items():
+        rng = np.random.default_rng(cfg.seed + 5)
+        c = cfg.cache_capacity
+        tokens = rng.integers(0, cfg.vocab, w).astype("<i4")
+        positions = np.arange(w).astype("<i4")
+        slots = np.arange(w).astype("<i4")
+        mask = np.tril(np.ones((w, w), np.float32))
+        full_mask = np.zeros((w, c), "<f4")
+        full_mask[:, :w] = mask
+        cache = jnp.zeros((cfg.layers, 2, c, cfg.heads, cfg.head_dim), jnp.float32)
+        logits, hidden, new_cache = forward_cached(
+            all_params[name],
+            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(slots),
+            jnp.asarray(full_mask), cache, cfg,
+        )
+        fname = f"golden_{name}.bin"
+        with open(os.path.join(out_dir, fname), "wb") as f:
+            tokens.tofile(f)
+            positions.tofile(f)
+            slots.tofile(f)
+            full_mask.astype("<f4").tofile(f)
+            np.asarray(logits, "<f4").tofile(f)
+            np.asarray(hidden, "<f4").tofile(f)
+            np.asarray([float(jnp.sum(new_cache))], "<f4").tofile(f)
+        index[name] = {"file": fname, "width": w}
+        print(f"[aot] golden {name} -> {fname}")
+    return index
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer training steps (CI mode)")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if outputs exist")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    all_params, stats, corpus = build_weights(args.out_dir, args.fast, args.force)
+    graph_index = lower_graphs(args.out_dir, args.force)
+    dataset_files = build_datasets(args.out_dir, all_params, corpus)
+    golden_index = build_golden(args.out_dir, all_params)
+
+    manifest = {
+        "format_version": 1,
+        "calling_convention": {
+            "inputs": ["tokens i32[W]", "positions i32[W]", "slots i32[W]",
+                        "mask f32[W,C]", "cache f32[L,2,C,H,Dh]",
+                        "<weight tensors in manifest order>"],
+            "outputs": ["logits f32[W,V]", "hidden f32[W,D]",
+                         "cache f32[L,2,C,H,Dh]"],
+            "note": "root tuple; runtime uses untupled buffer execution",
+        },
+        "models": {},
+        "datasets": dataset_files,
+        "golden": golden_index,
+        "train_stats": {
+            k: {kk: vv for kk, vv in v.items() if kk != "cached"} if isinstance(v, dict) else v
+            for k, v in stats.items()
+        },
+    }
+    for name, cfg in MODELS.items():
+        tensors, off = [], 0
+        for tname, shape in param_spec(cfg):
+            n = int(np.prod(shape))
+            tensors.append({"name": tname, "shape": list(shape), "offset": off})
+            off += n
+        manifest["models"][name] = {
+            "layers": cfg.layers,
+            "d_model": cfg.d_model,
+            "heads": cfg.heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "vocab": cfg.vocab,
+            "cache_capacity": cfg.cache_capacity,
+            "rope_theta": cfg.rope_theta,
+            "logit_scale": cfg.logit_scale,
+            "param_count": off,
+            "tensors": tensors,
+            "weights_file": f"{name}.weights.bin",
+            "graphs": graph_index[name],
+            "widths": list(GRAPH_WIDTHS),
+            "role": "target" if name.startswith("tgt") else "drafter",
+        }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

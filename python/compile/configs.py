@@ -1,0 +1,77 @@
+"""Model configurations for the Yggdrasil reproduction.
+
+Four Llama-architecture models stand in for the paper's Llama-2-7B/13B
+targets and Llama-68M/160M drafters (see DESIGN.md §2 for the substitution
+rationale). All models share the vocabulary and head_dim so drafter and
+verifier operate over the same token space.
+
+``tgt-sm`` is the "world model": its random-but-peaked next-token
+distribution *defines* the synthetic language. ``tgt-lg`` and both drafters
+are distilled against it at build time so that acceptance rates are
+genuinely context-dependent, which is the behaviour the paper's EGT and
+depth predictor exploit.
+"""
+
+from dataclasses import dataclass, field
+
+
+VOCAB = 1024
+HEAD_DIM = 32
+CACHE_CAPACITY = 320  # KV slots per model instance (prefix + tree + slack)
+ROPE_THETA = 10000.0
+# Widths for which a static forward graph is AOT-compiled. The Equal-Growth
+# Tree only ever issues calls with one of these shapes.
+GRAPH_WIDTHS = (1, 2, 4, 8, 16, 32, 64)
+PROMPT_PAD = 64  # prefill bucket length (prompts are padded to this)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    layers: int
+    d_model: int
+    heads: int
+    ffn: int
+    vocab: int = VOCAB
+    head_dim: int = HEAD_DIM
+    cache_capacity: int = CACHE_CAPACITY
+    rope_theta: float = ROPE_THETA
+    # Multiplier on the output logits. With the trained chainlang zoo the
+    # language's peakedness comes from the data (true top-1 ≈ 0.5), so the
+    # scale stays neutral; it is kept as a config knob because it is baked
+    # into the AOT graphs and the runtime manifest.
+    logit_scale: float = 1.0
+    seed: int = 0
+
+    @property
+    def param_count(self) -> int:
+        d, f, l = self.d_model, self.ffn, self.layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return self.vocab * d + l * per_layer + d
+
+
+# Paper analog: Llama-2-7B target.
+TGT_SM = ModelConfig(name="tgt-sm", layers=6, d_model=256, heads=8, ffn=512, seed=1001)
+# Paper analog: Llama-2-13B target (larger, distilled to agree with tgt-sm's
+# language the way two sibling checkpoints agree on natural text).
+TGT_LG = ModelConfig(name="tgt-lg", layers=8, d_model=320, heads=10, ffn=640, seed=1002)
+# Paper analog: Llama-68M drafter.
+DFT_XS = ModelConfig(name="dft-xs", layers=2, d_model=128, heads=4, ffn=256, seed=1003)
+# Paper analog: Llama-160M drafter.
+DFT_SM = ModelConfig(name="dft-sm", layers=3, d_model=160, heads=5, ffn=320, seed=1004)
+
+MODELS = {m.name: m for m in (TGT_SM, TGT_LG, DFT_XS, DFT_SM)}
+TARGETS = ("tgt-sm", "tgt-lg")
+DRAFTERS = ("dft-xs", "dft-sm")
+
+# Synthetic prompt distributions standing in for the paper's datasets.
+# Each is characterised by how prompts are produced from the world model;
+# the resulting acceptance-rate profiles differ the way C4 / Wikipedia /
+# CNN-Daily differ in the paper (see DESIGN.md §2).
+DATASETS = {
+    "c4s": {"temperature": 0.8, "random_frac": 0.0},   # in-domain, easy
+    "wiki": {"temperature": 1.2, "random_frac": 0.0},  # noisier
+    "cnnd": {"temperature": 0.5, "random_frac": 0.5},  # mixed in/out-of-domain
+}
+PROMPTS_PER_DATASET = 64
+PROMPT_LEN = 32

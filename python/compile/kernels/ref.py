@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference semantics the kernels are tested against (pytest +
+hypothesis sweeps in python/tests). They are also used directly by the
+dense training-mode forward pass, where vectorised jnp attention is faster
+than an interpreted Pallas kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k, v, bias):
+    """Tree-masked multi-head attention over a slot-indexed KV cache.
+
+    Args:
+      q:    [W, H, Dh] query vectors for the W tree tokens in this call.
+      k:    [C, H, Dh] key cache (all slots; invalid slots are masked out).
+      v:    [C, H, Dh] value cache.
+      bias: [W, C] additive attention bias. 0 where attention is allowed
+            (causal prefix + tree ancestors + self), a large negative
+            number where it is not.
+
+    Returns:
+      [W, H, Dh] attention outputs.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    # scores: [H, W, C]
+    scores = jnp.einsum("whd,chd->hwc", q, k) * scale + bias[None, :, :]
+    # Numerically-stable softmax. Fully-masked rows (padding) degrade to a
+    # uniform distribution rather than NaN because the max is subtracted.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hwc,chd->whd", p, v)
+    return out.astype(q.dtype)

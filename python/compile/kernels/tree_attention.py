@@ -1,0 +1,154 @@
+"""Pallas tree-attention kernel — the paper's verification hot-spot (L1).
+
+Tree-based speculative decoding verifies W tree tokens in one forward pass;
+each token attends to the committed causal prefix plus its own ancestors in
+the draft tree. The tree topology is encoded in an additive bias matrix
+(a runtime input with a *static shape*), which is precisely what makes the
+Equal-Growth Tree compatible with AOT compilation: the kernel below is
+lowered once per width W and never recompiled.
+
+Hardware adaptation (paper targets CUDA, we target the TPU programming
+model per DESIGN.md §3):
+
+  * grid = (heads, W/BLOCK_W, C/BLOCK_C) — the threadblock analog is a
+    (query-block × head) program instance.
+  * BlockSpec streams K/V in BLOCK_C-sized key blocks HBM→VMEM, the
+    shared-memory-tile analog; the bias tile rides the same index map.
+  * Q·Kᵀ and P·V are jnp.dot over (BLOCK_W×Dh)·(Dh×BLOCK_C) tiles — MXU
+    (systolic array) shaped work rather than WMMA fragments.
+  * the running max / denominator / accumulator of the online softmax live
+    in VMEM scratch across the key-block grid dimension.
+
+Run with ``interpret=True`` on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Block sizes are parameters
+so tests can exercise the multi-block accumulation path with small shapes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default blocks for the CPU-interpret path: one query block spanning the
+# whole width and one key block spanning the cache keeps the interpreted
+# grid small (= heads) so build-time lowering stays fast. The TPU-targeted
+# configuration analysed in DESIGN.md §Perf is BLOCK_W=8, BLOCK_C=128.
+NEG_INF = -1e30
+
+
+def _make_kernel(scale, kv_blocks):
+    """Builds the kernel with VMEM scratch for the online-softmax carries."""
+
+    def kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref):
+        kb = pl.program_id(2)
+
+        @pl.when(kb == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        q = q_ref[...].astype(jnp.float32)
+        k = k_ref[...].astype(jnp.float32)
+        v = v_ref[...].astype(jnp.float32)
+        bias = bias_ref[...].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale + bias
+
+        m_cur = jnp.max(s, axis=-1)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_ref[...] = m_new
+
+        p = jnp.exp(s - m_new[:, None])
+        l_cur = jnp.sum(p, axis=-1)
+        alpha = jnp.exp(m_prev - m_new)
+
+        l_ref[...] = l_ref[...] * alpha + l_cur
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        o_ref[...] = o_ref[...] * alpha[:, None] + pv
+
+        @pl.when(kb == kv_blocks - 1)
+        def _finalize():
+            o_ref[...] = o_ref[...] / l_ref[...][:, None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_c"))
+def tree_attention(q, k, v, bias, *, block_w=None, block_c=None):
+    """Tree-masked attention. Same contract as kernels.ref.tree_attention_ref.
+
+    Args:
+      q:    [W, H, Dh] queries.
+      k:    [C, H, Dh] key cache.
+      v:    [C, H, Dh] value cache.
+      bias: [W, C] additive bias (0 = allowed, very negative = masked).
+      block_w / block_c: tile sizes; default to full extent (grid == heads),
+        which keeps the interpreted grid minimal for AOT lowering. Tests
+        pass smaller blocks to cover the multi-block streaming path.
+
+    Returns: [W, H, Dh] attention output, dtype of q.
+    """
+    w, h, dh = q.shape
+    c = k.shape[0]
+    bw = block_w or w
+    bc = block_c or c
+    if w % bw != 0 or c % bc != 0:
+        raise ValueError(f"block sizes must divide extents: W={w}%{bw}, C={c}%{bc}")
+    kv_blocks = c // bc
+    scale = 1.0 / float(dh) ** 0.5
+
+    kernel = _make_kernel(scale, kv_blocks)
+
+    # Layout note: heads are the leading grid axis so a program instance
+    # sees contiguous [*, Dh] tiles; index maps pick (head, block) slices.
+    grid = (h, w // bw, kv_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # q[W,H,Dh] -> tile [bw, Dh] at (head hi, q-block wi)
+            pl.BlockSpec((bw, None, dh), lambda hi, wi, ki: (wi, hi, 0)),
+            # k[C,H,Dh] -> tile [bc, Dh] at key block ki
+            pl.BlockSpec((bc, None, dh), lambda hi, wi, ki: (ki, hi, 0)),
+            pl.BlockSpec((bc, None, dh), lambda hi, wi, ki: (ki, hi, 0)),
+            # bias[W,C] -> tile [bw, bc]
+            pl.BlockSpec((bw, bc), lambda hi, wi, ki: (wi, ki)),
+        ],
+        out_specs=pl.BlockSpec((bw, None, dh), lambda hi, wi, ki: (wi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, h, dh), q.dtype),
+        scratch_shapes=[
+            # Online-softmax carries, the VMEM-scratch analog of the CUDA
+            # kernel's shared-memory running statistics.
+            pl.MemoryRef(jax.core.ShapedArray((bw,), jnp.float32), pl.MemorySpace.ANY),
+            pl.MemoryRef(jax.core.ShapedArray((bw,), jnp.float32), pl.MemorySpace.ANY),
+        ],
+        interpret=True,
+    )(q, k, v, bias)
+    return out
+
+
+def vmem_bytes_estimate(block_w, block_c, dh):
+    """Analytical VMEM footprint of one program instance (DESIGN.md §Perf).
+
+    q + k + v + bias + out + softmax carries, fp32.
+    """
+    tiles = (
+        block_w * dh  # q
+        + 2 * block_c * dh  # k, v
+        + block_w * block_c  # bias
+        + block_w * dh  # out accumulator
+        + 2 * block_w  # m, l carries
+    )
+    return tiles * 4
+
+
+def mxu_utilization_estimate(block_w, block_c, dh, mxu=(128, 128)):
+    """Fraction of MXU lanes busy for the two dots (DESIGN.md §Perf)."""
+    def frac(m, n):
+        return min(m, mxu[0]) * min(n, mxu[1]) / (mxu[0] * mxu[1])
+
+    # QK^T: (bw x dh) @ (dh x bc); PV: (bw x bc) @ (bc x dh)
+    return 0.5 * (frac(block_w, block_c) + frac(block_w, dh))

@@ -1,0 +1,93 @@
+"""The synthetic ground-truth language ("chainlang").
+
+A random transformer's next-token function is incompressible — a small
+drafter can only memorize it, which destroys the context-dependent
+acceptance structure speculative decoding lives on. Instead we define a
+*learnable* seeded stochastic language with graded difficulty and train
+every model in the zoo on it (the Llama-68M / Llama-2-7B relationship in
+miniature):
+
+  * **first-order core** (easy): every token `t` has 4 successor
+    candidates with Zipf-ish weights — pure bigram structure that even the
+    2-layer drafter captures;
+  * **second-order modulation** (hard): for tokens in the *ambiguous set*
+    (25% of the vocabulary), the successor table instead depends on
+    `(t_prev, t_prev2 mod CTX_CLASSES)` — the large verifier learns most
+    of this, the small drafter much less, which is what makes acceptance
+    genuinely context-dependent;
+  * **noise floor**: with probability `NOISE` the next token is uniform —
+    keeps the language aperiodic and acceptance < 1.
+
+Everything is deterministic given SEED.
+"""
+
+import numpy as np
+
+from .configs import VOCAB
+
+SEED = 20250711
+BRANCH = 4  # successor candidates per state
+CTX_CLASSES = 16  # second-order context classes
+AMBIG_FRAC = 0.25
+NOISE = 0.08
+WEIGHTS = np.array([0.55, 0.25, 0.12, 0.08])
+
+
+class ChainLang:
+    """Seeded sparse bigram/trigram language over the model vocabulary."""
+
+    def __init__(self, vocab: int = VOCAB, seed: int = SEED):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        # First-order successor table [V, BRANCH].
+        self.succ1 = rng.integers(0, vocab, size=(vocab, BRANCH))
+        # Ambiguous tokens get second-order tables [V, CTX_CLASSES, BRANCH].
+        self.ambiguous = rng.random(vocab) < AMBIG_FRAC
+        self.succ2 = rng.integers(0, vocab, size=(vocab, CTX_CLASSES, BRANCH))
+
+    def candidates(self, prev: int, prev2: int) -> np.ndarray:
+        """Successor candidates for the context (prev2, prev)."""
+        if self.ambiguous[prev]:
+            return self.succ2[prev, prev2 % CTX_CLASSES]
+        return self.succ1[prev]
+
+    def next_dist(self, prev: int, prev2: int) -> np.ndarray:
+        """True conditional distribution over the vocabulary."""
+        p = np.full(self.vocab, NOISE / self.vocab)
+        cands = self.candidates(prev, prev2)
+        for c, w in zip(cands, WEIGHTS):
+            p[c] += (1.0 - NOISE) * w
+        return p
+
+    def sample(self, rng: np.random.Generator, n_seqs: int, length: int) -> np.ndarray:
+        """Samples [n_seqs, length] sequences from the chain."""
+        out = np.zeros((n_seqs, length), dtype=np.int64)
+        out[:, 0] = rng.integers(0, self.vocab, n_seqs)
+        out[:, 1] = rng.integers(0, self.vocab, n_seqs)
+        for t in range(2, length):
+            for i in range(n_seqs):
+                prev, prev2 = out[i, t - 1], out[i, t - 2]
+                if rng.random() < NOISE:
+                    out[i, t] = rng.integers(0, self.vocab)
+                else:
+                    cands = self.candidates(int(prev), int(prev2))
+                    out[i, t] = cands[rng.choice(BRANCH, p=WEIGHTS / WEIGHTS.sum())]
+        return out
+
+    def sample_fast(self, rng: np.random.Generator, n_seqs: int, length: int) -> np.ndarray:
+        """Vectorised sampler (same distribution as `sample`)."""
+        out = np.zeros((n_seqs, length), dtype=np.int64)
+        out[:, :2] = rng.integers(0, self.vocab, (n_seqs, 2))
+        for t in range(2, length):
+            prev = out[:, t - 1]
+            prev2 = out[:, t - 2] % CTX_CLASSES
+            amb = self.ambiguous[prev]
+            cands = np.where(
+                amb[:, None], self.succ2[prev, prev2], self.succ1[prev]
+            )  # [n, BRANCH]
+            pick = rng.choice(BRANCH, size=n_seqs, p=WEIGHTS / WEIGHTS.sum())
+            nxt = cands[np.arange(n_seqs), pick]
+            noise = rng.random(n_seqs) < NOISE
+            nxt = np.where(noise, rng.integers(0, self.vocab, n_seqs), nxt)
+            out[:, t] = nxt
+        return out

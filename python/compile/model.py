@@ -1,0 +1,264 @@
+"""Layer-2: Llama-architecture decoder in JAX (build-time only).
+
+Two forward paths share one parameter set:
+
+  * ``forward_cached`` — the AOT graph. Operates on W tokens against a
+    slot-indexed functional KV cache with an explicit attention-bias matrix,
+    calling the Pallas tree-attention kernel (L1). This is the function
+    lowered to HLO text per width W and executed from Rust; Python is never
+    on the request path.
+  * ``forward_train`` / ``sample_batch`` — dense batched paths used only at
+    build time for corpus generation and drafter distillation.
+
+Cache/slot model (DESIGN.md §7): the cache has a fixed capacity C of
+"slots". Callers assign each incoming token an arbitrary slot; its K/V are
+scattered there. Attention validity is *entirely* encoded in the bias
+matrix, so committed tokens, tree tokens and garbage slots coexist without
+compaction, and every operator shape is static — the property the paper's
+Equal-Growth Tree needs for compile-time optimization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels.tree_attention import tree_attention
+from .kernels.ref import tree_attention_ref
+
+MASK_NEG = -1e9
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list — the canonical tensor order of the
+    weights blob consumed by the Rust runtime (manifest order)."""
+    d, f = cfg.d_model, cfg.ffn
+    spec = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.layers):
+        spec += [
+            (f"l{i}.rms1", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.rms2", (d,)),
+            (f"l{i}.wgate", (d, f)),
+            (f"l{i}.wup", (d, f)),
+            (f"l{i}.wdown", (f, d)),
+        ]
+    spec.append(("final_norm", (d,)))
+    return spec
+
+
+def init_params(cfg: ModelConfig, key=None):
+    """Deterministic seeded init. Norm gains start at 1, matmuls at
+    scaled-normal — the usual pre-LN transformer init."""
+    if key is None:
+        key = jax.random.PRNGKey(cfg.seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("rms1", "rms2")) or name == "final_norm":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+            )
+    return params
+
+
+def params_to_flat(params, cfg: ModelConfig):
+    """Concatenate tensors in manifest order into one f32 vector."""
+    return np.concatenate(
+        [np.asarray(params[name], np.float32).reshape(-1) for name, _ in param_spec(cfg)]
+    )
+
+
+def flat_to_params(flat, cfg: ModelConfig):
+    params, off = {}, 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        params[name] = jnp.asarray(flat[off : off + n], jnp.float32).reshape(shape)
+        off += n
+    assert off == len(flat)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, gain, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def rope(x, positions, theta):
+    """Rotary embedding with explicit integer positions.
+
+    x: [..., H, Dh], positions: broadcastable integer array over the token
+    axis (x.shape[:-2]). Explicit positions are what let tree tokens carry
+    their *logical* depth while living at arbitrary cache slots.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None, None] * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attn_proj(x, params, i, cfg):
+    h, dh = cfg.heads, cfg.head_dim
+    q = (x @ params[f"l{i}.wq"]).reshape(x.shape[:-1] + (h, dh))
+    k = (x @ params[f"l{i}.wk"]).reshape(x.shape[:-1] + (h, dh))
+    v = (x @ params[f"l{i}.wv"]).reshape(x.shape[:-1] + (h, dh))
+    return q, k, v
+
+
+def _mlp(x, params, i):
+    gate = jax.nn.silu(x @ params[f"l{i}.wgate"])
+    up = x @ params[f"l{i}.wup"]
+    return (gate * up) @ params[f"l{i}.wdown"]
+
+
+# --------------------------------------------------------------------------
+# AOT path: slot-indexed cached forward (lowered per width W)
+# --------------------------------------------------------------------------
+
+def forward_cached(params, tokens, positions, slots, mask, cache, cfg: ModelConfig,
+                   use_pallas=True):
+    """The graph the Rust coordinator executes.
+
+    Args:
+      params:    dict of weight tensors (runtime: resident device buffers).
+      tokens:    i32[W] token ids (draft-tree nodes, prefill chunk, …).
+      positions: i32[W] logical sequence positions (RoPE), = node depth.
+      slots:     i32[W] cache slots this call writes K/V into.
+      mask:      f32[W, C] 1.0 where attention allowed (prefix ∪ ancestors
+                 ∪ self), 0.0 otherwise. Padding rows may be all-zero.
+      cache:     f32[L, 2, C, H, Dh] KV cache (functional: updated copy is
+                 returned).
+      cfg:       static model config.
+
+    Returns: (logits f32[W, V], hidden f32[W, D], new_cache).
+    """
+    bias = (1.0 - mask) * MASK_NEG  # [W, C]
+    x = params["embed"][tokens]  # [W, D]
+
+    attn = tree_attention if use_pallas else tree_attention_ref
+    new_layers = []
+    for i in range(cfg.layers):
+        hpre = rms_norm(x, params[f"l{i}.rms1"])
+        q, k, v = _attn_proj(hpre, params, i, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # Scatter this call's K/V into their slots *before* attention so
+        # each token can see itself and its in-call ancestors.
+        kc = cache[i, 0].at[slots].set(k)  # [C, H, Dh]
+        vc = cache[i, 1].at[slots].set(v)
+        o = attn(q, kc, vc, bias)  # [W, H, Dh] — L1 Pallas kernel
+        x = x + o.reshape(x.shape[0], -1) @ params[f"l{i}.wo"]
+        x = x + _mlp(rms_norm(x, params[f"l{i}.rms2"]), params, i)
+        new_layers.append(jnp.stack([kc, vc]))
+
+    hidden = rms_norm(x, params["final_norm"])  # [W, D]
+    logits = (hidden @ params["embed"].T) * cfg.logit_scale
+    return logits, hidden, jnp.stack(new_layers)
+
+
+def make_cached_fn(cfg: ModelConfig, width: int, use_pallas=True):
+    """Returns (fn, example_args) ready for jax.jit(...).lower().
+
+    Argument order matches the Rust runtime's calling convention:
+    tokens, positions, slots, mask, cache, then weight tensors in
+    manifest order.
+    """
+    names = [n for n, _ in param_spec(cfg)]
+
+    def fn(tokens, positions, slots, mask, cache, *weights):
+        params = dict(zip(names, weights))
+        return forward_cached(params, tokens, positions, slots, mask, cache,
+                              cfg, use_pallas=use_pallas)
+
+    c, h, dh, l = cfg.cache_capacity, cfg.heads, cfg.head_dim, cfg.layers
+    example = [
+        jax.ShapeDtypeStruct((width,), jnp.int32),
+        jax.ShapeDtypeStruct((width,), jnp.int32),
+        jax.ShapeDtypeStruct((width,), jnp.int32),
+        jax.ShapeDtypeStruct((width, c), jnp.float32),
+        jax.ShapeDtypeStruct((l, 2, c, h, dh), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_spec(cfg)]
+    return fn, example
+
+
+# --------------------------------------------------------------------------
+# Build-time dense paths (training / sampling; never AOT-exported)
+# --------------------------------------------------------------------------
+
+def forward_train(params, tokens, cfg: ModelConfig):
+    """Dense causal forward over [B, T] — vectorised jnp attention."""
+    b, t = tokens.shape
+    h, dh = cfg.heads, cfg.head_dim
+    positions = jnp.arange(t)
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    bias = (1.0 - causal) * MASK_NEG
+
+    x = params["embed"][tokens]  # [B, T, D]
+    for i in range(cfg.layers):
+        hpre = rms_norm(x, params[f"l{i}.rms1"])
+        q, k, v = _attn_proj(hpre, params, i, cfg)
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, positions[None, :], cfg.rope_theta)
+        scale = 1.0 / np.sqrt(dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale + bias
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, t, -1)
+        x = x + o @ params[f"l{i}.wo"]
+        x = x + _mlp(rms_norm(x, params[f"l{i}.rms2"]), params, i)
+
+    hidden = rms_norm(x, params["final_norm"])
+    return (hidden @ params["embed"].T) * cfg.logit_scale  # [B, T, V]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "steps", "temperature"))
+def sample_batch(params, key, prompts, cfg: ModelConfig, steps: int,
+                 temperature: float = 1.0):
+    """Autoregressively extend [B, P] prompts by `steps` tokens.
+
+    Uses a dense per-step KV cache under lax.scan; build-time only (corpus
+    generation for distillation and dataset synthesis).
+    Returns [B, P + steps] token ids.
+    """
+    b, p = prompts.shape
+    total = p + steps
+    h, dh, l = cfg.heads, cfg.head_dim, cfg.layers
+
+    # Prefill via dense forward, rebuilding the cache tensors it implies.
+    # (Cheaper and simpler than maintaining two cache codepaths.)
+    def step_fn(carry, _):
+        key, toks, pos = carry
+        # Recompute over the visible prefix — O(T^2) total, fine at build
+        # time for T<=96 and it keeps this function trivially correct.
+        logits = forward_train(params, toks, cfg)  # [B, total, V]
+        idx = pos - 1
+        step_logits = logits[:, idx, :]
+        key, sub = jax.random.split(key)
+        if temperature == 0.0:
+            nxt = jnp.argmax(step_logits, axis=-1)
+        else:
+            nxt = jax.random.categorical(sub, step_logits / temperature, axis=-1)
+        toks = toks.at[:, pos].set(nxt)
+        return (key, toks, pos + 1), None
+
+    toks0 = jnp.zeros((b, total), jnp.int32).at[:, :p].set(prompts)
+    (key, toks, _), _ = jax.lax.scan(step_fn, (key, toks0, p), None, length=steps)
+    return toks

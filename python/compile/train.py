@@ -1,0 +1,103 @@
+"""Build-time language-model training on the synthetic chainlang corpus.
+
+All four models (two targets, two drafters) are trained with a plain LM
+cross-entropy objective on sequences sampled from the *same* ground-truth
+language ([`compile.language.ChainLang`]) — the miniature analog of
+Llama-68M and Llama-2-7B sharing a pre-training corpus. Capacity decides
+how much of the second-order structure each model captures, which is what
+produces realistic, context-dependent speculative acceptance (the earlier
+distill-from-random-teacher approach only produced memorization; see
+DESIGN.md §2).
+
+Runs once inside ``make artifacts``; never on the request path.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import forward_train, init_params
+
+
+def adam_init(params):
+    z = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = {
+        k: params[k] - lr * (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps) for k in params
+    }
+    return new, {"m": m, "v": v, "t": t}
+
+
+def lm_loss(params, tokens, cfg):
+    logits = forward_train(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], -1)
+    tgt = tokens[:, 1:]
+    return -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], -1))
+
+
+def lm_train(cfg, corpus, steps, lr=3e-3, batch=16, log_every=80, held_out=None):
+    """Trains a fresh `cfg` model on `corpus` [N, T]; returns
+    (params, stats) with train/held-out loss trajectories."""
+    params = init_params(cfg)
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(cfg.seed)
+    data = jnp.asarray(corpus, jnp.int32)
+    vg = jax.jit(jax.value_and_grad(lambda p, toks: lm_loss(p, toks, cfg)))
+    held = None if held_out is None else jnp.asarray(held_out, jnp.int32)
+    eval_loss = jax.jit(lambda p, toks: lm_loss(p, toks, cfg))
+
+    stats = {"loss": [], "held_loss": []}
+    t0 = time.time()
+    for step in range(steps):
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch,), 0, data.shape[0])
+        loss, grads = vg(params, data[idx])
+        params, opt = adam_update(params, grads, opt, lr)
+        if step % log_every == 0 or step == steps - 1:
+            stats["loss"].append(float(loss))
+            msg = f"  [{cfg.name}] step {step:4d} loss {float(loss):.3f}"
+            if held is not None:
+                hl = float(eval_loss(params, held[:16]))
+                stats["held_loss"].append(hl)
+                msg += f" held {hl:.3f}"
+            print(msg + f" ({time.time()-t0:.0f}s)", flush=True)
+    return params, stats
+
+
+def agreement_stats(tgt_params, tgt_cfg, dft_params, dft_cfg, held):
+    """Held-out drafter/verifier agreement: top-1 match rate and top-8
+    coverage of the verifier's greedy token — the quantities that become
+    the speculative acceptance rates at decode time."""
+    arr = jnp.asarray(held, jnp.int32)
+    tl = forward_train(tgt_params, arr, tgt_cfg)
+    dl = forward_train(dft_params, arr, dft_cfg)
+    tn = jnp.argmax(tl, -1)
+    order = jnp.argsort(dl, -1)[..., ::-1]
+    top1 = float(jnp.mean((tn == order[..., 0]).astype(jnp.float32)))
+    cov8 = float(jnp.mean(jnp.any(order[..., :8] == tn[..., None], -1).astype(jnp.float32)))
+    peak = float(jnp.max(jax.nn.softmax(tl, -1), -1).mean())
+    return {"top1_agreement": top1, "top8_coverage": cov8, "verifier_peak": peak}
+
+
+def greedy_agreement(tgt_params, tgt_cfg, dft_params, dft_cfg, prompt, steps=24):
+    """Agreement specifically on the verifier's greedy continuation — the
+    decode-time failure mode the random-teacher approach exhibited."""
+    toks = list(np.asarray(prompt))
+    agree = 0
+    for _ in range(steps):
+        arr = jnp.asarray([toks], jnp.int32)
+        vn = int(jnp.argmax(forward_train(tgt_params, arr, tgt_cfg)[0, -1]))
+        dn = int(jnp.argmax(forward_train(dft_params, arr, dft_cfg)[0, -1]))
+        agree += vn == dn
+        toks.append(vn)
+    return agree / steps

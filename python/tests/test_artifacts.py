@@ -1,0 +1,107 @@
+"""Artifact-bundle consistency: the manifest, weight blobs, HLO graphs,
+prompt sets and golden vectors must agree with each other and with the
+model configs. Skipped cleanly when `make artifacts` has not run.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import configs
+from compile.configs import GRAPH_WIDTHS, MODELS
+from compile.model import param_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    assert set(manifest["models"]) == set(MODELS)
+    for name, spec in manifest["models"].items():
+        cfg = MODELS[name]
+        assert spec["layers"] == cfg.layers
+        assert spec["d_model"] == cfg.d_model
+        assert spec["vocab"] == cfg.vocab
+        assert spec["cache_capacity"] == cfg.cache_capacity
+        assert spec["widths"] == list(GRAPH_WIDTHS)
+        assert spec["param_count"] == cfg.param_count
+
+
+def test_weight_blobs_match_manifest(manifest):
+    for name, spec in manifest["models"].items():
+        path = os.path.join(ART, spec["weights_file"])
+        blob = np.fromfile(path, dtype="<f4")
+        assert blob.shape == (spec["param_count"],), name
+        assert np.all(np.isfinite(blob)), name
+        # A trained model is not at init: norm gains must have moved.
+        assert blob.std() > 1e-3
+
+
+def test_tensor_layout_tiles_blob(manifest):
+    for name, spec in manifest["models"].items():
+        cfg = MODELS[name]
+        expect = [(n, list(s)) for n, s in param_spec(cfg)]
+        got = [(t["name"], t["shape"]) for t in spec["tensors"]]
+        assert got == expect, name
+        off = 0
+        for t in spec["tensors"]:
+            assert t["offset"] == off
+            off += int(np.prod(t["shape"]))
+        assert off == spec["param_count"]
+
+
+def test_hlo_graphs_exist_and_mention_shapes(manifest):
+    for name, spec in manifest["models"].items():
+        for w, fname in spec["graphs"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), fname
+            head = open(path).read(4000)
+            assert "HloModule" in head
+            # Graph signature includes the width-shaped token input.
+            assert f"s32[{w}]" in head, (name, w)
+
+
+def test_prompt_sets_are_valid(manifest):
+    for ds, fname in manifest["datasets"].items():
+        with open(os.path.join(ART, fname)) as f:
+            data = json.load(f)
+        assert data["dataset"] == ds
+        prompts = data["prompts"]
+        assert len(prompts) == configs.PROMPTS_PER_DATASET
+        arr = np.asarray(prompts)
+        assert arr.shape[1] == configs.PROMPT_LEN
+        assert arr.min() >= 0 and arr.max() < configs.VOCAB
+
+
+def test_golden_vectors_sized_exactly(manifest):
+    for name, g in manifest["golden"].items():
+        spec = manifest["models"][name]
+        w = g["width"]
+        c = spec["cache_capacity"]
+        expect = 4 * (3 * w + w * c + w * spec["vocab"] + w * spec["d_model"] + 1)
+        size = os.path.getsize(os.path.join(ART, g["file"]))
+        assert size == expect, name
+
+
+def test_train_stats_show_generalizing_zoo(manifest):
+    stats = manifest.get("train_stats", {})
+    pair = stats.get("dft-xs->tgt-sm")
+    if not pair:
+        pytest.skip("stats not recorded in this bundle")
+    # The acceptance regime the experiments rely on: meaningful top-1
+    # agreement, strong top-8 coverage, working greedy continuation.
+    assert pair["top1_agreement"] > 0.3
+    assert pair["top8_coverage"] > 0.6
+    assert pair["greedy_agreement"] > 0.3

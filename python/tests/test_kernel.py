@@ -1,0 +1,156 @@
+"""L1 correctness: the Pallas tree-attention kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute hot-spot: hypothesis
+sweeps shapes, block sizes and mask sparsity patterns; assert_allclose
+against ref.py everywhere.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import tree_attention_ref
+from compile.kernels.tree_attention import (
+    mxu_utilization_estimate,
+    tree_attention,
+    vmem_bytes_estimate,
+)
+
+
+def rand_case(rng, w, c, h, dh, mask_density=0.5, pad_rows=0):
+    q = jnp.asarray(rng.standard_normal((w, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    allow = rng.random((w, c)) < mask_density
+    allow[:, 0] = True  # at least one visible key per row
+    for r in range(w - pad_rows, w):
+        allow[r, :] = False  # fully-masked padding rows
+    bias = jnp.where(jnp.asarray(allow), 0.0, -1e9).astype(jnp.float32)
+    return q, k, v, bias
+
+
+def assert_matches(q, k, v, bias, **kw):
+    out = tree_attention(q, k, v, bias, **kw)
+    ref = tree_attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+    assert not np.any(np.isnan(np.asarray(out)))
+
+
+def test_basic_single_block():
+    rng = np.random.default_rng(0)
+    assert_matches(*rand_case(rng, 4, 32, 2, 8))
+
+
+def test_multi_key_block_streaming():
+    rng = np.random.default_rng(1)
+    assert_matches(*rand_case(rng, 8, 64, 4, 16), block_w=4, block_c=16)
+
+
+def test_production_shape():
+    # The exact shape the verifier graphs use: W=64, C=320, H=8, Dh=32.
+    rng = np.random.default_rng(2)
+    assert_matches(*rand_case(rng, 64, 320, 8, 32), block_c=64)
+
+
+def test_width_one_decode_shape():
+    rng = np.random.default_rng(3)
+    assert_matches(*rand_case(rng, 1, 320, 8, 32))
+
+
+def test_fully_masked_padding_rows_are_finite():
+    rng = np.random.default_rng(4)
+    q, k, v, bias = rand_case(rng, 8, 32, 2, 8, pad_rows=3)
+    out = np.asarray(tree_attention(q, k, v, bias))
+    assert np.all(np.isfinite(out))
+
+
+def test_causal_mask_equals_dense_attention():
+    # With a lower-triangular mask over slots 0..W the kernel must equal
+    # ordinary causal attention.
+    rng = np.random.default_rng(5)
+    w, h, dh = 8, 2, 16
+    q, k, v, _ = rand_case(rng, w, w, h, dh)
+    causal = jnp.where(jnp.tril(jnp.ones((w, w))) > 0, 0.0, -1e9).astype(jnp.float32)
+    assert_matches(q, k, v, causal)
+
+
+def test_tree_sibling_isolation():
+    # Two sibling branches must not attend to each other: the output for a
+    # row depends only on its visible keys.
+    rng = np.random.default_rng(6)
+    w, c, h, dh = 2, 8, 2, 8
+    q = jnp.asarray(rng.standard_normal((w, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((c, h, dh)), jnp.float32)
+    mask = np.full((w, c), -1e9, np.float32)
+    mask[0, 0] = 0.0  # row 0 sees slot 0 only
+    mask[1, 1] = 0.0  # row 1 sees slot 1 only
+    out = tree_attention(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(v[1]), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    w_pow=st.integers(0, 4),
+    c_mult=st.integers(1, 5),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    density=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(w_pow, c_mult, h, dh, density, seed):
+    rng = np.random.default_rng(seed)
+    w = 2**w_pow
+    c = 16 * c_mult
+    assert_matches(*rand_case(rng, w, c, h, dh, mask_density=density))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bw_pow=st.integers(0, 3),
+    bc_idx=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_block_sweep(bw_pow, bc_idx, seed):
+    # Block sizes must not change the numerics.
+    rng = np.random.default_rng(seed)
+    w, c, h, dh = 8, 48, 2, 16
+    bw = 2**bw_pow
+    bc = [16, 24, 48][bc_idx]
+    assert_matches(*rand_case(rng, w, c, h, dh), block_w=bw, block_c=bc)
+
+
+def test_rejects_non_dividing_blocks():
+    rng = np.random.default_rng(7)
+    q, k, v, bias = rand_case(rng, 8, 32, 2, 8)
+    with pytest.raises(ValueError):
+        tree_attention(q, k, v, bias, block_w=3)
+
+
+def test_dtype_bfloat16_inputs_accumulate_in_f32():
+    # TPU-style mixed precision: bf16 q/k/v with an f32 bias and f32
+    # accumulation inside the kernel (the kernel upcasts tiles on load).
+    rng = np.random.default_rng(8)
+    q, k, v, bias = rand_case(rng, 4, 32, 2, 8)
+    out = tree_attention(
+        q.astype(jnp.bfloat16).astype(jnp.float32),
+        k.astype(jnp.bfloat16).astype(jnp.float32),
+        v.astype(jnp.bfloat16).astype(jnp.float32),
+        bias,
+    )
+    ref = tree_attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0.05, rtol=0.05)
+
+
+def test_perf_estimators_are_sane():
+    # DESIGN.md §Perf: VMEM footprint of the TPU-targeted tile must fit the
+    # ~16 MiB VMEM budget with double buffering.
+    bytes_tile = vmem_bytes_estimate(block_w=8, block_c=128, dh=32)
+    assert bytes_tile * 2 < 16 * 2**20
+    util = mxu_utilization_estimate(8, 128, 32)
+    assert 0.0 < util <= 1.0
+    # Bigger tiles use the MXU better.
+    assert mxu_utilization_estimate(64, 128, 32) > mxu_utilization_estimate(1, 128, 32)

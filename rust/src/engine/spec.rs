@@ -1,0 +1,841 @@
+//! The tree-speculation decode engine.
+//!
+//! One engine implements the whole design space of Table 1: the tree
+//! structure (sequence / K-ary / Sequoia / EGT), the optimization objective
+//! (AAL vs Eq. 3), verification-width pruning, the depth predictor, the
+//! eager-vs-compiled runtime, and the §5 stage-scheduling plans. The
+//! Yggdrasil configuration is simply "all of them on"
+//! ([`crate::config::EngineConfig::default`]); every baseline is a preset.
+//!
+//! ## One decoding iteration (Fig. 9)
+//!
+//! ```text
+//! head-draft(root)                       drafter w1   (skipped on AOT-head/tail hit)
+//! D × tree-draft (equal growth, W wide)  drafter wW
+//! prune (tree-knapsack DP, Eq. 3)        CPU
+//! verify (pruned tree + root)            verifier wWv
+//!   └ AOT tail draft (top leaf conts.)   drafter wT   (queued behind verify)
+//! accept (greedy / stochastic walk)      CPU          (overlaps tail draft)
+//!   └ AOT head draft (bonus token)       drafter w1   (overlaps bookkeeping)
+//! bookkeeping (commit/free slots, stats) CPU
+//! ```
+
+use std::time::Instant;
+
+use crate::config::{width_for, EngineConfig, TreeStructure};
+use crate::metrics::Recorder;
+use crate::objective::{select_draft_width, AcceptanceStats, LatencyModel};
+use crate::predictor::DepthPredictor;
+use crate::pruning::prune_for_objective;
+use crate::runtime::{ForwardReply, Pending, Runtime};
+use crate::sampling::{
+    categorical, softmax_inplace, stochastic_accept, top_k, AcceptOutcome, XorShiftRng,
+};
+use crate::scheduler::{self, Plan, StageDurations};
+use crate::tree::{grow_step, Frontier, NodeId, TokenTree, TreeShape};
+
+use super::session::Session;
+use super::Generation;
+
+/// A head draft issued ahead of time (or satisfied by a tail-draft hit).
+struct PendingHead {
+    /// In-flight call, or `None` when the reply is already materialised.
+    pending: Option<Pending<ForwardReply>>,
+    reply: Option<HeadReply>,
+    /// Drafter slot holding the root's K/V.
+    slot: u32,
+    /// The token this head draft evaluated (must equal the next root).
+    token: u32,
+}
+
+/// Extracted row of a drafter reply for the head token.
+#[derive(Clone)]
+struct HeadReply {
+    logits: Vec<f32>,
+}
+
+/// Per-iteration tree bookkeeping, parallel to [`TokenTree`] node ids.
+struct IterState {
+    tree: TokenTree,
+    /// Drafter cache slot per node (Some for every drafter-evaluated node).
+    dslots: Vec<Option<u32>>,
+    /// Verifier cache slot per node (Some for nodes in the pruned set).
+    vslots: Vec<Option<u32>>,
+    /// Drafter candidate children per evaluated node: (token, prob) sorted
+    /// descending (top-k at T=0; i.i.d. samples deduped at T>0).
+    cands: Vec<Option<Vec<(u32, f32)>>>,
+    /// Full drafter probability vector per evaluated node (kept only at
+    /// temperature > 0, for the stochastic acceptance rule).
+    dists: Vec<Option<Vec<f32>>>,
+}
+
+impl IterState {
+    fn new(root: u32) -> Self {
+        Self {
+            tree: TokenTree::new(root),
+            dslots: vec![None],
+            vslots: vec![None],
+            cands: vec![None],
+            dists: vec![None],
+        }
+    }
+
+    fn push_nodes(&mut self, n: usize) {
+        self.dslots.resize(self.dslots.len() + n, None);
+        self.vslots.resize(self.vslots.len() + n, None);
+        self.cands.resize(self.cands.len() + n, None);
+        self.dists.resize(self.dists.len() + n, None);
+    }
+}
+
+/// The speculative decoding engine.
+pub struct SpecDecoder {
+    rt: Runtime,
+    pub cfg: EngineConfig,
+    pub lat: LatencyModel,
+    pub stats: AcceptanceStats,
+    pub predictor: Option<DepthPredictor>,
+    plan: Plan,
+    /// EWMA of the AOT-tail hit rate (next head token pre-drafted).
+    tail_hit_rate: f64,
+    /// Cached Sequoia shape per (budget, stats-epoch).
+    sequoia_cache: Option<(usize, TreeShape)>,
+    /// Depth predicted for the next iteration (from the last verify's
+    /// hidden state).
+    depth_hint: Option<usize>,
+    /// (hidden state, accepted count of the *following* iteration) pairs —
+    /// the depth predictor's training data.
+    depth_samples: Vec<(Vec<f32>, usize)>,
+    label: String,
+}
+
+impl SpecDecoder {
+    pub fn new(
+        rt: &Runtime,
+        cfg: EngineConfig,
+        lat: LatencyModel,
+        predictor: Option<DepthPredictor>,
+    ) -> Self {
+        let est = StageDurations::estimate(
+            &lat,
+            cfg.max_depth,
+            cfg.max_width,
+            cfg.max_verify,
+            width_for(4).unwrap(),
+        );
+        let plan = scheduler::resolve(cfg.schedule, &est);
+        // Compile every width graph up front: the adaptive ⟨D, W, Wv⟩
+        // selection may touch any of them, and a mid-decode compile stall
+        // (~1 s) is exactly the "dynamic shapes break static runtimes"
+        // failure mode this system exists to avoid.
+        let _ = rt.precompile(&cfg.drafter, &crate::config::GRAPH_WIDTHS);
+        let _ = rt.precompile(&cfg.target, &crate::config::GRAPH_WIDTHS);
+        let label = format!(
+            "spec[{}|{}|{}{}{}{}]",
+            cfg.tree.as_str(),
+            cfg.objective.as_str(),
+            if cfg.compiled { "compiled" } else { "eager" },
+            if cfg.prune { "+prune" } else { "" },
+            if cfg.use_depth_predictor { "+pred" } else { "" },
+            format_args!("+{}", plan.name()),
+        );
+        Self {
+            rt: rt.clone(),
+            cfg,
+            lat,
+            stats: AcceptanceStats::default(),
+            predictor,
+            plan,
+            tail_hit_rate: 0.3,
+            sequoia_cache: None,
+            depth_hint: None,
+            depth_samples: Vec::new(),
+            label,
+        }
+    }
+
+    pub fn plan(&self) -> Plan {
+        self.plan
+    }
+
+    /// Re-runs the profile-guided plan search with *measured* stage
+    /// durations from `rec` (call after a calibration generation).
+    pub fn research_plan(&mut self, rec: &Recorder) {
+        if self.cfg.schedule != crate::config::SchedulePlan::ProfileSearch {
+            return;
+        }
+        let d = StageDurations {
+            head_draft: rec.mean("stage.head_draft").max(1e-6),
+            tree_draft: rec.mean("stage.tree_draft").max(1e-6),
+            cpu_build: rec.mean("stage.cpu_build").max(1e-7),
+            verify: rec.mean("stage.verify").max(1e-6),
+            tail_draft: rec.mean("stage.tail_draft").max(1e-6),
+            accept: rec.mean("stage.accept").max(1e-7),
+            bookkeep: rec.mean("stage.bookkeep").max(1e-7),
+            tail_hit_rate: self.tail_hit_rate,
+        };
+        let (plan, _) = scheduler::search_best_plan(&d);
+        self.plan = plan;
+    }
+
+    // ------------------------------------------------------------------
+    // Drafting
+    // ------------------------------------------------------------------
+
+    /// Candidate children of a node from its drafter logits: top-k at
+    /// T = 0, i.i.d. samples (deduped, q-sorted) at T > 0 — the latter is
+    /// what the stochastic acceptance rule's lossless guarantee expects.
+    fn candidates(&self, logits: &[f32], k: usize, rng: &mut XorShiftRng) -> Vec<(u32, f32)> {
+        let temp = self.cfg.sampling.temperature;
+        if temp == 0.0 {
+            let mut probs = logits.to_vec();
+            softmax_inplace(&mut probs, 1.0);
+            return top_k(&probs, k).into_iter().map(|(i, p)| (i as u32, p)).collect();
+        }
+        let mut probs = logits.to_vec();
+        softmax_inplace(&mut probs, temp);
+        let mut out: Vec<(u32, f32)> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let t = categorical(&probs, rng) as u32;
+            if !out.iter().any(|&(x, _)| x == t) {
+                out.push((t, probs[t as usize]));
+            }
+        }
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out
+    }
+
+    fn temp_probs(&self, logits: &[f32]) -> Vec<f32> {
+        let mut p = logits.to_vec();
+        softmax_inplace(&mut p, self.cfg.sampling.temperature.max(1e-6));
+        p
+    }
+
+    /// Evaluates `nodes` (all newly added, same growth step) through the
+    /// drafter. Fills slots/cands/dists.
+    fn draft_nodes(
+        &mut self,
+        sess: &mut Session,
+        st: &mut IterState,
+        nodes: &[NodeId],
+        root_pos: i32,
+    ) -> crate::Result<bool> {
+        let n = nodes.len();
+        let Some(width) = width_for(n) else {
+            anyhow::bail!("draft step of {n} tokens exceeds compiled widths")
+        };
+        let Some(slots) = sess.drafter.slots.alloc(n) else {
+            return Ok(false); // cache exhausted — caller stops growth
+        };
+        for (i, &node) in nodes.iter().enumerate() {
+            st.dslots[node] = Some(slots[i]);
+        }
+        let tokens: Vec<u32> = nodes.iter().map(|&id| st.tree.token(id)).collect();
+        let positions: Vec<i32> =
+            nodes.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
+        let mask = sess
+            .drafter
+            .slots
+            .mask_builder()
+            .build(&st.tree, nodes, &st.dslots, width)
+            .to_vec();
+        let req =
+            sess.drafter
+                .padded_request(width, &tokens, &positions, &slots, &mask, sess.exec_mode());
+        let reply = self.rt.forward(req)?;
+        let vocab = sess.drafter.spec.vocab;
+        let keep_dist = self.cfg.sampling.temperature > 0.0;
+        for (i, &node) in nodes.iter().enumerate() {
+            let row = &reply.logits[i * vocab..(i + 1) * vocab];
+            let cands = self.candidates(row, self.cfg.branch_candidates, &mut sess.rng);
+            st.cands[node] = Some(cands);
+            if keep_dist {
+                st.dists[node] = Some(self.temp_probs(row));
+            }
+        }
+        Ok(true)
+    }
+
+    /// Grows the draft tree according to the configured structure.
+    /// Returns the per-step drafter widths (for the Eq. 3 denominator).
+    fn build_tree(
+        &mut self,
+        sess: &mut Session,
+        st: &mut IterState,
+        depth: usize,
+        width: usize,
+        root_pos: i32,
+    ) -> crate::Result<Vec<usize>> {
+        let mut draft_widths = Vec::new();
+        match self.cfg.tree {
+            TreeStructure::Egt => {
+                let mut frontier = Frontier::new(depth);
+                let root_cands = st.cands[0].clone().unwrap_or_default();
+                frontier.push_candidates(&st.tree, 0, root_cands);
+                // With pruning on, over-grow (the DP trims to budget);
+                // without it the grown tree itself must stay verifiable.
+                let cap = if self.cfg.prune {
+                    self.cfg.max_verify * 2
+                } else {
+                    self.cfg.max_verify
+                }
+                .min(64 + 64 * self.cfg.prune as usize);
+                for _ in 0..depth {
+                    let remaining = cap.saturating_sub(st.tree.len());
+                    if remaining == 0 {
+                        break;
+                    }
+                    let w = width.min(remaining);
+                    let before = st.tree.len();
+                    let ids = grow_step(&mut st.tree, &mut frontier, w);
+                    if ids.is_empty() {
+                        break;
+                    }
+                    st.push_nodes(st.tree.len() - before);
+                    if !self.draft_nodes(sess, st, &ids, root_pos)? {
+                        break;
+                    }
+                    draft_widths.push(width_for(ids.len()).unwrap_or(64));
+                    for &id in &ids {
+                        let cands = st.cands[id].clone().unwrap_or_default();
+                        frontier.push_candidates(&st.tree, id, cands);
+                    }
+                }
+            }
+            _ => {
+                let shape = self.static_shape();
+                // Map shape ids (0 = root) to tree node ids.
+                let mut node_of: Vec<Option<NodeId>> = vec![None; shape.len() + 1];
+                node_of[0] = Some(0);
+                for level in shape.levels() {
+                    let mut new_nodes = Vec::new();
+                    for sid in level {
+                        let sn = shape.nodes[sid - 1];
+                        let Some(parent) = node_of[sn.parent] else { continue };
+                        let Some(cands) = &st.cands[parent] else { continue };
+                        let Some(&(token, prob)) = cands.get(sn.rank) else { continue };
+                        let before = st.tree.len();
+                        let id = st.tree.add_node(parent, token, prob);
+                        st.push_nodes(st.tree.len() - before);
+                        node_of[sid] = Some(id);
+                        new_nodes.push(id);
+                    }
+                    if new_nodes.is_empty() {
+                        break;
+                    }
+                    if !self.draft_nodes(sess, st, &new_nodes, root_pos)? {
+                        break;
+                    }
+                    draft_widths.push(width_for(new_nodes.len()).unwrap_or(64));
+                }
+            }
+        }
+        Ok(draft_widths)
+    }
+
+    /// The static shape for the configured baseline structure.
+    fn static_shape(&mut self) -> TreeShape {
+        let budget = self.cfg.max_verify.min(64).saturating_sub(1).max(1);
+        match self.cfg.tree {
+            TreeStructure::Sequence => TreeShape::sequence(self.cfg.max_depth.min(budget)),
+            TreeStructure::KAry => {
+                TreeShape::k_ary(self.cfg.max_width, self.cfg.max_depth, budget)
+            }
+            TreeStructure::Sequoia => {
+                if let Some((b, shape)) = &self.sequoia_cache {
+                    if *b == budget {
+                        return shape.clone();
+                    }
+                }
+                let shape = TreeShape::sequoia(&self.stats.accept_by_rank, budget);
+                self.sequoia_cache = Some((budget, shape.clone()));
+                shape
+            }
+            TreeStructure::Egt => unreachable!("EGT has no static shape"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The decoding iteration
+    // ------------------------------------------------------------------
+
+    /// Runs one full iteration. Returns the tokens committed by it (the
+    /// accepted path plus the bonus token) and the new pending head.
+    #[allow(clippy::too_many_lines)]
+    fn iteration(
+        &mut self,
+        sess: &mut Session,
+        head: PendingHead,
+        rec: &mut Recorder,
+    ) -> crate::Result<(Vec<u32>, Option<PendingHead>, Vec<f32>)> {
+        let root_pos = (sess.committed_len() - 1) as i32;
+        let root_token = *sess.committed.last().unwrap();
+        debug_assert_eq!(head.token, root_token);
+
+        // -------- head draft (possibly already satisfied) ----------------
+        let t0 = Instant::now();
+        let head_logits = match (head.reply, head.pending) {
+            (Some(r), _) => r.logits,
+            (None, Some(p)) => {
+                let reply = p.wait()?;
+                let v = sess.drafter.spec.vocab;
+                reply.logits[..v].to_vec()
+            }
+            (None, None) => unreachable!("head draft neither pending nor ready"),
+        };
+        rec.record("stage.head_draft", t0.elapsed().as_secs_f64());
+
+        let mut st = IterState::new(root_token);
+        st.dslots[0] = Some(head.slot);
+        st.cands[0] = Some(self.candidates(&head_logits, self.cfg.branch_candidates, &mut sess.rng));
+        if self.cfg.sampling.temperature > 0.0 {
+            st.dists[0] = Some(self.temp_probs(&head_logits));
+        }
+
+        // -------- depth / width decisions (O1 + O5) ----------------------
+        // The depth predictor (O5), when trained, supplies the per-context
+        // depth; otherwise Eq. 3 selects the latency-optimal ⟨D, W⟩ from
+        // the profiled curves and the online acceptance stats. The AAL
+        // objective (Fig. 14 ablation / baselines) degenerates to the
+        // maximal envelope, reproducing prior work's behaviour.
+        let (depth, width) = match self.cfg.tree {
+            TreeStructure::Egt => {
+                let hinted = self.cfg.use_depth_predictor.then(|| self.depth_hint.take()).flatten();
+                match hinted {
+                    Some(d) => {
+                        let d = d.clamp(1, self.cfg.max_depth);
+                        let w = select_draft_width(
+                            &self.stats,
+                            &self.lat,
+                            self.cfg.objective,
+                            d,
+                            self.cfg.max_width,
+                            self.cfg.max_verify,
+                        );
+                        (d, w)
+                    }
+                    None => crate::objective::select_depth_width(
+                        &self.stats,
+                        &self.lat,
+                        self.cfg.objective,
+                        self.cfg.max_depth,
+                        self.cfg.max_width,
+                        self.cfg.max_verify,
+                    ),
+                }
+            }
+            _ => (self.cfg.max_depth, self.cfg.max_width),
+        };
+        rec.record("depth", depth as f64);
+        rec.record("width", width as f64);
+
+        // -------- tree drafting ------------------------------------------
+        let t0 = Instant::now();
+        let draft_widths = self.build_tree(sess, &mut st, depth, width, root_pos)?;
+        rec.record("stage.tree_draft", t0.elapsed().as_secs_f64());
+        rec.record("tree_size", st.tree.len() as f64);
+
+        // -------- pruning (O3) -------------------------------------------
+        let t0 = Instant::now();
+        let (keep, w_verify) = if self.cfg.prune && st.tree.len() > 2 {
+            prune_for_objective(&st.tree, &self.lat, &draft_widths, self.cfg.max_verify)
+        } else {
+            let keep: Vec<NodeId> = (0..st.tree.len()).collect();
+            let w = width_for(keep.len())
+                .ok_or_else(|| anyhow::anyhow!("tree of {} nodes unverifiable", keep.len()))?;
+            (keep, w)
+        };
+        rec.record("stage.cpu_build", t0.elapsed().as_secs_f64());
+        rec.record("w_verify", w_verify as f64);
+
+        // -------- verification -------------------------------------------
+        let Some(vslots) = sess.target.slots.alloc(keep.len()) else {
+            anyhow::bail!("verifier cache exhausted")
+        };
+        for (i, &node) in keep.iter().enumerate() {
+            st.vslots[node] = Some(vslots[i]);
+        }
+        let vtokens: Vec<u32> = keep.iter().map(|&id| st.tree.token(id)).collect();
+        let vpositions: Vec<i32> =
+            keep.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
+        let vmask = sess
+            .target
+            .slots
+            .mask_builder()
+            .build(&st.tree, &keep, &st.vslots, w_verify)
+            .to_vec();
+        let vreq = sess.target.padded_request(
+            w_verify,
+            &vtokens,
+            &vpositions,
+            &vslots,
+            &vmask,
+            sess.exec_mode(),
+        );
+        let t0 = Instant::now();
+        let verify_pending = self.rt.submit(vreq)?;
+
+        // -------- AOT tail draft (§5.1) -----------------------------------
+        // Queue the most likely next-root continuations behind the verify
+        // call; they execute while the CPU walks acceptance.
+        let mut tail: Vec<(NodeId, u32, u32)> = Vec::new(); // (leaf, token, slot)
+        let mut tail_pending: Option<Pending<ForwardReply>> = None;
+        if self.plan.aot_tail {
+            let t_tail = Instant::now();
+            let mut leaves: Vec<NodeId> = keep
+                .iter()
+                .copied()
+                .filter(|&id| {
+                    // leaf within the pruned set
+                    !st.tree.children(id).iter().any(|c| keep.contains(c))
+                })
+                .collect();
+            leaves.sort_by(|&a, &b| {
+                st.tree.path_prob(b).partial_cmp(&st.tree.path_prob(a)).unwrap()
+            });
+            let t_width = 4usize;
+            let picks: Vec<NodeId> = leaves
+                .into_iter()
+                .filter(|&l| st.cands[l].as_ref().map_or(false, |c| !c.is_empty()))
+                .take(t_width)
+                .collect();
+            if !picks.is_empty() {
+                if let Some(slots) = sess.drafter.slots.alloc(picks.len()) {
+                    let mut tokens = Vec::new();
+                    let mut positions = Vec::new();
+                    let mut dsl = st.dslots.clone();
+                    // Temporarily extend the tree with the tail nodes so the
+                    // mask builder sees their ancestry.
+                    let mut tmp_tree = st.tree.clone();
+                    let mut nodes = Vec::new();
+                    for (i, &leaf) in picks.iter().enumerate() {
+                        let (tok, p) = st.cands[leaf].as_ref().unwrap()[0];
+                        let id = tmp_tree.add_node(leaf, tok, p);
+                        dsl.push(Some(slots[i]));
+                        nodes.push(id);
+                        tokens.push(tok);
+                        positions.push(root_pos + tmp_tree.depth(id) as i32);
+                        tail.push((leaf, tok, slots[i]));
+                    }
+                    let width = width_for(picks.len()).unwrap();
+                    let mask = sess
+                        .drafter
+                        .slots
+                        .mask_builder()
+                        .build(&tmp_tree, &nodes, &dsl, width)
+                        .to_vec();
+                    let req = sess.drafter.padded_request(
+                        width,
+                        &tokens,
+                        &positions,
+                        &slots,
+                        &mask,
+                        sess.exec_mode(),
+                    );
+                    tail_pending = Some(self.rt.submit(req)?);
+                }
+            }
+            rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
+        }
+
+        let vreply = verify_pending.wait()?;
+        rec.record("stage.verify", t0.elapsed().as_secs_f64());
+        rec.record("stage.verify_exec", vreply.exec_seconds);
+
+        // -------- acceptance walk ----------------------------------------
+        let t0 = Instant::now();
+        let vocab = sess.target.spec.vocab;
+        let row_of = |node: NodeId| -> usize { keep.iter().position(|&k| k == node).unwrap() };
+        let mut accepted_path: Vec<NodeId> = vec![0];
+        let mut cur = 0usize;
+        let bonus: u32;
+        loop {
+            let row = &vreply.logits[row_of(cur) * vocab..(row_of(cur) + 1) * vocab];
+            // Children of cur inside the pruned set, in candidate order.
+            let kids: Vec<NodeId> = st
+                .tree
+                .children(cur)
+                .iter()
+                .copied()
+                .filter(|c| keep.contains(c))
+                .collect();
+            let kid_tokens: Vec<u32> = kids.iter().map(|&k| st.tree.token(k)).collect();
+            let outcome = if self.cfg.sampling.temperature == 0.0 {
+                let (o, truth) = crate::sampling::greedy_accept(row, &kid_tokens);
+                // Rank bookkeeping for Sequoia / Fig. 11.
+                let rank = st.cands[cur]
+                    .as_ref()
+                    .and_then(|c| c.iter().position(|&(t, _)| t == truth));
+                self.stats.record_rank(rank);
+                o
+            } else {
+                let p = self.temp_probs(row);
+                let q = st.dists[cur].clone().unwrap_or_else(|| vec![1.0 / vocab as f32; vocab]);
+                let o = stochastic_accept(&p, &q, &kid_tokens, &mut sess.rng);
+                if let AcceptOutcome::Child(i) = o {
+                    let rank = st.cands[cur]
+                        .as_ref()
+                        .and_then(|c| c.iter().position(|&(t, _)| t == kid_tokens[i]));
+                    self.stats.record_rank(rank);
+                } else {
+                    self.stats.record_rank(None);
+                }
+                o
+            };
+            match outcome {
+                AcceptOutcome::Child(i) => {
+                    cur = kids[i];
+                    accepted_path.push(cur);
+                }
+                AcceptOutcome::Bonus(b) => {
+                    bonus = b;
+                    break;
+                }
+            }
+        }
+        let accepted_draft = accepted_path.len() - 1; // excludes root
+        rec.record("stage.accept", t0.elapsed().as_secs_f64());
+        rec.record("accepted", (accepted_draft + 1) as f64);
+
+        // Coverage stats for the width selector: growth step d covered the
+        // true continuation iff the walk descended at least d times.
+        let steps_grown = draft_widths.len();
+        for d in 1..=steps_grown {
+            self.stats.record_step(width, d <= accepted_draft);
+        }
+
+        // Depth-predictor hint for the next iteration, from the hidden
+        // state at the deepest accepted node (the bonus context).
+        let d_model = sess.target.spec.d_model;
+        let hid_row = row_of(cur);
+        let hidden = vreply.hidden[hid_row * d_model..(hid_row + 1) * d_model].to_vec();
+        if self.cfg.use_depth_predictor {
+            if let Some(p) = &self.predictor {
+                if p.input_dim == d_model {
+                    self.depth_hint = Some(p.predict_depth(&hidden, 0.45));
+                }
+            }
+        }
+
+        // -------- AOT head draft / tail-hit resolution --------------------
+        let t0 = Instant::now();
+        let mut tail_rows: Option<ForwardReply> = None;
+        if let Some(p) = tail_pending {
+            // The tail draft finished during the acceptance walk (device
+            // FIFO); this wait is usually instant.
+            let r = p.wait()?;
+            rec.record("stage.tail_draft", r.exec_seconds);
+            tail_rows = Some(r);
+        }
+        let mut next_head: Option<PendingHead> = None;
+        let mut tail_hit = false;
+        if let Some(rows) = &tail_rows {
+            let v = sess.drafter.spec.vocab;
+            for (i, &(leaf, tok, slot)) in tail.iter().enumerate() {
+                if leaf == cur && tok == bonus {
+                    // The speculative tail draft already evaluated the next
+                    // root: reuse its logits row and slot.
+                    next_head = Some(PendingHead {
+                        pending: None,
+                        reply: Some(HeadReply { logits: rows.logits[i * v..(i + 1) * v].to_vec() }),
+                        slot,
+                        token: bonus,
+                    });
+                    tail_hit = true;
+                    break;
+                }
+            }
+        }
+        self.tail_hit_rate = 0.95 * self.tail_hit_rate + 0.05 * (tail_hit as u8 as f64);
+        rec.record("tail_hit", tail_hit as u8 as f64);
+
+        if next_head.is_none() {
+            // Issue the (real) head draft for the bonus token. Under the
+            // AOT-head plan this submission happens *before* bookkeeping so
+            // the drafter runs while the CPU cleans up.
+            if let Some(slot) = sess.drafter.slots.alloc(1).map(|v| v[0]) {
+                let mut dsl = st.dslots.clone();
+                let mut tmp_tree = st.tree.clone();
+                let id = tmp_tree.add_node(cur, bonus, 1.0);
+                dsl.push(Some(slot));
+                let mask = sess
+                    .drafter
+                    .slots
+                    .mask_builder()
+                    .build(&tmp_tree, &[id], &dsl, 1)
+                    .to_vec();
+                let positions = vec![root_pos + tmp_tree.depth(id) as i32];
+                let req = sess.drafter.padded_request(
+                    1,
+                    &[bonus],
+                    &positions,
+                    &[slot],
+                    &mask,
+                    sess.exec_mode(),
+                );
+                let pending = self.rt.submit(req)?;
+                let mut head = PendingHead { pending: Some(pending), reply: None, slot, token: bonus };
+                if !self.plan.aot_head {
+                    // Sequential plan: block right here.
+                    let reply = head.pending.take().unwrap().wait()?;
+                    let v = sess.drafter.spec.vocab;
+                    head.reply = Some(HeadReply { logits: reply.logits[..v].to_vec() });
+                }
+                next_head = Some(head);
+            }
+        }
+        rec.record("stage.head_submit", t0.elapsed().as_secs_f64());
+
+        // -------- bookkeeping ---------------------------------------------
+        let t0 = Instant::now();
+        // Commit accepted slots on both sides; free the rest.
+        for node in 0..st.tree.len() {
+            let on_path = accepted_path.contains(&node);
+            if let Some(s) = st.dslots[node] {
+                if on_path {
+                    sess.drafter.slots.commit(s);
+                } else {
+                    sess.drafter.slots.release(&[s]);
+                }
+            }
+            if let Some(s) = st.vslots[node] {
+                if on_path {
+                    sess.target.slots.commit(s);
+                } else {
+                    sess.target.slots.release(&[s]);
+                }
+            }
+        }
+        // Tail slots: the hit (if any) lives on as the next head slot.
+        for &(_, _, slot) in &tail {
+            let kept = next_head.as_ref().map_or(false, |h| h.slot == slot);
+            if !kept {
+                sess.drafter.slots.release(&[slot]);
+            }
+        }
+        let mut out: Vec<u32> = accepted_path[1..].iter().map(|&n| st.tree.token(n)).collect();
+        out.push(bonus);
+        sess.committed.extend_from_slice(&out);
+        rec.record("stage.bookkeep", t0.elapsed().as_secs_f64());
+
+        Ok((out, next_head, hidden))
+    }
+
+    /// Collected depth-predictor training sample: hidden state paired with
+    /// the *next* iteration's accepted count (filled by the trainer).
+    pub fn take_depth_samples(&mut self) -> Vec<(Vec<f32>, usize)> {
+        std::mem::take(&mut self.depth_samples)
+    }
+}
+
+// Fields that need interior iteration state (declared separately for
+// readability of the main impl above).
+impl SpecDecoder {
+    fn initial_head(&self, sess: &mut Session) -> crate::Result<PendingHead> {
+        let root_token = *sess.committed.last().unwrap();
+        let root_pos = (sess.committed_len() - 1) as i32;
+        let slot = sess
+            .drafter
+            .slots
+            .alloc(1)
+            .ok_or_else(|| anyhow::anyhow!("drafter cache exhausted at start"))?[0];
+        let mut mb = sess.drafter.slots.mask_builder().clone();
+        mb.commit_slot(slot); // root attends to itself + prefix
+        let tree = TokenTree::new(root_token);
+        let mask = mb.build(&tree, &[0], &[Some(slot)], 1).to_vec();
+        let req = sess.drafter.padded_request(
+            1,
+            &[root_token],
+            &[root_pos],
+            &[slot],
+            &mask,
+            sess.exec_mode(),
+        );
+        let reply = self.rt.forward(req)?;
+        let v = sess.drafter.spec.vocab;
+        Ok(PendingHead {
+            pending: None,
+            reply: Some(HeadReply { logits: reply.logits[..v].to_vec() }),
+            slot,
+            token: root_token,
+        })
+    }
+}
+
+impl super::Engine for SpecDecoder {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn generate_with(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sink: super::TokenSink,
+    ) -> crate::Result<Generation> {
+        let mut sess = Session::new(
+            &self.rt,
+            &self.cfg.drafter,
+            &self.cfg.target,
+            self.cfg.sampling.seed,
+            self.cfg.compiled,
+        )?;
+        let t_prefill = Instant::now();
+        let prefill_reply = sess.prefill(prompt)?;
+        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
+
+        // Seed the depth hint from the prefill hidden state.
+        if let (Some(p), Some(r)) = (&self.predictor, &prefill_reply) {
+            let d = sess.target.spec.d_model;
+            if p.input_dim == d && r.hidden.len() >= d {
+                let last = &r.hidden[r.hidden.len() - d..];
+                self.depth_hint = Some(p.predict_depth(last, 0.45));
+            }
+        }
+
+        let mut rec = Recorder::new();
+        let mut tokens = Vec::new();
+        let mut iterations = 0usize;
+        // The context embedding that *preceded* each iteration (predictor
+        // training pairs it with that iteration's accepted count).
+        let mut prev_hidden: Option<Vec<f32>> = prefill_reply.as_ref().and_then(|r| {
+            let d = sess.target.spec.d_model;
+            (r.hidden.len() >= d).then(|| r.hidden[r.hidden.len() - d..].to_vec())
+        });
+        let t0 = Instant::now();
+        let mut head = self.initial_head(&mut sess)?;
+        // Keep enough headroom for one full tree + tail + bonus chain.
+        let tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
+        while tokens.len() < max_new && sess.headroom(tree_budget) > 0 {
+            let t_iter = Instant::now();
+            let (out, next_head, hidden) = self.iteration(&mut sess, head, &mut rec)?;
+            rec.record("stage.iter", t_iter.elapsed().as_secs_f64());
+            iterations += 1;
+            // Depth-predictor training data: the hidden state seen *before*
+            // this iteration, labelled with how many draft tokens it
+            // accepted.
+            if let Some(ph) = prev_hidden.take() {
+                self.depth_samples.push((ph, out.len().saturating_sub(1)));
+            }
+            prev_hidden = Some(hidden);
+            let room = max_new.saturating_sub(tokens.len());
+            sink(&out[..out.len().min(room)]);
+            tokens.extend_from_slice(&out);
+            match next_head {
+                Some(h) => head = h,
+                None => break, // cache exhausted
+            }
+            // Refresh the measured CPU-overhead term of the objective.
+            let cpu = rec.mean("stage.cpu_build") + rec.mean("stage.accept") + rec.mean("stage.bookkeep");
+            if cpu.is_finite() {
+                self.lat.cpu_overhead = 0.9 * self.lat.cpu_overhead + 0.1 * cpu;
+            }
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        tokens.truncate(max_new);
+        // §5.2: refresh the profile-guided plan with the *measured* stage
+        // durations of this generation (takes effect next request).
+        self.research_plan(&rec);
+        Ok(Generation { tokens, iterations, seconds, prefill_seconds, recorder: rec })
+    }
+}

@@ -1,0 +1,170 @@
+//! Slot-level KV-cache management.
+//!
+//! The L2 graphs treat the cache as a fixed-capacity array of *slots*
+//! (DESIGN.md §7): each evaluated token writes its K/V at an arbitrary slot
+//! and visibility is mask-encoded, so "memory management" reduces to a
+//! free-list allocator plus the committed-slot set that [`MaskBuilder`]
+//! (re)builds prefix rows from. Rejected draft slots are returned to the
+//! free list and reused by the next iteration's tree — no copying, no
+//! compaction, no rollback, which is exactly what keeps every operator
+//! shape static for the AOT graphs.
+//!
+//! One reserved *trash slot* (the last slot) absorbs the K/V writes of
+//! padding rows in width-padded calls; it is never marked visible.
+
+use crate::tree::MaskBuilder;
+
+/// Slot allocator + committed-set tracker for one model's cache.
+#[derive(Debug, Clone)]
+pub struct SlotCache {
+    capacity: usize,
+    free: Vec<u32>, // LIFO free list (excludes the trash slot)
+    committed: Vec<u32>,
+    mask: MaskBuilder,
+}
+
+impl SlotCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 2, "need at least one usable slot plus trash");
+        // Hand out low slots first (helps locality of the scatter).
+        let free = (0..capacity as u32 - 1).rev().collect();
+        Self { capacity, free, committed: Vec::new(), mask: MaskBuilder::new(capacity) }
+    }
+
+    /// The reserved slot padding rows scatter their K/V into.
+    pub fn trash_slot(&self) -> u32 {
+        self.capacity as u32 - 1
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn committed_len(&self) -> usize {
+        self.committed.len()
+    }
+
+    pub fn committed(&self) -> &[u32] {
+        &self.committed
+    }
+
+    /// Allocates `n` slots for draft/tree tokens. Returns `None` when the
+    /// cache cannot host the tree (callers shrink the envelope).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    /// Returns draft slots that did not get committed.
+    pub fn release(&mut self, slots: &[u32]) {
+        for &s in slots {
+            debug_assert!(s != self.trash_slot());
+            debug_assert!(!self.committed.contains(&s), "releasing committed slot {s}");
+            self.free.push(s);
+        }
+    }
+
+    /// Promotes a draft slot to the committed prefix (visible to all
+    /// future tokens).
+    pub fn commit(&mut self, slot: u32) {
+        debug_assert!(!self.committed.contains(&slot));
+        self.committed.push(slot);
+        self.mask.commit_slot(slot);
+    }
+
+    /// Forgets everything (session reset). Stale K/V data stays in the
+    /// device buffer but is unreachable — masks make it invisible.
+    pub fn reset(&mut self) {
+        for &s in &self.committed {
+            self.mask.release_slot(s);
+        }
+        self.committed.clear();
+        self.free = (0..self.capacity as u32 - 1).rev().collect();
+    }
+
+    /// The mask builder whose prefix row tracks this cache's commits.
+    pub fn mask_builder(&mut self) -> &mut MaskBuilder {
+        &mut self.mask
+    }
+
+    /// Remaining generation headroom in tokens, keeping `tree_budget`
+    /// slots available for drafting.
+    pub fn headroom(&self, tree_budget: usize) -> usize {
+        self.free.len().saturating_sub(tree_budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut c = SlotCache::new(8);
+        assert_eq!(c.free_count(), 7); // one slot reserved as trash
+        let s = c.alloc(3).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(c.free_count(), 4);
+        c.release(&s);
+        assert_eq!(c.free_count(), 7);
+    }
+
+    #[test]
+    fn alloc_fails_when_exhausted() {
+        let mut c = SlotCache::new(4);
+        assert!(c.alloc(3).is_some());
+        assert!(c.alloc(1).is_none());
+    }
+
+    #[test]
+    fn trash_slot_is_never_allocated() {
+        let mut c = SlotCache::new(4);
+        let all = c.alloc(3).unwrap();
+        assert!(!all.contains(&c.trash_slot()));
+    }
+
+    #[test]
+    fn commit_updates_prefix_row() {
+        let mut c = SlotCache::new(4);
+        let s = c.alloc(2).unwrap();
+        c.commit(s[0]);
+        assert_eq!(c.committed_len(), 1);
+        assert_eq!(c.mask_builder().committed_count(), 1);
+    }
+
+    #[test]
+    fn reset_restores_everything() {
+        let mut c = SlotCache::new(6);
+        let s = c.alloc(4).unwrap();
+        c.commit(s[0]);
+        c.commit(s[1]);
+        c.release(&s[2..]);
+        c.reset();
+        assert_eq!(c.free_count(), 5);
+        assert_eq!(c.committed_len(), 0);
+        assert_eq!(c.mask_builder().committed_count(), 0);
+    }
+
+    #[test]
+    fn headroom_reserves_tree_budget() {
+        let c = SlotCache::new(74); // 73 usable
+        assert_eq!(c.headroom(64), 9);
+        assert_eq!(c.headroom(100), 0);
+    }
+
+    #[test]
+    fn slots_are_reused_lifo() {
+        let mut c = SlotCache::new(8);
+        let a = c.alloc(2).unwrap();
+        c.release(&a);
+        let b = c.alloc(2).unwrap();
+        assert_eq!(b[0], a[1]);
+        assert_eq!(b[1], a[0]);
+    }
+}

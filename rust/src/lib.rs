@@ -1,0 +1,41 @@
+//! # Yggdrasil
+//!
+//! A reproduction of *"Yggdrasil: Bridging Dynamic Speculation and Static
+//! Runtime for Latency-Optimal Tree-Based LLM Decoding"* (NeurIPS 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas)** — the tree-attention verification kernel, authored in
+//!   `python/compile/kernels/` and lowered into the model graphs.
+//! * **L2 (JAX)** — Llama-architecture drafter/verifier models with a
+//!   slot-indexed functional KV cache, AOT-lowered once per static width to
+//!   HLO text (`python/compile/aot.py` → `artifacts/`).
+//! * **L3 (this crate)** — the paper's system contribution: the
+//!   [`tree::TokenTree`] Equal-Growth Tree drafting algorithm, the
+//!   latency-aware speedup objective ([`objective`]), verification-width
+//!   pruning ([`pruning`]), the depth predictor ([`predictor`]), and the
+//!   stage-based scheduling runtime ([`scheduler`]), all driving AOT-compiled
+//!   PJRT executables through [`runtime`]. Python never runs at serve time.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-figure reproductions.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod corpus;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod objective;
+pub mod predictor;
+pub mod pruning;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod tree;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

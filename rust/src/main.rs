@@ -1,0 +1,279 @@
+//! `yggdrasil` — the launcher.
+//!
+//! ```text
+//! yggdrasil generate        --prompt-dataset c4s --max-new 64 [--engine yggdrasil]
+//! yggdrasil serve           --addr 127.0.0.1:7777 [--no-stream]
+//! yggdrasil profile         --reps 10            (writes artifacts/profile.*.json)
+//! yggdrasil train-predictor --steps 8            (writes artifacts/predictor.*.json)
+//! yggdrasil figures         --exp all|table1|fig4..fig15 [--quick]
+//! ```
+//!
+//! Everything runs against the AOT artifacts (`make artifacts`); Python is
+//! never invoked at runtime.
+
+use yggdrasil::baselines::build_engine;
+use yggdrasil::bench::{run_experiment, BenchOpts};
+use yggdrasil::config::{AppConfig, EngineConfig};
+use yggdrasil::corpus::PromptSet;
+use yggdrasil::engine::{profiling, Engine, SpecDecoder};
+use yggdrasil::predictor::{DepthPredictor, DepthSample};
+use yggdrasil::runtime::Runtime;
+use yggdrasil::server::Server;
+use yggdrasil::util::cli::Args;
+
+const OPTS: &[&str] = &[
+    "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
+    "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
+    "max-width", "max-verify",
+];
+const FLAGS: &[&str] = &["quick", "no-stream", "eager", "help"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> yggdrasil::Result<()> {
+    let args = Args::parse(argv, OPTS, FLAGS)?;
+    if args.flag("help") || args.subcommand.is_none() {
+        print_help();
+        return Ok(());
+    }
+    let mut app = match args.get("config") {
+        Some(p) => AppConfig::load(std::path::Path::new(p))?,
+        None => AppConfig::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        app.runtime.artifacts_dir = dir.into();
+    }
+    apply_engine_overrides(&mut app.engine, &args)?;
+
+    match args.subcommand.as_deref().unwrap() {
+        "generate" => cmd_generate(&app, &args),
+        "serve" => cmd_serve(&app, &args),
+        "profile" => cmd_profile(&app, &args),
+        "train-predictor" => cmd_train_predictor(&app, &args),
+        "figures" => cmd_figures(&app, &args),
+        other => anyhow::bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn apply_engine_overrides(cfg: &mut EngineConfig, args: &Args) -> yggdrasil::Result<()> {
+    if let Some(d) = args.get("drafter") {
+        cfg.drafter = d.into();
+    }
+    if let Some(t) = args.get("target") {
+        cfg.target = t.into();
+    }
+    cfg.max_new_tokens = args.usize_or("max-new", cfg.max_new_tokens)?;
+    cfg.max_depth = args.usize_or("max-depth", cfg.max_depth)?;
+    cfg.max_width = args.usize_or("max-width", cfg.max_width)?;
+    cfg.max_verify = args.usize_or("max-verify", cfg.max_verify)?;
+    cfg.sampling.temperature = args.f64_or("temperature", cfg.sampling.temperature as f64)? as f32;
+    cfg.sampling.seed = args.u64_or("seed", cfg.sampling.seed)?;
+    if args.flag("eager") {
+        cfg.compiled = false;
+    }
+    Ok(())
+}
+
+/// Loads the runtime + latency model + optional trained predictor and
+/// builds the configured engine.
+fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn Engine + Send>)> {
+    let dir = &app.runtime.artifacts_dir;
+    let cfg = app.engine.clone();
+    let rt = Runtime::load(dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
+    let engine_name = args.str_or("engine", "yggdrasil");
+    let lat = profiling::load_or_profile(
+        &rt,
+        &cfg.drafter,
+        &cfg.target,
+        app.runtime.profile_file.as_deref(),
+        5,
+    )?;
+    let boxed: Box<dyn Engine + Send> = if engine_name == "yggdrasil" {
+        let predictor = app
+            .runtime
+            .predictor_file
+            .as_ref()
+            .map(|p| profiling::keyed_path(p, &cfg.drafter, &cfg.target))
+            .filter(|p| p.exists())
+            .and_then(|p| DepthPredictor::load(&p).ok());
+        if predictor.is_some() {
+            eprintln!("loaded trained depth predictor");
+        }
+        Box::new(SpecDecoder::new(&rt, cfg.clone(), lat, predictor))
+    } else if engine_name == "vanilla" {
+        Box::new(yggdrasil::baselines::VanillaEngine::new(&rt, &cfg.target, true))
+    } else {
+        // Validate via the factory, then rebuild the Send version with the
+        // session-level overrides applied.
+        let e = build_engine(&rt, &engine_name, (&cfg.drafter, &cfg.target), &lat)?;
+        drop(e);
+        let mut p = match engine_name.as_str() {
+            "seqspec" => EngineConfig::preset_seqspec(5),
+            "specinfer" => EngineConfig::preset_specinfer(4, 4, 64),
+            "sequoia" => EngineConfig::preset_sequoia(32),
+            "vllmspec" => EngineConfig::preset_vllmspec(5),
+            other => anyhow::bail!("unknown engine '{other}'"),
+        };
+        p.drafter = cfg.drafter.clone();
+        p.target = cfg.target.clone();
+        p.sampling = cfg.sampling.clone();
+        Box::new(SpecDecoder::new(&rt, p, lat, None))
+    };
+    Ok((rt, boxed))
+}
+
+fn cmd_generate(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let (_rt, mut engine) = build(app, args)?;
+    let ds = args.str_or("prompt-dataset", "c4s");
+    let idx = args.usize_or("prompt-index", 0)?;
+    let prompts = PromptSet::load(&app.runtime.artifacts_dir, &ds)?;
+    let prompt = prompts
+        .prompts
+        .get(idx)
+        .ok_or_else(|| anyhow::anyhow!("prompt index {idx} out of range"))?;
+    let max_new = app.engine.max_new_tokens;
+    eprintln!("engine: {}", engine.name());
+    eprintln!("prompt ({ds}[{idx}]): {prompt:?}");
+    let g = engine.generate_with(prompt, max_new, &mut |toks| {
+        for t in toks {
+            print!("{t} ");
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    })?;
+    println!();
+    eprintln!(
+        "{} tokens in {} iterations — AAL {:.2}, {:.2} ms/token (prefill {:.1} ms)",
+        g.tokens.len(),
+        g.iterations,
+        g.aal(),
+        g.tpot() * 1e3,
+        g.prefill_seconds * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let (_rt, engine) = build(app, args)?;
+    let addr = args.str_or("addr", &app.server.addr);
+    let stream = app.server.stream && !args.flag("no-stream");
+    let srv = Server::spawn(&addr, engine, app.server.max_queue, stream)?;
+    eprintln!("serving on {} (stream={stream}) — Ctrl-C to stop", srv.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_profile(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let cfg = &app.engine;
+    let rt =
+        Runtime::load(&app.runtime.artifacts_dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
+    let reps = args.usize_or("reps", 10)?;
+    let model = profiling::profile_latency_model(&rt, &cfg.drafter, &cfg.target, reps)?;
+    let base = app
+        .runtime
+        .profile_file
+        .clone()
+        .unwrap_or_else(|| app.runtime.artifacts_dir.join("profile.json"));
+    let path = profiling::keyed_path(&base, &cfg.drafter, &cfg.target);
+    model.save(&path)?;
+    println!("profile ({reps} reps/width) -> {}", path.display());
+    for &w in yggdrasil::config::GRAPH_WIDTHS.iter() {
+        println!(
+            "  w={w:<3} drafter {:8.3} ms   verifier {:8.3} ms",
+            model.t_draft(w) * 1e3,
+            model.t_verify(w) * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train_predictor(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let cfg = app.engine.clone();
+    let rt =
+        Runtime::load(&app.runtime.artifacts_dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
+    let lat = profiling::load_or_profile(
+        &rt,
+        &cfg.drafter,
+        &cfg.target,
+        app.runtime.profile_file.as_deref(),
+        5,
+    )?;
+    // Collect (hidden, accepted) pairs by running the engine (predictor
+    // off) over the calibration datasets.
+    let mut collect_cfg = cfg.clone();
+    collect_cfg.use_depth_predictor = false;
+    let mut dec = SpecDecoder::new(&rt, collect_cfg, lat, None);
+    let epochs = args.usize_or("steps", 8)?;
+    let mut samples: Vec<DepthSample> = Vec::new();
+    for ds in yggdrasil::corpus::DATASETS {
+        let prompts = PromptSet::load(&app.runtime.artifacts_dir, ds)?;
+        for p in prompts.prompts.iter().take(if args.flag("quick") { 2 } else { 6 }) {
+            let _ = dec.generate(p, cfg.max_new_tokens)?;
+            samples.extend(
+                dec.take_depth_samples()
+                    .into_iter()
+                    .map(|(hidden, accepted)| DepthSample { hidden, accepted }),
+            );
+        }
+        eprintln!("collected {} samples after {ds}", samples.len());
+    }
+    anyhow::ensure!(samples.len() >= 32, "not enough samples ({})", samples.len());
+    let dim = samples[0].hidden.len();
+    let mut pred = DepthPredictor::new(dim, 32, cfg.max_depth, 7);
+    let loss = pred.train(&samples, epochs, 1e-3, 11);
+    let base = app
+        .runtime
+        .predictor_file
+        .clone()
+        .unwrap_or_else(|| app.runtime.artifacts_dir.join("predictor.json"));
+    let path = profiling::keyed_path(&base, &cfg.drafter, &cfg.target);
+    pred.save(&path)?;
+    println!(
+        "trained depth predictor on {} samples ({epochs} epochs, final loss {loss:.4}) -> {}",
+        samples.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_figures(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let exp = args.str_or("exp", "all");
+    let opts = BenchOpts {
+        artifacts_dir: app.runtime.artifacts_dir.clone(),
+        out_dir: args.str_or("out-dir", "results").into(),
+        quick: args.flag("quick"),
+        seed: args.u64_or("seed", 0)?,
+    };
+    run_experiment(&exp, opts)
+}
+
+fn print_help() {
+    println!(
+        "yggdrasil — latency-optimal tree-based speculative decoding
+
+USAGE: yggdrasil <subcommand> [options]
+
+SUBCOMMANDS
+  generate         decode one prompt and print tokens (streaming)
+  serve            TCP JSON-lines server (see rust/src/server)
+  profile          measure T_drafter/T_verifier latency curves
+  train-predictor  train the draft-depth predictor from profiling runs
+  figures          regenerate the paper's tables/figures (--exp all|figN)
+
+COMMON OPTIONS
+  --artifacts DIR     artifact bundle (default: artifacts)
+  --config FILE       JSON config (AppConfig)
+  --engine NAME       yggdrasil|vanilla|seqspec|specinfer|sequoia|vllmspec
+  --drafter / --target model names (default dft-xs / tgt-sm)
+  --max-new N --temperature T --seed S
+  --exp EXP --quick --out-dir DIR   (figures)
+"
+    );
+}

@@ -1,0 +1,245 @@
+//! Latency metrics: timers, histograms, and experiment tables.
+//!
+//! Every engine step records per-stage wall time into a [`Recorder`]; the
+//! benchmark harness renders [`Table`]s in both Markdown (for
+//! EXPERIMENTS.md) and CSV (for plotting). Percentiles come from an
+//! exact sorted-sample implementation — sample counts here are small
+//! (thousands), so there is no need for sketches.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// A named series of f64 samples (seconds, ratios, counts…).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn record(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NAN, f64::max)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Named collection of series, keyed by stage/metric name.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Series>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().record(value);
+    }
+
+    /// Times `f` and records its wall-clock seconds under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.get(name).map(|s| s.mean()).unwrap_or(f64::NAN)
+    }
+
+    pub fn sum(&self, name: &str) -> f64 {
+        self.get(name).map(|s| s.sum()).unwrap_or(0.0)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(|s| s.as_str())
+    }
+
+    pub fn merge(&mut self, other: &Recorder) {
+        for (k, v) in &other.series {
+            let e = self.series.entry(k.clone()).or_default();
+            e.samples.extend_from_slice(&v.samples);
+        }
+    }
+
+    /// Summary table: one row per series with mean/p50/p99.
+    pub fn summary(&self) -> Table {
+        let mut t = Table::new(&["metric", "n", "mean", "p50", "p99", "max"]);
+        for (name, s) in &self.series {
+            t.row(&[
+                name.clone(),
+                s.len().to_string(),
+                format!("{:.6}", s.mean()),
+                format!("{:.6}", s.percentile(50.0)),
+                format!("{:.6}", s.percentile(99.0)),
+                format!("{:.6}", s.max()),
+            ]);
+        }
+        t
+    }
+}
+
+/// A simple experiment table rendered as Markdown or CSV.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            let _ = writeln!(out, "### {t}\n");
+        }
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(out, "|{}|", self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.record(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        assert_eq!(s.percentile(50.0), 3.0); // nearest-rank on even n
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn recorder_time_measures_something() {
+        let mut r = Recorder::new();
+        let v = r.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(r.mean("work") >= 0.002);
+    }
+
+    #[test]
+    fn recorder_merge_concatenates() {
+        let mut a = Recorder::new();
+        a.record("x", 1.0);
+        let mut b = Recorder::new();
+        b.record("x", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().len(), 2);
+        assert_eq!(a.mean("x"), 2.0);
+    }
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = Table::new(&["a", "b"]).with_title("T");
+        t.row(&["1", "2"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| 1 | 2 |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("a,b"));
+        assert!(csv.contains("1,2"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1"]);
+    }
+}

@@ -1,0 +1,380 @@
+//! The draft-depth predictor — §4.2 "Draft Depth Prediction" (O5).
+//!
+//! A lightweight multi-head MLP consumes the verifier's last-token hidden
+//! state and predicts how deep the next draft is worth growing: a two-layer
+//! encoder feeds `max_depth` binary heads, head *d* estimating
+//! `P(accepted length ≥ d+1)`. The expected acceptance length is the sum of
+//! the head probabilities; the depth decision is its (clamped) ceiling.
+//!
+//! Everything is implemented from scratch in Rust — forward, backprop,
+//! Adam — because the predictor must train *online from profiling runs of
+//! this system* (`yggdrasil train-predictor`) and run inference inside the
+//! decode loop with microsecond-level cost; its weights persist as JSON in
+//! the artifacts directory.
+
+
+use crate::sampling::XorShiftRng;
+use crate::util::json::Json;
+
+/// Row-major matrix with bias.
+#[derive(Debug, Clone)]
+struct Linear {
+    w: Vec<f32>, // [out, in]
+    b: Vec<f32>, // [out]
+    rows: usize,
+    cols: usize,
+}
+
+impl Linear {
+    fn new(rows: usize, cols: usize, rng: &mut XorShiftRng) -> Self {
+        let scale = (2.0 / cols as f32).sqrt();
+        let w = (0..rows * cols)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+            .collect();
+        Self { w, b: vec![0.0; rows], rows, cols }
+    }
+
+    fn forward(&self, x: &[f32], out: &mut Vec<f32>) {
+        out.resize(self.rows, 0.0);
+        for r in 0..self.rows {
+            let row = &self.w[r * self.cols..(r + 1) * self.cols];
+            let mut acc = self.b[r];
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// Accumulates gradients; returns dL/dx into `dx`.
+    fn backward(&self, x: &[f32], dy: &[f32], gw: &mut [f32], gb: &mut [f32], dx: &mut [f32]) {
+        dx.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..self.rows {
+            let d = dy[r];
+            gb[r] += d;
+            let row = &self.w[r * self.cols..(r + 1) * self.cols];
+            let grow = &mut gw[r * self.cols..(r + 1) * self.cols];
+            for c in 0..self.cols {
+                grow[c] += d * x[c];
+                dx[c] += d * row[c];
+            }
+        }
+    }
+
+    fn param_len(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+fn relu_inplace(x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = v.max(0.0));
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// One (hidden-state, accepted-length) training example collected by the
+/// profiling run.
+#[derive(Debug, Clone)]
+pub struct DepthSample {
+    pub hidden: Vec<f32>,
+    /// Number of draft tokens accepted in the following iteration
+    /// (excludes the bonus token), clamped to `max_depth`.
+    pub accepted: usize,
+}
+
+/// The multi-head depth predictor.
+#[derive(Debug, Clone)]
+pub struct DepthPredictor {
+    enc1: Linear,
+    enc2: Linear,
+    heads: Linear, // [max_depth, hidden]
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub max_depth: usize,
+    /// Training metadata for EXPERIMENTS.md provenance.
+    pub train_loss: f32,
+    pub train_samples: usize,
+}
+
+impl DepthPredictor {
+    pub fn new(input_dim: usize, hidden_dim: usize, max_depth: usize, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        Self {
+            enc1: Linear::new(hidden_dim, input_dim, &mut rng),
+            enc2: Linear::new(hidden_dim, hidden_dim, &mut rng),
+            heads: Linear::new(max_depth, hidden_dim, &mut rng),
+            input_dim,
+            hidden_dim,
+            max_depth,
+            train_loss: f32::NAN,
+            train_samples: 0,
+        }
+    }
+
+    /// Head probabilities `P(accepted ≥ d+1)` for d in `0..max_depth`.
+    pub fn head_probs(&self, hidden: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(hidden.len(), self.input_dim);
+        let mut h1 = Vec::new();
+        let mut h2 = Vec::new();
+        let mut logits = Vec::new();
+        self.enc1.forward(hidden, &mut h1);
+        relu_inplace(&mut h1);
+        self.enc2.forward(&h1, &mut h2);
+        relu_inplace(&mut h2);
+        self.heads.forward(&h2, &mut logits);
+        logits.iter().map(|&x| sigmoid(x)).collect()
+    }
+
+    /// Expected acceptance length (draft tokens only, no bonus).
+    pub fn expected_accept_len(&self, hidden: &[f32]) -> f32 {
+        self.head_probs(hidden).iter().sum()
+    }
+
+    /// The depth decision: grow while the marginal head probability stays
+    /// above `threshold`, clamped to `[1, max_depth]`.
+    pub fn predict_depth(&self, hidden: &[f32], threshold: f32) -> usize {
+        let probs = self.head_probs(hidden);
+        let mut d = 0;
+        for &p in &probs {
+            if p < threshold {
+                break;
+            }
+            d += 1;
+        }
+        d.clamp(1, self.max_depth)
+    }
+
+    /// Trains with Adam on BCE over the heads. Returns the final epoch's
+    /// mean loss. Deterministic given `seed`.
+    pub fn train(&mut self, data: &[DepthSample], epochs: usize, lr: f32, seed: u64) -> f32 {
+        assert!(!data.is_empty());
+        let n_params =
+            self.enc1.param_len() + self.enc2.param_len() + self.heads.param_len();
+        let mut m = vec![0.0f32; n_params];
+        let mut v = vec![0.0f32; n_params];
+        let mut t = 0usize;
+        let mut rng = XorShiftRng::new(seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let mut last_loss = 0.0f32;
+
+        for _epoch in 0..epochs {
+            // Fisher–Yates shuffle.
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.next_range(i + 1));
+            }
+            let mut epoch_loss = 0.0f64;
+            for &idx in &order {
+                let s = &data[idx];
+                // Forward with intermediates.
+                let mut h1 = Vec::new();
+                let mut h2 = Vec::new();
+                let mut logits = Vec::new();
+                self.enc1.forward(&s.hidden, &mut h1);
+                let h1_pre = h1.clone();
+                relu_inplace(&mut h1);
+                self.enc2.forward(&h1, &mut h2);
+                let h2_pre = h2.clone();
+                relu_inplace(&mut h2);
+                self.heads.forward(&h2, &mut logits);
+
+                // BCE loss + dL/dlogit = sigmoid(x) - y.
+                let mut dlogits = vec![0.0f32; self.max_depth];
+                for d in 0..self.max_depth {
+                    let y = if s.accepted >= d + 1 { 1.0 } else { 0.0 };
+                    let p = sigmoid(logits[d]);
+                    let pc = p.clamp(1e-6, 1.0 - 1e-6);
+                    epoch_loss +=
+                        -(y * pc.ln() + (1.0 - y) * (1.0 - pc).ln()) as f64;
+                    dlogits[d] = p - y;
+                }
+
+                // Backward.
+                let (mut g1w, mut g1b) =
+                    (vec![0.0f32; self.enc1.w.len()], vec![0.0f32; self.enc1.b.len()]);
+                let (mut g2w, mut g2b) =
+                    (vec![0.0f32; self.enc2.w.len()], vec![0.0f32; self.enc2.b.len()]);
+                let (mut ghw, mut ghb) =
+                    (vec![0.0f32; self.heads.w.len()], vec![0.0f32; self.heads.b.len()]);
+                let mut dh2 = vec![0.0f32; self.hidden_dim];
+                let mut dh1 = vec![0.0f32; self.hidden_dim];
+                let mut dx = vec![0.0f32; self.input_dim];
+
+                self.heads.backward(&h2, &dlogits, &mut ghw, &mut ghb, &mut dh2);
+                for i in 0..self.hidden_dim {
+                    if h2_pre[i] <= 0.0 {
+                        dh2[i] = 0.0;
+                    }
+                }
+                self.enc2.backward(&h1, &dh2, &mut g2w, &mut g2b, &mut dh1);
+                for i in 0..self.hidden_dim {
+                    if h1_pre[i] <= 0.0 {
+                        dh1[i] = 0.0;
+                    }
+                }
+                self.enc1.backward(&s.hidden, &dh1, &mut g1w, &mut g1b, &mut dx);
+
+                // Adam over the concatenated parameter vector.
+                t += 1;
+                let b1 = 0.9f32;
+                let b2 = 0.999f32;
+                let bc1 = 1.0 - b1.powi(t as i32);
+                let bc2 = 1.0 - b2.powi(t as i32);
+                let mut off = 0usize;
+                let mut apply = |p: &mut [f32], g: &[f32]| {
+                    for i in 0..p.len() {
+                        let j = off + i;
+                        m[j] = b1 * m[j] + (1.0 - b1) * g[i];
+                        v[j] = b2 * v[j] + (1.0 - b2) * g[i] * g[i];
+                        p[i] -= lr * (m[j] / bc1) / ((v[j] / bc2).sqrt() + 1e-8);
+                    }
+                    off += p.len();
+                };
+                apply(&mut self.enc1.w, &g1w);
+                apply(&mut self.enc1.b, &g1b);
+                apply(&mut self.enc2.w, &g2w);
+                apply(&mut self.enc2.b, &g2b);
+                apply(&mut self.heads.w, &ghw);
+                apply(&mut self.heads.b, &ghb);
+            }
+            last_loss = (epoch_loss / (data.len() * self.max_depth) as f64) as f32;
+        }
+        self.train_loss = last_loss;
+        self.train_samples = data.len();
+        last_loss
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lin = |l: &Linear| {
+            Json::obj(vec![
+                ("w", Json::from_f32s(&l.w)),
+                ("b", Json::from_f32s(&l.b)),
+                ("rows", Json::Num(l.rows as f64)),
+                ("cols", Json::Num(l.cols as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("enc1", lin(&self.enc1)),
+            ("enc2", lin(&self.enc2)),
+            ("heads", lin(&self.heads)),
+            ("input_dim", Json::Num(self.input_dim as f64)),
+            ("hidden_dim", Json::Num(self.hidden_dim as f64)),
+            ("max_depth", Json::Num(self.max_depth as f64)),
+            ("train_loss", Json::Num(self.train_loss as f64)),
+            ("train_samples", Json::Num(self.train_samples as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let lin = |j: &Json| -> crate::Result<Linear> {
+            let l = Linear {
+                w: j.f64_vec("w")?.iter().map(|&x| x as f32).collect(),
+                b: j.f64_vec("b")?.iter().map(|&x| x as f32).collect(),
+                rows: j.usize("rows")?,
+                cols: j.usize("cols")?,
+            };
+            anyhow::ensure!(l.w.len() == l.rows * l.cols && l.b.len() == l.rows, "bad linear");
+            Ok(l)
+        };
+        Ok(Self {
+            enc1: lin(j.req("enc1")?)?,
+            enc2: lin(j.req("enc2")?)?,
+            heads: lin(j.req("heads")?)?,
+            input_dim: j.usize("input_dim")?,
+            hidden_dim: j.usize("hidden_dim")?,
+            max_depth: j.usize("max_depth")?,
+            train_loss: j.f64("train_loss").unwrap_or(f64::NAN) as f32,
+            train_samples: j.usize("train_samples").unwrap_or(0),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        self.to_json().save(path)
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic separable task: direction of the hidden vector determines
+    /// the accepted depth.
+    fn synthetic(n: usize, dim: usize, dmax: usize, seed: u64) -> Vec<DepthSample> {
+        let mut rng = XorShiftRng::new(seed);
+        (0..n)
+            .map(|_| {
+                let cls = rng.next_range(dmax + 1); // accepted depth 0..=dmax
+                let mut hidden = vec![0.0f32; dim];
+                for h in hidden.iter_mut() {
+                    *h = rng.next_f32() * 0.2 - 0.1;
+                }
+                // Embed the class as a strong signal on two coordinates.
+                hidden[0] = cls as f32 / dmax as f32;
+                hidden[1] = 1.0 - hidden[0];
+                DepthSample { hidden, accepted: cls }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn untrained_outputs_are_probabilities() {
+        let p = DepthPredictor::new(16, 8, 6, 0);
+        let probs = p.head_probs(&vec![0.1; 16]);
+        assert_eq!(probs.len(), 6);
+        assert!(probs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns_signal() {
+        let data = synthetic(400, 16, 4, 3);
+        let mut p = DepthPredictor::new(16, 16, 4, 1);
+        let l0 = p.train(&data, 1, 1e-3, 9);
+        let l1 = p.train(&data, 8, 1e-3, 10);
+        assert!(l1 < l0, "loss should fall: {l0} -> {l1}");
+
+        // Expected length must track the planted class.
+        let lo = DepthSample { hidden: { let mut h = vec![0.0; 16]; h[0] = 0.0; h[1] = 1.0; h }, accepted: 0 };
+        let hi = DepthSample { hidden: { let mut h = vec![0.0; 16]; h[0] = 1.0; h[1] = 0.0; h }, accepted: 4 };
+        assert!(
+            p.expected_accept_len(&hi.hidden) > p.expected_accept_len(&lo.hidden) + 1.0,
+            "hi {} vs lo {}",
+            p.expected_accept_len(&hi.hidden),
+            p.expected_accept_len(&lo.hidden)
+        );
+    }
+
+    #[test]
+    fn predict_depth_clamps_to_valid_range() {
+        let p = DepthPredictor::new(8, 8, 5, 2);
+        let d = p.predict_depth(&vec![0.0; 8], 0.5);
+        assert!((1..=5).contains(&d));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let data = synthetic(100, 8, 3, 1);
+        let mut a = DepthPredictor::new(8, 8, 3, 7);
+        let mut b = DepthPredictor::new(8, 8, 3, 7);
+        let la = a.train(&data, 2, 1e-3, 5);
+        let lb = b.train(&data, 2, 1e-3, 5);
+        assert_eq!(la, lb);
+        assert_eq!(a.head_probs(&data[0].hidden), b.head_probs(&data[0].hidden));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("ygg_pred_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pred.json");
+        let p = DepthPredictor::new(8, 4, 3, 9);
+        p.save(&path).unwrap();
+        let q = DepthPredictor::load(&path).unwrap();
+        let x = vec![0.3; 8];
+        assert_eq!(p.head_probs(&x), q.head_probs(&x));
+    }
+}

@@ -1,0 +1,296 @@
+//! Verification-width pruning — the "maximum-value subtree" problem of §4.2.
+//!
+//! After equal-growth drafting, the tree may hold more nodes than it is
+//! worth verifying: verification latency rises with token count (Fig. 5-(a)),
+//! so Eq. 3 is maximised by a *subtree* of the draft. Each node's value is
+//! its path probability (its marginal expected-AAL contribution), and the
+//! chosen set must contain the root and be closed under parents.
+//!
+//! [`SubtreeDp`] solves this bottom-up in one pass for **every** budget
+//! `1..=k` simultaneously (classic tree-knapsack, O(n·k²) worst case but
+//! O(n·k) in practice for the shallow-wide trees EGT grows), so the width
+//! selector can sweep Eq. 3 over all candidate `W_verify` graph widths and
+//! pick the argmax with zero extra DP work.
+
+use crate::tree::{NodeId, TokenTree};
+
+/// Dynamic program over a [`TokenTree`] for max-value subtrees.
+#[derive(Debug)]
+pub struct SubtreeDp {
+    /// `dp[v][j]` = best value of a subtree of v's subtree that contains v
+    /// and exactly `j` nodes (index 0 unused).
+    dp: Vec<Vec<f64>>,
+    /// For reconstruction: `split[v]` records, per child processed in
+    /// order, the budget table before merging that child.
+    split: Vec<Vec<Vec<f64>>>,
+    kmax: usize,
+}
+
+impl SubtreeDp {
+    /// Runs the DP with per-node `values` (usually `tree.path_prob`) and
+    /// budget cap `kmax`.
+    pub fn solve(tree: &TokenTree, values: &[f64], kmax: usize) -> Self {
+        let n = tree.len();
+        assert_eq!(values.len(), n);
+        let kmax = kmax.min(n).max(1);
+        let mut dp = vec![Vec::new(); n];
+        let mut split = vec![Vec::new(); n];
+
+        // Children appear after parents in storage order, so a reverse scan
+        // processes every child before its parent.
+        for v in (0..n).rev() {
+            // Start: subtree = {v}.
+            let mut cur = vec![f64::MIN; kmax + 1];
+            cur[1] = values[v];
+            let mut pre = Vec::new();
+            for &c in tree.children(v) {
+                pre.push(cur.clone());
+                let child = &dp[c];
+                // Merge: cur'[j] = max(cur[j], max_m cur[j-m] + child[m]).
+                let mut merged = cur.clone();
+                for j in (2..=kmax).rev() {
+                    for m in 1..j {
+                        if cur[j - m] == f64::MIN || child.get(m).copied().unwrap_or(f64::MIN) == f64::MIN {
+                            continue;
+                        }
+                        let cand = cur[j - m] + child[m];
+                        if cand > merged[j] {
+                            merged[j] = cand;
+                        }
+                    }
+                }
+                cur = merged;
+            }
+            dp[v] = cur;
+            split[v] = pre;
+        }
+        Self { dp, split, kmax }
+    }
+
+    pub fn kmax(&self) -> usize {
+        self.kmax
+    }
+
+    /// Best total value of a root-containing subtree with **exactly**
+    /// `j` nodes (`f64::MIN` if infeasible).
+    pub fn value_exact(&self, j: usize) -> f64 {
+        if j == 0 || j > self.kmax {
+            return f64::MIN;
+        }
+        self.dp[0][j]
+    }
+
+    /// Best value with **at most** `budget` nodes.
+    pub fn value_at_most(&self, budget: usize) -> f64 {
+        (1..=budget.min(self.kmax))
+            .map(|j| self.value_exact(j))
+            .fold(f64::MIN, f64::max)
+    }
+
+    /// Node count attaining [`Self::value_at_most`].
+    pub fn best_size(&self, budget: usize) -> usize {
+        let mut best = (f64::MIN, 1);
+        for j in 1..=budget.min(self.kmax) {
+            let v = self.value_exact(j);
+            // Prefer smaller trees on (near-)ties: verification cost is
+            // monotone in size while value gain here is zero.
+            if v > best.0 + 1e-12 {
+                best = (v, j);
+            }
+        }
+        best.1
+    }
+
+    /// Reconstructs one optimal subtree with exactly `j` nodes. Returns
+    /// node ids (always includes the root, closed under parents).
+    pub fn select_exact(&self, tree: &TokenTree, j: usize) -> Vec<NodeId> {
+        assert!(j >= 1 && j <= self.kmax && self.value_exact(j) > f64::MIN);
+        let mut keep = Vec::new();
+        self.recover(tree, 0, j, &mut keep);
+        keep.sort_unstable();
+        keep
+    }
+
+    /// Reconstructs the best subtree within `budget` nodes.
+    pub fn select_at_most(&self, tree: &TokenTree, budget: usize) -> Vec<NodeId> {
+        self.select_exact(tree, self.best_size(budget))
+    }
+
+    fn recover(&self, tree: &TokenTree, v: NodeId, j: usize, keep: &mut Vec<NodeId>) {
+        keep.push(v);
+        let mut j = j;
+        // Undo the child merges in reverse order.
+        let kids = tree.children(v);
+        let mut assigned = vec![0usize; kids.len()];
+        let mut cur_val = self.dp[v][j];
+        for ci in (0..kids.len()).rev() {
+            let pre = &self.split[v][ci];
+            let child = &self.dp[kids[ci]];
+            // Find m such that pre[j-m] + child[m] == cur_val (m=0 means
+            // the child was skipped and cur_val == pre[j]).
+            if (pre[j] - cur_val).abs() < 1e-7 && pre[j] != f64::MIN {
+                cur_val = pre[j];
+                continue;
+            }
+            let mut found = false;
+            for m in 1..j {
+                let a = pre[j - m];
+                let b = child.get(m).copied().unwrap_or(f64::MIN);
+                if a == f64::MIN || b == f64::MIN {
+                    continue;
+                }
+                if (a + b - cur_val).abs() < 1e-7 {
+                    assigned[ci] = m;
+                    j -= m;
+                    cur_val = a;
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                // Numerical fallback: child skipped.
+                cur_val = pre[j];
+            }
+        }
+        debug_assert_eq!(j, 1, "after removing children only v remains");
+        for (ci, &m) in assigned.iter().enumerate() {
+            if m > 0 {
+                self.recover(tree, kids[ci], m, keep);
+            }
+        }
+    }
+}
+
+/// Convenience wrapper: prune `tree` to the subtree maximising the Eq. 3
+/// speedup over the candidate verification widths. Returns the kept node
+/// ids (sorted) and the chosen padded graph width.
+pub fn prune_for_objective(
+    tree: &TokenTree,
+    lat: &crate::objective::LatencyModel,
+    draft_widths: &[usize],
+    max_verify: usize,
+) -> (Vec<NodeId>, usize) {
+    let values: Vec<f64> = (0..tree.len()).map(|i| tree.path_prob(i) as f64).collect();
+    let dp = SubtreeDp::solve(tree, &values, max_verify.min(tree.len()));
+    let mut best: Option<(f64, usize, usize)> = None; // (speedup, j, width)
+    for &w in crate::config::GRAPH_WIDTHS.iter().filter(|&&w| w <= max_verify) {
+        let j = w.min(dp.kmax());
+        let val = dp.value_at_most(j);
+        if val == f64::MIN {
+            continue;
+        }
+        // Expected AAL of the pruned subtree = Σ path-probs (root counts 1
+        // for its bonus token).
+        let speedup = lat.speedup_tree(val, draft_widths, w);
+        if best.map_or(true, |(s, _, _)| speedup > s) {
+            best = Some((speedup, j, w));
+        }
+    }
+    let (_, j, w) = best.expect("at least width 1 is feasible");
+    (dp.select_at_most(tree, j), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{LatencyCurve, LatencyModel};
+
+    fn star_tree() -> TokenTree {
+        // root with 4 children of descending value.
+        let mut t = TokenTree::new(0);
+        for (tok, p) in [(1, 0.5), (2, 0.3), (3, 0.15), (4, 0.05)] {
+            t.add_node(0, tok, p);
+        }
+        t
+    }
+
+    fn values(t: &TokenTree) -> Vec<f64> {
+        (0..t.len()).map(|i| t.path_prob(i) as f64).collect()
+    }
+
+    #[test]
+    fn exact_budgets_pick_best_children_first() {
+        let t = star_tree();
+        let dp = SubtreeDp::solve(&t, &values(&t), 5);
+        assert!((dp.value_exact(1) - 1.0).abs() < 1e-6); // root only
+        assert!((dp.value_exact(2) - 1.5).abs() < 1e-6); // + 0.5 child
+        assert!((dp.value_exact(3) - 1.8).abs() < 1e-6);
+        assert!((dp.value_exact(5) - 2.0).abs() < 1e-6);
+        let keep = dp.select_exact(&t, 3);
+        assert_eq!(keep, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn deep_chain_vs_wide_star() {
+        // A strong chain must beat weak star children under a tight budget.
+        let mut t = TokenTree::new(0);
+        let a = t.add_node(0, 1, 0.9);
+        let b = t.add_node(a, 2, 0.9); // path 0.81
+        let _ = t.add_node(0, 3, 0.2);
+        let _ = t.add_node(0, 4, 0.1);
+        let dp = SubtreeDp::solve(&t, &values(&t), 3);
+        let keep = dp.select_exact(&t, 3);
+        assert_eq!(keep, vec![0, a, b]);
+        assert!((dp.value_exact(3) - (1.0 + 0.9 + 0.81)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn selection_is_closed_under_parents() {
+        let mut t = TokenTree::new(0);
+        let a = t.add_node(0, 1, 0.3);
+        let b = t.add_node(a, 2, 0.9); // path 0.27: grandchild forces a in
+        let _ = t.add_node(0, 3, 0.2); // weaker sibling loses to the chain
+        let dp = SubtreeDp::solve(&t, &values(&t), 4);
+        for j in 1..=4 {
+            let keep = dp.select_exact(&t, j);
+            for &v in &keep {
+                if let Some(p) = t.parent(v) {
+                    assert!(keep.contains(&p), "budget {j}: node {v} without parent");
+                }
+            }
+        }
+        let keep3 = dp.select_exact(&t, 3);
+        assert!(keep3.contains(&b) && keep3.contains(&a));
+    }
+
+    #[test]
+    fn value_at_most_is_monotone() {
+        let t = star_tree();
+        let dp = SubtreeDp::solve(&t, &values(&t), 5);
+        let mut prev = f64::MIN;
+        for b in 1..=5 {
+            let v = dp.value_at_most(b);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn prune_for_objective_prefers_small_widths_when_values_decay() {
+        let lat = LatencyModel {
+            drafter: LatencyCurve::new(&[(1, 1e-3), (64, 2e-3)]),
+            verifier: LatencyCurve::new(&[(1, 8e-3), (16, 9e-3), (64, 30e-3)]),
+            cpu_overhead: 0.0,
+        };
+        // 40-node tree where almost all value is in the top 4 nodes.
+        let mut t = TokenTree::new(0);
+        let mut cur = 0;
+        for _ in 0..3 {
+            cur = t.add_node(cur, 1, 0.9);
+        }
+        for _ in 0..36 {
+            t.add_node(0, 2, 0.01);
+        }
+        let (keep, w) = prune_for_objective(&t, &lat, &[4; 3], 64);
+        assert!(w <= 16, "chose width {w}");
+        assert!(keep.len() <= w);
+        assert!(keep.contains(&1) && keep.contains(&2) && keep.contains(&3));
+    }
+
+    #[test]
+    fn single_node_tree_budget_one() {
+        let t = TokenTree::new(7);
+        let dp = SubtreeDp::solve(&t, &[1.0], 1);
+        assert_eq!(dp.select_at_most(&t, 1), vec![0]);
+    }
+}

@@ -1,0 +1,260 @@
+//! The device thread: sole owner of the PJRT client, compiled executables,
+//! resident weight buffers and KV-cache buffers.
+//!
+//! Requests arrive over an mpsc channel and execute FIFO. Each forward:
+//!
+//! 1. stages the small host inputs (tokens/positions/slots/mask) to device
+//!    buffers,
+//! 2. runs `execute_b_untuple` with `[inputs…, cache, weights…]`,
+//! 3. downloads logits + hidden to host, and swaps the cache entry to the
+//!    freshly-returned buffer (zero-copy threading).
+//!
+//! Graphs compile lazily per (model, width) from the HLO text in the
+//! artifacts directory — `HloModuleProto::from_text_file` → `compile` —
+//! and stay cached for the process lifetime (the "static runtime" the
+//! paper pairs with the Equal-Growth Tree).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{CacheId, ForwardReply, ForwardRequest, Manifest, Msg};
+
+struct LoadedModel {
+    name: String,
+    spec: super::ModelSpec,
+    /// Resident weight buffers in manifest tensor order.
+    weights: Vec<PjRtBuffer>,
+    /// Host copies (only used by `ExecMode::WeightsByValue` restaging).
+    weights_host: Vec<(super::TensorSpec, Vec<f32>)>,
+    execs: HashMap<usize, PjRtLoadedExecutable>,
+}
+
+struct Actor {
+    client: PjRtClient,
+    manifest: Manifest,
+    models: Vec<LoadedModel>,
+    caches: HashMap<CacheId, PjRtBuffer>,
+    next_cache: CacheId,
+}
+
+pub(crate) fn run(
+    manifest: Manifest,
+    model_names: Vec<String>,
+    rx: Receiver<Msg>,
+    ready: Sender<crate::Result<()>>,
+) {
+    let mut actor = match Actor::new(manifest, &model_names) {
+        Ok(a) => {
+            let _ = ready.send(Ok(()));
+            a
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Forward { req, tx } => {
+                let _ = tx.send(actor.forward(req));
+            }
+            Msg::NewCache { model, tx } => {
+                let _ = tx.send(actor.new_cache(&model));
+            }
+            Msg::DropCache { id } => {
+                actor.caches.remove(&id);
+            }
+            Msg::Precompile { model, widths, tx } => {
+                let _ = tx.send(actor.precompile(&model, &widths));
+            }
+            Msg::ColdCompile { model, width, tx } => {
+                let _ = tx.send(actor.cold_compile(&model, width));
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
+impl Actor {
+    fn new(manifest: Manifest, model_names: &[String]) -> crate::Result<Self> {
+        let client = PjRtClient::cpu().map_err(to_anyhow)?;
+        let mut models = Vec::new();
+        for name in model_names {
+            let spec = manifest.model(name)?.clone();
+            let weights_host = manifest.load_weights(name)?;
+            let mut weights = Vec::with_capacity(weights_host.len());
+            for (t, data) in &weights_host {
+                weights.push(
+                    client
+                        .buffer_from_host_buffer(data, &t.shape, None)
+                        .map_err(to_anyhow)?,
+                );
+            }
+            models.push(LoadedModel {
+                name: name.clone(),
+                spec,
+                weights,
+                weights_host,
+                execs: HashMap::new(),
+            });
+        }
+        Ok(Self { client, manifest, models, caches: HashMap::new(), next_cache: 1 })
+    }
+
+    fn model_idx(&self, name: &str) -> crate::Result<usize> {
+        self.models
+            .iter()
+            .position(|m| m.name == name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not loaded in this runtime"))
+    }
+
+    fn compile_width(&mut self, mi: usize, width: usize) -> crate::Result<f64> {
+        if self.models[mi].execs.contains_key(&width) {
+            return Ok(0.0);
+        }
+        let t0 = Instant::now();
+        let exe = self.compile_fresh(mi, width)?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.models[mi].execs.insert(width, exe);
+        Ok(dt)
+    }
+
+    fn compile_fresh(&self, mi: usize, width: usize) -> crate::Result<PjRtLoadedExecutable> {
+        let m = &self.models[mi];
+        let file = m
+            .spec
+            .graph_file(width)
+            .ok_or_else(|| anyhow::anyhow!("{}: no graph for width {width}", m.name))?;
+        let path = self.manifest.dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(to_anyhow)?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(to_anyhow)
+    }
+
+    fn new_cache(&mut self, model: &str) -> crate::Result<CacheId> {
+        let mi = self.model_idx(model)?;
+        let spec = &self.models[mi].spec;
+        let zeros = vec![0f32; spec.cache_numel()];
+        let buf = self
+            .client
+            .buffer_from_host_buffer(&zeros, &spec.cache_dims(), None)
+            .map_err(to_anyhow)?;
+        let id = self.next_cache;
+        self.next_cache += 1;
+        self.caches.insert(id, buf);
+        Ok(id)
+    }
+
+    fn precompile(&mut self, model: &str, widths: &[usize]) -> crate::Result<Vec<(usize, f64)>> {
+        let mi = self.model_idx(model)?;
+        widths
+            .iter()
+            .map(|&w| Ok((w, self.compile_width(mi, w)?)))
+            .collect()
+    }
+
+    fn cold_compile(&mut self, model: &str, width: usize) -> crate::Result<f64> {
+        let mi = self.model_idx(model)?;
+        let t0 = Instant::now();
+        let _exe = self.compile_fresh(mi, width)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn forward(&mut self, req: ForwardRequest) -> crate::Result<ForwardReply> {
+        let mi = self.model_idx(&req.model)?;
+        self.compile_width(mi, req.width)?;
+        let m = &self.models[mi];
+        let spec = &m.spec;
+        let w = req.width;
+        let c = spec.cache_capacity;
+        anyhow::ensure!(req.tokens.len() == w, "tokens len {} != width {w}", req.tokens.len());
+        anyhow::ensure!(req.positions.len() == w && req.slots.len() == w, "positions/slots len");
+        anyhow::ensure!(req.mask.len() == w * c, "mask len {} != {}", req.mask.len(), w * c);
+        let cache_buf = self
+            .caches
+            .get(&req.cache)
+            .ok_or_else(|| anyhow::anyhow!("unknown cache id {}", req.cache))?;
+
+        // Stage the small per-call inputs.
+        let t_stage = Instant::now();
+        let tokens = self
+            .client
+            .buffer_from_host_buffer(&req.tokens, &[w], None)
+            .map_err(to_anyhow)?;
+        let positions = self
+            .client
+            .buffer_from_host_buffer(&req.positions, &[w], None)
+            .map_err(to_anyhow)?;
+        let slots = self
+            .client
+            .buffer_from_host_buffer(&req.slots, &[w], None)
+            .map_err(to_anyhow)?;
+        let mask = self
+            .client
+            .buffer_from_host_buffer(&req.mask, &[w, c], None)
+            .map_err(to_anyhow)?;
+
+        // Weights: resident buffers, or restaged per call in the eager-
+        // runtime comparison mode.
+        let restaged: Vec<PjRtBuffer>;
+        let weight_refs: Vec<&PjRtBuffer> = match req.mode {
+            super::ExecMode::Resident => m.weights.iter().collect(),
+            super::ExecMode::WeightsByValue => {
+                restaged = m
+                    .weights_host
+                    .iter()
+                    .map(|(t, data)| {
+                        self.client
+                            .buffer_from_host_buffer(data, &t.shape, None)
+                            .map_err(to_anyhow)
+                    })
+                    .collect::<crate::Result<_>>()?;
+                restaged.iter().collect()
+            }
+        };
+        let stage_seconds = t_stage.elapsed().as_secs_f64();
+
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(5 + weight_refs.len());
+        args.push(&tokens);
+        args.push(&positions);
+        args.push(&slots);
+        args.push(&mask);
+        args.push(cache_buf);
+        args.extend(weight_refs);
+
+        let exe = &m.execs[&w];
+        let t_exec = Instant::now();
+        let mut outs = exe.execute_b_untuple(&args).map_err(to_anyhow)?;
+        let exec_seconds = t_exec.elapsed().as_secs_f64();
+
+        let mut replica = outs.swap_remove(0);
+        anyhow::ensure!(replica.len() == 3, "expected 3 outputs, got {}", replica.len());
+        let new_cache = replica.pop().unwrap();
+        let hidden_buf = replica.pop().unwrap();
+        let logits_buf = replica.pop().unwrap();
+
+        let logits = to_host_f32(&logits_buf)?;
+        let hidden = to_host_f32(&hidden_buf)?;
+        anyhow::ensure!(logits.len() == w * spec.vocab, "logits size");
+
+        // Thread the cache: the output buffer replaces the input in place.
+        self.caches.insert(req.cache, new_cache);
+
+        Ok(ForwardReply { logits, hidden, stage_seconds, exec_seconds })
+    }
+}
+
+fn to_host_f32(buf: &PjRtBuffer) -> crate::Result<Vec<f32>> {
+    let lit: Literal = buf.to_literal_sync().map_err(to_anyhow)?;
+    lit.to_vec::<f32>().map_err(to_anyhow)
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}

@@ -1,0 +1,262 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest pins model shapes, the weight-blob tensor
+//! layout, the per-width HLO graph files, dataset prompt files and golden
+//! vectors. Loading validates the pieces against each other so a stale or
+//! partially-rebuilt artifacts directory fails fast instead of producing
+//! garbage numerics.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements into the weight blob.
+    pub offset: usize,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub cache_capacity: usize,
+    pub rope_theta: f64,
+    pub logit_scale: f64,
+    pub param_count: usize,
+    pub weights_file: String,
+    /// width (as string in JSON) -> HLO text file name.
+    pub graphs: HashMap<String, String>,
+    pub widths: Vec<usize>,
+    pub role: String,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ModelSpec {
+    /// Flattened element count of the KV cache `[L, 2, C, H, Dh]`.
+    pub fn cache_numel(&self) -> usize {
+        self.layers * 2 * self.cache_capacity * self.heads * self.head_dim
+    }
+
+    pub fn cache_dims(&self) -> [usize; 5] {
+        [self.layers, 2, self.cache_capacity, self.heads, self.head_dim]
+    }
+
+    pub fn graph_file(&self, width: usize) -> Option<&str> {
+        self.graphs.get(&width.to_string()).map(|s| s.as_str())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenSpec {
+    pub file: String,
+    pub width: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format_version: u32,
+    pub models: HashMap<String, ModelSpec>,
+    pub datasets: HashMap<String, String>,
+    pub golden: HashMap<String, GoldenSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> crate::Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        if !path.exists() {
+            anyhow::bail!("cannot read {} — run `make artifacts` first", path.display());
+        }
+        let j = Json::parse_file(&path)?;
+        let mut m = Self::from_json(&j)?;
+        m.dir = artifacts_dir.to_path_buf();
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let mut models = HashMap::new();
+        for (name, mj) in j.req("models")?.as_obj().ok_or_else(|| anyhow::anyhow!("models"))? {
+            let mut graphs = HashMap::new();
+            for (w, f) in mj.req("graphs")?.as_obj().ok_or_else(|| anyhow::anyhow!("graphs"))? {
+                graphs.insert(
+                    w.clone(),
+                    f.as_str().ok_or_else(|| anyhow::anyhow!("graph file"))?.to_string(),
+                );
+            }
+            let mut tensors = Vec::new();
+            for t in mj.arr("tensors").unwrap_or(&[]) {
+                tensors.push(TensorSpec {
+                    name: t.str("name")?.to_string(),
+                    shape: t.usize_vec("shape")?,
+                    offset: t.usize("offset")?,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    layers: mj.usize("layers")?,
+                    d_model: mj.usize("d_model")?,
+                    heads: mj.usize("heads")?,
+                    head_dim: mj.usize("head_dim")?,
+                    ffn: mj.usize("ffn")?,
+                    vocab: mj.usize("vocab")?,
+                    cache_capacity: mj.usize("cache_capacity")?,
+                    rope_theta: mj.f64("rope_theta")?,
+                    logit_scale: mj.f64("logit_scale")?,
+                    param_count: mj.usize("param_count")?,
+                    weights_file: mj.str("weights_file")?.to_string(),
+                    graphs,
+                    widths: mj.usize_vec("widths")?,
+                    role: mj.str("role")?.to_string(),
+                    tensors,
+                },
+            );
+        }
+        let mut datasets = HashMap::new();
+        for (k, v) in j.req("datasets")?.as_obj().ok_or_else(|| anyhow::anyhow!("datasets"))? {
+            datasets.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+        }
+        let mut golden = HashMap::new();
+        for (k, v) in j.req("golden")?.as_obj().ok_or_else(|| anyhow::anyhow!("golden"))? {
+            golden.insert(
+                k.clone(),
+                GoldenSpec { file: v.str("file")?.to_string(), width: v.usize("width")? },
+            );
+        }
+        Ok(Manifest {
+            format_version: j.usize("format_version")? as u32,
+            models,
+            datasets,
+            golden,
+            dir: PathBuf::new(),
+        })
+    }
+
+    fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.format_version == 1, "unsupported manifest version");
+        for (name, spec) in &self.models {
+            // Tensor layout must tile the blob exactly.
+            let mut expect = 0usize;
+            for t in &spec.tensors {
+                anyhow::ensure!(
+                    t.offset == expect,
+                    "{name}: tensor {} offset {} != expected {expect}",
+                    t.name,
+                    t.offset
+                );
+                expect += t.numel();
+            }
+            anyhow::ensure!(
+                expect == spec.param_count,
+                "{name}: tensors sum to {expect}, manifest says {}",
+                spec.param_count
+            );
+            let blob = self.dir.join(&spec.weights_file);
+            if let Ok(md) = std::fs::metadata(&blob) {
+                anyhow::ensure!(
+                    md.len() as usize == 4 * spec.param_count,
+                    "{name}: weight blob {} has {} bytes, expected {}",
+                    blob.display(),
+                    md.len(),
+                    4 * spec.param_count
+                );
+            }
+            for w in &spec.widths {
+                anyhow::ensure!(
+                    spec.graph_file(*w).is_some(),
+                    "{name}: missing graph entry for width {w}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest ({:?})", self.models.keys()))
+    }
+
+    /// Reads a model's weight blob as f32 tensors in manifest order.
+    pub fn load_weights(&self, name: &str) -> crate::Result<Vec<(TensorSpec, Vec<f32>)>> {
+        let spec = self.model(name)?;
+        let path = self.dir.join(&spec.weights_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(bytes.len() == 4 * spec.param_count, "weight blob size mismatch");
+        let mut out = Vec::with_capacity(spec.tensors.len());
+        for t in &spec.tensors {
+            let start = 4 * t.offset;
+            let end = start + 4 * t.numel();
+            let mut v = vec![0f32; t.numel()];
+            for (i, chunk) in bytes[start..end].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            out.push((t.clone(), v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Manifest> {
+        let dir = Path::new("artifacts");
+        (dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists())
+            .then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        let Some(m) = artifacts() else { return };
+        assert!(m.models.contains_key("tgt-sm"));
+        assert!(m.models.contains_key("dft-xs"));
+        let spec = m.model("tgt-sm").unwrap();
+        assert_eq!(spec.role, "target");
+        assert_eq!(spec.widths, vec![1, 2, 4, 8, 16, 32, 64]);
+        assert!(spec.graph_file(4).is_some());
+        assert!(spec.graph_file(3).is_none());
+    }
+
+    #[test]
+    fn weights_load_with_exact_layout() {
+        let Some(m) = artifacts() else { return };
+        let w = m.load_weights("dft-xs").unwrap();
+        let spec = m.model("dft-xs").unwrap();
+        assert_eq!(w.len(), spec.tensors.len());
+        assert_eq!(w[0].0.name, "embed");
+        let total: usize = w.iter().map(|(t, _)| t.numel()).sum();
+        assert_eq!(total, spec.param_count);
+        // Embeddings of a trained model are not all zero.
+        assert!(w[0].1.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(m) = artifacts() else { return };
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn cache_dims_consistent() {
+        let Some(m) = artifacts() else { return };
+        let s = m.model("tgt-sm").unwrap();
+        assert_eq!(s.cache_numel(), s.cache_dims().iter().product::<usize>());
+    }
+}

@@ -1,0 +1,256 @@
+//! PJRT runtime: loads the AOT artifacts and executes them on the CPU
+//! PJRT client from a dedicated *device thread*.
+//!
+//! The `xla` crate's PJRT wrappers hold raw pointers and are not `Send`,
+//! which matches how a real accelerator is driven: one submission thread
+//! owns the device. [`Runtime::load`] spawns that thread ([`actor`]); the
+//! cloneable [`Runtime`] handle submits work through a channel and receives
+//! completions through per-request channels. Submission is non-blocking —
+//! this is what the stage scheduler (§5) exploits to overlap CPU
+//! bookkeeping with model execution, and queued requests execute FIFO,
+//! preserving single-accelerator semantics.
+//!
+//! Buffer residency: model weights are uploaded once at load; KV caches
+//! live on the device as [`CacheId`]-addressed buffers and are threaded
+//! from one call into the next via the vendored `execute_b_untuple` (no
+//! host round-trip — see `vendor/xla`). Only the small per-call inputs
+//! (tokens/positions/slots/mask) and the logits/hidden outputs cross the
+//! host boundary.
+
+pub mod actor;
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelSpec, TensorSpec};
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Handle to a device-resident KV cache.
+pub type CacheId = u64;
+
+/// How a forward call treats weights/executables — the Fig. 4 runtime
+/// comparison axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Static compiled graph + resident weight buffers (the Yggdrasil way;
+    /// CUDA-Graph/TorchInductor analog).
+    Resident,
+    /// Static compiled graph, but weights are re-staged from host every
+    /// call (eager-runtime analog: no buffer residency).
+    WeightsByValue,
+}
+
+/// One forward call against a model graph of compiled width `width`.
+#[derive(Debug, Clone)]
+pub struct ForwardRequest {
+    pub model: String,
+    pub width: usize,
+    pub cache: CacheId,
+    pub tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub slots: Vec<i32>,
+    /// Row-major `[width, cache_capacity]` validity mask.
+    pub mask: Vec<f32>,
+    pub mode: ExecMode,
+}
+
+/// Completed forward call.
+#[derive(Debug, Clone)]
+pub struct ForwardReply {
+    /// Row-major `[width, vocab]`.
+    pub logits: Vec<f32>,
+    /// Row-major `[width, d_model]` (final-norm hidden states; feeds the
+    /// depth predictor).
+    pub hidden: Vec<f32>,
+    /// Seconds spent staging host inputs to device buffers.
+    pub stage_seconds: f64,
+    /// Seconds inside `execute` (the "GPU time" analog).
+    pub exec_seconds: f64,
+}
+
+pub(crate) enum Msg {
+    Forward {
+        req: ForwardRequest,
+        tx: mpsc::Sender<crate::Result<ForwardReply>>,
+    },
+    NewCache {
+        model: String,
+        tx: mpsc::Sender<crate::Result<CacheId>>,
+    },
+    DropCache {
+        id: CacheId,
+    },
+    Precompile {
+        model: String,
+        widths: Vec<usize>,
+        tx: mpsc::Sender<crate::Result<Vec<(usize, f64)>>>,
+    },
+    /// Compiles the width graph from scratch and throws the executable
+    /// away — the "dynamic shapes force recompilation" cost of Fig. 4.
+    ColdCompile {
+        model: String,
+        width: usize,
+        tx: mpsc::Sender<crate::Result<f64>>,
+    },
+    Shutdown,
+}
+
+/// In-flight call; `wait()` blocks for the reply.
+pub struct Pending<T> {
+    rx: mpsc::Receiver<crate::Result<T>>,
+}
+
+impl<T> Pending<T> {
+    pub fn wait(self) -> crate::Result<T> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("device thread terminated"))?
+    }
+
+    /// Non-blocking poll; returns `None` while still executing.
+    pub fn try_wait(&self) -> Option<crate::Result<T>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow::anyhow!("device thread terminated")))
+            }
+        }
+    }
+}
+
+struct Shared {
+    tx: mpsc::Sender<Msg>,
+    manifest: Manifest,
+    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Cloneable handle to the device thread.
+#[derive(Clone)]
+pub struct Runtime {
+    shared: Arc<Shared>,
+}
+
+impl Runtime {
+    /// Loads `models` from `artifacts_dir`, uploads their weights, and
+    /// spawns the device thread. Graphs compile lazily per width on first
+    /// use (or eagerly via [`Runtime::precompile`]).
+    pub fn load(artifacts_dir: &std::path::Path, models: &[&str]) -> crate::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        for m in models {
+            manifest.model(m)?; // fail fast on unknown names
+        }
+        let (tx, rx) = mpsc::channel();
+        let names: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+        let mf = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let join = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || actor::run(mf, names, rx, ready_tx))?;
+        // Surface startup errors (client creation, weight upload) here.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("device thread died during startup"))??;
+        Ok(Self {
+            shared: Arc::new(Shared { tx, manifest, join: std::sync::Mutex::new(Some(join)) }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.shared.manifest
+    }
+
+    pub fn spec(&self, model: &str) -> crate::Result<&ModelSpec> {
+        self.shared.manifest.model(model)
+    }
+
+    /// Allocates a zeroed device cache for `model`.
+    pub fn new_cache(&self, model: &str) -> crate::Result<CacheId> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Msg::NewCache { model: model.into(), tx })?;
+        Pending { rx }.wait()
+    }
+
+    pub fn drop_cache(&self, id: CacheId) {
+        let _ = self.send(Msg::DropCache { id });
+    }
+
+    /// Non-blocking submission; execution order is submission order.
+    pub fn submit(&self, req: ForwardRequest) -> crate::Result<Pending<ForwardReply>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Msg::Forward { req, tx })?;
+        Ok(Pending { rx })
+    }
+
+    /// Blocking convenience wrapper.
+    pub fn forward(&self, req: ForwardRequest) -> crate::Result<ForwardReply> {
+        self.submit(req)?.wait()
+    }
+
+    /// Eagerly compiles the given widths; returns (width, compile_seconds).
+    pub fn precompile(&self, model: &str, widths: &[usize]) -> crate::Result<Vec<(usize, f64)>> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Msg::Precompile { model: model.into(), widths: widths.to_vec(), tx })?;
+        Pending { rx }.wait()
+    }
+
+    /// Fresh compilation cost of one width graph (Fig. 4's recompile bar).
+    pub fn cold_compile_seconds(&self, model: &str, width: usize) -> crate::Result<f64> {
+        let (tx, rx) = mpsc::channel();
+        self.send(Msg::ColdCompile { model: model.into(), width, tx })?;
+        Pending { rx }.wait()
+    }
+
+    /// Measures mean wall seconds per forward at `width` over `reps` calls
+    /// (after `warmup` discarded calls) using a scratch cache.
+    pub fn profile_width(
+        &self,
+        model: &str,
+        width: usize,
+        reps: usize,
+        warmup: usize,
+        mode: ExecMode,
+    ) -> crate::Result<f64> {
+        let spec = self.spec(model)?.clone();
+        let cache = self.new_cache(model)?;
+        let mut mask = vec![0f32; width * spec.cache_capacity];
+        for r in 0..width {
+            // attend to self only — representative sparse mask
+            mask[r * spec.cache_capacity + r] = 1.0;
+        }
+        let mk = |cache| ForwardRequest {
+            model: model.into(),
+            width,
+            cache,
+            tokens: vec![1; width],
+            positions: (0..width as i32).collect(),
+            slots: (0..width as i32).collect(),
+            mask: mask.clone(),
+            mode,
+        };
+        for _ in 0..warmup {
+            self.forward(mk(cache))?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            self.forward(mk(cache))?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps.max(1) as f64;
+        self.drop_cache(cache);
+        Ok(dt)
+    }
+
+    fn send(&self, msg: Msg) -> crate::Result<()> {
+        self.shared
+            .tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("device thread terminated"))
+    }
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Sampling primitives and token-acceptance rules.
+//!
+//! Greedy decoding accepts a draft child iff it equals the verifier's
+//! argmax. Temperature sampling uses the SpecInfer-style *multi-branch
+//! residual* rule ([`stochastic_accept`]): candidate children are tried in
+//! order against the verifier distribution, each rejection subtracting the
+//! drafter's mass from a residual; if all fail, the bonus token is sampled
+//! from the residual. Both rules preserve the target distribution exactly
+//! (losslessness is speculative decoding's defining property) — see the
+//! unit tests, which verify the stationary distribution empirically.
+
+pub mod rng;
+
+pub use rng::XorShiftRng;
+
+/// Numerically-stable in-place softmax with optional temperature.
+/// `temperature == 0` is handled by callers via [`argmax`].
+pub fn softmax_inplace(logits: &mut [f32], temperature: f32) {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().copied().fold(f32::MIN, f32::max);
+    let mut sum = 0.0f32;
+    for x in logits.iter_mut() {
+        *x = ((*x - m) / t).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in logits.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-`k` (index, value) pairs, sorted descending by value. O(V·k) with a
+/// small insertion buffer — faster than a full sort for k ≤ 16 at V ≈ 1k.
+pub fn top_k(xs: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let k = k.min(xs.len());
+    let mut out: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for (i, &x) in xs.iter().enumerate() {
+        if out.len() < k || x > out[out.len() - 1].1 {
+            let pos = out.partition_point(|&(_, v)| v >= x);
+            out.insert(pos, (i, x));
+            if out.len() > k {
+                out.pop();
+            }
+        }
+    }
+    out
+}
+
+/// Samples an index from a probability vector.
+pub fn categorical(probs: &[f32], rng: &mut XorShiftRng) -> usize {
+    let r = rng.next_f32();
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc {
+            return i;
+        }
+    }
+    probs.len() - 1 // floating-point tail
+}
+
+/// Outcome of verifying one node's children.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AcceptOutcome {
+    /// Child at this index (into the candidate list) was accepted.
+    Child(usize),
+    /// All children rejected; commit this bonus token instead.
+    Bonus(u32),
+}
+
+/// Greedy acceptance: the child is accepted iff it *is* the verifier's
+/// argmax token. Returns the outcome and the verifier's greedy token.
+pub fn greedy_accept(verifier_logits: &[f32], child_tokens: &[u32]) -> (AcceptOutcome, u32) {
+    let t = argmax(verifier_logits) as u32;
+    match child_tokens.iter().position(|&c| c == t) {
+        Some(i) => (AcceptOutcome::Child(i), t),
+        None => (AcceptOutcome::Bonus(t), t),
+    }
+}
+
+/// SpecInfer-style multi-round stochastic acceptance.
+///
+/// `p_target` — verifier probabilities at the node (temperature applied).
+/// `q_draft`  — drafter probabilities at the node (same temperature).
+/// `child_tokens` — candidate children **drawn i.i.d. from `q_draft`**, in
+/// the order they were drafted.
+///
+/// Round `i`: child `c_i` is accepted with probability
+/// `min(1, p_i(c_i) / q(c_i))`; on rejection the residual target becomes
+/// `p_{i+1} = normalize(max(p_i − q, 0))`. If every child is rejected the
+/// bonus token is drawn from the final residual. With i.i.d. draws from
+/// `q` this is SpecInfer's multi-round speculative sampling and the
+/// committed token's marginal distribution equals `p_target` exactly
+/// (verified empirically in the tests below).
+pub fn stochastic_accept(
+    p_target: &[f32],
+    q_draft: &[f32],
+    child_tokens: &[u32],
+    rng: &mut XorShiftRng,
+) -> AcceptOutcome {
+    let v = p_target.len();
+    let mut p_res: Vec<f32> = p_target.to_vec();
+    for (i, &c) in child_tokens.iter().enumerate() {
+        let c = c as usize;
+        debug_assert!(c < v);
+        let qc = q_draft[c].max(1e-20);
+        let ratio = (p_res[c] / qc).min(1.0);
+        if rng.next_f32() < ratio {
+            return AcceptOutcome::Child(i);
+        }
+        // Reject: subtract the proposal distribution and renormalise.
+        let mut sum = 0.0f32;
+        for j in 0..v {
+            p_res[j] = (p_res[j] - q_draft[j]).max(0.0);
+            sum += p_res[j];
+        }
+        if sum <= 1e-12 {
+            // Degenerate (q ≥ p everywhere): any residual draw is valid —
+            // fall back to the target itself, which preserves the marginal
+            // because this branch has probability 0 under exact arithmetic.
+            p_res.copy_from_slice(p_target);
+            sum = p_res.iter().sum();
+        }
+        let inv = 1.0 / sum;
+        p_res.iter_mut().for_each(|x| *x *= inv);
+    }
+    AcceptOutcome::Bonus(categorical(&p_res, rng) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut x = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut x, 1.0);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let mut a = vec![1.0, 2.0];
+        let mut b = vec![1.0, 2.0];
+        softmax_inplace(&mut a, 1.0);
+        softmax_inplace(&mut b, 0.25);
+        assert!(b[1] > a[1]);
+    }
+
+    #[test]
+    fn top_k_sorted_and_correct() {
+        let xs = vec![0.1, 5.0, 3.0, 4.0, -1.0];
+        let t = top_k(&xs, 3);
+        assert_eq!(t.iter().map(|p| p.0).collect::<Vec<_>>(), vec![1, 3, 2]);
+        assert_eq!(top_k(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn greedy_accept_matches_argmax_only() {
+        let logits = vec![0.0, 9.0, 1.0];
+        let (o, t) = greedy_accept(&logits, &[2, 1]);
+        assert_eq!(t, 1);
+        assert_eq!(o, AcceptOutcome::Child(1));
+        let (o2, _) = greedy_accept(&logits, &[0, 2]);
+        assert_eq!(o2, AcceptOutcome::Bonus(1));
+    }
+
+    #[test]
+    fn categorical_is_unbiased() {
+        let mut rng = XorShiftRng::new(42);
+        let probs = vec![0.2, 0.5, 0.3];
+        let mut counts = [0usize; 3];
+        for _ in 0..20_000 {
+            counts[categorical(&probs, &mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let f = c as f32 / 20_000.0;
+            assert!((f - probs[i]).abs() < 0.02, "idx {i}: {f} vs {}", probs[i]);
+        }
+    }
+
+    /// The defining property: speculative acceptance must leave the
+    /// *marginal* distribution of the committed token equal to p_target,
+    /// no matter what the drafter proposes.
+    #[test]
+    fn stochastic_acceptance_is_lossless() {
+        let mut rng = XorShiftRng::new(7);
+        let p = vec![0.5, 0.3, 0.15, 0.05];
+        let q = vec![0.1, 0.6, 0.25, 0.05];
+        let mut counts = [0usize; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            // Children must be drawn i.i.d. from q (the drafter) for the
+            // lossless guarantee — this mirrors what the engine does at
+            // temperature > 0.
+            let children = [
+                categorical(&q, &mut rng) as u32,
+                categorical(&q, &mut rng) as u32,
+            ];
+            let tok = match stochastic_accept(&p, &q, &children, &mut rng) {
+                AcceptOutcome::Child(i) => children[i],
+                AcceptOutcome::Bonus(b) => b,
+            };
+            counts[tok as usize] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f32 / n as f32;
+            assert!(
+                (f - p[i]).abs() < 0.01,
+                "token {i}: empirical {f:.3} vs target {:.3}",
+                p[i]
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_accepts_perfect_drafter_always() {
+        let mut rng = XorShiftRng::new(3);
+        let p = vec![0.7, 0.3];
+        for _ in 0..1000 {
+            match stochastic_accept(&p, &p, &[0, 1], &mut rng) {
+                AcceptOutcome::Child(_) => {}
+                AcceptOutcome::Bonus(_) => panic!("perfect drafter must always land"),
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rejects_impossible_tokens() {
+        let mut rng = XorShiftRng::new(9);
+        // Target puts zero mass on token 1; drafter proposes it anyway.
+        let p = vec![1.0, 0.0];
+        let q = vec![0.01, 0.99];
+        for _ in 0..500 {
+            match stochastic_accept(&p, &q, &[1], &mut rng) {
+                AcceptOutcome::Child(_) => panic!("accepted zero-probability token"),
+                AcceptOutcome::Bonus(b) => assert_eq!(b, 0),
+            }
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Stage-based scheduling runtime — §5 of the paper.
+//!
+//! One speculative iteration decomposes into stages with a dependency
+//! graph (Fig. 9-(c)):
+//!
+//! ```text
+//!   HeadDraft → TreeDraft(×D) → Prune → Verify → Accept → Bookkeep
+//!                                   ↘ TailDraft ↗    ↘ next HeadDraft
+//! ```
+//!
+//! Two resources execute stages: the **device** (model calls, FIFO) and the
+//! **CPU** (tree building, masks, acceptance walk, cache management). The
+//! naive plan serialises everything; *ahead-of-time* execution breaks two
+//! dependencies speculatively (§5.1):
+//!
+//! * **AOT tail draft** — instead of conditionally drafting the next-root
+//!   continuation after acceptance, the top leaf continuations are drafted
+//!   speculatively, queued right behind verification, overlapping with the
+//!   CPU acceptance walk. A superset of the needed tokens is computed; the
+//!   accepted one is reused, the rest discarded.
+//! * **AOT head draft** — the next iteration's head draft is issued the
+//!   moment the bonus token is known, overlapping drafter execution with
+//!   cache-management bookkeeping.
+//!
+//! [`search_best_plan`] is the profile-guided execution-plan search of
+//! §5.2: with measured per-stage durations it list-schedules each candidate
+//! plan on the two resources and picks the minimum-latency one. The search
+//! space is tiny (the paper's "well-defined dependency graph"), so an
+//! exhaustive sweep is exact.
+
+use crate::config::SchedulePlan;
+
+/// The concrete overlap decisions for one iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan {
+    pub aot_tail: bool,
+    pub aot_head: bool,
+}
+
+impl Plan {
+    pub const SEQUENTIAL: Plan = Plan { aot_tail: false, aot_head: false };
+    pub const ALL: [Plan; 4] = [
+        Plan { aot_tail: false, aot_head: false },
+        Plan { aot_tail: true, aot_head: false },
+        Plan { aot_tail: false, aot_head: true },
+        Plan { aot_tail: true, aot_head: true },
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match (self.aot_tail, self.aot_head) {
+            (false, false) => "sequential",
+            (true, false) => "aot_tail",
+            (false, true) => "aot_head",
+            (true, true) => "aot_tail_head",
+        }
+    }
+}
+
+/// Measured (or estimated) seconds per stage of one iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct StageDurations {
+    /// Drafter call on the confirmed root (width 1).
+    pub head_draft: f64,
+    /// All D equal-growth drafter calls together.
+    pub tree_draft: f64,
+    /// CPU: frontier updates + pruning DP + mask building.
+    pub cpu_build: f64,
+    /// Verifier call on the pruned tree.
+    pub verify: f64,
+    /// Speculative tail-draft drafter call (only issued under AOT-tail).
+    pub tail_draft: f64,
+    /// CPU acceptance walk.
+    pub accept: f64,
+    /// CPU cache management / bookkeeping.
+    pub bookkeep: f64,
+    /// Probability that the AOT tail draft covers the next head token
+    /// (measured online; determines how often the head draft is free).
+    pub tail_hit_rate: f64,
+}
+
+impl StageDurations {
+    /// Rough estimate from a latency model before any measurement exists.
+    pub fn estimate(
+        lat: &crate::objective::LatencyModel,
+        depth: usize,
+        width: usize,
+        w_verify: usize,
+        tail_width: usize,
+    ) -> Self {
+        Self {
+            head_draft: lat.t_draft(1),
+            tree_draft: depth as f64 * lat.t_draft(width),
+            cpu_build: lat.cpu_overhead * 0.5,
+            verify: lat.t_verify(w_verify),
+            tail_draft: lat.t_draft(tail_width),
+            accept: lat.cpu_overhead * 0.25,
+            bookkeep: lat.cpu_overhead * 0.25,
+            tail_hit_rate: 0.5,
+        }
+    }
+}
+
+/// Expected wall-clock seconds of one iteration under `plan`.
+///
+/// Accounting is per-iteration-closed: each iteration is charged its own
+/// head draft at the start; AOT transforms convert serial segments into
+/// `max(device, cpu)` overlaps and discount the head draft by the tail
+/// hit rate:
+///
+/// ```text
+/// sequential : head + tree + build + verify + accept + bookkeep
+/// aot_tail   : (1-hit)·head + tree + build + verify + max(tail, accept) + bookkeep
+/// aot_head   : tree + build + verify + accept + max(head, bookkeep)
+/// both       : (tree + build + verify + max(tail, accept)
+///               + max((1-hit)·head, bookkeep))
+/// ```
+pub fn plan_latency(d: &StageDurations, plan: Plan) -> f64 {
+    let core = d.tree_draft + d.cpu_build + d.verify;
+    match (plan.aot_tail, plan.aot_head) {
+        (false, false) => d.head_draft + core + d.accept + d.bookkeep,
+        (true, false) => {
+            (1.0 - d.tail_hit_rate) * d.head_draft
+                + core
+                + d.tail_draft.max(d.accept)
+                + d.bookkeep
+        }
+        (false, true) => core + d.accept + d.head_draft.max(d.bookkeep),
+        (true, true) => {
+            core + d.tail_draft.max(d.accept)
+                + ((1.0 - d.tail_hit_rate) * d.head_draft).max(d.bookkeep)
+        }
+    }
+}
+
+/// Exhaustive profile-guided plan search (§5.2).
+pub fn search_best_plan(d: &StageDurations) -> (Plan, f64) {
+    // Most-overlapping plans first so exact ties resolve toward overlap
+    // (it additionally hides jitter the point estimates cannot see).
+    let mut order = Plan::ALL;
+    order.reverse();
+    order
+        .iter()
+        .map(|&p| (p, plan_latency(d, p)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap()
+}
+
+/// Resolves a config-level schedule choice into a concrete plan.
+pub fn resolve(schedule: SchedulePlan, durations: &StageDurations) -> Plan {
+    match schedule {
+        SchedulePlan::Sequential => Plan::SEQUENTIAL,
+        SchedulePlan::AotTail => Plan { aot_tail: true, aot_head: false },
+        SchedulePlan::AotTailHead => Plan { aot_tail: true, aot_head: true },
+        SchedulePlan::ProfileSearch => search_best_plan(durations).0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn durations() -> StageDurations {
+        StageDurations {
+            head_draft: 1.0e-3,
+            tree_draft: 4.0e-3,
+            cpu_build: 0.5e-3,
+            verify: 6.0e-3,
+            tail_draft: 1.2e-3,
+            accept: 0.8e-3,
+            bookkeep: 0.7e-3,
+            tail_hit_rate: 0.6,
+        }
+    }
+
+    #[test]
+    fn overlap_never_hurts_in_the_model() {
+        let d = durations();
+        let seq = plan_latency(&d, Plan::SEQUENTIAL);
+        for p in Plan::ALL {
+            assert!(
+                plan_latency(&d, p) <= seq + 1e-12,
+                "{} slower than sequential",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn search_picks_full_overlap_when_cpu_is_expensive() {
+        let mut d = durations();
+        d.accept = 3e-3;
+        d.bookkeep = 3e-3;
+        let (p, t) = search_best_plan(&d);
+        assert!(p.aot_tail && p.aot_head, "picked {}", p.name());
+        assert!(t < plan_latency(&d, Plan::SEQUENTIAL));
+    }
+
+    #[test]
+    fn sequential_wins_only_by_tie() {
+        // With zero CPU cost there is nothing to overlap: all plans equal
+        // except the tail-draft device cost under AOT-tail.
+        let d = StageDurations {
+            head_draft: 1e-3,
+            tree_draft: 4e-3,
+            cpu_build: 0.0,
+            verify: 6e-3,
+            tail_draft: 2e-3,
+            accept: 0.0,
+            bookkeep: 0.0,
+            tail_hit_rate: 0.0,
+        };
+        let (p, _) = search_best_plan(&d);
+        // A miss-only tail draft pays 2ms for nothing; search must not
+        // pick it.
+        assert!(!p.aot_tail, "picked {}", p.name());
+    }
+
+    #[test]
+    fn resolve_honours_explicit_choices() {
+        let d = durations();
+        assert_eq!(resolve(SchedulePlan::Sequential, &d), Plan::SEQUENTIAL);
+        assert!(resolve(SchedulePlan::AotTail, &d).aot_tail);
+        let p = resolve(SchedulePlan::AotTailHead, &d);
+        assert!(p.aot_tail && p.aot_head);
+    }
+
+    #[test]
+    fn estimate_is_positive_and_ordered() {
+        let lat = crate::objective::LatencyModel {
+            drafter: crate::objective::LatencyCurve::new(&[(1, 1e-3), (8, 1.5e-3)]),
+            verifier: crate::objective::LatencyCurve::new(&[(1, 5e-3), (64, 2e-2)]),
+            cpu_overhead: 1e-3,
+        };
+        let d = StageDurations::estimate(&lat, 4, 8, 32, 4);
+        assert!(d.tree_draft > d.head_draft);
+        assert!(d.verify > 0.0);
+    }
+}

@@ -1,0 +1,447 @@
+//! Serving layer: a TCP JSON-lines server around one engine.
+//!
+//! The paper's core results target the *latency-optimal single-request*
+//! regime (§9): one accelerator, one request at a time. The server mirrors
+//! that: accepted connections enqueue requests into an ordered FCFS queue;
+//! a single worker thread owns the engine and drains the queue, streaming
+//! accepted tokens back per verification step. Concurrency lives at the
+//! edges (one reader/writer thread pair per connection), the device stays
+//! single-tenant — exactly the deployment the paper's evaluation models.
+//!
+//! ## Protocol (one JSON object per line)
+//!
+//! request:  `{"id": 7, "prompt": [1,2,3], "max_new": 32}`
+//!           (or `"text": "..."` — byte-tokenized)
+//! events:   `{"id": 7, "event": "tokens", "tokens": [5, 9]}` (stream mode)
+//!           `{"id": 7, "event": "done", "tokens": [...], "aal": 2.31,
+//!             "tpot_ms": 1.9, "iterations": 14}`
+//!           `{"id": 7, "event": "error", "message": "..."}`
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::corpus::ByteTokenizer;
+use crate::engine::Engine;
+use crate::util::json::Json;
+
+/// One queued generation request.
+struct Job {
+    id: f64,
+    prompt: Vec<u32>,
+    max_new: usize,
+    reply: mpsc::Sender<String>,
+    stream: bool,
+}
+
+/// Server statistics (exposed via the `"stats"` request).
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub tokens: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+/// A running server; dropping it stops the accept loop.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    pub stats: Arc<ServerStats>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    worker_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Binds `addr` ("127.0.0.1:0" picks a free port) and serves requests
+    /// with `engine` until dropped.
+    pub fn spawn(
+        addr: &str,
+        engine: Box<dyn Engine + Send>,
+        max_queue: usize,
+        stream: bool,
+    ) -> crate::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(max_queue);
+
+        // Worker: single-tenant engine loop (FCFS).
+        let wstats = stats.clone();
+        let wstop = stop.clone();
+        let worker_thread = std::thread::Builder::new().name("ygg-worker".into()).spawn(
+            move || {
+                let mut engine = engine;
+                while !wstop.load(Ordering::Relaxed) {
+                    let Ok(job) = job_rx.recv_timeout(std::time::Duration::from_millis(50))
+                    else {
+                        continue;
+                    };
+                    wstats.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply = job.reply.clone();
+                    let id = job.id;
+                    let mut sink = |toks: &[u32]| {
+                        if job.stream && !toks.is_empty() {
+                            let msg = Json::obj(vec![
+                                ("id", Json::Num(id)),
+                                ("event", Json::Str("tokens".into())),
+                                (
+                                    "tokens",
+                                    Json::Arr(
+                                        toks.iter().map(|&t| Json::Num(t as f64)).collect(),
+                                    ),
+                                ),
+                            ]);
+                            let _ = reply.send(msg.to_string());
+                        }
+                    };
+                    match engine.generate_with(&job.prompt, job.max_new, &mut sink) {
+                        Ok(g) => {
+                            wstats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
+                            let msg = Json::obj(vec![
+                                ("id", Json::Num(id)),
+                                ("event", Json::Str("done".into())),
+                                (
+                                    "tokens",
+                                    Json::Arr(
+                                        g.tokens.iter().map(|&t| Json::Num(t as f64)).collect(),
+                                    ),
+                                ),
+                                ("aal", Json::Num(g.aal())),
+                                ("tpot_ms", Json::Num(g.tpot() * 1e3)),
+                                ("iterations", Json::Num(g.iterations as f64)),
+                                ("prefill_ms", Json::Num(g.prefill_seconds * 1e3)),
+                            ]);
+                            let _ = job.reply.send(msg.to_string());
+                        }
+                        Err(e) => {
+                            wstats.errors.fetch_add(1, Ordering::Relaxed);
+                            let msg = Json::obj(vec![
+                                ("id", Json::Num(id)),
+                                ("event", Json::Str("error".into())),
+                                ("message", Json::Str(format!("{e:#}"))),
+                            ]);
+                            let _ = job.reply.send(msg.to_string());
+                        }
+                    }
+                }
+            },
+        )?;
+
+        // Accept loop: one handler thread per connection.
+        let astop = stop.clone();
+        let astats = stats.clone();
+        let accept_thread = std::thread::Builder::new().name("ygg-accept".into()).spawn(
+            move || {
+                while !astop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            let tx = job_tx.clone();
+                            let stats = astats.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("ygg-conn".into())
+                                .spawn(move || handle_conn(sock, tx, stats, stream));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            },
+        )?;
+
+        Ok(Self {
+            addr: local,
+            stop,
+            stats,
+            accept_thread: Some(accept_thread),
+            worker_thread: Some(worker_thread),
+        })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the accept loop by connecting once.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    sock: TcpStream,
+    jobs: mpsc::SyncSender<Job>,
+    stats: Arc<ServerStats>,
+    stream: bool,
+) {
+    let peer_write = match sock.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = Arc::new(Mutex::new(peer_write));
+    let reader = BufReader::new(sock);
+
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = parse_request(&line);
+        match response {
+            Ok(Req::Stats) => {
+                let msg = Json::obj(vec![
+                    ("event", Json::Str("stats".into())),
+                    ("requests", Json::Num(stats.requests.load(Ordering::Relaxed) as f64)),
+                    ("tokens", Json::Num(stats.tokens.load(Ordering::Relaxed) as f64)),
+                    ("errors", Json::Num(stats.errors.load(Ordering::Relaxed) as f64)),
+                ]);
+                let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
+            }
+            Ok(Req::Generate { id, prompt, max_new }) => {
+                let (tx, rx) = mpsc::channel::<String>();
+                if jobs
+                    .try_send(Job { id, prompt, max_new, reply: tx, stream })
+                    .is_err()
+                {
+                    let msg = Json::obj(vec![
+                        ("id", Json::Num(id)),
+                        ("event", Json::Str("error".into())),
+                        ("message", Json::Str("queue full".into())),
+                    ]);
+                    let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
+                    continue;
+                }
+                // Pump worker events back to this connection until "done".
+                let w = writer.clone();
+                for msg in rx {
+                    let done = msg.contains("\"event\":\"done\"") || msg.contains("\"event\":\"error\"");
+                    if writeln!(w.lock().unwrap(), "{msg}").is_err() {
+                        break;
+                    }
+                    if done {
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = Json::obj(vec![
+                    ("event", Json::Str("error".into())),
+                    ("message", Json::Str(format!("{e:#}"))),
+                ]);
+                let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
+            }
+        }
+    }
+}
+
+enum Req {
+    Generate { id: f64, prompt: Vec<u32>, max_new: usize },
+    Stats,
+}
+
+fn parse_request(line: &str) -> crate::Result<Req> {
+    let j = Json::parse(line)?;
+    if j.get("stats").is_some() {
+        return Ok(Req::Stats);
+    }
+    let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let prompt: Vec<u32> = if let Some(p) = j.get("prompt") {
+        p.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
+            .iter()
+            .map(|t| t.as_usize().map(|x| x as u32).ok_or_else(|| anyhow::anyhow!("bad token")))
+            .collect::<crate::Result<_>>()?
+    } else if let Some(t) = j.get("text").and_then(|v| v.as_str()) {
+        ByteTokenizer.encode(t)
+    } else {
+        anyhow::bail!("request needs 'prompt' or 'text'")
+    };
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
+    Ok(Req::Generate { id, prompt, max_new })
+}
+
+/// Minimal blocking client for tests, benches and the e2e example.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One completed generation as seen by a client.
+#[derive(Debug, Clone)]
+pub struct ClientResult {
+    pub tokens: Vec<u32>,
+    pub aal: f64,
+    pub tpot_ms: f64,
+    pub iterations: usize,
+    pub stream_events: usize,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> crate::Result<Self> {
+        let sock = TcpStream::connect(addr)?;
+        let writer = sock.try_clone()?;
+        Ok(Self { reader: BufReader::new(sock), writer })
+    }
+
+    /// Sends one request and blocks until its `done` event.
+    pub fn generate(&mut self, id: u64, prompt: &[u32], max_new: usize) -> crate::Result<ClientResult> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("max_new", Json::Num(max_new as f64)),
+        ]);
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut stream_events = 0usize;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed connection");
+            let j = Json::parse(&line)?;
+            match j.str("event")? {
+                "tokens" => stream_events += 1,
+                "done" => {
+                    let tokens = j
+                        .arr("tokens")?
+                        .iter()
+                        .map(|t| t.as_usize().unwrap_or(0) as u32)
+                        .collect();
+                    return Ok(ClientResult {
+                        tokens,
+                        aal: j.f64("aal")?,
+                        tpot_ms: j.f64("tpot_ms")?,
+                        iterations: j.usize("iterations")?,
+                        stream_events,
+                    });
+                }
+                "error" => anyhow::bail!("server error: {}", j.str("message")?),
+                other => anyhow::bail!("unexpected event '{other}'"),
+            }
+        }
+    }
+}
+
+/// In-process mock engine for protocol tests (echoes the prompt).
+pub struct EchoEngine;
+
+impl Engine for EchoEngine {
+    fn name(&self) -> String {
+        "echo".into()
+    }
+
+    fn generate_with(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sink: crate::engine::TokenSink,
+    ) -> crate::Result<crate::engine::Generation> {
+        let tokens: Vec<u32> = prompt.iter().copied().cycle().take(max_new).collect();
+        for chunk in tokens.chunks(3) {
+            sink(chunk);
+        }
+        Ok(crate::engine::Generation {
+            tokens,
+            iterations: max_new.div_ceil(3),
+            seconds: 1e-4,
+            prefill_seconds: 1e-5,
+            recorder: crate::metrics::Recorder::new(),
+        })
+    }
+}
+
+/// Keyed response demux used by tests that multiplex one connection.
+pub fn group_events(lines: &[String]) -> BTreeMap<u64, Vec<Json>> {
+    let mut out: BTreeMap<u64, Vec<Json>> = BTreeMap::new();
+    for l in lines {
+        if let Ok(j) = Json::parse(l) {
+            let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            out.entry(id).or_default().push(j);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_roundtrip_with_streaming() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, true).unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        let r = c.generate(1, &[10, 20, 30], 7).unwrap();
+        assert_eq!(r.tokens, vec![10, 20, 30, 10, 20, 30, 10]);
+        assert!(r.stream_events >= 2, "expected streamed chunks");
+        assert_eq!(srv.stats.requests.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn multiple_sequential_requests_share_the_engine() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        for i in 0..5 {
+            let r = c.generate(i, &[1, 2], 4).unwrap();
+            assert_eq!(r.tokens.len(), 4);
+            assert_eq!(r.stream_events, 0, "stream disabled");
+        }
+        assert_eq!(srv.stats.tokens.load(std::sync::atomic::Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn concurrent_clients_fcfs() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let addr = srv.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    c.generate(i, &[i as u32 + 1], 3).unwrap().tokens
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let toks = h.join().unwrap();
+            assert_eq!(toks, vec![i as u32 + 1; 3]);
+        }
+    }
+
+    #[test]
+    fn malformed_requests_get_error_events() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let sock = TcpStream::connect(srv.addr).unwrap();
+        let mut w = sock.try_clone().unwrap();
+        writeln!(w, "this is not json").unwrap();
+        let mut r = BufReader::new(sock);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.str("event").unwrap(), "error");
+    }
+
+    #[test]
+    fn text_requests_are_byte_tokenized() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let sock = TcpStream::connect(srv.addr).unwrap();
+        let mut w = sock.try_clone().unwrap();
+        writeln!(w, r#"{{"id": 3, "text": "hi", "max_new": 2}}"#).unwrap();
+        let mut r = BufReader::new(sock);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.str("event").unwrap(), "done");
+        // "hi" = [104, 105] cycled twice
+        let toks: Vec<usize> =
+            j.arr("tokens").unwrap().iter().map(|t| t.as_usize().unwrap()).collect();
+        assert_eq!(toks, vec![104, 105]);
+    }
+}

@@ -1,0 +1,311 @@
+//! Analytical GPU simulator — regenerates the *paper-scale* figure series.
+//!
+//! The real end-to-end runs in this repository execute on the CPU PJRT
+//! backend with small models; who-wins-where at A100/A40 + Llama-2 scale
+//! depends on the GPU roofline shape (memory-bound decode, saturating
+//! verification curve — Fig. 5-(a)). This module models exactly that:
+//!
+//! * [`GpuProfile`] — peak FP16 FLOPs, HBM bandwidth and per-call launch
+//!   overheads (eager vs compiled) for A100-80G and A40;
+//! * [`LlmDims`] — Llama-2-7B/13B targets and Llama-68M/160M drafters;
+//! * [`forward_latency`] — roofline latency of a width-`W` forward pass:
+//!   `max(compute, memory) + overhead`;
+//! * [`SpecSim`] — closed-form speculative-iteration simulator combining
+//!   the latency model with a rank-acceptance process (measured on the
+//!   real system and transplanted), producing AAL / step latency / TPOT
+//!   for every engine archetype of Figs. 5, 6, 10 and 11-(b).
+//!
+//! Numbers are *estimates of shape*, not of absolute wall time; DESIGN.md
+//! §2 records this substitution.
+
+use crate::objective::{LatencyCurve, LatencyModel};
+use crate::tree::TreeShape;
+
+/// Accelerator roofline profile.
+#[derive(Debug, Clone)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Peak dense FP16 TFLOP/s.
+    pub peak_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Achievable fraction of peak for decode-shaped GEMMs.
+    pub flops_eff: f64,
+    /// Achievable fraction of bandwidth.
+    pub bw_eff: f64,
+    /// Per-forward CPU launch overhead, eager runtime (per layer).
+    pub eager_overhead_per_layer: f64,
+    /// Memory-traffic multiplier of the eager runtime (unfused kernels
+    /// re-read activations; no CUDA-graph capture).
+    pub eager_mem_penalty: f64,
+    /// Per-forward overhead under CUDA-Graph/compiled execution (whole
+    /// model).
+    pub compiled_overhead: f64,
+}
+
+pub const A100: GpuProfile = GpuProfile {
+    name: "A100-80G",
+    peak_tflops: 312.0,
+    hbm_gbps: 2039.0,
+    flops_eff: 0.55,
+    bw_eff: 0.75,
+    eager_overhead_per_layer: 55e-6,
+    eager_mem_penalty: 1.35,
+    compiled_overhead: 30e-6,
+};
+
+pub const A40: GpuProfile = GpuProfile {
+    name: "A40",
+    peak_tflops: 149.7,
+    hbm_gbps: 696.0,
+    flops_eff: 0.5,
+    bw_eff: 0.7,
+    eager_overhead_per_layer: 55e-6,
+    eager_mem_penalty: 1.35,
+    compiled_overhead: 30e-6,
+};
+
+/// Transformer dimension set (FP16 weights).
+#[derive(Debug, Clone)]
+pub struct LlmDims {
+    pub name: &'static str,
+    pub params: f64,
+    pub layers: usize,
+    pub d_model: usize,
+}
+
+pub fn llama2_7b() -> LlmDims {
+    LlmDims { name: "Llama-2-7B", params: 6.74e9, layers: 32, d_model: 4096 }
+}
+
+pub fn llama2_13b() -> LlmDims {
+    LlmDims { name: "Llama-2-13B", params: 13.0e9, layers: 40, d_model: 5120 }
+}
+
+pub fn llama_68m() -> LlmDims {
+    LlmDims { name: "Llama-68M", params: 68e6, layers: 2, d_model: 768 }
+}
+
+pub fn llama_160m() -> LlmDims {
+    LlmDims { name: "Llama-160M", params: 162e6, layers: 12, d_model: 768 }
+}
+
+/// Roofline latency of one width-`w` forward pass at context length `ctx`.
+pub fn forward_latency(m: &LlmDims, g: &GpuProfile, w: usize, ctx: usize, compiled: bool) -> f64 {
+    let w = w.max(1) as f64;
+    // GEMM compute: 2 FLOPs per weight per token.
+    let flops = 2.0 * m.params * w
+        // attention score/value compute against the KV cache
+        + 4.0 * (m.layers * m.d_model) as f64 * w * ctx as f64;
+    // Memory: weights stream once per forward (decode is memory-bound);
+    // KV cache read for the attended context.
+    let bytes = 2.0 * m.params + 4.0 * (m.layers * m.d_model * ctx) as f64;
+    let t_compute = flops / (g.peak_tflops * 1e12 * g.flops_eff);
+    let bytes = if compiled { bytes } else { bytes * g.eager_mem_penalty };
+    let t_memory = bytes / (g.hbm_gbps * 1e9 * g.bw_eff);
+    let overhead = if compiled {
+        g.compiled_overhead
+    } else {
+        g.eager_overhead_per_layer * m.layers as f64
+    };
+    t_compute.max(t_memory) + overhead
+}
+
+/// Latency curve over the graph widths (plugs into the Eq. 3 machinery).
+pub fn latency_curve(m: &LlmDims, g: &GpuProfile, ctx: usize, compiled: bool) -> LatencyCurve {
+    let pts: Vec<(usize, f64)> = crate::config::GRAPH_WIDTHS
+        .iter()
+        .map(|&w| (w, forward_latency(m, g, w, ctx, compiled)))
+        .collect();
+    LatencyCurve::new(&pts)
+}
+
+/// Full latency model for a (drafter, verifier) pair on a GPU.
+pub fn pair_latency_model(
+    dft: &LlmDims,
+    tgt: &LlmDims,
+    g: &GpuProfile,
+    ctx: usize,
+    compiled: bool,
+    cpu_overhead: f64,
+) -> LatencyModel {
+    LatencyModel {
+        drafter: latency_curve(dft, g, ctx, compiled),
+        verifier: latency_curve(tgt, g, ctx, compiled),
+        cpu_overhead,
+    }
+}
+
+/// Closed-form speculative-decoding simulator.
+///
+/// The acceptance process is summarised by `accept_by_rank` (probability
+/// that the verifier's token is the drafter's rank-r candidate, measured
+/// on the real system per dataset) — enough to score any static tree shape
+/// and the EGT envelope.
+#[derive(Debug, Clone)]
+pub struct SpecSim {
+    pub lat: LatencyModel,
+    pub accept_by_rank: Vec<f64>,
+}
+
+/// Simulated outcome of one engine configuration.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub aal: f64,
+    pub step_latency: f64,
+    pub tpot: f64,
+}
+
+impl SpecSim {
+    pub fn new(lat: LatencyModel, accept_by_rank: Vec<f64>) -> Self {
+        Self { lat, accept_by_rank }
+    }
+
+    /// Coverage probability of a width-`w` growth step (the chance the
+    /// true token is among the top-w candidates).
+    pub fn q(&self, w: usize) -> f64 {
+        self.accept_by_rank.iter().take(w).sum::<f64>().min(0.999)
+    }
+
+    /// Scores a static tree shape (sequence / K-ary / Sequoia): expected
+    /// AAL from the rank model, iteration latency from per-level widths.
+    pub fn score_shape(&self, shape: &TreeShape) -> SimResult {
+        let aal = shape.expected_aal(&self.accept_by_rank);
+        let draft_widths: Vec<usize> = shape
+            .levels()
+            .iter()
+            .map(|l| crate::config::width_for(l.len()).unwrap_or(64))
+            .collect();
+        let w_verify = crate::config::width_for(shape.len() + 1).unwrap_or(64);
+        self.finish(aal, &draft_widths, w_verify)
+    }
+
+    /// Scores an EGT envelope (depth D, width W, verification budget Wv)
+    /// with the truncated-geometric AAL model `1 + Σ q_W^d`.
+    pub fn score_egt(&self, depth: usize, width: usize, w_verify: usize) -> SimResult {
+        // Per-level continuation probability: a width-W equal-growth step
+        // spreads its W leaves across the whole tree, so the accepted
+        // path's node typically carries only a handful of children — cap
+        // the rank coverage at the effective per-node branch.
+        let q = self.q(width.min(4));
+        let mut aal = 1.0;
+        let mut p = 1.0;
+        for _ in 0..depth {
+            p *= q;
+            aal += p;
+        }
+        let draft_widths = vec![crate::config::width_for(width).unwrap_or(64); depth];
+        self.finish(aal, &draft_widths, w_verify)
+    }
+
+    /// Scores vanilla autoregressive decoding.
+    pub fn score_vanilla(&self) -> SimResult {
+        let t = self.lat.t_verify(1);
+        SimResult { aal: 1.0, step_latency: t, tpot: t }
+    }
+
+    fn finish(&self, aal: f64, draft_widths: &[usize], w_verify: usize) -> SimResult {
+        let step = self.lat.iteration_seconds(draft_widths, w_verify);
+        SimResult { aal, step_latency: step, tpot: step / aal }
+    }
+
+    /// Picks the best EGT configuration under the Eq. 3 objective — the
+    /// simulated Yggdrasil (context-averaged).
+    pub fn best_egt(
+        &self,
+        max_depth: usize,
+        max_width: usize,
+        max_verify: usize,
+    ) -> (usize, usize, usize, SimResult) {
+        let mut best: Option<(usize, usize, usize, SimResult)> = None;
+        for &w in crate::config::GRAPH_WIDTHS.iter().filter(|&&w| w <= max_width) {
+            for d in 1..=max_depth {
+                for &wv in crate::config::GRAPH_WIDTHS.iter().filter(|&&x| x <= max_verify) {
+                    if wv < w + 1 {
+                        continue;
+                    }
+                    let r = self.score_egt(d, w, wv.min(d * w + 1));
+                    if best.as_ref().map_or(true, |(_, _, _, b)| r.tpot < b.tpot) {
+                        best = Some((d, w, wv, r));
+                    }
+                }
+            }
+        }
+        best.unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rank_model() -> Vec<f64> {
+        vec![0.62, 0.12, 0.05, 0.03, 0.02, 0.01, 0.01, 0.01]
+    }
+
+    #[test]
+    fn decode_is_memory_bound_on_a100() {
+        let m = llama2_7b();
+        // At w=1 memory dominates: latency ≈ weight-streaming time.
+        let t1 = forward_latency(&m, &A100, 1, 256, true);
+        let t_mem = 2.0 * m.params / (A100.hbm_gbps * 1e9 * A100.bw_eff);
+        assert!((t1 - t_mem - A100.compiled_overhead).abs() / t1 < 0.2);
+        // The curve is flat in the memory-bound region then rises: the
+        // Fig. 5-(a) saturation shape.
+        let t8 = forward_latency(&m, &A100, 8, 256, true);
+        let t64 = forward_latency(&m, &A100, 64, 256, true);
+        let t256 = forward_latency(&m, &A100, 256, 256, true);
+        assert!((t8 - t1) / t1 < 0.05, "w=8 should ride the memory bound");
+        assert!(t256 > t64, "eventually compute-bound");
+    }
+
+    #[test]
+    fn eager_overhead_dwarfs_compiled_for_deep_models() {
+        let m = llama2_7b();
+        let e = forward_latency(&m, &A100, 1, 128, false);
+        let c = forward_latency(&m, &A100, 1, 128, true);
+        assert!(e > c, "eager {e} vs compiled {c}");
+        let d = llama_160m();
+        let ed = forward_latency(&d, &A100, 1, 128, false);
+        let cd = forward_latency(&d, &A100, 1, 128, true);
+        assert!(ed / cd > 1.05, "compiled wins hardest on small models");
+    }
+
+    #[test]
+    fn a40_is_slower_than_a100() {
+        let m = llama2_7b();
+        assert!(
+            forward_latency(&m, &A40, 1, 128, true) > forward_latency(&m, &A100, 1, 128, true)
+        );
+    }
+
+    #[test]
+    fn speculation_beats_vanilla_in_sim() {
+        let lat = pair_latency_model(&llama_68m(), &llama2_7b(), &A100, 256, true, 1e-4);
+        let sim = SpecSim::new(lat, rank_model());
+        let vanilla = sim.score_vanilla();
+        let seq = sim.score_shape(&TreeShape::sequence(5));
+        assert!(seq.aal > 1.8);
+        assert!(seq.tpot < vanilla.tpot, "sequence spec must win on A100");
+        let (d, w, wv, egt) = sim.best_egt(16, 16, 64);
+        assert!(egt.tpot <= seq.tpot, "EGT ({d},{w},{wv}) must beat a fixed chain");
+    }
+
+    #[test]
+    fn oversized_verification_hurts_tpot() {
+        let lat = pair_latency_model(&llama_68m(), &llama2_7b(), &A100, 256, true, 1e-4);
+        let sim = SpecSim::new(lat, rank_model());
+        let small = sim.score_egt(4, 2, 16);
+        let huge = sim.score_egt(4, 2, 64);
+        assert!(small.tpot <= huge.tpot + 1e-12);
+        assert!((small.aal - huge.aal).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_is_monotone_in_width() {
+        let lat = pair_latency_model(&llama_68m(), &llama2_7b(), &A100, 128, true, 1e-4);
+        let sim = SpecSim::new(lat, rank_model());
+        assert!(sim.q(1) < sim.q(4));
+        assert!(sim.q(8) <= 0.999);
+    }
+}

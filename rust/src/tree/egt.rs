@@ -1,0 +1,249 @@
+//! Equal-Growth Tree frontier — §4.2 of the paper.
+//!
+//! EGT grows the draft tree in `D_draft` steps of **exactly** `W_draft` new
+//! leaves each, so every drafter call has a static shape (one compiled graph
+//! per width, zero recompilation). The *positions* of the new leaves are
+//! dynamic: each growth step takes the `W_draft` expansions with the highest
+//! path probability from a global frontier — a leaf may attach anywhere in
+//! the partial tree, including as the k-th sibling of an already-expanded
+//! node. Path-wise drafter probabilities act as the acceptance surrogate
+//! (the paper cites OPT-Tree for this).
+//!
+//! The frontier is a max-heap of [`Expansion`]s. When a node is evaluated by
+//! the drafter, its top-`branch_candidates` child tokens enter the heap via
+//! [`Frontier::push_candidates`]. Popping the rank-`r` child of a node
+//! automatically re-inserts the rank-`r+1` sibling, which is what makes the
+//! "attach anywhere" property cheap: the heap always holds the single best
+//! unexplored sibling of every partially-expanded node.
+
+use super::{NodeId, TokenTree};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A candidate expansion: attach `token` as a child of `parent`.
+#[derive(Debug, Clone, Copy)]
+pub struct Expansion {
+    pub parent: NodeId,
+    /// Rank of this token in the parent's drafter distribution (0 = top-1).
+    pub rank: usize,
+    pub token: u32,
+    /// Drafter probability of `token` at `parent`.
+    pub edge_prob: f32,
+    /// Path probability of the resulting node (parent path × edge).
+    pub path_prob: f32,
+}
+
+impl PartialEq for Expansion {
+    fn eq(&self, other: &Self) -> bool {
+        self.path_prob == other.path_prob
+    }
+}
+impl Eq for Expansion {}
+impl PartialOrd for Expansion {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Expansion {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap by path probability; ties broken toward shallower
+        // parents (favours breadth, deterministic across runs).
+        self.path_prob
+            .partial_cmp(&other.path_prob)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.parent.cmp(&self.parent))
+            .then_with(|| other.rank.cmp(&self.rank))
+    }
+}
+
+/// Per-evaluated-node candidate list (token, prob), sorted descending.
+#[derive(Debug, Clone)]
+struct NodeCandidates {
+    items: Vec<(u32, f32)>,
+}
+
+/// The global EGT frontier.
+#[derive(Debug)]
+pub struct Frontier {
+    heap: BinaryHeap<Expansion>,
+    candidates: Vec<Option<NodeCandidates>>, // indexed by NodeId
+    max_depth: usize,
+}
+
+impl Frontier {
+    /// `max_depth` bounds node depth (tree positions must fit the cache
+    /// window); expansions of nodes at `max_depth` are never offered.
+    pub fn new(max_depth: usize) -> Self {
+        Self { heap: BinaryHeap::new(), candidates: Vec::new(), max_depth }
+    }
+
+    /// Registers the drafter's top candidates at `node` (sorted descending
+    /// by probability) and seeds the heap with the rank-0 expansion.
+    pub fn push_candidates(
+        &mut self,
+        tree: &TokenTree,
+        node: NodeId,
+        top: Vec<(u32, f32)>,
+    ) {
+        if self.candidates.len() <= node {
+            self.candidates.resize(node + 1, None);
+        }
+        debug_assert!(
+            top.windows(2).all(|w| w[0].1 >= w[1].1),
+            "candidates must be sorted descending"
+        );
+        if tree.depth(node) as usize >= self.max_depth {
+            return; // children would exceed the depth budget
+        }
+        if let Some(&(token, p)) = top.first() {
+            self.heap.push(Expansion {
+                parent: node,
+                rank: 0,
+                token,
+                edge_prob: p,
+                path_prob: tree.path_prob(node) * p,
+            });
+        }
+        self.candidates[node] = Some(NodeCandidates { items: top });
+    }
+
+    /// Pops the best expansion and re-inserts the parent's next-rank
+    /// sibling (the "attach anywhere" mechanism).
+    pub fn pop_best(&mut self, tree: &TokenTree) -> Option<Expansion> {
+        let best = self.heap.pop()?;
+        let next_rank = best.rank + 1;
+        if let Some(Some(c)) = self.candidates.get(best.parent) {
+            if let Some(&(token, p)) = c.items.get(next_rank) {
+                self.heap.push(Expansion {
+                    parent: best.parent,
+                    rank: next_rank,
+                    token,
+                    edge_prob: p,
+                    path_prob: tree.path_prob(best.parent) * p,
+                });
+            }
+        }
+        Some(best)
+    }
+
+    /// Takes the `w` best expansions (fewer if the frontier is exhausted).
+    pub fn pop_w(&mut self, tree: &TokenTree, w: usize) -> Vec<Expansion> {
+        let mut out = Vec::with_capacity(w);
+        while out.len() < w {
+            match self.pop_best(tree) {
+                Some(e) => out.push(e),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Best path probability currently available without popping.
+    pub fn peek_path_prob(&self) -> Option<f32> {
+        self.heap.peek().map(|e| e.path_prob)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Grows `tree` by one equal-growth step: pops the `w` globally-best
+/// expansions and materialises them as nodes. Returns the new node ids
+/// (length ≤ w; caller pads the drafter call to the compiled width).
+pub fn grow_step(tree: &mut TokenTree, frontier: &mut Frontier, w: usize) -> Vec<NodeId> {
+    let picks = frontier.pop_w(tree, w);
+    picks
+        .into_iter()
+        .map(|e| tree.add_node(e.parent, e.token, e.edge_prob))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn top(v: &[(u32, f32)]) -> Vec<(u32, f32)> {
+        v.to_vec()
+    }
+
+    #[test]
+    fn first_step_takes_root_children_in_order() {
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(8);
+        f.push_candidates(&tree, 0, top(&[(10, 0.6), (11, 0.3), (12, 0.1)]));
+        let ids = grow_step(&mut tree, &mut f, 2);
+        assert_eq!(ids.len(), 2);
+        assert_eq!(tree.token(ids[0]), 10);
+        assert_eq!(tree.token(ids[1]), 11);
+        assert_eq!(tree.parent(ids[0]), Some(0));
+    }
+
+    #[test]
+    fn attach_anywhere_prefers_deep_path_over_shallow_sibling() {
+        // root -> a (0.9). a's best child has path 0.9*0.8 = 0.72, which
+        // beats the root's rank-1 child (0.05): EGT must deepen, not widen.
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(8);
+        f.push_candidates(&tree, 0, top(&[(1, 0.9), (2, 0.05)]));
+        let ids = grow_step(&mut tree, &mut f, 1);
+        let a = ids[0];
+        f.push_candidates(&tree, a, top(&[(3, 0.8), (4, 0.1)]));
+        let ids2 = grow_step(&mut tree, &mut f, 1);
+        assert_eq!(tree.parent(ids2[0]), Some(a));
+        assert_eq!(tree.token(ids2[0]), 3);
+    }
+
+    #[test]
+    fn sibling_reinsertion_widens_when_path_decays() {
+        // After taking a's best child (path 0.9*0.2=0.18), the root's
+        // rank-1 child (0.5) must be offered next.
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(8);
+        f.push_candidates(&tree, 0, top(&[(1, 0.9), (2, 0.5)]));
+        let a = grow_step(&mut tree, &mut f, 1)[0];
+        f.push_candidates(&tree, a, top(&[(3, 0.2)]));
+        let picks = f.pop_w(&tree, 2);
+        assert_eq!(picks[0].parent, 0);
+        assert_eq!(picks[0].token, 2);
+        assert_eq!(picks[1].parent, a);
+        assert_eq!(picks[1].token, 3);
+    }
+
+    #[test]
+    fn equal_growth_pads_when_frontier_exhausts() {
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(8);
+        f.push_candidates(&tree, 0, top(&[(1, 1.0)]));
+        let ids = grow_step(&mut tree, &mut f, 4);
+        assert_eq!(ids.len(), 1); // only one candidate existed
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn depth_budget_blocks_expansion() {
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(1);
+        f.push_candidates(&tree, 0, top(&[(1, 0.9)]));
+        let a = grow_step(&mut tree, &mut f, 1)[0];
+        // a is at depth 1 == max_depth: its candidates must be ignored.
+        f.push_candidates(&tree, a, top(&[(2, 0.9)]));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn grown_tree_keeps_invariants() {
+        let mut tree = TokenTree::new(0);
+        let mut f = Frontier::new(4);
+        f.push_candidates(&tree, 0, top(&[(1, 0.5), (2, 0.3), (3, 0.2)]));
+        for _ in 0..3 {
+            let ids = grow_step(&mut tree, &mut f, 2);
+            for id in ids {
+                f.push_candidates(&tree, id, top(&[(7, 0.6), (8, 0.4)]));
+            }
+        }
+        tree.check_invariants().unwrap();
+        assert_eq!(tree.len(), 7); // root + 3 steps × 2
+        assert!(tree.expected_aal() > 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Attention-mask construction for tree calls.
+//!
+//! Every model call (draft step, verification, prefill chunk) passes an
+//! explicit `[W, C]` validity mask: row *i* marks which cache slots token
+//! *i* may attend to — the committed causal prefix plus its own tree
+//! ancestors plus itself. Because validity is entirely mask-encoded, tree
+//! tokens live at arbitrary slots, rejected slots are simply reused, and
+//! the *shape* of every operator stays static (DESIGN.md §7). This mirrors
+//! the tree-dependency mask of §4.2 / FastTree.
+//!
+//! Mask building is on the per-iteration critical path, so the builder
+//! reuses one flat buffer and writes rows with `copy_from_slice` of a
+//! maintained prefix row (no per-call allocation after warm-up).
+
+use super::{NodeId, TokenTree};
+
+/// Reusable mask builder for one model instance (one cache).
+#[derive(Debug, Clone)]
+pub struct MaskBuilder {
+    capacity: usize,
+    /// 1.0 at slots holding committed (always-visible) tokens.
+    prefix_row: Vec<f32>,
+    /// Scratch output buffer, `width × capacity`, reused across calls.
+    buf: Vec<f32>,
+}
+
+impl MaskBuilder {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, prefix_row: vec![0.0; capacity], buf: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Marks `slot` as committed (visible to all future tokens).
+    pub fn commit_slot(&mut self, slot: u32) {
+        self.prefix_row[slot as usize] = 1.0;
+    }
+
+    /// Unmarks a slot (used when a session resets or a cache is recycled).
+    pub fn release_slot(&mut self, slot: u32) {
+        self.prefix_row[slot as usize] = 0.0;
+    }
+
+    pub fn committed_count(&self) -> usize {
+        self.prefix_row.iter().filter(|&&x| x > 0.0).count()
+    }
+
+    /// Builds the mask for evaluating tree `nodes` (in call order) whose
+    /// cache slots are given by `slot_of[node]`. `rows` must equal the
+    /// compiled graph width; rows beyond `nodes.len()` are zeroed padding.
+    ///
+    /// Row semantics: prefix slots ∪ ancestor slots (ancestors must appear
+    /// in `slot_of`) ∪ the node's own slot (its K/V are scattered before
+    /// attention runs).
+    pub fn build<'a>(
+        &'a mut self,
+        tree: &TokenTree,
+        nodes: &[NodeId],
+        slot_of: &[Option<u32>], // indexed by NodeId; None = not in this cache
+        rows: usize,
+    ) -> &'a [f32] {
+        assert!(nodes.len() <= rows);
+        let c = self.capacity;
+        self.buf.resize(rows * c, 0.0);
+        for (i, &node) in nodes.iter().enumerate() {
+            let row = &mut self.buf[i * c..(i + 1) * c];
+            row.copy_from_slice(&self.prefix_row);
+            for anc in tree.ancestors(node) {
+                if let Some(Some(slot)) = slot_of.get(anc) {
+                    row[*slot as usize] = 1.0;
+                }
+            }
+        }
+        for i in nodes.len()..rows {
+            self.buf[i * c..(i + 1) * c].fill(0.0);
+        }
+        &self.buf[..rows * c]
+    }
+
+    /// Builds the mask for a *linear* prefill chunk: token `i` of the chunk
+    /// attends to the committed prefix plus chunk tokens `0..=i` (their
+    /// slots given by `chunk_slots`). Rows beyond `n` are zero padding.
+    pub fn build_linear<'a>(&'a mut self, chunk_slots: &[u32], n: usize, rows: usize) -> &'a [f32] {
+        assert!(n <= chunk_slots.len() && n <= rows);
+        let c = self.capacity;
+        self.buf.resize(rows * c, 0.0);
+        for i in 0..n {
+            let row = &mut self.buf[i * c..(i + 1) * c];
+            row.copy_from_slice(&self.prefix_row);
+            for &s in &chunk_slots[..=i] {
+                row[s as usize] = 1.0;
+            }
+        }
+        for i in n..rows {
+            self.buf[i * c..(i + 1) * c].fill(0.0);
+        }
+        &self.buf[..rows * c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(pairs: &[(NodeId, u32)], n: usize) -> Vec<Option<u32>> {
+        let mut v = vec![None; n];
+        for &(id, s) in pairs {
+            v[id] = Some(s);
+        }
+        v
+    }
+
+    #[test]
+    fn tree_rows_see_prefix_ancestors_and_self() {
+        let mut tree = TokenTree::new(0);
+        let a = tree.add_node(0, 1, 0.9);
+        let b = tree.add_node(a, 2, 0.8);
+        let c2 = tree.add_node(0, 3, 0.1);
+
+        let mut mb = MaskBuilder::new(8);
+        mb.commit_slot(0); // prefix token
+        let slot_of = slots(&[(0, 1), (a, 2), (b, 3), (c2, 4)], tree.len());
+        let m = mb.build(&tree, &[a, b, c2], &slot_of, 4).to_vec();
+
+        let row = |i: usize| &m[i * 8..(i + 1) * 8];
+        // a: prefix(0) + root(1) + self(2)
+        assert_eq!(row(0), &[1., 1., 1., 0., 0., 0., 0., 0.]);
+        // b: prefix + root + a + self
+        assert_eq!(row(1), &[1., 1., 1., 1., 0., 0., 0., 0.]);
+        // c2: prefix + root + self(4); must NOT see a or b (sibling branch)
+        assert_eq!(row(2), &[1., 1., 0., 0., 1., 0., 0., 0.]);
+        // padding row all-zero
+        assert_eq!(row(3), &[0.; 8]);
+    }
+
+    #[test]
+    fn linear_mask_is_causal_over_chunk() {
+        let mut mb = MaskBuilder::new(6);
+        mb.commit_slot(5);
+        let m = mb.build_linear(&[0, 1, 2], 3, 4).to_vec();
+        let row = |i: usize| &m[i * 6..(i + 1) * 6];
+        assert_eq!(row(0), &[1., 0., 0., 0., 0., 1.]);
+        assert_eq!(row(1), &[1., 1., 0., 0., 0., 1.]);
+        assert_eq!(row(2), &[1., 1., 1., 0., 0., 1.]);
+        assert_eq!(row(3), &[0.; 6]);
+    }
+
+    #[test]
+    fn commit_release_roundtrip() {
+        let mut mb = MaskBuilder::new(4);
+        mb.commit_slot(2);
+        assert_eq!(mb.committed_count(), 1);
+        mb.release_slot(2);
+        assert_eq!(mb.committed_count(), 0);
+    }
+
+    #[test]
+    fn rebuild_reuses_buffer_and_clears_stale_rows() {
+        let tree = TokenTree::new(0);
+        let mut mb = MaskBuilder::new(4);
+        let slot_of = slots(&[(0, 0)], 1);
+        let first = mb.build(&tree, &[0], &slot_of, 2).to_vec();
+        assert_eq!(&first[0..4], &[1., 0., 0., 0.]);
+        // second build with zero nodes: all rows must be padding
+        let second = mb.build(&tree, &[], &slot_of, 2).to_vec();
+        assert!(second.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,305 @@
+//! Token trees for speculative decoding.
+//!
+//! A [`TokenTree`] holds one iteration's draft: node 0 is the *root* — the
+//! bonus token produced by the previous verification (or the last prompt
+//! token right after prefill). Every other node is a candidate token whose
+//! parent path is a possible continuation. The tree is built either by the
+//! Equal-Growth algorithm ([`egt`]) or by one of the static structures
+//! ([`shapes`]), then optionally pruned ([`crate::pruning`]) and verified in
+//! a single target-model call.
+//!
+//! Nodes are stored in insertion order, which is guaranteed to be a
+//! topological order (parents precede children) — several algorithms
+//! (mask building, pruning DP, acceptance walks) rely on this.
+
+pub mod egt;
+pub mod mask;
+pub mod shapes;
+
+pub use egt::{grow_step, Expansion, Frontier};
+pub use mask::MaskBuilder;
+pub use shapes::TreeShape;
+
+/// Index of a node inside a [`TokenTree`].
+pub type NodeId = usize;
+
+/// One iteration's draft tree.
+#[derive(Debug, Clone)]
+pub struct TokenTree {
+    tokens: Vec<u32>,
+    parents: Vec<i32>, // -1 for the root
+    depths: Vec<u32>,  // root = 0
+    /// Drafter probability of this token given its parent path — the
+    /// acceptance surrogate the paper uses for expected-AAL values.
+    edge_probs: Vec<f32>,
+    /// Product of edge probabilities along the path from the root
+    /// (root = 1.0). This is the node's marginal expected-AAL value.
+    path_probs: Vec<f32>,
+    children: Vec<Vec<NodeId>>,
+}
+
+impl TokenTree {
+    /// A fresh tree containing only the root token.
+    pub fn new(root_token: u32) -> Self {
+        Self {
+            tokens: vec![root_token],
+            parents: vec![-1],
+            depths: vec![0],
+            edge_probs: vec![1.0],
+            path_probs: vec![1.0],
+            children: vec![Vec::new()],
+        }
+    }
+
+    /// Adds a candidate `token` under `parent` with drafter probability
+    /// `edge_prob`; returns the new node's id.
+    pub fn add_node(&mut self, parent: NodeId, token: u32, edge_prob: f32) -> NodeId {
+        debug_assert!(parent < self.len());
+        let id = self.tokens.len();
+        self.tokens.push(token);
+        self.parents.push(parent as i32);
+        self.depths.push(self.depths[parent] + 1);
+        self.edge_probs.push(edge_prob);
+        self.path_probs.push(self.path_probs[parent] * edge_prob);
+        self.children.push(Vec::new());
+        self.children[parent].push(id);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a tree always has its root
+    }
+
+    pub fn token(&self, id: NodeId) -> u32 {
+        self.tokens[id]
+    }
+
+    pub fn parent(&self, id: NodeId) -> Option<NodeId> {
+        (self.parents[id] >= 0).then(|| self.parents[id] as NodeId)
+    }
+
+    pub fn depth(&self, id: NodeId) -> u32 {
+        self.depths[id]
+    }
+
+    pub fn edge_prob(&self, id: NodeId) -> f32 {
+        self.edge_probs[id]
+    }
+
+    pub fn path_prob(&self, id: NodeId) -> f32 {
+        self.path_probs[id]
+    }
+
+    pub fn children(&self, id: NodeId) -> &[NodeId] {
+        &self.children[id]
+    }
+
+    /// Maximum node depth (the root is 0).
+    pub fn max_depth(&self) -> u32 {
+        self.depths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Ids of leaf nodes (no children).
+    pub fn leaves(&self) -> Vec<NodeId> {
+        (0..self.len()).filter(|&i| self.children[i].is_empty()).collect()
+    }
+
+    /// Walks ancestors from `id` up to (and including) the root.
+    pub fn ancestors(&self, id: NodeId) -> AncestorIter<'_> {
+        AncestorIter { tree: self, cur: Some(id) }
+    }
+
+    /// The token path from the root's first child down to `id` (exclusive
+    /// of the root itself, which is already committed).
+    pub fn path_tokens(&self, id: NodeId) -> Vec<u32> {
+        let mut path: Vec<u32> =
+            self.ancestors(id).filter(|&a| a != 0).map(|a| self.tokens[a]).collect();
+        path.reverse();
+        path
+    }
+
+    /// Expected number of tokens committed if this whole tree is verified:
+    /// 1 (the bonus token) + Σ path-probability of every candidate node.
+    /// This is the AAL surrogate from §4.1 of the paper.
+    pub fn expected_aal(&self) -> f64 {
+        1.0 + (1..self.len()).map(|i| self.path_probs[i] as f64).sum::<f64>()
+    }
+
+    /// Checks the structural invariants (used by tests / debug assertions).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.len();
+        for i in 1..n {
+            let p = self.parents[i];
+            if p < 0 || p as usize >= i {
+                return Err(format!("node {i}: parent {p} not before child"));
+            }
+            let p = p as usize;
+            if self.depths[i] != self.depths[p] + 1 {
+                return Err(format!("node {i}: depth mismatch"));
+            }
+            let pp = self.path_probs[p] * self.edge_probs[i];
+            if (self.path_probs[i] - pp).abs() > 1e-5 {
+                return Err(format!("node {i}: path prob mismatch"));
+            }
+            if !self.children[p].contains(&i) {
+                return Err(format!("node {i}: missing from parent child list"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Returns the sub-tree induced by `keep` (which must contain the root
+    /// and be closed under parents), remapping ids; `map[old] = new`.
+    pub fn induced_subtree(&self, keep: &[NodeId]) -> (TokenTree, Vec<Option<NodeId>>) {
+        assert!(keep.contains(&0), "subtree must contain the root");
+        let mut sorted = keep.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let mut map: Vec<Option<NodeId>> = vec![None; self.len()];
+        let mut out = TokenTree::new(self.tokens[0]);
+        map[0] = Some(0);
+        for &old in &sorted {
+            if old == 0 {
+                continue;
+            }
+            let parent_old = self.parents[old] as usize;
+            let parent_new = map[parent_old]
+                .unwrap_or_else(|| panic!("keep-set not closed under parents at {old}"));
+            let new = out.add_node(parent_new, self.tokens[old], self.edge_probs[old]);
+            map[old] = Some(new);
+        }
+        (out, map)
+    }
+
+    /// Pretty-prints the tree (used by the `tree_explorer` example).
+    pub fn render(&self, labels: Option<&[String]>) -> String {
+        let mut s = String::new();
+        self.render_node(0, "", true, labels, &mut s);
+        s
+    }
+
+    fn render_node(
+        &self,
+        id: NodeId,
+        prefix: &str,
+        last: bool,
+        labels: Option<&[String]>,
+        out: &mut String,
+    ) {
+        let connector = if id == 0 {
+            ""
+        } else if last {
+            "└─ "
+        } else {
+            "├─ "
+        };
+        let label = labels
+            .and_then(|l| l.get(id).cloned())
+            .unwrap_or_else(|| format!("tok={} p={:.3}", self.tokens[id], self.path_probs[id]));
+        out.push_str(&format!("{prefix}{connector}{label}\n"));
+        let child_prefix = if id == 0 {
+            String::new()
+        } else {
+            format!("{prefix}{}", if last { "   " } else { "│  " })
+        };
+        let kids = &self.children[id];
+        for (i, &c) in kids.iter().enumerate() {
+            self.render_node(c, &child_prefix, i + 1 == kids.len(), labels, out);
+        }
+    }
+}
+
+/// Iterator over a node's ancestors, including itself, ending at the root.
+pub struct AncestorIter<'a> {
+    tree: &'a TokenTree,
+    cur: Option<NodeId>,
+}
+
+impl Iterator for AncestorIter<'_> {
+    type Item = NodeId;
+
+    fn next(&mut self) -> Option<NodeId> {
+        let cur = self.cur?;
+        self.cur = self.tree.parent(cur);
+        Some(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> TokenTree {
+        let mut t = TokenTree::new(0);
+        let mut cur = 0;
+        for i in 0..n {
+            cur = t.add_node(cur, i as u32 + 1, 0.5);
+        }
+        t
+    }
+
+    #[test]
+    fn chain_shape() {
+        let t = chain(4);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.max_depth(), 4);
+        assert_eq!(t.leaves(), vec![4]);
+        assert_eq!(t.path_tokens(4), vec![1, 2, 3, 4]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn path_probs_multiply() {
+        let t = chain(3);
+        assert!((t.path_prob(3) - 0.125).abs() < 1e-6);
+        // AAL = 1 + 0.5 + 0.25 + 0.125
+        assert!((t.expected_aal() - 1.875).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ancestors_walk_to_root() {
+        let mut t = TokenTree::new(9);
+        let a = t.add_node(0, 1, 0.9);
+        let b = t.add_node(a, 2, 0.8);
+        let c = t.add_node(0, 3, 0.1);
+        assert_eq!(t.ancestors(b).collect::<Vec<_>>(), vec![b, a, 0]);
+        assert_eq!(t.ancestors(c).collect::<Vec<_>>(), vec![c, 0]);
+    }
+
+    #[test]
+    fn induced_subtree_remaps() {
+        let mut t = TokenTree::new(0);
+        let a = t.add_node(0, 1, 0.9);
+        let _b = t.add_node(a, 2, 0.8);
+        let c = t.add_node(0, 3, 0.7);
+        let (sub, map) = t.induced_subtree(&[0, a, c]);
+        assert_eq!(sub.len(), 3);
+        sub.check_invariants().unwrap();
+        assert_eq!(map[a], Some(1));
+        assert_eq!(map[c], Some(2));
+        assert_eq!(map[2], None); // b dropped
+        assert_eq!(sub.token(1), 1);
+        assert_eq!(sub.token(2), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "closed under parents")]
+    fn induced_subtree_requires_closure() {
+        let mut t = TokenTree::new(0);
+        let a = t.add_node(0, 1, 0.9);
+        let b = t.add_node(a, 2, 0.8);
+        let _ = t.induced_subtree(&[0, b]); // a missing
+    }
+
+    #[test]
+    fn render_contains_tokens() {
+        let t = chain(2);
+        let s = t.render(None);
+        assert!(s.contains("tok=1"));
+        assert!(s.contains("tok=2"));
+    }
+}

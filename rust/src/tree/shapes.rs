@@ -1,0 +1,284 @@
+//! Static tree *shapes* for the baseline structures (Fig. 3 / Fig. 11).
+//!
+//! A [`TreeShape`] is a topology without tokens: node 0 is the root, every
+//! other shape-node says "attach the rank-`r` drafter candidate under
+//! parent `p`". Engines instantiate a shape level by level: all nodes at
+//! depth *d* are materialised from their parents' drafter distributions and
+//! evaluated in one width-padded drafter call — so even the *static*
+//! baselines run on the compiled static-width graphs, exactly like the
+//! paper's compilation-friendly baselines (Sequoia, vLLM-Spec).
+//!
+//! Three constructions:
+//! * [`TreeShape::sequence`] — classic chain speculation.
+//! * [`TreeShape::k_ary`] — SpecInfer-style top-K expansion.
+//! * [`TreeShape::sequoia`] — the Sequoia dynamic program: given a
+//!   rank-acceptance vector measured on a calibration set, find the
+//!   `budget`-node tree maximising expected accepted length.
+
+
+/// One non-root node of a static shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeNode {
+    /// Index of the parent in the shape (0 = root).
+    pub parent: usize,
+    /// Candidate rank in the parent's drafter distribution (0 = top-1).
+    pub rank: usize,
+}
+
+/// A static draft-tree topology. Node ids: 0 is the implicit root; node
+/// `i >= 1` is `nodes[i-1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeShape {
+    pub nodes: Vec<ShapeNode>,
+}
+
+impl TreeShape {
+    /// Chain of `depth` rank-0 nodes (vanilla sequence speculation).
+    pub fn sequence(depth: usize) -> Self {
+        let nodes = (0..depth).map(|i| ShapeNode { parent: i, rank: 0 }).collect();
+        Self { nodes }
+    }
+
+    /// Full K-ary tree truncated to `budget` nodes, breadth-first
+    /// (SpecInfer's static top-K construction).
+    pub fn k_ary(k: usize, depth: usize, budget: usize) -> Self {
+        let mut nodes = Vec::new();
+        let mut depth_of = vec![0usize]; // per shape id (0 = root)
+        let mut frontier = vec![0usize];
+        'outer: while let Some(&parent) = frontier.first() {
+            frontier.remove(0);
+            if depth_of[parent] >= depth {
+                continue;
+            }
+            for rank in 0..k {
+                if nodes.len() >= budget {
+                    break 'outer;
+                }
+                nodes.push(ShapeNode { parent, rank });
+                let id = nodes.len(); // shape id of the new node
+                depth_of.push(depth_of[parent] + 1);
+                frontier.push(id);
+            }
+        }
+        Self { nodes }
+    }
+
+    /// Sequoia's offline construction: maximise expected accepted length
+    /// for a `budget`-node tree under a rank-acceptance model.
+    ///
+    /// `accept_by_rank[r]` is the calibration-measured probability that the
+    /// verifier accepts the drafter's rank-`r` candidate given its parent
+    /// was accepted (non-increasing in `r`). The classic tree-DP:
+    ///
+    /// ```text
+    /// S(m)    = 1 + F(m-1, 0)                         value of an m-node accepted subtree
+    /// F(b, r) = max_{m=0..b} [m>0: p_r·S(m) + F(b-m, r+1); m=0: F(b, r+1)]
+    /// ```
+    pub fn sequoia(accept_by_rank: &[f64], budget: usize) -> Self {
+        assert!(!accept_by_rank.is_empty());
+        let rmax = accept_by_rank.len();
+        // s[m] for m in 0..=budget (s[0] = 0 unused), f[b][r].
+        let mut s = vec![0.0f64; budget + 1];
+        let mut f = vec![vec![0.0f64; rmax + 1]; budget + 1];
+        // choice[b][r] = number of nodes m given to the rank-r child.
+        let mut choice = vec![vec![0usize; rmax + 1]; budget + 1];
+
+        for m in 1..=budget {
+            // F rows only depend on S(m') for m' < m? No: F(b,·) uses
+            // S(m'<=b); compute S in increasing m and F(b,·) for b = m-1
+            // right before S(m) needs it. Simplest: recompute F fully each
+            // m over budgets 0..m-1 — budget ≤ 64 keeps this trivial.
+            for b in 0..m {
+                for r in (0..rmax).rev() {
+                    let skip = f[b][r + 1];
+                    let mut best = skip;
+                    let mut best_m = 0usize;
+                    for take in 1..=b {
+                        let v = accept_by_rank[r] * s[take] + f[b - take][r + 1];
+                        if v > best + 1e-12 {
+                            best = v;
+                            best_m = take;
+                        }
+                    }
+                    f[b][r] = best;
+                    choice[b][r] = best_m;
+                }
+            }
+            s[m] = 1.0 + f[m - 1][0];
+        }
+        // Final forest table for the root with the full budget.
+        for r in (0..rmax).rev() {
+            let skip = f[budget][r + 1];
+            let mut best = skip;
+            let mut best_m = 0usize;
+            for take in 1..=budget {
+                let v = accept_by_rank[r] * s[take] + f[budget - take][r + 1];
+                if v > best + 1e-12 {
+                    best = v;
+                    best_m = take;
+                }
+            }
+            f[budget][r] = best;
+            choice[budget][r] = best_m;
+        }
+
+        // Reconstruct.
+        let mut shape = TreeShape { nodes: Vec::new() };
+        build_forest(&mut shape, 0, budget, 0, &choice, rmax);
+        shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Depth of shape node `id` (0 = root).
+    pub fn depth_of(&self, id: usize) -> usize {
+        let mut d = 0;
+        let mut cur = id;
+        while cur != 0 {
+            cur = self.nodes[cur - 1].parent;
+            d += 1;
+        }
+        d
+    }
+
+    pub fn max_depth(&self) -> usize {
+        (1..=self.nodes.len()).map(|i| self.depth_of(i)).max().unwrap_or(0)
+    }
+
+    /// Shape-node ids grouped by depth (1-based ids; level 0 = depth 1).
+    /// Engines materialise one level per drafter call.
+    pub fn levels(&self) -> Vec<Vec<usize>> {
+        let mut levels: Vec<Vec<usize>> = Vec::new();
+        for id in 1..=self.nodes.len() {
+            let d = self.depth_of(id);
+            if levels.len() < d {
+                levels.resize(d, Vec::new());
+            }
+            levels[d - 1].push(id);
+        }
+        levels
+    }
+
+    /// Expected accepted length of this shape under a rank-acceptance
+    /// model (used by tests and by the Fig. 11 theoretical comparison).
+    pub fn expected_aal(&self, accept_by_rank: &[f64]) -> f64 {
+        let mut path = vec![1.0f64]; // per shape id
+        let mut total = 1.0; // the root / bonus token
+        for (i, n) in self.nodes.iter().enumerate() {
+            let p_edge = accept_by_rank.get(n.rank).copied().unwrap_or(0.0);
+            let p = path[n.parent] * p_edge;
+            path.push(p);
+            let _ = i;
+            total += p;
+        }
+        total
+    }
+}
+
+/// Recursively appends the best forest under `parent` using `choice`.
+fn build_forest(
+    shape: &mut TreeShape,
+    parent: usize,
+    budget: usize,
+    rank: usize,
+    choice: &[Vec<usize>],
+    rmax: usize,
+) {
+    if budget == 0 || rank >= rmax {
+        return;
+    }
+    let take = choice[budget][rank];
+    if take > 0 {
+        shape.nodes.push(ShapeNode { parent, rank });
+        let id = shape.nodes.len();
+        // The child's subtree uses `take` nodes: itself + a (take-1) forest.
+        build_forest(shape, id, take - 1, 0, choice, rmax);
+        build_forest(shape, parent, budget - take, rank + 1, choice, rmax);
+    } else {
+        build_forest(shape, parent, budget, rank + 1, choice, rmax);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_is_a_chain() {
+        let s = TreeShape::sequence(4);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.max_depth(), 4);
+        assert_eq!(s.levels().iter().map(Vec::len).collect::<Vec<_>>(), vec![1, 1, 1, 1]);
+        assert!(s.nodes.iter().all(|n| n.rank == 0));
+    }
+
+    #[test]
+    fn k_ary_counts() {
+        let s = TreeShape::k_ary(3, 2, 100);
+        // depth1: 3 nodes, depth2: 9 nodes
+        assert_eq!(s.len(), 12);
+        let lv = s.levels();
+        assert_eq!(lv[0].len(), 3);
+        assert_eq!(lv[1].len(), 9);
+    }
+
+    #[test]
+    fn k_ary_budget_truncates() {
+        let s = TreeShape::k_ary(4, 8, 10);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn sequoia_degenerates_to_chain_when_only_rank0_accepts() {
+        let p = [0.8, 0.0, 0.0];
+        let s = TreeShape::sequoia(&p, 5);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.max_depth(), 5, "with p1=0 extra width is worthless: {:?}", s.nodes);
+        assert!(s.nodes.iter().all(|n| n.rank == 0));
+    }
+
+    #[test]
+    fn sequoia_widens_under_flat_acceptance() {
+        // rank-insensitive acceptance: width is as good as depth per node,
+        // but depth multiplies probabilities — optimal tree is bushy.
+        let p = [0.5, 0.5, 0.5, 0.5];
+        let s = TreeShape::sequoia(&p, 8);
+        assert_eq!(s.len(), 8);
+        assert!(s.max_depth() < 8, "flat acceptance must not give a chain");
+    }
+
+    #[test]
+    fn sequoia_beats_naive_shapes_on_its_own_model() {
+        let p = [0.7, 0.25, 0.08, 0.02];
+        let budget = 12;
+        let sq = TreeShape::sequoia(&p, budget);
+        let chain = TreeShape::sequence(budget);
+        let kary = TreeShape::k_ary(3, 3, budget);
+        let v = |s: &TreeShape| s.expected_aal(&p);
+        assert_eq!(sq.len(), budget);
+        assert!(v(&sq) >= v(&chain) - 1e-9, "{} vs chain {}", v(&sq), v(&chain));
+        assert!(v(&sq) >= v(&kary) - 1e-9, "{} vs kary {}", v(&sq), v(&kary));
+    }
+
+    #[test]
+    fn expected_aal_of_chain_is_geometric_sum() {
+        let s = TreeShape::sequence(3);
+        let aal = s.expected_aal(&[0.5]);
+        assert!((aal - (1.0 + 0.5 + 0.25 + 0.125)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn levels_cover_all_nodes_once() {
+        let p = [0.6, 0.3, 0.1];
+        let s = TreeShape::sequoia(&p, 20);
+        let mut seen: Vec<usize> = s.levels().concat();
+        seen.sort_unstable();
+        assert_eq!(seen, (1..=20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,192 @@
+//! In-tree micro-benchmark harness (the criterion substitute).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`] per case: adaptive iteration count to hit a target
+//! measurement time, warm-up, mean/median/p99 statistics and a compact
+//! report. Designed for the millisecond-scale model calls and the
+//! microsecond-scale tree ops this repo measures.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl CaseResult {
+    fn fmt_time(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.3} µs", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            Self::fmt_time(self.mean_s),
+            Self::fmt_time(self.median_s),
+            Self::fmt_time(self.p99_s),
+        )
+    }
+}
+
+pub struct Bench {
+    pub target_time: Duration,
+    pub warmup: Duration,
+    pub max_iters: usize,
+    pub results: Vec<CaseResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            target_time: Duration::from_secs(1),
+            warmup: Duration::from_millis(200),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI (`YGG_BENCH_QUICK=1`): shorter windows.
+    pub fn from_env() -> Self {
+        if std::env::var("YGG_BENCH_QUICK").is_ok() {
+            Self {
+                target_time: Duration::from_millis(200),
+                warmup: Duration::from_millis(50),
+                ..Self::default()
+            }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Runs one case; `f` is invoked repeatedly and must not be optimised
+    /// away (return something and let us black-box it).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &CaseResult {
+        // Warm-up + initial rate estimate.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > self.max_iters {
+                break;
+            }
+        }
+        let per_iter = w0.elapsed().as_secs_f64() / warm_iters as f64;
+        let n = ((self.target_time.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        // Measure in batches so Instant overhead stays negligible for
+        // nanosecond-scale bodies.
+        let batch = (n / 100).max(1);
+        let mut samples = Vec::with_capacity(n / batch + 1);
+        let mut done = 0;
+        while done < n {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            done += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pick = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+        let result = CaseResult {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            median_s: pick(0.5),
+            p99_s: pick(0.99),
+            min_s: samples[0],
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Writes all case results as CSV (used by the figure harness).
+    pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
+        let mut out = String::from("name,iters,mean_s,median_s,p99_s,min_s\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.name, r.iters, r.mean_s, r.median_s, r.p99_s, r.min_s
+            ));
+        }
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+/// Optimisation barrier (std::hint::black_box stabilised in 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let mut b = Bench {
+            target_time: Duration::from_millis(50),
+            warmup: Duration::from_millis(5),
+            ..Bench::default()
+        };
+        let r = b.run("sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean_s >= 0.0009, "mean {}", r.mean_s);
+        assert!(r.mean_s < 0.01);
+    }
+
+    #[test]
+    fn fast_bodies_get_many_iters() {
+        let mut b = Bench {
+            target_time: Duration::from_millis(20),
+            warmup: Duration::from_millis(5),
+            ..Bench::default()
+        };
+        let r = b.run("add", || 1u64.wrapping_add(2));
+        assert!(r.iters > 1000);
+    }
+
+    #[test]
+    fn csv_has_all_cases() {
+        let mut b = Bench {
+            target_time: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            ..Bench::default()
+        };
+        b.run("a", || 1);
+        b.run("b", || 2);
+        let p = std::env::temp_dir().join("ygg_bench_test.csv");
+        b.save_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.lines().count() == 3);
+    }
+}

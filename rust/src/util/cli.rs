@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (the in-tree clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and collects positional arguments. Unknown
+//! options are an error — typos should not silently run a 20-minute bench
+//! with default parameters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    /// Option names the caller declared (for unknown-option errors).
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parses `argv[1..]`. `known_opts` lists valid `--key value` names and
+    /// `known_flags` valid boolean `--flag` names.
+    pub fn parse(
+        argv: &[String],
+        known_opts: &[&str],
+        known_flags: &[&str],
+    ) -> crate::Result<Self> {
+        let mut out = Args::default();
+        out.known = known_opts.iter().map(|s| s.to_string()).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if known_flags.contains(&key.as_str()) {
+                    anyhow::ensure!(inline_val.is_none(), "flag --{key} takes no value");
+                    out.flags.push(key);
+                } else if known_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    anyhow::bail!("unknown option --{key}");
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> crate::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> crate::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be a number")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> crate::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_options_flags_positional() {
+        let a = Args::parse(
+            &argv(&["serve", "--addr", "1.2.3.4:5", "--stream", "extra"]),
+            &["addr"],
+            &["stream"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("addr"), Some("1.2.3.4:5"));
+        assert!(a.flag("stream"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv(&["x", "--n=5"]), &["n"], &[]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert!(Args::parse(&argv(&["--nope"]), &["yes"], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(Args::parse(&argv(&["--n"]), &["n"], &[]).is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(&argv(&[]), &["n"], &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("t", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn bad_typed_value_fails() {
+        let a = Args::parse(&argv(&["--n", "xyz"]), &["n"], &[]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,513 @@
+//! Minimal-but-complete JSON: a recursive-descent parser, a serializer and
+//! ergonomic accessors. Covers the full grammar (objects, arrays, strings
+//! with escapes incl. `\uXXXX`, numbers incl. exponents, bools, null);
+//! rejects trailing garbage and deeply-nested bombs. This is the only JSON
+//! implementation in the repository — the artifact manifest, prompt sets,
+//! latency profiles, predictor weights, configs and the server protocol all
+//! go through it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed JSON value. Object keys are ordered (BTreeMap) so serialization
+/// is deterministic — experiment outputs diff cleanly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------------------------------------------------- accessors
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Object member lookup that reports *which* key was missing.
+    pub fn req(&self, key: &str) -> crate::Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing JSON key '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> crate::Result<f64> {
+        self.req(key)?.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' not a number"))
+    }
+
+    pub fn usize(&self, key: &str) -> crate::Result<usize> {
+        self.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' not a non-negative integer"))
+    }
+
+    pub fn str(&self, key: &str) -> crate::Result<&str> {
+        self.req(key)?.as_str().ok_or_else(|| anyhow::anyhow!("'{key}' not a string"))
+    }
+
+    pub fn arr(&self, key: &str) -> crate::Result<&[Json]> {
+        self.req(key)?.as_arr().ok_or_else(|| anyhow::anyhow!("'{key}' not an array"))
+    }
+
+    /// Numeric vector helper (`[1, 2, 3]` → `Vec<f64>`).
+    pub fn f64_vec(&self, key: &str) -> crate::Result<Vec<f64>> {
+        self.arr(key)?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' has non-number")))
+            .collect()
+    }
+
+    pub fn usize_vec(&self, key: &str) -> crate::Result<Vec<usize>> {
+        self.arr(key)?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("'{key}' has non-integer")))
+            .collect()
+    }
+
+    // -------------------------------------------------------- constructors
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn from_f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    pub fn from_f64s(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn from_usizes(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    // -------------------------------------------------------- serialization
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else if x.is_finite() {
+                    // Round-trippable shortest float.
+                    let _ = write!(out, "{x:e}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- parsing
+
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.i == bytes.len(), "trailing garbage at byte {}", p.i);
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> crate::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> crate::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> crate::Result<()> {
+        anyhow::ensure!(self.peek()? == c, "expected '{}' at byte {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        anyhow::ensure!(self.depth < MAX_DEPTH, "nesting too deep");
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> crate::Result<Json> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "invalid literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> crate::Result<Json> {
+        self.eat(b'{')?;
+        self.depth += 1;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    break;
+                }
+                c => anyhow::bail!("expected ',' or '}}', got '{}' at {}", c as char, self.i),
+            }
+        }
+        self.depth -= 1;
+        Ok(Json::Obj(m))
+    }
+
+    fn array(&mut self) -> crate::Result<Json> {
+        self.eat(b'[')?;
+        self.depth += 1;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    break;
+                }
+                c => anyhow::bail!("expected ',' or ']', got '{}' at {}", c as char, self.i),
+            }
+        }
+        self.depth -= 1;
+        Ok(Json::Arr(v))
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            // Surrogate pair handling.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                self.eat(b'\\')?;
+                                self.eat(b'u')?;
+                                let lo = self.hex4()?;
+                                anyhow::ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "invalid low surrogate"
+                                );
+                                let c =
+                                    0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(c)
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            s.push(ch.ok_or_else(|| anyhow::anyhow!("bad codepoint"))?);
+                        }
+                        _ => anyhow::bail!("bad escape at byte {}", self.i - 1),
+                    }
+                }
+                _ => {
+                    // Re-borrow the raw bytes to keep UTF-8 intact.
+                    let start = self.i - 1;
+                    let mut end = self.i;
+                    while end < self.b.len() && self.b[end] != b'"' && self.b[end] != b'\\' {
+                        end += 1;
+                    }
+                    s.push_str(
+                        std::str::from_utf8(&self.b[start..end])
+                            .map_err(|_| anyhow::anyhow!("invalid utf-8 in string"))?,
+                    );
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+        self.i += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let x: f64 = s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid number '{s}' at byte {start}"))?;
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.f64_vec("a").is_err(), true); // heterogeneous
+        assert_eq!(v.str("c").unwrap(), "x");
+        let a = v.arr("a").unwrap();
+        assert_eq!(a[0].as_f64(), Some(1.0));
+        assert_eq!(a[2].get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let original = Json::Str("a\"b\\c\nd\te\u{0007}é☃".into());
+        let text = original.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), original);
+    }
+
+    #[test]
+    fn unicode_escape_and_surrogates() {
+        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        assert!(Json::parse(r#""\ud83d""#).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn rejects_nesting_bomb() {
+        let bomb = "[".repeat(300) + &"]".repeat(300);
+        assert!(Json::parse(&bomb).is_err());
+    }
+
+    #[test]
+    fn numbers_roundtrip() {
+        for x in [0.0, 1.0, -17.0, 0.25, 1e-9, 3.141592653589793, 1e15] {
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back, x, "via {s}");
+        }
+    }
+
+    #[test]
+    fn object_serialization_is_deterministic() {
+        let a = Json::obj(vec![("b", Json::Num(1.0)), ("a", Json::Num(2.0))]);
+        assert_eq!(a.to_string(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn helper_vectors() {
+        let v = Json::parse(r#"{"xs": [1, 2, 3]}"#).unwrap();
+        assert_eq!(v.f64_vec("xs").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(v.usize_vec("xs").unwrap(), vec![1, 2, 3]);
+        let bad = Json::parse(r#"{"xs": [1.5]}"#).unwrap();
+        assert!(bad.usize_vec("xs").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ygg_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.json");
+        let v = Json::obj(vec![("k", Json::from_f64s(&[1.0, 0.5]))]);
+        v.save(&p).unwrap();
+        assert_eq!(Json::parse_file(&p).unwrap(), v);
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Json::parse_file(p).unwrap();
+            assert_eq!(m.usize("format_version").unwrap(), 1);
+            assert!(m.req("models").unwrap().get("tgt-sm").is_some());
+        }
+    }
+}

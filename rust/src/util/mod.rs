@@ -1,0 +1,10 @@
+//! Self-contained substrates the repository implements instead of pulling
+//! dependencies: JSON ([`json`]), CLI parsing ([`cli`]), a benchmark
+//! statistics harness ([`benchkit`]) and a mini property-testing helper
+//! ([`prop`]). The build is fully offline (see Cargo.toml); everything a
+//! deployment needs ships in-tree.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,147 @@
+//! Mini property-testing harness (the in-tree proptest substitute).
+//!
+//! [`run_prop`] drives a property over `cases` seeded-random inputs; on
+//! failure it *shrinks* the failing seed's input via the caller-provided
+//! shrink function before reporting, and prints the seed so failures
+//! reproduce exactly. Used by the invariant tests on trees, pruning,
+//! scheduling and the kernel-shape sweeps.
+
+use crate::sampling::XorShiftRng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Seed overridable for reproduction: YGG_PROP_SEED=n cargo test
+        let seed = std::env::var("YGG_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases: 256, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Runs `property` on `cases` inputs drawn by `gen`. On failure, applies
+/// `shrink` (returning candidate smaller inputs) until no candidate fails,
+/// then panics with the minimal counterexample's Debug rendering.
+pub fn run_prop<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cfg: PropConfig,
+    mut gen: impl FnMut(&mut XorShiftRng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = XorShiftRng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut input = gen(&mut rng);
+        let Err(mut err) = property(&input) else { continue };
+        // Shrink.
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in shrink(&input) {
+                steps += 1;
+                if let Err(e) = property(&cand) {
+                    input = cand;
+                    err = e;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {:#x}):\n  error: {err}\n  minimal input: {input:?}",
+            cfg.seed
+        );
+    }
+}
+
+/// Shrinker for vectors: halves, removals and element-wise shrink.
+pub fn shrink_vec<T: Clone>(v: &[T], shrink_elem: impl Fn(&T) -> Option<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if !v.is_empty() {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        if v.len() > 1 {
+            let mut w = v.to_vec();
+            w.pop();
+            out.push(w);
+        }
+    }
+    for (i, x) in v.iter().enumerate() {
+        if let Some(s) = shrink_elem(x) {
+            let mut w = v.to_vec();
+            w[i] = s;
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Shrinker for usize toward a floor.
+pub fn shrink_usize(x: usize, floor: usize) -> Option<usize> {
+    (x > floor).then(|| floor + (x - floor) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        run_prop(
+            "sum-commutes",
+            PropConfig { cases: 64, ..Default::default() },
+            |rng| (rng.next_range(100), rng.next_range(100)),
+            |_| vec![],
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input")]
+    fn failing_property_reports_and_shrinks() {
+        run_prop(
+            "all-below-50",
+            PropConfig { cases: 64, seed: 1, ..Default::default() },
+            |rng| rng.next_range(100),
+            |&x| shrink_usize(x, 0).into_iter().collect(),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+    }
+
+    #[test]
+    fn shrink_usize_converges() {
+        let mut x = 100usize;
+        let mut guard = 0;
+        while let Some(y) = shrink_usize(x, 3) {
+            assert!(y < x && y >= 3);
+            x = y;
+            guard += 1;
+            assert!(guard < 20);
+        }
+        assert_eq!(x, 3);
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let v = vec![5usize, 6, 7, 8];
+        let cands = shrink_vec(&v, |&x| shrink_usize(x, 0));
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+        assert!(cands.iter().any(|c| c.len() == v.len()));
+    }
+}

@@ -1,0 +1,288 @@
+//! Property-based tests (in-tree prop harness, `util::prop`) over the
+//! pure-algorithm invariants: tree structure, EGT growth, the pruning DP,
+//! Sequoia construction, mask building, scheduling and the JSON substrate.
+//! Reproduce failures with `YGG_PROP_SEED=<seed> cargo test --test props`.
+
+use yggdrasil::pruning::SubtreeDp;
+use yggdrasil::sampling::XorShiftRng;
+use yggdrasil::scheduler::{plan_latency, search_best_plan, Plan, StageDurations};
+use yggdrasil::tree::{grow_step, Frontier, MaskBuilder, TokenTree, TreeShape};
+use yggdrasil::util::json::Json;
+use yggdrasil::util::prop::{run_prop, shrink_usize, PropConfig};
+
+/// Random tree generator: either EGT-grown or ad-hoc random attachment.
+fn random_tree(rng: &mut XorShiftRng) -> TokenTree {
+    let mut tree = TokenTree::new(rng.next_u64() as u32 % 1024);
+    if rng.next_f32() < 0.5 {
+        let depth = 1 + rng.next_range(6);
+        let width = 1 + rng.next_range(8);
+        let mut f = Frontier::new(depth);
+        fn mk(rng: &mut XorShiftRng) -> Vec<(u32, f32)> {
+            let k = 1 + rng.next_range(6);
+            let mut v: Vec<(u32, f32)> =
+                (0..k).map(|_| (rng.next_u64() as u32 % 1024, rng.next_f32())).collect();
+            v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            v
+        }
+        let c = mk(rng);
+        f.push_candidates(&tree, 0, c);
+        for _ in 0..depth {
+            let ids = grow_step(&mut tree, &mut f, width);
+            if ids.is_empty() {
+                break;
+            }
+            for id in ids {
+                let c = mk(rng);
+                f.push_candidates(&tree, id, c);
+            }
+        }
+    } else {
+        let n = rng.next_range(40);
+        for _ in 0..n {
+            let parent = rng.next_range(tree.len());
+            tree.add_node(parent, rng.next_u64() as u32 % 1024, rng.next_f32());
+        }
+    }
+    tree
+}
+
+#[test]
+fn prop_tree_invariants_hold() {
+    run_prop(
+        "tree-invariants",
+        PropConfig::default(),
+        |rng| random_tree(rng),
+        |_| vec![],
+        |t| t.check_invariants(),
+    );
+}
+
+#[test]
+fn prop_pruning_dp_selection_consistent() {
+    run_prop(
+        "pruning-dp",
+        PropConfig { cases: 128, ..Default::default() },
+        |rng| {
+            let t = random_tree(rng);
+            let budget = 1 + rng.next_range(t.len());
+            (t, budget)
+        },
+        |(t, b)| shrink_usize(*b, 1).map(|b2| (t.clone(), b2)).into_iter().collect(),
+        |(tree, budget)| {
+            let values: Vec<f64> = (0..tree.len()).map(|i| tree.path_prob(i) as f64).collect();
+            let dp = SubtreeDp::solve(tree, &values, *budget);
+            let keep = dp.select_at_most(tree, *budget);
+            if keep.len() > *budget || !keep.contains(&0) {
+                return Err(format!("bad keep set {keep:?} for budget {budget}"));
+            }
+            for &v in &keep {
+                if let Some(p) = tree.parent(v) {
+                    if !keep.contains(&p) {
+                        return Err(format!("node {v} kept without parent {p}"));
+                    }
+                }
+            }
+            let got: f64 = keep.iter().map(|&v| values[v]).sum();
+            let want = dp.value_at_most(*budget);
+            if (got - want).abs() > 1e-6 {
+                return Err(format!("selection value {got} != dp value {want}"));
+            }
+            if *budget > 1 && dp.value_at_most(*budget) + 1e-9 < dp.value_at_most(*budget - 1) {
+                return Err("value decreased with budget".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sequoia_dominates_chain_and_kary_under_its_model() {
+    run_prop(
+        "sequoia-optimal",
+        PropConfig { cases: 64, ..Default::default() },
+        |rng| {
+            let k = 2 + rng.next_range(6);
+            let mut p: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+            p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let s: f64 = p.iter().sum::<f64>().max(1.0);
+            let p: Vec<f64> = p.iter().map(|x| x / s).collect();
+            let budget = 1 + rng.next_range(32);
+            (p, budget)
+        },
+        |(p, b)| shrink_usize(*b, 1).map(|b2| (p.clone(), b2)).into_iter().collect(),
+        |(p, budget)| {
+            let sq = TreeShape::sequoia(p, *budget);
+            if sq.len() > *budget {
+                return Err(format!("sequoia used {} > budget {budget}", sq.len()));
+            }
+            let v = sq.expected_aal(p);
+            let chain = TreeShape::sequence(*budget).expected_aal(p);
+            let kary = TreeShape::k_ary(2, 8, *budget).expected_aal(p);
+            if v + 1e-9 < chain || v + 1e-9 < kary {
+                return Err(format!("sequoia {v} < chain {chain} / kary {kary}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mask_rows_visible_iff_prefix_or_ancestor() {
+    run_prop(
+        "mask-semantics",
+        PropConfig { cases: 96, ..Default::default() },
+        |rng| {
+            let t = random_tree(rng);
+            let committed = rng.next_range(64);
+            let seed = rng.next_u64();
+            (t, committed, seed)
+        },
+        |_| vec![],
+        |(tree, committed, seed)| {
+            let cap = 320usize;
+            let mut rng = XorShiftRng::new(*seed);
+            let mut mb = MaskBuilder::new(cap);
+            let mut prefix = Vec::new();
+            for _ in 0..*committed {
+                let s = 100 + rng.next_range(100) as u32;
+                if !prefix.contains(&s) {
+                    mb.commit_slot(s);
+                    prefix.push(s);
+                }
+            }
+            let slot_of: Vec<Option<u32>> = (0..tree.len()).map(|i| Some(i as u32)).collect();
+            let nodes: Vec<usize> = (0..tree.len()).collect();
+            let m = mb.build(tree, &nodes, &slot_of, tree.len()).to_vec();
+            for (row, &node) in nodes.iter().enumerate() {
+                let anc: Vec<usize> = tree.ancestors(node).collect();
+                for slot in 0..cap {
+                    let visible = m[row * cap + slot] > 0.0;
+                    let is_prefix = prefix.contains(&(slot as u32));
+                    let is_anc = slot < tree.len() && anc.contains(&slot);
+                    if visible != (is_prefix || is_anc) {
+                        return Err(format!(
+                            "node {node} slot {slot}: visible={visible}, prefix={is_prefix}, anc={is_anc}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_search_is_argmin() {
+    run_prop(
+        "plan-search",
+        PropConfig { cases: 256, ..Default::default() },
+        |rng| StageDurations {
+            head_draft: rng.next_f64() * 5e-3,
+            tree_draft: rng.next_f64() * 2e-2,
+            cpu_build: rng.next_f64() * 2e-3,
+            verify: rng.next_f64() * 2e-2,
+            tail_draft: rng.next_f64() * 5e-3,
+            accept: rng.next_f64() * 3e-3,
+            bookkeep: rng.next_f64() * 3e-3,
+            tail_hit_rate: rng.next_f64(),
+        },
+        |_| vec![],
+        |d| {
+            let (best, t) = search_best_plan(d);
+            for p in Plan::ALL {
+                if plan_latency(d, p) + 1e-15 < t {
+                    return Err(format!(
+                        "{} ({}) beats chosen {} ({t})",
+                        p.name(),
+                        plan_latency(d, p),
+                        best.name()
+                    ));
+                }
+            }
+            if !t.is_finite() || t <= 0.0 {
+                return Err(format!("degenerate latency {t}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut XorShiftRng, depth: usize) -> Json {
+        match if depth > 3 { rng.next_range(4) } else { rng.next_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f32() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 64.0 - 1e4),
+            3 => {
+                let n = rng.next_range(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| char::from_u32(0x20 + rng.next_range(0x250) as u32).unwrap_or('x'))
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.next_range(5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.next_range(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    run_prop(
+        "json-roundtrip",
+        PropConfig { cases: 256, ..Default::default() },
+        |rng| random_json(rng, 0),
+        |_| vec![],
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("parse failed: {e} on {text}"))?;
+            if &back != j {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_induced_subtree_preserves_probs() {
+    run_prop(
+        "induced-subtree",
+        PropConfig { cases: 96, ..Default::default() },
+        |rng| {
+            let t = random_tree(rng);
+            let mut keep = vec![0usize];
+            for v in 1..t.len() {
+                let p = t.parent(v).unwrap();
+                if keep.contains(&p) && rng.next_f32() < 0.7 {
+                    keep.push(v);
+                }
+            }
+            (t, keep)
+        },
+        |_| vec![],
+        |(t, keep)| {
+            let (sub, map) = t.induced_subtree(keep);
+            sub.check_invariants()?;
+            if sub.len() != keep.len() {
+                return Err(format!("size {} != keep {}", sub.len(), keep.len()));
+            }
+            for &old in keep {
+                let new = map[old].ok_or_else(|| format!("node {old} unmapped"))?;
+                if sub.token(new) != t.token(old) {
+                    return Err("token mismatch".into());
+                }
+                if (sub.path_prob(new) - t.path_prob(old)).abs() > 1e-5 {
+                    return Err(format!(
+                        "path prob mismatch at {old}: {} vs {}",
+                        sub.path_prob(new),
+                        t.path_prob(old)
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
