@@ -3,7 +3,9 @@
 //! artifacts, fires a batch of concurrent client requests from the bundled
 //! datasets, and reports per-request and aggregate latency/throughput —
 //! the serving-paper analog of "load a small real model and serve batched
-//! requests".
+//! requests". The continuous-serving scheduler interleaves up to
+//! `max_sessions` generations at verification-step granularity, so every
+//! client streams tokens every scheduling round.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_e2e
@@ -15,7 +17,7 @@ use yggdrasil::config::EngineConfig;
 use yggdrasil::corpus::PromptSet;
 use yggdrasil::engine::{profiling, SpecDecoder};
 use yggdrasil::runtime::Runtime;
-use yggdrasil::server::{Client, Server};
+use yggdrasil::server::{Client, ServeOpts, Server};
 
 fn main() -> yggdrasil::Result<()> {
     let artifacts = std::path::Path::new("artifacts");
@@ -33,7 +35,8 @@ fn main() -> yggdrasil::Result<()> {
         5,
     )?;
     let engine = SpecDecoder::new(&rt, EngineConfig::default(), lat, None);
-    let srv = Server::spawn("127.0.0.1:0", Box::new(engine), 64, true)?;
+    let opts = ServeOpts { max_queue: 64, max_sessions: 4, stream: true };
+    let srv = Server::spawn("127.0.0.1:0", Box::new(engine), opts)?;
     println!("server listening on {}", srv.addr);
 
     // Workload: prompts from all three datasets, round-robin.
@@ -44,28 +47,41 @@ fn main() -> yggdrasil::Result<()> {
     }
     prompts.truncate(n_requests);
 
-    // Fire concurrent clients (FCFS on the single-tenant engine).
+    // Fire concurrent clients (interleaved on the single-tenant engine).
     let t0 = Instant::now();
     let addr = srv.addr;
     let handles: Vec<_> = prompts
         .into_iter()
         .enumerate()
         .map(|(i, prompt)| {
-            std::thread::spawn(move || -> yggdrasil::Result<(usize, f64, usize, f64, f64)> {
-                let mut c = Client::connect(&addr)?;
-                let t = Instant::now();
-                let r = c.generate(i as u64, &prompt, max_new)?;
-                Ok((i, t.elapsed().as_secs_f64(), r.tokens.len(), r.aal, r.tpot_ms))
-            })
+            std::thread::spawn(
+                move || -> yggdrasil::Result<(usize, f64, usize, f64, f64, f64, f64)> {
+                    let mut c = Client::connect(&addr)?;
+                    let t = Instant::now();
+                    let r = c.generate(i as u64, &prompt, max_new)?;
+                    Ok((
+                        i,
+                        t.elapsed().as_secs_f64(),
+                        r.tokens.len(),
+                        r.aal,
+                        r.tpot_ms,
+                        r.ttft_ms,
+                        r.queue_ms,
+                    ))
+                },
+            )
         })
         .collect();
 
     let mut total_tokens = 0usize;
     let mut latencies = Vec::new();
-    println!("\n  req   e2e_ms  tokens    AAL   engine_tpot_ms");
+    println!("\n  req   e2e_ms  tokens    AAL   engine_tpot_ms  ttft_ms  queue_ms");
     for h in handles {
-        let (i, secs, tokens, aal, tpot_ms) = h.join().unwrap()?;
-        println!("  {i:>3} {:>8.1} {tokens:>7} {aal:>6.2} {tpot_ms:>15.2}", secs * 1e3);
+        let (i, secs, tokens, aal, tpot_ms, ttft_ms, queue_ms) = h.join().unwrap()?;
+        println!(
+            "  {i:>3} {:>8.1} {tokens:>7} {aal:>6.2} {tpot_ms:>15.2} {ttft_ms:>8.1} {queue_ms:>9.1}",
+            secs * 1e3
+        );
         total_tokens += tokens;
         latencies.push(secs);
     }
@@ -82,11 +98,11 @@ fn main() -> yggdrasil::Result<()> {
         p50 * 1e3,
         p99 * 1e3
     );
+    let snap = srv.stats.snapshot();
     println!(
-        "server stats: {} requests, {} tokens, {} errors",
-        srv.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
-        srv.stats.tokens.load(std::sync::atomic::Ordering::Relaxed),
-        srv.stats.errors.load(std::sync::atomic::Ordering::Relaxed)
+        "server stats: {} requests, {} tokens, {} errors, {} cancelled — queue mean {:.1} ms, ttft p50 {:.1} ms",
+        snap.requests, snap.tokens, snap.errors, snap.cancelled,
+        snap.queue_delay_ms_mean, snap.ttft_ms_p50
     );
     Ok(())
 }

@@ -1,10 +1,14 @@
 //! End-to-end engine benchmarks (one per paper-table engine): TPOT over a
-//! fixed prompt on the real artifacts. `YGG_BENCH_QUICK=1` shortens runs.
+//! fixed prompt on the real artifacts, plus a multi-client serving sweep
+//! (throughput vs per-request latency as concurrency grows) over the
+//! continuous-serving scheduler. `YGG_BENCH_QUICK=1` shortens runs.
 
 use yggdrasil::baselines::build_engine;
+use yggdrasil::config::EngineConfig;
 use yggdrasil::corpus::PromptSet;
-use yggdrasil::engine::profiling;
+use yggdrasil::engine::{profiling, Engine as _, SpecDecoder};
 use yggdrasil::runtime::Runtime;
+use yggdrasil::server::{client_wave, ServeOpts, Server};
 use yggdrasil::util::benchkit::Bench;
 
 fn main() {
@@ -35,4 +39,45 @@ fn main() {
         });
     }
     b.save_csv(std::path::Path::new("results/bench_engines.csv")).unwrap();
+
+    serving_sweep(&rt, &lat, &prompts, quick);
+}
+
+/// Multi-client throughput-vs-latency sweep: one continuous-serving
+/// server, waves of 1..=8 concurrent clients, reporting aggregate tok/s
+/// and mean end-to-end / first-token latency per wave.
+fn serving_sweep(
+    rt: &Runtime,
+    lat: &yggdrasil::objective::LatencyModel,
+    prompts: &PromptSet,
+    quick: bool,
+) {
+    let max_new = if quick { 12 } else { 24 };
+    let mut cfg = EngineConfig::default();
+    cfg.drafter = "dft-xs".into();
+    cfg.target = "tgt-sm".into();
+    cfg.use_depth_predictor = false;
+    let engine = SpecDecoder::new(rt, cfg, lat.clone(), None);
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(engine),
+        ServeOpts { max_queue: 64, max_sessions: 4, stream: true },
+    )
+    .unwrap();
+
+    let sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut csv = String::from("clients,tok_per_s,e2e_ms_mean,ttft_ms_mean,queue_ms_mean\n");
+    println!("\nserving sweep (max_sessions=4, {max_new} tokens/request)");
+    for &clients in sweep {
+        let w = client_wave(srv.addr, clients, &prompts.prompts, max_new).unwrap();
+        let row = format!(
+            "{clients},{:.1},{:.1},{:.1},{:.1}",
+            w.tok_per_s, w.e2e_ms_mean, w.ttft_ms_mean, w.queue_ms_mean
+        );
+        println!("  {row}");
+        csv.push_str(&row);
+        csv.push('\n');
+    }
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write("results/bench_serving.csv", csv).unwrap();
 }

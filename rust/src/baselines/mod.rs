@@ -4,11 +4,19 @@
 //! (see [`crate::config::EngineConfig`]); this module adds the
 //! non-speculative [`VanillaEngine`] floor and a factory that builds every
 //! engine of the paper's comparison matrix by name.
+//!
+//! Like the speculative engine, `VanillaEngine` is step-driven: one
+//! [`DecodeTask`] step decodes exactly one token, so vanilla baselines
+//! interleave under the multi-session server exactly like speculative
+//! sessions do and stay comparable in the serving benchmarks.
 
 use std::time::Instant;
 
 use crate::config::EngineConfig;
-use crate::engine::{Engine, Generation, SpecDecoder, Session};
+use crate::engine::{
+    drive, DecodeTask, Engine, Generation, Session, SpecDecoder, StepEngine, StepOutcome,
+    TaskState,
+};
 use crate::metrics::Recorder;
 use crate::objective::LatencyModel;
 use crate::runtime::Runtime;
@@ -31,6 +39,128 @@ impl VanillaEngine {
     }
 }
 
+/// One resumable vanilla generation: one token per `step()`.
+pub struct VanillaTask {
+    sess: Session,
+    state: TaskState,
+    prompt: Vec<u32>,
+    max_new: usize,
+    cur: u32,
+    pos: i32,
+    tokens: Vec<u32>,
+    rec: Recorder,
+    seconds: f64,
+    prefill_seconds: f64,
+}
+
+impl VanillaTask {
+    fn step_prefill(&mut self) -> crate::Result<StepOutcome> {
+        let prompt = std::mem::take(&mut self.prompt);
+        let t_prefill = Instant::now();
+        self.sess.prefill(&prompt)?;
+        self.prefill_seconds = t_prefill.elapsed().as_secs_f64();
+        self.cur = *self.sess.committed.last().unwrap();
+        self.pos = (self.sess.committed_len() - 1) as i32;
+        self.state = if self.max_new > 0 && self.sess.target.slots.free_count() > 1 {
+            TaskState::Iterate
+        } else {
+            TaskState::Done
+        };
+        Ok(StepOutcome { tokens: vec![], state: self.state })
+    }
+
+    fn step_iterate(&mut self) -> crate::Result<StepOutcome> {
+        let t_it = Instant::now();
+        let slot = self.sess.target.slots.alloc(1).unwrap()[0];
+        let tree = crate::tree::TokenTree::new(self.cur);
+        let mask = self
+            .sess
+            .target
+            .slots
+            .mask_builder()
+            .build(&tree, &[0], &[Some(slot)], 1)
+            .to_vec();
+        let req = self.sess.target.padded_request(
+            1,
+            &[self.cur],
+            &[self.pos],
+            &[slot],
+            &mask,
+            self.sess.exec_mode(),
+        );
+        let reply = self.sess.rt.forward(req)?;
+        self.rec.record("stage.iter", t_it.elapsed().as_secs_f64());
+        self.sess.target.slots.commit(slot);
+        let logits = &reply.logits[..self.sess.target.spec.vocab];
+        // Vanilla is greedy (the Eq. 2 reference uses greedy too).
+        let next = crate::sampling::argmax(logits) as u32;
+        self.tokens.push(next);
+        self.sess.committed.push(next);
+        self.cur = next;
+        self.pos += 1;
+        self.seconds += t_it.elapsed().as_secs_f64();
+        if self.tokens.len() >= self.max_new || self.sess.target.slots.free_count() <= 1 {
+            self.state = TaskState::Done;
+        }
+        Ok(StepOutcome { tokens: vec![next], state: self.state })
+    }
+}
+
+impl DecodeTask for VanillaTask {
+    fn state(&self) -> TaskState {
+        self.state
+    }
+
+    fn step(&mut self) -> crate::Result<StepOutcome> {
+        match self.state {
+            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
+            TaskState::Prefill => self.step_prefill(),
+            TaskState::Iterate => self.step_iterate(),
+        }
+    }
+
+    fn headroom(&self) -> usize {
+        self.sess.headroom(1)
+    }
+
+    fn kv_slots_in_use(&self) -> usize {
+        self.sess.drafter.slots.in_use() + self.sess.target.slots.in_use()
+    }
+
+    fn finish(self: Box<Self>) -> Generation {
+        let mut this = *self;
+        Generation {
+            iterations: this.tokens.len(),
+            tokens: std::mem::take(&mut this.tokens),
+            seconds: this.seconds,
+            prefill_seconds: this.prefill_seconds,
+            recorder: std::mem::take(&mut this.rec),
+        }
+    }
+}
+
+impl StepEngine for VanillaEngine {
+    fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        // A Session needs a drafter side; reuse the target as a stand-in
+        // (its cache stays untouched: we never call the drafter).
+        let sess =
+            Session::new(&self.rt, &self.target, &self.target, self.seed, self.compiled)?;
+        Ok(Box::new(VanillaTask {
+            sess,
+            state: TaskState::Prefill,
+            prompt: prompt.to_vec(),
+            max_new,
+            cur: 0,
+            pos: 0,
+            tokens: Vec::new(),
+            rec: Recorder::new(),
+            seconds: 0.0,
+            prefill_seconds: 0.0,
+        }))
+    }
+}
+
 impl Engine for VanillaEngine {
     fn name(&self) -> String {
         format!("vanilla[{}|{}]", self.target, if self.compiled { "compiled" } else { "eager" })
@@ -42,56 +172,8 @@ impl Engine for VanillaEngine {
         max_new: usize,
         sink: crate::engine::TokenSink,
     ) -> crate::Result<Generation> {
-        // A Session needs a drafter side; reuse the target as a stand-in
-        // (its cache stays untouched: we never call the drafter).
-        let mut sess = Session::new(&self.rt, &self.target, &self.target, self.seed, self.compiled)?;
-        let t_prefill = Instant::now();
-        sess.prefill(prompt)?;
-        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
-
-        let mut rec = Recorder::new();
-        let mut tokens = Vec::new();
-        let t0 = Instant::now();
-        let mut cur = *sess.committed.last().unwrap();
-        let mut pos = (sess.committed_len() - 1) as i32;
-        while tokens.len() < max_new && sess.target.slots.free_count() > 1 {
-            let slot = sess.target.slots.alloc(1).unwrap()[0];
-            let tree = crate::tree::TokenTree::new(cur);
-            let mask = sess
-                .target
-                .slots
-                .mask_builder()
-                .build(&tree, &[0], &[Some(slot)], 1)
-                .to_vec();
-            let req = sess
-                .target
-                .padded_request(1, &[cur], &[pos], &[slot], &mask, sess.exec_mode());
-            let t_it = Instant::now();
-            let reply = sess.rt.forward(req)?;
-            rec.record("stage.iter", t_it.elapsed().as_secs_f64());
-            sess.target.slots.commit(slot);
-            let logits = &reply.logits[..sess.target.spec.vocab];
-            let next = if self.seed == 0 && true {
-                // temperature handled by callers via seed/temp on SpecDecoder;
-                // vanilla is greedy (the Eq. 2 reference uses greedy too).
-                crate::sampling::argmax(logits) as u32
-            } else {
-                crate::sampling::argmax(logits) as u32
-            };
-            sink(&[next]);
-            tokens.push(next);
-            sess.committed.push(next);
-            cur = next;
-            pos += 1;
-        }
-        let seconds = t0.elapsed().as_secs_f64();
-        Ok(Generation {
-            iterations: tokens.len(),
-            tokens,
-            seconds,
-            prefill_seconds,
-            recorder: rec,
-        })
+        let task = self.begin(prompt, max_new)?;
+        drive(task, sink)
     }
 }
 

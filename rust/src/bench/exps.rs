@@ -335,7 +335,7 @@ pub fn fig12(lab: &mut Lab) -> crate::Result<()> {
     ] {
         let mut dec = lab.spec(cfg)?;
         if name.contains("predictor") {
-            dec.predictor = predictor.take();
+            dec.set_predictor(predictor.take());
         }
         let r = lab.run(&mut dec, "c4s", n, max_new)?;
         if name.contains("schedule") {
@@ -484,4 +484,40 @@ pub fn fig15(lab: &mut Lab) -> crate::Result<()> {
         }
     }
     lab.emit("fig15", &t)
+}
+
+/// Serving: throughput vs per-request latency as concurrent clients grow —
+/// the continuous multi-session scheduler's headline trade-off. One server
+/// (4 interleaved sessions max) absorbs each client wave; time-to-first-
+/// token and queueing delay come from the server's own `done` metrics.
+pub fn serving(lab: &mut Lab) -> crate::Result<()> {
+    use crate::server::{client_wave, ServeOpts, Server};
+
+    let max_new = lab.opts.max_new().min(24);
+    let mut cfg = EngineConfig::default();
+    cfg.drafter = "dft-xs".into();
+    cfg.target = "tgt-sm".into();
+    cfg.use_depth_predictor = false;
+    let engine = lab.spec(cfg)?;
+    let prompts = lab.prompts("c4s")?;
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(engine),
+        ServeOpts { max_queue: 64, max_sessions: 4, stream: true },
+    )?;
+    let mut t =
+        Table::new(&["clients", "tok_per_s", "e2e_ms_mean", "ttft_ms_mean", "queue_ms_mean"])
+            .with_title("Serving — throughput vs latency under concurrent clients (measured)");
+    let sweep: &[usize] = if lab.opts.quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &clients in sweep {
+        let w = client_wave(srv.addr, clients, &prompts.prompts, max_new)?;
+        t.row(&[
+            clients.to_string(),
+            format!("{:.1}", w.tok_per_s),
+            format!("{:.1}", w.e2e_ms_mean),
+            format!("{:.1}", w.ttft_ms_mean),
+            format!("{:.1}", w.queue_ms_mean),
+        ]);
+    }
+    lab.emit("serving", &t)
 }

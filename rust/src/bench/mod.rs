@@ -188,7 +188,7 @@ impl Lab {
         for p in ps.prompts.iter().take(n) {
             let _ = dec.generate(p, max_new)?;
         }
-        let ranks = dec.stats.accept_by_rank.clone();
+        let ranks = dec.stats().accept_by_rank;
         self.ranks.insert(key, ranks.clone());
         Ok(ranks)
     }
@@ -220,6 +220,7 @@ pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
     let mut lab = Lab::new(opts)?;
     let all = [
         "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+        "serving",
     ];
     let list: Vec<&str> = if name == "all" { all.to_vec() } else { vec![name] };
     for exp in list {
@@ -235,6 +236,7 @@ pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
             "fig13" => exps::fig13(&mut lab)?,
             "fig14" => exps::fig14(&mut lab)?,
             "fig15" => exps::fig15(&mut lab)?,
+            "serving" => exps::serving(&mut lab)?,
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
     }

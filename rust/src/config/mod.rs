@@ -209,13 +209,16 @@ impl Default for RuntimeConfig {
 pub struct ServerConfig {
     pub addr: String,
     pub max_queue: usize,
+    /// Concurrent decode sessions the continuous-serving scheduler
+    /// interleaves (admission beyond this queues; see `server::sessions`).
+    pub max_sessions: usize,
     /// Stream tokens as they are accepted (vs. one final response).
     pub stream: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7777".into(), max_queue: 256, stream: true }
+        Self { addr: "127.0.0.1:7777".into(), max_queue: 256, max_sessions: 4, stream: true }
     }
 }
 
@@ -371,6 +374,7 @@ impl AppConfig {
                 Json::obj(vec![
                     ("addr", Json::Str(self.server.addr.clone())),
                     ("max_queue", Json::Num(self.server.max_queue as f64)),
+                    ("max_sessions", Json::Num(self.server.max_sessions as f64)),
                     ("stream", Json::Bool(self.server.stream)),
                 ]),
             ),
@@ -399,6 +403,9 @@ impl AppConfig {
             }
             if let Some(q) = s.get("max_queue").and_then(|v| v.as_usize()) {
                 cfg.server.max_queue = q;
+            }
+            if let Some(m) = s.get("max_sessions").and_then(|v| v.as_usize()) {
+                cfg.server.max_sessions = m.max(1);
             }
             if let Some(b) = s.get("stream").and_then(|v| v.as_bool()) {
                 cfg.server.stream = b;
@@ -437,12 +444,14 @@ mod tests {
         cfg.engine.max_depth = 11;
         cfg.engine.sampling.temperature = 0.75;
         cfg.server.stream = false;
+        cfg.server.max_sessions = 9;
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
         assert_eq!(back.engine.tree, TreeStructure::Sequoia);
         assert_eq!(back.engine.max_depth, 11);
         assert!((back.engine.sampling.temperature - 0.75).abs() < 1e-6);
         assert!(!back.server.stream);
+        assert_eq!(back.server.max_sessions, 9);
     }
 
     #[test]

@@ -10,14 +10,24 @@
 //!
 //! [`crate::baselines::VanillaEngine`] provides the non-speculative
 //! autoregressive floor.
+//!
+//! Both engines expose two equivalent interfaces: the blocking
+//! [`Engine::generate_with`] loop, and the resumable step-driven form in
+//! [`task`] — [`StepEngine::begin`] opens a [`DecodeTask`] whose
+//! [`DecodeTask::step`] runs exactly one verification iteration. The
+//! blocking form is implemented as a driver over `step()`
+//! ([`task::drive`]), and the server (`crate::server`) round-robins
+//! `step()` across many concurrent tasks (continuous serving).
 
 pub mod profiling;
 pub mod session;
 pub mod spec;
+pub mod task;
 
 pub use profiling::profile_latency_model;
 pub use session::Session;
 pub use spec::SpecDecoder;
+pub use task::{drive, DecodeTask, StepEngine, StepOutcome, TaskState};
 
 use crate::metrics::Recorder;
 

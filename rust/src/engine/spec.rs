@@ -19,10 +19,25 @@
 //!   └ AOT head draft (bonus token)       drafter w1   (overlaps bookkeeping)
 //! bookkeeping (commit/free slots, stats) CPU
 //! ```
+//!
+//! ## Step-driven decomposition
+//!
+//! The iteration above is the body of [`SpecTask::step`]: a generation is
+//! a resumable [`DecodeTask`] (`Prefill → Iterate → Done`) rather than a
+//! blocking loop, so the server can interleave many sessions on one
+//! device. Per-generation state (KV [`Session`], recorder, depth hints,
+//! the scheduling [`Plan`] snapshot) lives on the task; the online
+//! adaptive state every generation feeds and reads — acceptance
+//! statistics, the latency model's measured CPU term, the AOT-tail hit
+//! rate, the profile-searched plan, depth-predictor training samples —
+//! lives in [`SpecShared`] behind the engine's `Arc<Mutex<_>>`, shared by
+//! all concurrent tasks. [`SpecDecoder`] itself is just configuration +
+//! that shared state; `generate_with` drives one task to completion.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::config::{width_for, EngineConfig, TreeStructure};
+use crate::config::{width_for, EngineConfig, SchedulePlan, TreeStructure};
 use crate::metrics::Recorder;
 use crate::objective::{select_draft_width, AcceptanceStats, LatencyModel};
 use crate::predictor::DepthPredictor;
@@ -35,6 +50,7 @@ use crate::scheduler::{self, Plan, StageDurations};
 use crate::tree::{grow_step, Frontier, NodeId, TokenTree, TreeShape};
 
 use super::session::Session;
+use super::task::{self, DecodeTask, StepEngine, StepOutcome, TaskState};
 use super::Generation;
 
 /// A head draft issued ahead of time (or satisfied by a tail-draft hit).
@@ -88,24 +104,57 @@ impl IterState {
     }
 }
 
-/// The speculative decoding engine.
-pub struct SpecDecoder {
-    rt: Runtime,
-    pub cfg: EngineConfig,
-    pub lat: LatencyModel,
-    pub stats: AcceptanceStats,
-    pub predictor: Option<DepthPredictor>,
+/// Candidate children of a node from its drafter logits: top-k at T = 0,
+/// i.i.d. samples (deduped, q-sorted) at T > 0 — the latter is what the
+/// stochastic acceptance rule's lossless guarantee expects.
+fn candidates(temp: f32, logits: &[f32], k: usize, rng: &mut XorShiftRng) -> Vec<(u32, f32)> {
+    if temp == 0.0 {
+        let mut probs = logits.to_vec();
+        softmax_inplace(&mut probs, 1.0);
+        return top_k(&probs, k).into_iter().map(|(i, p)| (i as u32, p)).collect();
+    }
+    let mut probs = logits.to_vec();
+    softmax_inplace(&mut probs, temp);
+    let mut out: Vec<(u32, f32)> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let t = categorical(&probs, rng) as u32;
+        if !out.iter().any(|&(x, _)| x == t) {
+            out.push((t, probs[t as usize]));
+        }
+    }
+    out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    out
+}
+
+fn temp_probs(temp: f32, logits: &[f32]) -> Vec<f32> {
+    let mut p = logits.to_vec();
+    softmax_inplace(&mut p, temp.max(1e-6));
+    p
+}
+
+/// Online adaptive state shared by every task of one engine: what one
+/// generation measures, the next (possibly concurrent) generation uses.
+struct SpecShared {
+    lat: LatencyModel,
+    stats: AcceptanceStats,
+    /// The currently preferred execution plan (updated by per-session
+    /// profile-guided search at each generation's end).
     plan: Plan,
     /// EWMA of the AOT-tail hit rate (next head token pre-drafted).
     tail_hit_rate: f64,
     /// Cached Sequoia shape per (budget, stats-epoch).
     sequoia_cache: Option<(usize, TreeShape)>,
-    /// Depth predicted for the next iteration (from the last verify's
-    /// hidden state).
-    depth_hint: Option<usize>,
     /// (hidden state, accepted count of the *following* iteration) pairs —
     /// the depth predictor's training data.
     depth_samples: Vec<(Vec<f32>, usize)>,
+    predictor: Option<DepthPredictor>,
+}
+
+/// The speculative decoding engine.
+pub struct SpecDecoder {
+    rt: Runtime,
+    pub cfg: EngineConfig,
+    shared: Arc<Mutex<SpecShared>>,
     label: String,
 }
 
@@ -142,80 +191,99 @@ impl SpecDecoder {
         Self {
             rt: rt.clone(),
             cfg,
-            lat,
-            stats: AcceptanceStats::default(),
-            predictor,
-            plan,
-            tail_hit_rate: 0.3,
-            sequoia_cache: None,
-            depth_hint: None,
-            depth_samples: Vec::new(),
+            shared: Arc::new(Mutex::new(SpecShared {
+                lat,
+                stats: AcceptanceStats::default(),
+                plan,
+                tail_hit_rate: 0.3,
+                sequoia_cache: None,
+                depth_samples: Vec::new(),
+                predictor,
+            })),
             label,
         }
     }
 
+    /// The execution plan new tasks will snapshot.
     pub fn plan(&self) -> Plan {
-        self.plan
+        self.shared.lock().unwrap().plan
+    }
+
+    /// Snapshot of the online acceptance statistics.
+    pub fn stats(&self) -> AcceptanceStats {
+        self.shared.lock().unwrap().stats.clone()
+    }
+
+    /// Snapshot of the latency model (including the measured CPU term).
+    pub fn latency_model(&self) -> LatencyModel {
+        self.shared.lock().unwrap().lat.clone()
+    }
+
+    /// Installs (or clears) the trained depth predictor.
+    pub fn set_predictor(&mut self, predictor: Option<DepthPredictor>) {
+        self.shared.lock().unwrap().predictor = predictor;
     }
 
     /// Re-runs the profile-guided plan search with *measured* stage
-    /// durations from `rec` (call after a calibration generation).
+    /// durations from `rec` (tasks do this automatically at finish; this
+    /// entry point exists for explicit calibration runs).
     pub fn research_plan(&mut self, rec: &Recorder) {
-        if self.cfg.schedule != crate::config::SchedulePlan::ProfileSearch {
+        if self.cfg.schedule != SchedulePlan::ProfileSearch {
             return;
         }
-        let d = StageDurations {
-            head_draft: rec.mean("stage.head_draft").max(1e-6),
-            tree_draft: rec.mean("stage.tree_draft").max(1e-6),
-            cpu_build: rec.mean("stage.cpu_build").max(1e-7),
-            verify: rec.mean("stage.verify").max(1e-6),
-            tail_draft: rec.mean("stage.tail_draft").max(1e-6),
-            accept: rec.mean("stage.accept").max(1e-7),
-            bookkeep: rec.mean("stage.bookkeep").max(1e-7),
-            tail_hit_rate: self.tail_hit_rate,
-        };
-        let (plan, _) = scheduler::search_best_plan(&d);
-        self.plan = plan;
+        let mut sh = self.shared.lock().unwrap();
+        let d = StageDurations::from_recorder(rec, sh.tail_hit_rate);
+        sh.plan = scheduler::search_best_plan(&d).0;
     }
 
+    /// Collected depth-predictor training samples: hidden state paired
+    /// with the *next* iteration's accepted count.
+    pub fn take_depth_samples(&mut self) -> Vec<(Vec<f32>, usize)> {
+        std::mem::take(&mut self.shared.lock().unwrap().depth_samples)
+    }
+}
+
+/// One resumable speculative generation (the [`DecodeTask`] of
+/// [`SpecDecoder`]). Owns the KV [`Session`] for both model sides, so
+/// dropping the task frees its cache state immediately.
+pub struct SpecTask {
+    rt: Runtime,
+    cfg: EngineConfig,
+    shared: Arc<Mutex<SpecShared>>,
+    sess: Session,
+    state: TaskState,
+    prompt: Vec<u32>,
+    max_new: usize,
+    /// Keep enough headroom for one full tree + tail + bonus chain.
+    tree_budget: usize,
+    /// Per-session plan snapshot: a concurrent session finishing (and
+    /// re-searching the shared plan) never changes this task mid-flight.
+    plan: Plan,
+    head: Option<PendingHead>,
+    /// Depth predicted for the next iteration (from the last verify's
+    /// hidden state).
+    depth_hint: Option<usize>,
+    /// The context embedding that *preceded* each iteration (predictor
+    /// training pairs it with that iteration's accepted count).
+    prev_hidden: Option<Vec<f32>>,
+    rec: Recorder,
+    tokens: Vec<u32>,
+    iterations: usize,
+    /// Accumulated decode seconds (sum of step wall times; excludes
+    /// prefill, excludes time the task spends parked between steps).
+    seconds: f64,
+    prefill_seconds: f64,
+}
+
+impl SpecTask {
     // ------------------------------------------------------------------
     // Drafting
     // ------------------------------------------------------------------
-
-    /// Candidate children of a node from its drafter logits: top-k at
-    /// T = 0, i.i.d. samples (deduped, q-sorted) at T > 0 — the latter is
-    /// what the stochastic acceptance rule's lossless guarantee expects.
-    fn candidates(&self, logits: &[f32], k: usize, rng: &mut XorShiftRng) -> Vec<(u32, f32)> {
-        let temp = self.cfg.sampling.temperature;
-        if temp == 0.0 {
-            let mut probs = logits.to_vec();
-            softmax_inplace(&mut probs, 1.0);
-            return top_k(&probs, k).into_iter().map(|(i, p)| (i as u32, p)).collect();
-        }
-        let mut probs = logits.to_vec();
-        softmax_inplace(&mut probs, temp);
-        let mut out: Vec<(u32, f32)> = Vec::with_capacity(k);
-        for _ in 0..k {
-            let t = categorical(&probs, rng) as u32;
-            if !out.iter().any(|&(x, _)| x == t) {
-                out.push((t, probs[t as usize]));
-            }
-        }
-        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        out
-    }
-
-    fn temp_probs(&self, logits: &[f32]) -> Vec<f32> {
-        let mut p = logits.to_vec();
-        softmax_inplace(&mut p, self.cfg.sampling.temperature.max(1e-6));
-        p
-    }
 
     /// Evaluates `nodes` (all newly added, same growth step) through the
     /// drafter. Fills slots/cands/dists.
     fn draft_nodes(
         &mut self,
-        sess: &mut Session,
         st: &mut IterState,
         nodes: &[NodeId],
         root_pos: i32,
@@ -224,7 +292,7 @@ impl SpecDecoder {
         let Some(width) = width_for(n) else {
             anyhow::bail!("draft step of {n} tokens exceeds compiled widths")
         };
-        let Some(slots) = sess.drafter.slots.alloc(n) else {
+        let Some(slots) = self.sess.drafter.slots.alloc(n) else {
             return Ok(false); // cache exhausted — caller stops growth
         };
         for (i, &node) in nodes.iter().enumerate() {
@@ -233,24 +301,32 @@ impl SpecDecoder {
         let tokens: Vec<u32> = nodes.iter().map(|&id| st.tree.token(id)).collect();
         let positions: Vec<i32> =
             nodes.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
-        let mask = sess
+        let mask = self
+            .sess
             .drafter
             .slots
             .mask_builder()
             .build(&st.tree, nodes, &st.dslots, width)
             .to_vec();
-        let req =
-            sess.drafter
-                .padded_request(width, &tokens, &positions, &slots, &mask, sess.exec_mode());
+        let req = self.sess.drafter.padded_request(
+            width,
+            &tokens,
+            &positions,
+            &slots,
+            &mask,
+            self.sess.exec_mode(),
+        );
         let reply = self.rt.forward(req)?;
-        let vocab = sess.drafter.spec.vocab;
-        let keep_dist = self.cfg.sampling.temperature > 0.0;
+        let vocab = self.sess.drafter.spec.vocab;
+        let temp = self.cfg.sampling.temperature;
+        let keep_dist = temp > 0.0;
         for (i, &node) in nodes.iter().enumerate() {
             let row = &reply.logits[i * vocab..(i + 1) * vocab];
-            let cands = self.candidates(row, self.cfg.branch_candidates, &mut sess.rng);
+            let cands =
+                candidates(temp, row, self.cfg.branch_candidates, &mut self.sess.rng);
             st.cands[node] = Some(cands);
             if keep_dist {
-                st.dists[node] = Some(self.temp_probs(row));
+                st.dists[node] = Some(temp_probs(temp, row));
             }
         }
         Ok(true)
@@ -260,7 +336,7 @@ impl SpecDecoder {
     /// Returns the per-step drafter widths (for the Eq. 3 denominator).
     fn build_tree(
         &mut self,
-        sess: &mut Session,
+        sh: &mut SpecShared,
         st: &mut IterState,
         depth: usize,
         width: usize,
@@ -292,7 +368,7 @@ impl SpecDecoder {
                         break;
                     }
                     st.push_nodes(st.tree.len() - before);
-                    if !self.draft_nodes(sess, st, &ids, root_pos)? {
+                    if !self.draft_nodes(st, &ids, root_pos)? {
                         break;
                     }
                     draft_widths.push(width_for(ids.len()).unwrap_or(64));
@@ -303,7 +379,7 @@ impl SpecDecoder {
                 }
             }
             _ => {
-                let shape = self.static_shape();
+                let shape = self.static_shape(sh);
                 // Map shape ids (0 = root) to tree node ids.
                 let mut node_of: Vec<Option<NodeId>> = vec![None; shape.len() + 1];
                 node_of[0] = Some(0);
@@ -323,7 +399,7 @@ impl SpecDecoder {
                     if new_nodes.is_empty() {
                         break;
                     }
-                    if !self.draft_nodes(sess, st, &new_nodes, root_pos)? {
+                    if !self.draft_nodes(st, &new_nodes, root_pos)? {
                         break;
                     }
                     draft_widths.push(width_for(new_nodes.len()).unwrap_or(64));
@@ -334,7 +410,7 @@ impl SpecDecoder {
     }
 
     /// The static shape for the configured baseline structure.
-    fn static_shape(&mut self) -> TreeShape {
+    fn static_shape(&mut self, sh: &mut SpecShared) -> TreeShape {
         let budget = self.cfg.max_verify.min(64).saturating_sub(1).max(1);
         match self.cfg.tree {
             TreeStructure::Sequence => TreeShape::sequence(self.cfg.max_depth.min(budget)),
@@ -342,13 +418,13 @@ impl SpecDecoder {
                 TreeShape::k_ary(self.cfg.max_width, self.cfg.max_depth, budget)
             }
             TreeStructure::Sequoia => {
-                if let Some((b, shape)) = &self.sequoia_cache {
+                if let Some((b, shape)) = &sh.sequoia_cache {
                     if *b == budget {
                         return shape.clone();
                     }
                 }
-                let shape = TreeShape::sequoia(&self.stats.accept_by_rank, budget);
-                self.sequoia_cache = Some((budget, shape.clone()));
+                let shape = TreeShape::sequoia(&sh.stats.accept_by_rank, budget);
+                sh.sequoia_cache = Some((budget, shape.clone()));
                 shape
             }
             TreeStructure::Egt => unreachable!("EGT has no static shape"),
@@ -364,13 +440,13 @@ impl SpecDecoder {
     #[allow(clippy::too_many_lines)]
     fn iteration(
         &mut self,
-        sess: &mut Session,
         head: PendingHead,
-        rec: &mut Recorder,
+        sh: &mut SpecShared,
     ) -> crate::Result<(Vec<u32>, Option<PendingHead>, Vec<f32>)> {
-        let root_pos = (sess.committed_len() - 1) as i32;
-        let root_token = *sess.committed.last().unwrap();
+        let root_pos = (self.sess.committed_len() - 1) as i32;
+        let root_token = *self.sess.committed.last().unwrap();
         debug_assert_eq!(head.token, root_token);
+        let temp = self.cfg.sampling.temperature;
 
         // -------- head draft (possibly already satisfied) ----------------
         let t0 = Instant::now();
@@ -378,18 +454,23 @@ impl SpecDecoder {
             (Some(r), _) => r.logits,
             (None, Some(p)) => {
                 let reply = p.wait()?;
-                let v = sess.drafter.spec.vocab;
+                let v = self.sess.drafter.spec.vocab;
                 reply.logits[..v].to_vec()
             }
             (None, None) => unreachable!("head draft neither pending nor ready"),
         };
-        rec.record("stage.head_draft", t0.elapsed().as_secs_f64());
+        self.rec.record("stage.head_draft", t0.elapsed().as_secs_f64());
 
         let mut st = IterState::new(root_token);
         st.dslots[0] = Some(head.slot);
-        st.cands[0] = Some(self.candidates(&head_logits, self.cfg.branch_candidates, &mut sess.rng));
-        if self.cfg.sampling.temperature > 0.0 {
-            st.dists[0] = Some(self.temp_probs(&head_logits));
+        st.cands[0] = Some(candidates(
+            temp,
+            &head_logits,
+            self.cfg.branch_candidates,
+            &mut self.sess.rng,
+        ));
+        if temp > 0.0 {
+            st.dists[0] = Some(temp_probs(temp, &head_logits));
         }
 
         // -------- depth / width decisions (O1 + O5) ----------------------
@@ -400,13 +481,14 @@ impl SpecDecoder {
         // maximal envelope, reproducing prior work's behaviour.
         let (depth, width) = match self.cfg.tree {
             TreeStructure::Egt => {
-                let hinted = self.cfg.use_depth_predictor.then(|| self.depth_hint.take()).flatten();
+                let hinted =
+                    self.cfg.use_depth_predictor.then(|| self.depth_hint.take()).flatten();
                 match hinted {
                     Some(d) => {
                         let d = d.clamp(1, self.cfg.max_depth);
                         let w = select_draft_width(
-                            &self.stats,
-                            &self.lat,
+                            &sh.stats,
+                            &sh.lat,
                             self.cfg.objective,
                             d,
                             self.cfg.max_width,
@@ -415,8 +497,8 @@ impl SpecDecoder {
                         (d, w)
                     }
                     None => crate::objective::select_depth_width(
-                        &self.stats,
-                        &self.lat,
+                        &sh.stats,
+                        &sh.lat,
                         self.cfg.objective,
                         self.cfg.max_depth,
                         self.cfg.max_width,
@@ -426,30 +508,30 @@ impl SpecDecoder {
             }
             _ => (self.cfg.max_depth, self.cfg.max_width),
         };
-        rec.record("depth", depth as f64);
-        rec.record("width", width as f64);
+        self.rec.record("depth", depth as f64);
+        self.rec.record("width", width as f64);
 
         // -------- tree drafting ------------------------------------------
         let t0 = Instant::now();
-        let draft_widths = self.build_tree(sess, &mut st, depth, width, root_pos)?;
-        rec.record("stage.tree_draft", t0.elapsed().as_secs_f64());
-        rec.record("tree_size", st.tree.len() as f64);
+        let draft_widths = self.build_tree(sh, &mut st, depth, width, root_pos)?;
+        self.rec.record("stage.tree_draft", t0.elapsed().as_secs_f64());
+        self.rec.record("tree_size", st.tree.len() as f64);
 
         // -------- pruning (O3) -------------------------------------------
         let t0 = Instant::now();
         let (keep, w_verify) = if self.cfg.prune && st.tree.len() > 2 {
-            prune_for_objective(&st.tree, &self.lat, &draft_widths, self.cfg.max_verify)
+            prune_for_objective(&st.tree, &sh.lat, &draft_widths, self.cfg.max_verify)
         } else {
             let keep: Vec<NodeId> = (0..st.tree.len()).collect();
             let w = width_for(keep.len())
                 .ok_or_else(|| anyhow::anyhow!("tree of {} nodes unverifiable", keep.len()))?;
             (keep, w)
         };
-        rec.record("stage.cpu_build", t0.elapsed().as_secs_f64());
-        rec.record("w_verify", w_verify as f64);
+        self.rec.record("stage.cpu_build", t0.elapsed().as_secs_f64());
+        self.rec.record("w_verify", w_verify as f64);
 
         // -------- verification -------------------------------------------
-        let Some(vslots) = sess.target.slots.alloc(keep.len()) else {
+        let Some(vslots) = self.sess.target.slots.alloc(keep.len()) else {
             anyhow::bail!("verifier cache exhausted")
         };
         for (i, &node) in keep.iter().enumerate() {
@@ -458,19 +540,20 @@ impl SpecDecoder {
         let vtokens: Vec<u32> = keep.iter().map(|&id| st.tree.token(id)).collect();
         let vpositions: Vec<i32> =
             keep.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
-        let vmask = sess
+        let vmask = self
+            .sess
             .target
             .slots
             .mask_builder()
             .build(&st.tree, &keep, &st.vslots, w_verify)
             .to_vec();
-        let vreq = sess.target.padded_request(
+        let vreq = self.sess.target.padded_request(
             w_verify,
             &vtokens,
             &vpositions,
             &vslots,
             &vmask,
-            sess.exec_mode(),
+            self.sess.exec_mode(),
         );
         let t0 = Instant::now();
         let verify_pending = self.rt.submit(vreq)?;
@@ -500,7 +583,7 @@ impl SpecDecoder {
                 .take(t_width)
                 .collect();
             if !picks.is_empty() {
-                if let Some(slots) = sess.drafter.slots.alloc(picks.len()) {
+                if let Some(slots) = self.sess.drafter.slots.alloc(picks.len()) {
                     let mut tokens = Vec::new();
                     let mut positions = Vec::new();
                     let mut dsl = st.dslots.clone();
@@ -518,33 +601,34 @@ impl SpecDecoder {
                         tail.push((leaf, tok, slots[i]));
                     }
                     let width = width_for(picks.len()).unwrap();
-                    let mask = sess
+                    let mask = self
+                        .sess
                         .drafter
                         .slots
                         .mask_builder()
                         .build(&tmp_tree, &nodes, &dsl, width)
                         .to_vec();
-                    let req = sess.drafter.padded_request(
+                    let req = self.sess.drafter.padded_request(
                         width,
                         &tokens,
                         &positions,
                         &slots,
                         &mask,
-                        sess.exec_mode(),
+                        self.sess.exec_mode(),
                     );
                     tail_pending = Some(self.rt.submit(req)?);
                 }
             }
-            rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
+            self.rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
         }
 
         let vreply = verify_pending.wait()?;
-        rec.record("stage.verify", t0.elapsed().as_secs_f64());
-        rec.record("stage.verify_exec", vreply.exec_seconds);
+        self.rec.record("stage.verify", t0.elapsed().as_secs_f64());
+        self.rec.record("stage.verify_exec", vreply.exec_seconds);
 
         // -------- acceptance walk ----------------------------------------
         let t0 = Instant::now();
-        let vocab = sess.target.spec.vocab;
+        let vocab = self.sess.target.spec.vocab;
         let row_of = |node: NodeId| -> usize { keep.iter().position(|&k| k == node).unwrap() };
         let mut accepted_path: Vec<NodeId> = vec![0];
         let mut cur = 0usize;
@@ -560,25 +644,27 @@ impl SpecDecoder {
                 .filter(|c| keep.contains(c))
                 .collect();
             let kid_tokens: Vec<u32> = kids.iter().map(|&k| st.tree.token(k)).collect();
-            let outcome = if self.cfg.sampling.temperature == 0.0 {
+            let outcome = if temp == 0.0 {
                 let (o, truth) = crate::sampling::greedy_accept(row, &kid_tokens);
                 // Rank bookkeeping for Sequoia / Fig. 11.
                 let rank = st.cands[cur]
                     .as_ref()
                     .and_then(|c| c.iter().position(|&(t, _)| t == truth));
-                self.stats.record_rank(rank);
+                sh.stats.record_rank(rank);
                 o
             } else {
-                let p = self.temp_probs(row);
-                let q = st.dists[cur].clone().unwrap_or_else(|| vec![1.0 / vocab as f32; vocab]);
-                let o = stochastic_accept(&p, &q, &kid_tokens, &mut sess.rng);
+                let p = temp_probs(temp, row);
+                let q = st.dists[cur]
+                    .clone()
+                    .unwrap_or_else(|| vec![1.0 / vocab as f32; vocab]);
+                let o = stochastic_accept(&p, &q, &kid_tokens, &mut self.sess.rng);
                 if let AcceptOutcome::Child(i) = o {
                     let rank = st.cands[cur]
                         .as_ref()
                         .and_then(|c| c.iter().position(|&(t, _)| t == kid_tokens[i]));
-                    self.stats.record_rank(rank);
+                    sh.stats.record_rank(rank);
                 } else {
-                    self.stats.record_rank(None);
+                    sh.stats.record_rank(None);
                 }
                 o
             };
@@ -594,23 +680,23 @@ impl SpecDecoder {
             }
         }
         let accepted_draft = accepted_path.len() - 1; // excludes root
-        rec.record("stage.accept", t0.elapsed().as_secs_f64());
-        rec.record("accepted", (accepted_draft + 1) as f64);
+        self.rec.record("stage.accept", t0.elapsed().as_secs_f64());
+        self.rec.record("accepted", (accepted_draft + 1) as f64);
 
         // Coverage stats for the width selector: growth step d covered the
         // true continuation iff the walk descended at least d times.
         let steps_grown = draft_widths.len();
         for d in 1..=steps_grown {
-            self.stats.record_step(width, d <= accepted_draft);
+            sh.stats.record_step(width, d <= accepted_draft);
         }
 
         // Depth-predictor hint for the next iteration, from the hidden
         // state at the deepest accepted node (the bonus context).
-        let d_model = sess.target.spec.d_model;
+        let d_model = self.sess.target.spec.d_model;
         let hid_row = row_of(cur);
         let hidden = vreply.hidden[hid_row * d_model..(hid_row + 1) * d_model].to_vec();
         if self.cfg.use_depth_predictor {
-            if let Some(p) = &self.predictor {
+            if let Some(p) = &sh.predictor {
                 if p.input_dim == d_model {
                     self.depth_hint = Some(p.predict_depth(&hidden, 0.45));
                 }
@@ -624,20 +710,22 @@ impl SpecDecoder {
             // The tail draft finished during the acceptance walk (device
             // FIFO); this wait is usually instant.
             let r = p.wait()?;
-            rec.record("stage.tail_draft", r.exec_seconds);
+            self.rec.record("stage.tail_draft", r.exec_seconds);
             tail_rows = Some(r);
         }
         let mut next_head: Option<PendingHead> = None;
         let mut tail_hit = false;
         if let Some(rows) = &tail_rows {
-            let v = sess.drafter.spec.vocab;
+            let v = self.sess.drafter.spec.vocab;
             for (i, &(leaf, tok, slot)) in tail.iter().enumerate() {
                 if leaf == cur && tok == bonus {
                     // The speculative tail draft already evaluated the next
                     // root: reuse its logits row and slot.
                     next_head = Some(PendingHead {
                         pending: None,
-                        reply: Some(HeadReply { logits: rows.logits[i * v..(i + 1) * v].to_vec() }),
+                        reply: Some(HeadReply {
+                            logits: rows.logits[i * v..(i + 1) * v].to_vec(),
+                        }),
                         slot,
                         token: bonus,
                     });
@@ -646,45 +734,47 @@ impl SpecDecoder {
                 }
             }
         }
-        self.tail_hit_rate = 0.95 * self.tail_hit_rate + 0.05 * (tail_hit as u8 as f64);
-        rec.record("tail_hit", tail_hit as u8 as f64);
+        sh.tail_hit_rate = 0.95 * sh.tail_hit_rate + 0.05 * (tail_hit as u8 as f64);
+        self.rec.record("tail_hit", tail_hit as u8 as f64);
 
         if next_head.is_none() {
             // Issue the (real) head draft for the bonus token. Under the
             // AOT-head plan this submission happens *before* bookkeeping so
             // the drafter runs while the CPU cleans up.
-            if let Some(slot) = sess.drafter.slots.alloc(1).map(|v| v[0]) {
+            if let Some(slot) = self.sess.drafter.slots.alloc(1).map(|v| v[0]) {
                 let mut dsl = st.dslots.clone();
                 let mut tmp_tree = st.tree.clone();
                 let id = tmp_tree.add_node(cur, bonus, 1.0);
                 dsl.push(Some(slot));
-                let mask = sess
+                let mask = self
+                    .sess
                     .drafter
                     .slots
                     .mask_builder()
                     .build(&tmp_tree, &[id], &dsl, 1)
                     .to_vec();
                 let positions = vec![root_pos + tmp_tree.depth(id) as i32];
-                let req = sess.drafter.padded_request(
+                let req = self.sess.drafter.padded_request(
                     1,
                     &[bonus],
                     &positions,
                     &[slot],
                     &mask,
-                    sess.exec_mode(),
+                    self.sess.exec_mode(),
                 );
                 let pending = self.rt.submit(req)?;
-                let mut head = PendingHead { pending: Some(pending), reply: None, slot, token: bonus };
+                let mut head =
+                    PendingHead { pending: Some(pending), reply: None, slot, token: bonus };
                 if !self.plan.aot_head {
                     // Sequential plan: block right here.
                     let reply = head.pending.take().unwrap().wait()?;
-                    let v = sess.drafter.spec.vocab;
+                    let v = self.sess.drafter.spec.vocab;
                     head.reply = Some(HeadReply { logits: reply.logits[..v].to_vec() });
                 }
                 next_head = Some(head);
             }
         }
-        rec.record("stage.head_submit", t0.elapsed().as_secs_f64());
+        self.rec.record("stage.head_submit", t0.elapsed().as_secs_f64());
 
         // -------- bookkeeping ---------------------------------------------
         let t0 = Instant::now();
@@ -693,16 +783,16 @@ impl SpecDecoder {
             let on_path = accepted_path.contains(&node);
             if let Some(s) = st.dslots[node] {
                 if on_path {
-                    sess.drafter.slots.commit(s);
+                    self.sess.drafter.slots.commit(s);
                 } else {
-                    sess.drafter.slots.release(&[s]);
+                    self.sess.drafter.slots.release(&[s]);
                 }
             }
             if let Some(s) = st.vslots[node] {
                 if on_path {
-                    sess.target.slots.commit(s);
+                    self.sess.target.slots.commit(s);
                 } else {
-                    sess.target.slots.release(&[s]);
+                    self.sess.target.slots.release(&[s]);
                 }
             }
         }
@@ -710,55 +800,201 @@ impl SpecDecoder {
         for &(_, _, slot) in &tail {
             let kept = next_head.as_ref().map_or(false, |h| h.slot == slot);
             if !kept {
-                sess.drafter.slots.release(&[slot]);
+                self.sess.drafter.slots.release(&[slot]);
             }
         }
         let mut out: Vec<u32> = accepted_path[1..].iter().map(|&n| st.tree.token(n)).collect();
         out.push(bonus);
-        sess.committed.extend_from_slice(&out);
-        rec.record("stage.bookkeep", t0.elapsed().as_secs_f64());
+        self.sess.committed.extend_from_slice(&out);
+        self.rec.record("stage.bookkeep", t0.elapsed().as_secs_f64());
 
         Ok((out, next_head, hidden))
     }
 
-    /// Collected depth-predictor training sample: hidden state paired with
-    /// the *next* iteration's accepted count (filled by the trainer).
-    pub fn take_depth_samples(&mut self) -> Vec<(Vec<f32>, usize)> {
-        std::mem::take(&mut self.depth_samples)
-    }
-}
-
-// Fields that need interior iteration state (declared separately for
-// readability of the main impl above).
-impl SpecDecoder {
-    fn initial_head(&self, sess: &mut Session) -> crate::Result<PendingHead> {
-        let root_token = *sess.committed.last().unwrap();
-        let root_pos = (sess.committed_len() - 1) as i32;
-        let slot = sess
+    /// The one-off head draft for the first iteration's root.
+    fn initial_head(&mut self) -> crate::Result<PendingHead> {
+        let root_token = *self.sess.committed.last().unwrap();
+        let root_pos = (self.sess.committed_len() - 1) as i32;
+        let slot = self
+            .sess
             .drafter
             .slots
             .alloc(1)
             .ok_or_else(|| anyhow::anyhow!("drafter cache exhausted at start"))?[0];
-        let mut mb = sess.drafter.slots.mask_builder().clone();
+        let mut mb = self.sess.drafter.slots.mask_builder().clone();
         mb.commit_slot(slot); // root attends to itself + prefix
         let tree = TokenTree::new(root_token);
         let mask = mb.build(&tree, &[0], &[Some(slot)], 1).to_vec();
-        let req = sess.drafter.padded_request(
+        let req = self.sess.drafter.padded_request(
             1,
             &[root_token],
             &[root_pos],
             &[slot],
             &mask,
-            sess.exec_mode(),
+            self.sess.exec_mode(),
         );
         let reply = self.rt.forward(req)?;
-        let v = sess.drafter.spec.vocab;
+        let v = self.sess.drafter.spec.vocab;
         Ok(PendingHead {
             pending: None,
             reply: Some(HeadReply { logits: reply.logits[..v].to_vec() }),
             slot,
             token: root_token,
         })
+    }
+
+    // ------------------------------------------------------------------
+    // Lifecycle steps
+    // ------------------------------------------------------------------
+
+    fn step_prefill(&mut self) -> crate::Result<StepOutcome> {
+        let prompt = std::mem::take(&mut self.prompt);
+        let t_prefill = Instant::now();
+        let prefill_reply = self.sess.prefill(&prompt)?;
+        self.prefill_seconds = t_prefill.elapsed().as_secs_f64();
+
+        let d = self.sess.target.spec.d_model;
+        // Seed the depth hint from the prefill hidden state.
+        {
+            let sh = self.shared.lock().unwrap();
+            if let (Some(p), Some(r)) = (&sh.predictor, &prefill_reply) {
+                if p.input_dim == d && r.hidden.len() >= d {
+                    let last = &r.hidden[r.hidden.len() - d..];
+                    self.depth_hint = Some(p.predict_depth(last, 0.45));
+                }
+            }
+        }
+        self.prev_hidden = prefill_reply
+            .as_ref()
+            .and_then(|r| (r.hidden.len() >= d).then(|| r.hidden[r.hidden.len() - d..].to_vec()));
+
+        let t0 = Instant::now();
+        self.head = Some(self.initial_head()?);
+        self.seconds += t0.elapsed().as_secs_f64();
+        self.state = if self.max_new > 0 && self.sess.headroom(self.tree_budget) > 0 {
+            TaskState::Iterate
+        } else {
+            TaskState::Done
+        };
+        Ok(StepOutcome { tokens: vec![], state: self.state })
+    }
+
+    fn step_iterate(&mut self) -> crate::Result<StepOutcome> {
+        let Some(head) = self.head.take() else {
+            self.state = TaskState::Done;
+            return Ok(StepOutcome { tokens: vec![], state: self.state });
+        };
+        let t_iter = Instant::now();
+        let shared = Arc::clone(&self.shared);
+        let mut sh = shared.lock().unwrap();
+        let (out, next_head, hidden) = self.iteration(head, &mut sh)?;
+        self.rec.record("stage.iter", t_iter.elapsed().as_secs_f64());
+        self.iterations += 1;
+        // Depth-predictor training data: the hidden state seen *before*
+        // this iteration, labelled with how many draft tokens it accepted.
+        if let Some(ph) = self.prev_hidden.take() {
+            sh.depth_samples.push((ph, out.len().saturating_sub(1)));
+        }
+        self.prev_hidden = Some(hidden);
+        let room = self.max_new.saturating_sub(self.tokens.len());
+        let visible = out[..out.len().min(room)].to_vec();
+        self.tokens.extend_from_slice(&out);
+        self.head = next_head;
+        if self.head.is_some() {
+            // Refresh the measured CPU-overhead term of the objective.
+            let cpu = self.rec.mean("stage.cpu_build")
+                + self.rec.mean("stage.accept")
+                + self.rec.mean("stage.bookkeep");
+            if cpu.is_finite() {
+                sh.lat.cpu_overhead = 0.9 * sh.lat.cpu_overhead + 0.1 * cpu;
+            }
+        }
+        drop(sh);
+        self.seconds += t_iter.elapsed().as_secs_f64();
+        if self.tokens.len() >= self.max_new
+            || self.sess.headroom(self.tree_budget) == 0
+            || self.head.is_none()
+        {
+            self.state = TaskState::Done;
+        }
+        Ok(StepOutcome { tokens: visible, state: self.state })
+    }
+}
+
+impl DecodeTask for SpecTask {
+    fn state(&self) -> TaskState {
+        self.state
+    }
+
+    fn step(&mut self) -> crate::Result<StepOutcome> {
+        match self.state {
+            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
+            TaskState::Prefill => self.step_prefill(),
+            TaskState::Iterate => self.step_iterate(),
+        }
+    }
+
+    fn headroom(&self) -> usize {
+        self.sess.headroom(self.tree_budget)
+    }
+
+    fn kv_slots_in_use(&self) -> usize {
+        self.sess.drafter.slots.in_use() + self.sess.target.slots.in_use()
+    }
+
+    fn finish(self: Box<Self>) -> Generation {
+        let mut this = *self;
+        this.tokens.truncate(this.max_new);
+        // §5.2: refresh the profile-guided plan with the *measured* stage
+        // durations of this generation (takes effect for tasks begun
+        // after this point; running tasks keep their snapshot).
+        if this.cfg.schedule == SchedulePlan::ProfileSearch && this.iterations > 0 {
+            let mut sh = this.shared.lock().unwrap();
+            let d = StageDurations::from_recorder(&this.rec, sh.tail_hit_rate);
+            sh.plan = scheduler::search_best_plan(&d).0;
+        }
+        Generation {
+            tokens: std::mem::take(&mut this.tokens),
+            iterations: this.iterations,
+            seconds: this.seconds,
+            prefill_seconds: this.prefill_seconds,
+            recorder: std::mem::take(&mut this.rec),
+        }
+    }
+}
+
+impl StepEngine for SpecDecoder {
+    fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let sess = Session::new(
+            &self.rt,
+            &self.cfg.drafter,
+            &self.cfg.target,
+            self.cfg.sampling.seed,
+            self.cfg.compiled,
+        )?;
+        // Keep enough headroom for one full tree + tail + bonus chain.
+        let tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
+        let plan = self.shared.lock().unwrap().plan;
+        Ok(Box::new(SpecTask {
+            rt: self.rt.clone(),
+            cfg: self.cfg.clone(),
+            shared: Arc::clone(&self.shared),
+            sess,
+            state: TaskState::Prefill,
+            prompt: prompt.to_vec(),
+            max_new,
+            tree_budget,
+            plan,
+            head: None,
+            depth_hint: None,
+            prev_hidden: None,
+            rec: Recorder::new(),
+            tokens: Vec::new(),
+            iterations: 0,
+            seconds: 0.0,
+            prefill_seconds: 0.0,
+        }))
     }
 }
 
@@ -773,69 +1009,7 @@ impl super::Engine for SpecDecoder {
         max_new: usize,
         sink: super::TokenSink,
     ) -> crate::Result<Generation> {
-        let mut sess = Session::new(
-            &self.rt,
-            &self.cfg.drafter,
-            &self.cfg.target,
-            self.cfg.sampling.seed,
-            self.cfg.compiled,
-        )?;
-        let t_prefill = Instant::now();
-        let prefill_reply = sess.prefill(prompt)?;
-        let prefill_seconds = t_prefill.elapsed().as_secs_f64();
-
-        // Seed the depth hint from the prefill hidden state.
-        if let (Some(p), Some(r)) = (&self.predictor, &prefill_reply) {
-            let d = sess.target.spec.d_model;
-            if p.input_dim == d && r.hidden.len() >= d {
-                let last = &r.hidden[r.hidden.len() - d..];
-                self.depth_hint = Some(p.predict_depth(last, 0.45));
-            }
-        }
-
-        let mut rec = Recorder::new();
-        let mut tokens = Vec::new();
-        let mut iterations = 0usize;
-        // The context embedding that *preceded* each iteration (predictor
-        // training pairs it with that iteration's accepted count).
-        let mut prev_hidden: Option<Vec<f32>> = prefill_reply.as_ref().and_then(|r| {
-            let d = sess.target.spec.d_model;
-            (r.hidden.len() >= d).then(|| r.hidden[r.hidden.len() - d..].to_vec())
-        });
-        let t0 = Instant::now();
-        let mut head = self.initial_head(&mut sess)?;
-        // Keep enough headroom for one full tree + tail + bonus chain.
-        let tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
-        while tokens.len() < max_new && sess.headroom(tree_budget) > 0 {
-            let t_iter = Instant::now();
-            let (out, next_head, hidden) = self.iteration(&mut sess, head, &mut rec)?;
-            rec.record("stage.iter", t_iter.elapsed().as_secs_f64());
-            iterations += 1;
-            // Depth-predictor training data: the hidden state seen *before*
-            // this iteration, labelled with how many draft tokens it
-            // accepted.
-            if let Some(ph) = prev_hidden.take() {
-                self.depth_samples.push((ph, out.len().saturating_sub(1)));
-            }
-            prev_hidden = Some(hidden);
-            let room = max_new.saturating_sub(tokens.len());
-            sink(&out[..out.len().min(room)]);
-            tokens.extend_from_slice(&out);
-            match next_head {
-                Some(h) => head = h,
-                None => break, // cache exhausted
-            }
-            // Refresh the measured CPU-overhead term of the objective.
-            let cpu = rec.mean("stage.cpu_build") + rec.mean("stage.accept") + rec.mean("stage.bookkeep");
-            if cpu.is_finite() {
-                self.lat.cpu_overhead = 0.9 * self.lat.cpu_overhead + 0.1 * cpu;
-            }
-        }
-        let seconds = t0.elapsed().as_secs_f64();
-        tokens.truncate(max_new);
-        // §5.2: refresh the profile-guided plan with the *measured* stage
-        // durations of this generation (takes effect next request).
-        self.research_plan(&rec);
-        Ok(Generation { tokens, iterations, seconds, prefill_seconds, recorder: rec })
+        let task = self.begin(prompt, max_new)?;
+        task::drive(task, sink)
     }
 }

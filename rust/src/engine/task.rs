@@ -1,0 +1,194 @@
+//! Resumable decode tasks: the step-driven core of the serving layer.
+//!
+//! A [`DecodeTask`] is one generation turned into an explicit state
+//! machine: `Prefill → Iterate → Done`. Each [`DecodeTask::step`] call runs
+//! exactly one unit of schedulable work — the prompt prefill, or one
+//! verification iteration — and returns the tokens that step committed.
+//! [`Engine::generate_with`](super::Engine::generate_with) is a thin
+//! driver ([`drive`]) over `step()`, so the blocking single-request path
+//! and the multi-session server execute the *same* code: the server merely
+//! round-robins `step()` across live tasks instead of looping one to
+//! completion.
+//!
+//! Tasks are self-contained (they own their [`super::Session`] — KV caches
+//! both sides — and per-generation recorder/counters) so dropping a task
+//! at any point frees its device cache state immediately; this is what
+//! makes mid-generation cancellation in the server a plain `drop`.
+
+use super::{Generation, TokenSink};
+
+/// Lifecycle of a [`DecodeTask`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Created; the next `step()` runs the prompt prefill.
+    Prefill,
+    /// Prefilled; each `step()` runs one verification iteration.
+    Iterate,
+    /// Generation finished (budget, cache exhaustion, or `max_new`);
+    /// further `step()` calls are no-ops.
+    Done,
+}
+
+/// What one `step()` produced.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// Tokens committed by this step, already clipped to the request's
+    /// `max_new` budget (what a streaming sink should see). Empty for the
+    /// prefill step and for `step()` on a finished task.
+    pub tokens: Vec<u32>,
+    /// Task state *after* the step.
+    pub state: TaskState,
+}
+
+impl StepOutcome {
+    pub fn done(&self) -> bool {
+        self.state == TaskState::Done
+    }
+}
+
+/// One resumable generation. See the module docs for the lifecycle.
+pub trait DecodeTask: Send {
+    fn state(&self) -> TaskState;
+
+    /// Runs exactly one unit of work (one prefill, or one verification
+    /// iteration) and returns the tokens it committed. Idempotent once
+    /// [`TaskState::Done`] is reached.
+    fn step(&mut self) -> crate::Result<StepOutcome>;
+
+    /// Remaining KV-slot headroom in tokens (how much more this task can
+    /// generate before its caches fill). The server's admission control
+    /// checks this against the prompt length before scheduling a task.
+    fn headroom(&self) -> usize;
+
+    /// KV slots currently held by this task across both model sides
+    /// (observability: the server surfaces the aggregate in its stats).
+    fn kv_slots_in_use(&self) -> usize {
+        0
+    }
+
+    /// Consumes the task and returns the completed [`Generation`].
+    /// Callers normally invoke this once `step()` reports `Done`, but it
+    /// is valid earlier (early client disconnect): the generation then
+    /// covers what was committed so far.
+    fn finish(self: Box<Self>) -> Generation;
+}
+
+/// Drives a task to completion, streaming each step's committed tokens
+/// through `sink` — the run-to-completion path used by `generate_with`.
+pub fn drive(mut task: Box<dyn DecodeTask>, sink: TokenSink) -> crate::Result<Generation> {
+    loop {
+        let out = task.step()?;
+        if !out.tokens.is_empty() {
+            sink(&out.tokens);
+        }
+        if out.done() {
+            return Ok(task.finish());
+        }
+    }
+}
+
+/// An engine that can open resumable decode tasks. The blocking
+/// [`super::Engine`] interface stays available (it is implemented on top
+/// of `begin` + [`drive`]); the server requires `StepEngine` so it can
+/// interleave many sessions on one device.
+pub trait StepEngine: super::Engine {
+    /// Starts a generation: allocates the task's KV caches and captures
+    /// the prompt, but performs no model call yet (the first `step()`
+    /// prefills). Cheap enough to use for admission control.
+    fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Recorder;
+
+    /// Minimal in-memory task for driver tests.
+    struct CountTask {
+        produced: usize,
+        max_new: usize,
+        per_step: usize,
+        state: TaskState,
+    }
+
+    impl DecodeTask for CountTask {
+        fn state(&self) -> TaskState {
+            self.state
+        }
+
+        fn step(&mut self) -> crate::Result<StepOutcome> {
+            match self.state {
+                TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
+                TaskState::Prefill => {
+                    self.state =
+                        if self.max_new == 0 { TaskState::Done } else { TaskState::Iterate };
+                    Ok(StepOutcome { tokens: vec![], state: self.state })
+                }
+                TaskState::Iterate => {
+                    let n = self.per_step.min(self.max_new - self.produced);
+                    let tokens: Vec<u32> =
+                        (self.produced..self.produced + n).map(|x| x as u32).collect();
+                    self.produced += n;
+                    if self.produced >= self.max_new {
+                        self.state = TaskState::Done;
+                    }
+                    Ok(StepOutcome { tokens, state: self.state })
+                }
+            }
+        }
+
+        fn headroom(&self) -> usize {
+            self.max_new - self.produced
+        }
+
+        fn finish(self: Box<Self>) -> Generation {
+            Generation {
+                tokens: (0..self.produced).map(|x| x as u32).collect(),
+                iterations: self.produced.div_ceil(self.per_step.max(1)),
+                seconds: 1e-6,
+                prefill_seconds: 1e-6,
+                recorder: Recorder::new(),
+            }
+        }
+    }
+
+    #[test]
+    fn drive_runs_prefill_then_iterations() {
+        let task = Box::new(CountTask {
+            produced: 0,
+            max_new: 7,
+            per_step: 3,
+            state: TaskState::Prefill,
+        });
+        let mut seen: Vec<u32> = Vec::new();
+        let mut chunks = 0usize;
+        let g = drive(task, &mut |t| {
+            seen.extend_from_slice(t);
+            chunks += 1;
+        })
+        .unwrap();
+        assert_eq!(g.tokens, seen);
+        assert_eq!(g.tokens.len(), 7);
+        assert_eq!(chunks, 3, "7 tokens at 3/step = 3 sink calls");
+    }
+
+    #[test]
+    fn zero_budget_task_finishes_without_iterating() {
+        let task = Box::new(CountTask {
+            produced: 0,
+            max_new: 0,
+            per_step: 3,
+            state: TaskState::Prefill,
+        });
+        let g = drive(task, &mut |_| panic!("no tokens expected")).unwrap();
+        assert!(g.tokens.is_empty());
+    }
+
+    #[test]
+    fn done_tasks_step_idempotently() {
+        let mut t = CountTask { produced: 0, max_new: 1, per_step: 1, state: TaskState::Prefill };
+        while !t.step().unwrap().done() {}
+        let again = t.step().unwrap();
+        assert!(again.tokens.is_empty() && again.done());
+    }
+}

@@ -44,6 +44,14 @@ impl SlotCache {
         self.free.len()
     }
 
+    /// Slots currently held (committed prefix + outstanding draft slots;
+    /// excludes the trash slot). The serving layer aggregates this across
+    /// live sessions for its KV-utilization gauge, and the cancellation
+    /// tests assert it returns to zero once a session is dropped.
+    pub fn in_use(&self) -> usize {
+        self.capacity - 1 - self.free.len()
+    }
+
     pub fn committed_len(&self) -> usize {
         self.committed.len()
     }
@@ -108,11 +116,14 @@ mod tests {
     fn alloc_release_roundtrip() {
         let mut c = SlotCache::new(8);
         assert_eq!(c.free_count(), 7); // one slot reserved as trash
+        assert_eq!(c.in_use(), 0);
         let s = c.alloc(3).unwrap();
         assert_eq!(s.len(), 3);
         assert_eq!(c.free_count(), 4);
+        assert_eq!(c.in_use(), 3);
         c.release(&s);
         assert_eq!(c.free_count(), 7);
+        assert_eq!(c.in_use(), 0);
     }
 
     #[test]

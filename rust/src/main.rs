@@ -15,16 +15,16 @@ use yggdrasil::baselines::build_engine;
 use yggdrasil::bench::{run_experiment, BenchOpts};
 use yggdrasil::config::{AppConfig, EngineConfig};
 use yggdrasil::corpus::PromptSet;
-use yggdrasil::engine::{profiling, Engine, SpecDecoder};
+use yggdrasil::engine::{profiling, Engine, SpecDecoder, StepEngine};
 use yggdrasil::predictor::{DepthPredictor, DepthSample};
 use yggdrasil::runtime::Runtime;
-use yggdrasil::server::Server;
+use yggdrasil::server::{ServeOpts, Server};
 use yggdrasil::util::cli::Args;
 
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
-    "max-width", "max-verify",
+    "max-width", "max-verify", "max-sessions",
 ];
 const FLAGS: &[&str] = &["quick", "no-stream", "eager", "help"];
 
@@ -81,8 +81,8 @@ fn apply_engine_overrides(cfg: &mut EngineConfig, args: &Args) -> yggdrasil::Res
 }
 
 /// Loads the runtime + latency model + optional trained predictor and
-/// builds the configured engine.
-fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn Engine + Send>)> {
+/// builds the configured engine (step-driven, so it can serve).
+fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn StepEngine + Send>)> {
     let dir = &app.runtime.artifacts_dir;
     let cfg = app.engine.clone();
     let rt = Runtime::load(dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
@@ -94,7 +94,7 @@ fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn En
         app.runtime.profile_file.as_deref(),
         5,
     )?;
-    let boxed: Box<dyn Engine + Send> = if engine_name == "yggdrasil" {
+    let boxed: Box<dyn StepEngine + Send> = if engine_name == "yggdrasil" {
         let predictor = app
             .runtime
             .predictor_file
@@ -163,8 +163,17 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
     let (_rt, engine) = build(app, args)?;
     let addr = args.str_or("addr", &app.server.addr);
     let stream = app.server.stream && !args.flag("no-stream");
-    let srv = Server::spawn(&addr, engine, app.server.max_queue, stream)?;
-    eprintln!("serving on {} (stream={stream}) — Ctrl-C to stop", srv.addr);
+    let opts = ServeOpts {
+        max_queue: app.server.max_queue,
+        max_sessions: args.usize_or("max-sessions", app.server.max_sessions)?,
+        stream,
+    };
+    let max_sessions = opts.max_sessions;
+    let srv = Server::spawn(&addr, engine, opts)?;
+    eprintln!(
+        "serving on {} (stream={stream}, max_sessions={max_sessions}) — Ctrl-C to stop",
+        srv.addr
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -273,6 +282,7 @@ COMMON OPTIONS
   --engine NAME       yggdrasil|vanilla|seqspec|specinfer|sequoia|vllmspec
   --drafter / --target model names (default dft-xs / tgt-sm)
   --max-new N --temperature T --seed S
+  --max-sessions N    concurrent sessions to interleave (serve)
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

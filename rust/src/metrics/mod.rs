@@ -21,6 +21,18 @@ impl Series {
         self.samples.push(x);
     }
 
+    /// Records keeping only the most recent `window` samples — for
+    /// indefinitely-running consumers (the serving stats) where an
+    /// unbounded series would be a slow leak and percentile scans over
+    /// the full history would grow without bound.
+    pub fn record_windowed(&mut self, x: f64, window: usize) {
+        self.samples.push(x);
+        if self.samples.len() > window {
+            let excess = self.samples.len() - window;
+            self.samples.drain(..excess);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -78,6 +90,12 @@ impl Recorder {
         self.series.entry(name.to_string()).or_default().record(value);
     }
 
+    /// Sliding-window variant of [`Recorder::record`] (see
+    /// [`Series::record_windowed`]).
+    pub fn record_windowed(&mut self, name: &str, value: f64, window: usize) {
+        self.series.entry(name.to_string()).or_default().record_windowed(value, window);
+    }
+
     /// Times `f` and records its wall-clock seconds under `name`.
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
@@ -96,6 +114,17 @@ impl Recorder {
 
     pub fn sum(&self, name: &str) -> f64 {
         self.get(name).map(|s| s.sum()).unwrap_or(0.0)
+    }
+
+    /// Percentile of a series (NaN when absent) — the serving stats
+    /// surface p50/p99 queueing delay and time-to-first-token from here.
+    pub fn percentile(&self, name: &str, p: f64) -> f64 {
+        self.get(name).map(|s| s.percentile(p)).unwrap_or(f64::NAN)
+    }
+
+    /// Sample count of a series (0 when absent).
+    pub fn count(&self, name: &str) -> usize {
+        self.get(name).map(|s| s.len()).unwrap_or(0)
     }
 
     pub fn names(&self) -> impl Iterator<Item = &str> {
@@ -211,6 +240,29 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(r.mean("work") >= 0.002);
+    }
+
+    #[test]
+    fn windowed_series_keeps_only_recent_samples() {
+        let mut r = Recorder::new();
+        for x in 0..10 {
+            r.record_windowed("w", x as f64, 4);
+        }
+        assert_eq!(r.count("w"), 4);
+        assert_eq!(r.get("w").unwrap().samples(), &[6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn recorder_percentile_and_count() {
+        let mut r = Recorder::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.record("lat", x);
+        }
+        assert_eq!(r.count("lat"), 4);
+        assert_eq!(r.percentile("lat", 0.0), 1.0);
+        assert_eq!(r.percentile("lat", 100.0), 4.0);
+        assert_eq!(r.count("missing"), 0);
+        assert!(r.percentile("missing", 50.0).is_nan());
     }
 
     #[test]

@@ -79,6 +79,27 @@ pub struct StageDurations {
 }
 
 impl StageDurations {
+    /// Measured stage durations from one generation's recorder (the
+    /// per-session plan-search input). Each decode task carries its own
+    /// recorder, so under multi-session interleaving every session's plan
+    /// search sees *its* stage timings, not a blend of whoever shared the
+    /// device — a session decoding long prompts and a session decoding
+    /// short ones can legitimately pick different plans. Missing series
+    /// fall back to the floor values (the `max` with NaN selects the
+    /// floor), matching the pre-measurement estimate's scale.
+    pub fn from_recorder(rec: &crate::metrics::Recorder, tail_hit_rate: f64) -> Self {
+        Self {
+            head_draft: rec.mean("stage.head_draft").max(1e-6),
+            tree_draft: rec.mean("stage.tree_draft").max(1e-6),
+            cpu_build: rec.mean("stage.cpu_build").max(1e-7),
+            verify: rec.mean("stage.verify").max(1e-6),
+            tail_draft: rec.mean("stage.tail_draft").max(1e-6),
+            accept: rec.mean("stage.accept").max(1e-7),
+            bookkeep: rec.mean("stage.bookkeep").max(1e-7),
+            tail_hit_rate,
+        }
+    }
+
     /// Rough estimate from a latency model before any measurement exists.
     pub fn estimate(
         lat: &crate::objective::LatencyModel,
@@ -222,6 +243,25 @@ mod tests {
         assert!(resolve(SchedulePlan::AotTail, &d).aot_tail);
         let p = resolve(SchedulePlan::AotTailHead, &d);
         assert!(p.aot_tail && p.aot_head);
+    }
+
+    #[test]
+    fn from_recorder_reads_measured_stages_and_floors_missing_ones() {
+        let mut rec = crate::metrics::Recorder::new();
+        rec.record("stage.head_draft", 2e-3);
+        rec.record("stage.tree_draft", 5e-3);
+        rec.record("stage.verify", 7e-3);
+        // cpu_build / tail_draft / accept / bookkeep unmeasured.
+        let d = StageDurations::from_recorder(&rec, 0.4);
+        assert!((d.head_draft - 2e-3).abs() < 1e-12);
+        assert!((d.tree_draft - 5e-3).abs() < 1e-12);
+        assert!((d.verify - 7e-3).abs() < 1e-12);
+        assert_eq!(d.cpu_build, 1e-7, "missing series floors, not NaN");
+        assert_eq!(d.tail_draft, 1e-6);
+        assert!((d.tail_hit_rate - 0.4).abs() < 1e-12);
+        // The floored durations feed the search without poisoning it.
+        let (_, t) = search_best_plan(&d);
+        assert!(t.is_finite());
     }
 
     #[test]

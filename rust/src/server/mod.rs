@@ -1,39 +1,69 @@
-//! Serving layer: a TCP JSON-lines server around one engine.
+//! Serving layer: a TCP JSON-lines server over a step-driven engine.
 //!
-//! The paper's core results target the *latency-optimal single-request*
-//! regime (§9): one accelerator, one request at a time. The server mirrors
-//! that: accepted connections enqueue requests into an ordered FCFS queue;
-//! a single worker thread owns the engine and drains the queue, streaming
-//! accepted tokens back per verification step. Concurrency lives at the
-//! edges (one reader/writer thread pair per connection), the device stays
-//! single-tenant — exactly the deployment the paper's evaluation models.
+//! The paper's core results target the latency-optimal single-request
+//! regime (§9); the server generalizes that to **continuous multi-session
+//! serving** without giving up the single-tenant device: one worker thread
+//! owns the engine and round-robins one [`crate::engine::DecodeTask::step`]
+//! across up to `max_sessions` live sessions per scheduling round (see
+//! [`sessions`]). Requests beyond the live set queue; admission is gated
+//! on KV-cache headroom; a client disconnect cancels its session and frees
+//! its caches mid-generation. Concurrency still lives at the edges — one
+//! reader thread plus one writer-pump thread per connection — and a single
+//! connection may multiplex many concurrent requests, demuxed by `id`.
 //!
 //! ## Protocol (one JSON object per line)
 //!
 //! request:  `{"id": 7, "prompt": [1,2,3], "max_new": 32}`
-//!           (or `"text": "..."` — byte-tokenized)
+//!           (or `"text": "..."` — byte-tokenized; `"id"` may be a number
+//!           or a decimal string: ids are u64 end-to-end and serialize as
+//!           strings beyond the f64-exact range)
+//!           `{"stats": true}` — server statistics snapshot
 //! events:   `{"id": 7, "event": "tokens", "tokens": [5, 9]}` (stream mode)
 //!           `{"id": 7, "event": "done", "tokens": [...], "aal": 2.31,
-//!             "tpot_ms": 1.9, "iterations": 14}`
+//!             "tpot_ms": 1.9, "iterations": 14, "queue_ms": 0.1,
+//!             "ttft_ms": 8.8, "tok_per_s": 512.0}`
 //!           `{"id": 7, "event": "error", "message": "..."}`
+//!
+//! Internally every event is a typed [`sessions::ServerEvent`]; JSON only
+//! materializes at the connection writer.
+
+pub mod sessions;
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use crate::corpus::ByteTokenizer;
-use crate::engine::Engine;
+use crate::engine::{
+    drive, DecodeTask, Engine, Generation, StepEngine, StepOutcome, TaskState,
+};
+use crate::metrics::Recorder;
 use crate::util::json::Json;
 
-/// One queued generation request.
-struct Job {
-    id: f64,
-    prompt: Vec<u32>,
-    max_new: usize,
-    reply: mpsc::Sender<String>,
-    stream: bool,
+pub use sessions::{DoneSummary, Job, ServerEvent};
+
+/// Connection-level cancellation flag, shared with the worker.
+pub type CancelFlag = Arc<AtomicBool>;
+
+/// Serving limits.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Bounded request queue (beyond it, requests get a `queue full`
+    /// error immediately).
+    pub max_queue: usize,
+    /// Concurrent sessions the scheduler interleaves.
+    pub max_sessions: usize,
+    /// Stream per-step tokens (vs. only the final `done` event).
+    pub stream: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self { max_queue: 64, max_sessions: 4, stream: true }
+    }
 }
 
 /// Server statistics (exposed via the `"stats"` request).
@@ -42,12 +72,76 @@ pub struct ServerStats {
     pub requests: AtomicU64,
     pub tokens: AtomicU64,
     pub errors: AtomicU64,
+    /// Sessions dropped because their client disconnected.
+    pub cancelled: AtomicU64,
+    /// Requests refused by KV-headroom admission control.
+    pub rejected: AtomicU64,
+    /// Gauge: live sessions after the last scheduling round.
+    pub active_sessions: AtomicU64,
+    /// Gauge: KV slots held across live sessions (both model sides).
+    pub kv_slots_in_use: AtomicU64,
+    /// Per-request serving series: `server.queue_delay_s`,
+    /// `server.ttft_s`, `server.tok_per_s`.
+    pub recorder: Mutex<Recorder>,
 }
 
-/// A running server; dropping it stops the accept loop.
+/// Point-in-time view of [`ServerStats`].
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub tokens: u64,
+    pub errors: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    pub active_sessions: u64,
+    pub kv_slots_in_use: u64,
+    pub queue_delay_ms_mean: f64,
+    pub ttft_ms_p50: f64,
+    pub tok_per_s_mean: f64,
+}
+
+impl ServerStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let rec = self.recorder.lock().unwrap();
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            tokens: self.tokens.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            active_sessions: self.active_sessions.load(Ordering::Relaxed),
+            kv_slots_in_use: self.kv_slots_in_use.load(Ordering::Relaxed),
+            queue_delay_ms_mean: rec.mean("server.queue_delay_s") * 1e3,
+            ttft_ms_p50: rec.percentile("server.ttft_s", 50.0) * 1e3,
+            tok_per_s_mean: rec.mean("server.tok_per_s"),
+        }
+    }
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        Json::obj(vec![
+            ("event", Json::Str("stats".into())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("active_sessions", Json::Num(self.active_sessions as f64)),
+            ("kv_slots_in_use", Json::Num(self.kv_slots_in_use as f64)),
+            ("queue_delay_ms_mean", num(self.queue_delay_ms_mean)),
+            ("ttft_ms_p50", num(self.ttft_ms_p50)),
+            ("tok_per_s_mean", num(self.tok_per_s_mean)),
+        ])
+    }
+}
+
+/// A running server; dropping it stops the accept loop and the scheduler
+/// (live sessions are aborted and their caches freed).
 pub struct Server {
     pub addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
+    stop: CancelFlag,
     pub stats: Arc<ServerStats>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     worker_thread: Option<std::thread::JoinHandle<()>>,
@@ -58,82 +152,28 @@ impl Server {
     /// with `engine` until dropped.
     pub fn spawn(
         addr: &str,
-        engine: Box<dyn Engine + Send>,
-        max_queue: usize,
-        stream: bool,
+        engine: Box<dyn StepEngine + Send>,
+        opts: ServeOpts,
     ) -> crate::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop: CancelFlag = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
-        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(max_queue);
+        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(opts.max_queue.max(1));
 
-        // Worker: single-tenant engine loop (FCFS).
+        // Worker: the continuous-serving scheduler (sessions.rs).
         let wstats = stats.clone();
         let wstop = stop.clone();
-        let worker_thread = std::thread::Builder::new().name("ygg-worker".into()).spawn(
-            move || {
-                let mut engine = engine;
-                while !wstop.load(Ordering::Relaxed) {
-                    let Ok(job) = job_rx.recv_timeout(std::time::Duration::from_millis(50))
-                    else {
-                        continue;
-                    };
-                    wstats.requests.fetch_add(1, Ordering::Relaxed);
-                    let reply = job.reply.clone();
-                    let id = job.id;
-                    let mut sink = |toks: &[u32]| {
-                        if job.stream && !toks.is_empty() {
-                            let msg = Json::obj(vec![
-                                ("id", Json::Num(id)),
-                                ("event", Json::Str("tokens".into())),
-                                (
-                                    "tokens",
-                                    Json::Arr(
-                                        toks.iter().map(|&t| Json::Num(t as f64)).collect(),
-                                    ),
-                                ),
-                            ]);
-                            let _ = reply.send(msg.to_string());
-                        }
-                    };
-                    match engine.generate_with(&job.prompt, job.max_new, &mut sink) {
-                        Ok(g) => {
-                            wstats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
-                            let msg = Json::obj(vec![
-                                ("id", Json::Num(id)),
-                                ("event", Json::Str("done".into())),
-                                (
-                                    "tokens",
-                                    Json::Arr(
-                                        g.tokens.iter().map(|&t| Json::Num(t as f64)).collect(),
-                                    ),
-                                ),
-                                ("aal", Json::Num(g.aal())),
-                                ("tpot_ms", Json::Num(g.tpot() * 1e3)),
-                                ("iterations", Json::Num(g.iterations as f64)),
-                                ("prefill_ms", Json::Num(g.prefill_seconds * 1e3)),
-                            ]);
-                            let _ = job.reply.send(msg.to_string());
-                        }
-                        Err(e) => {
-                            wstats.errors.fetch_add(1, Ordering::Relaxed);
-                            let msg = Json::obj(vec![
-                                ("id", Json::Num(id)),
-                                ("event", Json::Str("error".into())),
-                                ("message", Json::Str(format!("{e:#}"))),
-                            ]);
-                            let _ = job.reply.send(msg.to_string());
-                        }
-                    }
-                }
-            },
-        )?;
+        let max_sessions = opts.max_sessions;
+        let worker_thread = std::thread::Builder::new()
+            .name("ygg-worker".into())
+            .spawn(move || sessions::run_worker(engine, job_rx, wstats, wstop, max_sessions))?;
 
-        // Accept loop: one handler thread per connection.
+        // Accept loop: one reader + one writer pump per connection.
         let astop = stop.clone();
         let astats = stats.clone();
+        let stream = opts.stream;
         let accept_thread = std::thread::Builder::new().name("ygg-accept".into()).spawn(
             move || {
                 while !astop.load(Ordering::Relaxed) {
@@ -178,74 +218,90 @@ impl Drop for Server {
     }
 }
 
+/// Per-connection reader: parses request lines, enqueues jobs (the reply
+/// channel feeds this connection's writer pump), and on EOF raises the
+/// connection's cancel flag so the scheduler frees any in-flight session.
 fn handle_conn(
     sock: TcpStream,
     jobs: mpsc::SyncSender<Job>,
     stats: Arc<ServerStats>,
     stream: bool,
 ) {
-    let peer_write = match sock.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let writer = Arc::new(Mutex::new(peer_write));
-    let reader = BufReader::new(sock);
+    let Ok(wsock) = sock.try_clone() else { return };
+    let cancelled: CancelFlag = Arc::new(AtomicBool::new(false));
+    let (ev_tx, ev_rx) = mpsc::channel::<ServerEvent>();
 
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    // Writer pump: the single writer for this connection; serializes
+    // typed events to JSON lines. A failed write means the client is gone
+    // — raise the cancel flag so the scheduler stops generating for it.
+    let pump_cancel = cancelled.clone();
+    let Ok(pump) = std::thread::Builder::new().name("ygg-conn-write".into()).spawn(move || {
+        let mut w = wsock;
+        for ev in ev_rx {
+            if writeln!(w, "{}", ev.to_json().to_string()).is_err() {
+                pump_cancel.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+    }) else {
+        return;
+    };
+
+    let mut reader = BufReader::new(sock);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            // Clean EOF is only a half-close: a one-shot client may have
+            // shut down its write side and still be reading replies, so
+            // in-flight requests keep running. A truly vanished client is
+            // detected by the pump's failed write (above), which raises
+            // the cancel flag.
+            Ok(0) => break,
+            Err(_) => {
+                // Read error (reset): the client is gone — cancel this
+                // connection's in-flight sessions.
+                cancelled.store(true, Ordering::Relaxed);
+                break;
+            }
+            Ok(_) => {}
+        }
         if line.trim().is_empty() {
             continue;
         }
-        let response = parse_request(&line);
-        match response {
+        match parse_request(&line) {
             Ok(Req::Stats) => {
-                let msg = Json::obj(vec![
-                    ("event", Json::Str("stats".into())),
-                    ("requests", Json::Num(stats.requests.load(Ordering::Relaxed) as f64)),
-                    ("tokens", Json::Num(stats.tokens.load(Ordering::Relaxed) as f64)),
-                    ("errors", Json::Num(stats.errors.load(Ordering::Relaxed) as f64)),
-                ]);
-                let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
+                let _ = ev_tx.send(ServerEvent::Stats(stats.snapshot()));
             }
             Ok(Req::Generate { id, prompt, max_new }) => {
-                let (tx, rx) = mpsc::channel::<String>();
-                if jobs
-                    .try_send(Job { id, prompt, max_new, reply: tx, stream })
-                    .is_err()
-                {
-                    let msg = Json::obj(vec![
-                        ("id", Json::Num(id)),
-                        ("event", Json::Str("error".into())),
-                        ("message", Json::Str("queue full".into())),
-                    ]);
-                    let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
-                    continue;
-                }
-                // Pump worker events back to this connection until "done".
-                let w = writer.clone();
-                for msg in rx {
-                    let done = msg.contains("\"event\":\"done\"") || msg.contains("\"event\":\"error\"");
-                    if writeln!(w.lock().unwrap(), "{msg}").is_err() {
-                        break;
-                    }
-                    if done {
-                        break;
-                    }
+                let job = Job {
+                    id,
+                    prompt,
+                    max_new,
+                    reply: ev_tx.clone(),
+                    stream,
+                    cancelled: cancelled.clone(),
+                    enqueued: Instant::now(),
+                };
+                if jobs.try_send(job).is_err() {
+                    let _ = ev_tx.send(ServerEvent::Error {
+                        id: Some(id),
+                        message: "queue full".into(),
+                    });
                 }
             }
             Err(e) => {
-                let msg = Json::obj(vec![
-                    ("event", Json::Str("error".into())),
-                    ("message", Json::Str(format!("{e:#}"))),
-                ]);
-                let _ = writeln!(writer.lock().unwrap(), "{}", msg.to_string());
+                let _ = ev_tx.send(ServerEvent::Error { id: None, message: format!("{e:#}") });
             }
         }
     }
+    drop(ev_tx);
+    // The pump drains once in-flight replies finish (or their writes
+    // fail, which flips the cancel flag and frees the sessions).
+    let _ = pump.join();
 }
 
 enum Req {
-    Generate { id: f64, prompt: Vec<u32>, max_new: usize },
+    Generate { id: u64, prompt: Vec<u32>, max_new: usize },
     Stats,
 }
 
@@ -254,7 +310,14 @@ fn parse_request(line: &str) -> crate::Result<Req> {
     if j.get("stats").is_some() {
         return Ok(Req::Stats);
     }
-    let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    // Ids are u64 end-to-end; a fractional/negative/garbage id is a hard
+    // error rather than a silent 0 (which would break client-side demux).
+    let id = match j.get("id") {
+        None => 0,
+        Some(v) => v.as_u64().ok_or_else(|| {
+            anyhow::anyhow!("'id' must be a non-negative integer (number or decimal string)")
+        })?,
+    };
     let prompt: Vec<u32> = if let Some(p) = j.get("prompt") {
         p.as_arr()
             .ok_or_else(|| anyhow::anyhow!("prompt must be an array"))?
@@ -285,6 +348,10 @@ pub struct ClientResult {
     pub tpot_ms: f64,
     pub iterations: usize,
     pub stream_events: usize,
+    /// Server-side queueing delay for this request (ms).
+    pub queue_ms: f64,
+    /// Server-side time-to-first-token for this request (ms).
+    pub ttft_ms: f64,
 }
 
 impl Client {
@@ -294,10 +361,16 @@ impl Client {
         Ok(Self { reader: BufReader::new(sock), writer })
     }
 
-    /// Sends one request and blocks until its `done` event.
-    pub fn generate(&mut self, id: u64, prompt: &[u32], max_new: usize) -> crate::Result<ClientResult> {
+    /// Sends one request and blocks until its `done` event. Events for
+    /// other ids multiplexed on this connection are skipped.
+    pub fn generate(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> crate::Result<ClientResult> {
         let req = Json::obj(vec![
-            ("id", Json::Num(id as f64)),
+            ("id", Json::from_u64(id)),
             ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
             ("max_new", Json::Num(max_new as f64)),
         ]);
@@ -308,6 +381,9 @@ impl Client {
             let n = self.reader.read_line(&mut line)?;
             anyhow::ensure!(n > 0, "server closed connection");
             let j = Json::parse(&line)?;
+            if j.get("id").and_then(|v| v.as_u64()) != Some(id) {
+                continue; // another request multiplexed on this connection
+            }
             match j.str("event")? {
                 "tokens" => stream_events += 1,
                 "done" => {
@@ -322,6 +398,8 @@ impl Client {
                         tpot_ms: j.f64("tpot_ms")?,
                         iterations: j.usize("iterations")?,
                         stream_events,
+                        queue_ms: j.get("queue_ms").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        ttft_ms: j.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
                     });
                 }
                 "error" => anyhow::bail!("server error: {}", j.str("message")?),
@@ -329,10 +407,139 @@ impl Client {
             }
         }
     }
+
+    /// Fetches a parsed stats snapshot.
+    pub fn stats(&mut self) -> crate::Result<Json> {
+        writeln!(self.writer, "{}", r#"{"stats": true}"#)?;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed connection");
+            let j = Json::parse(&line)?;
+            if j.get("event").and_then(|v| v.as_str()) == Some("stats") {
+                return Ok(j);
+            }
+        }
+    }
 }
 
-/// In-process mock engine for protocol tests (echoes the prompt).
+/// Aggregate result of one concurrent-client wave against a server
+/// (shared by the figures harness, `cargo bench`, and e2e drivers).
+#[derive(Debug, Clone)]
+pub struct WaveStats {
+    pub clients: usize,
+    pub tokens: usize,
+    pub wall_s: f64,
+    pub tok_per_s: f64,
+    pub e2e_ms_mean: f64,
+    pub ttft_ms_mean: f64,
+    pub queue_ms_mean: f64,
+}
+
+/// Fires `clients` concurrent one-request clients (prompts assigned
+/// round-robin) at `addr` and aggregates their latency/throughput.
+pub fn client_wave(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+) -> crate::Result<WaveStats> {
+    anyhow::ensure!(!prompts.is_empty(), "client_wave needs at least one prompt");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let prompt = prompts[i % prompts.len()].clone();
+            std::thread::spawn(move || -> crate::Result<(usize, f64, f64, f64)> {
+                let mut c = Client::connect(&addr)?;
+                let t = Instant::now();
+                let r = c.generate(i as u64, &prompt, max_new)?;
+                Ok((r.tokens.len(), t.elapsed().as_secs_f64(), r.ttft_ms, r.queue_ms))
+            })
+        })
+        .collect();
+    let mut tokens = 0usize;
+    let (mut e2e, mut ttft, mut queue) = (0.0f64, 0.0f64, 0.0f64);
+    for h in handles {
+        let (tk, e, tf, q) =
+            h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+        tokens += tk;
+        e2e += e;
+        ttft += tf;
+        queue += q;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let n = clients.max(1) as f64;
+    Ok(WaveStats {
+        clients,
+        tokens,
+        wall_s,
+        tok_per_s: tokens as f64 / wall_s.max(1e-9),
+        e2e_ms_mean: e2e / n * 1e3,
+        ttft_ms_mean: ttft / n,
+        queue_ms_mean: queue / n,
+    })
+}
+
+/// In-process mock engine for protocol tests (echoes the prompt, three
+/// tokens per step).
 pub struct EchoEngine;
+
+struct EchoTask {
+    tokens: Vec<u32>,
+    emitted: usize,
+    state: TaskState,
+}
+
+impl DecodeTask for EchoTask {
+    fn state(&self) -> TaskState {
+        self.state
+    }
+
+    fn step(&mut self) -> crate::Result<StepOutcome> {
+        match self.state {
+            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
+            TaskState::Prefill => {
+                self.state = if self.tokens.is_empty() {
+                    TaskState::Done
+                } else {
+                    TaskState::Iterate
+                };
+                Ok(StepOutcome { tokens: vec![], state: self.state })
+            }
+            TaskState::Iterate => {
+                let n = 3.min(self.tokens.len() - self.emitted);
+                let chunk = self.tokens[self.emitted..self.emitted + n].to_vec();
+                self.emitted += n;
+                if self.emitted >= self.tokens.len() {
+                    self.state = TaskState::Done;
+                }
+                Ok(StepOutcome { tokens: chunk, state: self.state })
+            }
+        }
+    }
+
+    fn headroom(&self) -> usize {
+        usize::MAX / 2
+    }
+
+    fn finish(self: Box<Self>) -> Generation {
+        Generation {
+            iterations: self.emitted.div_ceil(3),
+            tokens: self.tokens[..self.emitted].to_vec(),
+            seconds: 1e-4,
+            prefill_seconds: 1e-5,
+            recorder: Recorder::new(),
+        }
+    }
+}
+
+impl StepEngine for EchoEngine {
+    fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let tokens: Vec<u32> = prompt.iter().copied().cycle().take(max_new).collect();
+        Ok(Box::new(EchoTask { tokens, emitted: 0, state: TaskState::Prefill }))
+    }
+}
 
 impl Engine for EchoEngine {
     fn name(&self) -> String {
@@ -344,18 +551,149 @@ impl Engine for EchoEngine {
         prompt: &[u32],
         max_new: usize,
         sink: crate::engine::TokenSink,
-    ) -> crate::Result<crate::engine::Generation> {
-        let tokens: Vec<u32> = prompt.iter().copied().cycle().take(max_new).collect();
-        for chunk in tokens.chunks(3) {
-            sink(chunk);
+    ) -> crate::Result<Generation> {
+        let task = self.begin(prompt, max_new)?;
+        drive(task, sink)
+    }
+}
+
+/// Configurable mock step engine for scheduler tests: per-step latency,
+/// chunked emission, a bounded per-session "KV capacity", and a shared
+/// gauge of slots held so tests can assert cancellation frees them.
+pub struct MockStepEngine {
+    /// Simulated device time per step.
+    pub step_delay: std::time::Duration,
+    pub tokens_per_step: usize,
+    /// Simulated per-session KV capacity in tokens.
+    pub capacity: usize,
+    /// Live "KV slots" across all of this engine's sessions (prompt +
+    /// generated tokens); decremented by task drop.
+    pub slots_in_use: Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl MockStepEngine {
+    pub fn new(step_delay_ms: u64, tokens_per_step: usize, capacity: usize) -> Self {
+        Self {
+            step_delay: std::time::Duration::from_millis(step_delay_ms),
+            tokens_per_step: tokens_per_step.max(1),
+            capacity,
+            slots_in_use: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
         }
-        Ok(crate::engine::Generation {
-            tokens,
-            iterations: max_new.div_ceil(3),
-            seconds: 1e-4,
-            prefill_seconds: 1e-5,
-            recorder: crate::metrics::Recorder::new(),
-        })
+    }
+}
+
+struct MockTask {
+    state: TaskState,
+    prompt_len: usize,
+    produced: usize,
+    max_new: usize,
+    per_step: usize,
+    delay: std::time::Duration,
+    capacity: usize,
+    /// Slots this task holds (mirrored into the engine gauge).
+    held: usize,
+    gauge: Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl MockTask {
+    fn hold(&mut self, n: usize) {
+        self.held += n;
+        self.gauge.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+impl Drop for MockTask {
+    fn drop(&mut self) {
+        // "Free the KV caches": return every held slot.
+        self.gauge.fetch_sub(self.held, Ordering::Relaxed);
+    }
+}
+
+impl DecodeTask for MockTask {
+    fn state(&self) -> TaskState {
+        self.state
+    }
+
+    fn step(&mut self) -> crate::Result<StepOutcome> {
+        match self.state {
+            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
+            TaskState::Prefill => {
+                std::thread::sleep(self.delay);
+                self.hold(self.prompt_len);
+                self.state = if self.max_new == 0 || self.headroom() == 0 {
+                    TaskState::Done
+                } else {
+                    TaskState::Iterate
+                };
+                Ok(StepOutcome { tokens: vec![], state: self.state })
+            }
+            TaskState::Iterate => {
+                std::thread::sleep(self.delay);
+                let n = self
+                    .per_step
+                    .min(self.max_new - self.produced)
+                    .min(self.headroom());
+                let tokens: Vec<u32> =
+                    (self.produced..self.produced + n).map(|x| x as u32).collect();
+                self.produced += n;
+                self.hold(n);
+                if self.produced >= self.max_new || self.headroom() == 0 {
+                    self.state = TaskState::Done;
+                }
+                Ok(StepOutcome { tokens, state: self.state })
+            }
+        }
+    }
+
+    fn headroom(&self) -> usize {
+        self.capacity.saturating_sub(self.held)
+    }
+
+    fn kv_slots_in_use(&self) -> usize {
+        self.held
+    }
+
+    fn finish(self: Box<Self>) -> Generation {
+        Generation {
+            tokens: (0..self.produced).map(|x| x as u32).collect(),
+            iterations: self.produced.div_ceil(self.per_step),
+            seconds: self.delay.as_secs_f64() * self.produced.div_ceil(self.per_step) as f64,
+            prefill_seconds: self.delay.as_secs_f64(),
+            recorder: Recorder::new(),
+        }
+    }
+}
+
+impl StepEngine for MockStepEngine {
+    fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        Ok(Box::new(MockTask {
+            state: TaskState::Prefill,
+            prompt_len: prompt.len(),
+            produced: 0,
+            max_new,
+            per_step: self.tokens_per_step,
+            delay: self.step_delay,
+            capacity: self.capacity,
+            held: 0,
+            gauge: self.slots_in_use.clone(),
+        }))
+    }
+}
+
+impl Engine for MockStepEngine {
+    fn name(&self) -> String {
+        "mock-step".into()
+    }
+
+    fn generate_with(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        sink: crate::engine::TokenSink,
+    ) -> crate::Result<Generation> {
+        let task = self.begin(prompt, max_new)?;
+        drive(task, sink)
     }
 }
 
@@ -364,7 +702,7 @@ pub fn group_events(lines: &[String]) -> BTreeMap<u64, Vec<Json>> {
     let mut out: BTreeMap<u64, Vec<Json>> = BTreeMap::new();
     for l in lines {
         if let Ok(j) = Json::parse(l) {
-            let id = j.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(0);
             out.entry(id).or_default().push(j);
         }
     }
@@ -375,19 +713,25 @@ pub fn group_events(lines: &[String]) -> BTreeMap<u64, Vec<Json>> {
 mod tests {
     use super::*;
 
+    fn opts(stream: bool) -> ServeOpts {
+        ServeOpts { max_queue: 8, max_sessions: 4, stream }
+    }
+
     #[test]
     fn echo_roundtrip_with_streaming() {
-        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, true).unwrap();
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(true)).unwrap();
         let mut c = Client::connect(&srv.addr).unwrap();
         let r = c.generate(1, &[10, 20, 30], 7).unwrap();
         assert_eq!(r.tokens, vec![10, 20, 30, 10, 20, 30, 10]);
         assert!(r.stream_events >= 2, "expected streamed chunks");
+        assert!(r.queue_ms >= 0.0);
+        assert!(r.ttft_ms >= 0.0);
         assert_eq!(srv.stats.requests.load(std::sync::atomic::Ordering::Relaxed), 1);
     }
 
     #[test]
     fn multiple_sequential_requests_share_the_engine() {
-        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
         let mut c = Client::connect(&srv.addr).unwrap();
         for i in 0..5 {
             let r = c.generate(i, &[1, 2], 4).unwrap();
@@ -398,8 +742,8 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_clients_fcfs() {
-        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+    fn concurrent_clients_all_complete() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
         let addr = srv.addr;
         let handles: Vec<_> = (0..4)
             .map(|i| {
@@ -417,7 +761,7 @@ mod tests {
 
     #[test]
     fn malformed_requests_get_error_events() {
-        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
         let sock = TcpStream::connect(srv.addr).unwrap();
         let mut w = sock.try_clone().unwrap();
         writeln!(w, "this is not json").unwrap();
@@ -430,7 +774,7 @@ mod tests {
 
     #[test]
     fn text_requests_are_byte_tokenized() {
-        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), 8, false).unwrap();
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
         let sock = TcpStream::connect(srv.addr).unwrap();
         let mut w = sock.try_clone().unwrap();
         writeln!(w, r#"{{"id": 3, "text": "hi", "max_new": 2}}"#).unwrap();
@@ -443,5 +787,50 @@ mod tests {
         let toks: Vec<usize> =
             j.arr("tokens").unwrap().iter().map(|t| t.as_usize().unwrap()).collect();
         assert_eq!(toks, vec![104, 105]);
+    }
+
+    #[test]
+    fn string_ids_beyond_f64_precision_roundtrip() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
+        let sock = TcpStream::connect(srv.addr).unwrap();
+        let mut w = sock.try_clone().unwrap();
+        let big = u64::MAX - 7;
+        writeln!(w, r#"{{"id": "{big}", "prompt": [5], "max_new": 2}}"#).unwrap();
+        let mut r = BufReader::new(sock);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.str("event").unwrap(), "done");
+        assert_eq!(j.u64("id").unwrap(), big, "id must survive bit-exact");
+    }
+
+    #[test]
+    fn stats_request_reports_counters() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        let _ = c.generate(1, &[4, 5], 6).unwrap();
+        let s = c.stats().unwrap();
+        assert_eq!(s.u64("requests").unwrap(), 1);
+        assert_eq!(s.u64("tokens").unwrap(), 6);
+        assert_eq!(s.u64("cancelled").unwrap(), 0);
+        assert!(s.f64("queue_delay_ms_mean").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn parse_request_accepts_numeric_and_string_ids() {
+        let Ok(Req::Generate { id, .. }) = parse_request(r#"{"id": 42, "prompt": [1]}"#) else {
+            panic!("numeric id rejected")
+        };
+        assert_eq!(id, 42);
+        let Ok(Req::Generate { id, .. }) =
+            parse_request(r#"{"id": "18446744073709551615", "prompt": [1]}"#)
+        else {
+            panic!("string id rejected")
+        };
+        assert_eq!(id, u64::MAX);
+        assert!(parse_request(r#"{"prompt": []}"#).is_err(), "empty prompt");
+        // Invalid ids are rejected loudly, not silently mapped to 0.
+        assert!(parse_request(r#"{"id": 1.5, "prompt": [1]}"#).is_err());
+        assert!(parse_request(r#"{"id": -3, "prompt": [1]}"#).is_err());
     }
 }

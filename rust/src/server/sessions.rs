@@ -1,0 +1,360 @@
+//! Continuous multi-session serving: the scheduler that replaced the
+//! single-tenant FCFS worker.
+//!
+//! One worker thread still owns the engine (the device is single-tenant —
+//! submission order is execution order), but instead of running each
+//! request to completion it keeps up to `max_sessions` resumable
+//! [`DecodeTask`]s live and round-robins **one `step()` per session per
+//! scheduling round**. Every live client therefore streams tokens every
+//! round — a long generation can no longer block every client behind it —
+//! and the serving regime becomes iteration-level interleaving (the
+//! SpecInfer/vLLM-style continuous batching discipline, at step rather
+//! than batch granularity).
+//!
+//! * **Admission control** — a job leaves the queue only when a session
+//!   slot is free, and its freshly opened task must report enough
+//!   [`DecodeTask::headroom`] (KV-slot budget, via
+//!   `engine::Session::headroom`) to cover the prompt; otherwise the
+//!   request is rejected with a typed error before any device work.
+//! * **Cancellation** — each connection owns a cancel flag, raised when
+//!   the client disconnects (reader EOF or a failed write). The scheduler
+//!   checks it before every step and simply drops the session: the task
+//!   owns its KV caches, so the drop frees them immediately and the slot
+//!   admits the next queued request in the same round.
+//! * **Metrics** — per-request queueing delay, time-to-first-token and
+//!   decode throughput are recorded into the shared
+//!   [`ServerStats`](super::ServerStats) recorder and echoed on each
+//!   `done` event.
+//!
+//! Worker→connection traffic is the typed [`ServerEvent`] enum; JSON only
+//! exists at the connection boundary (`ServerEvent::to_json`). The old
+//! per-request pump that sniffed `"event":"done"` substrings is gone
+//! entirely: one writer pump per connection forwards every event and
+//! request lifetimes are tracked by the scheduler, not the wire format.
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::engine::{DecodeTask, StepEngine};
+use crate::util::json::Json;
+
+use super::{CancelFlag, ServerStats, StatsSnapshot};
+
+/// Sliding window for the per-request serving series: bounds the stats
+/// recorder's memory (and each snapshot's percentile scan) on servers
+/// that run indefinitely.
+const STATS_WINDOW: usize = 4096;
+
+/// Final per-request summary carried by [`ServerEvent::Done`].
+#[derive(Debug, Clone)]
+pub struct DoneSummary {
+    pub tokens: Vec<u32>,
+    pub aal: f64,
+    pub tpot_ms: f64,
+    pub iterations: usize,
+    pub prefill_ms: f64,
+    /// Time the request waited in the queue before admission.
+    pub queue_ms: f64,
+    /// Enqueue → first committed token (NaN when nothing was generated).
+    pub ttft_ms: f64,
+    /// Decode throughput over the session's admitted lifetime.
+    pub tok_per_s: f64,
+}
+
+/// Typed worker→connection event stream. One connection multiplexes many
+/// requests; `id` keys the demux client-side.
+#[derive(Debug, Clone)]
+pub enum ServerEvent {
+    /// Tokens committed by one scheduling step (stream mode only).
+    Tokens { id: u64, tokens: Vec<u32> },
+    /// Generation finished.
+    Done { id: u64, summary: DoneSummary },
+    /// Request-level failure. `id` is `None` for lines that never parsed
+    /// far enough to have one.
+    Error { id: Option<u64>, message: String },
+    /// Reply to a `{"stats": true}` request (produced connection-side).
+    Stats(StatsSnapshot),
+}
+
+impl ServerEvent {
+    /// Wire form (one JSON object per line). Ids serialize via
+    /// [`Json::from_u64`], so they survive the full u64 range.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerEvent::Tokens { id, tokens } => Json::obj(vec![
+                ("id", Json::from_u64(*id)),
+                ("event", Json::Str("tokens".into())),
+                ("tokens", Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ]),
+            ServerEvent::Done { id, summary } => Json::obj(vec![
+                ("id", Json::from_u64(*id)),
+                ("event", Json::Str("done".into())),
+                (
+                    "tokens",
+                    Json::Arr(summary.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+                ("aal", Json::Num(summary.aal)),
+                ("tpot_ms", Json::Num(summary.tpot_ms)),
+                ("iterations", Json::Num(summary.iterations as f64)),
+                ("prefill_ms", Json::Num(summary.prefill_ms)),
+                ("queue_ms", Json::Num(summary.queue_ms)),
+                ("ttft_ms", Json::Num(summary.ttft_ms)),
+                ("tok_per_s", Json::Num(summary.tok_per_s)),
+            ]),
+            ServerEvent::Error { id, message } => {
+                let mut fields = Vec::new();
+                if let Some(id) = id {
+                    fields.push(("id", Json::from_u64(*id)));
+                }
+                fields.push(("event", Json::Str("error".into())));
+                fields.push(("message", Json::Str(message.clone())));
+                Json::obj(fields)
+            }
+            ServerEvent::Stats(s) => s.to_json(),
+        }
+    }
+}
+
+/// One queued generation request.
+pub struct Job {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub reply: mpsc::Sender<ServerEvent>,
+    pub stream: bool,
+    /// Connection-level cancel flag (client disconnected).
+    pub cancelled: CancelFlag,
+    pub enqueued: Instant,
+}
+
+/// A live, admitted session: one resumable task plus its timing marks.
+struct ServeSession {
+    job: Job,
+    task: Box<dyn DecodeTask>,
+    admitted: Instant,
+    first_token: Option<Instant>,
+}
+
+/// The continuous-serving scheduler loop (the worker thread body).
+pub(super) fn run_worker(
+    engine: Box<dyn StepEngine + Send>,
+    job_rx: mpsc::Receiver<Job>,
+    stats: Arc<ServerStats>,
+    stop: CancelFlag,
+    max_sessions: usize,
+) {
+    let mut engine = engine;
+    let max_sessions = max_sessions.max(1);
+    let mut live: Vec<ServeSession> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        // Admission: fill free session slots from the queue.
+        while live.len() < max_sessions {
+            match job_rx.try_recv() {
+                Ok(job) => admit(&mut engine, job, &mut live, &stats),
+                Err(_) => break,
+            }
+        }
+        if live.is_empty() {
+            stats.active_sessions.store(0, Ordering::Relaxed);
+            stats.kv_slots_in_use.store(0, Ordering::Relaxed);
+            // Idle: block for work (bounded, so `stop` stays responsive).
+            match job_rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(job) => admit(&mut engine, job, &mut live, &stats),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            continue;
+        }
+        round(&mut live, &stats);
+        let kv: usize = live.iter().map(|s| s.task.kv_slots_in_use()).sum();
+        stats.active_sessions.store(live.len() as u64, Ordering::Relaxed);
+        stats.kv_slots_in_use.store(kv as u64, Ordering::Relaxed);
+    }
+    // Dropping `live` drops every task → all session KV caches freed.
+    drop(live);
+    stats.active_sessions.store(0, Ordering::Relaxed);
+    stats.kv_slots_in_use.store(0, Ordering::Relaxed);
+}
+
+/// Opens a task for `job` and admits it, or rejects it (KV headroom /
+/// engine failure) with a typed error. Every dequeued job counts as a
+/// request, matching the original FCFS accounting.
+fn admit(
+    engine: &mut Box<dyn StepEngine + Send>,
+    job: Job,
+    live: &mut Vec<ServeSession>,
+    stats: &ServerStats,
+) {
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    if job.cancelled.load(Ordering::Relaxed) {
+        // Client vanished while the job sat in the queue.
+        stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    match engine.begin(&job.prompt, job.max_new) {
+        Ok(task) => {
+            if task.headroom() < job.prompt.len() + 1 {
+                stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let message = format!(
+                    "insufficient KV headroom for a {}-token prompt (headroom {})",
+                    job.prompt.len(),
+                    task.headroom()
+                );
+                let _ = job.reply.send(ServerEvent::Error { id: Some(job.id), message });
+                // `task` drops here: its freshly allocated caches are freed.
+            } else {
+                let queue_s = job.enqueued.elapsed().as_secs_f64();
+                stats
+                    .recorder
+                    .lock()
+                    .unwrap()
+                    .record_windowed("server.queue_delay_s", queue_s, STATS_WINDOW);
+                live.push(ServeSession {
+                    job,
+                    task,
+                    admitted: Instant::now(),
+                    first_token: None,
+                });
+            }
+        }
+        Err(e) => {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = job
+                .reply
+                .send(ServerEvent::Error { id: Some(job.id), message: format!("{e:#}") });
+        }
+    }
+}
+
+/// One scheduling round: exactly one `step()` per live session, removing
+/// sessions as they cancel, finish, or fail.
+fn round(live: &mut Vec<ServeSession>, stats: &ServerStats) {
+    let mut i = 0;
+    while i < live.len() {
+        if live[i].job.cancelled.load(Ordering::Relaxed) {
+            drop(live.remove(i)); // frees the task's KV caches now
+            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        match live[i].task.step() {
+            Ok(out) => {
+                let done = out.done();
+                if !out.tokens.is_empty() {
+                    let s = &mut live[i];
+                    if s.first_token.is_none() {
+                        s.first_token = Some(Instant::now());
+                        let ttft = s.job.enqueued.elapsed().as_secs_f64();
+                        stats
+                            .recorder
+                            .lock()
+                            .unwrap()
+                            .record_windowed("server.ttft_s", ttft, STATS_WINDOW);
+                    }
+                    if s.job.stream {
+                        let ev = ServerEvent::Tokens { id: s.job.id, tokens: out.tokens };
+                        if s.job.reply.send(ev).is_err() {
+                            // Connection dropped between rounds.
+                            drop(live.remove(i));
+                            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    }
+                }
+                if done {
+                    let s = live.remove(i);
+                    finish_session(s, stats);
+                    continue;
+                }
+                i += 1;
+            }
+            Err(e) => {
+                let s = live.remove(i);
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = s
+                    .job
+                    .reply
+                    .send(ServerEvent::Error { id: Some(s.job.id), message: format!("{e:#}") });
+                continue;
+            }
+        }
+    }
+}
+
+/// Completes a session: final metrics + the typed `done` event.
+fn finish_session(s: ServeSession, stats: &ServerStats) {
+    let ServeSession { job, task, admitted, first_token } = s;
+    let g = task.finish();
+    stats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
+    let active_s = admitted.elapsed().as_secs_f64();
+    let tok_per_s = if active_s > 0.0 { g.tokens.len() as f64 / active_s } else { 0.0 };
+    let queue_ms = admitted.duration_since(job.enqueued).as_secs_f64() * 1e3;
+    let ttft_ms = first_token
+        .map(|t| t.duration_since(job.enqueued).as_secs_f64() * 1e3)
+        .unwrap_or(f64::NAN);
+    stats
+        .recorder
+        .lock()
+        .unwrap()
+        .record_windowed("server.tok_per_s", tok_per_s, STATS_WINDOW);
+    let aal = g.aal();
+    let tpot_ms = g.tpot() * 1e3;
+    let summary = DoneSummary {
+        aal,
+        tpot_ms,
+        iterations: g.iterations,
+        prefill_ms: g.prefill_seconds * 1e3,
+        queue_ms,
+        ttft_ms,
+        tok_per_s,
+        tokens: g.tokens,
+    };
+    let _ = job.reply.send(ServerEvent::Done { id: job.id, summary });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_serialize_with_ids_and_kind() {
+        let ev = ServerEvent::Tokens { id: 7, tokens: vec![1, 2] };
+        let j = ev.to_json();
+        assert_eq!(j.str("event").unwrap(), "tokens");
+        assert_eq!(j.u64("id").unwrap(), 7);
+        let err = ServerEvent::Error { id: None, message: "boom".into() };
+        assert_eq!(err.to_json().str("event").unwrap(), "error");
+        assert!(err.to_json().get("id").is_none());
+    }
+
+    #[test]
+    fn done_event_carries_serving_metrics() {
+        let ev = ServerEvent::Done {
+            id: 3,
+            summary: DoneSummary {
+                tokens: vec![9],
+                aal: 2.0,
+                tpot_ms: 1.5,
+                iterations: 4,
+                prefill_ms: 0.3,
+                queue_ms: 12.0,
+                ttft_ms: 20.0,
+                tok_per_s: 800.0,
+            },
+        };
+        let j = ev.to_json();
+        assert_eq!(j.str("event").unwrap(), "done");
+        assert!((j.f64("queue_ms").unwrap() - 12.0).abs() < 1e-9);
+        assert!((j.f64("ttft_ms").unwrap() - 20.0).abs() < 1e-9);
+        assert!((j.f64("tok_per_s").unwrap() - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn huge_ids_survive_the_wire_format() {
+        let id = u64::MAX - 1;
+        let ev = ServerEvent::Tokens { id, tokens: vec![] };
+        let line = ev.to_json().to_string();
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.u64("id").unwrap(), id);
+    }
+}

@@ -47,6 +47,20 @@ impl Json {
         self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
     }
 
+    /// Unsigned-64 accessor for identifiers. Accepts an integral number
+    /// (exact for magnitudes below 2^53 — the f64 integer range) or a
+    /// decimal string (exact for the full u64 range; the server protocol
+    /// uses this form for ids that do not fit a JSON number losslessly).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9.007_199_254_740_992e15 => {
+                Some(*x as u64)
+            }
+            Json::Str(s) => s.parse::<u64>().ok(),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -85,6 +99,12 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("'{key}' not a non-negative integer"))
     }
 
+    pub fn u64(&self, key: &str) -> crate::Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("'{key}' not a u64 (number or decimal string)"))
+    }
+
     pub fn str(&self, key: &str) -> crate::Result<&str> {
         self.req(key)?.as_str().ok_or_else(|| anyhow::anyhow!("'{key}' not a string"))
     }
@@ -112,6 +132,17 @@ impl Json {
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serializes a u64 identifier losslessly: a JSON number while the
+    /// value fits the f64 integer range, a decimal string beyond it
+    /// (mirrors [`Json::as_u64`], which accepts both).
+    pub fn from_u64(x: u64) -> Json {
+        if x <= (1u64 << 53) {
+            Json::Num(x as f64)
+        } else {
+            Json::Str(x.to_string())
+        }
     }
 
     pub fn from_f32s(xs: &[f32]) -> Json {
@@ -474,6 +505,23 @@ mod tests {
             let back = Json::parse(&s).unwrap().as_f64().unwrap();
             assert_eq!(back, x, "via {s}");
         }
+    }
+
+    #[test]
+    fn u64_ids_roundtrip_losslessly() {
+        // Small ids travel as numbers.
+        let small = Json::from_u64(7);
+        assert_eq!(small, Json::Num(7.0));
+        assert_eq!(Json::parse(&small.to_string()).unwrap().as_u64(), Some(7));
+        // Ids beyond the f64 integer range travel as decimal strings.
+        let big_val = u64::MAX - 3;
+        let big = Json::from_u64(big_val);
+        assert_eq!(Json::parse(&big.to_string()).unwrap().as_u64(), Some(big_val));
+        // Rejections: negatives, fractions, non-numeric strings.
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Str("12x".into()).as_u64(), None);
+        assert_eq!(Json::Str("12".into()).as_u64(), Some(12));
     }
 
     #[test]
