@@ -1,0 +1,26 @@
+# Convenience entry points; see README.md for the full tour.
+
+.PHONY: artifacts test figures fmt doc
+
+# AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
+# needs the Python toolchain with JAX). The root symlink keeps the Python
+# parity tests — which look for ./artifacts — working too.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+	ln -sfn rust/artifacts artifacts
+
+# Tier-1 verification: build + the artifact-free unit/property/server tests
+# (artifact-gated tests skip cleanly when `make artifacts` has not run).
+test:
+	cd rust && cargo build --release && cargo test -q
+
+# Regenerate every paper table/figure (requires artifacts).
+figures:
+	cd rust && cargo run --release -- figures --exp all
+
+fmt:
+	cd rust && cargo fmt
+
+# The documented-surface gate CI enforces.
+doc:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

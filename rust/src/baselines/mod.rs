@@ -26,12 +26,16 @@ use crate::runtime::Runtime;
 /// (`T_generative` in Eq. 2).
 pub struct VanillaEngine {
     rt: Runtime,
+    /// Verifier model name (the engine decodes with it directly).
     pub target: String,
+    /// Resident-weights compiled execution vs per-call restaging.
     pub compiled: bool,
+    /// RNG seed for new sessions (greedy decoding ignores it).
     pub seed: u64,
 }
 
 impl VanillaEngine {
+    /// Builds the engine and precompiles its decode/prefill widths.
     pub fn new(rt: &Runtime, target: &str, compiled: bool) -> Self {
         // Decode (w1) + the prefill chunk widths; avoids mid-run compiles.
         let _ = rt.precompile(target, &[1, 16, 32, 64]);
@@ -109,6 +113,10 @@ impl VanillaTask {
 impl DecodeTask for VanillaTask {
     fn state(&self) -> TaskState {
         self.state
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn step(&mut self) -> crate::Result<StepOutcome> {

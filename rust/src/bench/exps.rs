@@ -486,37 +486,75 @@ pub fn fig15(lab: &mut Lab) -> crate::Result<()> {
     lab.emit("fig15", &t)
 }
 
-/// Serving: throughput vs per-request latency as concurrent clients grow —
-/// the continuous multi-session scheduler's headline trade-off. One server
-/// (4 interleaved sessions max) absorbs each client wave; time-to-first-
-/// token and queueing delay come from the server's own `done` metrics.
+/// Serving: throughput vs per-request latency as concurrent clients grow,
+/// round-robin time-slicing vs cross-session batched verification
+/// (DESIGN.md §9). One server (4 session slots) absorbs each client wave;
+/// time-to-first-token and queueing delay come from the server's own
+/// `done` metrics. The headline check: batched throughput at ≥4 clients
+/// clears the round-robin baseline (the device stops idling between
+/// per-session verifies).
 pub fn serving(lab: &mut Lab) -> crate::Result<()> {
-    use crate::server::{client_wave, ServeOpts, Server};
+    use crate::server::{client_wave, ServeOpts, Server, WaveStats};
 
+    const MAX_SESSIONS: usize = 4;
     let max_new = lab.opts.max_new().min(24);
-    let mut cfg = EngineConfig::default();
-    cfg.drafter = "dft-xs".into();
-    cfg.target = "tgt-sm".into();
-    cfg.use_depth_predictor = false;
-    let engine = lab.spec(cfg)?;
     let prompts = lab.prompts("c4s")?;
-    let srv = Server::spawn(
-        "127.0.0.1:0",
-        Box::new(engine),
-        ServeOpts { max_queue: 64, max_sessions: 4, stream: true },
-    )?;
-    let mut t =
-        Table::new(&["clients", "tok_per_s", "e2e_ms_mean", "ttft_ms_mean", "queue_ms_mean"])
-            .with_title("Serving — throughput vs latency under concurrent clients (measured)");
     let sweep: &[usize] = if lab.opts.quick { &[1, 2] } else { &[1, 2, 4, 8] };
-    for &clients in sweep {
-        let w = client_wave(srv.addr, clients, &prompts.prompts, max_new)?;
+
+    // Shrink the tree envelope so four sessions fit the shared cache's
+    // per-session quota (capacity/4 slots each); the round-robin baseline
+    // runs the same envelope so the comparison isolates scheduling.
+    let cfg_for = |batched: bool| {
+        let mut cfg = EngineConfig::default();
+        cfg.drafter = "dft-xs".into();
+        cfg.target = "tgt-sm".into();
+        cfg.use_depth_predictor = false;
+        cfg.max_depth = 4;
+        cfg.max_width = 4;
+        cfg.max_verify = 16;
+        cfg.batch.enabled = batched;
+        cfg.batch.max_sessions = MAX_SESSIONS;
+        cfg
+    };
+
+    let mut results: Vec<(&str, usize, WaveStats)> = Vec::new();
+    for (mode, batched) in [("round_robin", false), ("batched", true)] {
+        let engine = lab.spec(cfg_for(batched))?;
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: MAX_SESSIONS, stream: true, batched },
+        )?;
+        for &clients in sweep {
+            let w = client_wave(srv.addr, clients, &prompts.prompts, max_new)?;
+            results.push((mode, clients, w));
+        }
+    }
+
+    let mut t = Table::new(&[
+        "mode",
+        "clients",
+        "tok_per_s",
+        "e2e_ms_mean",
+        "ttft_ms_mean",
+        "queue_ms_mean",
+        "speedup_vs_rr",
+    ])
+    .with_title("Serving — round-robin vs cross-session batched verification (measured)");
+    for (mode, clients, w) in &results {
+        let rr = results
+            .iter()
+            .find(|(m, c, _)| *m == "round_robin" && c == clients)
+            .map(|(_, _, w)| w.tok_per_s)
+            .unwrap_or(f64::NAN);
         t.row(&[
+            mode.to_string(),
             clients.to_string(),
             format!("{:.1}", w.tok_per_s),
             format!("{:.1}", w.e2e_ms_mean),
             format!("{:.1}", w.ttft_ms_mean),
             format!("{:.1}", w.queue_ms_mean),
+            format!("{:.2}x", w.tok_per_s / rr),
         ]);
     }
     lab.emit("serving", &t)

@@ -20,6 +20,7 @@ use crate::metrics::{Recorder, Table};
 use crate::objective::LatencyModel;
 use crate::runtime::Runtime;
 
+/// The paper's (drafter, target) model pairs (the Fig. 10 grid).
 pub const PAIRS: [(&str, &str); 4] = [
     ("dft-xs", "tgt-sm"),
     ("dft-sm", "tgt-sm"),
@@ -30,10 +31,13 @@ pub const PAIRS: [(&str, &str); 4] = [
 /// Harness options.
 #[derive(Debug, Clone)]
 pub struct BenchOpts {
+    /// AOT artifact bundle directory.
     pub artifacts_dir: PathBuf,
+    /// Where experiment CSVs are written.
     pub out_dir: PathBuf,
     /// Quick mode: fewer prompts / shorter generations (CI).
     pub quick: bool,
+    /// Base RNG seed for the workload.
     pub seed: u64,
 }
 
@@ -49,6 +53,7 @@ impl Default for BenchOpts {
 }
 
 impl BenchOpts {
+    /// Prompts per experiment cell.
     pub fn prompts(&self) -> usize {
         if self.quick {
             2
@@ -57,6 +62,7 @@ impl BenchOpts {
         }
     }
 
+    /// Generation length per prompt.
     pub fn max_new(&self) -> usize {
         if self.quick {
             24
@@ -69,17 +75,25 @@ impl BenchOpts {
 /// Aggregated result of running one engine over a prompt set.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
+    /// Engine label (for table rows).
     pub engine: String,
+    /// Mean average accepted length.
     pub aal: f64,
+    /// Mean per-token latency (seconds).
     pub tpot: f64,
+    /// Mean per-iteration latency (seconds).
     pub step_latency: f64,
+    /// Total tokens generated across the prompts.
     pub tokens: usize,
+    /// Merged per-stage recorder across the runs.
     pub recorder: Recorder,
 }
 
 /// Shared experiment state.
 pub struct Lab {
+    /// Device runtime with all four models loaded.
     pub rt: Runtime,
+    /// Harness options.
     pub opts: BenchOpts,
     lat: HashMap<(String, String), LatencyModel>,
     prompts: HashMap<String, PromptSet>,
@@ -88,11 +102,13 @@ pub struct Lab {
 }
 
 impl Lab {
+    /// Loads the runtime over the artifact bundle.
     pub fn new(opts: BenchOpts) -> crate::Result<Self> {
         let rt = Runtime::load(&opts.artifacts_dir, &["dft-xs", "dft-sm", "tgt-sm", "tgt-lg"])?;
         Ok(Self { rt, opts, lat: HashMap::new(), prompts: HashMap::new(), ranks: HashMap::new() })
     }
 
+    /// Cached latency model for a (drafter, target) pair.
     pub fn latency(&mut self, drafter: &str, target: &str) -> crate::Result<LatencyModel> {
         let key = (drafter.to_string(), target.to_string());
         if let Some(l) = self.lat.get(&key) {
@@ -105,6 +121,7 @@ impl Lab {
         Ok(l)
     }
 
+    /// Cached prompt set for a dataset.
     pub fn prompts(&mut self, dataset: &str) -> crate::Result<PromptSet> {
         if let Some(p) = self.prompts.get(dataset) {
             return Ok(p.clone());
@@ -162,6 +179,7 @@ impl Lab {
         Ok(SpecDecoder::new(&self.rt, cfg, lat, None))
     }
 
+    /// Builds the non-speculative floor engine.
     pub fn vanilla(&self, target: &str) -> VanillaEngine {
         VanillaEngine::new(&self.rt, target, true)
     }
@@ -200,6 +218,7 @@ impl Lab {
         Ok(())
     }
 
+    /// CSV output path for an experiment.
     pub fn out_csv(&self, name: &str) -> PathBuf {
         self.opts.out_dir.join(format!("{name}.csv"))
     }
@@ -210,6 +229,14 @@ pub fn artifacts_available(dir: &Path) -> bool {
     dir.join("manifest.json").exists() && dir.join("dft-xs.weights.bin").exists() && dir.join("tgt-lg.weights.bin").exists()
 }
 
+/// Every experiment name `--exp` accepts (also what `--exp all` runs).
+/// EXPERIMENTS.md's inventory table lists exactly these names — a unit
+/// test parses that table and fails on drift in either direction.
+pub const EXPERIMENTS: [&str; 11] = [
+    "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+    "serving",
+];
+
 /// Runs one experiment (or `all`) by name.
 pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
     anyhow::ensure!(
@@ -218,11 +245,7 @@ pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
     );
     std::fs::create_dir_all(&opts.out_dir)?;
     let mut lab = Lab::new(opts)?;
-    let all = [
-        "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-        "serving",
-    ];
-    let list: Vec<&str> = if name == "all" { all.to_vec() } else { vec![name] };
+    let list: Vec<&str> = if name == "all" { EXPERIMENTS.to_vec() } else { vec![name] };
     for exp in list {
         println!("\n================ {exp} ================\n");
         match exp {
@@ -241,4 +264,43 @@ pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// EXPERIMENTS.md's inventory table and the `--exp` registry must
+    /// name exactly the same experiments (the docs-drift guard).
+    #[test]
+    fn experiments_md_matches_exp_registry() {
+        let md = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../EXPERIMENTS.md"));
+        let inventory = md
+            .split("## Inventory")
+            .nth(1)
+            .expect("EXPERIMENTS.md has an '## Inventory' section")
+            .split("\n## ")
+            .next()
+            .unwrap();
+        let mut documented: Vec<&str> = Vec::new();
+        for line in inventory.lines() {
+            // Table rows: `| `name` | ... ` — first backticked cell.
+            let Some(rest) = line.strip_prefix("| `") else { continue };
+            let Some(name) = rest.split('`').next() else { continue };
+            documented.push(name);
+        }
+        assert!(!documented.is_empty(), "no experiment rows parsed from EXPERIMENTS.md");
+        for name in &documented {
+            assert!(
+                EXPERIMENTS.contains(name),
+                "EXPERIMENTS.md documents '{name}' but --exp does not accept it"
+            );
+        }
+        for name in EXPERIMENTS {
+            assert!(
+                documented.contains(&name),
+                "--exp accepts '{name}' but EXPERIMENTS.md does not document it"
+            );
+        }
+    }
 }

@@ -61,12 +61,35 @@ pub struct SamplingConfig {
     /// 0.0 = greedy. Tree acceptance switches to the stochastic
     /// (SpecInfer-style multi-branch residual) rule when > 0.
     pub temperature: f32,
+    /// RNG seed (per-request reproducibility).
     pub seed: u64,
 }
 
 impl Default for SamplingConfig {
     fn default() -> Self {
         Self { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// Cross-session batching (DESIGN.md §9): when enabled, the engine backs
+/// all concurrent sessions with **one** shared device cache per model
+/// side, partitioned into per-session slot ranges, and packs the ready
+/// sessions' verification trees into one width-padded device call per
+/// scheduling round (block-diagonal mask keeps sessions invisible to one
+/// another).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Share device caches and batch verification across sessions.
+    pub enabled: bool,
+    /// Sessions the shared cache is partitioned for. Each session's slot
+    /// quota is `(capacity - 1) / max_sessions`, so the tree envelope
+    /// (`max_depth × max_width + max_verify`) must fit the quota.
+    pub max_sessions: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { enabled: false, max_sessions: 4 }
     }
 }
 
@@ -95,13 +118,18 @@ pub struct EngineConfig {
     pub compiled: bool,
     /// EGT envelope.
     pub max_depth: usize,
+    /// Maximum equal-growth width per draft step.
     pub max_width: usize,
+    /// Verification-width budget (tokens per verifier call).
     pub max_verify: usize,
     /// Candidate children considered per expanded node.
     pub branch_candidates: usize,
+    /// Per-request sampling parameters.
     pub sampling: SamplingConfig,
     /// Hard cap on generated tokens per request.
     pub max_new_tokens: usize,
+    /// Cross-session batched verification (DESIGN.md §9).
+    pub batch: BatchConfig,
 }
 
 impl Default for EngineConfig {
@@ -121,6 +149,7 @@ impl Default for EngineConfig {
             branch_candidates: 8,
             sampling: SamplingConfig::default(),
             max_new_tokens: 128,
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -186,6 +215,7 @@ impl EngineConfig {
 /// Where artifacts live and which profile file to use.
 #[derive(Debug, Clone)]
 pub struct RuntimeConfig {
+    /// AOT artifact bundle directory.
     pub artifacts_dir: PathBuf,
     /// Latency profile (written by `yggdrasil profile`); optional — the
     /// runtime falls back to profiling at startup when absent.
@@ -207,26 +237,40 @@ impl Default for RuntimeConfig {
 /// Server binding / limits.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7777`.
     pub addr: String,
+    /// Bounded request-queue length.
     pub max_queue: usize,
     /// Concurrent decode sessions the continuous-serving scheduler
     /// interleaves (admission beyond this queues; see `server::sessions`).
     pub max_sessions: usize,
     /// Stream tokens as they are accepted (vs. one final response).
     pub stream: bool,
+    /// Drive live sessions through the engine's batched round
+    /// (`StepEngine::step_batch`) instead of serial round-robin stepping.
+    pub batched: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { addr: "127.0.0.1:7777".into(), max_queue: 256, max_sessions: 4, stream: true }
+        Self {
+            addr: "127.0.0.1:7777".into(),
+            max_queue: 256,
+            max_sessions: 4,
+            stream: true,
+            batched: true,
+        }
     }
 }
 
 /// Top-level config file (`--config foo.json`).
 #[derive(Debug, Clone, Default)]
 pub struct AppConfig {
+    /// Artifact/profile locations.
     pub runtime: RuntimeConfig,
+    /// Engine configuration.
     pub engine: EngineConfig,
+    /// Server binding and limits.
     pub server: ServerConfig,
 }
 
@@ -236,6 +280,7 @@ pub struct AppConfig {
 // ---------------------------------------------------------------------------
 
 impl TreeStructure {
+    /// Stable config-file string form.
     pub fn as_str(&self) -> &'static str {
         match self {
             TreeStructure::Sequence => "sequence",
@@ -245,6 +290,7 @@ impl TreeStructure {
         }
     }
 
+    /// Parses the config-file string form.
     pub fn from_str(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "sequence" => TreeStructure::Sequence,
@@ -257,6 +303,7 @@ impl TreeStructure {
 }
 
 impl Objective {
+    /// Stable config-file string form.
     pub fn as_str(&self) -> &'static str {
         match self {
             Objective::Aal => "aal",
@@ -264,6 +311,7 @@ impl Objective {
         }
     }
 
+    /// Parses the config-file string form.
     pub fn from_str(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "aal" => Objective::Aal,
@@ -274,6 +322,7 @@ impl Objective {
 }
 
 impl SchedulePlan {
+    /// Stable config-file string form.
     pub fn as_str(&self) -> &'static str {
         match self {
             SchedulePlan::Sequential => "sequential",
@@ -283,6 +332,7 @@ impl SchedulePlan {
         }
     }
 
+    /// Parses the config-file string form.
     pub fn from_str(s: &str) -> crate::Result<Self> {
         Ok(match s {
             "sequential" => SchedulePlan::Sequential,
@@ -295,6 +345,7 @@ impl SchedulePlan {
 }
 
 impl EngineConfig {
+    /// Serializes to the config-file JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("target", Json::Str(self.target.clone())),
@@ -312,9 +363,12 @@ impl EngineConfig {
             ("temperature", Json::Num(self.sampling.temperature as f64)),
             ("seed", Json::Num(self.sampling.seed as f64)),
             ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+            ("batch_enabled", Json::Bool(self.batch.enabled)),
+            ("batch_max_sessions", Json::Num(self.batch.max_sessions as f64)),
         ])
     }
 
+    /// Deserializes, filling absent fields from the defaults.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let d = Self::default();
         let get_s = |k: &str, dv: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or(dv).to_string();
@@ -338,11 +392,16 @@ impl EngineConfig {
                 seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
             },
             max_new_tokens: get_u("max_new_tokens", d.max_new_tokens),
+            batch: BatchConfig {
+                enabled: get_b("batch_enabled", d.batch.enabled),
+                max_sessions: get_u("batch_max_sessions", d.batch.max_sessions).max(1),
+            },
         })
     }
 }
 
 impl AppConfig {
+    /// Serializes to the config-file JSON form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -376,11 +435,13 @@ impl AppConfig {
                     ("max_queue", Json::Num(self.server.max_queue as f64)),
                     ("max_sessions", Json::Num(self.server.max_sessions as f64)),
                     ("stream", Json::Bool(self.server.stream)),
+                    ("batched", Json::Bool(self.server.batched)),
                 ]),
             ),
         ])
     }
 
+    /// Deserializes, filling absent fields from the defaults.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let mut cfg = AppConfig::default();
         if let Some(r) = j.get("runtime") {
@@ -410,14 +471,19 @@ impl AppConfig {
             if let Some(b) = s.get("stream").and_then(|v| v.as_bool()) {
                 cfg.server.stream = b;
             }
+            if let Some(b) = s.get("batched").and_then(|v| v.as_bool()) {
+                cfg.server.batched = b;
+            }
         }
         Ok(cfg)
     }
 
+    /// Loads a (possibly partial) JSON config file.
     pub fn load(path: &Path) -> crate::Result<Self> {
         Self::from_json(&Json::parse_file(path)?)
     }
 
+    /// Writes the full config as JSON.
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         self.to_json().save(path)
     }
@@ -445,6 +511,8 @@ mod tests {
         cfg.engine.sampling.temperature = 0.75;
         cfg.server.stream = false;
         cfg.server.max_sessions = 9;
+        cfg.server.batched = false;
+        cfg.engine.batch = BatchConfig { enabled: true, max_sessions: 6 };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
         assert_eq!(back.engine.tree, TreeStructure::Sequoia);
@@ -452,6 +520,8 @@ mod tests {
         assert!((back.engine.sampling.temperature - 0.75).abs() < 1e-6);
         assert!(!back.server.stream);
         assert_eq!(back.server.max_sessions, 9);
+        assert!(!back.server.batched);
+        assert_eq!(back.engine.batch, BatchConfig { enabled: true, max_sessions: 6 });
     }
 
     #[test]

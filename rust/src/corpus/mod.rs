@@ -15,13 +15,17 @@ use crate::sampling::XorShiftRng;
 /// Dataset names baked by the AOT driver, in paper order.
 pub const DATASETS: [&str; 3] = ["c4s", "wiki", "cnnd"];
 
+/// One dataset's prompt list, loaded from the artifact bundle.
 #[derive(Debug, Clone)]
 pub struct PromptSet {
+    /// Dataset name (see [`DATASETS`]).
     pub dataset: String,
+    /// Tokenized prompts.
     pub prompts: Vec<Vec<u32>>,
 }
 
 impl PromptSet {
+    /// Loads `prompts_<dataset>.json` from the artifact bundle.
     pub fn load(artifacts_dir: &Path, dataset: &str) -> crate::Result<Self> {
         let path = artifacts_dir.join(format!("prompts_{dataset}.json"));
         let j = crate::util::json::Json::parse_file(&path)?;
@@ -50,10 +54,12 @@ impl PromptSet {
         self.prompts.iter().cycle()
     }
 
+    /// Number of prompts.
     pub fn len(&self) -> usize {
         self.prompts.len()
     }
 
+    /// True when the set has no prompts (never, post-load).
     pub fn is_empty(&self) -> bool {
         self.prompts.is_empty()
     }
@@ -74,10 +80,12 @@ pub fn synthetic_prompts(n: usize, len: usize, vocab: u32, seed: u64) -> Vec<Vec
 pub struct ByteTokenizer;
 
 impl ByteTokenizer {
+    /// Text → byte token ids.
     pub fn encode(&self, text: &str) -> Vec<u32> {
         text.as_bytes().iter().map(|&b| b as u32).collect()
     }
 
+    /// Token ids → text (non-byte ids render as `#`).
     pub fn decode(&self, tokens: &[u32]) -> String {
         let bytes: Vec<u8> = tokens
             .iter()

@@ -25,7 +25,7 @@ pub mod spec;
 pub mod task;
 
 pub use profiling::profile_latency_model;
-pub use session::Session;
+pub use session::{Session, SharedCachePool};
 pub use spec::SpecDecoder;
 pub use task::{drive, DecodeTask, StepEngine, StepOutcome, TaskState};
 
@@ -78,6 +78,7 @@ pub type TokenSink<'a> = &'a mut dyn FnMut(&[u32]);
 
 /// Common engine interface used by the benchmark harness and the server.
 pub trait Engine {
+    /// Human-readable engine label (used in tables and logs).
     fn name(&self) -> String;
 
     /// Generates up to `max_new` tokens continuing `prompt`.

@@ -5,16 +5,134 @@
 //! width-padded chunks; the final prompt token becomes the first iteration's
 //! tree root, so every decode iteration has a uniform shape (the root is
 //! always a not-yet-evaluated token — see DESIGN.md §7).
+//!
+//! Sessions come in two cache-ownership flavours:
+//!
+//! * **Owned** ([`Session::new`]) — the session allocates its own device
+//!   cache per model side and drops them with it (the single-request and
+//!   round-robin serving mode).
+//! * **Shared** ([`Session::new_shared`]) — all sessions of one engine
+//!   share a single device cache per side ([`SharedCachePool`]); each
+//!   session leases a disjoint [`SlotRange`] and returns it on drop.
+//!   This is what lets the batched scheduler pack many sessions' tree
+//!   tokens into one device call (DESIGN.md §9) — same cache buffer,
+//!   block-diagonal masks.
 
-use crate::kvcache::SlotCache;
+use std::sync::{Arc, Mutex};
+
+use crate::kvcache::{SlotCache, SlotPartition, SlotRange};
 use crate::runtime::{CacheId, ExecMode, ForwardReply, ForwardRequest, ModelSpec, Runtime};
 use crate::sampling::XorShiftRng;
 
+/// Shared device caches + slot partitions backing cross-session batched
+/// serving: one cache per model side, carved into equal per-session
+/// [`SlotRange`] regions (DESIGN.md §9). Dropping the pool frees the
+/// device caches; sessions must not outlive it (they hold an [`Arc`]).
+pub struct SharedCachePool {
+    rt: Runtime,
+    drafter_name: String,
+    target_name: String,
+    drafter_cache: CacheId,
+    target_cache: CacheId,
+    drafter_part: Mutex<SlotPartition>,
+    target_part: Mutex<SlotPartition>,
+}
+
+impl SharedCachePool {
+    /// Allocates one shared device cache per model side and partitions
+    /// each for `sessions` concurrent sessions.
+    pub fn new(
+        rt: &Runtime,
+        drafter: &str,
+        target: &str,
+        sessions: usize,
+    ) -> crate::Result<Self> {
+        let dspec = rt.spec(drafter)?.clone();
+        let tspec = rt.spec(target)?.clone();
+        // Validate before SlotPartition's programmer-contract assert: a
+        // misconfigured session count must surface as a per-request
+        // admission error, not a panic on the serving worker thread.
+        let min_cap = dspec.cache_capacity.min(tspec.cache_capacity);
+        anyhow::ensure!(
+            sessions >= 1 && min_cap.saturating_sub(1) / sessions >= 2,
+            "cache capacity {min_cap} cannot host {sessions} batched sessions \
+             (each needs ≥ 2 slots)"
+        );
+        let drafter_cache = rt.new_cache(drafter)?;
+        let target_cache = rt.new_cache(target)?;
+        Ok(Self {
+            rt: rt.clone(),
+            drafter_name: drafter.to_string(),
+            target_name: target.to_string(),
+            drafter_cache,
+            target_cache,
+            drafter_part: Mutex::new(SlotPartition::new(dspec.cache_capacity, sessions)),
+            target_part: Mutex::new(SlotPartition::new(tspec.cache_capacity, sessions)),
+        })
+    }
+
+    /// The shared drafter-side device cache.
+    pub fn drafter_cache(&self) -> CacheId {
+        self.drafter_cache
+    }
+
+    /// The shared verifier-side device cache.
+    pub fn target_cache(&self) -> CacheId {
+        self.target_cache
+    }
+
+    /// Per-session slot quota on (drafter, target) — sizes the largest
+    /// tree envelope a batched session can run.
+    pub fn session_quota(&self) -> (usize, usize) {
+        (
+            self.drafter_part.lock().unwrap().region_len() as usize,
+            self.target_part.lock().unwrap().region_len() as usize,
+        )
+    }
+
+    /// Session regions still leasable (the admission-control signal).
+    pub fn free_sessions(&self) -> usize {
+        self.drafter_part
+            .lock()
+            .unwrap()
+            .free_regions()
+            .min(self.target_part.lock().unwrap().free_regions())
+    }
+
+    fn lease_pair(&self) -> Option<(SlotRange, SlotRange)> {
+        let d = self.drafter_part.lock().unwrap().lease()?;
+        match self.target_part.lock().unwrap().lease() {
+            Some(t) => Some((d, t)),
+            None => {
+                self.drafter_part.lock().unwrap().release(d);
+                None
+            }
+        }
+    }
+
+    fn release_pair(&self, d: SlotRange, t: SlotRange) {
+        self.drafter_part.lock().unwrap().release(d);
+        self.target_part.lock().unwrap().release(t);
+    }
+}
+
+impl Drop for SharedCachePool {
+    fn drop(&mut self) {
+        self.rt.drop_cache(self.drafter_cache);
+        self.rt.drop_cache(self.target_cache);
+    }
+}
+
 /// One model's view of a session.
 pub struct ModelSide {
+    /// Model name in the artifact manifest.
     pub name: String,
+    /// The model's architecture/capacity spec.
     pub spec: ModelSpec,
+    /// Device cache this session's forward calls scatter into (owned, or
+    /// the engine-shared cache in batched mode).
     pub cache: CacheId,
+    /// Slot allocator over the cache (whole array, or a leased range).
     pub slots: SlotCache,
 }
 
@@ -27,6 +145,24 @@ impl ModelSide {
             spec: spec.clone(),
             cache,
             slots: SlotCache::new(spec.cache_capacity),
+        })
+    }
+
+    /// A side over a shared cache: allocates only inside `range`, pads to
+    /// the shared trash slot.
+    fn with_shared(
+        rt: &Runtime,
+        name: &str,
+        cache: CacheId,
+        range: SlotRange,
+    ) -> crate::Result<Self> {
+        let spec = rt.spec(name)?.clone();
+        let trash = spec.cache_capacity as u32 - 1;
+        Ok(Self {
+            name: name.to_string(),
+            spec: spec.clone(),
+            cache,
+            slots: SlotCache::with_range(range, spec.cache_capacity, trash),
         })
     }
 
@@ -69,18 +205,26 @@ impl ModelSide {
 
 /// A generation session over a (drafter, verifier) pair.
 pub struct Session {
+    /// Handle to the device thread.
     pub rt: Runtime,
+    /// Drafter-side cache + slots.
     pub drafter: ModelSide,
+    /// Verifier-side cache + slots.
     pub target: ModelSide,
     /// All committed tokens: prompt then generated (the tree root — the
     /// latest bonus token — is `committed.last()`, not yet in any cache).
     pub committed: Vec<u32>,
+    /// Length of the original prompt.
     pub prompt_len: usize,
+    /// Per-session sampling RNG.
     pub rng: XorShiftRng,
     exec_mode: ExecMode,
+    /// Leases to return on drop (shared-cache mode only).
+    shared: Option<(Arc<SharedCachePool>, SlotRange, SlotRange)>,
 }
 
 impl Session {
+    /// A session owning its own device caches (single-session mode).
     pub fn new(
         rt: &Runtime,
         drafter: &str,
@@ -96,9 +240,37 @@ impl Session {
             prompt_len: 0,
             rng: XorShiftRng::new(seed),
             exec_mode: if compiled { ExecMode::Resident } else { ExecMode::WeightsByValue },
+            shared: None,
         })
     }
 
+    /// A session leasing slot ranges of `pool`'s shared caches (batched
+    /// serving mode). Fails when every session region is leased — the
+    /// serving layer surfaces this as an admission rejection.
+    pub fn new_shared(
+        rt: &Runtime,
+        pool: &Arc<SharedCachePool>,
+        seed: u64,
+        compiled: bool,
+    ) -> crate::Result<Self> {
+        let (dr, tr) = pool
+            .lease_pair()
+            .ok_or_else(|| anyhow::anyhow!("no free batch session region in the shared cache"))?;
+        let drafter = ModelSide::with_shared(rt, &pool.drafter_name, pool.drafter_cache, dr)?;
+        let target = ModelSide::with_shared(rt, &pool.target_name, pool.target_cache, tr)?;
+        Ok(Self {
+            rt: rt.clone(),
+            drafter,
+            target,
+            committed: Vec::new(),
+            prompt_len: 0,
+            rng: XorShiftRng::new(seed),
+            exec_mode: if compiled { ExecMode::Resident } else { ExecMode::WeightsByValue },
+            shared: Some((Arc::clone(pool), dr, tr)),
+        })
+    }
+
+    /// How this session's forward calls treat weights/executables.
     pub fn exec_mode(&self) -> ExecMode {
         self.exec_mode
     }
@@ -164,8 +336,15 @@ fn prefill_side(
 
 impl Drop for Session {
     fn drop(&mut self) {
-        self.rt.drop_cache(self.drafter.cache);
-        self.rt.drop_cache(self.target.cache);
+        match self.shared.take() {
+            // Shared caches outlive the session: just return the leases
+            // (stale K/V stays in the buffer but no mask can see it).
+            Some((pool, dr, tr)) => pool.release_pair(dr, tr),
+            None => {
+                self.rt.drop_cache(self.drafter.cache);
+                self.rt.drop_cache(self.target.cache);
+            }
+        }
     }
 }
 

@@ -42,14 +42,14 @@ use crate::metrics::Recorder;
 use crate::objective::{select_draft_width, AcceptanceStats, LatencyModel};
 use crate::predictor::DepthPredictor;
 use crate::pruning::prune_for_objective;
-use crate::runtime::{ForwardReply, Pending, Runtime};
+use crate::runtime::{plan_batches, ExecMode, ForwardReply, ForwardRequest, Pending, Runtime};
 use crate::sampling::{
     categorical, softmax_inplace, stochastic_accept, top_k, AcceptOutcome, XorShiftRng,
 };
 use crate::scheduler::{self, Plan, StageDurations};
 use crate::tree::{grow_step, Frontier, NodeId, TokenTree, TreeShape};
 
-use super::session::Session;
+use super::session::{Session, SharedCachePool};
 use super::task::{self, DecodeTask, StepEngine, StepOutcome, TaskState};
 use super::Generation;
 
@@ -104,6 +104,37 @@ impl IterState {
     }
 }
 
+/// The unpadded device-call inputs for one session's verification rows:
+/// `tokens.len()` real rows, mask rows over the full cache capacity. The
+/// single-session path pads these to one graph width; the batched path
+/// concatenates many sessions' parts into one block-diagonal call
+/// (DESIGN.md §9).
+struct VerifyParts {
+    tokens: Vec<u32>,
+    positions: Vec<i32>,
+    slots: Vec<u32>,
+    /// `tokens.len() × cache_capacity` visibility rows.
+    mask: Vec<f32>,
+}
+
+/// Iteration state carried across the verification device call, from
+/// [`SpecTask::prepare_verify`] to [`SpecTask::complete_verify`].
+struct VerifyPrep {
+    st: IterState,
+    /// Pruned node set, in verify-row order.
+    keep: Vec<NodeId>,
+    /// Graph width a solo verify of these rows pads to.
+    w_verify: usize,
+    root_pos: i32,
+    /// Per-growth-step drafter widths (Eq. 3 denominator bookkeeping).
+    draft_widths: Vec<usize>,
+    /// The ⟨W⟩ the width selector chose for this iteration.
+    draft_width: usize,
+    /// (leaf, token, slot) of in-flight AOT tail drafts.
+    tail: Vec<(NodeId, u32, u32)>,
+    tail_pending: Option<Pending<ForwardReply>>,
+}
+
 /// Candidate children of a node from its drafter logits: top-k at T = 0,
 /// i.i.d. samples (deduped, q-sorted) at T > 0 — the latter is what the
 /// stochastic acceptance rule's lossless guarantee expects.
@@ -150,15 +181,33 @@ struct SpecShared {
     predictor: Option<DepthPredictor>,
 }
 
+/// Profile-guided plan re-search (§5.2) shared by task finish and the
+/// explicit calibration entry point: batched engines search over the
+/// amortized verify cost, solo engines over the raw one.
+fn research_plan_into(sh: &mut SpecShared, cfg: &EngineConfig, rec: &Recorder) {
+    let d = StageDurations::from_recorder(rec, sh.tail_hit_rate);
+    sh.plan = if cfg.batch.enabled {
+        scheduler::search_best_plan_batched(&d, cfg.batch.max_sessions).0
+    } else {
+        scheduler::search_best_plan(&d).0
+    };
+}
+
 /// The speculative decoding engine.
 pub struct SpecDecoder {
     rt: Runtime,
+    /// The engine configuration (a preset or the full Yggdrasil default).
     pub cfg: EngineConfig,
     shared: Arc<Mutex<SpecShared>>,
+    /// Shared device caches for cross-session batching; created lazily on
+    /// the first `begin()` when `cfg.batch.enabled` (DESIGN.md §9).
+    pool: Option<Arc<SharedCachePool>>,
     label: String,
 }
 
 impl SpecDecoder {
+    /// Builds an engine over `rt` with a latency model (profiled or
+    /// loaded) and an optional trained depth predictor.
     pub fn new(
         rt: &Runtime,
         cfg: EngineConfig,
@@ -172,7 +221,17 @@ impl SpecDecoder {
             cfg.max_verify,
             width_for(4).unwrap(),
         );
-        let plan = scheduler::resolve(cfg.schedule, &est);
+        // Under cross-session batching the verify stage amortizes across
+        // the sessions sharing the call; resolve the plan against the
+        // per-session (amortized) durations.
+        let plan = if cfg.batch.enabled {
+            scheduler::resolve(
+                cfg.schedule,
+                &scheduler::amortize_verify(&est, cfg.batch.max_sessions),
+            )
+        } else {
+            scheduler::resolve(cfg.schedule, &est)
+        };
         // Compile every width graph up front: the adaptive ⟨D, W, Wv⟩
         // selection may touch any of them, and a mid-decode compile stall
         // (~1 s) is exactly the "dynamic shapes break static runtimes"
@@ -200,6 +259,7 @@ impl SpecDecoder {
                 depth_samples: Vec::new(),
                 predictor,
             })),
+            pool: None,
             label,
         }
     }
@@ -232,8 +292,7 @@ impl SpecDecoder {
             return;
         }
         let mut sh = self.shared.lock().unwrap();
-        let d = StageDurations::from_recorder(rec, sh.tail_hit_rate);
-        sh.plan = scheduler::search_best_plan(&d).0;
+        research_plan_into(&mut sh, &self.cfg, rec);
     }
 
     /// Collected depth-predictor training samples: hidden state paired
@@ -435,14 +494,18 @@ impl SpecTask {
     // The decoding iteration
     // ------------------------------------------------------------------
 
-    /// Runs one full iteration. Returns the tokens committed by it (the
-    /// accepted path plus the bonus token) and the new pending head.
+    /// First half of one iteration (Fig. 9): resolves the head draft,
+    /// selects ⟨D, W⟩, grows the tree, prunes it, and assembles the
+    /// verification rows — everything up to (but excluding) the verifier
+    /// device call, so the batched scheduler can pack many sessions' rows
+    /// into one call (DESIGN.md §9). Returns the carry-over state and the
+    /// unpadded device-call inputs.
     #[allow(clippy::too_many_lines)]
-    fn iteration(
+    fn prepare_verify(
         &mut self,
         head: PendingHead,
         sh: &mut SpecShared,
-    ) -> crate::Result<(Vec<u32>, Option<PendingHead>, Vec<f32>)> {
+    ) -> crate::Result<(VerifyPrep, VerifyParts)> {
         let root_pos = (self.sess.committed_len() - 1) as i32;
         let root_token = *self.sess.committed.last().unwrap();
         debug_assert_eq!(head.token, root_token);
@@ -530,7 +593,7 @@ impl SpecTask {
         self.rec.record("stage.cpu_build", t0.elapsed().as_secs_f64());
         self.rec.record("w_verify", w_verify as f64);
 
-        // -------- verification -------------------------------------------
+        // -------- verification row assembly ------------------------------
         let Some(vslots) = self.sess.target.slots.alloc(keep.len()) else {
             anyhow::bail!("verifier cache exhausted")
         };
@@ -545,26 +608,42 @@ impl SpecTask {
             .target
             .slots
             .mask_builder()
-            .build(&st.tree, &keep, &st.vslots, w_verify)
+            .build(&st.tree, &keep, &st.vslots, keep.len())
             .to_vec();
-        let vreq = self.sess.target.padded_request(
-            w_verify,
-            &vtokens,
-            &vpositions,
-            &vslots,
+        // The block-diagonal invariant batched serving relies on: this
+        // session's rows reference only its own slot range.
+        debug_assert!(crate::tree::rows_confined(
             &vmask,
-            self.sess.exec_mode(),
-        );
-        let t0 = Instant::now();
-        let verify_pending = self.rt.submit(vreq)?;
+            self.sess.target.spec.cache_capacity,
+            self.sess.target.slots.range(),
+        ));
+        let parts =
+            VerifyParts { tokens: vtokens, positions: vpositions, slots: vslots, mask: vmask };
+        let prep = VerifyPrep {
+            st,
+            keep,
+            w_verify,
+            root_pos,
+            draft_widths,
+            draft_width: width,
+            tail: Vec::new(),
+            tail_pending: None,
+        };
+        Ok((prep, parts))
+    }
 
-        // -------- AOT tail draft (§5.1) -----------------------------------
-        // Queue the most likely next-root continuations behind the verify
-        // call; they execute while the CPU walks acceptance.
-        let mut tail: Vec<(NodeId, u32, u32)> = Vec::new(); // (leaf, token, slot)
-        let mut tail_pending: Option<Pending<ForwardReply>> = None;
-        if self.plan.aot_tail {
-            let t_tail = Instant::now();
+    /// Submits the AOT tail draft (§5.1) for an iteration whose verify
+    /// call is already queued: the most likely next-root continuations
+    /// execute right behind it, overlapping the CPU acceptance walk.
+    /// No-op for plans without `aot_tail`.
+    fn submit_tail(&mut self, prep: &mut VerifyPrep) -> crate::Result<()> {
+        if !self.plan.aot_tail {
+            return Ok(());
+        }
+        let t_tail = Instant::now();
+        let picks: Vec<NodeId> = {
+            let st = &prep.st;
+            let keep = &prep.keep;
             let mut leaves: Vec<NodeId> = keep
                 .iter()
                 .copied()
@@ -577,54 +656,72 @@ impl SpecTask {
                 st.tree.path_prob(b).partial_cmp(&st.tree.path_prob(a)).unwrap()
             });
             let t_width = 4usize;
-            let picks: Vec<NodeId> = leaves
+            leaves
                 .into_iter()
                 .filter(|&l| st.cands[l].as_ref().map_or(false, |c| !c.is_empty()))
                 .take(t_width)
-                .collect();
-            if !picks.is_empty() {
-                if let Some(slots) = self.sess.drafter.slots.alloc(picks.len()) {
-                    let mut tokens = Vec::new();
-                    let mut positions = Vec::new();
-                    let mut dsl = st.dslots.clone();
-                    // Temporarily extend the tree with the tail nodes so the
-                    // mask builder sees their ancestry.
-                    let mut tmp_tree = st.tree.clone();
-                    let mut nodes = Vec::new();
-                    for (i, &leaf) in picks.iter().enumerate() {
-                        let (tok, p) = st.cands[leaf].as_ref().unwrap()[0];
-                        let id = tmp_tree.add_node(leaf, tok, p);
-                        dsl.push(Some(slots[i]));
-                        nodes.push(id);
-                        tokens.push(tok);
-                        positions.push(root_pos + tmp_tree.depth(id) as i32);
-                        tail.push((leaf, tok, slots[i]));
-                    }
-                    let width = width_for(picks.len()).unwrap();
-                    let mask = self
-                        .sess
-                        .drafter
-                        .slots
-                        .mask_builder()
-                        .build(&tmp_tree, &nodes, &dsl, width)
-                        .to_vec();
-                    let req = self.sess.drafter.padded_request(
-                        width,
-                        &tokens,
-                        &positions,
-                        &slots,
-                        &mask,
-                        self.sess.exec_mode(),
-                    );
-                    tail_pending = Some(self.rt.submit(req)?);
+                .collect()
+        };
+        if !picks.is_empty() {
+            if let Some(slots) = self.sess.drafter.slots.alloc(picks.len()) {
+                let mut tokens = Vec::new();
+                let mut positions = Vec::new();
+                let mut dsl = prep.st.dslots.clone();
+                // Temporarily extend the tree with the tail nodes so the
+                // mask builder sees their ancestry.
+                let mut tmp_tree = prep.st.tree.clone();
+                let mut nodes = Vec::new();
+                let mut tail = Vec::new();
+                for (i, &leaf) in picks.iter().enumerate() {
+                    let (tok, p) = prep.st.cands[leaf].as_ref().unwrap()[0];
+                    let id = tmp_tree.add_node(leaf, tok, p);
+                    dsl.push(Some(slots[i]));
+                    nodes.push(id);
+                    tokens.push(tok);
+                    positions.push(prep.root_pos + tmp_tree.depth(id) as i32);
+                    tail.push((leaf, tok, slots[i]));
                 }
+                let width = width_for(picks.len()).unwrap();
+                let mask = self
+                    .sess
+                    .drafter
+                    .slots
+                    .mask_builder()
+                    .build(&tmp_tree, &nodes, &dsl, width)
+                    .to_vec();
+                let req = self.sess.drafter.padded_request(
+                    width,
+                    &tokens,
+                    &positions,
+                    &slots,
+                    &mask,
+                    self.sess.exec_mode(),
+                );
+                prep.tail_pending = Some(self.rt.submit(req)?);
+                prep.tail = tail;
             }
-            self.rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
         }
+        self.rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
+        Ok(())
+    }
 
-        let vreply = verify_pending.wait()?;
-        self.rec.record("stage.verify", t0.elapsed().as_secs_f64());
-        self.rec.record("stage.verify_exec", vreply.exec_seconds);
+    /// Second half of one iteration, after the verifier replied:
+    /// acceptance walk over this session's `logits`/`hidden_rows` (its
+    /// contiguous rows of the — possibly batched — reply), tail-hit
+    /// resolution, the next head draft, and slot bookkeeping. Returns the
+    /// committed tokens, the next pending head, and the bonus context's
+    /// hidden state.
+    #[allow(clippy::too_many_lines)]
+    fn complete_verify(
+        &mut self,
+        prep: VerifyPrep,
+        logits: &[f32],
+        hidden_rows: &[f32],
+        sh: &mut SpecShared,
+    ) -> crate::Result<(Vec<u32>, Option<PendingHead>, Vec<f32>)> {
+        let VerifyPrep { st, keep, root_pos, draft_widths, draft_width, tail, tail_pending, .. } =
+            prep;
+        let temp = self.cfg.sampling.temperature;
 
         // -------- acceptance walk ----------------------------------------
         let t0 = Instant::now();
@@ -634,7 +731,7 @@ impl SpecTask {
         let mut cur = 0usize;
         let bonus: u32;
         loop {
-            let row = &vreply.logits[row_of(cur) * vocab..(row_of(cur) + 1) * vocab];
+            let row = &logits[row_of(cur) * vocab..(row_of(cur) + 1) * vocab];
             // Children of cur inside the pruned set, in candidate order.
             let kids: Vec<NodeId> = st
                 .tree
@@ -687,14 +784,14 @@ impl SpecTask {
         // true continuation iff the walk descended at least d times.
         let steps_grown = draft_widths.len();
         for d in 1..=steps_grown {
-            sh.stats.record_step(width, d <= accepted_draft);
+            sh.stats.record_step(draft_width, d <= accepted_draft);
         }
 
         // Depth-predictor hint for the next iteration, from the hidden
         // state at the deepest accepted node (the bonus context).
         let d_model = self.sess.target.spec.d_model;
         let hid_row = row_of(cur);
-        let hidden = vreply.hidden[hid_row * d_model..(hid_row + 1) * d_model].to_vec();
+        let hidden = hidden_rows[hid_row * d_model..(hid_row + 1) * d_model].to_vec();
         if self.cfg.use_depth_predictor {
             if let Some(p) = &sh.predictor {
                 if p.input_dim == d_model {
@@ -887,7 +984,49 @@ impl SpecTask {
         let t_iter = Instant::now();
         let shared = Arc::clone(&self.shared);
         let mut sh = shared.lock().unwrap();
-        let (out, next_head, hidden) = self.iteration(head, &mut sh)?;
+        // Solo iteration: prepare → submit verify → overlap the tail
+        // draft → wait → complete. The batched scheduler runs the same
+        // halves but shares one verify call across sessions.
+        let (mut prep, parts) = self.prepare_verify(head, &mut sh)?;
+        let vreq = self.sess.target.padded_request(
+            prep.w_verify,
+            &parts.tokens,
+            &parts.positions,
+            &parts.slots,
+            &parts.mask,
+            self.sess.exec_mode(),
+        );
+        let t0 = Instant::now();
+        let verify_pending = self.rt.submit(vreq)?;
+        self.submit_tail(&mut prep)?;
+        let vreply = verify_pending.wait()?;
+        self.rec.record("stage.verify", t0.elapsed().as_secs_f64());
+        self.rec.record("stage.verify_exec", vreply.exec_seconds);
+        let n = prep.keep.len();
+        let vocab = self.sess.target.spec.vocab;
+        let d_model = self.sess.target.spec.d_model;
+        let (out, next_head, hidden) = self.complete_verify(
+            prep,
+            &vreply.logits[..n * vocab],
+            &vreply.hidden[..n * d_model],
+            &mut sh,
+        )?;
+        let outcome = self.conclude_iteration(out, next_head, hidden, &mut sh, t_iter);
+        drop(sh);
+        Ok(outcome)
+    }
+
+    /// Post-iteration bookkeeping common to the solo and batched paths:
+    /// per-task counters, predictor training data, the CPU-overhead EWMA,
+    /// budget/headroom termination, and the streamed-token clipping.
+    fn conclude_iteration(
+        &mut self,
+        out: Vec<u32>,
+        next_head: Option<PendingHead>,
+        hidden: Vec<f32>,
+        sh: &mut SpecShared,
+        t_iter: Instant,
+    ) -> StepOutcome {
         self.rec.record("stage.iter", t_iter.elapsed().as_secs_f64());
         self.iterations += 1;
         // Depth-predictor training data: the hidden state seen *before*
@@ -909,7 +1048,6 @@ impl SpecTask {
                 sh.lat.cpu_overhead = 0.9 * sh.lat.cpu_overhead + 0.1 * cpu;
             }
         }
-        drop(sh);
         self.seconds += t_iter.elapsed().as_secs_f64();
         if self.tokens.len() >= self.max_new
             || self.sess.headroom(self.tree_budget) == 0
@@ -917,13 +1055,17 @@ impl SpecTask {
         {
             self.state = TaskState::Done;
         }
-        Ok(StepOutcome { tokens: visible, state: self.state })
+        StepOutcome { tokens: visible, state: self.state }
     }
 }
 
 impl DecodeTask for SpecTask {
     fn state(&self) -> TaskState {
         self.state
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn step(&mut self) -> crate::Result<StepOutcome> {
@@ -950,8 +1092,7 @@ impl DecodeTask for SpecTask {
         // after this point; running tasks keep their snapshot).
         if this.cfg.schedule == SchedulePlan::ProfileSearch && this.iterations > 0 {
             let mut sh = this.shared.lock().unwrap();
-            let d = StageDurations::from_recorder(&this.rec, sh.tail_hit_rate);
-            sh.plan = scheduler::search_best_plan(&d).0;
+            research_plan_into(&mut sh, &this.cfg, &this.rec);
         }
         Generation {
             tokens: std::mem::take(&mut this.tokens),
@@ -966,13 +1107,46 @@ impl DecodeTask for SpecTask {
 impl StepEngine for SpecDecoder {
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-        let sess = Session::new(
-            &self.rt,
-            &self.cfg.drafter,
-            &self.cfg.target,
-            self.cfg.sampling.seed,
-            self.cfg.compiled,
-        )?;
+        let sess = if self.cfg.batch.enabled {
+            // Batched mode: all sessions lease ranges of one shared cache
+            // pair, so a scheduling round can verify them in one call.
+            if self.pool.is_none() {
+                self.pool = Some(Arc::new(SharedCachePool::new(
+                    &self.rt,
+                    &self.cfg.drafter,
+                    &self.cfg.target,
+                    self.cfg.batch.max_sessions,
+                )?));
+            }
+            match Session::new_shared(
+                &self.rt,
+                self.pool.as_ref().unwrap(),
+                self.cfg.sampling.seed,
+                self.cfg.compiled,
+            ) {
+                Ok(s) => s,
+                // More live sessions than shared regions (a server driving
+                // more slots than `batch.max_sessions`): degrade gracefully
+                // to an owned-cache session. `step_batch` recognises the
+                // foreign cache and steps such sessions serially instead of
+                // packing them into the shared-cache batch.
+                Err(_) => Session::new(
+                    &self.rt,
+                    &self.cfg.drafter,
+                    &self.cfg.target,
+                    self.cfg.sampling.seed,
+                    self.cfg.compiled,
+                )?,
+            }
+        } else {
+            Session::new(
+                &self.rt,
+                &self.cfg.drafter,
+                &self.cfg.target,
+                self.cfg.sampling.seed,
+                self.cfg.compiled,
+            )?
+        };
         // Keep enough headroom for one full tree + tail + bonus chain.
         let tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
         let plan = self.shared.lock().unwrap().plan;
@@ -995,6 +1169,196 @@ impl StepEngine for SpecDecoder {
             seconds: 0.0,
             prefill_seconds: 0.0,
         }))
+    }
+
+    /// Cross-session batched scheduling round (DESIGN.md §9).
+    ///
+    /// Sessions mid-iteration run the draft/prune half per session, then
+    /// their verification rows are packed — block-diagonal mask, one
+    /// width-padded call per [`plan_batches`] group against the shared
+    /// target cache — and the reply's rows are split back into per-task
+    /// acceptance walks. Prefilling/finished/foreign tasks fall back to
+    /// serial stepping inside the same round.
+    fn step_batch(
+        &mut self,
+        tasks: &mut [&mut dyn DecodeTask],
+    ) -> Vec<crate::Result<StepOutcome>> {
+        let Some(pool) = self.pool.clone() else {
+            // Batching disabled (or no session ever admitted): serial.
+            return tasks.iter_mut().map(|t| t.step()).collect();
+        };
+        let n = tasks.len();
+        let mut results: Vec<Option<crate::Result<StepOutcome>>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+
+        // Phase 0: split the round into batchable mid-iteration SpecTasks
+        // and everything else (prefill steps, finished tasks), which
+        // steps serially within the same round.
+        let mut batchable: Vec<usize> = Vec::new();
+        for (i, t) in tasks.iter_mut().enumerate() {
+            let joins = t.as_any_mut().downcast_mut::<SpecTask>().map_or(false, |s| {
+                s.state == TaskState::Iterate
+                    && s.head.is_some()
+                    // Only sessions on the shared caches can ride one
+                    // device call; overflow sessions (owned caches, see
+                    // `begin`) step serially.
+                    && s.sess.target.cache == pool.target_cache()
+            });
+            if joins {
+                batchable.push(i);
+            } else {
+                results[i] = Some(t.step());
+            }
+        }
+        if batchable.is_empty() {
+            return results.into_iter().map(Option::unwrap).collect();
+        }
+
+        // Only three scalars of the target spec are needed per round; do
+        // not clone the whole ModelSpec (tensor layout etc.) on the hot
+        // path.
+        let (vocab, d_model, capacity) = match self.rt.spec(&self.cfg.target) {
+            Ok(s) => (s.vocab, s.d_model, s.cache_capacity),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for i in batchable {
+                    results[i] = Some(Err(anyhow::anyhow!("batched verify: {msg}")));
+                }
+                return results.into_iter().map(Option::unwrap).collect();
+            }
+        };
+
+        let shared = Arc::clone(&self.shared);
+        let mut sh = shared.lock().unwrap();
+
+        // Phase 1: per-session drafting + pruning → verification rows.
+        struct Entry {
+            idx: usize,
+            prep: VerifyPrep,
+            parts: VerifyParts,
+            t_iter: Instant,
+        }
+        let mut entries: Vec<Option<Entry>> = Vec::new();
+        for &i in &batchable {
+            let task = tasks[i].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+            let head = task.head.take().unwrap();
+            let t_iter = Instant::now();
+            match task.prepare_verify(head, &mut sh) {
+                Ok((prep, parts)) => {
+                    entries.push(Some(Entry { idx: i, prep, parts, t_iter }))
+                }
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+
+        // Phase 2: pack rows into device batches; one verifier call per
+        // group, tail drafts queued right behind it.
+        let rows: Vec<usize> = entries
+            .iter()
+            .map(|e| e.as_ref().unwrap().parts.tokens.len())
+            .collect();
+        let max_w = *crate::config::GRAPH_WIDTHS.last().unwrap();
+        let mode =
+            if self.cfg.compiled { ExecMode::Resident } else { ExecMode::WeightsByValue };
+        let trash = capacity as i32 - 1;
+        for g in plan_batches(&rows, max_w) {
+            let req = {
+                let mut tokens: Vec<i32> = Vec::with_capacity(g.width);
+                let mut positions: Vec<i32> = Vec::with_capacity(g.width);
+                let mut slots: Vec<i32> = Vec::with_capacity(g.width);
+                for &m in &g.members {
+                    let e = entries[m].as_ref().unwrap();
+                    tokens.extend(e.parts.tokens.iter().map(|&x| x as i32));
+                    positions.extend_from_slice(&e.parts.positions);
+                    slots.extend(e.parts.slots.iter().map(|&x| x as i32));
+                }
+                let blocks: Vec<&[f32]> = g
+                    .members
+                    .iter()
+                    .map(|&m| entries[m].as_ref().unwrap().parts.mask.as_slice())
+                    .collect();
+                let mask = crate::tree::pack_block_diagonal(&blocks, capacity, g.width);
+                tokens.resize(g.width, 0);
+                positions.resize(g.width, 0);
+                slots.resize(g.width, trash);
+                ForwardRequest {
+                    model: self.cfg.target.clone(),
+                    width: g.width,
+                    cache: pool.target_cache(),
+                    tokens,
+                    positions,
+                    slots,
+                    mask,
+                    mode,
+                }
+            };
+            let t0 = Instant::now();
+            let pending = match self.rt.submit(req) {
+                Ok(p) => p,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &m in &g.members {
+                        let en = entries[m].take().unwrap();
+                        results[en.idx] =
+                            Some(Err(anyhow::anyhow!("batched verify submit: {msg}")));
+                    }
+                    continue;
+                }
+            };
+            // AOT tail drafts overlap the batched verify exactly as they
+            // overlap a solo one. A failed submit only costs the overlap;
+            // a dead device surfaces at the verify wait below.
+            for &m in &g.members {
+                let en = entries[m].as_mut().unwrap();
+                let task = tasks[en.idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                let _ = task.submit_tail(&mut en.prep);
+            }
+            match pending.wait() {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for &m in &g.members {
+                        let en = entries[m].take().unwrap();
+                        results[en.idx] = Some(Err(anyhow::anyhow!("batched verify: {msg}")));
+                    }
+                }
+                Ok(vreply) => {
+                    let dt = t0.elapsed().as_secs_f64();
+                    let mut off = 0usize;
+                    for &m in &g.members {
+                        let en = entries[m].take().unwrap();
+                        let nrows = en.parts.tokens.len();
+                        let task =
+                            tasks[en.idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                        task.rec.record("stage.verify", dt);
+                        task.rec.record("stage.verify_exec", vreply.exec_seconds);
+                        task.rec.record("batch.sessions", g.members.len() as f64);
+                        let lo = off * vocab;
+                        let hi = (off + nrows) * vocab;
+                        let hlo = off * d_model;
+                        let hhi = (off + nrows) * d_model;
+                        let r = match task.complete_verify(
+                            en.prep,
+                            &vreply.logits[lo..hi],
+                            &vreply.hidden[hlo..hhi],
+                            &mut sh,
+                        ) {
+                            Ok((out, next_head, hidden)) => Ok(task.conclude_iteration(
+                                out,
+                                next_head,
+                                hidden,
+                                &mut sh,
+                                en.t_iter,
+                            )),
+                            Err(e) => Err(e),
+                        };
+                        results[en.idx] = Some(r);
+                        off += nrows;
+                    }
+                }
+            }
+        }
+        drop(sh);
+        results.into_iter().map(Option::unwrap).collect()
     }
 }
 

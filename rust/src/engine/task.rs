@@ -41,14 +41,22 @@ pub struct StepOutcome {
 }
 
 impl StepOutcome {
+    /// True once the task reached [`TaskState::Done`].
     pub fn done(&self) -> bool {
         self.state == TaskState::Done
     }
 }
 
 /// One resumable generation. See the module docs for the lifecycle.
-pub trait DecodeTask: Send {
+pub trait DecodeTask: Send + std::any::Any {
+    /// Current lifecycle state.
     fn state(&self) -> TaskState;
+
+    /// Concrete-type escape hatch for engines whose
+    /// [`StepEngine::step_batch`] needs its own task type (the batched
+    /// scheduler downcasts to pack many tasks' verify rows into one
+    /// device call). Implementations return `self`.
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
 
     /// Runs exactly one unit of work (one prefill, or one verification
     /// iteration) and returns the tokens it committed. Idempotent once
@@ -96,6 +104,22 @@ pub trait StepEngine: super::Engine {
     /// the prompt, but performs no model call yet (the first `step()`
     /// prefills). Cheap enough to use for admission control.
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>>;
+
+    /// Runs one scheduling round over many live tasks, returning one
+    /// outcome per task (same order).
+    ///
+    /// The default steps each task serially — time-sliced round-robin,
+    /// exactly what the pre-batching server did. Engines that can share
+    /// device work across sessions override this to pack the round into
+    /// fewer device calls (see `SpecDecoder`'s cross-session batched
+    /// verification, DESIGN.md §9). A per-task error fails that task
+    /// only; the other tasks' outcomes are still returned.
+    fn step_batch(
+        &mut self,
+        tasks: &mut [&mut dyn DecodeTask],
+    ) -> Vec<crate::Result<StepOutcome>> {
+        tasks.iter_mut().map(|t| t.step()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -114,6 +138,10 @@ mod tests {
     impl DecodeTask for CountTask {
         fn state(&self) -> TaskState {
             self.state
+        }
+
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
         }
 
         fn step(&mut self) -> crate::Result<StepOutcome> {

@@ -11,35 +11,179 @@
 //!
 //! One reserved *trash slot* (the last slot) absorbs the K/V writes of
 //! padding rows in width-padded calls; it is never marked visible.
+//!
+//! ## Shared-cache partitioning (DESIGN.md §9)
+//!
+//! For cross-session batched verification, many sessions share **one**
+//! device cache array: a [`SlotPartition`] carves the array into equal
+//! contiguous [`SlotRange`] regions (plus the common trash slot), each
+//! session's [`SlotCache`] allocates only inside its leased range, and the
+//! per-row masks therefore stay *block-diagonal* across sessions — a
+//! session can never reference, let alone read, another session's slots.
 
 use crate::tree::MaskBuilder;
 
+/// A contiguous run of slots inside a shared cache array — one session's
+/// lease from a [`SlotPartition`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotRange {
+    /// First slot of the range.
+    pub base: u32,
+    /// Number of slots in the range.
+    pub len: u32,
+}
+
+impl SlotRange {
+    /// True when `slot` lies inside this range.
+    pub fn contains(&self, slot: u32) -> bool {
+        slot >= self.base && slot < self.base + self.len
+    }
+}
+
+/// Carves one shared cache array into equal per-session regions.
+///
+/// The last slot of the array stays reserved as the shared trash slot;
+/// the remaining `capacity - 1` slots split into `sessions` equal regions
+/// (any remainder is left unused). Regions are leased and released whole:
+/// a session's [`SlotCache`] owns the lease for its lifetime, so slot
+/// ownership never fragments across sessions.
+#[derive(Debug, Clone)]
+pub struct SlotPartition {
+    total_capacity: usize,
+    region_len: u32,
+    free_bases: Vec<u32>,
+}
+
+impl SlotPartition {
+    /// Partitions a `capacity`-slot cache into `sessions` equal regions.
+    ///
+    /// Panics when the split leaves a region without at least two usable
+    /// slots (a region must hold at least one token beyond bookkeeping).
+    pub fn new(capacity: usize, sessions: usize) -> Self {
+        assert!(sessions >= 1, "need at least one region");
+        assert!(capacity >= 2, "need at least one usable slot plus trash");
+        let usable = capacity - 1; // last slot is the shared trash
+        let region_len = (usable / sessions) as u32;
+        assert!(
+            region_len >= 2,
+            "capacity {capacity} cannot host {sessions} regions of ≥2 slots"
+        );
+        // Hand out low regions first (matches SlotCache's low-slot bias).
+        let free_bases = (0..sessions as u32).map(|i| i * region_len).rev().collect();
+        Self { total_capacity: capacity, region_len, free_bases }
+    }
+
+    /// The shared trash slot all sessions' padding rows scatter into.
+    pub fn trash_slot(&self) -> u32 {
+        self.total_capacity as u32 - 1
+    }
+
+    /// Total slots in the shared cache array (including trash).
+    pub fn total_capacity(&self) -> usize {
+        self.total_capacity
+    }
+
+    /// Slots per leased region.
+    pub fn region_len(&self) -> u32 {
+        self.region_len
+    }
+
+    /// Number of regions currently leasable.
+    pub fn free_regions(&self) -> usize {
+        self.free_bases.len()
+    }
+
+    /// Leases one region, or `None` when every region is taken (the
+    /// serving layer surfaces this as an admission failure).
+    pub fn lease(&mut self) -> Option<SlotRange> {
+        self.free_bases.pop().map(|base| SlotRange { base, len: self.region_len })
+    }
+
+    /// Returns a leased region (called when its session drops).
+    pub fn release(&mut self, range: SlotRange) {
+        debug_assert_eq!(range.len, self.region_len, "foreign range returned");
+        debug_assert!(
+            range.base % self.region_len == 0,
+            "misaligned range returned: base {}",
+            range.base
+        );
+        debug_assert!(!self.free_bases.contains(&range.base), "double release");
+        self.free_bases.push(range.base);
+    }
+}
+
 /// Slot allocator + committed-set tracker for one model's cache.
+///
+/// Owns either a whole cache array ([`SlotCache::new`]) or a leased
+/// [`SlotRange`] of a shared array ([`SlotCache::with_range`]); either
+/// way it only ever hands out slots from its own region, which is what
+/// keeps cross-session masks block-diagonal in batched serving.
 #[derive(Debug, Clone)]
 pub struct SlotCache {
-    capacity: usize,
+    /// Size of the backing device array (the mask row width).
+    total_capacity: usize,
+    /// Slots this cache may allocate.
+    range: SlotRange,
+    /// The (possibly shared) padding-row slot; never allocated.
+    trash: u32,
     free: Vec<u32>, // LIFO free list (excludes the trash slot)
     committed: Vec<u32>,
     mask: MaskBuilder,
 }
 
 impl SlotCache {
+    /// A cache owning a whole `capacity`-slot array (single-session mode):
+    /// the last slot is the trash slot, everything else is allocatable.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 2, "need at least one usable slot plus trash");
+        let range = SlotRange { base: 0, len: capacity as u32 - 1 };
+        Self::with_range(range, capacity, capacity as u32 - 1)
+    }
+
+    /// A cache allocating only inside `range` of a `total_capacity`-slot
+    /// shared array whose padding rows scatter into `trash` (shared-cache
+    /// batching mode; see [`SlotPartition`]).
+    pub fn with_range(range: SlotRange, total_capacity: usize, trash: u32) -> Self {
+        assert!(range.len >= 1, "empty slot range");
+        assert!(
+            (range.base + range.len) as usize <= total_capacity,
+            "range beyond cache capacity"
+        );
+        assert!(!range.contains(trash), "trash slot inside allocatable range");
         // Hand out low slots first (helps locality of the scatter).
-        let free = (0..capacity as u32 - 1).rev().collect();
-        Self { capacity, free, committed: Vec::new(), mask: MaskBuilder::new(capacity) }
+        let free = (range.base..range.base + range.len).rev().collect();
+        Self {
+            total_capacity,
+            range,
+            trash,
+            free,
+            committed: Vec::new(),
+            mask: MaskBuilder::new(total_capacity),
+        }
     }
 
     /// The reserved slot padding rows scatter their K/V into.
     pub fn trash_slot(&self) -> u32 {
-        self.capacity as u32 - 1
+        self.trash
     }
 
+    /// Size of the backing device array (the mask row width) — **not**
+    /// this cache's allocatable slot count; see [`SlotCache::usable`].
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.total_capacity
     }
 
+    /// Slots this cache may allocate (its range length).
+    pub fn usable(&self) -> usize {
+        self.range.len as usize
+    }
+
+    /// The slot range this cache allocates from.
+    pub fn range(&self) -> SlotRange {
+        self.range
+    }
+
+    /// Currently free (allocatable) slots.
     pub fn free_count(&self) -> usize {
         self.free.len()
     }
@@ -49,13 +193,15 @@ impl SlotCache {
     /// live sessions for its KV-utilization gauge, and the cancellation
     /// tests assert it returns to zero once a session is dropped.
     pub fn in_use(&self) -> usize {
-        self.capacity - 1 - self.free.len()
+        self.range.len as usize - self.free.len()
     }
 
+    /// Number of committed (always-visible) slots.
     pub fn committed_len(&self) -> usize {
         self.committed.len()
     }
 
+    /// The committed slots, in commit order.
     pub fn committed(&self) -> &[u32] {
         &self.committed
     }
@@ -72,15 +218,17 @@ impl SlotCache {
     /// Returns draft slots that did not get committed.
     pub fn release(&mut self, slots: &[u32]) {
         for &s in slots {
-            debug_assert!(s != self.trash_slot());
+            debug_assert!(s != self.trash);
+            debug_assert!(self.range.contains(s), "releasing foreign slot {s}");
             debug_assert!(!self.committed.contains(&s), "releasing committed slot {s}");
             self.free.push(s);
         }
     }
 
     /// Promotes a draft slot to the committed prefix (visible to all
-    /// future tokens).
+    /// future tokens of this session).
     pub fn commit(&mut self, slot: u32) {
+        debug_assert!(self.range.contains(slot), "committing foreign slot {slot}");
         debug_assert!(!self.committed.contains(&slot));
         self.committed.push(slot);
         self.mask.commit_slot(slot);
@@ -93,7 +241,7 @@ impl SlotCache {
             self.mask.release_slot(s);
         }
         self.committed.clear();
-        self.free = (0..self.capacity as u32 - 1).rev().collect();
+        self.free = (self.range.base..self.range.base + self.range.len).rev().collect();
     }
 
     /// The mask builder whose prefix row tracks this cache's commits.
@@ -177,5 +325,63 @@ mod tests {
         let b = c.alloc(2).unwrap();
         assert_eq!(b[0], a[1]);
         assert_eq!(b[1], a[0]);
+    }
+
+    #[test]
+    fn partition_carves_equal_regions_with_shared_trash() {
+        let mut p = SlotPartition::new(321, 4); // 320 usable → 80 per region
+        assert_eq!(p.region_len(), 80);
+        assert_eq!(p.trash_slot(), 320);
+        assert_eq!(p.free_regions(), 4);
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        assert_eq!(a, SlotRange { base: 0, len: 80 });
+        assert_eq!(b, SlotRange { base: 80, len: 80 });
+        assert_eq!(p.free_regions(), 2);
+        p.release(a);
+        assert_eq!(p.free_regions(), 3);
+        // The freed region is leasable again.
+        assert_eq!(p.lease().unwrap(), a);
+    }
+
+    #[test]
+    fn partition_exhausts_then_refills() {
+        let mut p = SlotPartition::new(9, 2); // 8 usable → 4 per region
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        assert!(p.lease().is_none());
+        p.release(b);
+        p.release(a);
+        assert_eq!(p.free_regions(), 2);
+    }
+
+    #[test]
+    fn ranged_cache_stays_inside_its_lease() {
+        let mut p = SlotPartition::new(17, 2); // 16 usable → 8 per region
+        let ra = p.lease().unwrap();
+        let rb = p.lease().unwrap();
+        let mut a = SlotCache::with_range(ra, 17, p.trash_slot());
+        let mut b = SlotCache::with_range(rb, 17, p.trash_slot());
+        let sa = a.alloc(8).unwrap();
+        let sb = b.alloc(8).unwrap();
+        assert!(a.alloc(1).is_none(), "range exhausted");
+        assert!(sa.iter().all(|&s| ra.contains(s)));
+        assert!(sb.iter().all(|&s| rb.contains(s)));
+        assert!(sa.iter().all(|&s| !rb.contains(s)), "ranges overlap");
+        assert_eq!(a.capacity(), 17, "mask width covers the shared array");
+        assert_eq!(a.usable(), 8);
+        assert_eq!(a.trash_slot(), 16);
+    }
+
+    #[test]
+    fn ranged_cache_reset_refills_only_its_range() {
+        let r = SlotRange { base: 4, len: 4 };
+        let mut c = SlotCache::with_range(r, 12, 11);
+        let s = c.alloc(3).unwrap();
+        c.commit(s[0]);
+        c.reset();
+        assert_eq!(c.free_count(), 4);
+        let again = c.alloc(4).unwrap();
+        assert!(again.iter().all(|&x| r.contains(x)));
     }
 }

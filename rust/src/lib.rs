@@ -19,6 +19,8 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-figure reproductions.
 
+#![warn(missing_docs)]
+
 pub mod baselines;
 pub mod bench;
 pub mod config;

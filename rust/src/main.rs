@@ -26,7 +26,7 @@ const OPTS: &[&str] = &[
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
     "max-width", "max-verify", "max-sessions",
 ];
-const FLAGS: &[&str] = &["quick", "no-stream", "eager", "help"];
+const FLAGS: &[&str] = &["quick", "no-stream", "eager", "round-robin", "help"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -80,12 +80,67 @@ fn apply_engine_overrides(cfg: &mut EngineConfig, args: &Args) -> yggdrasil::Res
     Ok(())
 }
 
+/// With cross-session batching, each session owns only
+/// `(capacity - 1) / max_sessions` KV slots (DESIGN.md §9); the default
+/// single-session tree envelope would eat the whole quota and admission
+/// would reject every prompt. Fit the envelope to a known-good batched
+/// shape when it oversizes the quota.
+fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Result<()> {
+    if !cfg.batch.enabled {
+        return Ok(());
+    }
+    let cap = rt
+        .spec(&cfg.drafter)?
+        .cache_capacity
+        .min(rt.spec(&cfg.target)?.cache_capacity);
+    // Cap the session count itself first: each region needs ≥ 2 slots or
+    // the shared cache cannot be partitioned at all.
+    let max_fit = (cap.saturating_sub(1) / 2).max(1);
+    if cfg.batch.max_sessions > max_fit {
+        eprintln!(
+            "batched serving: {} sessions cannot share a {cap}-slot cache; \
+             capping at {max_fit}",
+            cfg.batch.max_sessions
+        );
+        cfg.batch.max_sessions = max_fit;
+    }
+    let quota = cap.saturating_sub(1) / cfg.batch.max_sessions.max(1);
+    let budget = |c: &EngineConfig| c.max_depth * c.max_width + c.max_verify + 8;
+    // Keep ≥ 24 slots of the quota for the committed prefix + generation.
+    if budget(cfg) > quota.saturating_sub(24) {
+        let before = (cfg.max_depth, cfg.max_width, cfg.max_verify);
+        cfg.max_depth = cfg.max_depth.min(4);
+        cfg.max_width = cfg.max_width.min(4);
+        cfg.max_verify = cfg.max_verify.min(16);
+        // Tiny quotas (many sessions on a small cache): keep shrinking so
+        // admission headroom stays positive instead of rejecting 100%.
+        while budget(cfg) > quota.saturating_sub(16)
+            && (cfg.max_verify > 4 || cfg.max_width > 1 || cfg.max_depth > 2)
+        {
+            if cfg.max_verify > 4 {
+                cfg.max_verify = (cfg.max_verify / 2).max(4);
+            } else if cfg.max_width > 1 {
+                cfg.max_width /= 2;
+            } else {
+                cfg.max_depth -= 1;
+            }
+        }
+        eprintln!(
+            "batched serving: tree envelope D{} W{} Wv{} oversizes the per-session \
+             KV quota ({quota} slots); fitted to D{} W{} Wv{}",
+            before.0, before.1, before.2, cfg.max_depth, cfg.max_width, cfg.max_verify
+        );
+    }
+    Ok(())
+}
+
 /// Loads the runtime + latency model + optional trained predictor and
 /// builds the configured engine (step-driven, so it can serve).
 fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn StepEngine + Send>)> {
     let dir = &app.runtime.artifacts_dir;
-    let cfg = app.engine.clone();
+    let mut cfg = app.engine.clone();
     let rt = Runtime::load(dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
+    fit_batched_envelope(&mut cfg, &rt)?;
     let engine_name = args.str_or("engine", "yggdrasil");
     let lat = profiling::load_or_profile(
         &rt,
@@ -123,6 +178,9 @@ fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn St
         p.drafter = cfg.drafter.clone();
         p.target = cfg.target.clone();
         p.sampling = cfg.sampling.clone();
+        // Baseline presets keep owned caches (their envelopes outsize the
+        // shared-cache per-session quota); the server's batched rounds
+        // then fall back to serial stepping gracefully.
         Box::new(SpecDecoder::new(&rt, p, lat, None))
     };
     Ok((rt, boxed))
@@ -160,18 +218,30 @@ fn cmd_generate(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
 }
 
 fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
+    let mut app = app.clone();
+    let batched = app.server.batched && !args.flag("round-robin");
+    let max_sessions = args.usize_or("max-sessions", app.server.max_sessions)?;
+    if batched {
+        // Cross-session batching: the engine shares one cache pair across
+        // the server's session slots (DESIGN.md §9).
+        app.engine.batch.enabled = true;
+        app.engine.batch.max_sessions = max_sessions;
+    }
+    let app = &app;
     let (_rt, engine) = build(app, args)?;
     let addr = args.str_or("addr", &app.server.addr);
     let stream = app.server.stream && !args.flag("no-stream");
     let opts = ServeOpts {
         max_queue: app.server.max_queue,
-        max_sessions: args.usize_or("max-sessions", app.server.max_sessions)?,
+        max_sessions,
         stream,
+        batched,
     };
     let max_sessions = opts.max_sessions;
     let srv = Server::spawn(&addr, engine, opts)?;
     eprintln!(
-        "serving on {} (stream={stream}, max_sessions={max_sessions}) — Ctrl-C to stop",
+        "serving on {} (stream={stream}, max_sessions={max_sessions}, \
+         batched={batched}) — Ctrl-C to stop",
         srv.addr
     );
     loop {
@@ -283,6 +353,8 @@ COMMON OPTIONS
   --drafter / --target model names (default dft-xs / tgt-sm)
   --max-new N --temperature T --seed S
   --max-sessions N    concurrent sessions to interleave (serve)
+  --round-robin       serve with serial time-slicing instead of
+                      cross-session batched verification
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

@@ -17,6 +17,7 @@ pub struct Series {
 }
 
 impl Series {
+    /// Appends one sample.
     pub fn record(&mut self, x: f64) {
         self.samples.push(x);
     }
@@ -33,18 +34,22 @@ impl Series {
         }
     }
 
+    /// Sample count.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> f64 {
         self.samples.iter().sum()
     }
 
+    /// Mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -52,6 +57,7 @@ impl Series {
         self.sum() / self.samples.len() as f64
     }
 
+    /// Exact nearest-rank percentile, `p` in [0, 100] (NaN when empty).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -62,14 +68,17 @@ impl Series {
         s[idx.min(s.len() - 1)]
     }
 
+    /// Smallest sample (NaN when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NAN, f64::min)
     }
 
+    /// Largest sample (NaN when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().copied().fold(f64::NAN, f64::max)
     }
 
+    /// The raw samples, in record order.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -82,10 +91,12 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Appends `value` to the series named `name`.
     pub fn record(&mut self, name: &str, value: f64) {
         self.series.entry(name.to_string()).or_default().record(value);
     }
@@ -104,14 +115,17 @@ impl Recorder {
         out
     }
 
+    /// The series named `name`, if any.
     pub fn get(&self, name: &str) -> Option<&Series> {
         self.series.get(name)
     }
 
+    /// Mean of a series (NaN when absent).
     pub fn mean(&self, name: &str) -> f64 {
         self.get(name).map(|s| s.mean()).unwrap_or(f64::NAN)
     }
 
+    /// Sum of a series (0 when absent).
     pub fn sum(&self, name: &str) -> f64 {
         self.get(name).map(|s| s.sum()).unwrap_or(0.0)
     }
@@ -127,10 +141,12 @@ impl Recorder {
         self.get(name).map(|s| s.len()).unwrap_or(0)
     }
 
+    /// All series names, sorted.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.series.keys().map(|s| s.as_str())
     }
 
+    /// Concatenates every series of `other` onto this recorder.
     pub fn merge(&mut self, other: &Recorder) {
         for (k, v) in &other.series {
             let e = self.series.entry(k.clone()).or_default();
@@ -158,12 +174,16 @@ impl Recorder {
 /// A simple experiment table rendered as Markdown or CSV.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Rows (stringified cells).
     pub rows: Vec<Vec<String>>,
+    /// Optional caption rendered above the Markdown form.
     pub title: Option<String>,
 }
 
 impl Table {
+    /// An empty table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -172,16 +192,19 @@ impl Table {
         }
     }
 
+    /// Sets the caption (builder-style).
     pub fn with_title(mut self, t: &str) -> Self {
         self.title = Some(t.to_string());
         self
     }
 
+    /// Appends a row; panics on arity mismatch.
     pub fn row<S: ToString>(&mut self, cells: &[S]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells.iter().map(|c| c.to_string()).collect());
     }
 
+    /// Renders as a Markdown table.
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         if let Some(t) = &self.title {
@@ -195,6 +218,7 @@ impl Table {
         out
     }
 
+    /// Renders as CSV (headers first).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{}", self.headers.join(","));
@@ -204,6 +228,7 @@ impl Table {
         out
     }
 
+    /// Writes the CSV form, creating parent directories.
     pub fn save_csv(&self, path: &std::path::Path) -> crate::Result<()> {
         if let Some(p) = path.parent() {
             std::fs::create_dir_all(p)?;

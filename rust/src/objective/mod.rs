@@ -36,6 +36,7 @@ pub struct LatencyCurve {
 }
 
 impl LatencyCurve {
+    /// Builds a curve from `(width, seconds)` points (sorted internally).
     pub fn new(points: &[(usize, f64)]) -> Self {
         let mut pts: Vec<(usize, f64)> = points.to_vec();
         pts.sort_by_key(|p| p.0);
@@ -71,7 +72,9 @@ impl LatencyCurve {
 /// Profiled latency model for one (drafter, verifier) deployment.
 #[derive(Debug, Clone)]
 pub struct LatencyModel {
+    /// Drafter latency curve.
     pub drafter: LatencyCurve,
+    /// Verifier latency curve.
     pub verifier: LatencyCurve,
     /// Measured CPU bookkeeping seconds per decoding iteration (tree
     /// building, masks, acceptance walk) under the *sequential* plan.
@@ -79,10 +82,12 @@ pub struct LatencyModel {
 }
 
 impl LatencyModel {
+    /// Drafter seconds at width `w`.
     pub fn t_draft(&self, w: usize) -> f64 {
         self.drafter.at(w as f64)
     }
 
+    /// Verifier seconds at width `w`.
     pub fn t_verify(&self, w: usize) -> f64 {
         self.verifier.at(w as f64)
     }
@@ -119,6 +124,7 @@ impl LatencyModel {
 }
 
 impl LatencyCurve {
+    /// JSON form (profile files).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("widths", Json::from_f64s(&self.widths)),
@@ -126,6 +132,7 @@ impl LatencyCurve {
         ])
     }
 
+    /// Parses the JSON form.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let c = Self { widths: j.f64_vec("widths")?, seconds: j.f64_vec("seconds")? };
         anyhow::ensure!(
@@ -137,6 +144,7 @@ impl LatencyCurve {
 }
 
 impl LatencyModel {
+    /// JSON form (profile files).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("drafter", self.drafter.to_json()),
@@ -145,6 +153,7 @@ impl LatencyModel {
         ])
     }
 
+    /// Parses the JSON form.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         Ok(Self {
             drafter: LatencyCurve::from_json(j.req("drafter")?)?,
@@ -153,10 +162,12 @@ impl LatencyModel {
         })
     }
 
+    /// Writes the profile JSON.
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         self.to_json().save(path)
     }
 
+    /// Loads a profile JSON.
     pub fn load(path: &std::path::Path) -> crate::Result<Self> {
         Self::from_json(&Json::parse_file(path)?)
     }
@@ -175,6 +186,7 @@ pub struct AcceptanceStats {
     pub alpha: f64,
     /// Acceptance-by-rank vector (for Sequoia construction & Fig. 11).
     pub accept_by_rank: Vec<f64>,
+    /// Raw hit counts per rank (diagnostics).
     pub rank_counts: Vec<u64>,
 }
 
@@ -219,6 +231,7 @@ impl AcceptanceStats {
         }
     }
 
+    /// Clamped coverage estimate for width `w`.
     pub fn q(&self, w: usize) -> f64 {
         self.q_by_width[Self::widx(w)].clamp(0.01, 0.999)
     }

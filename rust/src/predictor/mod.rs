@@ -78,6 +78,7 @@ fn sigmoid(x: f32) -> f32 {
 /// profiling run.
 #[derive(Debug, Clone)]
 pub struct DepthSample {
+    /// Verifier final-norm hidden state of the bonus context.
     pub hidden: Vec<f32>,
     /// Number of draft tokens accepted in the following iteration
     /// (excludes the bonus token), clamped to `max_depth`.
@@ -90,15 +91,20 @@ pub struct DepthPredictor {
     enc1: Linear,
     enc2: Linear,
     heads: Linear, // [max_depth, hidden]
+    /// Expected hidden-state dimension.
     pub input_dim: usize,
+    /// Encoder width.
     pub hidden_dim: usize,
+    /// Number of depth heads (predicts `1..=max_depth`).
     pub max_depth: usize,
     /// Training metadata for EXPERIMENTS.md provenance.
     pub train_loss: f32,
+    /// Samples seen by the last training run.
     pub train_samples: usize,
 }
 
 impl DepthPredictor {
+    /// A randomly-initialised predictor.
     pub fn new(input_dim: usize, hidden_dim: usize, max_depth: usize, seed: u64) -> Self {
         let mut rng = XorShiftRng::new(seed);
         Self {
@@ -245,6 +251,7 @@ impl DepthPredictor {
         last_loss
     }
 
+    /// JSON form (weight file).
     pub fn to_json(&self) -> Json {
         let lin = |l: &Linear| {
             Json::obj(vec![
@@ -266,6 +273,7 @@ impl DepthPredictor {
         ])
     }
 
+    /// Parses the JSON weight form.
     pub fn from_json(j: &Json) -> crate::Result<Self> {
         let lin = |j: &Json| -> crate::Result<Linear> {
             let l = Linear {
@@ -289,10 +297,12 @@ impl DepthPredictor {
         })
     }
 
+    /// Writes the weights as JSON.
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         self.to_json().save(path)
     }
 
+    /// Loads weights from JSON.
     pub fn load(path: &std::path::Path) -> crate::Result<Self> {
         Self::from_json(&Json::parse_file(path)?)
     }

@@ -67,6 +67,7 @@ impl SubtreeDp {
         Self { dp, split, kmax }
     }
 
+    /// Largest subtree size the table was solved for.
     pub fn kmax(&self) -> usize {
         self.kmax
     }

@@ -10,37 +10,56 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
+/// One tensor's location inside a model's weight blob.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// Tensor name (diagnostics).
     pub name: String,
+    /// Dimensions.
     pub shape: Vec<usize>,
     /// Offset in f32 elements into the weight blob.
     pub offset: usize,
 }
 
 impl TensorSpec {
+    /// Element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One model's architecture, capacities and artifact files.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Transformer layer count.
     pub layers: usize,
+    /// Residual width.
     pub d_model: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Feed-forward hidden width.
     pub ffn: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// KV-cache slots per instance (DESIGN.md §7).
     pub cache_capacity: usize,
+    /// RoPE base.
     pub rope_theta: f64,
+    /// Final-logits scale factor.
     pub logit_scale: f64,
+    /// Total parameter count.
     pub param_count: usize,
+    /// Weight-blob file name inside the bundle.
     pub weights_file: String,
     /// width (as string in JSON) -> HLO text file name.
     pub graphs: HashMap<String, String>,
+    /// Compiled graph widths available for this model.
     pub widths: Vec<usize>,
+    /// `"drafter"` or `"target"` (informational).
     pub role: String,
+    /// Weight-blob layout.
     pub tensors: Vec<TensorSpec>,
 }
 
@@ -50,31 +69,43 @@ impl ModelSpec {
         self.layers * 2 * self.cache_capacity * self.heads * self.head_dim
     }
 
+    /// Dimensions of the device KV-cache buffer.
     pub fn cache_dims(&self) -> [usize; 5] {
         [self.layers, 2, self.cache_capacity, self.heads, self.head_dim]
     }
 
+    /// HLO file for a compiled width, if present.
     pub fn graph_file(&self, width: usize) -> Option<&str> {
         self.graphs.get(&width.to_string()).map(|s| s.as_str())
     }
 }
 
+/// A golden-output vector for numerics parity tests.
 #[derive(Debug, Clone)]
 pub struct GoldenSpec {
+    /// Golden file name.
     pub file: String,
+    /// Graph width the vector was produced at.
     pub width: usize,
 }
 
+/// The parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub format_version: u32,
+    /// Models by name.
     pub models: HashMap<String, ModelSpec>,
+    /// Prompt-set files by dataset name.
     pub datasets: HashMap<String, String>,
+    /// Golden vectors by model name.
     pub golden: HashMap<String, GoldenSpec>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Loads and cross-validates `manifest.json` from the bundle.
     pub fn load(artifacts_dir: &Path) -> crate::Result<Self> {
         let path = artifacts_dir.join("manifest.json");
         if !path.exists() {
@@ -185,6 +216,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// Spec for `name`, or an error naming the known models.
     pub fn model(&self, name: &str) -> crate::Result<&ModelSpec> {
         self.models
             .get(name)

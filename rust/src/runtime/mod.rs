@@ -43,14 +43,21 @@ pub enum ExecMode {
 /// One forward call against a model graph of compiled width `width`.
 #[derive(Debug, Clone)]
 pub struct ForwardRequest {
+    /// Model name in the manifest.
     pub model: String,
+    /// Compiled graph width (row count of the padded batch).
     pub width: usize,
+    /// Device cache the call reads/writes.
     pub cache: CacheId,
+    /// `width` token ids (padding rows are 0).
     pub tokens: Vec<i32>,
+    /// `width` RoPE positions.
     pub positions: Vec<i32>,
+    /// `width` cache slots to scatter K/V into (padding → trash).
     pub slots: Vec<i32>,
     /// Row-major `[width, cache_capacity]` validity mask.
     pub mask: Vec<f32>,
+    /// Weights-resident vs restaged execution.
     pub mode: ExecMode,
 }
 
@@ -101,6 +108,7 @@ pub struct Pending<T> {
 }
 
 impl<T> Pending<T> {
+    /// Blocks for the reply.
     pub fn wait(self) -> crate::Result<T> {
         self.rx.recv().map_err(|_| anyhow::anyhow!("device thread terminated"))?
     }
@@ -154,10 +162,12 @@ impl Runtime {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.shared.manifest
     }
 
+    /// Model spec by name.
     pub fn spec(&self, model: &str) -> crate::Result<&ModelSpec> {
         self.shared.manifest.model(model)
     }
@@ -169,6 +179,7 @@ impl Runtime {
         Pending { rx }.wait()
     }
 
+    /// Frees a device cache (fire-and-forget).
     pub fn drop_cache(&self, id: CacheId) {
         let _ = self.send(Msg::DropCache { id });
     }
@@ -252,5 +263,91 @@ impl Drop for Shared {
         if let Some(j) = self.join.lock().unwrap().take() {
             let _ = j.join();
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch-width planning (cross-session batched verification, DESIGN.md §9)
+// ---------------------------------------------------------------------------
+
+/// One packed device call of a batched scheduling round: which sessions'
+/// verify rows ride together and which compiled graph width hosts them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchGroup {
+    /// Indices (into the planner's input) of the sessions in this batch.
+    pub members: Vec<usize>,
+    /// Total real (non-padding) rows across the members.
+    pub rows: usize,
+    /// Compiled graph width the batch pads to (smallest fitting
+    /// [`crate::config::GRAPH_WIDTHS`] entry).
+    pub width: usize,
+}
+
+/// Packs per-session verify-row counts into device batches.
+///
+/// Greedy first-fit in session order: sessions accumulate into a group
+/// while the total stays within `max_width` (the largest compiled graph
+/// width); overflow starts the next group. Each group then pads to the
+/// smallest compiled width that fits its rows, so one scheduling round
+/// costs `groups.len()` verifier calls instead of `rows.len()`.
+///
+/// Panics if any single session needs more rows than `max_width` — the
+/// engine's pruning stage guarantees per-session trees fit one graph.
+pub fn plan_batches(rows: &[usize], max_width: usize) -> Vec<BatchGroup> {
+    let mut groups: Vec<BatchGroup> = Vec::new();
+    let mut cur = BatchGroup { members: Vec::new(), rows: 0, width: 0 };
+    for (i, &r) in rows.iter().enumerate() {
+        assert!(r > 0, "session {i} contributes zero rows");
+        assert!(r <= max_width, "session {i} rows {r} exceed max width {max_width}");
+        if cur.rows + r > max_width && !cur.members.is_empty() {
+            groups.push(cur);
+            cur = BatchGroup { members: Vec::new(), rows: 0, width: 0 };
+        }
+        cur.members.push(i);
+        cur.rows += r;
+    }
+    if !cur.members.is_empty() {
+        groups.push(cur);
+    }
+    for g in &mut groups {
+        g.width = crate::config::width_for(g.rows)
+            .expect("group rows bounded by max_width, which is a compiled width");
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_batches_packs_within_max_width() {
+        let g = plan_batches(&[10, 20, 30, 5], 64);
+        assert_eq!(g.len(), 2, "10+20+30 fits 64; 5 overflows");
+        assert_eq!(g[0].members, vec![0, 1, 2]);
+        assert_eq!(g[0].rows, 60);
+        assert_eq!(g[0].width, 64);
+        assert_eq!(g[1].members, vec![3]);
+        assert_eq!(g[1].width, 8);
+    }
+
+    #[test]
+    fn plan_batches_single_session_uses_tight_width() {
+        let g = plan_batches(&[3], 64);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].width, 4);
+    }
+
+    #[test]
+    fn plan_batches_each_full_session_gets_own_group() {
+        let g = plan_batches(&[64, 64], 64);
+        assert_eq!(g.len(), 2);
+        assert!(g.iter().all(|g| g.rows == 64 && g.width == 64));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed max width")]
+    fn plan_batches_rejects_oversized_sessions() {
+        let _ = plan_batches(&[65], 64);
     }
 }

@@ -11,6 +11,7 @@ pub struct XorShiftRng {
 }
 
 impl XorShiftRng {
+    /// Seeds the generator (splitmixed; any seed works, including 0).
     pub fn new(seed: u64) -> Self {
         // Avoid the all-zero fixed point; splitmix the seed once for
         // decorrelation of small consecutive seeds.
@@ -21,6 +22,7 @@ impl XorShiftRng {
         Self { state: z | 1 }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;

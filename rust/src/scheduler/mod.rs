@@ -33,12 +33,16 @@ use crate::config::SchedulePlan;
 /// The concrete overlap decisions for one iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Plan {
+    /// Speculatively draft next-root continuations behind the verify.
     pub aot_tail: bool,
+    /// Issue the next head draft before bookkeeping finishes.
     pub aot_head: bool,
 }
 
 impl Plan {
+    /// The no-overlap plan.
     pub const SEQUENTIAL: Plan = Plan { aot_tail: false, aot_head: false };
+    /// Every plan in the (tiny) search space.
     pub const ALL: [Plan; 4] = [
         Plan { aot_tail: false, aot_head: false },
         Plan { aot_tail: true, aot_head: false },
@@ -46,6 +50,7 @@ impl Plan {
         Plan { aot_tail: true, aot_head: true },
     ];
 
+    /// Stable plan label (config / logs).
     pub fn name(&self) -> &'static str {
         match (self.aot_tail, self.aot_head) {
             (false, false) => "sequential",
@@ -151,6 +156,28 @@ pub fn plan_latency(d: &StageDurations, plan: Plan) -> f64 {
                 + ((1.0 - d.tail_hit_rate) * d.head_draft).max(d.bookkeep)
         }
     }
+}
+
+/// Per-session stage durations when `sessions` concurrent sessions share
+/// one batched verifier call (cross-session batching, DESIGN.md §9).
+///
+/// The verify stage is the only device call the batch merges, so its cost
+/// amortizes across the riders: each session is charged `verify /
+/// sessions` of the (wider, but sub-linear) batched call. Draft stages
+/// stay per-session — drafting is not batched — and CPU stages are
+/// per-session by construction. Feeding the amortized durations to
+/// [`search_best_plan`] yields the plan the batched regime actually
+/// wants: with the verify share shrunk, hiding the CPU walk behind AOT
+/// stages matters *more*, never less.
+pub fn amortize_verify(d: &StageDurations, sessions: usize) -> StageDurations {
+    let s = sessions.max(1) as f64;
+    StageDurations { verify: d.verify / s, ..*d }
+}
+
+/// Plan search under an S-way batched verify: [`search_best_plan`] over
+/// the [`amortize_verify`] durations.
+pub fn search_best_plan_batched(d: &StageDurations, sessions: usize) -> (Plan, f64) {
+    search_best_plan(&amortize_verify(d, sessions))
 }
 
 /// Exhaustive profile-guided plan search (§5.2).
@@ -262,6 +289,35 @@ mod tests {
         // The floored durations feed the search without poisoning it.
         let (_, t) = search_best_plan(&d);
         assert!(t.is_finite());
+    }
+
+    #[test]
+    fn amortized_verify_shrinks_with_batch_size() {
+        let d = durations();
+        for p in Plan::ALL {
+            let solo = plan_latency(&d, p);
+            let mut prev = solo;
+            for s in [2usize, 4, 8] {
+                let t = plan_latency(&amortize_verify(&d, s), p);
+                assert!(t <= prev + 1e-12, "{} got slower at {s} sessions", p.name());
+                prev = t;
+            }
+        }
+        // Non-verify stages are untouched.
+        let a = amortize_verify(&d, 4);
+        assert!((a.tree_draft - d.tree_draft).abs() < 1e-15);
+        assert!((a.accept - d.accept).abs() < 1e-15);
+        assert!((a.verify - d.verify / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batched_search_still_prefers_overlap_for_expensive_cpu() {
+        let mut d = durations();
+        d.accept = 3e-3;
+        d.bookkeep = 3e-3;
+        let (p, t) = search_best_plan_batched(&d, 4);
+        assert!(p.aot_tail && p.aot_head, "picked {}", p.name());
+        assert!(t < plan_latency(&amortize_verify(&d, 4), Plan::SEQUENTIAL));
     }
 
     #[test]

@@ -58,19 +58,27 @@ pub struct ServeOpts {
     pub max_sessions: usize,
     /// Stream per-step tokens (vs. only the final `done` event).
     pub stream: bool,
+    /// Drive each scheduling round through [`StepEngine::step_batch`]
+    /// so engines with shared caches pack the round into fewer device
+    /// calls (cross-session batching, DESIGN.md §9). `false` forces the
+    /// serial round-robin baseline regardless of engine support.
+    pub batched: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { max_queue: 64, max_sessions: 4, stream: true }
+        Self { max_queue: 64, max_sessions: 4, stream: true, batched: true }
     }
 }
 
 /// Server statistics (exposed via the `"stats"` request).
 #[derive(Default)]
 pub struct ServerStats {
+    /// Requests dequeued (admitted or rejected).
     pub requests: AtomicU64,
+    /// Tokens committed across completed generations.
     pub tokens: AtomicU64,
+    /// Request-level failures.
     pub errors: AtomicU64,
     /// Sessions dropped because their client disconnected.
     pub cancelled: AtomicU64,
@@ -88,19 +96,30 @@ pub struct ServerStats {
 /// Point-in-time view of [`ServerStats`].
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
+    /// Total requests seen.
     pub requests: u64,
+    /// Total committed tokens.
     pub tokens: u64,
+    /// Request-level failures.
     pub errors: u64,
+    /// Sessions dropped on client disconnect.
     pub cancelled: u64,
+    /// Admission-control rejections.
     pub rejected: u64,
+    /// Live sessions after the last round.
     pub active_sessions: u64,
+    /// KV slots held across live sessions.
     pub kv_slots_in_use: u64,
+    /// Mean queueing delay (ms).
     pub queue_delay_ms_mean: f64,
+    /// Median time-to-first-token (ms).
     pub ttft_ms_p50: f64,
+    /// Mean per-request decode throughput.
     pub tok_per_s_mean: f64,
 }
 
 impl ServerStats {
+    /// A point-in-time copy of the counters and serving series.
     pub fn snapshot(&self) -> StatsSnapshot {
         let rec = self.recorder.lock().unwrap();
         StatsSnapshot {
@@ -119,6 +138,7 @@ impl ServerStats {
 }
 
 impl StatsSnapshot {
+    /// Wire form of the `stats` event.
     pub fn to_json(&self) -> Json {
         let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
         Json::obj(vec![
@@ -140,8 +160,10 @@ impl StatsSnapshot {
 /// A running server; dropping it stops the accept loop and the scheduler
 /// (live sessions are aborted and their caches freed).
 pub struct Server {
+    /// Bound socket address.
     pub addr: std::net::SocketAddr,
     stop: CancelFlag,
+    /// Shared serving statistics.
     pub stats: Arc<ServerStats>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     worker_thread: Option<std::thread::JoinHandle<()>>,
@@ -166,9 +188,10 @@ impl Server {
         let wstats = stats.clone();
         let wstop = stop.clone();
         let max_sessions = opts.max_sessions;
-        let worker_thread = std::thread::Builder::new()
-            .name("ygg-worker".into())
-            .spawn(move || sessions::run_worker(engine, job_rx, wstats, wstop, max_sessions))?;
+        let batched = opts.batched;
+        let worker_thread = std::thread::Builder::new().name("ygg-worker".into()).spawn(
+            move || sessions::run_worker(engine, job_rx, wstats, wstop, max_sessions, batched),
+        )?;
 
         // Accept loop: one reader + one writer pump per connection.
         let astop = stop.clone();
@@ -343,10 +366,15 @@ pub struct Client {
 /// One completed generation as seen by a client.
 #[derive(Debug, Clone)]
 pub struct ClientResult {
+    /// Generated tokens.
     pub tokens: Vec<u32>,
+    /// Server-reported average accepted length.
     pub aal: f64,
+    /// Server-reported per-token latency (ms).
     pub tpot_ms: f64,
+    /// Verification iterations used.
     pub iterations: usize,
+    /// `tokens` events seen before `done`.
     pub stream_events: usize,
     /// Server-side queueing delay for this request (ms).
     pub queue_ms: f64,
@@ -355,6 +383,7 @@ pub struct ClientResult {
 }
 
 impl Client {
+    /// Connects to a server.
     pub fn connect(addr: &std::net::SocketAddr) -> crate::Result<Self> {
         let sock = TcpStream::connect(addr)?;
         let writer = sock.try_clone()?;
@@ -427,12 +456,19 @@ impl Client {
 /// (shared by the figures harness, `cargo bench`, and e2e drivers).
 #[derive(Debug, Clone)]
 pub struct WaveStats {
+    /// Concurrent clients fired.
     pub clients: usize,
+    /// Tokens received across all clients.
     pub tokens: usize,
+    /// Wall-clock seconds for the whole wave.
     pub wall_s: f64,
+    /// Aggregate throughput.
     pub tok_per_s: f64,
+    /// Mean per-client end-to-end latency (ms).
     pub e2e_ms_mean: f64,
+    /// Mean server-side time-to-first-token (ms).
     pub ttft_ms_mean: f64,
+    /// Mean server-side queueing delay (ms).
     pub queue_ms_mean: f64,
 }
 
@@ -493,6 +529,10 @@ struct EchoTask {
 impl DecodeTask for EchoTask {
     fn state(&self) -> TaskState {
         self.state
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
     }
 
     fn step(&mut self) -> crate::Result<StepOutcome> {
@@ -563,6 +603,7 @@ impl Engine for EchoEngine {
 pub struct MockStepEngine {
     /// Simulated device time per step.
     pub step_delay: std::time::Duration,
+    /// Tokens emitted per iterate step.
     pub tokens_per_step: usize,
     /// Simulated per-session KV capacity in tokens.
     pub capacity: usize,
@@ -572,6 +613,7 @@ pub struct MockStepEngine {
 }
 
 impl MockStepEngine {
+    /// A mock with the given per-step delay, chunk size and KV capacity.
     pub fn new(step_delay_ms: u64, tokens_per_step: usize, capacity: usize) -> Self {
         Self {
             step_delay: std::time::Duration::from_millis(step_delay_ms),
@@ -590,6 +632,9 @@ struct MockTask {
     per_step: usize,
     delay: std::time::Duration,
     capacity: usize,
+    /// First prompt token: offsets the emitted counter tokens so tests
+    /// can tell concurrent sessions' streams apart (batch-mixing checks).
+    seed_tok: u32,
     /// Slots this task holds (mirrored into the engine gauge).
     held: usize,
     gauge: Arc<std::sync::atomic::AtomicUsize>,
@@ -599,6 +644,40 @@ impl MockTask {
     fn hold(&mut self, n: usize) {
         self.held += n;
         self.gauge.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Advances one scheduling step *without* the simulated device delay
+    /// — the per-task half of a step. `step()` charges the delay per
+    /// task (serial rounds); `MockStepEngine::step_batch` charges it
+    /// once per round (the batched-device analog).
+    fn advance(&mut self) -> StepOutcome {
+        match self.state {
+            TaskState::Done => StepOutcome { tokens: vec![], state: TaskState::Done },
+            TaskState::Prefill => {
+                self.hold(self.prompt_len);
+                self.state = if self.max_new == 0 || self.headroom() == 0 {
+                    TaskState::Done
+                } else {
+                    TaskState::Iterate
+                };
+                StepOutcome { tokens: vec![], state: self.state }
+            }
+            TaskState::Iterate => {
+                let n = self
+                    .per_step
+                    .min(self.max_new - self.produced)
+                    .min(self.headroom());
+                let tokens: Vec<u32> = (self.produced..self.produced + n)
+                    .map(|x| self.seed_tok.wrapping_add(x as u32))
+                    .collect();
+                self.produced += n;
+                self.hold(n);
+                if self.produced >= self.max_new || self.headroom() == 0 {
+                    self.state = TaskState::Done;
+                }
+                StepOutcome { tokens, state: self.state }
+            }
+        }
     }
 }
 
@@ -614,35 +693,15 @@ impl DecodeTask for MockTask {
         self.state
     }
 
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
     fn step(&mut self) -> crate::Result<StepOutcome> {
-        match self.state {
-            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
-            TaskState::Prefill => {
-                std::thread::sleep(self.delay);
-                self.hold(self.prompt_len);
-                self.state = if self.max_new == 0 || self.headroom() == 0 {
-                    TaskState::Done
-                } else {
-                    TaskState::Iterate
-                };
-                Ok(StepOutcome { tokens: vec![], state: self.state })
-            }
-            TaskState::Iterate => {
-                std::thread::sleep(self.delay);
-                let n = self
-                    .per_step
-                    .min(self.max_new - self.produced)
-                    .min(self.headroom());
-                let tokens: Vec<u32> =
-                    (self.produced..self.produced + n).map(|x| x as u32).collect();
-                self.produced += n;
-                self.hold(n);
-                if self.produced >= self.max_new || self.headroom() == 0 {
-                    self.state = TaskState::Done;
-                }
-                Ok(StepOutcome { tokens, state: self.state })
-            }
+        if self.state != TaskState::Done {
+            std::thread::sleep(self.delay);
         }
+        Ok(self.advance())
     }
 
     fn headroom(&self) -> usize {
@@ -655,7 +714,7 @@ impl DecodeTask for MockTask {
 
     fn finish(self: Box<Self>) -> Generation {
         Generation {
-            tokens: (0..self.produced).map(|x| x as u32).collect(),
+            tokens: (0..self.produced).map(|x| self.seed_tok.wrapping_add(x as u32)).collect(),
             iterations: self.produced.div_ceil(self.per_step),
             seconds: self.delay.as_secs_f64() * self.produced.div_ceil(self.per_step) as f64,
             prefill_seconds: self.delay.as_secs_f64(),
@@ -675,9 +734,33 @@ impl StepEngine for MockStepEngine {
             per_step: self.tokens_per_step,
             delay: self.step_delay,
             capacity: self.capacity,
+            seed_tok: prompt[0],
             held: 0,
             gauge: self.slots_in_use.clone(),
         }))
+    }
+
+    /// The mock analog of cross-session batched verification: one
+    /// simulated device delay serves the *whole* round, then every task
+    /// advances — so a round with S live sessions costs one `step_delay`
+    /// instead of S (exactly the amortization the real batched engine
+    /// gets from packing verify rows into one call).
+    fn step_batch(
+        &mut self,
+        tasks: &mut [&mut dyn DecodeTask],
+    ) -> Vec<crate::Result<StepOutcome>> {
+        if tasks.iter().any(|t| t.state() != TaskState::Done) {
+            std::thread::sleep(self.step_delay);
+        }
+        tasks
+            .iter_mut()
+            .map(|t| {
+                if let Some(m) = t.as_any_mut().downcast_mut::<MockTask>() {
+                    return Ok(m.advance());
+                }
+                t.step()
+            })
+            .collect()
     }
 }
 
@@ -714,7 +797,7 @@ mod tests {
     use super::*;
 
     fn opts(stream: bool) -> ServeOpts {
-        ServeOpts { max_queue: 8, max_sessions: 4, stream }
+        ServeOpts { max_queue: 8, max_sessions: 4, stream, batched: true }
     }
 
     #[test]

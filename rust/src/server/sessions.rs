@@ -36,7 +36,7 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::engine::{DecodeTask, StepEngine};
+use crate::engine::{DecodeTask, StepEngine, StepOutcome};
 use crate::util::json::Json;
 
 use super::{CancelFlag, ServerStats, StatsSnapshot};
@@ -49,10 +49,15 @@ const STATS_WINDOW: usize = 4096;
 /// Final per-request summary carried by [`ServerEvent::Done`].
 #[derive(Debug, Clone)]
 pub struct DoneSummary {
+    /// Generated tokens (complete sequence).
     pub tokens: Vec<u32>,
+    /// Average accepted length.
     pub aal: f64,
+    /// Per-token latency (ms).
     pub tpot_ms: f64,
+    /// Verification iterations used.
     pub iterations: usize,
+    /// Prompt prefill time (ms).
     pub prefill_ms: f64,
     /// Time the request waited in the queue before admission.
     pub queue_ms: f64,
@@ -118,13 +123,19 @@ impl ServerEvent {
 
 /// One queued generation request.
 pub struct Job {
+    /// Client-chosen request id (demux key).
     pub id: u64,
+    /// Tokenized prompt.
     pub prompt: Vec<u32>,
+    /// Generation budget.
     pub max_new: usize,
+    /// Event channel back to the owning connection's writer pump.
     pub reply: mpsc::Sender<ServerEvent>,
+    /// Emit per-step `tokens` events.
     pub stream: bool,
     /// Connection-level cancel flag (client disconnected).
     pub cancelled: CancelFlag,
+    /// When the request entered the queue (queue-delay metric).
     pub enqueued: Instant,
 }
 
@@ -143,6 +154,7 @@ pub(super) fn run_worker(
     stats: Arc<ServerStats>,
     stop: CancelFlag,
     max_sessions: usize,
+    batched: bool,
 ) {
     let mut engine = engine;
     let max_sessions = max_sessions.max(1);
@@ -166,7 +178,7 @@ pub(super) fn run_worker(
             }
             continue;
         }
-        round(&mut live, &stats);
+        round(&mut engine, &mut live, &stats, batched);
         let kv: usize = live.iter().map(|s| s.task.kv_slots_in_use()).sum();
         stats.active_sessions.store(live.len() as u64, Ordering::Relaxed);
         stats.kv_slots_in_use.store(kv as u64, Ordering::Relaxed);
@@ -227,17 +239,46 @@ fn admit(
     }
 }
 
-/// One scheduling round: exactly one `step()` per live session, removing
-/// sessions as they cancel, finish, or fail.
-fn round(live: &mut Vec<ServeSession>, stats: &ServerStats) {
+/// One scheduling round over every live session, removing sessions as
+/// they cancel, finish, or fail.
+///
+/// In round-robin mode each task takes exactly one serial `step()` (the
+/// time-sliced discipline). In batched mode the whole round goes through
+/// [`StepEngine::step_batch`], letting engines with shared caches pack
+/// the sessions' verification into one device call per round (DESIGN.md
+/// §9) — outcomes still arrive one per session and are applied
+/// identically.
+fn round(
+    engine: &mut Box<dyn StepEngine + Send>,
+    live: &mut Vec<ServeSession>,
+    stats: &ServerStats,
+    batched: bool,
+) {
+    // Drop cancelled sessions first: frees their KV immediately and
+    // keeps them out of this round's batch.
     let mut i = 0;
     while i < live.len() {
         if live[i].job.cancelled.load(Ordering::Relaxed) {
             drop(live.remove(i)); // frees the task's KV caches now
             stats.cancelled.fetch_add(1, Ordering::Relaxed);
-            continue;
+        } else {
+            i += 1;
         }
-        match live[i].task.step() {
+    }
+    if live.is_empty() {
+        return;
+    }
+    let outcomes: Vec<crate::Result<StepOutcome>> = if batched {
+        let mut refs: Vec<&mut dyn DecodeTask> =
+            live.iter_mut().map(|s| s.task.as_mut()).collect();
+        engine.step_batch(&mut refs)
+    } else {
+        live.iter_mut().map(|s| s.task.step()).collect()
+    };
+    // Apply outcomes back-to-front so removals keep earlier indices valid.
+    debug_assert_eq!(outcomes.len(), live.len());
+    for (i, outcome) in outcomes.into_iter().enumerate().rev() {
+        match outcome {
             Ok(out) => {
                 let done = out.done();
                 if !out.tokens.is_empty() {
@@ -264,9 +305,7 @@ fn round(live: &mut Vec<ServeSession>, stats: &ServerStats) {
                 if done {
                     let s = live.remove(i);
                     finish_session(s, stats);
-                    continue;
                 }
-                i += 1;
             }
             Err(e) => {
                 let s = live.remove(i);
@@ -275,7 +314,6 @@ fn round(live: &mut Vec<ServeSession>, stats: &ServerStats) {
                     .job
                     .reply
                     .send(ServerEvent::Error { id: Some(s.job.id), message: format!("{e:#}") });
-                continue;
             }
         }
     }

@@ -24,6 +24,7 @@ use crate::tree::TreeShape;
 /// Accelerator roofline profile.
 #[derive(Debug, Clone)]
 pub struct GpuProfile {
+    /// Marketing name (table labels).
     pub name: &'static str,
     /// Peak dense FP16 TFLOP/s.
     pub peak_tflops: f64,
@@ -43,6 +44,7 @@ pub struct GpuProfile {
     pub compiled_overhead: f64,
 }
 
+/// NVIDIA A100-80G roofline profile.
 pub const A100: GpuProfile = GpuProfile {
     name: "A100-80G",
     peak_tflops: 312.0,
@@ -54,6 +56,7 @@ pub const A100: GpuProfile = GpuProfile {
     compiled_overhead: 30e-6,
 };
 
+/// NVIDIA A40 roofline profile.
 pub const A40: GpuProfile = GpuProfile {
     name: "A40",
     peak_tflops: 149.7,
@@ -68,24 +71,32 @@ pub const A40: GpuProfile = GpuProfile {
 /// Transformer dimension set (FP16 weights).
 #[derive(Debug, Clone)]
 pub struct LlmDims {
+    /// Model name.
     pub name: &'static str,
+    /// Parameter count.
     pub params: f64,
+    /// Transformer layers.
     pub layers: usize,
+    /// Residual width.
     pub d_model: usize,
 }
 
+/// Llama-2-7B dims.
 pub fn llama2_7b() -> LlmDims {
     LlmDims { name: "Llama-2-7B", params: 6.74e9, layers: 32, d_model: 4096 }
 }
 
+/// Llama-2-13B dims.
 pub fn llama2_13b() -> LlmDims {
     LlmDims { name: "Llama-2-13B", params: 13.0e9, layers: 40, d_model: 5120 }
 }
 
+/// Llama-68M drafter dims.
 pub fn llama_68m() -> LlmDims {
     LlmDims { name: "Llama-68M", params: 68e6, layers: 2, d_model: 768 }
 }
 
+/// Llama-160M drafter dims.
 pub fn llama_160m() -> LlmDims {
     LlmDims { name: "Llama-160M", params: 162e6, layers: 12, d_model: 768 }
 }
@@ -144,19 +155,25 @@ pub fn pair_latency_model(
 /// and the EGT envelope.
 #[derive(Debug, Clone)]
 pub struct SpecSim {
+    /// Latency model driving the iteration cost.
     pub lat: LatencyModel,
+    /// Measured acceptance-by-rank process.
     pub accept_by_rank: Vec<f64>,
 }
 
 /// Simulated outcome of one engine configuration.
 #[derive(Debug, Clone)]
 pub struct SimResult {
+    /// Expected average accepted length.
     pub aal: f64,
+    /// Seconds per iteration.
     pub step_latency: f64,
+    /// Seconds per token.
     pub tpot: f64,
 }
 
 impl SpecSim {
+    /// A simulator from a latency model and an acceptance process.
     pub fn new(lat: LatencyModel, accept_by_rank: Vec<f64>) -> Self {
         Self { lat, accept_by_rank }
     }

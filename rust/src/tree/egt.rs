@@ -23,9 +23,11 @@ use std::collections::BinaryHeap;
 /// A candidate expansion: attach `token` as a child of `parent`.
 #[derive(Debug, Clone, Copy)]
 pub struct Expansion {
+    /// Node the candidate attaches under.
     pub parent: NodeId,
     /// Rank of this token in the parent's drafter distribution (0 = top-1).
     pub rank: usize,
+    /// Candidate token id.
     pub token: u32,
     /// Drafter probability of `token` at `parent`.
     pub edge_prob: f32,
@@ -143,6 +145,7 @@ impl Frontier {
         self.heap.peek().map(|e| e.path_prob)
     }
 
+    /// True when no expansions remain.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

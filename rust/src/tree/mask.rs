@@ -11,8 +11,46 @@
 //! Mask building is on the per-iteration critical path, so the builder
 //! reuses one flat buffer and writes rows with `copy_from_slice` of a
 //! maintained prefix row (no per-call allocation after warm-up).
+//!
+//! For cross-session batched verification (DESIGN.md §9) the per-session
+//! row blocks — each built by that session's own builder over its own
+//! leased slot range — are concatenated by [`pack_block_diagonal`] into
+//! one `[rows, capacity]` batch mask. Because every session's slots come
+//! from a disjoint [`SlotRange`], the packed mask is block-diagonal:
+//! session A's rows are structurally unable to attend to session B's
+//! slots ([`rows_confined`] is the checkable form of that invariant).
+
+use crate::kvcache::SlotRange;
 
 use super::{NodeId, TokenTree};
+
+/// Concatenates per-session mask row blocks (each `k_i × capacity`,
+/// row-major) into one `[rows, capacity]` batch mask, zero-padding any
+/// rows past the blocks' total. Panics if a block is not a whole number
+/// of rows or the blocks exceed `rows`.
+pub fn pack_block_diagonal(blocks: &[&[f32]], capacity: usize, rows: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * capacity);
+    for b in blocks {
+        assert!(b.len() % capacity == 0, "block is not whole rows");
+        out.extend_from_slice(b);
+    }
+    assert!(out.len() <= rows * capacity, "blocks exceed the batch width");
+    out.resize(rows * capacity, 0.0);
+    out
+}
+
+/// True when every row of `block` (`k × capacity`, row-major) references
+/// only slots inside `range` — the per-session confinement invariant that
+/// makes a packed batch mask block-diagonal. Used by tests and debug
+/// assertions in the batched scheduler.
+pub fn rows_confined(block: &[f32], capacity: usize, range: SlotRange) -> bool {
+    debug_assert!(block.len() % capacity == 0);
+    block.chunks(capacity).all(|row| {
+        row.iter()
+            .enumerate()
+            .all(|(slot, &v)| v == 0.0 || range.contains(slot as u32))
+    })
+}
 
 /// Reusable mask builder for one model instance (one cache).
 #[derive(Debug, Clone)]
@@ -25,10 +63,12 @@ pub struct MaskBuilder {
 }
 
 impl MaskBuilder {
+    /// A builder for a `capacity`-slot cache (no slots committed yet).
     pub fn new(capacity: usize) -> Self {
         Self { capacity, prefix_row: vec![0.0; capacity], buf: Vec::new() }
     }
 
+    /// Mask row width (the cache capacity).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -43,6 +83,7 @@ impl MaskBuilder {
         self.prefix_row[slot as usize] = 0.0;
     }
 
+    /// Number of committed (always-visible) slots.
     pub fn committed_count(&self) -> usize {
         self.prefix_row.iter().filter(|&&x| x > 0.0).count()
     }
@@ -154,6 +195,26 @@ mod tests {
         assert_eq!(mb.committed_count(), 1);
         mb.release_slot(2);
         assert_eq!(mb.committed_count(), 0);
+    }
+
+    #[test]
+    fn pack_block_diagonal_concatenates_and_pads() {
+        let a = [1.0f32, 0.0, 0.0, 0.0]; // one row, capacity 4
+        let b = [0.0f32, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]; // two rows
+        let m = pack_block_diagonal(&[&a, &b], 4, 4);
+        assert_eq!(m.len(), 16);
+        assert_eq!(&m[0..4], &a);
+        assert_eq!(&m[4..12], &b);
+        assert!(m[12..].iter().all(|&x| x == 0.0), "padding row zeroed");
+    }
+
+    #[test]
+    fn rows_confined_detects_escapes() {
+        let range = SlotRange { base: 2, len: 2 };
+        let ok = [0.0f32, 0.0, 1.0, 1.0, 0.0, 0.0];
+        let bad = [0.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
+        assert!(rows_confined(&ok, 6, range));
+        assert!(!rows_confined(&bad, 6, range));
     }
 
     #[test]

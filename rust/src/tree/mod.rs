@@ -17,7 +17,7 @@ pub mod mask;
 pub mod shapes;
 
 pub use egt::{grow_step, Expansion, Frontier};
-pub use mask::MaskBuilder;
+pub use mask::{pack_block_diagonal, rows_confined, MaskBuilder};
 pub use shapes::TreeShape;
 
 /// Index of a node inside a [`TokenTree`].
@@ -66,34 +66,42 @@ impl TokenTree {
         id
     }
 
+    /// Node count (root included).
     pub fn len(&self) -> usize {
         self.tokens.len()
     }
 
+    /// Always false — a tree has at least its root.
     pub fn is_empty(&self) -> bool {
         false // a tree always has its root
     }
 
+    /// Token at `id`.
     pub fn token(&self, id: NodeId) -> u32 {
         self.tokens[id]
     }
 
+    /// Parent of `id` (`None` for the root).
     pub fn parent(&self, id: NodeId) -> Option<NodeId> {
         (self.parents[id] >= 0).then(|| self.parents[id] as NodeId)
     }
 
+    /// Depth of `id` (root = 0).
     pub fn depth(&self, id: NodeId) -> u32 {
         self.depths[id]
     }
 
+    /// Drafter probability of `id` given its parent.
     pub fn edge_prob(&self, id: NodeId) -> f32 {
         self.edge_probs[id]
     }
 
+    /// Product of edge probabilities from the root to `id`.
     pub fn path_prob(&self, id: NodeId) -> f32 {
         self.path_probs[id]
     }
 
+    /// Children of `id`, in insertion order.
     pub fn children(&self, id: NodeId) -> &[NodeId] {
         &self.children[id]
     }

@@ -29,6 +29,7 @@ pub struct ShapeNode {
 /// `i >= 1` is `nodes[i-1]`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TreeShape {
+    /// Nodes in insertion order; node id `i + 1` is `nodes[i]`.
     pub nodes: Vec<ShapeNode>,
 }
 
@@ -128,10 +129,12 @@ impl TreeShape {
         shape
     }
 
+    /// Node count (excluding the implicit root).
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True for the root-only shape.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
@@ -147,6 +150,7 @@ impl TreeShape {
         d
     }
 
+    /// Deepest node's depth.
     pub fn max_depth(&self) -> usize {
         (1..=self.nodes.len()).map(|i| self.depth_of(i)).max().unwrap_or(0)
     }

@@ -8,13 +8,20 @@
 
 use std::time::{Duration, Instant};
 
+/// Statistics of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
+    /// Case label.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds.
     pub median_s: f64,
+    /// 99th-percentile seconds.
     pub p99_s: f64,
+    /// Fastest iteration.
     pub min_s: f64,
 }
 
@@ -31,6 +38,7 @@ impl CaseResult {
         }
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p99 {:>12}",
@@ -43,10 +51,15 @@ impl CaseResult {
     }
 }
 
+/// Adaptive micro-benchmark runner.
 pub struct Bench {
+    /// Measurement window per case.
     pub target_time: Duration,
+    /// Warm-up window per case.
     pub warmup: Duration,
+    /// Hard iteration cap.
     pub max_iters: usize,
+    /// Completed case results.
     pub results: Vec<CaseResult>,
 }
 
@@ -62,6 +75,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner with the default windows.
     pub fn new() -> Self {
         Self::default()
     }

@@ -7,11 +7,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First positional token, e.g. `serve`.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Remaining positional arguments.
     pub positional: Vec<String>,
     /// Option names the caller declared (for unknown-option errors).
     known: Vec<String>,
@@ -62,18 +65,22 @@ impl Args {
         Ok(out)
     }
 
+    /// True when `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// String option with default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer option with default.
     pub fn usize_or(&self, name: &str, default: usize) -> crate::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -81,6 +88,7 @@ impl Args {
         }
     }
 
+    /// Float option with default.
     pub fn f64_or(&self, name: &str, default: f64) -> crate::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -88,6 +96,7 @@ impl Args {
         }
     }
 
+    /// u64 option with default.
     pub fn u64_or(&self, name: &str, default: u64) -> crate::Result<u64> {
         match self.get(name) {
             None => Ok(default),

@@ -13,17 +13,24 @@ use std::fmt::Write as _;
 /// is deterministic — experiment outputs diff cleanly.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (ordered keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---------------------------------------------------------- accessors
 
+    /// Object member lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -36,6 +43,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow::anyhow!("missing JSON key '{key}'"))
     }
 
+    /// Numeric value, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -43,6 +51,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integral value, if exactly representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
     }
@@ -61,6 +70,7 @@ impl Json {
         }
     }
 
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +78,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +86,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +94,7 @@ impl Json {
         }
     }
 
+    /// Object map, if an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -89,26 +102,31 @@ impl Json {
         }
     }
 
+    /// Required numeric member.
     pub fn f64(&self, key: &str) -> crate::Result<f64> {
         self.req(key)?.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' not a number"))
     }
 
+    /// Required non-negative-integer member.
     pub fn usize(&self, key: &str) -> crate::Result<usize> {
         self.req(key)?
             .as_usize()
             .ok_or_else(|| anyhow::anyhow!("'{key}' not a non-negative integer"))
     }
 
+    /// Required u64 member (number or decimal string).
     pub fn u64(&self, key: &str) -> crate::Result<u64> {
         self.req(key)?
             .as_u64()
             .ok_or_else(|| anyhow::anyhow!("'{key}' not a u64 (number or decimal string)"))
     }
 
+    /// Required string member.
     pub fn str(&self, key: &str) -> crate::Result<&str> {
         self.req(key)?.as_str().ok_or_else(|| anyhow::anyhow!("'{key}' not a string"))
     }
 
+    /// Required array member.
     pub fn arr(&self, key: &str) -> crate::Result<&[Json]> {
         self.req(key)?.as_arr().ok_or_else(|| anyhow::anyhow!("'{key}' not an array"))
     }
@@ -121,6 +139,7 @@ impl Json {
             .collect()
     }
 
+    /// Required integer-array member.
     pub fn usize_vec(&self, key: &str) -> crate::Result<Vec<usize>> {
         self.arr(key)?
             .iter()
@@ -130,6 +149,7 @@ impl Json {
 
     // -------------------------------------------------------- constructors
 
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -145,20 +165,24 @@ impl Json {
         }
     }
 
+    /// Array from an f32 slice.
     pub fn from_f32s(xs: &[f32]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Array from an f64 slice.
     pub fn from_f64s(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Array from a usize slice.
     pub fn from_usizes(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // -------------------------------------------------------- serialization
 
+    /// Serializes to compact JSON text.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -207,6 +231,7 @@ impl Json {
 
     // -------------------------------------------------------------- parsing
 
+    /// Parses a complete JSON document (rejects trailing garbage).
     pub fn parse(text: &str) -> crate::Result<Json> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0, depth: 0 };
@@ -217,12 +242,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Parses a JSON file.
     pub fn parse_file(path: &std::path::Path) -> crate::Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Self::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
     }
 
+    /// Writes as JSON text, creating parent directories.
     pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
         if let Some(p) = path.parent() {
             std::fs::create_dir_all(p)?;

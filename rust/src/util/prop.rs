@@ -11,8 +11,11 @@ use crate::sampling::XorShiftRng;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct PropConfig {
+    /// Inputs to draw.
     pub cases: usize,
+    /// Base RNG seed (override with `YGG_PROP_SEED`).
     pub seed: u64,
+    /// Shrink-attempt budget after a failure.
     pub max_shrink_steps: usize,
 }
 

@@ -3,10 +3,13 @@
 //! Sequoia construction, mask building, scheduling and the JSON substrate.
 //! Reproduce failures with `YGG_PROP_SEED=<seed> cargo test --test props`.
 
+use yggdrasil::kvcache::{SlotCache, SlotPartition, SlotRange};
 use yggdrasil::pruning::SubtreeDp;
 use yggdrasil::sampling::XorShiftRng;
 use yggdrasil::scheduler::{plan_latency, search_best_plan, Plan, StageDurations};
-use yggdrasil::tree::{grow_step, Frontier, MaskBuilder, TokenTree, TreeShape};
+use yggdrasil::tree::{
+    grow_step, pack_block_diagonal, rows_confined, Frontier, MaskBuilder, TokenTree, TreeShape,
+};
 use yggdrasil::util::json::Json;
 use yggdrasil::util::prop::{run_prop, shrink_usize, PropConfig};
 
@@ -280,6 +283,87 @@ fn prop_induced_subtree_preserves_probs() {
                         sub.path_prob(new),
                         t.path_prob(old)
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cross-session batching safety (DESIGN.md §9): over random packings of
+/// random per-session trees into one shared cache, no session's mask rows
+/// may ever reference another session's slots — the packed batch mask is
+/// block-diagonal by construction, and padding rows are all-zero.
+#[test]
+fn prop_block_diagonal_masks_never_cross_sessions() {
+    run_prop(
+        "block-diagonal-masks",
+        PropConfig::default(),
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let sessions = 2 + rng.next_range(3); // 2..=4 concurrent sessions
+            let per = 12 + rng.next_range(5); // region length 12..=16
+            let capacity = sessions * per + 1; // + shared trash slot
+            let mut part = SlotPartition::new(capacity, sessions);
+            let trash = part.trash_slot();
+            let mut blocks: Vec<(SlotRange, Vec<f32>)> = Vec::new();
+            for _ in 0..sessions {
+                let range = part.lease().ok_or_else(|| "lease failed".to_string())?;
+                let mut cache = SlotCache::with_range(range, capacity, trash);
+                // Random committed prefix.
+                let ncommit = rng.next_range(4);
+                let committed =
+                    cache.alloc(ncommit).ok_or_else(|| "prefix alloc failed".to_string())?;
+                for &s in &committed {
+                    cache.commit(s);
+                }
+                // Random tree, slots from this session's range only.
+                let mut tree = TokenTree::new(1);
+                let nnodes = 1 + rng.next_range(5);
+                let mut nodes = Vec::new();
+                for _ in 0..nnodes {
+                    let parent = rng.next_range(tree.len());
+                    nodes.push(tree.add_node(parent, rng.next_u64() as u32 % 64, 0.5));
+                }
+                let slots = cache
+                    .alloc(nodes.len() + 1)
+                    .ok_or_else(|| "tree alloc failed".to_string())?;
+                let mut slot_of = vec![None; tree.len()];
+                slot_of[0] = Some(slots[0]);
+                for (i, &n) in nodes.iter().enumerate() {
+                    slot_of[n] = Some(slots[i + 1]);
+                }
+                let rows =
+                    cache.mask_builder().build(&tree, &nodes, &slot_of, nodes.len()).to_vec();
+                if !rows_confined(&rows, capacity, range) {
+                    return Err(format!("session rows escaped their range {range:?}"));
+                }
+                blocks.push((range, rows));
+            }
+            // Pack and re-check row by row against the owning range.
+            let total_rows: usize = blocks.iter().map(|(_, b)| b.len() / capacity).sum();
+            let width = total_rows + rng.next_range(4); // some padding rows
+            let refs: Vec<&[f32]> = blocks.iter().map(|(_, b)| b.as_slice()).collect();
+            let packed = pack_block_diagonal(&refs, capacity, width);
+            let mut row = 0usize;
+            for (range, b) in &blocks {
+                for _ in 0..b.len() / capacity {
+                    let r = &packed[row * capacity..(row + 1) * capacity];
+                    for (col, &v) in r.iter().enumerate() {
+                        if v != 0.0 && !range.contains(col as u32) {
+                            return Err(format!(
+                                "packed row {row} sees foreign slot {col} (own range {range:?})"
+                            ));
+                        }
+                    }
+                    row += 1;
+                }
+            }
+            for r in row..width {
+                if packed[r * capacity..(r + 1) * capacity].iter().any(|&v| v != 0.0) {
+                    return Err(format!("padding row {r} is not all-zero"));
                 }
             }
             Ok(())
