@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc
+.PHONY: artifacts test figures fmt doc serve serve-equal
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -24,3 +24,12 @@ fmt:
 # The documented-surface gate CI enforces.
 doc:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Serve with the paged shared KV cache (DESIGN.md §10; the default —
+# tune with --block-size / --cache-blocks).
+serve:
+	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4
+
+# Equal-partition fallback layout (DESIGN.md §9).
+serve-equal:
+	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4 --equal-partition

@@ -35,7 +35,7 @@ fn main() -> yggdrasil::Result<()> {
         5,
     )?;
     let engine = SpecDecoder::new(&rt, EngineConfig::default(), lat, None);
-    let opts = ServeOpts { max_queue: 64, max_sessions: 4, stream: true, batched: true };
+    let opts = ServeOpts { max_queue: 64, max_sessions: 4, ..ServeOpts::default() };
     let srv = Server::spawn("127.0.0.1:0", Box::new(engine), opts)?;
     println!("server listening on {}", srv.addr);
 

@@ -61,7 +61,7 @@ fn serving_sweep(
     let srv = Server::spawn(
         "127.0.0.1:0",
         Box::new(engine),
-        ServeOpts { max_queue: 64, max_sessions: 4, stream: true, batched: true },
+        ServeOpts { max_queue: 64, max_sessions: 4, ..ServeOpts::default() },
     )
     .unwrap();
 

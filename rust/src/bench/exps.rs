@@ -493,6 +493,12 @@ pub fn fig15(lab: &mut Lab) -> crate::Result<()> {
 /// `done` metrics. The headline check: batched throughput at ≥4 clients
 /// clears the round-robin baseline (the device stops idling between
 /// per-session verifies).
+///
+/// A second table (`serving_paged.csv`) sweeps a *heterogeneous*
+/// short/long prompt mix at fixed total cache capacity, comparing the
+/// paged block-granular cache (DESIGN.md §10) against the equal-partition
+/// baseline on admitted concurrency, rejection rate, and
+/// preemption/resume counts.
 pub fn serving(lab: &mut Lab) -> crate::Result<()> {
     use crate::server::{client_wave, ServeOpts, Server, WaveStats};
 
@@ -523,7 +529,12 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
         let srv = Server::spawn(
             "127.0.0.1:0",
             Box::new(engine),
-            ServeOpts { max_queue: 64, max_sessions: MAX_SESSIONS, stream: true, batched },
+            ServeOpts {
+                max_queue: 64,
+                max_sessions: MAX_SESSIONS,
+                batched,
+                ..ServeOpts::default()
+            },
         )?;
         for &clients in sweep {
             let w = client_wave(srv.addr, clients, &prompts.prompts, max_new)?;
@@ -557,5 +568,116 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
             format!("{:.2}x", w.tok_per_s / rr),
         ]);
     }
-    lab.emit("serving", &t)
+    lab.emit("serving", &t)?;
+    serving_paged_sweep(lab)
+}
+
+/// Heterogeneous-prompt sweep at fixed total cache capacity: paged
+/// block-granular leasing vs the equal-partition baseline (DESIGN.md
+/// §10). Long prompts strand an equal-partition cache — every region
+/// must be sized for the longest request — while the paged pool lets
+/// block counts follow the actual footprint, admitting more sessions
+/// concurrently at the cost of occasional preempt/resume churn.
+fn serving_paged_sweep(lab: &mut Lab) -> crate::Result<()> {
+    use crate::server::{Client, ServeOpts, Server};
+    use std::sync::atomic::Ordering;
+
+    let cap = lab.rt.spec("tgt-sm")?.cache_capacity.min(lab.rt.spec("dft-xs")?.cache_capacity);
+    let usable = cap.saturating_sub(1);
+    let vocab = lab.rt.spec("dft-xs")?.vocab as u32;
+    let max_new = if lab.opts.quick { 6 } else { 10 };
+    // Long prompts are sized to overflow an equal-partition region's
+    // admission headroom (region minus the tree budget) while fitting
+    // comfortably in the shared pool: equal mode must reject them, paged
+    // mode serves them alongside the shorts.
+    let sessions_eq = 3usize;
+    let region = usable / sessions_eq;
+    let long_len = region.saturating_sub(16).max(24);
+    let short_len = (long_len / 6).max(2);
+    let clients = if lab.opts.quick { 4 } else { 6 };
+    let mk_prompt = |len: usize, seed: u32| -> Vec<u32> {
+        (0..len).map(|i| (seed.wrapping_mul(31).wrapping_add(i as u32 * 7)) % vocab).collect()
+    };
+    // One long prompt per three clients, shorts in between.
+    let prompts: Vec<Vec<u32>> = (0..clients)
+        .map(|i| {
+            let len = if i % 3 == 0 { long_len } else { short_len };
+            mk_prompt(len, i as u32 + 1)
+        })
+        .collect();
+
+    let mut t = Table::new(&[
+        "mode",
+        "clients",
+        "admitted_peak",
+        "rejected",
+        "preempted",
+        "resumed",
+        "completed",
+        "tok_per_s",
+    ])
+    .with_title(
+        "Serving (paged) — heterogeneous prompt mix at fixed cache capacity \
+         (DESIGN.md §10)",
+    );
+    for (mode, paged) in [("equal_partition", false), ("paged", true)] {
+        let mut cfg = EngineConfig::default();
+        cfg.drafter = "dft-xs".into();
+        cfg.target = "tgt-sm".into();
+        cfg.use_depth_predictor = false;
+        cfg.max_depth = 2;
+        cfg.max_width = 2;
+        cfg.max_verify = 8;
+        cfg.batch.enabled = true;
+        cfg.batch.paged = paged;
+        cfg.batch.max_sessions = sessions_eq;
+        cfg.batch.block_size = 16;
+        let engine = lab.spec(cfg)?;
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts {
+                max_queue: 64,
+                max_sessions: if paged { clients } else { sessions_eq },
+                ..ServeOpts::default()
+            },
+        )?;
+        // Tolerant wave: equal-partition mode is *expected* to reject the
+        // long prompts, so per-client errors count instead of failing.
+        let t0 = std::time::Instant::now();
+        let addr = srv.addr;
+        let handles: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let p = p.clone();
+                std::thread::spawn(move || -> (usize, bool) {
+                    let Ok(mut c) = Client::connect(&addr) else { return (0, false) };
+                    match c.generate(i as u64, &p, max_new) {
+                        Ok(r) => (r.tokens.len(), true),
+                        Err(_) => (0, false),
+                    }
+                })
+            })
+            .collect();
+        let mut tokens = 0usize;
+        let mut completed = 0usize;
+        for h in handles {
+            let (tk, ok) = h.join().map_err(|_| anyhow::anyhow!("client panicked"))?;
+            tokens += tk;
+            completed += ok as usize;
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        t.row(&[
+            mode.to_string(),
+            clients.to_string(),
+            srv.stats.peak_sessions.load(Ordering::Relaxed).to_string(),
+            srv.stats.rejected.load(Ordering::Relaxed).to_string(),
+            srv.stats.preemptions.load(Ordering::Relaxed).to_string(),
+            srv.stats.resumes.load(Ordering::Relaxed).to_string(),
+            completed.to_string(),
+            format!("{:.1}", tokens as f64 / wall),
+        ]);
+    }
+    lab.emit("serving_paged", &t)
 }

@@ -56,7 +56,7 @@ pub enum SchedulePlan {
 }
 
 /// Per-request generation parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SamplingConfig {
     /// 0.0 = greedy. Tree acceptance switches to the stochastic
     /// (SpecInfer-style multi-branch residual) rule when > 0.
@@ -65,31 +65,37 @@ pub struct SamplingConfig {
     pub seed: u64,
 }
 
-impl Default for SamplingConfig {
-    fn default() -> Self {
-        Self { temperature: 0.0, seed: 0 }
-    }
-}
-
-/// Cross-session batching (DESIGN.md §9): when enabled, the engine backs
-/// all concurrent sessions with **one** shared device cache per model
-/// side, partitioned into per-session slot ranges, and packs the ready
-/// sessions' verification trees into one width-padded device call per
-/// scheduling round (block-diagonal mask keeps sessions invisible to one
-/// another).
+/// Cross-session batching (DESIGN.md §9–§10): when enabled, the engine
+/// backs all concurrent sessions with **one** shared device cache per
+/// model side and packs the ready sessions' verification trees into one
+/// width-padded device call per scheduling round (block-diagonal mask
+/// keeps sessions invisible to one another). The shared cache is carved
+/// either into a paged block pool (`paged`, the default — slots flow to
+/// whoever needs them, DESIGN.md §10) or into equal fixed per-session
+/// regions (the `--equal-partition` fallback, DESIGN.md §9).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchConfig {
     /// Share device caches and batch verification across sessions.
     pub enabled: bool,
-    /// Sessions the shared cache is partitioned for. Each session's slot
-    /// quota is `(capacity - 1) / max_sessions`, so the tree envelope
-    /// (`max_depth × max_width + max_verify`) must fit the quota.
+    /// Sessions the shared cache is partitioned for in equal-partition
+    /// mode (each gets `(capacity - 1) / max_sessions` slots); in paged
+    /// mode admission is token-level and this only sizes envelope
+    /// amortization estimates.
     pub max_sessions: usize,
+    /// Lease the shared cache block-by-block on demand instead of in
+    /// equal fixed regions.
+    pub paged: bool,
+    /// Slots per block in paged mode (`--block-size`). Validated by
+    /// [`crate::kvcache::BlockPool::new`]: must be ≥ 2 and fit the cache.
+    pub block_size: usize,
+    /// Optional cap on the number of pool blocks (`--cache-blocks`);
+    /// `None` uses everything the capacity can host.
+    pub cache_blocks: Option<usize>,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        Self { enabled: false, max_sessions: 4 }
+        Self { enabled: false, max_sessions: 4, paged: true, block_size: 16, cache_blocks: None }
     }
 }
 
@@ -365,6 +371,15 @@ impl EngineConfig {
             ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
             ("batch_enabled", Json::Bool(self.batch.enabled)),
             ("batch_max_sessions", Json::Num(self.batch.max_sessions as f64)),
+            ("batch_paged", Json::Bool(self.batch.paged)),
+            ("batch_block_size", Json::Num(self.batch.block_size as f64)),
+            (
+                "batch_cache_blocks",
+                match self.batch.cache_blocks {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -395,6 +410,9 @@ impl EngineConfig {
             batch: BatchConfig {
                 enabled: get_b("batch_enabled", d.batch.enabled),
                 max_sessions: get_u("batch_max_sessions", d.batch.max_sessions).max(1),
+                paged: get_b("batch_paged", d.batch.paged),
+                block_size: get_u("batch_block_size", d.batch.block_size),
+                cache_blocks: j.get("batch_cache_blocks").and_then(|v| v.as_usize()),
             },
         })
     }
@@ -512,7 +530,13 @@ mod tests {
         cfg.server.stream = false;
         cfg.server.max_sessions = 9;
         cfg.server.batched = false;
-        cfg.engine.batch = BatchConfig { enabled: true, max_sessions: 6 };
+        cfg.engine.batch = BatchConfig {
+            enabled: true,
+            max_sessions: 6,
+            paged: false,
+            block_size: 8,
+            cache_blocks: Some(12),
+        };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
         assert_eq!(back.engine.tree, TreeStructure::Sequoia);
@@ -521,7 +545,19 @@ mod tests {
         assert!(!back.server.stream);
         assert_eq!(back.server.max_sessions, 9);
         assert!(!back.server.batched);
-        assert_eq!(back.engine.batch, BatchConfig { enabled: true, max_sessions: 6 });
+        assert_eq!(back.engine.batch, cfg.engine.batch);
+    }
+
+    #[test]
+    fn batch_defaults_are_paged_and_absent_cache_blocks_stay_none() {
+        let d = BatchConfig::default();
+        assert!(d.paged, "paged block leasing is the default shared-cache layout");
+        assert!(d.cache_blocks.is_none());
+        let j = Json::parse(r#"{"engine": {"batch_enabled": true}}"#).unwrap();
+        let cfg = AppConfig::from_json(&j).unwrap();
+        assert!(cfg.engine.batch.enabled && cfg.engine.batch.paged);
+        assert_eq!(cfg.engine.batch.block_size, d.block_size);
+        assert!(cfg.engine.batch.cache_blocks.is_none());
     }
 
     #[test]

@@ -6,58 +6,91 @@
 //! tree root, so every decode iteration has a uniform shape (the root is
 //! always a not-yet-evaluated token — see DESIGN.md §7).
 //!
-//! Sessions come in two cache-ownership flavours:
+//! Sessions come in three cache-ownership flavours:
 //!
 //! * **Owned** ([`Session::new`]) — the session allocates its own device
 //!   cache per model side and drops them with it (the single-request and
 //!   round-robin serving mode).
-//! * **Shared** ([`Session::new_shared`]) — all sessions of one engine
-//!   share a single device cache per side ([`SharedCachePool`]); each
-//!   session leases a disjoint [`SlotRange`] and returns it on drop.
-//!   This is what lets the batched scheduler pack many sessions' tree
-//!   tokens into one device call (DESIGN.md §9) — same cache buffer,
-//!   block-diagonal masks.
+//! * **Shared, equal partition** ([`Session::new_shared`] over an
+//!   equal-layout [`SharedCachePool`]) — all sessions of one engine share
+//!   a single device cache per side; each session leases a disjoint
+//!   [`SlotRange`] and returns it on drop (DESIGN.md §9).
+//! * **Shared, paged** ([`Session::new_shared`] over a paged pool) — the
+//!   shared cache is a [`BlockPool`] of fixed-size blocks; the session's
+//!   [`SlotCache`] leases blocks on demand as generation proceeds and
+//!   returns them on rejection, completion, or disconnect (DESIGN.md
+//!   §10). Capacity follows the token footprint instead of a per-session
+//!   quota.
+//!
+//! Either shared flavour is what lets the batched scheduler pack many
+//! sessions' tree tokens into one device call — same cache buffer,
+//! block-diagonal masks.
 
 use std::sync::{Arc, Mutex};
 
-use crate::kvcache::{SlotCache, SlotPartition, SlotRange};
+use crate::config::BatchConfig;
+use crate::kvcache::{BlockPool, SlotCache, SlotPartition, SlotRange};
 use crate::runtime::{CacheId, ExecMode, ForwardReply, ForwardRequest, ModelSpec, Runtime};
 use crate::sampling::XorShiftRng;
 
-/// Shared device caches + slot partitions backing cross-session batched
-/// serving: one cache per model side, carved into equal per-session
-/// [`SlotRange`] regions (DESIGN.md §9). Dropping the pool frees the
-/// device caches; sessions must not outlive it (they hold an [`Arc`]).
+/// How a [`SharedCachePool`] carves its device caches into per-session
+/// slot sets.
+enum SharedLayout {
+    /// Equal contiguous regions, leased and released whole (DESIGN.md §9).
+    Equal { drafter: Mutex<SlotPartition>, target: Mutex<SlotPartition> },
+    /// Fixed-size blocks leased on demand (DESIGN.md §10).
+    Paged { drafter: Arc<Mutex<BlockPool>>, target: Arc<Mutex<BlockPool>> },
+}
+
+/// Shared device caches + slot bookkeeping backing cross-session batched
+/// serving: one cache per model side, carved either into equal
+/// per-session [`SlotRange`] regions (DESIGN.md §9) or into a paged
+/// [`BlockPool`] leased block-by-block (DESIGN.md §10). Dropping the pool
+/// frees the device caches; sessions must not outlive it (they hold an
+/// [`Arc`]).
 pub struct SharedCachePool {
     rt: Runtime,
     drafter_name: String,
     target_name: String,
     drafter_cache: CacheId,
     target_cache: CacheId,
-    drafter_part: Mutex<SlotPartition>,
-    target_part: Mutex<SlotPartition>,
+    layout: SharedLayout,
 }
 
 impl SharedCachePool {
-    /// Allocates one shared device cache per model side and partitions
-    /// each for `sessions` concurrent sessions.
+    /// Allocates one shared device cache per model side and prepares the
+    /// layout `batch` asks for: a paged [`BlockPool`] per side when
+    /// `batch.paged`, equal [`SlotPartition`]s for `batch.max_sessions`
+    /// otherwise. Layout errors surface as typed
+    /// [`crate::kvcache::CacheConfigError`]s — a startup/admission
+    /// failure, never a panic on the serving worker thread.
     pub fn new(
         rt: &Runtime,
         drafter: &str,
         target: &str,
-        sessions: usize,
+        batch: &BatchConfig,
     ) -> crate::Result<Self> {
-        let dspec = rt.spec(drafter)?.clone();
-        let tspec = rt.spec(target)?.clone();
-        // Validate before SlotPartition's programmer-contract assert: a
-        // misconfigured session count must surface as a per-request
-        // admission error, not a panic on the serving worker thread.
-        let min_cap = dspec.cache_capacity.min(tspec.cache_capacity);
-        anyhow::ensure!(
-            sessions >= 1 && min_cap.saturating_sub(1) / sessions >= 2,
-            "cache capacity {min_cap} cannot host {sessions} batched sessions \
-             (each needs ≥ 2 slots)"
-        );
+        let dcap = rt.spec(drafter)?.cache_capacity;
+        let tcap = rt.spec(target)?.cache_capacity;
+        let layout = if batch.paged {
+            SharedLayout::Paged {
+                drafter: Arc::new(Mutex::new(BlockPool::new(
+                    dcap,
+                    batch.block_size,
+                    batch.cache_blocks,
+                )?)),
+                target: Arc::new(Mutex::new(BlockPool::new(
+                    tcap,
+                    batch.block_size,
+                    batch.cache_blocks,
+                )?)),
+            }
+        } else {
+            SharedLayout::Equal {
+                drafter: Mutex::new(SlotPartition::new(dcap, batch.max_sessions)?),
+                target: Mutex::new(SlotPartition::new(tcap, batch.max_sessions)?),
+            }
+        };
         let drafter_cache = rt.new_cache(drafter)?;
         let target_cache = rt.new_cache(target)?;
         Ok(Self {
@@ -66,8 +99,7 @@ impl SharedCachePool {
             target_name: target.to_string(),
             drafter_cache,
             target_cache,
-            drafter_part: Mutex::new(SlotPartition::new(dspec.cache_capacity, sessions)),
-            target_part: Mutex::new(SlotPartition::new(tspec.cache_capacity, sessions)),
+            layout,
         })
     }
 
@@ -81,38 +113,43 @@ impl SharedCachePool {
         self.target_cache
     }
 
-    /// Per-session slot quota on (drafter, target) — sizes the largest
-    /// tree envelope a batched session can run.
-    pub fn session_quota(&self) -> (usize, usize) {
-        (
-            self.drafter_part.lock().unwrap().region_len() as usize,
-            self.target_part.lock().unwrap().region_len() as usize,
-        )
+    /// True when this pool leases fixed-size blocks on demand instead of
+    /// equal per-session regions.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.layout, SharedLayout::Paged { .. })
     }
 
-    /// Session regions still leasable (the admission-control signal).
-    pub fn free_sessions(&self) -> usize {
-        self.drafter_part
-            .lock()
-            .unwrap()
-            .free_regions()
-            .min(self.target_part.lock().unwrap().free_regions())
+    /// `(blocks in use, total blocks)` across both model sides in paged
+    /// mode — the serving layer's block-occupancy gauge. `None` for the
+    /// equal-partition layout.
+    pub fn block_occupancy(&self) -> Option<(usize, usize)> {
+        match &self.layout {
+            SharedLayout::Paged { drafter, target } => {
+                let d = drafter.lock().unwrap();
+                let t = target.lock().unwrap();
+                Some((d.blocks_in_use() + t.blocks_in_use(), d.num_blocks() + t.num_blocks()))
+            }
+            SharedLayout::Equal { .. } => None,
+        }
     }
 
     fn lease_pair(&self) -> Option<(SlotRange, SlotRange)> {
-        let d = self.drafter_part.lock().unwrap().lease()?;
-        match self.target_part.lock().unwrap().lease() {
+        let SharedLayout::Equal { drafter, target } = &self.layout else { return None };
+        let d = drafter.lock().unwrap().lease()?;
+        match target.lock().unwrap().lease() {
             Some(t) => Some((d, t)),
             None => {
-                self.drafter_part.lock().unwrap().release(d);
+                drafter.lock().unwrap().release(d);
                 None
             }
         }
     }
 
     fn release_pair(&self, d: SlotRange, t: SlotRange) {
-        self.drafter_part.lock().unwrap().release(d);
-        self.target_part.lock().unwrap().release(t);
+        if let SharedLayout::Equal { drafter, target } = &self.layout {
+            drafter.lock().unwrap().release(d);
+            target.lock().unwrap().release(t);
+        }
     }
 }
 
@@ -166,6 +203,23 @@ impl ModelSide {
         })
     }
 
+    /// A side over a shared *paged* cache: leases blocks of `pool` on
+    /// demand, pads to the pool's trash slot (DESIGN.md §10).
+    fn with_paged(
+        rt: &Runtime,
+        name: &str,
+        cache: CacheId,
+        pool: Arc<Mutex<BlockPool>>,
+    ) -> crate::Result<Self> {
+        let spec = rt.spec(name)?.clone();
+        Ok(Self {
+            name: name.to_string(),
+            spec,
+            cache,
+            slots: SlotCache::paged(pool),
+        })
+    }
+
     /// Builds a width-padded forward request for `n` real tokens. Padding
     /// rows use token 0 / position 0 / the trash slot / an all-zero mask
     /// row, so they cannot perturb real state.
@@ -203,6 +257,16 @@ impl ModelSide {
     }
 }
 
+/// What a shared-cache session must give back (or merely keep alive) when
+/// it drops.
+enum SharedLease {
+    /// Equal-partition ranges to return to the pool's partitions.
+    Equal(Arc<SharedCachePool>, SlotRange, SlotRange),
+    /// Paged mode: the session's `SlotCache`s return their own blocks on
+    /// drop; the `Arc` only keeps the shared device caches alive.
+    Paged(Arc<SharedCachePool>),
+}
+
 /// A generation session over a (drafter, verifier) pair.
 pub struct Session {
     /// Handle to the device thread.
@@ -220,7 +284,7 @@ pub struct Session {
     pub rng: XorShiftRng,
     exec_mode: ExecMode,
     /// Leases to return on drop (shared-cache mode only).
-    shared: Option<(Arc<SharedCachePool>, SlotRange, SlotRange)>,
+    shared: Option<SharedLease>,
 }
 
 impl Session {
@@ -244,20 +308,36 @@ impl Session {
         })
     }
 
-    /// A session leasing slot ranges of `pool`'s shared caches (batched
-    /// serving mode). Fails when every session region is leased — the
-    /// serving layer surfaces this as an admission rejection.
+    /// A session over `pool`'s shared caches (batched serving mode).
+    ///
+    /// Equal-partition layout: leases one region per side up front and
+    /// fails when every region is taken — the serving layer surfaces this
+    /// as an admission rejection. Paged layout: opens with **zero**
+    /// blocks and leases on demand as the generation actually needs slots
+    /// (token-level admission happens against pool headroom instead).
     pub fn new_shared(
         rt: &Runtime,
         pool: &Arc<SharedCachePool>,
         seed: u64,
         compiled: bool,
     ) -> crate::Result<Self> {
-        let (dr, tr) = pool
-            .lease_pair()
-            .ok_or_else(|| anyhow::anyhow!("no free batch session region in the shared cache"))?;
-        let drafter = ModelSide::with_shared(rt, &pool.drafter_name, pool.drafter_cache, dr)?;
-        let target = ModelSide::with_shared(rt, &pool.target_name, pool.target_cache, tr)?;
+        let (drafter, target, lease) = match &pool.layout {
+            SharedLayout::Paged { drafter: dp, target: tp } => (
+                ModelSide::with_paged(rt, &pool.drafter_name, pool.drafter_cache, dp.clone())?,
+                ModelSide::with_paged(rt, &pool.target_name, pool.target_cache, tp.clone())?,
+                SharedLease::Paged(Arc::clone(pool)),
+            ),
+            SharedLayout::Equal { .. } => {
+                let (dr, tr) = pool.lease_pair().ok_or_else(|| {
+                    anyhow::anyhow!("no free batch session region in the shared cache")
+                })?;
+                (
+                    ModelSide::with_shared(rt, &pool.drafter_name, pool.drafter_cache, dr)?,
+                    ModelSide::with_shared(rt, &pool.target_name, pool.target_cache, tr)?,
+                    SharedLease::Equal(Arc::clone(pool), dr, tr),
+                )
+            }
+        };
         Ok(Self {
             rt: rt.clone(),
             drafter,
@@ -266,7 +346,7 @@ impl Session {
             prompt_len: 0,
             rng: XorShiftRng::new(seed),
             exec_mode: if compiled { ExecMode::Resident } else { ExecMode::WeightsByValue },
-            shared: Some((Arc::clone(pool), dr, tr)),
+            shared: Some(lease),
         })
     }
 
@@ -297,11 +377,29 @@ impl Session {
     }
 
     /// Remaining generation headroom given a per-iteration tree budget.
+    /// In paged mode this counts the shared pool's free blocks, so it is
+    /// the token-level admission signal: the pool either covers prompt +
+    /// tree budget or it does not.
     pub fn headroom(&self, tree_budget: usize) -> usize {
         self.drafter
             .slots
             .headroom(tree_budget)
             .min(self.target.slots.headroom(tree_budget))
+    }
+
+    /// True when this session leases blocks of a shared paged pool — the
+    /// mode whose mid-flight allocation failures are preemptible rather
+    /// than terminal.
+    pub fn is_paged(&self) -> bool {
+        self.drafter.slots.is_paged()
+    }
+
+    /// The most tokens this session could ever hold per side even owning
+    /// every block — the absolute generation ceiling paged tasks stop at
+    /// (pool-wide *current* headroom is transient under contention, so it
+    /// must not be a stop condition).
+    pub fn lease_limit(&self) -> usize {
+        self.drafter.slots.lease_limit().min(self.target.slots.lease_limit())
     }
 }
 
@@ -321,7 +419,9 @@ fn prefill_side(
         let slots = side
             .slots
             .alloc(n)
-            .ok_or_else(|| anyhow::anyhow!("cache exhausted during prefill"))?;
+            // Typed in paged mode: the serving layer preempts + requeues
+            // instead of failing the request.
+            .ok_or_else(|| side.slots.exhausted("prefill"))?;
         let positions: Vec<i32> = (pos as i32..(pos + n) as i32).collect();
         let mask = side.slots.mask_builder().build_linear(&slots, n, width).to_vec();
         let req = side.padded_request(width, chunk, &positions, &slots, &mask, mode);
@@ -339,7 +439,11 @@ impl Drop for Session {
         match self.shared.take() {
             // Shared caches outlive the session: just return the leases
             // (stale K/V stays in the buffer but no mask can see it).
-            Some((pool, dr, tr)) => pool.release_pair(dr, tr),
+            Some(SharedLease::Equal(pool, dr, tr)) => pool.release_pair(dr, tr),
+            // Paged: each side's SlotCache returns its own blocks when it
+            // drops right after this; the Arc kept the device caches
+            // alive until now.
+            Some(SharedLease::Paged(_pool)) => {}
             None => {
                 self.rt.drop_cache(self.drafter.cache);
                 self.rt.drop_cache(self.target.cache);

@@ -582,8 +582,18 @@ impl SpecTask {
 
         // -------- pruning (O3) -------------------------------------------
         let t0 = Instant::now();
+        // Paged serving: the verification budget also clamps to what the
+        // shared pool can actually supply *right now*, so a crowded pool
+        // shrinks this session's tree instead of failing its verify
+        // (scheduler/plan interaction, DESIGN.md §10). Fixed-range caches
+        // see `available() == free`, preserving the solo behaviour.
+        let verify_budget = self
+            .cfg
+            .max_verify
+            .min(self.sess.target.slots.available())
+            .max(1);
         let (keep, w_verify) = if self.cfg.prune && st.tree.len() > 2 {
-            prune_for_objective(&st.tree, &sh.lat, &draft_widths, self.cfg.max_verify)
+            prune_for_objective(&st.tree, &sh.lat, &draft_widths, verify_budget)
         } else {
             let keep: Vec<NodeId> = (0..st.tree.len()).collect();
             let w = width_for(keep.len())
@@ -595,7 +605,10 @@ impl SpecTask {
 
         // -------- verification row assembly ------------------------------
         let Some(vslots) = self.sess.target.slots.alloc(keep.len()) else {
-            anyhow::bail!("verifier cache exhausted")
+            // Typed in paged mode: a dry shared pool preempts the session
+            // (blocks released, request requeued for re-prefill resume)
+            // instead of failing the request.
+            return Err(self.sess.target.slots.exhausted("verify row allocation"));
         };
         for (i, &node) in keep.iter().enumerate() {
             st.vslots[node] = Some(vslots[i]);
@@ -611,11 +624,12 @@ impl SpecTask {
             .build(&st.tree, &keep, &st.vslots, keep.len())
             .to_vec();
         // The block-diagonal invariant batched serving relies on: this
-        // session's rows reference only its own slot range.
-        debug_assert!(crate::tree::rows_confined(
+        // session's rows reference only slots it currently owns — a
+        // contiguous range, or its leased block set in paged mode.
+        debug_assert!(crate::tree::rows_owned(
             &vmask,
             self.sess.target.spec.cache_capacity,
-            self.sess.target.slots.range(),
+            &self.sess.target.slots.ownership(),
         ));
         let parts =
             VerifyParts { tokens: vtokens, positions: vpositions, slots: vslots, mask: vmask };
@@ -658,7 +672,7 @@ impl SpecTask {
             let t_width = 4usize;
             leaves
                 .into_iter()
-                .filter(|&l| st.cands[l].as_ref().map_or(false, |c| !c.is_empty()))
+                .filter(|&l| st.cands[l].as_ref().is_some_and(|c| !c.is_empty()))
                 .take(t_width)
                 .collect()
         };
@@ -895,7 +909,7 @@ impl SpecTask {
         }
         // Tail slots: the hit (if any) lives on as the next head slot.
         for &(_, _, slot) in &tail {
-            let kept = next_head.as_ref().map_or(false, |h| h.slot == slot);
+            let kept = next_head.as_ref().is_some_and(|h| h.slot == slot);
             if !kept {
                 self.sess.drafter.slots.release(&[slot]);
             }
@@ -917,7 +931,7 @@ impl SpecTask {
             .drafter
             .slots
             .alloc(1)
-            .ok_or_else(|| anyhow::anyhow!("drafter cache exhausted at start"))?[0];
+            .ok_or_else(|| self.sess.drafter.slots.exhausted("initial head draft"))?[0];
         let mut mb = self.sess.drafter.slots.mask_builder().clone();
         mb.commit_slot(slot); // root attends to itself + prefix
         let tree = TokenTree::new(root_token);
@@ -968,12 +982,33 @@ impl SpecTask {
         let t0 = Instant::now();
         self.head = Some(self.initial_head()?);
         self.seconds += t0.elapsed().as_secs_f64();
-        self.state = if self.max_new > 0 && self.sess.headroom(self.tree_budget) > 0 {
+        self.state = if self.max_new > 0 && self.kv_can_continue() {
             TaskState::Iterate
         } else {
             TaskState::Done
         };
         Ok(StepOutcome { tokens: vec![], state: self.state })
+    }
+
+    /// Whether the KV situation allows another iteration. Fixed-range
+    /// sessions stop when their own headroom is gone (nobody else's slots
+    /// can help). Paged sessions stop only at the *absolute* ceiling —
+    /// they could not host another iteration even owning every block —
+    /// because pool-wide headroom is transient under contention: a
+    /// neighbour's lease is a reason to preempt-and-resume later
+    /// (PoolExhausted), never to silently end the generation short.
+    fn kv_can_continue(&self) -> bool {
+        if self.sess.is_paged() {
+            let held = self
+                .sess
+                .drafter
+                .slots
+                .committed_len()
+                .max(self.sess.target.slots.committed_len());
+            self.sess.lease_limit().saturating_sub(held) > self.tree_budget
+        } else {
+            self.sess.headroom(self.tree_budget) > 0
+        }
     }
 
     fn step_iterate(&mut self) -> crate::Result<StepOutcome> {
@@ -1049,9 +1084,7 @@ impl SpecTask {
             }
         }
         self.seconds += t_iter.elapsed().as_secs_f64();
-        if self.tokens.len() >= self.max_new
-            || self.sess.headroom(self.tree_budget) == 0
-            || self.head.is_none()
+        if self.tokens.len() >= self.max_new || !self.kv_can_continue() || self.head.is_none()
         {
             self.state = TaskState::Done;
         }
@@ -1108,14 +1141,15 @@ impl StepEngine for SpecDecoder {
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let sess = if self.cfg.batch.enabled {
-            // Batched mode: all sessions lease ranges of one shared cache
-            // pair, so a scheduling round can verify them in one call.
+            // Batched mode: all sessions share one cache pair — leased as
+            // equal ranges or paged blocks — so a scheduling round can
+            // verify them in one call.
             if self.pool.is_none() {
                 self.pool = Some(Arc::new(SharedCachePool::new(
                     &self.rt,
                     &self.cfg.drafter,
                     &self.cfg.target,
-                    self.cfg.batch.max_sessions,
+                    &self.cfg.batch,
                 )?));
             }
             match Session::new_shared(
@@ -1126,10 +1160,11 @@ impl StepEngine for SpecDecoder {
             ) {
                 Ok(s) => s,
                 // More live sessions than shared regions (a server driving
-                // more slots than `batch.max_sessions`): degrade gracefully
-                // to an owned-cache session. `step_batch` recognises the
-                // foreign cache and steps such sessions serially instead of
-                // packing them into the shared-cache batch.
+                // more slots than `batch.max_sessions` in equal-partition
+                // mode): degrade gracefully to an owned-cache session.
+                // `step_batch` recognises the foreign cache and steps such
+                // sessions serially instead of packing them into the
+                // shared-cache batch.
                 Err(_) => Session::new(
                     &self.rt,
                     &self.cfg.drafter,
@@ -1147,8 +1182,19 @@ impl StepEngine for SpecDecoder {
                 self.cfg.compiled,
             )?
         };
-        // Keep enough headroom for one full tree + tail + bonus chain.
-        let tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
+        // Keep enough headroom for one full tree + tail + bonus chain —
+        // clamped to the shared pool's current headroom in paged mode, so
+        // admission asks "does the pool cover prompt + tree budget", not
+        // "is a worst-case region free" (DESIGN.md §10).
+        let mut tree_budget = self.cfg.max_depth * self.cfg.max_width + self.cfg.max_verify + 8;
+        if sess.is_paged() {
+            let avail = sess
+                .drafter
+                .slots
+                .available()
+                .min(sess.target.slots.available());
+            tree_budget = scheduler::clamp_tree_budget(tree_budget, avail);
+        }
         let plan = self.shared.lock().unwrap().plan;
         Ok(Box::new(SpecTask {
             rt: self.rt.clone(),
@@ -1196,7 +1242,7 @@ impl StepEngine for SpecDecoder {
         // steps serially within the same round.
         let mut batchable: Vec<usize> = Vec::new();
         for (i, t) in tasks.iter_mut().enumerate() {
-            let joins = t.as_any_mut().downcast_mut::<SpecTask>().map_or(false, |s| {
+            let joins = t.as_any_mut().downcast_mut::<SpecTask>().is_some_and(|s| {
                 s.state == TaskState::Iterate
                     && s.head.is_some()
                     // Only sessions on the shared caches can ride one
@@ -1359,6 +1405,13 @@ impl StepEngine for SpecDecoder {
         }
         drop(sh);
         results.into_iter().map(Option::unwrap).collect()
+    }
+
+    fn cache_occupancy(&self) -> Option<(u64, u64)> {
+        self.pool
+            .as_ref()
+            .and_then(|p| p.block_occupancy())
+            .map(|(used, total)| (used as u64, total as u64))
     }
 }
 

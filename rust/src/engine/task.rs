@@ -120,6 +120,15 @@ pub trait StepEngine: super::Engine {
     ) -> Vec<crate::Result<StepOutcome>> {
         tasks.iter_mut().map(|t| t.step()).collect()
     }
+
+    /// Block occupancy of the engine's shared *paged* KV cache, as
+    /// `(blocks in use, total blocks)` summed over both model sides —
+    /// `None` when the engine has no paged pool (owned caches, or the
+    /// equal-partition layout). The serving layer mirrors this into its
+    /// `ServerStats` occupancy gauges once per scheduling round.
+    fn cache_occupancy(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 #[cfg(test)]

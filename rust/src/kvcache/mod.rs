@@ -12,19 +12,34 @@
 //! One reserved *trash slot* (the last slot) absorbs the K/V writes of
 //! padding rows in width-padded calls; it is never marked visible.
 //!
-//! ## Shared-cache partitioning (DESIGN.md §9)
+//! ## Shared-cache layouts (DESIGN.md §9–§10)
 //!
 //! For cross-session batched verification, many sessions share **one**
-//! device cache array: a [`SlotPartition`] carves the array into equal
-//! contiguous [`SlotRange`] regions (plus the common trash slot), each
-//! session's [`SlotCache`] allocates only inside its leased range, and the
-//! per-row masks therefore stay *block-diagonal* across sessions — a
-//! session can never reference, let alone read, another session's slots.
+//! device cache array. Two layouts carve it up:
+//!
+//! * **Equal partition** ([`SlotPartition`], DESIGN.md §9) — the array is
+//!   split into equal contiguous [`SlotRange`] regions, leased and
+//!   released whole. Simple, but capacity is stranded: a short session
+//!   idles most of its region while a long-prompt request is rejected.
+//! * **Paged blocks** ([`BlockPool`], DESIGN.md §10) — the array is split
+//!   into fixed-size *blocks*; a session's [`SlotCache`] leases blocks on
+//!   demand as generation proceeds and returns fully-free blocks on
+//!   rejection, completion, or disconnect. The session's usable slot set
+//!   is a *set of owned blocks* ([`SlotOwnership::Blocks`]) instead of one
+//!   contiguous range; slots are addressed indirectly either way, so
+//!   nothing about the static graph shapes changes.
+//!
+//! In both layouts a session's per-row masks reference only slots it owns
+//! ([`SlotOwnership::contains`]), which keeps cross-session batch masks
+//! block-diagonal — a session can never reference, let alone read, another
+//! session's slots.
+
+use std::sync::{Arc, Mutex};
 
 use crate::tree::MaskBuilder;
 
 /// A contiguous run of slots inside a shared cache array — one session's
-/// lease from a [`SlotPartition`].
+/// lease from a [`SlotPartition`], or one block of a [`BlockPool`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SlotRange {
     /// First slot of the range.
@@ -40,7 +55,116 @@ impl SlotRange {
     }
 }
 
-/// Carves one shared cache array into equal per-session regions.
+/// Configuration error from cache partition / block-pool construction.
+///
+/// Construction used to panic on impossible layouts; the serving layer
+/// now surfaces these as typed startup/admission failures instead of
+/// taking down the worker thread.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheConfigError {
+    /// The capacity cannot host `sessions` equal regions of ≥ 2 slots.
+    RegionsDontFit {
+        /// Total cache capacity (slots, incl. trash).
+        capacity: usize,
+        /// Requested session count.
+        sessions: usize,
+    },
+    /// The block size is out of range for the capacity (must be ≥ 2 and
+    /// leave room for at least one block plus the trash slot).
+    BadBlockSize {
+        /// Total cache capacity (slots, incl. trash).
+        capacity: usize,
+        /// Requested slots per block.
+        block_size: usize,
+    },
+    /// An explicit block budget exceeds what the capacity can host (or
+    /// is zero).
+    BadBlockCount {
+        /// Total cache capacity (slots, incl. trash).
+        capacity: usize,
+        /// Requested slots per block.
+        block_size: usize,
+        /// Requested number of blocks.
+        blocks: usize,
+    },
+}
+
+impl std::fmt::Display for CacheConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheConfigError::RegionsDontFit { capacity, sessions } => write!(
+                f,
+                "cache capacity {capacity} cannot host {sessions} equal regions of ≥ 2 slots"
+            ),
+            CacheConfigError::BadBlockSize { capacity, block_size } => write!(
+                f,
+                "block size {block_size} is invalid for a {capacity}-slot cache \
+                 (need 2 ≤ block_size ≤ capacity - 1)"
+            ),
+            CacheConfigError::BadBlockCount { capacity, block_size, blocks } => write!(
+                f,
+                "{blocks} blocks of {block_size} slots do not fit a {capacity}-slot cache \
+                 (need 1 ≤ blocks ≤ (capacity - 1) / block_size)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CacheConfigError {}
+
+/// Typed "the shared block pool ran dry" marker error.
+///
+/// Raised (wrapped in `anyhow`) when a *paged* [`SlotCache`] cannot lease
+/// enough blocks mid-generation. The serving layer recognises it and
+/// **preempts** the session — releasing its blocks and requeueing it for a
+/// re-prefill resume — instead of failing the request: under paged
+/// sharing, exhaustion usually means a neighbour holds the blocks, not
+/// that the request is unservable.
+#[derive(Debug, Clone)]
+pub struct PoolExhausted {
+    /// Which allocation ran dry (for the error message).
+    pub what: &'static str,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shared KV block pool exhausted during {}", self.what)
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// The slot set a session may reference — the confinement domain its mask
+/// rows are checked against ([`crate::tree::rows_owned`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SlotOwnership {
+    /// One contiguous range (equal-partition lease or a whole owned cache).
+    Range(SlotRange),
+    /// A set of owned fixed-size blocks (paged mode): block `b` covers
+    /// slots `[b · block_size, (b + 1) · block_size)`.
+    Blocks {
+        /// Slots per block.
+        block_size: u32,
+        /// Owned block indices.
+        blocks: Vec<u32>,
+    },
+}
+
+impl SlotOwnership {
+    /// True when `slot` is inside this ownership set.
+    pub fn contains(&self, slot: u32) -> bool {
+        match self {
+            SlotOwnership::Range(r) => r.contains(slot),
+            SlotOwnership::Blocks { block_size, blocks } => {
+                blocks.contains(&(slot / block_size))
+            }
+        }
+    }
+}
+
+/// Carves one shared cache array into equal per-session regions — the
+/// fixed-partition layout (DESIGN.md §9), kept as the `--equal-partition`
+/// fallback next to the paged [`BlockPool`].
 ///
 /// The last slot of the array stays reserved as the shared trash slot;
 /// the remaining `capacity - 1` slots split into `sessions` equal regions
@@ -57,20 +181,22 @@ pub struct SlotPartition {
 impl SlotPartition {
     /// Partitions a `capacity`-slot cache into `sessions` equal regions.
     ///
-    /// Panics when the split leaves a region without at least two usable
-    /// slots (a region must hold at least one token beyond bookkeeping).
-    pub fn new(capacity: usize, sessions: usize) -> Self {
-        assert!(sessions >= 1, "need at least one region");
-        assert!(capacity >= 2, "need at least one usable slot plus trash");
+    /// Errors when the split would leave a region without at least two
+    /// usable slots (a region must hold at least one token beyond
+    /// bookkeeping) — a typed config error the server surfaces as a
+    /// startup/admission failure.
+    pub fn new(capacity: usize, sessions: usize) -> Result<Self, CacheConfigError> {
+        if sessions < 1 || capacity < 2 {
+            return Err(CacheConfigError::RegionsDontFit { capacity, sessions });
+        }
         let usable = capacity - 1; // last slot is the shared trash
         let region_len = (usable / sessions) as u32;
-        assert!(
-            region_len >= 2,
-            "capacity {capacity} cannot host {sessions} regions of ≥2 slots"
-        );
+        if region_len < 2 {
+            return Err(CacheConfigError::RegionsDontFit { capacity, sessions });
+        }
         // Hand out low regions first (matches SlotCache's low-slot bias).
         let free_bases = (0..sessions as u32).map(|i| i * region_len).rev().collect();
-        Self { total_capacity: capacity, region_len, free_bases }
+        Ok(Self { total_capacity: capacity, region_len, free_bases })
     }
 
     /// The shared trash slot all sessions' padding rows scatter into.
@@ -112,20 +238,137 @@ impl SlotPartition {
     }
 }
 
+/// A shared cache array carved into fixed-size *blocks* — the paged
+/// layout (DESIGN.md §10) that replaces equal-region leasing for serving.
+///
+/// Block `b` covers slots `[b · block_size, (b + 1) · block_size)`; the
+/// last slot of the array stays the shared trash slot and any remainder
+/// short of a whole block is left unused. Sessions lease blocks **on
+/// demand** through a paged [`SlotCache`] and return them the moment they
+/// are fully free, so capacity follows the actual token footprint instead
+/// of a worst-case per-session quota.
+#[derive(Debug)]
+pub struct BlockPool {
+    total_capacity: usize,
+    block_size: u32,
+    num_blocks: u32,
+    free: Vec<u32>,
+}
+
+impl BlockPool {
+    /// A pool over a `capacity`-slot cache with `block_size` slots per
+    /// block. `max_blocks` optionally caps the pool below what the
+    /// capacity could host (the `--cache-blocks` knob). Errors on layouts
+    /// the capacity cannot host — typed, so the server can surface a
+    /// startup/admission failure instead of panicking.
+    pub fn new(
+        capacity: usize,
+        block_size: usize,
+        max_blocks: Option<usize>,
+    ) -> Result<Self, CacheConfigError> {
+        if block_size < 2 || block_size + 1 > capacity {
+            return Err(CacheConfigError::BadBlockSize { capacity, block_size });
+        }
+        let fit = (capacity - 1) / block_size;
+        let num = match max_blocks {
+            None => fit,
+            Some(b) if (1..=fit).contains(&b) => b,
+            Some(b) => {
+                return Err(CacheConfigError::BadBlockCount { capacity, block_size, blocks: b })
+            }
+        };
+        // Hand out low blocks first (matches the free-list's low-slot bias).
+        let free = (0..num as u32).rev().collect();
+        Ok(Self {
+            total_capacity: capacity,
+            block_size: block_size as u32,
+            num_blocks: num as u32,
+            free,
+        })
+    }
+
+    /// Total slots in the shared cache array (including trash).
+    pub fn total_capacity(&self) -> usize {
+        self.total_capacity
+    }
+
+    /// The shared trash slot all sessions' padding rows scatter into.
+    pub fn trash_slot(&self) -> u32 {
+        self.total_capacity as u32 - 1
+    }
+
+    /// Slots per block.
+    pub fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    /// Total blocks in the pool.
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks as usize
+    }
+
+    /// Blocks currently leasable.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently leased to sessions (the occupancy gauge).
+    pub fn blocks_in_use(&self) -> usize {
+        self.num_blocks as usize - self.free.len()
+    }
+
+    /// The slot range block `block` covers.
+    pub fn range_of(&self, block: u32) -> SlotRange {
+        debug_assert!(block < self.num_blocks, "foreign block id {block}");
+        SlotRange { base: block * self.block_size, len: self.block_size }
+    }
+
+    /// Leases one block, or `None` when the pool is dry (the serving
+    /// layer turns a dry pool mid-generation into a preemption).
+    pub fn lease(&mut self) -> Option<u32> {
+        self.free.pop()
+    }
+
+    /// Returns a leased block.
+    pub fn release(&mut self, block: u32) {
+        debug_assert!(block < self.num_blocks, "foreign block returned: {block}");
+        debug_assert!(!self.free.contains(&block), "double release of block {block}");
+        self.free.push(block);
+    }
+}
+
+/// What backs a [`SlotCache`]'s allocatable slot set.
+#[derive(Debug)]
+enum Backing {
+    /// A fixed contiguous range: a whole owned array, or an equal-partition
+    /// lease. The slot set never changes over the cache's lifetime.
+    Fixed(SlotRange),
+    /// Blocks leased on demand from a shared [`BlockPool`] and returned
+    /// as soon as they are fully free.
+    Paged {
+        pool: Arc<Mutex<BlockPool>>,
+        block_size: u32,
+        blocks: Vec<u32>,
+    },
+}
+
 /// Slot allocator + committed-set tracker for one model's cache.
 ///
-/// Owns either a whole cache array ([`SlotCache::new`]) or a leased
-/// [`SlotRange`] of a shared array ([`SlotCache::with_range`]); either
-/// way it only ever hands out slots from its own region, which is what
-/// keeps cross-session masks block-diagonal in batched serving.
-#[derive(Debug, Clone)]
+/// Owns a whole cache array ([`SlotCache::new`]), a leased [`SlotRange`]
+/// of a shared array ([`SlotCache::with_range`]), or a dynamic set of
+/// blocks of a shared [`BlockPool`] ([`SlotCache::paged`]); in every mode
+/// it only ever hands out slots it owns, which is what keeps
+/// cross-session masks block-diagonal in batched serving.
+#[derive(Debug)]
 pub struct SlotCache {
     /// Size of the backing device array (the mask row width).
     total_capacity: usize,
-    /// Slots this cache may allocate.
-    range: SlotRange,
     /// The (possibly shared) padding-row slot; never allocated.
     trash: u32,
+    /// The most slots this cache could ever own (range length, or the
+    /// whole pool) — the absolute generation ceiling.
+    lease_limit: usize,
+    backing: Backing,
     free: Vec<u32>, // LIFO free list (excludes the trash slot)
     committed: Vec<u32>,
     mask: MaskBuilder,
@@ -141,8 +384,8 @@ impl SlotCache {
     }
 
     /// A cache allocating only inside `range` of a `total_capacity`-slot
-    /// shared array whose padding rows scatter into `trash` (shared-cache
-    /// batching mode; see [`SlotPartition`]).
+    /// shared array whose padding rows scatter into `trash` (equal-
+    /// partition batching mode; see [`SlotPartition`]).
     pub fn with_range(range: SlotRange, total_capacity: usize, trash: u32) -> Self {
         assert!(range.len >= 1, "empty slot range");
         assert!(
@@ -154,9 +397,33 @@ impl SlotCache {
         let free = (range.base..range.base + range.len).rev().collect();
         Self {
             total_capacity,
-            range,
             trash,
+            lease_limit: range.len as usize,
+            backing: Backing::Fixed(range),
             free,
+            committed: Vec::new(),
+            mask: MaskBuilder::new(total_capacity),
+        }
+    }
+
+    /// A cache leasing blocks of `pool` on demand (paged batching mode;
+    /// DESIGN.md §10). Starts with no blocks: the first `alloc` leases.
+    pub fn paged(pool: Arc<Mutex<BlockPool>>) -> Self {
+        let (total_capacity, trash, block_size, limit) = {
+            let p = pool.lock().unwrap();
+            (
+                p.total_capacity(),
+                p.trash_slot(),
+                p.block_size(),
+                p.num_blocks() * p.block_size() as usize,
+            )
+        };
+        Self {
+            total_capacity,
+            trash,
+            lease_limit: limit,
+            backing: Backing::Paged { pool, block_size, blocks: Vec::new() },
+            free: Vec::new(),
             committed: Vec::new(),
             mask: MaskBuilder::new(total_capacity),
         }
@@ -173,19 +440,76 @@ impl SlotCache {
         self.total_capacity
     }
 
-    /// Slots this cache may allocate (its range length).
+    /// Slots this cache currently owns (range length, or leased blocks ×
+    /// block size — grows and shrinks in paged mode).
     pub fn usable(&self) -> usize {
-        self.range.len as usize
+        match &self.backing {
+            Backing::Fixed(r) => r.len as usize,
+            Backing::Paged { block_size, blocks, .. } => {
+                blocks.len() * *block_size as usize
+            }
+        }
     }
 
-    /// The slot range this cache allocates from.
-    pub fn range(&self) -> SlotRange {
-        self.range
+    /// The most slots this cache could ever own: its fixed range length,
+    /// or the whole block pool. `committed` can never exceed this — the
+    /// absolute generation ceiling paged tasks stop at.
+    pub fn lease_limit(&self) -> usize {
+        self.lease_limit
     }
 
-    /// Currently free (allocatable) slots.
+    /// True when this cache leases blocks of a shared [`BlockPool`].
+    pub fn is_paged(&self) -> bool {
+        matches!(self.backing, Backing::Paged { .. })
+    }
+
+    /// Blocks currently leased (paged mode; 0 otherwise).
+    pub fn owned_blocks(&self) -> usize {
+        match &self.backing {
+            Backing::Fixed(_) => 0,
+            Backing::Paged { blocks, .. } => blocks.len(),
+        }
+    }
+
+    /// The slot set this cache may reference — the confinement domain
+    /// its mask rows are checked against (see [`crate::tree::rows_owned`]).
+    pub fn ownership(&self) -> SlotOwnership {
+        match &self.backing {
+            Backing::Fixed(r) => SlotOwnership::Range(*r),
+            Backing::Paged { block_size, blocks, .. } => {
+                SlotOwnership::Blocks { block_size: *block_size, blocks: blocks.clone() }
+            }
+        }
+    }
+
+    /// True when this cache currently owns `slot`.
+    pub fn owns(&self, slot: u32) -> bool {
+        match &self.backing {
+            Backing::Fixed(r) => r.contains(slot),
+            Backing::Paged { block_size, blocks, .. } => {
+                blocks.contains(&(slot / *block_size))
+            }
+        }
+    }
+
+    /// Currently free (allocatable) slots already owned by this cache.
     pub fn free_count(&self) -> usize {
         self.free.len()
+    }
+
+    /// Slots allocatable *right now*: the local free list plus (in paged
+    /// mode) everything still leasable from the shared pool. This is the
+    /// token-level admission signal — the pool either covers a request's
+    /// prompt + tree budget or it does not, regardless of how the slots
+    /// fragment across blocks.
+    pub fn available(&self) -> usize {
+        let pooled = match &self.backing {
+            Backing::Fixed(_) => 0,
+            Backing::Paged { pool, block_size, .. } => {
+                pool.lock().unwrap().free_blocks() * *block_size as usize
+            }
+        };
+        self.free.len() + pooled
     }
 
     /// Slots currently held (committed prefix + outstanding draft slots;
@@ -193,7 +517,7 @@ impl SlotCache {
     /// live sessions for its KV-utilization gauge, and the cancellation
     /// tests assert it returns to zero once a session is dropped.
     pub fn in_use(&self) -> usize {
-        self.range.len as usize - self.free.len()
+        self.usable() - self.free.len()
     }
 
     /// Number of committed (always-visible) slots.
@@ -206,42 +530,111 @@ impl SlotCache {
         &self.committed
     }
 
-    /// Allocates `n` slots for draft/tree tokens. Returns `None` when the
-    /// cache cannot host the tree (callers shrink the envelope).
+    /// Allocates `n` slots for draft/tree tokens, leasing blocks from the
+    /// shared pool on demand in paged mode. Returns `None` when the cache
+    /// (or pool) cannot host the tree — callers shrink the envelope, or
+    /// surface [`SlotCache::exhausted`] so the serving layer can preempt.
     pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
         if self.free.len() < n {
-            return None;
+            if let Backing::Paged { pool, blocks, .. } = &mut self.backing {
+                let mut p = pool.lock().unwrap();
+                while self.free.len() < n {
+                    let Some(b) = p.lease() else { break };
+                    let r = p.range_of(b);
+                    blocks.push(b);
+                    // Low slots first, matching the fixed-mode bias.
+                    self.free.extend((r.base..r.base + r.len).rev());
+                }
+            }
+            if self.free.len() < n {
+                // Return any fully-free blocks a failed lease loop left
+                // behind so two starved sessions cannot hoard each other
+                // to death.
+                self.shrink();
+                return None;
+            }
         }
         Some((0..n).map(|_| self.free.pop().unwrap()).collect())
     }
 
-    /// Returns draft slots that did not get committed.
+    /// The error a failed [`SlotCache::alloc`] should surface: the typed
+    /// [`PoolExhausted`] marker in paged mode (the serving layer preempts
+    /// and requeues the session on it), a plain terminal message
+    /// otherwise (a session-local cache running dry cannot be fixed by
+    /// anyone else's blocks).
+    pub fn exhausted(&self, what: &'static str) -> anyhow::Error {
+        if self.is_paged() {
+            anyhow::Error::new(PoolExhausted { what })
+        } else {
+            anyhow::anyhow!("KV cache exhausted during {what}")
+        }
+    }
+
+    /// Returns draft slots that did not get committed. In paged mode any
+    /// block that became fully free goes straight back to the shared pool
+    /// (rejection is exactly when capacity should flow between sessions).
     pub fn release(&mut self, slots: &[u32]) {
         for &s in slots {
             debug_assert!(s != self.trash);
-            debug_assert!(self.range.contains(s), "releasing foreign slot {s}");
+            debug_assert!(self.owns(s), "releasing foreign slot {s}");
             debug_assert!(!self.committed.contains(&s), "releasing committed slot {s}");
             self.free.push(s);
+        }
+        self.shrink();
+    }
+
+    /// Returns every fully-free owned block to the shared pool (no-op for
+    /// fixed-range caches). A block stays leased while any of its slots
+    /// is committed or outstanding.
+    fn shrink(&mut self) {
+        let Backing::Paged { pool, blocks, .. } = &mut self.backing else { return };
+        if blocks.is_empty() {
+            return;
+        }
+        let mut p = pool.lock().unwrap();
+        let bs = p.block_size() as usize;
+        let mut i = 0;
+        while i < blocks.len() {
+            let r = p.range_of(blocks[i]);
+            let free_in = self.free.iter().filter(|&&s| r.contains(s)).count();
+            if free_in == bs {
+                self.free.retain(|&s| !r.contains(s));
+                p.release(blocks.swap_remove(i));
+            } else {
+                i += 1;
+            }
         }
     }
 
     /// Promotes a draft slot to the committed prefix (visible to all
     /// future tokens of this session).
     pub fn commit(&mut self, slot: u32) {
-        debug_assert!(self.range.contains(slot), "committing foreign slot {slot}");
+        debug_assert!(self.owns(slot), "committing foreign slot {slot}");
         debug_assert!(!self.committed.contains(&slot));
         self.committed.push(slot);
         self.mask.commit_slot(slot);
     }
 
     /// Forgets everything (session reset). Stale K/V data stays in the
-    /// device buffer but is unreachable — masks make it invisible.
+    /// device buffer but is unreachable — masks make it invisible. Paged
+    /// caches return every block to the shared pool.
     pub fn reset(&mut self) {
         for &s in &self.committed {
             self.mask.release_slot(s);
         }
         self.committed.clear();
-        self.free = (self.range.base..self.range.base + self.range.len).rev().collect();
+        match &mut self.backing {
+            Backing::Fixed(r) => {
+                self.free = (r.base..r.base + r.len).rev().collect();
+            }
+            Backing::Paged { pool, blocks, .. } => {
+                self.free.clear();
+                let mut p = pool.lock().unwrap();
+                for b in blocks.drain(..) {
+                    p.release(b);
+                }
+            }
+        }
     }
 
     /// The mask builder whose prefix row tracks this cache's commits.
@@ -250,9 +643,26 @@ impl SlotCache {
     }
 
     /// Remaining generation headroom in tokens, keeping `tree_budget`
-    /// slots available for drafting.
+    /// slots available for drafting. Counts the shared pool in paged mode
+    /// (the admission formula: admit while the pool covers prompt + tree
+    /// budget).
     pub fn headroom(&self, tree_budget: usize) -> usize {
-        self.free.len().saturating_sub(tree_budget)
+        self.available().saturating_sub(tree_budget)
+    }
+}
+
+impl Drop for SlotCache {
+    fn drop(&mut self) {
+        // Paged sessions return every leased block on completion,
+        // cancellation or preemption; fixed ranges are returned by their
+        // partition's owner.
+        if let Backing::Paged { pool, blocks, .. } = &mut self.backing {
+            if let Ok(mut p) = pool.lock() {
+                for b in blocks.drain(..) {
+                    p.release(b);
+                }
+            }
+        }
     }
 }
 
@@ -329,7 +739,7 @@ mod tests {
 
     #[test]
     fn partition_carves_equal_regions_with_shared_trash() {
-        let mut p = SlotPartition::new(321, 4); // 320 usable → 80 per region
+        let mut p = SlotPartition::new(321, 4).unwrap(); // 320 usable → 80 per region
         assert_eq!(p.region_len(), 80);
         assert_eq!(p.trash_slot(), 320);
         assert_eq!(p.free_regions(), 4);
@@ -346,7 +756,7 @@ mod tests {
 
     #[test]
     fn partition_exhausts_then_refills() {
-        let mut p = SlotPartition::new(9, 2); // 8 usable → 4 per region
+        let mut p = SlotPartition::new(9, 2).unwrap(); // 8 usable → 4 per region
         let a = p.lease().unwrap();
         let b = p.lease().unwrap();
         assert!(p.lease().is_none());
@@ -356,8 +766,21 @@ mod tests {
     }
 
     #[test]
+    fn partition_rejects_impossible_layouts_with_typed_errors() {
+        assert_eq!(
+            SlotPartition::new(9, 5).unwrap_err(),
+            CacheConfigError::RegionsDontFit { capacity: 9, sessions: 5 }
+        );
+        assert!(SlotPartition::new(1, 1).is_err());
+        assert!(SlotPartition::new(100, 0).is_err());
+        // The error renders a human-readable admission message.
+        let msg = SlotPartition::new(9, 5).unwrap_err().to_string();
+        assert!(msg.contains("9") && msg.contains("5"), "uninformative: {msg}");
+    }
+
+    #[test]
     fn ranged_cache_stays_inside_its_lease() {
-        let mut p = SlotPartition::new(17, 2); // 16 usable → 8 per region
+        let mut p = SlotPartition::new(17, 2).unwrap(); // 16 usable → 8 per region
         let ra = p.lease().unwrap();
         let rb = p.lease().unwrap();
         let mut a = SlotCache::with_range(ra, 17, p.trash_slot());
@@ -371,6 +794,7 @@ mod tests {
         assert_eq!(a.capacity(), 17, "mask width covers the shared array");
         assert_eq!(a.usable(), 8);
         assert_eq!(a.trash_slot(), 16);
+        assert_eq!(a.ownership(), SlotOwnership::Range(ra));
     }
 
     #[test]
@@ -383,5 +807,147 @@ mod tests {
         assert_eq!(c.free_count(), 4);
         let again = c.alloc(4).unwrap();
         assert!(again.iter().all(|&x| r.contains(x)));
+    }
+
+    // ---------------------------------------------------------------
+    // Paged block pool
+    // ---------------------------------------------------------------
+
+    #[test]
+    fn block_pool_layout_and_lease_roundtrip() {
+        let mut p = BlockPool::new(33, 8, None).unwrap(); // 32 usable → 4 blocks
+        assert_eq!(p.num_blocks(), 4);
+        assert_eq!(p.block_size(), 8);
+        assert_eq!(p.trash_slot(), 32);
+        assert_eq!(p.free_blocks(), 4);
+        assert_eq!(p.blocks_in_use(), 0);
+        let a = p.lease().unwrap();
+        assert_eq!(p.range_of(a), SlotRange { base: a * 8, len: 8 });
+        assert_eq!(p.blocks_in_use(), 1);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn block_pool_rejects_bad_layouts_with_typed_errors() {
+        assert_eq!(
+            BlockPool::new(8, 1, None).unwrap_err(),
+            CacheConfigError::BadBlockSize { capacity: 8, block_size: 1 }
+        );
+        assert!(BlockPool::new(8, 8, None).is_err(), "no room for the trash slot");
+        assert_eq!(
+            BlockPool::new(33, 8, Some(5)).unwrap_err(),
+            CacheConfigError::BadBlockCount { capacity: 33, block_size: 8, blocks: 5 }
+        );
+        assert!(BlockPool::new(33, 8, Some(0)).is_err());
+        // An explicit budget below the fit is a valid way to reserve
+        // device capacity for something else.
+        assert_eq!(BlockPool::new(33, 8, Some(2)).unwrap().num_blocks(), 2);
+    }
+
+    fn pool(capacity: usize, block_size: usize) -> Arc<Mutex<BlockPool>> {
+        Arc::new(Mutex::new(BlockPool::new(capacity, block_size, None).unwrap()))
+    }
+
+    #[test]
+    fn paged_cache_leases_blocks_on_demand() {
+        let p = pool(33, 8); // 4 blocks
+        let mut c = SlotCache::paged(p.clone());
+        assert_eq!(c.owned_blocks(), 0);
+        assert_eq!(c.available(), 32, "whole pool reachable before any lease");
+        let s = c.alloc(10).unwrap(); // needs 2 blocks
+        assert_eq!(c.owned_blocks(), 2);
+        assert_eq!(p.lock().unwrap().free_blocks(), 2);
+        assert!(s.iter().all(|&x| c.owns(x)));
+        assert_eq!(c.in_use(), 10);
+        assert_eq!(c.free_count(), 6);
+    }
+
+    #[test]
+    fn paged_cache_returns_fully_free_blocks_on_release() {
+        let p = pool(33, 8);
+        let mut c = SlotCache::paged(p.clone());
+        let s = c.alloc(16).unwrap(); // 2 whole blocks
+        c.commit(s[0]); // pins the first allocated slot's block
+        c.release(&s[1..]);
+        // The block holding the committed slot stays; the other returns.
+        assert_eq!(c.owned_blocks(), 1);
+        assert_eq!(p.lock().unwrap().free_blocks(), 3);
+        assert!(c.owns(s[0]));
+    }
+
+    #[test]
+    fn paged_cache_drop_returns_every_block() {
+        let p = pool(33, 8);
+        {
+            let mut c = SlotCache::paged(p.clone());
+            let s = c.alloc(20).unwrap();
+            c.commit(s[0]);
+            c.commit(s[1]);
+            assert!(p.lock().unwrap().free_blocks() < 4);
+        }
+        assert_eq!(p.lock().unwrap().free_blocks(), 4, "drop must return all blocks");
+    }
+
+    #[test]
+    fn paged_alloc_fails_without_hoarding_when_pool_dry() {
+        let p = pool(17, 8); // 2 blocks
+        let mut a = SlotCache::paged(p.clone());
+        let mut b = SlotCache::paged(p.clone());
+        let held = a.alloc(12).unwrap(); // takes both blocks
+        assert!(b.alloc(4).is_none(), "pool dry");
+        assert_eq!(b.owned_blocks(), 0, "failed alloc must not hoard blocks");
+        a.release(&held);
+        assert_eq!(p.lock().unwrap().free_blocks(), 2);
+        assert!(b.alloc(4).is_some(), "freed blocks are leasable again");
+    }
+
+    #[test]
+    fn paged_exhaustion_error_is_typed_for_preemption() {
+        let p = pool(17, 8);
+        let c = SlotCache::paged(p);
+        let e = c.exhausted("unit test");
+        assert!(e.is::<PoolExhausted>(), "paged exhaustion must downcast");
+        // Fixed-range exhaustion is terminal, not preemptible.
+        let f = SlotCache::new(4).exhausted("unit test");
+        assert!(!f.is::<PoolExhausted>());
+    }
+
+    #[test]
+    fn paged_headroom_counts_the_shared_pool() {
+        let p = pool(33, 8);
+        let mut a = SlotCache::paged(p.clone());
+        let b = SlotCache::paged(p);
+        let _s = a.alloc(8).unwrap(); // one block gone
+        assert_eq!(b.available(), 24);
+        assert_eq!(b.headroom(8), 16);
+        assert_eq!(a.lease_limit(), 32);
+    }
+
+    #[test]
+    fn block_ownership_contains_matches_block_math() {
+        let own = SlotOwnership::Blocks { block_size: 4, blocks: vec![0, 3] };
+        for s in 0..4 {
+            assert!(own.contains(s), "slot {s} is in block 0");
+        }
+        for s in 4..12 {
+            assert!(!own.contains(s), "slot {s} is in an unowned block");
+        }
+        for s in 12..16 {
+            assert!(own.contains(s), "slot {s} is in block 3");
+        }
+    }
+
+    #[test]
+    fn paged_reset_returns_blocks_and_clears_commits() {
+        let p = pool(33, 8);
+        let mut c = SlotCache::paged(p.clone());
+        let s = c.alloc(12).unwrap();
+        c.commit(s[0]);
+        c.reset();
+        assert_eq!(c.owned_blocks(), 0);
+        assert_eq!(c.committed_len(), 0);
+        assert_eq!(p.lock().unwrap().free_blocks(), 4);
+        assert_eq!(c.mask_builder().committed_count(), 0);
     }
 }

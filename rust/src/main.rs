@@ -24,9 +24,10 @@ use yggdrasil::util::cli::Args;
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
-    "max-width", "max-verify", "max-sessions",
+    "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks",
 ];
-const FLAGS: &[&str] = &["quick", "no-stream", "eager", "round-robin", "help"];
+const FLAGS: &[&str] =
+    &["quick", "no-stream", "eager", "round-robin", "paged", "equal-partition", "help"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -80,11 +81,15 @@ fn apply_engine_overrides(cfg: &mut EngineConfig, args: &Args) -> yggdrasil::Res
     Ok(())
 }
 
-/// With cross-session batching, each session owns only
-/// `(capacity - 1) / max_sessions` KV slots (DESIGN.md §9); the default
-/// single-session tree envelope would eat the whole quota and admission
-/// would reject every prompt. Fit the envelope to a known-good batched
-/// shape when it oversizes the quota.
+/// Fits the tree envelope to the shared-cache layout (DESIGN.md §9–§10).
+///
+/// Equal partition: each session owns only `(capacity - 1) / max_sessions`
+/// KV slots; the default single-session envelope would eat the whole
+/// quota and admission would reject every prompt, so shrink it. Paged:
+/// there is no fixed quota (the per-iteration budget clamps to pool
+/// headroom at runtime) — just validate the block layout eagerly so a bad
+/// `--block-size`/`--cache-blocks` surfaces as a typed startup error, and
+/// shrink envelopes that oversize the *whole* pool.
 fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Result<()> {
     if !cfg.batch.enabled {
         return Ok(());
@@ -93,18 +98,24 @@ fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Resu
         .spec(&cfg.drafter)?
         .cache_capacity
         .min(rt.spec(&cfg.target)?.cache_capacity);
-    // Cap the session count itself first: each region needs ≥ 2 slots or
-    // the shared cache cannot be partitioned at all.
-    let max_fit = (cap.saturating_sub(1) / 2).max(1);
-    if cfg.batch.max_sessions > max_fit {
-        eprintln!(
-            "batched serving: {} sessions cannot share a {cap}-slot cache; \
-             capping at {max_fit}",
-            cfg.batch.max_sessions
-        );
-        cfg.batch.max_sessions = max_fit;
-    }
-    let quota = cap.saturating_sub(1) / cfg.batch.max_sessions.max(1);
+    let quota = if cfg.batch.paged {
+        // Startup validation of the paged layout (typed CacheConfigError).
+        yggdrasil::kvcache::BlockPool::new(cap, cfg.batch.block_size, cfg.batch.cache_blocks)?;
+        cap.saturating_sub(1)
+    } else {
+        // Cap the session count itself first: each region needs ≥ 2 slots
+        // or the shared cache cannot be partitioned at all.
+        let max_fit = (cap.saturating_sub(1) / 2).max(1);
+        if cfg.batch.max_sessions > max_fit {
+            eprintln!(
+                "batched serving: {} sessions cannot share a {cap}-slot cache; \
+                 capping at {max_fit}",
+                cfg.batch.max_sessions
+            );
+            cfg.batch.max_sessions = max_fit;
+        }
+        cap.saturating_sub(1) / cfg.batch.max_sessions.max(1)
+    };
     let budget = |c: &EngineConfig| c.max_depth * c.max_width + c.max_verify + 8;
     // Keep ≥ 24 slots of the quota for the committed prefix + generation.
     if budget(cfg) > quota.saturating_sub(24) {
@@ -223,9 +234,25 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
     let max_sessions = args.usize_or("max-sessions", app.server.max_sessions)?;
     if batched {
         // Cross-session batching: the engine shares one cache pair across
-        // the server's session slots (DESIGN.md §9).
+        // the server's session slots — paged block leasing by default
+        // (DESIGN.md §10), equal fixed regions with `--equal-partition`
+        // (DESIGN.md §9).
         app.engine.batch.enabled = true;
         app.engine.batch.max_sessions = max_sessions;
+        if args.flag("equal-partition") {
+            app.engine.batch.paged = false;
+        }
+        if args.flag("paged") {
+            app.engine.batch.paged = true;
+        }
+        app.engine.batch.block_size =
+            args.usize_or("block-size", app.engine.batch.block_size)?;
+        if let Some(b) = args.get("cache-blocks") {
+            let blocks: usize = b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--cache-blocks needs an integer, got '{b}'"))?;
+            app.engine.batch.cache_blocks = Some(blocks);
+        }
     }
     let app = &app;
     let (_rt, engine) = build(app, args)?;
@@ -236,12 +263,20 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         max_sessions,
         stream,
         batched,
+        ..ServeOpts::default()
     };
     let max_sessions = opts.max_sessions;
+    let layout = if !batched {
+        "round-robin"
+    } else if app.engine.batch.paged {
+        "batched+paged"
+    } else {
+        "batched+equal-partition"
+    };
     let srv = Server::spawn(&addr, engine, opts)?;
     eprintln!(
         "serving on {} (stream={stream}, max_sessions={max_sessions}, \
-         batched={batched}) — Ctrl-C to stop",
+         mode={layout}) — Ctrl-C to stop",
         srv.addr
     );
     loop {
@@ -355,6 +390,11 @@ COMMON OPTIONS
   --max-sessions N    concurrent sessions to interleave (serve)
   --round-robin       serve with serial time-slicing instead of
                       cross-session batched verification
+  --paged             lease the shared KV cache block-by-block on demand
+                      with preempt/resume under pressure (serve; default)
+  --equal-partition   fall back to equal fixed per-session cache regions
+  --block-size N      slots per paged cache block (default 16)
+  --cache-blocks N    cap the paged pool below device capacity
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

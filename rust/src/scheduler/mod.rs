@@ -180,6 +180,16 @@ pub fn search_best_plan_batched(d: &StageDurations, sessions: usize) -> (Plan, f
     search_best_plan(&amortize_verify(d, sessions))
 }
 
+/// Clamps a config-derived per-iteration tree budget to the shared
+/// pool's current headroom (paged serving, DESIGN.md §10): a session may
+/// spend at most half the slots it could still reach on speculation, so
+/// the other half stays available for the committed prefix it is about
+/// to grow (and for its neighbours). Floored at 2 — a starved session
+/// still drafts a root plus one candidate rather than wedging at zero.
+pub fn clamp_tree_budget(envelope: usize, available: usize) -> usize {
+    envelope.min((available / 2).max(2))
+}
+
 /// Exhaustive profile-guided plan search (§5.2).
 pub fn search_best_plan(d: &StageDurations) -> (Plan, f64) {
     // Most-overlapping plans first so exact ties resolve toward overlap
@@ -318,6 +328,17 @@ mod tests {
         let (p, t) = search_best_plan_batched(&d, 4);
         assert!(p.aot_tail && p.aot_head, "picked {}", p.name());
         assert!(t < plan_latency(&amortize_verify(&d, 4), Plan::SEQUENTIAL));
+    }
+
+    #[test]
+    fn clamp_tree_budget_tracks_pool_headroom() {
+        // Roomy pool: the envelope passes through untouched.
+        assert_eq!(clamp_tree_budget(40, 200), 40);
+        // Tight pool: at most half the reachable slots go to speculation.
+        assert_eq!(clamp_tree_budget(40, 30), 15);
+        // Starved pool: floored, never zero (the task must still draft).
+        assert_eq!(clamp_tree_budget(40, 3), 2);
+        assert_eq!(clamp_tree_budget(40, 0), 2);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! events:   `{"id": 7, "event": "tokens", "tokens": [5, 9]}` (stream mode)
 //!           `{"id": 7, "event": "done", "tokens": [...], "aal": 2.31,
 //!             "tpot_ms": 1.9, "iterations": 14, "queue_ms": 0.1,
-//!             "ttft_ms": 8.8, "tok_per_s": 512.0}`
+//!             "ttft_ms": 8.8, "tok_per_s": 512.0, "preemptions": 0}`
 //!           `{"id": 7, "event": "error", "message": "..."}`
 //!
 //! Internally every event is a typed [`sessions::ServerEvent`]; JSON only
@@ -63,11 +63,15 @@ pub struct ServeOpts {
     /// calls (cross-session batching, DESIGN.md §9). `false` forces the
     /// serial round-robin baseline regardless of engine support.
     pub batched: bool,
+    /// Times one request may be preempted (paged pool exhaustion,
+    /// DESIGN.md §10) and requeued for a re-prefill resume before the
+    /// scheduler gives up with a terminal error.
+    pub max_resumes: usize,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { max_queue: 64, max_sessions: 4, stream: true, batched: true }
+        Self { max_queue: 64, max_sessions: 4, stream: true, batched: true, max_resumes: 8 }
     }
 }
 
@@ -84,12 +88,24 @@ pub struct ServerStats {
     pub cancelled: AtomicU64,
     /// Requests refused by KV-headroom admission control.
     pub rejected: AtomicU64,
+    /// Sessions preempted under paged pool exhaustion (blocks released,
+    /// request requeued for a re-prefill resume; DESIGN.md §10).
+    pub preemptions: AtomicU64,
+    /// Preempted sessions successfully re-admitted.
+    pub resumes: AtomicU64,
     /// Gauge: live sessions after the last scheduling round.
     pub active_sessions: AtomicU64,
+    /// High-water mark of concurrently admitted sessions.
+    pub peak_sessions: AtomicU64,
     /// Gauge: KV slots held across live sessions (both model sides).
     pub kv_slots_in_use: AtomicU64,
+    /// Gauge: shared-pool blocks leased across both model sides (paged
+    /// layout only; 0 otherwise).
+    pub blocks_in_use: AtomicU64,
+    /// Gauge: total shared-pool blocks (paged layout only; 0 otherwise).
+    pub blocks_total: AtomicU64,
     /// Per-request serving series: `server.queue_delay_s`,
-    /// `server.ttft_s`, `server.tok_per_s`.
+    /// `server.ttft_s`, `server.tok_per_s`, `server.resume_delay_s`.
     pub recorder: Mutex<Recorder>,
 }
 
@@ -106,16 +122,28 @@ pub struct StatsSnapshot {
     pub cancelled: u64,
     /// Admission-control rejections.
     pub rejected: u64,
+    /// Paged-pool preemptions (DESIGN.md §10).
+    pub preemptions: u64,
+    /// Preempted sessions re-admitted.
+    pub resumes: u64,
     /// Live sessions after the last round.
     pub active_sessions: u64,
+    /// High-water mark of concurrently admitted sessions.
+    pub peak_sessions: u64,
     /// KV slots held across live sessions.
     pub kv_slots_in_use: u64,
+    /// Shared-pool blocks currently leased (paged layout only).
+    pub blocks_in_use: u64,
+    /// Total shared-pool blocks (paged layout only).
+    pub blocks_total: u64,
     /// Mean queueing delay (ms).
     pub queue_delay_ms_mean: f64,
     /// Median time-to-first-token (ms).
     pub ttft_ms_p50: f64,
     /// Mean per-request decode throughput.
     pub tok_per_s_mean: f64,
+    /// Mean preempt-to-resume delay (ms; NaN when nothing resumed).
+    pub resume_delay_ms_mean: f64,
 }
 
 impl ServerStats {
@@ -128,11 +156,17 @@ impl ServerStats {
             errors: self.errors.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
+            resumes: self.resumes.load(Ordering::Relaxed),
             active_sessions: self.active_sessions.load(Ordering::Relaxed),
+            peak_sessions: self.peak_sessions.load(Ordering::Relaxed),
             kv_slots_in_use: self.kv_slots_in_use.load(Ordering::Relaxed),
+            blocks_in_use: self.blocks_in_use.load(Ordering::Relaxed),
+            blocks_total: self.blocks_total.load(Ordering::Relaxed),
             queue_delay_ms_mean: rec.mean("server.queue_delay_s") * 1e3,
             ttft_ms_p50: rec.percentile("server.ttft_s", 50.0) * 1e3,
             tok_per_s_mean: rec.mean("server.tok_per_s"),
+            resume_delay_ms_mean: rec.mean("server.resume_delay_s") * 1e3,
         }
     }
 }
@@ -148,11 +182,17 @@ impl StatsSnapshot {
             ("errors", Json::Num(self.errors as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("resumes", Json::Num(self.resumes as f64)),
             ("active_sessions", Json::Num(self.active_sessions as f64)),
+            ("peak_sessions", Json::Num(self.peak_sessions as f64)),
             ("kv_slots_in_use", Json::Num(self.kv_slots_in_use as f64)),
+            ("blocks_in_use", Json::Num(self.blocks_in_use as f64)),
+            ("blocks_total", Json::Num(self.blocks_total as f64)),
             ("queue_delay_ms_mean", num(self.queue_delay_ms_mean)),
             ("ttft_ms_p50", num(self.ttft_ms_p50)),
             ("tok_per_s_mean", num(self.tok_per_s_mean)),
+            ("resume_delay_ms_mean", num(self.resume_delay_ms_mean)),
         ])
     }
 }
@@ -187,10 +227,9 @@ impl Server {
         // Worker: the continuous-serving scheduler (sessions.rs).
         let wstats = stats.clone();
         let wstop = stop.clone();
-        let max_sessions = opts.max_sessions;
-        let batched = opts.batched;
+        let wopts = opts.clone();
         let worker_thread = std::thread::Builder::new().name("ygg-worker".into()).spawn(
-            move || sessions::run_worker(engine, job_rx, wstats, wstop, max_sessions, batched),
+            move || sessions::run_worker(engine, job_rx, wstats, wstop, wopts),
         )?;
 
         // Accept loop: one reader + one writer pump per connection.
@@ -296,15 +335,8 @@ fn handle_conn(
                 let _ = ev_tx.send(ServerEvent::Stats(stats.snapshot()));
             }
             Ok(Req::Generate { id, prompt, max_new }) => {
-                let job = Job {
-                    id,
-                    prompt,
-                    max_new,
-                    reply: ev_tx.clone(),
-                    stream,
-                    cancelled: cancelled.clone(),
-                    enqueued: Instant::now(),
-                };
+                let job =
+                    Job::new(id, prompt, max_new, ev_tx.clone(), stream, cancelled.clone());
                 if jobs.try_send(job).is_err() {
                     let _ = ev_tx.send(ServerEvent::Error {
                         id: Some(id),
@@ -597,30 +629,92 @@ impl Engine for EchoEngine {
     }
 }
 
+/// What backs a [`MockTask`]'s simulated KV slots.
+enum MockKv {
+    /// Plain counter against a per-session capacity (the original mock;
+    /// no shared state between sessions).
+    Counted { capacity: usize, held: usize },
+    /// A real [`SlotCache`] over a shared pool — paged blocks or an
+    /// equal-partition lease — so server tests exercise the actual
+    /// kvcache admission/lease/return/confinement machinery without
+    /// device artifacts.
+    Cache {
+        cache: crate::kvcache::SlotCache,
+        /// Equal-mode lease to return on drop (paged caches return their
+        /// own blocks).
+        lease: Option<(Arc<Mutex<crate::kvcache::SlotPartition>>, crate::kvcache::SlotRange)>,
+    },
+    /// Equal mode with every region taken: headroom 0, so admission
+    /// rejects the request before any stepping.
+    Unleased,
+}
+
 /// Configurable mock step engine for scheduler tests: per-step latency,
-/// chunked emission, a bounded per-session "KV capacity", and a shared
-/// gauge of slots held so tests can assert cancellation frees them.
+/// chunked emission, a bounded "KV capacity" (per-session, or a *shared*
+/// paged/equal cache over the real `kvcache` types), and a shared gauge
+/// of slots held so tests can assert cancellation frees them.
 pub struct MockStepEngine {
     /// Simulated device time per step.
     pub step_delay: std::time::Duration,
     /// Tokens emitted per iterate step.
     pub tokens_per_step: usize,
-    /// Simulated per-session KV capacity in tokens.
+    /// Simulated per-session KV capacity in tokens (non-shared mode).
     pub capacity: usize,
     /// Live "KV slots" across all of this engine's sessions (prompt +
     /// generated tokens); decremented by task drop.
     pub slots_in_use: Arc<std::sync::atomic::AtomicUsize>,
+    /// Mask-confinement violations observed by shared-cache tasks
+    /// (every built row is checked against the session's ownership;
+    /// tests assert this stays 0).
+    pub violations: Arc<std::sync::atomic::AtomicUsize>,
+    paged_pool: Option<Arc<Mutex<crate::kvcache::BlockPool>>>,
+    equal_part: Option<Arc<Mutex<crate::kvcache::SlotPartition>>>,
 }
 
 impl MockStepEngine {
-    /// A mock with the given per-step delay, chunk size and KV capacity.
+    /// A mock with the given per-step delay, chunk size and per-session
+    /// KV capacity (no shared cache).
     pub fn new(step_delay_ms: u64, tokens_per_step: usize, capacity: usize) -> Self {
         Self {
             step_delay: std::time::Duration::from_millis(step_delay_ms),
             tokens_per_step: tokens_per_step.max(1),
             capacity,
             slots_in_use: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            violations: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            paged_pool: None,
+            equal_part: None,
         }
+    }
+
+    /// A mock whose sessions share one *paged* block pool (DESIGN.md
+    /// §10): blocks lease on demand, fully-free blocks return, and a dry
+    /// pool mid-step raises the typed `PoolExhausted` the scheduler
+    /// preempts on.
+    pub fn with_paged_pool(
+        step_delay_ms: u64,
+        tokens_per_step: usize,
+        capacity: usize,
+        block_size: usize,
+    ) -> crate::Result<Self> {
+        let pool = crate::kvcache::BlockPool::new(capacity, block_size, None)?;
+        let mut e = Self::new(step_delay_ms, tokens_per_step, capacity);
+        e.paged_pool = Some(Arc::new(Mutex::new(pool)));
+        Ok(e)
+    }
+
+    /// A mock whose sessions share one cache split into `sessions` equal
+    /// regions (DESIGN.md §9): the fixed-partition baseline the paged
+    /// layout is measured against.
+    pub fn with_equal_partition(
+        step_delay_ms: u64,
+        tokens_per_step: usize,
+        capacity: usize,
+        sessions: usize,
+    ) -> crate::Result<Self> {
+        let part = crate::kvcache::SlotPartition::new(capacity, sessions)?;
+        let mut e = Self::new(step_delay_ms, tokens_per_step, capacity);
+        e.equal_part = Some(Arc::new(Mutex::new(part)));
+        Ok(e)
     }
 }
 
@@ -631,51 +725,123 @@ struct MockTask {
     max_new: usize,
     per_step: usize,
     delay: std::time::Duration,
-    capacity: usize,
-    /// First prompt token: offsets the emitted counter tokens so tests
-    /// can tell concurrent sessions' streams apart (batch-mixing checks).
+    /// First prompt token + prompt length offset the emitted counter
+    /// tokens, so concurrent sessions' streams stay distinguishable
+    /// (batch-mixing checks) *and* a preempted session's resumed
+    /// incarnation — whose prompt grew by the generated prefix —
+    /// continues the exact same sequence.
     seed_tok: u32,
     /// Slots this task holds (mirrored into the engine gauge).
     held: usize,
     gauge: Arc<std::sync::atomic::AtomicUsize>,
+    violations: Arc<std::sync::atomic::AtomicUsize>,
+    kv: MockKv,
 }
 
 impl MockTask {
-    fn hold(&mut self, n: usize) {
-        self.held += n;
-        self.gauge.fetch_add(n, Ordering::Relaxed);
+    fn kv_headroom(&self) -> usize {
+        match &self.kv {
+            MockKv::Counted { capacity, held } => capacity.saturating_sub(*held),
+            MockKv::Cache { cache, .. } => cache.headroom(0),
+            MockKv::Unleased => 0,
+        }
+    }
+
+    /// The counter token emitted at generation index `i`: continuous
+    /// across preemption because the resumed prompt includes the prefix.
+    fn token_at(&self, i: usize) -> u32 {
+        self.seed_tok.wrapping_add((self.prompt_len - 1 + i) as u32)
+    }
+
+    /// Allocates `n` simulated KV slots, committing `commit` of them
+    /// (the rest model rejected draft slots and are released — which in
+    /// paged mode returns fully-free blocks to the shared pool). Every
+    /// built mask row is checked against the session's slot ownership.
+    fn kv_take(&mut self, n: usize, commit: usize) -> crate::Result<bool> {
+        debug_assert!(commit <= n);
+        match &mut self.kv {
+            MockKv::Counted { capacity, held } => {
+                if capacity.saturating_sub(*held) < commit {
+                    return Ok(false);
+                }
+                *held += commit;
+                self.held += commit;
+                self.gauge.fetch_add(commit, Ordering::Relaxed);
+                Ok(true)
+            }
+            MockKv::Unleased => Ok(false),
+            MockKv::Cache { cache, .. } => {
+                let Some(slots) = cache.alloc(n) else {
+                    if cache.is_paged() {
+                        // Typed: the scheduler preempts instead of failing.
+                        return Err(cache.exhausted("mock step"));
+                    }
+                    return Ok(false); // region full: graceful stop
+                };
+                let cap = cache.capacity();
+                let rows = cache.mask_builder().build_linear(&slots, n, n).to_vec();
+                if !crate::tree::rows_owned(&rows, cap, &cache.ownership()) {
+                    self.violations.fetch_add(1, Ordering::Relaxed);
+                }
+                for &s in &slots[..commit] {
+                    cache.commit(s);
+                }
+                cache.release(&slots[commit..]);
+                let now = cache.in_use();
+                if now > self.held {
+                    self.gauge.fetch_add(now - self.held, Ordering::Relaxed);
+                } else {
+                    self.gauge.fetch_sub(self.held - now, Ordering::Relaxed);
+                }
+                self.held = now;
+                Ok(true)
+            }
+        }
     }
 
     /// Advances one scheduling step *without* the simulated device delay
     /// — the per-task half of a step. `step()` charges the delay per
     /// task (serial rounds); `MockStepEngine::step_batch` charges it
     /// once per round (the batched-device analog).
-    fn advance(&mut self) -> StepOutcome {
+    fn advance(&mut self) -> crate::Result<StepOutcome> {
         match self.state {
-            TaskState::Done => StepOutcome { tokens: vec![], state: TaskState::Done },
+            TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
             TaskState::Prefill => {
-                self.hold(self.prompt_len);
-                self.state = if self.max_new == 0 || self.headroom() == 0 {
+                if !self.kv_take(self.prompt_len, self.prompt_len)? {
+                    anyhow::bail!(
+                        "mock KV cannot host a {}-token prompt",
+                        self.prompt_len
+                    );
+                }
+                self.state = if self.max_new == 0 || self.kv_headroom() == 0 {
                     TaskState::Done
                 } else {
                     TaskState::Iterate
                 };
-                StepOutcome { tokens: vec![], state: self.state }
+                Ok(StepOutcome { tokens: vec![], state: self.state })
             }
             TaskState::Iterate => {
-                let n = self
-                    .per_step
-                    .min(self.max_new - self.produced)
-                    .min(self.headroom());
-                let tokens: Vec<u32> = (self.produced..self.produced + n)
-                    .map(|x| self.seed_tok.wrapping_add(x as u32))
-                    .collect();
+                let want = self.per_step.min(self.max_new - self.produced);
+                // Model a draft step: `want` accepted slots plus two
+                // rejected draft slots that release right back.
+                let n = if self.kv_take(want + 2, want)? {
+                    want
+                } else {
+                    // Session-local capacity exhausted: commit what fits.
+                    let fit = want.min(self.kv_headroom());
+                    if fit > 0 && !self.kv_take(fit, fit)? {
+                        0
+                    } else {
+                        fit
+                    }
+                };
+                let tokens: Vec<u32> =
+                    (self.produced..self.produced + n).map(|x| self.token_at(x)).collect();
                 self.produced += n;
-                self.hold(n);
-                if self.produced >= self.max_new || self.headroom() == 0 {
+                if self.produced >= self.max_new || self.kv_headroom() == 0 || n == 0 {
                     self.state = TaskState::Done;
                 }
-                StepOutcome { tokens, state: self.state }
+                Ok(StepOutcome { tokens, state: self.state })
             }
         }
     }
@@ -683,8 +849,15 @@ impl MockTask {
 
 impl Drop for MockTask {
     fn drop(&mut self) {
-        // "Free the KV caches": return every held slot.
+        // "Free the KV caches": return every held slot (and the equal-
+        // partition lease; a paged SlotCache returns its own blocks).
         self.gauge.fetch_sub(self.held, Ordering::Relaxed);
+        if let MockKv::Cache { cache, lease } = &mut self.kv {
+            cache.reset();
+            if let Some((part, range)) = lease.take() {
+                part.lock().unwrap().release(range);
+            }
+        }
     }
 }
 
@@ -701,11 +874,11 @@ impl DecodeTask for MockTask {
         if self.state != TaskState::Done {
             std::thread::sleep(self.delay);
         }
-        Ok(self.advance())
+        self.advance()
     }
 
     fn headroom(&self) -> usize {
-        self.capacity.saturating_sub(self.held)
+        self.kv_headroom()
     }
 
     fn kv_slots_in_use(&self) -> usize {
@@ -714,7 +887,7 @@ impl DecodeTask for MockTask {
 
     fn finish(self: Box<Self>) -> Generation {
         Generation {
-            tokens: (0..self.produced).map(|x| self.seed_tok.wrapping_add(x as u32)).collect(),
+            tokens: (0..self.produced).map(|x| self.token_at(x)).collect(),
             iterations: self.produced.div_ceil(self.per_step),
             seconds: self.delay.as_secs_f64() * self.produced.div_ceil(self.per_step) as f64,
             prefill_seconds: self.delay.as_secs_f64(),
@@ -726,6 +899,28 @@ impl DecodeTask for MockTask {
 impl StepEngine for MockStepEngine {
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let kv = if let Some(pool) = &self.paged_pool {
+            MockKv::Cache { cache: crate::kvcache::SlotCache::paged(pool.clone()), lease: None }
+        } else if let Some(part) = &self.equal_part {
+            let (leased, total) = {
+                let mut p = part.lock().unwrap();
+                (p.lease(), p.total_capacity())
+            };
+            match leased {
+                Some(range) => MockKv::Cache {
+                    cache: crate::kvcache::SlotCache::with_range(
+                        range,
+                        total,
+                        total as u32 - 1,
+                    ),
+                    lease: Some((part.clone(), range)),
+                },
+                // Every region taken: zero headroom → admission rejects.
+                None => MockKv::Unleased,
+            }
+        } else {
+            MockKv::Counted { capacity: self.capacity, held: 0 }
+        };
         Ok(Box::new(MockTask {
             state: TaskState::Prefill,
             prompt_len: prompt.len(),
@@ -733,10 +928,11 @@ impl StepEngine for MockStepEngine {
             max_new,
             per_step: self.tokens_per_step,
             delay: self.step_delay,
-            capacity: self.capacity,
             seed_tok: prompt[0],
             held: 0,
             gauge: self.slots_in_use.clone(),
+            violations: self.violations.clone(),
+            kv,
         }))
     }
 
@@ -756,11 +952,18 @@ impl StepEngine for MockStepEngine {
             .iter_mut()
             .map(|t| {
                 if let Some(m) = t.as_any_mut().downcast_mut::<MockTask>() {
-                    return Ok(m.advance());
+                    return m.advance();
                 }
                 t.step()
             })
             .collect()
+    }
+
+    fn cache_occupancy(&self) -> Option<(u64, u64)> {
+        self.paged_pool.as_ref().map(|p| {
+            let p = p.lock().unwrap();
+            (p.blocks_in_use() as u64, p.num_blocks() as u64)
+        })
     }
 }
 
@@ -797,7 +1000,7 @@ mod tests {
     use super::*;
 
     fn opts(stream: bool) -> ServeOpts {
-        ServeOpts { max_queue: 8, max_sessions: 4, stream, batched: true }
+        ServeOpts { max_queue: 8, max_sessions: 4, stream, ..ServeOpts::default() }
     }
 
     #[test]

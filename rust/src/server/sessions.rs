@@ -16,15 +16,29 @@
 //!   [`DecodeTask::headroom`] (KV-slot budget, via
 //!   `engine::Session::headroom`) to cover the prompt; otherwise the
 //!   request is rejected with a typed error before any device work.
+//!   Under a paged shared cache (DESIGN.md §10) the headroom counts the
+//!   shared block pool, so admission is **token-level**: a request is
+//!   admitted whenever the pool covers prompt + tree budget, not when a
+//!   worst-case fixed region happens to be free.
+//! * **Preemption / resume** — a paged session whose mid-generation
+//!   allocation finds the pool dry fails its step with the typed
+//!   [`PoolExhausted`] marker. The scheduler *preempts* it: the task is
+//!   dropped (every leased block returns to the pool immediately), the
+//!   tokens generated so far are appended to the saved prompt, and the
+//!   job is requeued for a re-prefill resume once blocks free up.
+//!   Resumed jobs have priority over fresh admissions; a resumed job
+//!   that can never fit (nothing live holds blocks) or exceeds
+//!   `max_resumes` gets a terminal error instead of livelocking.
 //! * **Cancellation** — each connection owns a cancel flag, raised when
 //!   the client disconnects (reader EOF or a failed write). The scheduler
 //!   checks it before every step and simply drops the session: the task
 //!   owns its KV caches, so the drop frees them immediately and the slot
 //!   admits the next queued request in the same round.
-//! * **Metrics** — per-request queueing delay, time-to-first-token and
-//!   decode throughput are recorded into the shared
+//! * **Metrics** — per-request queueing delay, time-to-first-token,
+//!   decode throughput and (for preempted requests) preempt-to-resume
+//!   delay are recorded into the shared
 //!   [`ServerStats`](super::ServerStats) recorder and echoed on each
-//!   `done` event.
+//!   `done` event; block-pool occupancy gauges update every round.
 //!
 //! Worker→connection traffic is the typed [`ServerEvent`] enum; JSON only
 //! exists at the connection boundary (`ServerEvent::to_json`). The old
@@ -32,39 +46,52 @@
 //! entirely: one writer pump per connection forwards every event and
 //! request lifetimes are tracked by the scheduler, not the wire format.
 
+use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::engine::{DecodeTask, StepEngine, StepOutcome};
+use crate::kvcache::PoolExhausted;
 use crate::util::json::Json;
 
-use super::{CancelFlag, ServerStats, StatsSnapshot};
+use super::{CancelFlag, ServeOpts, ServerStats, StatsSnapshot};
 
 /// Sliding window for the per-request serving series: bounds the stats
 /// recorder's memory (and each snapshot's percentile scan) on servers
 /// that run indefinitely.
 const STATS_WINDOW: usize = 4096;
 
+/// Rounds a parked resumed job waits between re-admission attempts.
+/// Each attempt costs an `engine.begin()` (session construction) just to
+/// run the footprint check, so retrying every single scheduling round
+/// would churn allocations on the serving hot loop for nothing — pool
+/// headroom only changes when a session finishes or is preempted.
+const RESUME_RETRY_ROUNDS: u32 = 4;
+
 /// Final per-request summary carried by [`ServerEvent::Done`].
 #[derive(Debug, Clone)]
 pub struct DoneSummary {
-    /// Generated tokens (complete sequence).
+    /// Generated tokens (complete sequence, including everything
+    /// generated before any preemption).
     pub tokens: Vec<u32>,
-    /// Average accepted length.
+    /// Average accepted length (final incarnation).
     pub aal: f64,
-    /// Per-token latency (ms).
+    /// Per-token latency (ms, final incarnation).
     pub tpot_ms: f64,
-    /// Verification iterations used.
+    /// Verification iterations used (final incarnation).
     pub iterations: usize,
-    /// Prompt prefill time (ms).
+    /// Prompt prefill time (ms, final incarnation — resumes re-prefill).
     pub prefill_ms: f64,
     /// Time the request waited in the queue before admission.
     pub queue_ms: f64,
     /// Enqueue → first committed token (NaN when nothing was generated).
     pub ttft_ms: f64,
-    /// Decode throughput over the session's admitted lifetime.
+    /// Decode throughput over the request's admitted lifetime (all
+    /// incarnations).
     pub tok_per_s: f64,
+    /// Times this request was preempted and resumed (paged serving).
+    pub preemptions: usize,
 }
 
 /// Typed worker→connection event stream. One connection multiplexes many
@@ -106,6 +133,7 @@ impl ServerEvent {
                 ("queue_ms", Json::Num(summary.queue_ms)),
                 ("ttft_ms", Json::Num(summary.ttft_ms)),
                 ("tok_per_s", Json::Num(summary.tok_per_s)),
+                ("preemptions", Json::Num(summary.preemptions as f64)),
             ]),
             ServerEvent::Error { id, message } => {
                 let mut fields = Vec::new();
@@ -121,13 +149,17 @@ impl ServerEvent {
     }
 }
 
-/// One queued generation request.
+/// One queued generation request. The scheduler-maintained fields
+/// (`resumed`, `preempts`, …) track preemption/resume state across
+/// incarnations; connections initialize them empty via [`Job::new`].
 pub struct Job {
     /// Client-chosen request id (demux key).
     pub id: u64,
-    /// Tokenized prompt.
+    /// Tokenized prompt. After a preemption this grows by the generated
+    /// prefix, so the resumed incarnation re-prefills exactly the context
+    /// it stopped at.
     pub prompt: Vec<u32>,
-    /// Generation budget.
+    /// Generation budget (total across incarnations).
     pub max_new: usize,
     /// Event channel back to the owning connection's writer pump.
     pub reply: mpsc::Sender<ServerEvent>,
@@ -137,6 +169,48 @@ pub struct Job {
     pub cancelled: CancelFlag,
     /// When the request entered the queue (queue-delay metric).
     pub enqueued: Instant,
+    /// Tokens generated before the latest preemption (already streamed;
+    /// prepended to the final summary).
+    pub resumed: Vec<u32>,
+    /// Times this request has been preempted.
+    pub preempts: usize,
+    /// When the latest preemption happened (resume-delay metric).
+    pub preempted_at: Option<Instant>,
+    /// When the first token was committed (survives preemptions).
+    pub first_token: Option<Instant>,
+    /// Admitted seconds accumulated by earlier incarnations.
+    pub active_s: f64,
+    /// Enqueue → *first* admission, in seconds (set once; re-admissions
+    /// after a preemption must not inflate the queueing-delay metric).
+    pub queue_s: Option<f64>,
+}
+
+impl Job {
+    /// A fresh (never-preempted) request.
+    pub fn new(
+        id: u64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        reply: mpsc::Sender<ServerEvent>,
+        stream: bool,
+        cancelled: CancelFlag,
+    ) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new,
+            reply,
+            stream,
+            cancelled,
+            enqueued: Instant::now(),
+            resumed: Vec::new(),
+            preempts: 0,
+            preempted_at: None,
+            first_token: None,
+            active_s: 0.0,
+            queue_s: None,
+        }
+    }
 }
 
 /// A live, admitted session: one resumable task plus its timing marks.
@@ -144,7 +218,6 @@ struct ServeSession {
     job: Job,
     task: Box<dyn DecodeTask>,
     admitted: Instant,
-    first_token: Option<Instant>,
 }
 
 /// The continuous-serving scheduler loop (the worker thread body).
@@ -153,60 +226,116 @@ pub(super) fn run_worker(
     job_rx: mpsc::Receiver<Job>,
     stats: Arc<ServerStats>,
     stop: CancelFlag,
-    max_sessions: usize,
-    batched: bool,
+    opts: ServeOpts,
 ) {
     let mut engine = engine;
-    let max_sessions = max_sessions.max(1);
+    let max_sessions = opts.max_sessions.max(1);
     let mut live: Vec<ServeSession> = Vec::new();
+    // Preempted jobs waiting for pool blocks; strictly ahead of fresh
+    // admissions (their clients are already mid-stream).
+    let mut resume: VecDeque<Job> = VecDeque::new();
+    let mut resume_backoff: u32 = 0;
     while !stop.load(Ordering::Relaxed) {
-        // Admission: fill free session slots from the queue.
+        resume_backoff = resume_backoff.saturating_sub(1);
+        // Admission: fill free session slots — resumes first, then queue.
         while live.len() < max_sessions {
-            match job_rx.try_recv() {
-                Ok(job) => admit(&mut engine, job, &mut live, &stats),
-                Err(_) => break,
+            let (job, fresh) = if resume.is_empty() {
+                match job_rx.try_recv() {
+                    Ok(j) => (j, true),
+                    Err(_) => break,
+                }
+            } else if resume_backoff == 0 {
+                (resume.pop_front().unwrap(), false)
+            } else {
+                // A parked resume keeps priority over fresh jobs but only
+                // re-probes every few rounds (each probe costs a begin()).
+                break;
+            };
+            if let Some(parked) = admit(&mut engine, job, &mut live, &stats, fresh) {
+                if live.is_empty() {
+                    // Nothing live holds pool blocks, so headroom will
+                    // never improve: the resumed request is unservable.
+                    reject_unadmittable(parked, &stats);
+                } else {
+                    resume.push_front(parked);
+                    resume_backoff = RESUME_RETRY_ROUNDS;
+                    break;
+                }
             }
         }
+        stats.peak_sessions.fetch_max(live.len() as u64, Ordering::Relaxed);
         if live.is_empty() {
             stats.active_sessions.store(0, Ordering::Relaxed);
             stats.kv_slots_in_use.store(0, Ordering::Relaxed);
             // Idle: block for work (bounded, so `stop` stays responsive).
             match job_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(job) => admit(&mut engine, job, &mut live, &stats),
+                Ok(job) => {
+                    let _ = admit(&mut engine, job, &mut live, &stats, true);
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
             continue;
         }
-        round(&mut engine, &mut live, &stats, batched);
+        round(&mut engine, &mut live, &mut resume, &stats, &opts);
         let kv: usize = live.iter().map(|s| s.task.kv_slots_in_use()).sum();
         stats.active_sessions.store(live.len() as u64, Ordering::Relaxed);
         stats.kv_slots_in_use.store(kv as u64, Ordering::Relaxed);
+        if let Some((used, total)) = engine.cache_occupancy() {
+            stats.blocks_in_use.store(used, Ordering::Relaxed);
+            stats.blocks_total.store(total, Ordering::Relaxed);
+        }
     }
     // Dropping `live` drops every task → all session KV caches freed.
+    // Parked resume jobs drop with their reply senders (connections see
+    // the server close).
     drop(live);
+    drop(resume);
     stats.active_sessions.store(0, Ordering::Relaxed);
     stats.kv_slots_in_use.store(0, Ordering::Relaxed);
 }
 
-/// Opens a task for `job` and admits it, or rejects it (KV headroom /
-/// engine failure) with a typed error. Every dequeued job counts as a
-/// request, matching the original FCFS accounting.
+/// Opens a task for `job` and admits it. Fresh jobs that fail the
+/// headroom check are rejected with a typed error; resumed jobs are
+/// handed back (`Some`) to wait for blocks instead — their client is
+/// already streaming, so rejection is not an option while the pool can
+/// still drain. Every *fresh* dequeued job counts as a request, matching
+/// the original FCFS accounting.
 fn admit(
     engine: &mut Box<dyn StepEngine + Send>,
     job: Job,
     live: &mut Vec<ServeSession>,
     stats: &ServerStats,
-) {
-    stats.requests.fetch_add(1, Ordering::Relaxed);
+    fresh: bool,
+) -> Option<Job> {
+    if fresh {
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+    }
     if job.cancelled.load(Ordering::Relaxed) {
         // Client vanished while the job sat in the queue.
         stats.cancelled.fetch_add(1, Ordering::Relaxed);
-        return;
+        return None;
     }
-    match engine.begin(&job.prompt, job.max_new) {
+    let remaining = job.max_new.saturating_sub(job.resumed.len());
+    match engine.begin(&job.prompt, remaining) {
         Ok(task) => {
-            if task.headroom() < job.prompt.len() + 1 {
+            // Fresh jobs admit optimistically: pool covers prompt + tree
+            // budget (headroom already subtracts the budget). A *resumed*
+            // job re-admits only when the pool covers its whole remaining
+            // footprint beyond what live sessions are still projected to
+            // claim — optimistic re-admission of mutually-starved
+            // sessions would ping-pong through preempt/resume without
+            // anyone progressing.
+            let fits = if fresh {
+                task.headroom() >= job.prompt.len() + 1
+            } else {
+                let outstanding: usize = live.iter().map(projected_demand).sum();
+                task.headroom() >= job.prompt.len() + remaining + 1 + outstanding
+            };
+            if !fits {
+                if !fresh {
+                    return Some(job); // park until blocks free up
+                }
                 stats.rejected.fetch_add(1, Ordering::Relaxed);
                 let message = format!(
                     "insufficient KV headroom for a {}-token prompt (headroom {})",
@@ -216,18 +345,31 @@ fn admit(
                 let _ = job.reply.send(ServerEvent::Error { id: Some(job.id), message });
                 // `task` drops here: its freshly allocated caches are freed.
             } else {
-                let queue_s = job.enqueued.elapsed().as_secs_f64();
-                stats
-                    .recorder
-                    .lock()
-                    .unwrap()
-                    .record_windowed("server.queue_delay_s", queue_s, STATS_WINDOW);
-                live.push(ServeSession {
-                    job,
-                    task,
-                    admitted: Instant::now(),
-                    first_token: None,
-                });
+                let mut job = job;
+                if job.queue_s.is_none() {
+                    job.queue_s = Some(job.enqueued.elapsed().as_secs_f64());
+                }
+                let mut rec = stats.recorder.lock().unwrap();
+                if fresh {
+                    rec.record_windowed(
+                        "server.queue_delay_s",
+                        job.queue_s.unwrap_or(0.0),
+                        STATS_WINDOW,
+                    );
+                } else {
+                    stats.resumes.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = job.preempted_at {
+                        // Preempt → re-admit latency: the re-prefill
+                        // resume path's serving-side stage.
+                        rec.record_windowed(
+                            "server.resume_delay_s",
+                            t.elapsed().as_secs_f64(),
+                            STATS_WINDOW,
+                        );
+                    }
+                }
+                drop(rec);
+                live.push(ServeSession { job, task, admitted: Instant::now() });
             }
         }
         Err(e) => {
@@ -237,10 +379,57 @@ fn admit(
                 .send(ServerEvent::Error { id: Some(job.id), message: format!("{e:#}") });
         }
     }
+    None
+}
+
+/// Worst-case KV slots a live session may still claim from the shared
+/// pool: its full projected footprint (prompt + remaining generation)
+/// minus what it already holds. A coarse heuristic — good enough to stop
+/// resumed jobs from re-admitting into guaranteed starvation.
+fn projected_demand(s: &ServeSession) -> usize {
+    let remaining = s.job.max_new.saturating_sub(s.job.resumed.len());
+    (s.job.prompt.len() + remaining).saturating_sub(s.task.kv_slots_in_use())
+}
+
+/// Terminal rejection of a resumed job that can never be re-admitted
+/// (empty pool still short of its prompt, or resume budget exceeded).
+fn reject_unadmittable(job: Job, stats: &ServerStats) {
+    stats.errors.fetch_add(1, Ordering::Relaxed);
+    let message = format!(
+        "preempted request cannot resume: {}-token context exceeds the pool \
+         (after {} preemptions)",
+        job.prompt.len(),
+        job.preempts
+    );
+    let _ = job.reply.send(ServerEvent::Error { id: Some(job.id), message });
+}
+
+/// True when `e` carries the typed [`PoolExhausted`] marker anywhere in
+/// its chain — the paged cache's "preempt me" signal, as opposed to a
+/// terminal engine failure.
+fn is_pool_exhausted(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<PoolExhausted>().is_some())
+}
+
+/// Preempts a session under pool exhaustion: drop the task (every leased
+/// block returns to the shared pool immediately), fold the generated
+/// prefix into the saved prompt, and requeue the job for a re-prefill
+/// resume (DESIGN.md §10).
+fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats) {
+    let ServeSession { mut job, task, admitted } = s;
+    let g = task.finish(); // consumes the task: blocks are freed here
+    stats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
+    job.active_s += admitted.elapsed().as_secs_f64();
+    job.prompt.extend_from_slice(&g.tokens);
+    job.resumed.extend_from_slice(&g.tokens);
+    job.preempts += 1;
+    job.preempted_at = Some(Instant::now());
+    stats.preemptions.fetch_add(1, Ordering::Relaxed);
+    resume.push_back(job);
 }
 
 /// One scheduling round over every live session, removing sessions as
-/// they cancel, finish, or fail.
+/// they cancel, finish, preempt, or fail.
 ///
 /// In round-robin mode each task takes exactly one serial `step()` (the
 /// time-sliced discipline). In batched mode the whole round goes through
@@ -251,8 +440,9 @@ fn admit(
 fn round(
     engine: &mut Box<dyn StepEngine + Send>,
     live: &mut Vec<ServeSession>,
+    resume: &mut VecDeque<Job>,
     stats: &ServerStats,
-    batched: bool,
+    opts: &ServeOpts,
 ) {
     // Drop cancelled sessions first: frees their KV immediately and
     // keeps them out of this round's batch.
@@ -268,7 +458,7 @@ fn round(
     if live.is_empty() {
         return;
     }
-    let outcomes: Vec<crate::Result<StepOutcome>> = if batched {
+    let outcomes: Vec<crate::Result<StepOutcome>> = if opts.batched {
         let mut refs: Vec<&mut dyn DecodeTask> =
             live.iter_mut().map(|s| s.task.as_mut()).collect();
         engine.step_batch(&mut refs)
@@ -283,8 +473,8 @@ fn round(
                 let done = out.done();
                 if !out.tokens.is_empty() {
                     let s = &mut live[i];
-                    if s.first_token.is_none() {
-                        s.first_token = Some(Instant::now());
+                    if s.job.first_token.is_none() {
+                        s.job.first_token = Some(Instant::now());
                         let ttft = s.job.enqueued.elapsed().as_secs_f64();
                         stats
                             .recorder
@@ -308,6 +498,19 @@ fn round(
                 }
             }
             Err(e) => {
+                // A dry shared pool is a scheduling condition, not a
+                // request failure: preempt the session so its blocks
+                // drain to the survivors (or to parked resumes), unless
+                // it is truly alone — nothing live or parked could ever
+                // free a block for it — or out of resume budget.
+                if is_pool_exhausted(&e)
+                    && (live.len() > 1 || !resume.is_empty())
+                    && live[i].job.preempts < opts.max_resumes
+                {
+                    let s = live.remove(i);
+                    preempt(s, resume, stats);
+                    continue;
+                }
                 let s = live.remove(i);
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = s
@@ -319,15 +522,25 @@ fn round(
     }
 }
 
-/// Completes a session: final metrics + the typed `done` event.
+/// Completes a session: final metrics + the typed `done` event. Tokens
+/// generated before any preemption are prepended so the summary always
+/// carries the full sequence.
 fn finish_session(s: ServeSession, stats: &ServerStats) {
-    let ServeSession { job, task, admitted, first_token } = s;
+    let ServeSession { job, task, admitted } = s;
     let g = task.finish();
     stats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
-    let active_s = admitted.elapsed().as_secs_f64();
-    let tok_per_s = if active_s > 0.0 { g.tokens.len() as f64 / active_s } else { 0.0 };
-    let queue_ms = admitted.duration_since(job.enqueued).as_secs_f64() * 1e3;
-    let ttft_ms = first_token
+    let mut tokens = job.resumed.clone();
+    tokens.extend_from_slice(&g.tokens);
+    let active_s = job.active_s + admitted.elapsed().as_secs_f64();
+    let tok_per_s = if active_s > 0.0 { tokens.len() as f64 / active_s } else { 0.0 };
+    // Queueing delay is enqueue → *first* admission: a preempted request's
+    // later re-admissions are generation-time churn, not queue time.
+    let queue_ms = job
+        .queue_s
+        .unwrap_or_else(|| admitted.duration_since(job.enqueued).as_secs_f64())
+        * 1e3;
+    let ttft_ms = job
+        .first_token
         .map(|t| t.duration_since(job.enqueued).as_secs_f64() * 1e3)
         .unwrap_or(f64::NAN);
     stats
@@ -345,7 +558,8 @@ fn finish_session(s: ServeSession, stats: &ServerStats) {
         queue_ms,
         ttft_ms,
         tok_per_s,
-        tokens: g.tokens,
+        preemptions: job.preempts,
+        tokens,
     };
     let _ = job.reply.send(ServerEvent::Done { id: job.id, summary });
 }
@@ -378,6 +592,7 @@ mod tests {
                 queue_ms: 12.0,
                 ttft_ms: 20.0,
                 tok_per_s: 800.0,
+                preemptions: 2,
             },
         };
         let j = ev.to_json();
@@ -385,6 +600,7 @@ mod tests {
         assert!((j.f64("queue_ms").unwrap() - 12.0).abs() < 1e-9);
         assert!((j.f64("ttft_ms").unwrap() - 20.0).abs() < 1e-9);
         assert!((j.f64("tok_per_s").unwrap() - 800.0).abs() < 1e-9);
+        assert_eq!(j.usize("preemptions").unwrap(), 2);
     }
 
     #[test]
@@ -394,5 +610,13 @@ mod tests {
         let line = ev.to_json().to_string();
         let back = Json::parse(&line).unwrap();
         assert_eq!(back.u64("id").unwrap(), id);
+    }
+
+    #[test]
+    fn pool_exhausted_is_detected_through_context_chains() {
+        let base = anyhow::Error::new(PoolExhausted { what: "test" });
+        let wrapped = base.context("mid-iteration failure");
+        assert!(is_pool_exhausted(&wrapped));
+        assert!(!is_pool_exhausted(&anyhow::anyhow!("ordinary failure")));
     }
 }

@@ -14,13 +14,16 @@
 //!
 //! For cross-session batched verification (DESIGN.md §9) the per-session
 //! row blocks — each built by that session's own builder over its own
-//! leased slot range — are concatenated by [`pack_block_diagonal`] into
+//! leased slot set — are concatenated by [`pack_block_diagonal`] into
 //! one `[rows, capacity]` batch mask. Because every session's slots come
-//! from a disjoint [`SlotRange`], the packed mask is block-diagonal:
-//! session A's rows are structurally unable to attend to session B's
-//! slots ([`rows_confined`] is the checkable form of that invariant).
+//! from a disjoint [`SlotOwnership`] set (a contiguous [`SlotRange`] in
+//! equal-partition mode, a set of owned blocks in paged mode, DESIGN.md
+//! §10), the packed mask is block-diagonal: session A's rows are
+//! structurally unable to attend to session B's slots ([`rows_owned`] is
+//! the checkable form of that invariant; [`rows_confined`] is its
+//! contiguous-range specialization).
 
-use crate::kvcache::SlotRange;
+use crate::kvcache::{SlotOwnership, SlotRange};
 
 use super::{NodeId, TokenTree};
 
@@ -41,14 +44,23 @@ pub fn pack_block_diagonal(blocks: &[&[f32]], capacity: usize, rows: usize) -> V
 
 /// True when every row of `block` (`k × capacity`, row-major) references
 /// only slots inside `range` — the per-session confinement invariant that
-/// makes a packed batch mask block-diagonal. Used by tests and debug
-/// assertions in the batched scheduler.
+/// makes a packed batch mask block-diagonal. Contiguous-range form kept
+/// for equal-partition leases; [`rows_owned`] is the general check.
 pub fn rows_confined(block: &[f32], capacity: usize, range: SlotRange) -> bool {
+    rows_owned(block, capacity, &SlotOwnership::Range(range))
+}
+
+/// Block-ownership generalization of [`rows_confined`]: true when every
+/// row of `block` (`k × capacity`, row-major) references only slots in
+/// `owner` — a contiguous range *or* a paged session's set of owned
+/// blocks (DESIGN.md §10). Used by tests and debug assertions in the
+/// batched scheduler.
+pub fn rows_owned(block: &[f32], capacity: usize, owner: &SlotOwnership) -> bool {
     debug_assert!(block.len() % capacity == 0);
     block.chunks(capacity).all(|row| {
         row.iter()
             .enumerate()
-            .all(|(slot, &v)| v == 0.0 || range.contains(slot as u32))
+            .all(|(slot, &v)| v == 0.0 || owner.contains(slot as u32))
     })
 }
 
@@ -95,13 +107,13 @@ impl MaskBuilder {
     /// Row semantics: prefix slots ∪ ancestor slots (ancestors must appear
     /// in `slot_of`) ∪ the node's own slot (its K/V are scattered before
     /// attention runs).
-    pub fn build<'a>(
-        &'a mut self,
+    pub fn build(
+        &mut self,
         tree: &TokenTree,
         nodes: &[NodeId],
         slot_of: &[Option<u32>], // indexed by NodeId; None = not in this cache
         rows: usize,
-    ) -> &'a [f32] {
+    ) -> &[f32] {
         assert!(nodes.len() <= rows);
         let c = self.capacity;
         self.buf.resize(rows * c, 0.0);
@@ -123,7 +135,7 @@ impl MaskBuilder {
     /// Builds the mask for a *linear* prefill chunk: token `i` of the chunk
     /// attends to the committed prefix plus chunk tokens `0..=i` (their
     /// slots given by `chunk_slots`). Rows beyond `n` are zero padding.
-    pub fn build_linear<'a>(&'a mut self, chunk_slots: &[u32], n: usize, rows: usize) -> &'a [f32] {
+    pub fn build_linear(&mut self, chunk_slots: &[u32], n: usize, rows: usize) -> &[f32] {
         assert!(n <= chunk_slots.len() && n <= rows);
         let c = self.capacity;
         self.buf.resize(rows * c, 0.0);
@@ -215,6 +227,20 @@ mod tests {
         let bad = [0.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
         assert!(rows_confined(&ok, 6, range));
         assert!(!rows_confined(&bad, 6, range));
+    }
+
+    #[test]
+    fn rows_owned_checks_block_sets() {
+        // Capacity 8, blocks of 2; session owns blocks 0 and 3
+        // (slots 0, 1, 6, 7).
+        let own = crate::kvcache::SlotOwnership::Blocks { block_size: 2, blocks: vec![0, 3] };
+        let ok = [1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        let bad = [1.0f32, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]; // slot 3 foreign
+        assert!(rows_owned(&ok, 8, &own));
+        assert!(!rows_owned(&bad, 8, &own));
+        // Multiple rows: one escape anywhere fails the whole block.
+        let two = [1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!(!rows_owned(&two, 8, &own), "row 2 references foreign slot 2");
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod mask;
 pub mod shapes;
 
 pub use egt::{grow_step, Expansion, Frontier};
-pub use mask::{pack_block_diagonal, rows_confined, MaskBuilder};
+pub use mask::{pack_block_diagonal, rows_confined, rows_owned, MaskBuilder};
 pub use shapes::TreeShape;
 
 /// Index of a node inside a [`TokenTree`].

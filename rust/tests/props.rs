@@ -3,12 +3,15 @@
 //! Sequoia construction, mask building, scheduling and the JSON substrate.
 //! Reproduce failures with `YGG_PROP_SEED=<seed> cargo test --test props`.
 
-use yggdrasil::kvcache::{SlotCache, SlotPartition, SlotRange};
+use std::sync::{Arc, Mutex};
+
+use yggdrasil::kvcache::{BlockPool, SlotCache, SlotPartition, SlotRange};
 use yggdrasil::pruning::SubtreeDp;
 use yggdrasil::sampling::XorShiftRng;
 use yggdrasil::scheduler::{plan_latency, search_best_plan, Plan, StageDurations};
 use yggdrasil::tree::{
-    grow_step, pack_block_diagonal, rows_confined, Frontier, MaskBuilder, TokenTree, TreeShape,
+    grow_step, pack_block_diagonal, rows_confined, rows_owned, Frontier, MaskBuilder, TokenTree,
+    TreeShape,
 };
 use yggdrasil::util::json::Json;
 use yggdrasil::util::prop::{run_prop, shrink_usize, PropConfig};
@@ -290,6 +293,137 @@ fn prop_induced_subtree_preserves_probs() {
     );
 }
 
+/// Paged-cache safety (DESIGN.md §10): under random interleavings of
+/// session admit / alloc / reject-release / preempt / disconnect over one
+/// shared [`BlockPool`], every built (and packed) verify row's mask
+/// references only slots in blocks *currently owned* by that session —
+/// the block-ownership generalization of `rows_confined` — and the pool's
+/// block accounting never leaks or double-frees.
+#[test]
+fn prop_paged_masks_reference_only_owned_blocks() {
+    struct Sim {
+        cache: SlotCache,
+        outstanding: Vec<u32>,
+    }
+    run_prop(
+        "paged-block-ownership",
+        PropConfig { cases: 64, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let block_size = 2 + rng.next_range(6); // 2..=7
+            let nblocks = 4 + rng.next_range(12); // 4..=15
+            let capacity = block_size * nblocks + 1 + rng.next_range(3); // slack + trash
+            let pool = Arc::new(Mutex::new(
+                BlockPool::new(capacity, block_size, Some(nblocks)).map_err(|e| e.to_string())?,
+            ));
+            let mut sims: Vec<Option<Sim>> = (0..4).map(|_| None).collect();
+            for _ in 0..(40 + rng.next_range(60)) {
+                let k = rng.next_range(sims.len());
+                match rng.next_range(5) {
+                    // Admit: open a paged session in a free seat.
+                    0 => {
+                        if sims[k].is_none() {
+                            sims[k] = Some(Sim {
+                                cache: SlotCache::paged(pool.clone()),
+                                outstanding: Vec::new(),
+                            });
+                        }
+                    }
+                    // Alloc: lease on demand, build rows, check ownership,
+                    // commit a random prefix, keep the rest outstanding.
+                    1 => {
+                        if let Some(s) = &mut sims[k] {
+                            let n = 1 + rng.next_range(2 * block_size);
+                            if let Some(slots) = s.cache.alloc(n) {
+                                let own = s.cache.ownership();
+                                for &sl in &slots {
+                                    if !own.contains(sl) {
+                                        return Err(format!(
+                                            "alloc handed out unowned slot {sl}"
+                                        ));
+                                    }
+                                }
+                                let rows =
+                                    s.cache.mask_builder().build_linear(&slots, n, n).to_vec();
+                                if !rows_owned(&rows, capacity, &s.cache.ownership()) {
+                                    return Err("mask row escaped owned blocks".into());
+                                }
+                                let c = rng.next_range(slots.len() + 1);
+                                for &sl in &slots[..c] {
+                                    s.cache.commit(sl);
+                                }
+                                s.outstanding.extend(&slots[c..]);
+                            }
+                        }
+                    }
+                    // Reject-release: return every outstanding draft slot
+                    // (fully-free blocks flow back to the pool).
+                    2 => {
+                        if let Some(s) = &mut sims[k] {
+                            let out = std::mem::take(&mut s.outstanding);
+                            s.cache.release(&out);
+                        }
+                    }
+                    // Preempt / disconnect: drop the session whole.
+                    3 => {
+                        sims[k] = None;
+                    }
+                    // Packed verify: one row per live session, packed
+                    // block-diagonally; re-check each row against its
+                    // owner and the padding rows against zero.
+                    _ => {
+                        let mut blocks_rows: Vec<(yggdrasil::kvcache::SlotOwnership, Vec<f32>)> =
+                            Vec::new();
+                        let mut taken: Vec<(usize, u32)> = Vec::new();
+                        for (i, slot) in sims.iter_mut().enumerate() {
+                            let Some(s) = slot else { continue };
+                            let Some(sl) = s.cache.alloc(1) else { continue };
+                            let rows =
+                                s.cache.mask_builder().build_linear(&sl, 1, 1).to_vec();
+                            blocks_rows.push((s.cache.ownership(), rows));
+                            taken.push((i, sl[0]));
+                        }
+                        let total: usize = blocks_rows.len();
+                        let width = total + rng.next_range(3);
+                        let refs: Vec<&[f32]> =
+                            blocks_rows.iter().map(|(_, r)| r.as_slice()).collect();
+                        let packed = pack_block_diagonal(&refs, capacity, width);
+                        for (row, (own, _)) in blocks_rows.iter().enumerate() {
+                            let r = &packed[row * capacity..(row + 1) * capacity];
+                            if !rows_owned(r, capacity, own) {
+                                return Err(format!("packed row {row} escaped its owner"));
+                            }
+                        }
+                        for row in total..width {
+                            if packed[row * capacity..(row + 1) * capacity]
+                                .iter()
+                                .any(|&v| v != 0.0)
+                            {
+                                return Err(format!("padding row {row} not all-zero"));
+                            }
+                        }
+                        for (i, sl) in taken {
+                            sims[i].as_mut().unwrap().cache.release(&[sl]);
+                        }
+                    }
+                }
+                // Accounting invariant: free + owned == total, always.
+                let owned: usize =
+                    sims.iter().flatten().map(|s| s.cache.owned_blocks()).sum();
+                let free = pool.lock().unwrap().free_blocks();
+                if free + owned != nblocks {
+                    return Err(format!(
+                        "block leak: free {free} + owned {owned} != {nblocks}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Cross-session batching safety (DESIGN.md §9): over random packings of
 /// random per-session trees into one shared cache, no session's mask rows
 /// may ever reference another session's slots — the packed batch mask is
@@ -306,7 +440,7 @@ fn prop_block_diagonal_masks_never_cross_sessions() {
             let sessions = 2 + rng.next_range(3); // 2..=4 concurrent sessions
             let per = 12 + rng.next_range(5); // region length 12..=16
             let capacity = sessions * per + 1; // + shared trash slot
-            let mut part = SlotPartition::new(capacity, sessions);
+            let mut part = SlotPartition::new(capacity, sessions).map_err(|e| e.to_string())?;
             let trash = part.trash_slot();
             let mut blocks: Vec<(SlotRange, Vec<f32>)> = Vec::new();
             for _ in 0..sessions {

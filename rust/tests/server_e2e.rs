@@ -19,7 +19,7 @@ use yggdrasil::server::{Client, MockStepEngine, ServeOpts, Server};
 use yggdrasil::util::json::Json;
 
 fn opts(max_sessions: usize, stream: bool) -> ServeOpts {
-    ServeOpts { max_queue: 32, max_sessions, stream, batched: true }
+    ServeOpts { max_queue: 32, max_sessions, stream, ..ServeOpts::default() }
 }
 
 /// Sends one request on a raw socket and reads events until `done`,
@@ -253,7 +253,7 @@ fn batched_rounds_outscale_round_robin_throughput() {
         let srv = Server::spawn(
             "127.0.0.1:0",
             Box::new(MockStepEngine::new(20, 2, 10_000)),
-            ServeOpts { max_queue: 32, max_sessions: 4, stream: true, batched },
+            ServeOpts { max_queue: 32, max_sessions: 4, batched, ..ServeOpts::default() },
         )
         .unwrap();
         let w = yggdrasil::server::client_wave(srv.addr, 4, &prompts, 16).unwrap();
@@ -267,6 +267,196 @@ fn batched_rounds_outscale_round_robin_throughput() {
         tput[1],
         tput[0]
     );
+}
+
+// ---------------------------------------------------------------------------
+// Paged shared cache: admission, preemption/resume, confinement (mock).
+// ---------------------------------------------------------------------------
+
+/// Fires `(prompt, max_new)` jobs as concurrent clients and returns each
+/// client's `(prompt, max_new, result)`; panics on any request-level
+/// error (the paged scheduler must preempt/resume, never fail a request
+/// it admitted).
+fn concurrent_wave(
+    addr: std::net::SocketAddr,
+    jobs: Vec<(Vec<u32>, usize)>,
+) -> Vec<(Vec<u32>, usize, yggdrasil::server::ClientResult)> {
+    let handles: Vec<_> = jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, (p, n))| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                // A fresh request racing a momentarily-dry pool gets an
+                // immediate headroom rejection; back off and retry like a
+                // real client (bounded, so genuine failures still fail).
+                for attempt in 0..100 {
+                    match c.generate(i as u64, &p, n) {
+                        Ok(r) => return (p, n, r),
+                        Err(e)
+                            if attempt < 99
+                                && format!("{e:#}").contains("insufficient KV headroom") =>
+                        {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) => panic!("client {i} failed: {e:#}"),
+                    }
+                }
+                unreachable!()
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// The mock counter stream a request must produce, regardless of how
+/// many times it was preempted and resumed: `seed + (len - 1) + i`.
+fn expected_tokens(prompt: &[u32], max_new: usize) -> Vec<u32> {
+    (0..max_new)
+        .map(|i| prompt[0].wrapping_add((prompt.len() - 1 + i) as u32))
+        .collect()
+}
+
+#[test]
+fn paged_pool_outadmits_equal_partition_on_heterogeneous_prompts() {
+    // The acceptance scenario: one 65-slot cache (64 usable + trash), a
+    // mix of one long and five short prompts. Equal partition must size
+    // regions for the long request (64 / 32 = 2 sessions); the paged
+    // pool (8 × 8-slot blocks) lets block counts follow the actual
+    // footprint, so it must sustain ≥ 2× the concurrently admitted
+    // sessions — with zero mask-confinement violations and every client
+    // still receiving its exact token stream.
+    let long: Vec<u32> = (0..20).map(|x| 9000 + x as u32).collect();
+    let jobs: Vec<(Vec<u32>, usize)> = std::iter::once((long, 8))
+        .chain((0..5).map(|i| (vec![1000 * (i + 1) as u32, 7], 6)))
+        .collect();
+
+    let mut peaks = Vec::new();
+    for paged in [false, true] {
+        let engine = if paged {
+            MockStepEngine::with_paged_pool(4, 1, 65, 8).unwrap()
+        } else {
+            // Two regions of 32: the long request (20 prompt + 8 gen +
+            // transient draft slots) only fits a 32-slot region.
+            MockStepEngine::with_equal_partition(4, 1, 65, 2).unwrap()
+        };
+        let violations = engine.violations.clone();
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts {
+                max_queue: 32,
+                max_sessions: if paged { 8 } else { 2 },
+                max_resumes: 32,
+                ..ServeOpts::default()
+            },
+        )
+        .unwrap();
+        // Every client completes with its exact stream in both modes —
+        // preemption/resume must be invisible in the token sequence.
+        for (p, n, r) in concurrent_wave(srv.addr, jobs.clone()) {
+            assert_eq!(
+                r.tokens,
+                expected_tokens(&p, n),
+                "paged={paged}: wrong stream for prompt seed {}",
+                p[0]
+            );
+        }
+        assert_eq!(
+            violations.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "paged={paged}: mask rows escaped their owned slots"
+        );
+        peaks.push(srv.stats.peak_sessions.load(std::sync::atomic::Ordering::Relaxed));
+    }
+    let (equal_peak, paged_peak) = (peaks[0], peaks[1]);
+    assert!(
+        equal_peak <= 2,
+        "equal partition cannot admit more sessions than regions, got {equal_peak}"
+    );
+    assert!(
+        paged_peak >= 2 * equal_peak.max(1),
+        "paged admitted {paged_peak} concurrent sessions, equal {equal_peak} — \
+         expected ≥ 2× at the same total capacity"
+    );
+}
+
+#[test]
+fn pool_exhaustion_preempts_then_resumes_with_exact_streams() {
+    // Two 16-token-footprint requests (6 prompt + 8 gen + 2 transient
+    // draft slots) over a 2-block (16-slot) pool: both cannot run at
+    // once, so one must be preempted — blocks released, job requeued —
+    // and later resumed to completion. The client sees nothing but its
+    // exact stream; the stats see the preempt/resume counters and the
+    // resume-delay series.
+    let engine = MockStepEngine::with_paged_pool(5, 1, 17, 8).unwrap();
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(engine),
+        ServeOpts { max_queue: 32, max_sessions: 4, max_resumes: 32, ..ServeOpts::default() },
+    )
+    .unwrap();
+    let jobs: Vec<(Vec<u32>, usize)> = vec![
+        ((100..106).collect(), 8),
+        ((200..206).collect(), 8),
+    ];
+    for (p, n, r) in concurrent_wave(srv.addr, jobs) {
+        assert_eq!(r.tokens, expected_tokens(&p, n), "stream broke across preemption");
+    }
+    let preempts = srv.stats.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    let resumes = srv.stats.resumes.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(preempts >= 1, "pool pressure must preempt at least one session");
+    assert!(resumes >= 1 && resumes <= preempts, "every resume follows a preemption");
+    // The re-prefill resume path is covered by the stats recorder.
+    let rec = srv.stats.recorder.lock().unwrap();
+    assert!(
+        rec.count("server.resume_delay_s") as u64 == resumes,
+        "one resume-delay sample per resume"
+    );
+    drop(rec);
+    // Terminal state: every block returned to the pool.
+    let snap = srv.stats.snapshot();
+    assert_eq!(snap.preemptions, preempts);
+    assert_eq!(snap.resumes, resumes);
+}
+
+#[test]
+fn lone_oversized_paged_request_fails_cleanly_instead_of_livelocking() {
+    // A request whose footprint exceeds the whole pool can never be
+    // served: the scheduler must surface a terminal error (exhaustion
+    // with nothing to preempt), not spin preempt/resume forever.
+    let engine = MockStepEngine::with_paged_pool(1, 1, 17, 8).unwrap();
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(engine),
+        ServeOpts { max_queue: 8, max_sessions: 2, max_resumes: 4, ..ServeOpts::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(&srv.addr).unwrap();
+    // Prompt fits (admission sees 16 slots ≥ 11), but 10 + 32 generated
+    // can never fit 16 slots, and no other session holds blocks.
+    let err = c.generate(1, &(0..10).collect::<Vec<u32>>(), 32).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("exhausted") || msg.contains("resume"),
+        "expected a terminal exhaustion error, got: {msg}"
+    );
+    // A well-sized request on the same server still completes.
+    let r = c.generate(2, &[5, 6], 4).unwrap();
+    assert_eq!(r.tokens, expected_tokens(&[5, 6], 4));
+}
+
+#[test]
+fn paged_stats_expose_block_occupancy_gauges() {
+    let engine = MockStepEngine::with_paged_pool(5, 1, 65, 8).unwrap();
+    let srv = Server::spawn("127.0.0.1:0", Box::new(engine), opts(4, true)).unwrap();
+    let mut c = Client::connect(&srv.addr).unwrap();
+    let r = c.generate(1, &[10, 11, 12], 4).unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    let s = c.stats().unwrap();
+    assert_eq!(s.u64("blocks_total").unwrap(), 8, "8 blocks of 8 over 64 usable slots");
+    assert!(s.u64("peak_sessions").unwrap() >= 1);
+    assert_eq!(s.u64("preemptions").unwrap(), 0, "no pressure, no preemption");
 }
 
 // ---------------------------------------------------------------------------
@@ -288,8 +478,13 @@ fn spawn_real_server(max_sessions: usize, stream: bool) -> Option<Server> {
     Some(Server::spawn("127.0.0.1:0", Box::new(engine), opts(max_sessions, stream)).unwrap())
 }
 
-#[test]
-fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
+/// Spawns a batched shared-cache real-engine server (equal or paged
+/// layout) and asserts that concurrent batched sessions reproduce the
+/// solo greedy output bit-exactly: block-diagonal masks mean a rider in
+/// the same device batch cannot perturb another session's logits —
+/// whether its slots come from a contiguous region or a set of owned
+/// blocks.
+fn assert_batched_matches_solo(paged: bool) {
     let dir = Path::new("artifacts");
     if !(dir.join("manifest.json").exists()
         && dir.join("dft-xs.weights.bin").exists()
@@ -309,11 +504,13 @@ fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
     cfg.max_verify = 16;
     cfg.batch.enabled = true;
     cfg.batch.max_sessions = 4;
+    cfg.batch.paged = paged;
+    cfg.batch.block_size = 16;
     let engine = SpecDecoder::new(&rt, cfg, lat, None);
     let srv = Server::spawn(
         "127.0.0.1:0",
         Box::new(engine),
-        ServeOpts { max_queue: 32, max_sessions: 4, stream: true, batched: true },
+        ServeOpts { max_queue: 32, max_sessions: 4, ..ServeOpts::default() },
     )
     .unwrap();
     let prompt: Vec<u32> = (0..12).map(|i| (i * 29 + 11) % 1024).collect();
@@ -322,8 +519,7 @@ fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
     let solo = c.generate(1, &prompt, 12).unwrap();
     assert_eq!(solo.tokens.len(), 12);
     // …then two concurrent sessions batched into shared verifier calls
-    // must reproduce it exactly: block-diagonal masks mean a rider in
-    // the same device batch cannot perturb the other session's logits.
+    // must reproduce it exactly.
     let addr = srv.addr;
     let handles: Vec<_> = (0..2)
         .map(|i| {
@@ -336,8 +532,23 @@ fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
         .collect();
     for h in handles {
         let r = h.join().unwrap();
-        assert_eq!(r.tokens, solo.tokens, "batched session diverged from solo run");
+        assert_eq!(
+            r.tokens, solo.tokens,
+            "batched (paged={paged}) session diverged from solo run"
+        );
     }
+}
+
+#[test]
+fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
+    // Equal-partition layout: the PR 2 invariant, still selectable.
+    assert_batched_matches_solo(false);
+}
+
+#[test]
+fn paged_real_engine_sessions_stay_isolated_and_deterministic() {
+    // Paged block-granular layout: same bit-exactness over owned blocks.
+    assert_batched_matches_solo(true);
 }
 
 #[test]
