@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft smoke
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -33,3 +33,12 @@ serve:
 # Equal-partition fallback layout (DESIGN.md §9).
 serve-equal:
 	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4 --equal-partition
+
+# Verify-only batching (DESIGN.md §9): drafts issue serially per session
+# — the --no-batch-draft escape hatch for debugging the §11 draft packer.
+serve-nodraft:
+	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4 --no-batch-draft
+
+# Headless mock-engine serving smoke (no artifacts needed; CI runs this).
+smoke:
+	cd rust && cargo run --release -- figures --exp serving_mock

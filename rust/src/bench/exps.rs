@@ -486,13 +486,16 @@ pub fn fig15(lab: &mut Lab) -> crate::Result<()> {
     lab.emit("fig15", &t)
 }
 
-/// Serving: throughput vs per-request latency as concurrent clients grow,
-/// round-robin time-slicing vs cross-session batched verification
-/// (DESIGN.md §9). One server (4 session slots) absorbs each client wave;
-/// time-to-first-token and queueing delay come from the server's own
-/// `done` metrics. The headline check: batched throughput at ≥4 clients
-/// clears the round-robin baseline (the device stops idling between
-/// per-session verifies).
+/// Serving: throughput vs per-request latency as concurrent clients grow
+/// across the three scheduling regimes — round-robin time-slicing,
+/// verify-only cross-session batching (`batched_nodraft`, DESIGN.md §9 /
+/// `--no-batch-draft`), and stage-aligned batched drafting (`batched`,
+/// DESIGN.md §11, the default). One server (4 session slots) absorbs
+/// each client wave; time-to-first-token and queueing delay come from
+/// the server's own `done` metrics. The headline check: batched
+/// throughput at ≥4 clients clears the round-robin baseline, and
+/// batched drafting clears verify-only batching (the drafter stops
+/// serializing N× across sessions).
 ///
 /// A second table (`serving_paged.csv`) sweeps a *heterogeneous*
 /// short/long prompt mix at fixed total cache capacity, comparing the
@@ -510,7 +513,7 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
     // Shrink the tree envelope so four sessions fit the shared cache's
     // per-session quota (capacity/4 slots each); the round-robin baseline
     // runs the same envelope so the comparison isolates scheduling.
-    let cfg_for = |batched: bool| {
+    let cfg_for = |batched: bool, batch_draft: bool| {
         let mut cfg = EngineConfig::default();
         cfg.drafter = "dft-xs".into();
         cfg.target = "tgt-sm".into();
@@ -519,13 +522,18 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
         cfg.max_width = 4;
         cfg.max_verify = 16;
         cfg.batch.enabled = batched;
+        cfg.batch.batch_draft = batch_draft;
         cfg.batch.max_sessions = MAX_SESSIONS;
         cfg
     };
 
     let mut results: Vec<(&str, usize, WaveStats)> = Vec::new();
-    for (mode, batched) in [("round_robin", false), ("batched", true)] {
-        let engine = lab.spec(cfg_for(batched))?;
+    for (mode, batched, batch_draft) in [
+        ("round_robin", false, false),
+        ("batched_nodraft", true, false),
+        ("batched", true, true),
+    ] {
+        let engine = lab.spec(cfg_for(batched, batch_draft))?;
         let srv = Server::spawn(
             "127.0.0.1:0",
             Box::new(engine),
@@ -551,7 +559,10 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
         "queue_ms_mean",
         "speedup_vs_rr",
     ])
-    .with_title("Serving — round-robin vs cross-session batched verification (measured)");
+    .with_title(
+        "Serving — round-robin vs verify-only batching vs stage-aligned batched \
+         drafting (measured)",
+    );
     for (mode, clients, w) in &results {
         let rr = results
             .iter()
@@ -570,6 +581,71 @@ pub fn serving(lab: &mut Lab) -> crate::Result<()> {
     }
     lab.emit("serving", &t)?;
     serving_paged_sweep(lab)
+}
+
+/// Headless mock-engine serving smoke (`--exp serving_mock`, no AOT
+/// artifacts needed): the same three-regime sweep as [`serving`] —
+/// round-robin vs verify-only batching vs stage-aligned batched
+/// drafting — over a drafting-bound [`crate::server::MockStepEngine`]
+/// (one simulated verify delay per round, one draft delay per session
+/// or per round). CI runs this so round-loop regressions in the
+/// continuous-serving scheduler fail fast; it also enforces the
+/// batched-draft acceptance bar: ≥ 1.3× verify-only round throughput at
+/// 4 drafting-bound clients.
+pub fn serving_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::server::{client_wave, MockStepEngine, ServeOpts, Server};
+
+    let sweep: &[usize] = if opts.quick { &[2, 4] } else { &[1, 2, 4, 8] };
+    let prompts: Vec<Vec<u32>> = (0..8).map(|i| vec![1000 * (i + 1) as u32]).collect();
+    let mut results: Vec<(&str, usize, f64, f64)> = Vec::new();
+    for (mode, batched, batch_draft) in [
+        ("round_robin", false, false),
+        ("batched_nodraft", true, false),
+        ("batched", true, true),
+    ] {
+        // 4 ms simulated verify per round, 12 ms drafter per session —
+        // the drafting-bound regime batched drafting exists for.
+        let engine = MockStepEngine::new(4, 2, 10_000).with_draft_stage(12, batch_draft);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: 8, batched, ..ServeOpts::default() },
+        )?;
+        for &clients in sweep {
+            let w = client_wave(srv.addr, clients, &prompts, 16)?;
+            results.push((mode, clients, w.tok_per_s, w.e2e_ms_mean));
+        }
+    }
+    let mut t = Table::new(&["mode", "clients", "tok_per_s", "e2e_ms_mean", "speedup_vs_rr"])
+        .with_title("Serving smoke — mock engine, drafting-bound round loop (headless)");
+    for (mode, clients, tps, e2e) in &results {
+        let rr = results
+            .iter()
+            .find(|(m, c, _, _)| *m == "round_robin" && c == clients)
+            .map(|r| r.2)
+            .unwrap_or(f64::NAN);
+        t.row(&[
+            mode.to_string(),
+            clients.to_string(),
+            format!("{tps:.1}"),
+            format!("{e2e:.1}"),
+            format!("{:.2}x", tps / rr),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_mock.csv"))?;
+    // The acceptance bar, enforced headless so CI catches regressions.
+    let at4 = |mode: &str| {
+        results.iter().find(|(m, c, _, _)| *m == mode && *c == 4).map(|r| r.2)
+    };
+    if let (Some(draft), Some(nodraft)) = (at4("batched"), at4("batched_nodraft")) {
+        anyhow::ensure!(
+            draft >= 1.3 * nodraft,
+            "batched-draft serving {draft:.1} tok/s < 1.3x verify-only {nodraft:.1} tok/s \
+             at 4 drafting-bound clients"
+        );
+    }
+    Ok(())
 }
 
 /// Heterogeneous-prompt sweep at fixed total cache capacity: paged

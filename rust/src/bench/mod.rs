@@ -232,34 +232,56 @@ pub fn artifacts_available(dir: &Path) -> bool {
 /// Every experiment name `--exp` accepts (also what `--exp all` runs).
 /// EXPERIMENTS.md's inventory table lists exactly these names — a unit
 /// test parses that table and fails on drift in either direction.
-pub const EXPERIMENTS: [&str; 11] = [
+pub const EXPERIMENTS: [&str; 12] = [
     "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "serving",
+    "serving", "serving_mock",
 ];
 
-/// Runs one experiment (or `all`) by name.
+/// Experiments that run without the AOT artifact bundle (mock-engine
+/// smokes CI runs headless).
+const ARTIFACT_FREE: [&str; 1] = ["serving_mock"];
+
+/// Runs one experiment (or `all`) by name. Artifact-backed experiments
+/// require `make artifacts`; artifact-free ones (see [`ARTIFACT_FREE`])
+/// run anywhere, which is what lets CI smoke the serving round loop
+/// headless.
 pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
-    anyhow::ensure!(
-        artifacts_available(&opts.artifacts_dir),
-        "artifacts not built — run `make artifacts`"
-    );
-    std::fs::create_dir_all(&opts.out_dir)?;
-    let mut lab = Lab::new(opts)?;
     let list: Vec<&str> = if name == "all" { EXPERIMENTS.to_vec() } else { vec![name] };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let needs_artifacts = list.iter().any(|e| !ARTIFACT_FREE.contains(e));
+    let mut lab = if needs_artifacts {
+        anyhow::ensure!(
+            artifacts_available(&opts.artifacts_dir),
+            "artifacts not built — run `make artifacts` (only {:?} run without)",
+            ARTIFACT_FREE
+        );
+        Some(Lab::new(opts.clone())?)
+    } else {
+        None
+    };
     for exp in list {
         println!("\n================ {exp} ================\n");
+        if exp == "serving_mock" {
+            exps::serving_mock(&opts)?;
+            continue;
+        }
+        // Typed guard rather than a panic: if the artifact-free list and
+        // this dispatch ever drift, the CLI errors instead of crashing.
+        let Some(lab) = lab.as_mut() else {
+            anyhow::bail!("experiment '{exp}' requires artifacts — run `make artifacts`");
+        };
         match exp {
-            "table1" => exps::table1(&mut lab)?,
-            "fig4" => exps::fig4(&mut lab)?,
-            "fig5" => exps::fig5(&mut lab)?,
-            "fig6" => exps::fig6(&mut lab)?,
-            "fig10" => exps::fig10(&mut lab)?,
-            "fig11" => exps::fig11(&mut lab)?,
-            "fig12" => exps::fig12(&mut lab)?,
-            "fig13" => exps::fig13(&mut lab)?,
-            "fig14" => exps::fig14(&mut lab)?,
-            "fig15" => exps::fig15(&mut lab)?,
-            "serving" => exps::serving(&mut lab)?,
+            "table1" => exps::table1(lab)?,
+            "fig4" => exps::fig4(lab)?,
+            "fig5" => exps::fig5(lab)?,
+            "fig6" => exps::fig6(lab)?,
+            "fig10" => exps::fig10(lab)?,
+            "fig11" => exps::fig11(lab)?,
+            "fig12" => exps::fig12(lab)?,
+            "fig13" => exps::fig13(lab)?,
+            "fig14" => exps::fig14(lab)?,
+            "fig15" => exps::fig15(lab)?,
+            "serving" => exps::serving(lab)?,
             other => anyhow::bail!("unknown experiment '{other}'"),
         }
     }

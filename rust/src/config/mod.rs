@@ -85,6 +85,13 @@ pub struct BatchConfig {
     /// Lease the shared cache block-by-block on demand instead of in
     /// equal fixed regions.
     pub paged: bool,
+    /// Pack the draft stages (head draft + every equal-growth tree-draft
+    /// level) across sessions into one width-padded drafter call per
+    /// round, in addition to the batched verify (stage-aligned batched
+    /// drafting, DESIGN.md §11). `false` (`--no-batch-draft`) restores
+    /// the verify-only batching of DESIGN.md §9, where each session's
+    /// draft calls issue serially.
+    pub batch_draft: bool,
     /// Slots per block in paged mode (`--block-size`). Validated by
     /// [`crate::kvcache::BlockPool::new`]: must be ≥ 2 and fit the cache.
     pub block_size: usize,
@@ -95,7 +102,14 @@ pub struct BatchConfig {
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        Self { enabled: false, max_sessions: 4, paged: true, block_size: 16, cache_blocks: None }
+        Self {
+            enabled: false,
+            max_sessions: 4,
+            paged: true,
+            batch_draft: true,
+            block_size: 16,
+            cache_blocks: None,
+        }
     }
 }
 
@@ -372,6 +386,7 @@ impl EngineConfig {
             ("batch_enabled", Json::Bool(self.batch.enabled)),
             ("batch_max_sessions", Json::Num(self.batch.max_sessions as f64)),
             ("batch_paged", Json::Bool(self.batch.paged)),
+            ("batch_draft", Json::Bool(self.batch.batch_draft)),
             ("batch_block_size", Json::Num(self.batch.block_size as f64)),
             (
                 "batch_cache_blocks",
@@ -411,6 +426,7 @@ impl EngineConfig {
                 enabled: get_b("batch_enabled", d.batch.enabled),
                 max_sessions: get_u("batch_max_sessions", d.batch.max_sessions).max(1),
                 paged: get_b("batch_paged", d.batch.paged),
+                batch_draft: get_b("batch_draft", d.batch.batch_draft),
                 block_size: get_u("batch_block_size", d.batch.block_size),
                 cache_blocks: j.get("batch_cache_blocks").and_then(|v| v.as_usize()),
             },
@@ -534,6 +550,7 @@ mod tests {
             enabled: true,
             max_sessions: 6,
             paged: false,
+            batch_draft: false,
             block_size: 8,
             cache_blocks: Some(12),
         };
@@ -552,6 +569,7 @@ mod tests {
     fn batch_defaults_are_paged_and_absent_cache_blocks_stay_none() {
         let d = BatchConfig::default();
         assert!(d.paged, "paged block leasing is the default shared-cache layout");
+        assert!(d.batch_draft, "stage-aligned batched drafting is the default");
         assert!(d.cache_blocks.is_none());
         let j = Json::parse(r#"{"engine": {"batch_enabled": true}}"#).unwrap();
         let cfg = AppConfig::from_json(&j).unwrap();

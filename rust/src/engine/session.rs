@@ -29,7 +29,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::config::BatchConfig;
-use crate::kvcache::{BlockPool, SlotCache, SlotPartition, SlotRange};
+use crate::kvcache::{BlockPool, CacheConfigError, SlotCache, SlotPartition, SlotRange};
 use crate::runtime::{CacheId, ExecMode, ForwardReply, ForwardRequest, ModelSpec, Runtime};
 use crate::sampling::XorShiftRng;
 
@@ -174,8 +174,21 @@ pub struct ModelSide {
 }
 
 impl ModelSide {
+    /// The trash-slot index of a `capacity`-slot cache, validated via the
+    /// typed [`CacheConfigError`] path: a manifest declaring a 0- or
+    /// 1-slot cache used to underflow `capacity - 1` (a debug-build
+    /// panic on the serving worker) instead of surfacing a construction
+    /// error.
+    fn trash_for(capacity: usize) -> Result<u32, CacheConfigError> {
+        if capacity < 2 {
+            return Err(CacheConfigError::NoTrashSlot { capacity });
+        }
+        Ok(capacity as u32 - 1)
+    }
+
     fn new(rt: &Runtime, name: &str) -> crate::Result<Self> {
         let spec = rt.spec(name)?.clone();
+        Self::trash_for(spec.cache_capacity)?;
         let cache = rt.new_cache(name)?;
         Ok(Self {
             name: name.to_string(),
@@ -194,7 +207,7 @@ impl ModelSide {
         range: SlotRange,
     ) -> crate::Result<Self> {
         let spec = rt.spec(name)?.clone();
-        let trash = spec.cache_capacity as u32 - 1;
+        let trash = Self::trash_for(spec.cache_capacity)?;
         Ok(Self {
             name: name.to_string(),
             spec: spec.clone(),
@@ -463,6 +476,18 @@ mod tests {
             && dir.join("dft-xs.weights.bin").exists()
             && dir.join("tgt-sm.weights.bin").exists())
         .then(|| Runtime::load(dir, &["tgt-sm", "dft-xs"]).unwrap())
+    }
+
+    #[test]
+    fn degenerate_cache_capacity_is_a_typed_error_not_an_underflow() {
+        // `capacity - 1` on a 0-slot cache used to underflow (debug
+        // panic on the serving worker); it must be a CacheConfigError.
+        assert_eq!(
+            ModelSide::trash_for(0).unwrap_err(),
+            CacheConfigError::NoTrashSlot { capacity: 0 }
+        );
+        assert!(ModelSide::trash_for(1).is_err());
+        assert_eq!(ModelSide::trash_for(2).unwrap(), 1);
     }
 
     #[test]

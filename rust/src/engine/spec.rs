@@ -42,7 +42,10 @@ use crate::metrics::Recorder;
 use crate::objective::{select_draft_width, AcceptanceStats, LatencyModel};
 use crate::predictor::DepthPredictor;
 use crate::pruning::prune_for_objective;
-use crate::runtime::{plan_batches, ExecMode, ForwardReply, ForwardRequest, Pending, Runtime};
+use crate::runtime::{
+    plan_batches, plan_batches_enveloped, ExecMode, ForwardReply, ForwardRequest, Pending,
+    Runtime,
+};
 use crate::sampling::{
     categorical, softmax_inplace, stochastic_accept, top_k, AcceptOutcome, XorShiftRng,
 };
@@ -53,11 +56,33 @@ use super::session::{Session, SharedCachePool};
 use super::task::{self, DecodeTask, StepEngine, StepOutcome, TaskState};
 use super::Generation;
 
-/// A head draft issued ahead of time (or satisfied by a tail-draft hit).
+/// Sliding window for the per-task `stage.*` / `batch.*` series. The
+/// profile-guided plan search reads their means, so an unbounded series
+/// would let a single cold-start outlier — the lazy graph-compile stall
+/// of a task's first iteration — skew the chosen plan for the task's
+/// whole lifetime; windowing ages it out after `STAGE_WINDOW` steady
+/// iterations.
+const STAGE_WINDOW: usize = 32;
+
+/// Where a head draft's logits are (or will come from).
+enum HeadState {
+    /// In-flight device call (the AOT-head overlap).
+    Pending(Pending<ForwardReply>),
+    /// Reply already materialised (tail-draft hit, a blocking plan, or a
+    /// packed batched head call that already resolved).
+    Ready(HeadReply),
+    /// Slot claimed but no call issued yet: the batched draft phase
+    /// packs every session's deferred head into one width-padded drafter
+    /// call at the start of the next round (DESIGN.md §11). A stranded
+    /// deferred head (its session fell out of the batched round) is
+    /// resolved by a solo width-1 call instead.
+    Deferred,
+}
+
+/// A head draft issued ahead of time, satisfied by a tail-draft hit, or
+/// deferred into the next batched round's packed head call.
 struct PendingHead {
-    /// In-flight call, or `None` when the reply is already materialised.
-    pending: Option<Pending<ForwardReply>>,
-    reply: Option<HeadReply>,
+    state: HeadState,
     /// Drafter slot holding the root's K/V.
     slot: u32,
     /// The token this head draft evaluated (must equal the next root).
@@ -117,6 +142,123 @@ struct VerifyParts {
     mask: Vec<f32>,
 }
 
+/// The unpadded drafter-call inputs for one draft-stage step of one
+/// session — a deferred head draft, or one tree-growth level:
+/// `tokens.len()` real rows, mask rows over the full drafter cache
+/// capacity. Solo stepping pads these into a session-local call; the
+/// batched scheduler concatenates many sessions' same-level parts into
+/// one block-diagonal packed drafter call (DESIGN.md §11), exactly as
+/// [`VerifyParts`] does for the verifier side.
+struct DraftParts {
+    tokens: Vec<u32>,
+    positions: Vec<i32>,
+    slots: Vec<u32>,
+    /// `tokens.len() × cache_capacity` visibility rows.
+    mask: Vec<f32>,
+}
+
+/// Incremental tree growth, one level at a time, so the draft stage can
+/// pause at level boundaries — where the batched scheduler packs every
+/// ready session's same-level rows into one drafter call.
+enum Grower {
+    /// Equal-growth (§4.2): the frontier supplies each step's `width`
+    /// globally-best expansions.
+    Egt {
+        frontier: Frontier,
+        /// Node-count cap (over-grow ×2 under pruning; see `begin_draft`).
+        cap: usize,
+        /// Equal-growth width per step.
+        width: usize,
+        /// Growth steps still allowed (the chosen depth).
+        steps_left: usize,
+    },
+    /// Static baseline shapes, materialised level by level.
+    Static {
+        shape: TreeShape,
+        /// Tree node per shape id (0 = root).
+        node_of: Vec<Option<NodeId>>,
+        /// Shape ids grouped by depth.
+        levels: Vec<Vec<usize>>,
+        next_level: usize,
+    },
+}
+
+impl Grower {
+    /// Materialises the next level's nodes into `st.tree` (empty when
+    /// growth is finished). The nodes still need drafter evaluation.
+    fn next_nodes(&mut self, st: &mut IterState) -> Vec<NodeId> {
+        match self {
+            Grower::Egt { frontier, cap, width, steps_left } => {
+                if *steps_left == 0 {
+                    return Vec::new();
+                }
+                let remaining = cap.saturating_sub(st.tree.len());
+                if remaining == 0 {
+                    return Vec::new();
+                }
+                let w = (*width).min(remaining);
+                let before = st.tree.len();
+                let ids = grow_step(&mut st.tree, frontier, w);
+                if ids.is_empty() {
+                    return Vec::new();
+                }
+                st.push_nodes(st.tree.len() - before);
+                *steps_left -= 1;
+                ids
+            }
+            Grower::Static { shape, node_of, levels, next_level } => {
+                let Some(level) = levels.get(*next_level) else { return Vec::new() };
+                *next_level += 1;
+                let mut new_nodes = Vec::new();
+                for &sid in level {
+                    let sn = shape.nodes[sid - 1];
+                    let Some(parent) = node_of[sn.parent] else { continue };
+                    let Some(cands) = &st.cands[parent] else { continue };
+                    let Some(&(token, prob)) = cands.get(sn.rank) else { continue };
+                    let before = st.tree.len();
+                    let id = st.tree.add_node(parent, token, prob);
+                    st.push_nodes(st.tree.len() - before);
+                    node_of[sid] = Some(id);
+                    new_nodes.push(id);
+                }
+                if new_nodes.is_empty() {
+                    // Dead level (no parent produced candidates): growth
+                    // ends, matching the level-loop `break` semantics.
+                    *next_level = levels.len();
+                }
+                new_nodes
+            }
+        }
+    }
+
+    /// Feeds a freshly drafted level back into the growth state (EGT
+    /// pushes the new nodes' candidates onto the frontier; static shapes
+    /// read `st.cands` directly at the next level).
+    fn absorb(&mut self, st: &IterState, ids: &[NodeId]) {
+        if let Grower::Egt { frontier, .. } = self {
+            for &id in ids {
+                let cands = st.cands[id].clone().unwrap_or_default();
+                frontier.push_candidates(&st.tree, id, cands);
+            }
+        }
+    }
+}
+
+/// Draft-stage state carried across the per-level drafter calls, from
+/// [`SpecTask::begin_draft`] to [`SpecTask::finish_draft`].
+struct DraftInFlight {
+    st: IterState,
+    grower: Grower,
+    root_pos: i32,
+    /// Per-growth-step drafter widths (Eq. 3 denominator bookkeeping).
+    draft_widths: Vec<usize>,
+    /// The ⟨W⟩ the width selector chose for this iteration.
+    draft_width: usize,
+    /// Nodes of the level currently awaiting drafter logits (call order).
+    pending_nodes: Vec<NodeId>,
+    done: bool,
+}
+
 /// Iteration state carried across the verification device call, from
 /// [`SpecTask::prepare_verify`] to [`SpecTask::complete_verify`].
 struct VerifyPrep {
@@ -133,6 +275,37 @@ struct VerifyPrep {
     /// (leaf, token, slot) of in-flight AOT tail drafts.
     tail: Vec<(NodeId, u32, u32)>,
     tail_pending: Option<Pending<ForwardReply>>,
+}
+
+/// Concatenates per-member unpadded rows — `(tokens, positions, slots,
+/// mask)` each — into one width-padded packed device call against a
+/// shared cache: block-diagonal mask, padding rows scattered to the
+/// trash slot (the caches' reserved last slot). Shared by the batched
+/// verify (§9) and batched draft (§11) phases.
+fn packed_request(
+    model: String,
+    cache: crate::runtime::CacheId,
+    capacity: usize,
+    width: usize,
+    member_parts: &[(&[u32], &[i32], &[u32], &[f32])],
+    mode: ExecMode,
+) -> ForwardRequest {
+    let trash = capacity as i32 - 1;
+    let mut tokens: Vec<i32> = Vec::with_capacity(width);
+    let mut positions: Vec<i32> = Vec::with_capacity(width);
+    let mut slots: Vec<i32> = Vec::with_capacity(width);
+    let mut blocks: Vec<&[f32]> = Vec::with_capacity(member_parts.len());
+    for &(t, p, s, m) in member_parts {
+        tokens.extend(t.iter().map(|&x| x as i32));
+        positions.extend_from_slice(p);
+        slots.extend(s.iter().map(|&x| x as i32));
+        blocks.push(m);
+    }
+    let mask = crate::tree::pack_block_diagonal(&blocks, capacity, width);
+    tokens.resize(width, 0);
+    positions.resize(width, 0);
+    slots.resize(width, trash);
+    ForwardRequest { model, width, cache, tokens, positions, slots, mask, mode }
 }
 
 /// Candidate children of a node from its drafter logits: top-k at T = 0,
@@ -181,13 +354,38 @@ struct SpecShared {
     predictor: Option<DepthPredictor>,
 }
 
+/// The packed-call shape a batched engine's plan search prices against
+/// (sessions × per-session rows per stage; DESIGN.md §9/§11).
+fn batch_shape(cfg: &EngineConfig) -> scheduler::BatchShape {
+    scheduler::BatchShape {
+        sessions: cfg.batch.max_sessions,
+        verify_rows: cfg.max_verify,
+        draft_width: cfg.max_width,
+        batch_draft: cfg.batch.batch_draft,
+    }
+}
+
 /// Profile-guided plan re-search (§5.2) shared by task finish and the
 /// explicit calibration entry point: batched engines search over the
-/// amortized verify cost, solo engines over the raw one.
+/// amortized packed-call costs, solo engines over the raw ones.
+///
+/// When the recorder saw batched rounds, `stage.verify` (and, under
+/// batched drafting, `stage.tree_draft`) already measure the *packed*
+/// call, and `batch.sessions` / `batch.draft_sessions` the rider counts
+/// — so the per-session charge is the measured call split across the
+/// measured riders. A batch-configured engine that only ever ran solo
+/// falls back to modelling the packed call from the latency curves.
 fn research_plan_into(sh: &mut SpecShared, cfg: &EngineConfig, rec: &Recorder) {
     let d = StageDurations::from_recorder(rec, sh.tail_hit_rate);
     sh.plan = if cfg.batch.enabled {
-        scheduler::search_best_plan_batched(&d, cfg.batch.max_sessions).0
+        let verify_riders = rec.mean("batch.sessions");
+        let draft_riders = rec.mean("batch.draft_sessions");
+        if verify_riders.is_finite() || draft_riders.is_finite() {
+            let split = scheduler::split_measured_batched(&d, verify_riders, draft_riders);
+            scheduler::search_best_plan(&split).0
+        } else {
+            scheduler::search_best_plan_batched(&d, &batch_shape(cfg), &sh.lat).0
+        }
     } else {
         scheduler::search_best_plan(&d).0
     };
@@ -221,14 +419,11 @@ impl SpecDecoder {
             cfg.max_verify,
             width_for(4).unwrap(),
         );
-        // Under cross-session batching the verify stage amortizes across
-        // the sessions sharing the call; resolve the plan against the
-        // per-session (amortized) durations.
+        // Under cross-session batching the packed stages amortize across
+        // the sessions sharing each call; resolve the plan against the
+        // per-session (amortized, sub-linear — not free) durations.
         let plan = if cfg.batch.enabled {
-            scheduler::resolve(
-                cfg.schedule,
-                &scheduler::amortize_verify(&est, cfg.batch.max_sessions),
-            )
+            scheduler::resolve_batched(cfg.schedule, &est, &batch_shape(&cfg), &lat)
         } else {
             scheduler::resolve(cfg.schedule, &est)
         };
@@ -336,176 +531,19 @@ pub struct SpecTask {
 
 impl SpecTask {
     // ------------------------------------------------------------------
-    // Drafting
+    // Drafting — split into prepare/submit/complete halves, like the
+    // verify stage, so the batched scheduler can pack every ready
+    // session's same-level rows into one drafter call (DESIGN.md §11).
     // ------------------------------------------------------------------
 
-    /// Evaluates `nodes` (all newly added, same growth step) through the
-    /// drafter. Fills slots/cands/dists.
-    fn draft_nodes(
-        &mut self,
-        st: &mut IterState,
-        nodes: &[NodeId],
-        root_pos: i32,
-    ) -> crate::Result<bool> {
-        let n = nodes.len();
-        let Some(width) = width_for(n) else {
-            anyhow::bail!("draft step of {n} tokens exceeds compiled widths")
-        };
-        let Some(slots) = self.sess.drafter.slots.alloc(n) else {
-            return Ok(false); // cache exhausted — caller stops growth
-        };
-        for (i, &node) in nodes.iter().enumerate() {
-            st.dslots[node] = Some(slots[i]);
-        }
-        let tokens: Vec<u32> = nodes.iter().map(|&id| st.tree.token(id)).collect();
-        let positions: Vec<i32> =
-            nodes.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
-        let mask = self
-            .sess
-            .drafter
-            .slots
-            .mask_builder()
-            .build(&st.tree, nodes, &st.dslots, width)
-            .to_vec();
-        let req = self.sess.drafter.padded_request(
-            width,
-            &tokens,
-            &positions,
-            &slots,
-            &mask,
-            self.sess.exec_mode(),
-        );
-        let reply = self.rt.forward(req)?;
-        let vocab = self.sess.drafter.spec.vocab;
-        let temp = self.cfg.sampling.temperature;
-        let keep_dist = temp > 0.0;
-        for (i, &node) in nodes.iter().enumerate() {
-            let row = &reply.logits[i * vocab..(i + 1) * vocab];
-            let cands =
-                candidates(temp, row, self.cfg.branch_candidates, &mut self.sess.rng);
-            st.cands[node] = Some(cands);
-            if keep_dist {
-                st.dists[node] = Some(temp_probs(temp, row));
-            }
-        }
-        Ok(true)
-    }
-
-    /// Grows the draft tree according to the configured structure.
-    /// Returns the per-step drafter widths (for the Eq. 3 denominator).
-    fn build_tree(
-        &mut self,
-        sh: &mut SpecShared,
-        st: &mut IterState,
-        depth: usize,
-        width: usize,
-        root_pos: i32,
-    ) -> crate::Result<Vec<usize>> {
-        let mut draft_widths = Vec::new();
-        match self.cfg.tree {
-            TreeStructure::Egt => {
-                let mut frontier = Frontier::new(depth);
-                let root_cands = st.cands[0].clone().unwrap_or_default();
-                frontier.push_candidates(&st.tree, 0, root_cands);
-                // With pruning on, over-grow (the DP trims to budget);
-                // without it the grown tree itself must stay verifiable.
-                let cap = if self.cfg.prune {
-                    self.cfg.max_verify * 2
-                } else {
-                    self.cfg.max_verify
-                }
-                .min(64 + 64 * self.cfg.prune as usize);
-                for _ in 0..depth {
-                    let remaining = cap.saturating_sub(st.tree.len());
-                    if remaining == 0 {
-                        break;
-                    }
-                    let w = width.min(remaining);
-                    let before = st.tree.len();
-                    let ids = grow_step(&mut st.tree, &mut frontier, w);
-                    if ids.is_empty() {
-                        break;
-                    }
-                    st.push_nodes(st.tree.len() - before);
-                    if !self.draft_nodes(st, &ids, root_pos)? {
-                        break;
-                    }
-                    draft_widths.push(width_for(ids.len()).unwrap_or(64));
-                    for &id in &ids {
-                        let cands = st.cands[id].clone().unwrap_or_default();
-                        frontier.push_candidates(&st.tree, id, cands);
-                    }
-                }
-            }
-            _ => {
-                let shape = self.static_shape(sh);
-                // Map shape ids (0 = root) to tree node ids.
-                let mut node_of: Vec<Option<NodeId>> = vec![None; shape.len() + 1];
-                node_of[0] = Some(0);
-                for level in shape.levels() {
-                    let mut new_nodes = Vec::new();
-                    for sid in level {
-                        let sn = shape.nodes[sid - 1];
-                        let Some(parent) = node_of[sn.parent] else { continue };
-                        let Some(cands) = &st.cands[parent] else { continue };
-                        let Some(&(token, prob)) = cands.get(sn.rank) else { continue };
-                        let before = st.tree.len();
-                        let id = st.tree.add_node(parent, token, prob);
-                        st.push_nodes(st.tree.len() - before);
-                        node_of[sid] = Some(id);
-                        new_nodes.push(id);
-                    }
-                    if new_nodes.is_empty() {
-                        break;
-                    }
-                    if !self.draft_nodes(st, &new_nodes, root_pos)? {
-                        break;
-                    }
-                    draft_widths.push(width_for(new_nodes.len()).unwrap_or(64));
-                }
-            }
-        }
-        Ok(draft_widths)
-    }
-
-    /// The static shape for the configured baseline structure.
-    fn static_shape(&mut self, sh: &mut SpecShared) -> TreeShape {
-        let budget = self.cfg.max_verify.min(64).saturating_sub(1).max(1);
-        match self.cfg.tree {
-            TreeStructure::Sequence => TreeShape::sequence(self.cfg.max_depth.min(budget)),
-            TreeStructure::KAry => {
-                TreeShape::k_ary(self.cfg.max_width, self.cfg.max_depth, budget)
-            }
-            TreeStructure::Sequoia => {
-                if let Some((b, shape)) = &sh.sequoia_cache {
-                    if *b == budget {
-                        return shape.clone();
-                    }
-                }
-                let shape = TreeShape::sequoia(&sh.stats.accept_by_rank, budget);
-                sh.sequoia_cache = Some((budget, shape.clone()));
-                shape
-            }
-            TreeStructure::Egt => unreachable!("EGT has no static shape"),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // The decoding iteration
-    // ------------------------------------------------------------------
-
-    /// First half of one iteration (Fig. 9): resolves the head draft,
-    /// selects ⟨D, W⟩, grows the tree, prunes it, and assembles the
-    /// verification rows — everything up to (but excluding) the verifier
-    /// device call, so the batched scheduler can pack many sessions' rows
-    /// into one call (DESIGN.md §9). Returns the carry-over state and the
-    /// unpadded device-call inputs.
-    #[allow(clippy::too_many_lines)]
-    fn prepare_verify(
+    /// First half of the draft stage: resolves the head draft's logits,
+    /// selects ⟨D, W⟩, and seeds the iteration state + growth plan.
+    /// No tree-level drafter call is issued here.
+    fn begin_draft(
         &mut self,
         head: PendingHead,
         sh: &mut SpecShared,
-    ) -> crate::Result<(VerifyPrep, VerifyParts)> {
+    ) -> crate::Result<DraftInFlight> {
         let root_pos = (self.sess.committed_len() - 1) as i32;
         let root_token = *self.sess.committed.last().unwrap();
         debug_assert_eq!(head.token, root_token);
@@ -513,16 +551,36 @@ impl SpecTask {
 
         // -------- head draft (possibly already satisfied) ----------------
         let t0 = Instant::now();
-        let head_logits = match (head.reply, head.pending) {
-            (Some(r), _) => r.logits,
-            (None, Some(p)) => {
+        let head_logits = match head.state {
+            HeadState::Ready(r) => r.logits,
+            HeadState::Pending(p) => {
                 let reply = p.wait()?;
                 let v = self.sess.drafter.spec.vocab;
                 reply.logits[..v].to_vec()
             }
-            (None, None) => unreachable!("head draft neither pending nor ready"),
+            HeadState::Deferred => {
+                // Stranded deferred head (this session fell out of the
+                // batched round, or a solo driver stepped it): evaluate
+                // with its own width-1 call.
+                let parts = self.deferred_head_parts(head.slot, head.token);
+                let req = self.sess.drafter.padded_request(
+                    1,
+                    &parts.tokens,
+                    &parts.positions,
+                    &parts.slots,
+                    &parts.mask,
+                    self.sess.exec_mode(),
+                );
+                let reply = self.rt.forward(req)?;
+                let v = self.sess.drafter.spec.vocab;
+                reply.logits[..v].to_vec()
+            }
         };
-        self.rec.record("stage.head_draft", t0.elapsed().as_secs_f64());
+        self.rec.record_windowed(
+            "stage.head_draft",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
 
         let mut st = IterState::new(root_token);
         st.dslots[0] = Some(head.slot);
@@ -574,10 +632,209 @@ impl SpecTask {
         self.rec.record("depth", depth as f64);
         self.rec.record("width", width as f64);
 
-        // -------- tree drafting ------------------------------------------
+        let grower = match self.cfg.tree {
+            TreeStructure::Egt => {
+                let mut frontier = Frontier::new(depth);
+                let root_cands = st.cands[0].clone().unwrap_or_default();
+                frontier.push_candidates(&st.tree, 0, root_cands);
+                // With pruning on, over-grow (the DP trims to budget);
+                // without it the grown tree itself must stay verifiable.
+                let cap = if self.cfg.prune {
+                    self.cfg.max_verify * 2
+                } else {
+                    self.cfg.max_verify
+                }
+                .min(64 + 64 * self.cfg.prune as usize);
+                Grower::Egt { frontier, cap, width, steps_left: depth }
+            }
+            _ => {
+                let shape = self.static_shape(sh);
+                let levels = shape.levels();
+                // Map shape ids (0 = root) to tree node ids.
+                let mut node_of: Vec<Option<NodeId>> = vec![None; shape.len() + 1];
+                node_of[0] = Some(0);
+                Grower::Static { shape, node_of, levels, next_level: 0 }
+            }
+        };
+        Ok(DraftInFlight {
+            st,
+            grower,
+            root_pos,
+            draft_widths: Vec::new(),
+            draft_width: width,
+            pending_nodes: Vec::new(),
+            done: false,
+        })
+    }
+
+    /// Grows the next tree level and assembles its unpadded drafter-call
+    /// rows. `None` once growth is finished — the frontier dried up, the
+    /// depth budget is spent, or the drafter cache cannot host another
+    /// level (growth stops gracefully; the grown-so-far tree verifies).
+    fn next_draft_parts(
+        &mut self,
+        d: &mut DraftInFlight,
+    ) -> crate::Result<Option<DraftParts>> {
+        if d.done {
+            return Ok(None);
+        }
+        debug_assert!(d.pending_nodes.is_empty(), "draft level already in flight");
+        let ids = d.grower.next_nodes(&mut d.st);
+        if ids.is_empty() {
+            d.done = true;
+            return Ok(None);
+        }
+        let n = ids.len();
+        anyhow::ensure!(
+            width_for(n).is_some(),
+            "draft step of {n} tokens exceeds compiled widths"
+        );
+        let Some(slots) = self.sess.drafter.slots.alloc(n) else {
+            d.done = true; // cache exhausted — growth stops
+            return Ok(None);
+        };
+        debug_assert!(self.sess.drafter.slots.owns_all(&slots));
+        for (i, &node) in ids.iter().enumerate() {
+            d.st.dslots[node] = Some(slots[i]);
+        }
+        let tokens: Vec<u32> = ids.iter().map(|&id| d.st.tree.token(id)).collect();
+        let positions: Vec<i32> =
+            ids.iter().map(|&id| d.root_pos + d.st.tree.depth(id) as i32).collect();
+        let mask = self
+            .sess
+            .drafter
+            .slots
+            .mask_builder()
+            .build(&d.st.tree, &ids, &d.st.dslots, n)
+            .to_vec();
+        // The drafter-side block-diagonal invariant batched drafting
+        // relies on: this session's rows reference only slots it owns.
+        debug_assert!(crate::tree::rows_owned(
+            &mask,
+            self.sess.drafter.spec.cache_capacity,
+            &self.sess.drafter.slots.ownership(),
+        ));
+        d.pending_nodes = ids;
+        Ok(Some(DraftParts { tokens, positions, slots, mask }))
+    }
+
+    /// Absorbs the drafter logits of the level issued by the last
+    /// [`SpecTask::next_draft_parts`]: candidate extraction, (at T > 0)
+    /// distribution capture, frontier feedback, Eq. 3 bookkeeping.
+    fn complete_draft_level(&mut self, d: &mut DraftInFlight, logits: &[f32]) {
+        let ids = std::mem::take(&mut d.pending_nodes);
+        let vocab = self.sess.drafter.spec.vocab;
+        let temp = self.cfg.sampling.temperature;
+        let keep_dist = temp > 0.0;
+        for (i, &node) in ids.iter().enumerate() {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let cands =
+                candidates(temp, row, self.cfg.branch_candidates, &mut self.sess.rng);
+            d.st.cands[node] = Some(cands);
+            if keep_dist {
+                d.st.dists[node] = Some(temp_probs(temp, row));
+            }
+        }
+        d.draft_widths.push(width_for(ids.len()).unwrap_or(64));
+        d.grower.absorb(&d.st, &ids);
+    }
+
+    /// The packed-call row for a deferred head draft: the root token at
+    /// its committed position, visible to the committed prefix plus its
+    /// own slot. (Bookkeeping committed the accepted path before the
+    /// head was deferred, so prefix + self is exactly the visibility the
+    /// eagerly-submitted AOT head would have had — bit-identical
+    /// logits.)
+    fn deferred_head_parts(&mut self, slot: u32, token: u32) -> DraftParts {
+        let root_pos = (self.sess.committed_len() - 1) as i32;
+        // One row: the committed prefix plus the head's own slot —
+        // assembled directly from the builder's prefix row (cloning the
+        // whole builder would copy its level-sized scratch buffer every
+        // round for nothing).
+        let mut mask = self.sess.drafter.slots.mask_builder().prefix_row().to_vec();
+        mask[slot as usize] = 1.0;
+        debug_assert_eq!(mask.len(), self.sess.drafter.spec.cache_capacity);
+        debug_assert!(crate::tree::rows_owned(
+            &mask,
+            self.sess.drafter.spec.cache_capacity,
+            &self.sess.drafter.slots.ownership(),
+        ));
+        DraftParts { tokens: vec![token], positions: vec![root_pos], slots: vec![slot], mask }
+    }
+
+    /// The static shape for the configured baseline structure.
+    fn static_shape(&mut self, sh: &mut SpecShared) -> TreeShape {
+        let budget = self.cfg.max_verify.min(64).saturating_sub(1).max(1);
+        match self.cfg.tree {
+            TreeStructure::Sequence => TreeShape::sequence(self.cfg.max_depth.min(budget)),
+            TreeStructure::KAry => {
+                TreeShape::k_ary(self.cfg.max_width, self.cfg.max_depth, budget)
+            }
+            TreeStructure::Sequoia => {
+                if let Some((b, shape)) = &sh.sequoia_cache {
+                    if *b == budget {
+                        return shape.clone();
+                    }
+                }
+                let shape = TreeShape::sequoia(&sh.stats.accept_by_rank, budget);
+                sh.sequoia_cache = Some((budget, shape.clone()));
+                shape
+            }
+            TreeStructure::Egt => unreachable!("EGT has no static shape"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The decoding iteration
+    // ------------------------------------------------------------------
+
+    /// First half of one iteration (Fig. 9) on the *solo* path: resolves
+    /// the head draft, grows the tree level by level (one session-local
+    /// drafter call per level), prunes it, and assembles the
+    /// verification rows — everything up to (but excluding) the verifier
+    /// device call. The batched scheduler runs the same halves
+    /// ([`SpecTask::begin_draft`] → per-level parts →
+    /// [`SpecTask::finish_draft`]) but packs every ready session's
+    /// same-level rows into one drafter call (DESIGN.md §11).
+    fn prepare_verify(
+        &mut self,
+        head: PendingHead,
+        sh: &mut SpecShared,
+    ) -> crate::Result<(VerifyPrep, VerifyParts)> {
+        let mut d = self.begin_draft(head, sh)?;
         let t0 = Instant::now();
-        let draft_widths = self.build_tree(sh, &mut st, depth, width, root_pos)?;
-        self.rec.record("stage.tree_draft", t0.elapsed().as_secs_f64());
+        while let Some(parts) = self.next_draft_parts(&mut d)? {
+            let n = parts.tokens.len();
+            let width = width_for(n).expect("validated by next_draft_parts");
+            let req = self.sess.drafter.padded_request(
+                width,
+                &parts.tokens,
+                &parts.positions,
+                &parts.slots,
+                &parts.mask,
+                self.sess.exec_mode(),
+            );
+            let reply = self.rt.forward(req)?;
+            let vocab = self.sess.drafter.spec.vocab;
+            self.complete_draft_level(&mut d, &reply.logits[..n * vocab]);
+        }
+        self.rec.record_windowed(
+            "stage.tree_draft",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
+        self.finish_draft(d, sh)
+    }
+
+    /// Second half of the draft stage, after every level is drafted:
+    /// verification-width pruning (O3) and verify-row assembly. Shared
+    /// verbatim by the solo and batched paths.
+    fn finish_draft(
+        &mut self,
+        d: DraftInFlight,
+        sh: &mut SpecShared,
+    ) -> crate::Result<(VerifyPrep, VerifyParts)> {
+        let DraftInFlight { mut st, root_pos, draft_widths, draft_width, .. } = d;
         self.rec.record("tree_size", st.tree.len() as f64);
 
         // -------- pruning (O3) -------------------------------------------
@@ -600,7 +857,11 @@ impl SpecTask {
                 .ok_or_else(|| anyhow::anyhow!("tree of {} nodes unverifiable", keep.len()))?;
             (keep, w)
         };
-        self.rec.record("stage.cpu_build", t0.elapsed().as_secs_f64());
+        self.rec.record_windowed(
+            "stage.cpu_build",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
         self.rec.record("w_verify", w_verify as f64);
 
         // -------- verification row assembly ------------------------------
@@ -639,7 +900,7 @@ impl SpecTask {
             w_verify,
             root_pos,
             draft_widths,
-            draft_width: width,
+            draft_width,
             tail: Vec::new(),
             tail_pending: None,
         };
@@ -715,7 +976,11 @@ impl SpecTask {
                 prep.tail = tail;
             }
         }
-        self.rec.record("stage.tail_submit", t_tail.elapsed().as_secs_f64());
+        self.rec.record_windowed(
+            "stage.tail_submit",
+            t_tail.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
         Ok(())
     }
 
@@ -725,6 +990,12 @@ impl SpecTask {
     /// resolution, the next head draft, and slot bookkeeping. Returns the
     /// committed tokens, the next pending head, and the bonus context's
     /// hidden state.
+    ///
+    /// `defer_head`: under stage-aligned batched drafting the next head
+    /// draft only *claims its slot* here — keeping slot numbering
+    /// identical to the solo path — while the device call is packed with
+    /// every other session's head at the start of the next round's draft
+    /// phase (DESIGN.md §11).
     #[allow(clippy::too_many_lines)]
     fn complete_verify(
         &mut self,
@@ -732,6 +1003,7 @@ impl SpecTask {
         logits: &[f32],
         hidden_rows: &[f32],
         sh: &mut SpecShared,
+        defer_head: bool,
     ) -> crate::Result<(Vec<u32>, Option<PendingHead>, Vec<f32>)> {
         let VerifyPrep { st, keep, root_pos, draft_widths, draft_width, tail, tail_pending, .. } =
             prep;
@@ -791,7 +1063,7 @@ impl SpecTask {
             }
         }
         let accepted_draft = accepted_path.len() - 1; // excludes root
-        self.rec.record("stage.accept", t0.elapsed().as_secs_f64());
+        self.rec.record_windowed("stage.accept", t0.elapsed().as_secs_f64(), STAGE_WINDOW);
         self.rec.record("accepted", (accepted_draft + 1) as f64);
 
         // Coverage stats for the width selector: growth step d covered the
@@ -821,7 +1093,7 @@ impl SpecTask {
             // The tail draft finished during the acceptance walk (device
             // FIFO); this wait is usually instant.
             let r = p.wait()?;
-            self.rec.record("stage.tail_draft", r.exec_seconds);
+            self.rec.record_windowed("stage.tail_draft", r.exec_seconds, STAGE_WINDOW);
             tail_rows = Some(r);
         }
         let mut next_head: Option<PendingHead> = None;
@@ -833,8 +1105,7 @@ impl SpecTask {
                     // The speculative tail draft already evaluated the next
                     // root: reuse its logits row and slot.
                     next_head = Some(PendingHead {
-                        pending: None,
-                        reply: Some(HeadReply {
+                        state: HeadState::Ready(HeadReply {
                             logits: rows.logits[i * v..(i + 1) * v].to_vec(),
                         }),
                         slot,
@@ -853,39 +1124,64 @@ impl SpecTask {
             // AOT-head plan this submission happens *before* bookkeeping so
             // the drafter runs while the CPU cleans up.
             if let Some(slot) = self.sess.drafter.slots.alloc(1).map(|v| v[0]) {
-                let mut dsl = st.dslots.clone();
-                let mut tmp_tree = st.tree.clone();
-                let id = tmp_tree.add_node(cur, bonus, 1.0);
-                dsl.push(Some(slot));
-                let mask = self
-                    .sess
-                    .drafter
-                    .slots
-                    .mask_builder()
-                    .build(&tmp_tree, &[id], &dsl, 1)
-                    .to_vec();
-                let positions = vec![root_pos + tmp_tree.depth(id) as i32];
-                let req = self.sess.drafter.padded_request(
-                    1,
-                    &[bonus],
-                    &positions,
-                    &[slot],
-                    &mask,
-                    self.sess.exec_mode(),
-                );
-                let pending = self.rt.submit(req)?;
-                let mut head =
-                    PendingHead { pending: Some(pending), reply: None, slot, token: bonus };
-                if !self.plan.aot_head {
-                    // Sequential plan: block right here.
-                    let reply = head.pending.take().unwrap().wait()?;
-                    let v = self.sess.drafter.spec.vocab;
-                    head.reply = Some(HeadReply { logits: reply.logits[..v].to_vec() });
+                if defer_head {
+                    // Batched rounds: claim the slot now (identical slot
+                    // numbering to the solo path) but let the next
+                    // round's draft phase pack the call with every other
+                    // session's head. Bookkeeping below commits the
+                    // accepted path, so the deferred mask — prefix +
+                    // self — sees exactly what the eager mask would.
+                    next_head =
+                        Some(PendingHead { state: HeadState::Deferred, slot, token: bonus });
+                } else {
+                    let mut dsl = st.dslots.clone();
+                    let mut tmp_tree = st.tree.clone();
+                    let id = tmp_tree.add_node(cur, bonus, 1.0);
+                    dsl.push(Some(slot));
+                    let mask = self
+                        .sess
+                        .drafter
+                        .slots
+                        .mask_builder()
+                        .build(&tmp_tree, &[id], &dsl, 1)
+                        .to_vec();
+                    let positions = vec![root_pos + tmp_tree.depth(id) as i32];
+                    let req = self.sess.drafter.padded_request(
+                        1,
+                        &[bonus],
+                        &positions,
+                        &[slot],
+                        &mask,
+                        self.sess.exec_mode(),
+                    );
+                    let pending = self.rt.submit(req)?;
+                    let mut head = PendingHead {
+                        state: HeadState::Pending(pending),
+                        slot,
+                        token: bonus,
+                    };
+                    if !self.plan.aot_head {
+                        // Sequential plan: block right here.
+                        let HeadState::Pending(p) =
+                            std::mem::replace(&mut head.state, HeadState::Deferred)
+                        else {
+                            unreachable!("head was just created pending")
+                        };
+                        let reply = p.wait()?;
+                        let v = self.sess.drafter.spec.vocab;
+                        head.state = HeadState::Ready(HeadReply {
+                            logits: reply.logits[..v].to_vec(),
+                        });
+                    }
+                    next_head = Some(head);
                 }
-                next_head = Some(head);
             }
         }
-        self.rec.record("stage.head_submit", t0.elapsed().as_secs_f64());
+        self.rec.record_windowed(
+            "stage.head_submit",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
 
         // -------- bookkeeping ---------------------------------------------
         let t0 = Instant::now();
@@ -917,7 +1213,11 @@ impl SpecTask {
         let mut out: Vec<u32> = accepted_path[1..].iter().map(|&n| st.tree.token(n)).collect();
         out.push(bonus);
         self.sess.committed.extend_from_slice(&out);
-        self.rec.record("stage.bookkeep", t0.elapsed().as_secs_f64());
+        self.rec.record_windowed(
+            "stage.bookkeep",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
 
         Ok((out, next_head, hidden))
     }
@@ -947,8 +1247,7 @@ impl SpecTask {
         let reply = self.rt.forward(req)?;
         let v = self.sess.drafter.spec.vocab;
         Ok(PendingHead {
-            pending: None,
-            reply: Some(HeadReply { logits: reply.logits[..v].to_vec() }),
+            state: HeadState::Ready(HeadReply { logits: reply.logits[..v].to_vec() }),
             slot,
             token: root_token,
         })
@@ -1035,8 +1334,8 @@ impl SpecTask {
         let verify_pending = self.rt.submit(vreq)?;
         self.submit_tail(&mut prep)?;
         let vreply = verify_pending.wait()?;
-        self.rec.record("stage.verify", t0.elapsed().as_secs_f64());
-        self.rec.record("stage.verify_exec", vreply.exec_seconds);
+        self.rec.record_windowed("stage.verify", t0.elapsed().as_secs_f64(), STAGE_WINDOW);
+        self.rec.record_windowed("stage.verify_exec", vreply.exec_seconds, STAGE_WINDOW);
         let n = prep.keep.len();
         let vocab = self.sess.target.spec.vocab;
         let d_model = self.sess.target.spec.d_model;
@@ -1045,6 +1344,7 @@ impl SpecTask {
             &vreply.logits[..n * vocab],
             &vreply.hidden[..n * d_model],
             &mut sh,
+            false,
         )?;
         let outcome = self.conclude_iteration(out, next_head, hidden, &mut sh, t_iter);
         drop(sh);
@@ -1062,7 +1362,7 @@ impl SpecTask {
         sh: &mut SpecShared,
         t_iter: Instant,
     ) -> StepOutcome {
-        self.rec.record("stage.iter", t_iter.elapsed().as_secs_f64());
+        self.rec.record_windowed("stage.iter", t_iter.elapsed().as_secs_f64(), STAGE_WINDOW);
         self.iterations += 1;
         // Depth-predictor training data: the hidden state seen *before*
         // this iteration, labelled with how many draft tokens it accepted.
@@ -1217,14 +1517,22 @@ impl StepEngine for SpecDecoder {
         }))
     }
 
-    /// Cross-session batched scheduling round (DESIGN.md §9).
+    /// Cross-session batched scheduling round (DESIGN.md §9 + §11).
     ///
-    /// Sessions mid-iteration run the draft/prune half per session, then
-    /// their verification rows are packed — block-diagonal mask, one
-    /// width-padded call per [`plan_batches`] group against the shared
-    /// target cache — and the reply's rows are split back into per-task
-    /// acceptance walks. Prefilling/finished/foreign tasks fall back to
-    /// serial stepping inside the same round.
+    /// The round is *stage-aligned* (DESIGN.md §11): first a **draft
+    /// phase** — every ready session's deferred head rows ride one
+    /// packed drafter call, then the sessions grow their trees level by
+    /// level with each level's rows packed into one drafter call per
+    /// [`plan_batches_enveloped`] group — then a CPU **build phase**
+    /// (per-session pruning + verify-row assembly), then the **verify
+    /// phase** of DESIGN.md §9: one width-padded verifier call per
+    /// group under a block-diagonal mask, tail drafts queued right
+    /// behind it, and the reply's rows split back into per-task
+    /// acceptance walks. With `--no-batch-draft` the draft phase runs
+    /// per session (the verify-only batching of §9).
+    /// Prefilling/finished/foreign tasks fall back to serial stepping
+    /// inside the same round.
+    #[allow(clippy::too_many_lines)]
     fn step_batch(
         &mut self,
         tasks: &mut [&mut dyn DecodeTask],
@@ -1249,6 +1557,7 @@ impl StepEngine for SpecDecoder {
                     // device call; overflow sessions (owned caches, see
                     // `begin`) step serially.
                     && s.sess.target.cache == pool.target_cache()
+                    && s.sess.drafter.cache == pool.drafter_cache()
             });
             if joins {
                 batchable.push(i);
@@ -1260,24 +1569,33 @@ impl StepEngine for SpecDecoder {
             return results.into_iter().map(Option::unwrap).collect();
         }
 
-        // Only three scalars of the target spec are needed per round; do
-        // not clone the whole ModelSpec (tensor layout etc.) on the hot
+        // Only a few scalars of the model specs are needed per round; do
+        // not clone whole ModelSpecs (tensor layout etc.) on the hot
         // path.
-        let (vocab, d_model, capacity) = match self.rt.spec(&self.cfg.target) {
-            Ok(s) => (s.vocab, s.d_model, s.cache_capacity),
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for i in batchable {
-                    results[i] = Some(Err(anyhow::anyhow!("batched verify: {msg}")));
+        let target_spec =
+            self.rt.spec(&self.cfg.target).map(|s| (s.vocab, s.d_model, s.cache_capacity));
+        let drafter_spec =
+            self.rt.spec(&self.cfg.drafter).map(|s| (s.vocab, s.cache_capacity));
+        let ((vocab, d_model, capacity), (dvocab, dcapacity)) =
+            match (target_spec, drafter_spec) {
+                (Ok(t), Ok(d)) => (t, d),
+                (Err(e), _) | (_, Err(e)) => {
+                    let msg = format!("{e:#}");
+                    for i in batchable {
+                        results[i] = Some(Err(anyhow::anyhow!("batched round: {msg}")));
+                    }
+                    return results.into_iter().map(Option::unwrap).collect();
                 }
-                return results.into_iter().map(Option::unwrap).collect();
-            }
-        };
+            };
 
+        let max_w = *crate::config::GRAPH_WIDTHS.last().unwrap();
+        let mode =
+            if self.cfg.compiled { ExecMode::Resident } else { ExecMode::WeightsByValue };
+        let batch_draft = self.cfg.batch.batch_draft;
         let shared = Arc::clone(&self.shared);
         let mut sh = shared.lock().unwrap();
 
-        // Phase 1: per-session drafting + pruning → verification rows.
+        // Draft + build phases → per-session verification rows.
         struct Entry {
             idx: usize,
             prep: VerifyPrep,
@@ -1285,58 +1603,281 @@ impl StepEngine for SpecDecoder {
             t_iter: Instant,
         }
         let mut entries: Vec<Option<Entry>> = Vec::new();
-        for &i in &batchable {
-            let task = tasks[i].as_any_mut().downcast_mut::<SpecTask>().unwrap();
-            let head = task.head.take().unwrap();
-            let t_iter = Instant::now();
-            match task.prepare_verify(head, &mut sh) {
-                Ok((prep, parts)) => {
-                    entries.push(Some(Entry { idx: i, prep, parts, t_iter }))
+
+        if batch_draft {
+            // ---------- draft phase (stage-aligned, DESIGN.md §11) ----------
+            struct Drafting {
+                idx: usize,
+                head: Option<PendingHead>,
+                d: Option<DraftInFlight>,
+                t_iter: Instant,
+                /// Packed draft-call wall seconds this session rode
+                /// (head + every level) — its `stage.tree_draft` sample.
+                draft_secs: f64,
+            }
+            let mut dents: Vec<Option<Drafting>> = Vec::new();
+            for &i in &batchable {
+                let task = tasks[i].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                let head = task.head.take().unwrap();
+                dents.push(Some(Drafting {
+                    idx: i,
+                    head: Some(head),
+                    d: None,
+                    t_iter: Instant::now(),
+                    draft_secs: 0.0,
+                }));
+            }
+
+            // (a) Pack every deferred head into one drafter call: the
+            // narrow per-session width-1 head drafts of the solo path
+            // become one width-S call per round.
+            let deferred: Vec<usize> = (0..dents.len())
+                .filter(|&k| {
+                    dents[k].as_ref().is_some_and(|e| {
+                        matches!(e.head.as_ref().unwrap().state, HeadState::Deferred)
+                    })
+                })
+                .collect();
+            if !deferred.is_empty() {
+                let mut head_parts: Vec<DraftParts> = Vec::with_capacity(deferred.len());
+                for &k in &deferred {
+                    let (idx, slot, token) = {
+                        let e = dents[k].as_ref().unwrap();
+                        let h = e.head.as_ref().unwrap();
+                        (e.idx, h.slot, h.token)
+                    };
+                    let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                    head_parts.push(task.deferred_head_parts(slot, token));
                 }
-                Err(e) => results[i] = Some(Err(e)),
+                let rows: Vec<usize> = head_parts.iter().map(|p| p.tokens.len()).collect();
+                let head_env = self.cfg.batch.max_sessions.min(max_w);
+                for g in plan_batches_enveloped(&rows, max_w, head_env) {
+                    let member_parts: Vec<(&[u32], &[i32], &[u32], &[f32])> = g
+                        .members
+                        .iter()
+                        .map(|&m| {
+                            let p = &head_parts[m];
+                            (
+                                p.tokens.as_slice(),
+                                p.positions.as_slice(),
+                                p.slots.as_slice(),
+                                p.mask.as_slice(),
+                            )
+                        })
+                        .collect();
+                    let req = packed_request(
+                        self.cfg.drafter.clone(),
+                        pool.drafter_cache(),
+                        dcapacity,
+                        g.width,
+                        &member_parts,
+                        mode,
+                    );
+                    let t0 = Instant::now();
+                    match self.rt.submit(req).and_then(|p| p.wait()) {
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for &m in &g.members {
+                                if let Some(en) = dents[deferred[m]].take() {
+                                    results[en.idx] =
+                                        Some(Err(anyhow::anyhow!("batched head draft: {msg}")));
+                                }
+                            }
+                        }
+                        Ok(reply) => {
+                            let dt = t0.elapsed().as_secs_f64();
+                            for (off, &m) in g.members.iter().enumerate() {
+                                let en = dents[deferred[m]].as_mut().unwrap();
+                                let h = en.head.as_mut().unwrap();
+                                h.state = HeadState::Ready(HeadReply {
+                                    logits: reply.logits
+                                        [off * dvocab..(off + 1) * dvocab]
+                                        .to_vec(),
+                                });
+                                en.draft_secs += dt;
+                                let task = tasks[en.idx]
+                                    .as_any_mut()
+                                    .downcast_mut::<SpecTask>()
+                                    .unwrap();
+                                task.rec.record_windowed(
+                                    "batch.draft_sessions",
+                                    g.members.len() as f64,
+                                    STAGE_WINDOW,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+
+            // (b) Resolve heads and open each session's draft.
+            for dent in dents.iter_mut() {
+                let begun = {
+                    let Some(en) = dent.as_mut() else { continue };
+                    let idx = en.idx;
+                    let head = en.head.take().unwrap();
+                    let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                    match task.begin_draft(head, &mut sh) {
+                        Ok(d) => {
+                            en.d = Some(d);
+                            Ok(())
+                        }
+                        Err(e) => Err((idx, e)),
+                    }
+                };
+                if let Err((idx, e)) = begun {
+                    *dent = None;
+                    results[idx] = Some(Err(e));
+                }
+            }
+
+            // (c) Level loop: every session still growing contributes its
+            // next level; same-level rows pack into one drafter call per
+            // group. The envelope pins the padded width so rounds whose
+            // level sizes fluctuate reuse one compiled graph.
+            let draft_env = (self.cfg.batch.max_sessions * self.cfg.max_width).min(max_w);
+            loop {
+                let mut lvl: Vec<(usize, DraftParts)> = Vec::new();
+                for (k, dent) in dents.iter_mut().enumerate() {
+                    let stepped = {
+                        let Some(en) = dent.as_mut() else { continue };
+                        let idx = en.idx;
+                        let task =
+                            tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                        (idx, task.next_draft_parts(en.d.as_mut().unwrap()))
+                    };
+                    match stepped {
+                        (_, Ok(Some(p))) => lvl.push((k, p)),
+                        (_, Ok(None)) => {}
+                        (idx, Err(e)) => {
+                            *dent = None;
+                            results[idx] = Some(Err(e));
+                        }
+                    }
+                }
+                if lvl.is_empty() {
+                    break;
+                }
+                let rows: Vec<usize> = lvl.iter().map(|(_, p)| p.tokens.len()).collect();
+                for g in plan_batches_enveloped(&rows, max_w, draft_env) {
+                    let member_parts: Vec<(&[u32], &[i32], &[u32], &[f32])> = g
+                        .members
+                        .iter()
+                        .map(|&m| {
+                            let p = &lvl[m].1;
+                            (
+                                p.tokens.as_slice(),
+                                p.positions.as_slice(),
+                                p.slots.as_slice(),
+                                p.mask.as_slice(),
+                            )
+                        })
+                        .collect();
+                    let req = packed_request(
+                        self.cfg.drafter.clone(),
+                        pool.drafter_cache(),
+                        dcapacity,
+                        g.width,
+                        &member_parts,
+                        mode,
+                    );
+                    let t0 = Instant::now();
+                    match self.rt.submit(req).and_then(|p| p.wait()) {
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for &m in &g.members {
+                                let k = lvl[m].0;
+                                if let Some(en) = dents[k].take() {
+                                    results[en.idx] =
+                                        Some(Err(anyhow::anyhow!("batched tree draft: {msg}")));
+                                }
+                            }
+                        }
+                        Ok(reply) => {
+                            let dt = t0.elapsed().as_secs_f64();
+                            let mut off = 0usize;
+                            for &m in &g.members {
+                                let (k, p) = &lvl[m];
+                                let nrows = p.tokens.len();
+                                let en = dents[*k].as_mut().unwrap();
+                                let task = tasks[en.idx]
+                                    .as_any_mut()
+                                    .downcast_mut::<SpecTask>()
+                                    .unwrap();
+                                task.complete_draft_level(
+                                    en.d.as_mut().unwrap(),
+                                    &reply.logits[off * dvocab..(off + nrows) * dvocab],
+                                );
+                                task.rec.record_windowed(
+                                    "batch.draft_sessions",
+                                    g.members.len() as f64,
+                                    STAGE_WINDOW,
+                                );
+                                en.draft_secs += dt;
+                                off += nrows;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // ---------- build phase (CPU: prune + verify assembly) ----------
+            for en in dents.into_iter().flatten() {
+                let Drafting { idx, d, t_iter, draft_secs, .. } = en;
+                let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                task.rec.record_windowed("stage.tree_draft", draft_secs, STAGE_WINDOW);
+                match task.finish_draft(d.expect("draft opened in phase (b)"), &mut sh) {
+                    Ok((prep, parts)) => {
+                        entries.push(Some(Entry { idx, prep, parts, t_iter }))
+                    }
+                    Err(e) => results[idx] = Some(Err(e)),
+                }
+            }
+        } else {
+            // Verify-only batching (`--no-batch-draft`, the §9 regime):
+            // every session drafts serially, only the verify packs.
+            for &i in &batchable {
+                let task = tasks[i].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                let head = task.head.take().unwrap();
+                let t_iter = Instant::now();
+                match task.prepare_verify(head, &mut sh) {
+                    Ok((prep, parts)) => {
+                        entries.push(Some(Entry { idx: i, prep, parts, t_iter }))
+                    }
+                    Err(e) => results[i] = Some(Err(e)),
+                }
             }
         }
 
-        // Phase 2: pack rows into device batches; one verifier call per
-        // group, tail drafts queued right behind it.
+        // ---------- verify phase (DESIGN.md §9) ----------
+        // One verifier call per group, tail drafts queued right behind.
         let rows: Vec<usize> = entries
             .iter()
             .map(|e| e.as_ref().unwrap().parts.tokens.len())
             .collect();
-        let max_w = *crate::config::GRAPH_WIDTHS.last().unwrap();
-        let mode =
-            if self.cfg.compiled { ExecMode::Resident } else { ExecMode::WeightsByValue };
-        let trash = capacity as i32 - 1;
         for g in plan_batches(&rows, max_w) {
             let req = {
-                let mut tokens: Vec<i32> = Vec::with_capacity(g.width);
-                let mut positions: Vec<i32> = Vec::with_capacity(g.width);
-                let mut slots: Vec<i32> = Vec::with_capacity(g.width);
-                for &m in &g.members {
-                    let e = entries[m].as_ref().unwrap();
-                    tokens.extend(e.parts.tokens.iter().map(|&x| x as i32));
-                    positions.extend_from_slice(&e.parts.positions);
-                    slots.extend(e.parts.slots.iter().map(|&x| x as i32));
-                }
-                let blocks: Vec<&[f32]> = g
+                let member_parts: Vec<(&[u32], &[i32], &[u32], &[f32])> = g
                     .members
                     .iter()
-                    .map(|&m| entries[m].as_ref().unwrap().parts.mask.as_slice())
+                    .map(|&m| {
+                        let e = entries[m].as_ref().unwrap();
+                        (
+                            e.parts.tokens.as_slice(),
+                            e.parts.positions.as_slice(),
+                            e.parts.slots.as_slice(),
+                            e.parts.mask.as_slice(),
+                        )
+                    })
                     .collect();
-                let mask = crate::tree::pack_block_diagonal(&blocks, capacity, g.width);
-                tokens.resize(g.width, 0);
-                positions.resize(g.width, 0);
-                slots.resize(g.width, trash);
-                ForwardRequest {
-                    model: self.cfg.target.clone(),
-                    width: g.width,
-                    cache: pool.target_cache(),
-                    tokens,
-                    positions,
-                    slots,
-                    mask,
+                packed_request(
+                    self.cfg.target.clone(),
+                    pool.target_cache(),
+                    capacity,
+                    g.width,
+                    &member_parts,
                     mode,
-                }
+                )
             };
             let t0 = Instant::now();
             let pending = match self.rt.submit(req) {
@@ -1375,9 +1916,17 @@ impl StepEngine for SpecDecoder {
                         let nrows = en.parts.tokens.len();
                         let task =
                             tasks[en.idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
-                        task.rec.record("stage.verify", dt);
-                        task.rec.record("stage.verify_exec", vreply.exec_seconds);
-                        task.rec.record("batch.sessions", g.members.len() as f64);
+                        task.rec.record_windowed("stage.verify", dt, STAGE_WINDOW);
+                        task.rec.record_windowed(
+                            "stage.verify_exec",
+                            vreply.exec_seconds,
+                            STAGE_WINDOW,
+                        );
+                        task.rec.record_windowed(
+                            "batch.sessions",
+                            g.members.len() as f64,
+                            STAGE_WINDOW,
+                        );
                         let lo = off * vocab;
                         let hi = (off + nrows) * vocab;
                         let hlo = off * d_model;
@@ -1387,6 +1936,7 @@ impl StepEngine for SpecDecoder {
                             &vreply.logits[lo..hi],
                             &vreply.hidden[hlo..hhi],
                             &mut sh,
+                            batch_draft,
                         ) {
                             Ok((out, next_head, hidden)) => Ok(task.conclude_iteration(
                                 out,

@@ -77,6 +77,13 @@ pub enum CacheConfigError {
         /// Requested slots per block.
         block_size: usize,
     },
+    /// The cache cannot host even one usable slot plus the reserved
+    /// trash slot (capacity < 2) — computing `capacity - 1` for the
+    /// trash slot would underflow.
+    NoTrashSlot {
+        /// Total cache capacity (slots).
+        capacity: usize,
+    },
     /// An explicit block budget exceeds what the capacity can host (or
     /// is zero).
     BadBlockCount {
@@ -100,6 +107,11 @@ impl std::fmt::Display for CacheConfigError {
                 f,
                 "block size {block_size} is invalid for a {capacity}-slot cache \
                  (need 2 ≤ block_size ≤ capacity - 1)"
+            ),
+            CacheConfigError::NoTrashSlot { capacity } => write!(
+                f,
+                "cache capacity {capacity} cannot host one usable slot plus the \
+                 reserved trash slot (need capacity ≥ 2)"
             ),
             CacheConfigError::BadBlockCount { capacity, block_size, blocks } => write!(
                 f,
@@ -480,6 +492,13 @@ impl SlotCache {
                 SlotOwnership::Blocks { block_size: *block_size, blocks: blocks.clone() }
             }
         }
+    }
+
+    /// True when this cache currently owns every slot in `slots` — the
+    /// drafter-side confinement check the batched draft phase asserts
+    /// before a session's rows join a packed call (DESIGN.md §11).
+    pub fn owns_all(&self, slots: &[u32]) -> bool {
+        slots.iter().all(|&s| self.owns(s))
     }
 
     /// True when this cache currently owns `slot`.
@@ -922,6 +941,23 @@ mod tests {
         assert_eq!(b.available(), 24);
         assert_eq!(b.headroom(8), 16);
         assert_eq!(a.lease_limit(), 32);
+    }
+
+    #[test]
+    fn no_trash_slot_error_renders_capacity() {
+        let e = CacheConfigError::NoTrashSlot { capacity: 0 };
+        let msg = e.to_string();
+        assert!(msg.contains('0') && msg.contains("trash"), "uninformative: {msg}");
+    }
+
+    #[test]
+    fn owns_all_checks_every_slot() {
+        let p = pool(33, 8);
+        let mut c = SlotCache::paged(p);
+        let s = c.alloc(4).unwrap();
+        assert!(c.owns_all(&s));
+        assert!(!c.owns_all(&[s[0], 32]), "trash slot is never owned");
+        assert!(c.owns_all(&[]), "vacuously true on empty");
     }
 
     #[test]

@@ -26,8 +26,16 @@ const OPTS: &[&str] = &[
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
     "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks",
 ];
-const FLAGS: &[&str] =
-    &["quick", "no-stream", "eager", "round-robin", "paged", "equal-partition", "help"];
+const FLAGS: &[&str] = &[
+    "quick",
+    "no-stream",
+    "eager",
+    "round-robin",
+    "paged",
+    "equal-partition",
+    "no-batch-draft",
+    "help",
+];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -245,6 +253,11 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         if args.flag("paged") {
             app.engine.batch.paged = true;
         }
+        if args.flag("no-batch-draft") {
+            // Verify-only batching (DESIGN.md §9): each session's draft
+            // calls issue serially; only the verify stage packs.
+            app.engine.batch.batch_draft = false;
+        }
         app.engine.batch.block_size =
             args.usize_or("block-size", app.engine.batch.block_size)?;
         if let Some(b) = args.get("cache-blocks") {
@@ -266,12 +279,12 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         ..ServeOpts::default()
     };
     let max_sessions = opts.max_sessions;
-    let layout = if !batched {
-        "round-robin"
-    } else if app.engine.batch.paged {
-        "batched+paged"
-    } else {
-        "batched+equal-partition"
+    let layout = match (batched, app.engine.batch.paged, app.engine.batch.batch_draft) {
+        (false, _, _) => "round-robin",
+        (true, true, true) => "batched+paged",
+        (true, true, false) => "batched+paged (verify-only)",
+        (true, false, true) => "batched+equal-partition",
+        (true, false, false) => "batched+equal-partition (verify-only)",
     };
     let srv = Server::spawn(&addr, engine, opts)?;
     eprintln!(
@@ -389,7 +402,10 @@ COMMON OPTIONS
   --max-new N --temperature T --seed S
   --max-sessions N    concurrent sessions to interleave (serve)
   --round-robin       serve with serial time-slicing instead of
-                      cross-session batched verification
+                      cross-session batching
+  --no-batch-draft    batch only the verify stage across sessions; draft
+                      calls issue serially per session (serve; default
+                      packs head + every tree-draft level too)
   --paged             lease the shared KV cache block-by-block on demand
                       with preempt/resume under pressure (serve; default)
   --equal-partition   fall back to equal fixed per-session cache regions

@@ -316,6 +316,33 @@ pub fn plan_batches(rows: &[usize], max_width: usize) -> Vec<BatchGroup> {
     groups
 }
 
+/// [`plan_batches`] with a *call envelope*: every group pads to at least
+/// the compiled width covering `envelope` rows (itself clamped to
+/// `max_width`).
+///
+/// The draft stages of stage-aligned batched drafting (DESIGN.md §11)
+/// need this: a round's packed level shrinks as sessions' trees finish
+/// growing, so naive tight padding would bounce one logical stream of
+/// calls across several compiled widths round after round. Pinning the
+/// floor to the steady-state envelope (`sessions × draft width`) keeps
+/// the padded shape static — one graph serves every level call — at the
+/// cost of a few inert padding rows. `envelope == 0` degenerates to
+/// [`plan_batches`].
+pub fn plan_batches_enveloped(
+    rows: &[usize],
+    max_width: usize,
+    envelope: usize,
+) -> Vec<BatchGroup> {
+    let mut groups = plan_batches(rows, max_width);
+    if envelope > 0 {
+        let floor = crate::config::width_for(envelope.min(max_width)).unwrap_or(max_width);
+        for g in &mut groups {
+            g.width = g.width.max(floor);
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,5 +376,27 @@ mod tests {
     #[should_panic(expected = "exceed max width")]
     fn plan_batches_rejects_oversized_sessions() {
         let _ = plan_batches(&[65], 64);
+    }
+
+    #[test]
+    fn enveloped_batches_pin_a_static_padded_width() {
+        // Three rounds of shrinking levels (sessions finish growing at
+        // different depths) all pad to the same compiled width under a
+        // 4 × 8 envelope — one graph serves the whole stream of calls.
+        let envelope = 32;
+        for rows in [&[8usize, 8, 8, 8][..], &[8, 8, 3][..], &[1][..]] {
+            let g = plan_batches_enveloped(rows, 64, envelope);
+            assert_eq!(g.len(), 1);
+            assert_eq!(g[0].width, 32, "rows {rows:?} left the envelope width");
+        }
+        // Overflow past the envelope still widens to fit the rows.
+        let g = plan_batches_enveloped(&[16, 16, 16], 64, envelope);
+        assert_eq!(g[0].width, 64);
+        // Envelope 0 degenerates to the tight plan.
+        let g = plan_batches_enveloped(&[3], 64, 0);
+        assert_eq!(g[0].width, 4);
+        // The envelope clamps to the widest compiled graph.
+        let g = plan_batches_enveloped(&[2], 64, 1000);
+        assert_eq!(g[0].width, 64);
     }
 }

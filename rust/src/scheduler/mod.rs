@@ -158,36 +158,146 @@ pub fn plan_latency(d: &StageDurations, plan: Plan) -> f64 {
     }
 }
 
-/// Per-session stage durations when `sessions` concurrent sessions share
-/// one batched verifier call (cross-session batching, DESIGN.md §9).
-///
-/// The verify stage is the only device call the batch merges, so its cost
-/// amortizes across the riders: each session is charged `verify /
-/// sessions` of the (wider, but sub-linear) batched call. Draft stages
-/// stay per-session — drafting is not batched — and CPU stages are
-/// per-session by construction. Feeding the amortized durations to
-/// [`search_best_plan`] yields the plan the batched regime actually
-/// wants: with the verify share shrunk, hiding the CPU walk behind AOT
-/// stages matters *more*, never less.
-pub fn amortize_verify(d: &StageDurations, sessions: usize) -> StageDurations {
-    let s = sessions.max(1) as f64;
-    StageDurations { verify: d.verify / s, ..*d }
+/// The shape of an engine's packed device calls — what the batched plan
+/// search needs to price an S-way ride (DESIGN.md §9/§11).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchShape {
+    /// Sessions expected to share each packed call.
+    pub sessions: usize,
+    /// Verification rows one session contributes (its pruned tree size).
+    pub verify_rows: usize,
+    /// Equal-growth width one session contributes per draft level.
+    pub draft_width: usize,
+    /// Whether the draft stages (head + tree levels) are packed too, or
+    /// only the verify call (`--no-batch-draft`).
+    pub batch_draft: bool,
 }
 
-/// Plan search under an S-way batched verify: [`search_best_plan`] over
-/// the [`amortize_verify`] durations.
-pub fn search_best_plan_batched(d: &StageDurations, sessions: usize) -> (Plan, f64) {
-    search_best_plan(&amortize_verify(d, sessions))
+/// Per-rider share of an S-way packed device call.
+///
+/// The packed call is *wider* than a solo call — sub-linear in the rider
+/// count, but not free — so each rider is charged `packed / S` where
+/// `packed` is the latency-curve cost at `rows × S` (clamped to the
+/// widest compiled graph by the curve's own extrapolation). Charging
+/// `solo / S` — the old accounting — is the degenerate "the packed call
+/// costs no more than a solo one" case and systematically optimistic;
+/// it survives only as the lower bound when the curve is flat. A rider
+/// never pays more than going solo (the scheduler would simply not pack
+/// a super-linear call).
+pub fn amortized_share(
+    solo: f64,
+    rows: usize,
+    sessions: usize,
+    curve: &crate::objective::LatencyCurve,
+) -> f64 {
+    let s = sessions.max(1) as f64;
+    let rows = rows.max(1) as f64;
+    let ratio = (curve.at(rows * s) / curve.at(rows).max(1e-12)).max(1.0);
+    ((solo * ratio) / s).min(solo)
+}
+
+/// Per-session stage durations when `sessions` concurrent sessions share
+/// one batched verifier call (cross-session batching, DESIGN.md §9):
+/// the verify stage is charged its [`amortized_share`] of the packed
+/// call at `rows × sessions`. Draft and CPU stages pass through.
+pub fn amortize_verify(
+    d: &StageDurations,
+    sessions: usize,
+    rows: usize,
+    curve: &crate::objective::LatencyCurve,
+) -> StageDurations {
+    StageDurations { verify: amortized_share(d.verify, rows, sessions, curve), ..*d }
+}
+
+/// Draft-side analog of [`amortize_verify`] for stage-aligned batched
+/// drafting (DESIGN.md §11): the head draft packs `sessions` width-1
+/// rows into one call and every tree-draft level packs `sessions`
+/// width-`width` levels, so both stages are charged their per-rider
+/// share of the packed call. CPU and verify stages pass through.
+pub fn amortize_draft(
+    d: &StageDurations,
+    sessions: usize,
+    width: usize,
+    curve: &crate::objective::LatencyCurve,
+) -> StageDurations {
+    StageDurations {
+        head_draft: amortized_share(d.head_draft, 1, sessions, curve),
+        tree_draft: amortized_share(d.tree_draft, width, sessions, curve),
+        ..*d
+    }
+}
+
+/// Splits *measured* packed-call durations across the measured rider
+/// counts. A batched run's recorder logs the shared verify call's wall
+/// time (`stage.verify`) — and, under batched drafting, the packed
+/// draft-phase calls (`stage.tree_draft`) — identically on every rider,
+/// alongside the rider counts (`batch.sessions` /
+/// `batch.draft_sessions`). The per-session charge is therefore the
+/// measured call over the measured mean riders: nothing is modelled.
+/// NaN rider counts (the run never batched that stage) pass the stage
+/// through unchanged.
+pub fn split_measured_batched(
+    d: &StageDurations,
+    verify_riders: f64,
+    draft_riders: f64,
+) -> StageDurations {
+    let share = |x: f64, riders: f64| {
+        if riders.is_finite() && riders > 1.0 {
+            x / riders
+        } else {
+            x
+        }
+    };
+    StageDurations {
+        verify: share(d.verify, verify_riders),
+        tree_draft: share(d.tree_draft, draft_riders),
+        ..*d
+    }
+}
+
+/// Plan search under packed device calls: [`search_best_plan`] over the
+/// [`amortize_verify`] (and, when `shape.batch_draft`,
+/// [`amortize_draft`]) durations priced against the measured latency
+/// curves.
+pub fn search_best_plan_batched(
+    d: &StageDurations,
+    shape: &BatchShape,
+    lat: &crate::objective::LatencyModel,
+) -> (Plan, f64) {
+    let mut a = amortize_verify(d, shape.sessions, shape.verify_rows, &lat.verifier);
+    if shape.batch_draft {
+        a = amortize_draft(&a, shape.sessions, shape.draft_width, &lat.drafter);
+    }
+    search_best_plan(&a)
+}
+
+/// [`resolve`] for a batched engine: explicit schedule choices pass
+/// through; `ProfileSearch` searches over the amortized durations.
+pub fn resolve_batched(
+    schedule: SchedulePlan,
+    d: &StageDurations,
+    shape: &BatchShape,
+    lat: &crate::objective::LatencyModel,
+) -> Plan {
+    match schedule {
+        SchedulePlan::ProfileSearch => search_best_plan_batched(d, shape, lat).0,
+        other => resolve(other, d),
+    }
 }
 
 /// Clamps a config-derived per-iteration tree budget to the shared
 /// pool's current headroom (paged serving, DESIGN.md §10): a session may
 /// spend at most half the slots it could still reach on speculation, so
 /// the other half stays available for the committed prefix it is about
-/// to grow (and for its neighbours). Floored at 2 — a starved session
-/// still drafts a root plus one candidate rather than wedging at zero.
+/// to grow (and for its neighbours). The floor of 2 keeps a starved but
+/// servable session drafting (a root plus one candidate) — but it must
+/// never exceed the *actual* headroom: a dry pool reporting 0 available
+/// slots must yield a 0 budget (admission then rejects or parks the
+/// request cleanly) rather than a 2-slot budget that guarantees an
+/// immediate `PoolExhausted` → preemption churn loop bounded only by
+/// `max_resumes`.
 pub fn clamp_tree_budget(envelope: usize, available: usize) -> usize {
-    envelope.min((available / 2).max(2))
+    envelope.min((available / 2).max(2.min(available)))
 }
 
 /// Exhaustive profile-guided plan search (§5.2).
@@ -301,23 +411,77 @@ mod tests {
         assert!(t.is_finite());
     }
 
+    fn lat_model() -> crate::objective::LatencyModel {
+        crate::objective::LatencyModel {
+            drafter: crate::objective::LatencyCurve::new(&[
+                (1, 1.0e-3),
+                (8, 1.4e-3),
+                (64, 3.0e-3),
+            ]),
+            verifier: crate::objective::LatencyCurve::new(&[
+                (1, 4.0e-3),
+                (16, 6.0e-3),
+                (64, 1.2e-2),
+            ]),
+            cpu_overhead: 1e-3,
+        }
+    }
+
     #[test]
-    fn amortized_verify_shrinks_with_batch_size() {
+    fn amortized_verify_shrinks_with_batch_size_but_is_never_free() {
         let d = durations();
+        let lat = lat_model();
         for p in Plan::ALL {
             let solo = plan_latency(&d, p);
             let mut prev = solo;
             for s in [2usize, 4, 8] {
-                let t = plan_latency(&amortize_verify(&d, s), p);
+                let t = plan_latency(&amortize_verify(&d, s, 16, &lat.verifier), p);
                 assert!(t <= prev + 1e-12, "{} got slower at {s} sessions", p.name());
                 prev = t;
             }
         }
         // Non-verify stages are untouched.
-        let a = amortize_verify(&d, 4);
+        let a = amortize_verify(&d, 4, 16, &lat.verifier);
         assert!((a.tree_draft - d.tree_draft).abs() < 1e-15);
         assert!((a.accept - d.accept).abs() < 1e-15);
-        assert!((a.verify - d.verify / 4.0).abs() < 1e-15);
+        // The packed call is wider than the solo one, so the per-rider
+        // share is strictly MORE than the naive `verify / sessions`
+        // (sub-linear, not free) while still cheaper than going solo.
+        assert!(a.verify > d.verify / 4.0, "old optimistic accounting resurfaced");
+        assert!(a.verify < d.verify);
+        // The exact share: verifier cost grows 6ms → 12ms from width 16
+        // to the 64-wide packed call, so each of 4 riders pays 2×/4.
+        let expect = d.verify * (lat.t_verify(64) / lat.t_verify(16)) / 4.0;
+        assert!((a.verify - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amortize_draft_charges_packed_head_and_levels() {
+        let d = durations();
+        let lat = lat_model();
+        let a = amortize_draft(&d, 4, 8, &lat.drafter);
+        // Sub-linear, not free — same bound as the verify side.
+        assert!(a.head_draft > d.head_draft / 4.0 && a.head_draft < d.head_draft);
+        assert!(a.tree_draft > d.tree_draft / 4.0 && a.tree_draft < d.tree_draft);
+        // Verify/CPU stages pass through.
+        assert!((a.verify - d.verify).abs() < 1e-15);
+        assert!((a.bookkeep - d.bookkeep).abs() < 1e-15);
+        // One rider degenerates to solo.
+        let solo = amortize_draft(&d, 1, 8, &lat.drafter);
+        assert!((solo.tree_draft - d.tree_draft).abs() < 1e-15);
+    }
+
+    #[test]
+    fn split_measured_batched_divides_only_measured_stages() {
+        let d = durations();
+        let s = split_measured_batched(&d, 4.0, 2.0);
+        assert!((s.verify - d.verify / 4.0).abs() < 1e-15);
+        assert!((s.tree_draft - d.tree_draft / 2.0).abs() < 1e-15);
+        assert!((s.accept - d.accept).abs() < 1e-15);
+        // NaN rider counts (stage never batched) pass through.
+        let n = split_measured_batched(&d, f64::NAN, f64::NAN);
+        assert!((n.verify - d.verify).abs() < 1e-15);
+        assert!((n.tree_draft - d.tree_draft).abs() < 1e-15);
     }
 
     #[test]
@@ -325,9 +489,31 @@ mod tests {
         let mut d = durations();
         d.accept = 3e-3;
         d.bookkeep = 3e-3;
-        let (p, t) = search_best_plan_batched(&d, 4);
+        let lat = lat_model();
+        let shape =
+            BatchShape { sessions: 4, verify_rows: 16, draft_width: 8, batch_draft: true };
+        let (p, t) = search_best_plan_batched(&d, &shape, &lat);
         assert!(p.aot_tail && p.aot_head, "picked {}", p.name());
-        assert!(t < plan_latency(&amortize_verify(&d, 4), Plan::SEQUENTIAL));
+        let amortized = amortize_draft(
+            &amortize_verify(&d, 4, 16, &lat.verifier),
+            4,
+            8,
+            &lat.drafter,
+        );
+        assert!(t < plan_latency(&amortized, Plan::SEQUENTIAL));
+    }
+
+    #[test]
+    fn resolve_batched_honours_explicit_choices() {
+        let d = durations();
+        let lat = lat_model();
+        let shape =
+            BatchShape { sessions: 4, verify_rows: 16, draft_width: 8, batch_draft: false };
+        assert_eq!(
+            resolve_batched(SchedulePlan::Sequential, &d, &shape, &lat),
+            Plan::SEQUENTIAL
+        );
+        assert!(resolve_batched(SchedulePlan::AotTail, &d, &shape, &lat).aot_tail);
     }
 
     #[test]
@@ -336,9 +522,67 @@ mod tests {
         assert_eq!(clamp_tree_budget(40, 200), 40);
         // Tight pool: at most half the reachable slots go to speculation.
         assert_eq!(clamp_tree_budget(40, 30), 15);
-        // Starved pool: floored, never zero (the task must still draft).
+        // Starved pool: floored at 2 while the pool can still supply it.
         assert_eq!(clamp_tree_budget(40, 3), 2);
-        assert_eq!(clamp_tree_budget(40, 0), 2);
+        assert_eq!(clamp_tree_budget(40, 2), 2);
+    }
+
+    #[test]
+    fn clamp_tree_budget_never_exceeds_a_dry_pool() {
+        // The old floor of 2 exceeded `available` when the pool was dry,
+        // admitting sessions doomed to an immediate PoolExhausted →
+        // preempt → resume churn loop. The budget must respect actual
+        // headroom instead.
+        assert_eq!(clamp_tree_budget(40, 0), 0, "dry pool must yield a zero budget");
+        assert_eq!(clamp_tree_budget(40, 1), 1);
+        for avail in 0..64usize {
+            assert!(
+                clamp_tree_budget(40, avail) <= avail.max(2),
+                "budget exceeds headroom at available={avail}"
+            );
+            if avail >= 2 {
+                assert!(clamp_tree_budget(40, avail) >= 2, "floor lost at {avail}");
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_stage_series_forget_cold_start_outliers() {
+        // Regression (plan-search staleness): a slow first iteration —
+        // the lazy graph-compile stall — must stop dominating the plan
+        // choice once enough steady-state iterations have been recorded.
+        // Stage series are recorded with `record_windowed`, so the
+        // lifetime mean ages the outlier out entirely.
+        const W: usize = 32;
+        let mut rec = crate::metrics::Recorder::new();
+        // Cold start: a 1-second verify (compile stall).
+        rec.record_windowed("stage.verify", 1.0, W);
+        rec.record_windowed("stage.tail_draft", 1.0, W);
+        let skewed = StageDurations::from_recorder(&rec, 0.5);
+        // With only the outlier, AOT-tail looks catastrophic (a 1 s tail
+        // draft the accept walk cannot hide).
+        assert!(skewed.tail_draft > 0.5);
+        // Steady state: W fast iterations evict the outlier.
+        for _ in 0..W {
+            rec.record_windowed("stage.verify", 6e-3, W);
+            rec.record_windowed("stage.tail_draft", 1.2e-3, W);
+            rec.record_windowed("stage.accept", 3e-3, W);
+            rec.record_windowed("stage.bookkeep", 3e-3, W);
+            rec.record_windowed("stage.head_draft", 1e-3, W);
+            rec.record_windowed("stage.tree_draft", 4e-3, W);
+            rec.record_windowed("stage.cpu_build", 0.5e-3, W);
+        }
+        let steady = StageDurations::from_recorder(&rec, 0.6);
+        assert!(
+            (steady.verify - 6e-3).abs() < 1e-9,
+            "outlier still skews the mean: {}",
+            steady.verify
+        );
+        assert!((steady.tail_draft - 1.2e-3).abs() < 1e-9);
+        // And the plan search now picks the overlap the steady state
+        // justifies (expensive CPU, cheap tail draft).
+        let (p, _) = search_best_plan(&steady);
+        assert!(p.aot_tail, "stale outlier would have vetoed AOT-tail: {}", p.name());
     }
 
     #[test]

@@ -448,11 +448,21 @@ impl Client {
             match j.str("event")? {
                 "tokens" => stream_events += 1,
                 "done" => {
+                    // A malformed token is a protocol error, not token 0:
+                    // silently mapping it would corrupt the stream the
+                    // caller hands to the user.
                     let tokens = j
                         .arr("tokens")?
                         .iter()
-                        .map(|t| t.as_usize().unwrap_or(0) as u32)
-                        .collect();
+                        .map(|t| {
+                            t.as_usize().map(|x| x as u32).ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "malformed token in 'done' event: {}",
+                                    t.to_string()
+                                )
+                            })
+                        })
+                        .collect::<crate::Result<Vec<u32>>>()?;
                     return Ok(ClientResult {
                         tokens,
                         aal: j.f64("aal")?,
@@ -656,6 +666,17 @@ enum MockKv {
 pub struct MockStepEngine {
     /// Simulated device time per step.
     pub step_delay: std::time::Duration,
+    /// Simulated *drafter* device time per session per round — the
+    /// drafting-bound knob. In batched rounds it is charged once per
+    /// round when `batch_draft` (the stage-aligned packed draft call,
+    /// DESIGN.md §11) and once per live session otherwise (the
+    /// verify-only batching of §9, where every session's draft calls
+    /// issue serially). Zero by default, preserving the verify-only
+    /// mock.
+    pub draft_delay: std::time::Duration,
+    /// Pack the simulated draft stage across sessions (mirrors
+    /// `BatchConfig::batch_draft`).
+    pub batch_draft: bool,
     /// Tokens emitted per iterate step.
     pub tokens_per_step: usize,
     /// Simulated per-session KV capacity in tokens (non-shared mode).
@@ -677,6 +698,8 @@ impl MockStepEngine {
     pub fn new(step_delay_ms: u64, tokens_per_step: usize, capacity: usize) -> Self {
         Self {
             step_delay: std::time::Duration::from_millis(step_delay_ms),
+            draft_delay: std::time::Duration::ZERO,
+            batch_draft: false,
             tokens_per_step: tokens_per_step.max(1),
             capacity,
             slots_in_use: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
@@ -684,6 +707,16 @@ impl MockStepEngine {
             paged_pool: None,
             equal_part: None,
         }
+    }
+
+    /// Adds a simulated draft stage: `draft_delay_ms` of drafter device
+    /// time per session per round, packed across sessions (charged once
+    /// per round) when `batch_draft` — the mock analog of stage-aligned
+    /// batched drafting (DESIGN.md §11).
+    pub fn with_draft_stage(mut self, draft_delay_ms: u64, batch_draft: bool) -> Self {
+        self.draft_delay = std::time::Duration::from_millis(draft_delay_ms);
+        self.batch_draft = batch_draft;
+        self
     }
 
     /// A mock whose sessions share one *paged* block pool (DESIGN.md
@@ -725,6 +758,9 @@ struct MockTask {
     max_new: usize,
     per_step: usize,
     delay: std::time::Duration,
+    /// Serial draft-stage device time (charged per session when the
+    /// round is not draft-batched).
+    draft_delay: std::time::Duration,
     /// First prompt token + prompt length offset the emitted counter
     /// tokens, so concurrent sessions' streams stay distinguishable
     /// (batch-mixing checks) *and* a preempted session's resumed
@@ -872,7 +908,7 @@ impl DecodeTask for MockTask {
 
     fn step(&mut self) -> crate::Result<StepOutcome> {
         if self.state != TaskState::Done {
-            std::thread::sleep(self.delay);
+            std::thread::sleep(self.delay + self.draft_delay);
         }
         self.advance()
     }
@@ -928,6 +964,7 @@ impl StepEngine for MockStepEngine {
             max_new,
             per_step: self.tokens_per_step,
             delay: self.step_delay,
+            draft_delay: self.draft_delay,
             seed_tok: prompt[0],
             held: 0,
             gauge: self.slots_in_use.clone(),
@@ -936,17 +973,23 @@ impl StepEngine for MockStepEngine {
         }))
     }
 
-    /// The mock analog of cross-session batched verification: one
-    /// simulated device delay serves the *whole* round, then every task
-    /// advances — so a round with S live sessions costs one `step_delay`
-    /// instead of S (exactly the amortization the real batched engine
-    /// gets from packing verify rows into one call).
+    /// The mock analog of cross-session batching: one simulated *verify*
+    /// delay serves the whole round (the §9 packed verify), and the
+    /// simulated *draft* stage costs one `draft_delay` per round when
+    /// `batch_draft` (the §11 stage-aligned packed draft calls) but one
+    /// per live session otherwise — the verify-only regime, where the
+    /// drafter still serializes N× under N concurrent clients.
     fn step_batch(
         &mut self,
         tasks: &mut [&mut dyn DecodeTask],
     ) -> Vec<crate::Result<StepOutcome>> {
-        if tasks.iter().any(|t| t.state() != TaskState::Done) {
+        let live = tasks.iter().filter(|t| t.state() != TaskState::Done).count();
+        if live > 0 {
             std::thread::sleep(self.step_delay);
+            if !self.draft_delay.is_zero() {
+                let rides = if self.batch_draft { 1 } else { live as u32 };
+                std::thread::sleep(self.draft_delay * rides);
+            }
         }
         tasks
             .iter_mut()
@@ -1100,6 +1143,34 @@ mod tests {
         assert_eq!(s.u64("tokens").unwrap(), 6);
         assert_eq!(s.u64("cancelled").unwrap(), 0);
         assert!(s.f64("queue_delay_ms_mean").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn client_rejects_malformed_done_tokens_instead_of_zeroing() {
+        // A `done` event carrying a non-numeric token must surface as a
+        // typed error — the old `as_usize().unwrap_or(0)` silently
+        // replaced it with token 0, corrupting the stream.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (sock, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(sock.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap(); // consume the request
+            let mut w = sock;
+            writeln!(
+                w,
+                r#"{{"id": 1, "event": "done", "tokens": [5, "bogus", 7], "aal": 1.0, "tpot_ms": 1.0, "iterations": 1, "prefill_ms": 0.1}}"#
+            )
+            .unwrap();
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let err = c.generate(1, &[1, 2], 4).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("malformed token"),
+            "unexpected error: {err:#}"
+        );
+        server.join().unwrap();
     }
 
     #[test]

@@ -4,12 +4,22 @@
 //! One worker thread still owns the engine (the device is single-tenant —
 //! submission order is execution order), but instead of running each
 //! request to completion it keeps up to `max_sessions` resumable
-//! [`DecodeTask`]s live and round-robins **one `step()` per session per
-//! scheduling round**. Every live client therefore streams tokens every
-//! round — a long generation can no longer block every client behind it —
-//! and the serving regime becomes iteration-level interleaving (the
-//! SpecInfer/vLLM-style continuous batching discipline, at step rather
-//! than batch granularity).
+//! [`DecodeTask`]s live and runs **one scheduling round per loop
+//! iteration** over all of them. Every live client therefore streams
+//! tokens every round — a long generation can no longer block every
+//! client behind it — and the serving regime becomes iteration-level
+//! interleaving (the SpecInfer/vLLM-style continuous batching
+//! discipline, at step rather than batch granularity).
+//!
+//! In batched mode ([`ServeOpts::batched`], the default) a round is
+//! **stage-aligned**: the whole live set enters
+//! [`StepEngine::step_batch`] together, whose engine-side phases — draft
+//! (packed head call, then one packed drafter call per tree level),
+//! CPU build, packed verify — advance every session through the *same*
+//! stage before any session moves to the next, so sessions at the same
+//! tree level ride one width-padded device call instead of issuing one
+//! narrow call each (DESIGN.md §9 + §11). `--round-robin` restores
+//! serial time-sliced `step()`s.
 //!
 //! * **Admission control** — a job leaves the queue only when a session
 //!   slot is free, and its freshly opened task must report enough
@@ -433,10 +443,11 @@ fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats) {
 ///
 /// In round-robin mode each task takes exactly one serial `step()` (the
 /// time-sliced discipline). In batched mode the whole round goes through
-/// [`StepEngine::step_batch`], letting engines with shared caches pack
-/// the sessions' verification into one device call per round (DESIGN.md
-/// §9) — outcomes still arrive one per session and are applied
-/// identically.
+/// [`StepEngine::step_batch`] *once*, so the engine sees every live
+/// session together and can run the round stage-aligned — packing the
+/// sessions' same-level draft rows and their verification rows into one
+/// device call per stage (DESIGN.md §9 + §11) — outcomes still arrive
+/// one per session and are applied identically.
 fn round(
     engine: &mut Box<dyn StepEngine + Send>,
     live: &mut Vec<ServeSession>,

@@ -100,6 +100,14 @@ impl MaskBuilder {
         self.prefix_row.iter().filter(|&&x| x > 0.0).count()
     }
 
+    /// The maintained prefix row (`capacity` wide, 1.0 at committed
+    /// slots) — what every built mask row starts from. Lets callers that
+    /// need a single prefix-plus-self row (the deferred head draft of
+    /// DESIGN.md §11) assemble it without cloning the whole builder.
+    pub fn prefix_row(&self) -> &[f32] {
+        &self.prefix_row
+    }
+
     /// Builds the mask for evaluating tree `nodes` (in call order) whose
     /// cache slots are given by `slot_of[node]`. `rows` must equal the
     /// compiled graph width; rows beyond `nodes.len()` are zeroed padding.

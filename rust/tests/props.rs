@@ -424,6 +424,139 @@ fn prop_paged_masks_reference_only_owned_blocks() {
     );
 }
 
+/// Stage-aligned batched drafting safety (DESIGN.md §11), the
+/// drafter-side mirror of `prop_paged_masks_reference_only_owned_blocks`:
+/// sessions grow random draft trees over one shared paged *drafter*
+/// cache, and every level's rows — built by each session's own builder,
+/// then packed block-diagonally like the batched draft phase does — may
+/// reference only slots in blocks currently owned by that session;
+/// padding rows stay all-zero and the pool's block accounting never
+/// leaks across iterations of commit/release/preempt churn.
+#[test]
+fn prop_packed_draft_level_masks_reference_only_owned_blocks() {
+    struct Sess {
+        cache: SlotCache,
+        tree: TokenTree,
+        slot_of: Vec<Option<u32>>,
+    }
+    run_prop(
+        "packed-draft-level-ownership",
+        PropConfig { cases: 64, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let block_size = 2 + rng.next_range(6); // 2..=7
+            let nblocks = 6 + rng.next_range(10); // 6..=15
+            let capacity = block_size * nblocks + 1; // + trash
+            let pool = Arc::new(Mutex::new(
+                BlockPool::new(capacity, block_size, Some(nblocks)).map_err(|e| e.to_string())?,
+            ));
+            let nsess = 2 + rng.next_range(3); // 2..=4
+            let mut sessions: Vec<SlotCache> =
+                (0..nsess).map(|_| SlotCache::paged(pool.clone())).collect();
+            for _iter in 0..(2 + rng.next_range(3)) {
+                // Open one draft tree per session whose root slot fits.
+                let mut drafting: Vec<(usize, Sess)> = Vec::new();
+                for (si, slot) in sessions.iter_mut().enumerate() {
+                    let mut cache = std::mem::replace(slot, SlotCache::new(2));
+                    let tree = TokenTree::new(1);
+                    let mut slot_of = vec![None];
+                    if let Some(s) = cache.alloc(1) {
+                        slot_of[0] = Some(s[0]);
+                        drafting.push((si, Sess { cache, tree, slot_of }));
+                    } else {
+                        // Pool dry: this session sits the iteration out.
+                        *slot = cache;
+                    }
+                }
+                // Grow level by level; each level packs across sessions.
+                let depth = 1 + rng.next_range(4);
+                let width = 1 + rng.next_range(4);
+                for _ in 0..depth {
+                    let mut level: Vec<(yggdrasil::kvcache::SlotOwnership, Vec<f32>)> =
+                        Vec::new();
+                    for (_, s) in drafting.iter_mut() {
+                        let mut ids = Vec::new();
+                        for _ in 0..width {
+                            let parent = rng.next_range(s.tree.len());
+                            let id = s.tree.add_node(parent, rng.next_u64() as u32 % 64, 0.5);
+                            s.slot_of.push(None);
+                            ids.push(id);
+                        }
+                        let Some(slots) = s.cache.alloc(ids.len()) else {
+                            continue; // dry: level skipped (growth stops)
+                        };
+                        for (i, &id) in ids.iter().enumerate() {
+                            s.slot_of[id] = Some(slots[i]);
+                        }
+                        let n = ids.len();
+                        let rows =
+                            s.cache.mask_builder().build(&s.tree, &ids, &s.slot_of, n).to_vec();
+                        if !rows_owned(&rows, capacity, &s.cache.ownership()) {
+                            return Err("draft rows escaped their owned blocks".into());
+                        }
+                        level.push((s.cache.ownership(), rows));
+                    }
+                    if level.is_empty() {
+                        continue;
+                    }
+                    // Pack the level block-diagonally with some padding,
+                    // exactly like the batched draft phase, and re-check
+                    // every row against its owner.
+                    let total: usize = level.iter().map(|(_, r)| r.len() / capacity).sum();
+                    let padded = total + rng.next_range(4);
+                    let refs: Vec<&[f32]> = level.iter().map(|(_, r)| r.as_slice()).collect();
+                    let packed = pack_block_diagonal(&refs, capacity, padded);
+                    let mut row = 0usize;
+                    for (own, r) in &level {
+                        for _ in 0..r.len() / capacity {
+                            let slice = &packed[row * capacity..(row + 1) * capacity];
+                            if !rows_owned(slice, capacity, own) {
+                                return Err(format!("packed draft row {row} escaped its owner"));
+                            }
+                            row += 1;
+                        }
+                    }
+                    for r in row..padded {
+                        if packed[r * capacity..(r + 1) * capacity].iter().any(|&v| v != 0.0) {
+                            return Err(format!("padding row {r} is not all-zero"));
+                        }
+                    }
+                }
+                // Iteration end: commit a random accepted subset, release
+                // the rest (bookkeeping), occasionally preempt whole
+                // sessions (drop: every block returns).
+                for (si, s) in drafting {
+                    let Sess { mut cache, slot_of, .. } = s;
+                    if rng.next_f32() < 0.2 {
+                        drop(cache); // preempt/disconnect
+                        sessions[si] = SlotCache::paged(pool.clone());
+                        continue;
+                    }
+                    let mut rejected = Vec::new();
+                    for slot in slot_of.into_iter().flatten() {
+                        if rng.next_f32() < 0.4 {
+                            cache.commit(slot);
+                        } else {
+                            rejected.push(slot);
+                        }
+                    }
+                    cache.release(&rejected);
+                    sessions[si] = cache;
+                }
+                // Accounting invariant: free + owned == total, always.
+                let owned: usize = sessions.iter().map(|c| c.owned_blocks()).sum();
+                let free = pool.lock().unwrap().free_blocks();
+                if free + owned != nblocks {
+                    return Err(format!("block leak: free {free} + owned {owned} != {nblocks}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Cross-session batching safety (DESIGN.md §9): over random packings of
 /// random per-session trees into one shared cache, no session's mask rows
 /// may ever reference another session's slots — the packed batch mask is

@@ -269,6 +269,39 @@ fn batched_rounds_outscale_round_robin_throughput() {
     );
 }
 
+#[test]
+fn batched_draft_rounds_outscale_verify_only_batching() {
+    // The acceptance scenario for stage-aligned batched drafting
+    // (DESIGN.md §11): drafting-bound sessions — 15 ms of drafter time
+    // per session per round against 5 ms of (already shared) verify.
+    // Verify-only batching pays the drafter serially, 5 + 4×15 = 65 ms
+    // per round at 4 clients; packing the draft stage makes the round
+    // 5 + 15 = 20 ms. Ideal speedup 3.25×; the ≥1.3× bar absorbs
+    // scheduler jitter.
+    let prompts: Vec<Vec<u32>> = (0..4).map(|i| vec![1000 * (i + 1) as u32]).collect();
+    let mut tput = Vec::new();
+    for batch_draft in [false, true] {
+        let engine = MockStepEngine::new(5, 2, 10_000).with_draft_stage(15, batch_draft);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 32, max_sessions: 4, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let w = yggdrasil::server::client_wave(srv.addr, 4, &prompts, 16).unwrap();
+        assert_eq!(w.tokens, 64, "all four clients complete");
+        tput.push(w.tok_per_s);
+    }
+    let speedup = tput[1] / tput[0];
+    assert!(
+        speedup >= 1.3,
+        "batched-draft serving {:.1} tok/s vs verify-only batching {:.1} tok/s \
+         = {speedup:.2}x (< 1.3x) at 4 drafting-bound clients",
+        tput[1],
+        tput[0]
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Paged shared cache: admission, preemption/resume, confinement (mock).
 // ---------------------------------------------------------------------------
@@ -479,12 +512,13 @@ fn spawn_real_server(max_sessions: usize, stream: bool) -> Option<Server> {
 }
 
 /// Spawns a batched shared-cache real-engine server (equal or paged
-/// layout) and asserts that concurrent batched sessions reproduce the
-/// solo greedy output bit-exactly: block-diagonal masks mean a rider in
-/// the same device batch cannot perturb another session's logits —
-/// whether its slots come from a contiguous region or a set of owned
-/// blocks.
-fn assert_batched_matches_solo(paged: bool) {
+/// layout; verify-only or stage-aligned batched drafting) and asserts
+/// that concurrent batched sessions reproduce the solo greedy output
+/// bit-exactly: block-diagonal masks mean a rider in the same device
+/// batch cannot perturb another session's logits — whether its slots
+/// come from a contiguous region or a set of owned blocks, and whether
+/// only the verify or also every draft level rides a packed call.
+fn assert_batched_matches_solo(paged: bool, batch_draft: bool) {
     let dir = Path::new("artifacts");
     if !(dir.join("manifest.json").exists()
         && dir.join("dft-xs.weights.bin").exists()
@@ -505,6 +539,7 @@ fn assert_batched_matches_solo(paged: bool) {
     cfg.batch.enabled = true;
     cfg.batch.max_sessions = 4;
     cfg.batch.paged = paged;
+    cfg.batch.batch_draft = batch_draft;
     cfg.batch.block_size = 16;
     let engine = SpecDecoder::new(&rt, cfg, lat, None);
     let srv = Server::spawn(
@@ -534,21 +569,37 @@ fn assert_batched_matches_solo(paged: bool) {
         let r = h.join().unwrap();
         assert_eq!(
             r.tokens, solo.tokens,
-            "batched (paged={paged}) session diverged from solo run"
+            "batched (paged={paged}, batch_draft={batch_draft}) session diverged \
+             from solo run"
         );
     }
 }
 
 #[test]
 fn batched_real_engine_sessions_stay_isolated_and_deterministic() {
-    // Equal-partition layout: the PR 2 invariant, still selectable.
-    assert_batched_matches_solo(false);
+    // Equal-partition layout, verify-only batching: the PR 2 invariant,
+    // still selectable via --no-batch-draft.
+    assert_batched_matches_solo(false, false);
 }
 
 #[test]
 fn paged_real_engine_sessions_stay_isolated_and_deterministic() {
     // Paged block-granular layout: same bit-exactness over owned blocks.
-    assert_batched_matches_solo(true);
+    assert_batched_matches_solo(true, false);
+}
+
+#[test]
+fn batched_draft_real_engine_matches_solo_equal_partition() {
+    // Stage-aligned batched drafting over equal-partition leases: the
+    // packed head + level calls must be bit-exact with the solo run.
+    assert_batched_matches_solo(false, true);
+}
+
+#[test]
+fn batched_draft_real_engine_matches_solo_paged() {
+    // Stage-aligned batched drafting over the paged pool — packed draft
+    // rows confined to owned blocks, bit-exact greedy output.
+    assert_batched_matches_solo(true, true);
 }
 
 #[test]
