@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft smoke
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -39,6 +39,16 @@ serve-equal:
 serve-nodraft:
 	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4 --no-batch-draft
 
+# Paged serving without the cross-request prefix cache (DESIGN.md §12
+# off): every request prefills its whole prompt.
+serve-noprefix:
+	cd rust && cargo run --release -- serve --addr 127.0.0.1:7777 --max-sessions 4 --no-prefix-cache
+
 # Headless mock-engine serving smoke (no artifacts needed; CI runs this).
 smoke:
 	cd rust && cargo run --release -- figures --exp serving_mock
+
+# Headless shared-system-prompt prefix-cache smoke (DESIGN.md §12; CI
+# runs this too — enforces the ≥2× prefill-reduction bar).
+smoke-prefix:
+	cd rust && cargo run --release -- figures --exp serving_prefix_mock

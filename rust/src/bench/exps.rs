@@ -648,6 +648,208 @@ pub fn serving_mock(opts: &super::BenchOpts) -> crate::Result<()> {
     Ok(())
 }
 
+/// Shared-system-prompt sweep over the cross-request prefix cache
+/// (DESIGN.md §12): every client's prompt opens with one shared system
+/// prefix (≥ 4 cache blocks long) followed by a distinct per-client
+/// suffix — the dominant shape of real serving traffic. One cold client
+/// warms the radix trie, then a concurrent wave of clients hits it. The
+/// table compares prefix-cache-on vs -off on hit rate, tokens served
+/// from cache, warm-request TTFT, and throughput; the machine-
+/// independent acceptance bar (≥ 2× fewer prefilled tokens, better warm
+/// TTFT, zero confinement violations) is pinned by the mock serving e2e
+/// test and the headless [`serving_prefix_mock`] CI smoke.
+pub fn serving_prefix(lab: &mut Lab) -> crate::Result<()> {
+    use crate::server::{Client, ServeOpts, Server};
+
+    let block_size = 8usize;
+    let vocab = lab.rt.spec("dft-xs")?.vocab as u32;
+    let sys_len = 4 * block_size; // the shared system prompt: 4 blocks
+    let sys: Vec<u32> = (0..sys_len).map(|i| (17 * i as u32 + 3) % vocab).collect();
+    let clients = if lab.opts.quick { 4 } else { 5 };
+    let suffix_len = 6usize;
+    let max_new = if lab.opts.quick { 6 } else { 10 };
+    let mk_prompt = |c: usize| -> Vec<u32> {
+        let mut p = sys.clone();
+        p.extend((0..suffix_len).map(|i| (911 * (c as u32 + 1) + i as u32) % vocab));
+        p
+    };
+
+    let mut t = Table::new(&[
+        "mode",
+        "clients",
+        "hit_rate",
+        "tokens_reused",
+        "cached_blocks",
+        "evictions",
+        "warm_ttft_ms_mean",
+        "tok_per_s",
+    ])
+    .with_title("Serving (prefix) — shared-system-prompt reuse (DESIGN.md §12)");
+    for (mode, prefix_on) in [("prefix_off", false), ("prefix_on", true)] {
+        let mut cfg = EngineConfig::default();
+        cfg.drafter = "dft-xs".into();
+        cfg.target = "tgt-sm".into();
+        cfg.use_depth_predictor = false;
+        cfg.max_depth = 2;
+        cfg.max_width = 2;
+        cfg.max_verify = 8;
+        cfg.batch.enabled = true;
+        cfg.batch.paged = true;
+        cfg.batch.block_size = block_size;
+        cfg.batch.prefix_cache = prefix_on;
+        cfg.batch.max_sessions = clients;
+        let engine = lab.spec(cfg)?;
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: clients, ..ServeOpts::default() },
+        )?;
+        // Cold warm-up request seeds the trie (or just runs, when off).
+        let mut warm = Client::connect(&srv.addr)?;
+        let _ = warm.generate(0, &mk_prompt(0), max_new)?;
+        // Warm wave: every prompt shares the system prefix.
+        let t0 = std::time::Instant::now();
+        let addr = srv.addr;
+        let handles: Vec<_> = (1..clients)
+            .map(|c| {
+                let p = mk_prompt(c);
+                std::thread::spawn(move || -> crate::Result<(usize, f64)> {
+                    let mut cl = Client::connect(&addr)?;
+                    let r = cl.generate(c as u64, &p, max_new)?;
+                    Ok((r.tokens.len(), r.ttft_ms))
+                })
+            })
+            .collect();
+        let mut tokens = 0usize;
+        let mut ttft = 0.0f64;
+        for h in handles {
+            let (tk, tf) = h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+            tokens += tk;
+            ttft += tf;
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let s = warm.stats()?;
+        let lookups = s.u64("prefix_lookups").unwrap_or(0);
+        let hits = s.u64("prefix_hits").unwrap_or(0);
+        let hit_rate = if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 };
+        t.row(&[
+            mode.to_string(),
+            clients.to_string(),
+            format!("{hit_rate:.2}"),
+            s.u64("prefix_tokens_reused").unwrap_or(0).to_string(),
+            s.u64("prefix_cached_blocks").unwrap_or(0).to_string(),
+            s.u64("prefix_evictions").unwrap_or(0).to_string(),
+            format!("{:.1}", ttft / (clients - 1).max(1) as f64),
+            format!("{:.1}", tokens as f64 / wall),
+        ]);
+    }
+    lab.emit("serving_prefix", &t)
+}
+
+/// Headless mock twin of [`serving_prefix`] (`--exp serving_prefix_mock`,
+/// no AOT artifacts): a paged [`crate::server::MockStepEngine`] with the
+/// prefix cache on/off serves one cold client then a warm wave sharing a
+/// 5-block system prompt, with a per-token simulated prefill cost so
+/// TTFT tracks the cached prefix. Enforces the acceptance bar — prefix
+/// cache on must prefill ≤ half the tokens of cache-off and improve mean
+/// warm TTFT with zero ownership violations — so CI fails fast on
+/// regressions.
+pub fn serving_prefix_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::server::{Client, MockStepEngine, ServeOpts, Server};
+    use std::sync::atomic::Ordering;
+
+    let block_size = 8usize;
+    let sys: Vec<u32> = (0..5 * block_size as u32).map(|i| 3000 + i).collect();
+    let clients = 5usize; // 1 cold + 4 warm
+    let max_new = 8usize;
+    let mk_prompt = |c: usize| -> Vec<u32> {
+        let mut p = sys.clone();
+        p.extend([9000 + 13 * c as u32, 9001 + 13 * c as u32, 9002 + 13 * c as u32]);
+        p
+    };
+
+    let mut rows: Vec<(&str, usize, f64, f64)> = Vec::new();
+    let mut violations_total = 0usize;
+    for (mode, prefix_on) in [("prefix_off", false), ("prefix_on", true)] {
+        let mut engine =
+            MockStepEngine::with_paged_pool(2, 2, 24 * block_size + 1, block_size)?
+                .with_prefill_cost(1000);
+        if prefix_on {
+            engine = engine.with_prefix_cache();
+        }
+        let prefilled = engine.prefilled_tokens.clone();
+        let violations = engine.violations.clone();
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: clients, ..ServeOpts::default() },
+        )?;
+        // Cold request warms the trie…
+        let mut warm = Client::connect(&srv.addr)?;
+        let _ = warm.generate(0, &mk_prompt(0), max_new)?;
+        // …then the warm wave shares its system prompt.
+        let addr = srv.addr;
+        let handles: Vec<_> = (1..clients)
+            .map(|c| {
+                let p = mk_prompt(c);
+                std::thread::spawn(move || -> crate::Result<f64> {
+                    let mut cl = Client::connect(&addr)?;
+                    let r = cl.generate(c as u64, &p, max_new)?;
+                    anyhow::ensure!(r.tokens.len() == max_new, "short stream");
+                    Ok(r.ttft_ms)
+                })
+            })
+            .collect();
+        let mut ttft = 0.0f64;
+        for h in handles {
+            ttft += h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+        }
+        violations_total += violations.load(Ordering::Relaxed);
+        rows.push((
+            mode,
+            prefilled.load(Ordering::Relaxed),
+            ttft / (clients - 1) as f64,
+            srv.stats.prefix_tokens_reused.load(Ordering::Relaxed) as f64,
+        ));
+    }
+    let mut t = Table::new(&[
+        "mode",
+        "clients",
+        "prefilled_tokens",
+        "warm_ttft_ms_mean",
+        "tokens_reused",
+    ])
+    .with_title("Serving smoke (prefix) — mock shared-system-prompt reuse (headless)");
+    for (mode, prefilled, ttft, reused) in &rows {
+        t.row(&[
+            mode.to_string(),
+            clients.to_string(),
+            prefilled.to_string(),
+            format!("{ttft:.1}"),
+            format!("{reused:.0}"),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_prefix_mock.csv"))?;
+    // The acceptance bar (machine-independent: token counts are exact,
+    // and the 1 ms/token prefill cost gives warm TTFT a ≥ 40 ms edge).
+    let (off, on) = (&rows[0], &rows[1]);
+    anyhow::ensure!(violations_total == 0, "mask rows escaped their owned/shared blocks");
+    anyhow::ensure!(
+        off.1 >= 2 * on.1,
+        "prefix cache saved too little prefill: {} tokens with cache on vs {} off",
+        on.1,
+        off.1
+    );
+    anyhow::ensure!(
+        on.2 < off.2,
+        "warm TTFT did not improve: {:.1} ms with cache on vs {:.1} ms off",
+        on.2,
+        off.2
+    );
+    Ok(())
+}
+
 /// Heterogeneous-prompt sweep at fixed total cache capacity: paged
 /// block-granular leasing vs the equal-partition baseline (DESIGN.md
 /// §10). Long prompts strand an equal-partition cache — every region

@@ -98,6 +98,12 @@ pub struct BatchConfig {
     /// Optional cap on the number of pool blocks (`--cache-blocks`);
     /// `None` uses everything the capacity can host.
     pub cache_blocks: Option<usize>,
+    /// Cross-request radix prefix cache over the paged pool (DESIGN.md
+    /// §12, the default; `--no-prefix-cache` disables): completed
+    /// sessions' fully-committed prompt blocks stay cached and later
+    /// requests sharing the prefix attach them read-only, prefilling
+    /// only the uncached tail. Only meaningful when `paged`.
+    pub prefix_cache: bool,
 }
 
 impl Default for BatchConfig {
@@ -109,6 +115,7 @@ impl Default for BatchConfig {
             batch_draft: true,
             block_size: 16,
             cache_blocks: None,
+            prefix_cache: true,
         }
     }
 }
@@ -395,6 +402,7 @@ impl EngineConfig {
                     None => Json::Null,
                 },
             ),
+            ("batch_prefix_cache", Json::Bool(self.batch.prefix_cache)),
         ])
     }
 
@@ -429,6 +437,7 @@ impl EngineConfig {
                 batch_draft: get_b("batch_draft", d.batch.batch_draft),
                 block_size: get_u("batch_block_size", d.batch.block_size),
                 cache_blocks: j.get("batch_cache_blocks").and_then(|v| v.as_usize()),
+                prefix_cache: get_b("batch_prefix_cache", d.batch.prefix_cache),
             },
         })
     }
@@ -553,6 +562,7 @@ mod tests {
             batch_draft: false,
             block_size: 8,
             cache_blocks: Some(12),
+            prefix_cache: false,
         };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
@@ -570,10 +580,12 @@ mod tests {
         let d = BatchConfig::default();
         assert!(d.paged, "paged block leasing is the default shared-cache layout");
         assert!(d.batch_draft, "stage-aligned batched drafting is the default");
+        assert!(d.prefix_cache, "cross-request prefix caching is the default");
         assert!(d.cache_blocks.is_none());
         let j = Json::parse(r#"{"engine": {"batch_enabled": true}}"#).unwrap();
         let cfg = AppConfig::from_json(&j).unwrap();
         assert!(cfg.engine.batch.enabled && cfg.engine.batch.paged);
+        assert!(cfg.engine.batch.prefix_cache, "absent key keeps the prefix-cache default");
         assert_eq!(cfg.engine.batch.block_size, d.block_size);
         assert!(cfg.engine.batch.cache_blocks.is_none());
     }

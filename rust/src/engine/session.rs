@@ -29,7 +29,10 @@
 use std::sync::{Arc, Mutex};
 
 use crate::config::BatchConfig;
-use crate::kvcache::{BlockPool, CacheConfigError, SlotCache, SlotPartition, SlotRange};
+use crate::kvcache::{
+    BlockPool, CacheConfigError, PrefixCache, PrefixCacheStats, SlotCache, SlotPartition,
+    SlotRange,
+};
 use crate::runtime::{CacheId, ExecMode, ForwardReply, ForwardRequest, ModelSpec, Runtime};
 use crate::sampling::XorShiftRng;
 
@@ -38,8 +41,14 @@ use crate::sampling::XorShiftRng;
 enum SharedLayout {
     /// Equal contiguous regions, leased and released whole (DESIGN.md §9).
     Equal { drafter: Mutex<SlotPartition>, target: Mutex<SlotPartition> },
-    /// Fixed-size blocks leased on demand (DESIGN.md §10).
-    Paged { drafter: Arc<Mutex<BlockPool>>, target: Arc<Mutex<BlockPool>> },
+    /// Fixed-size blocks leased on demand (DESIGN.md §10), optionally
+    /// with the cross-request prefix cache layered on top (DESIGN.md
+    /// §12; side 0 = drafter, side 1 = target).
+    Paged {
+        drafter: Arc<Mutex<BlockPool>>,
+        target: Arc<Mutex<BlockPool>>,
+        prefix: Option<Arc<Mutex<PrefixCache>>>,
+    },
 }
 
 /// Shared device caches + slot bookkeeping backing cross-session batched
@@ -73,18 +82,25 @@ impl SharedCachePool {
         let dcap = rt.spec(drafter)?.cache_capacity;
         let tcap = rt.spec(target)?.cache_capacity;
         let layout = if batch.paged {
-            SharedLayout::Paged {
-                drafter: Arc::new(Mutex::new(BlockPool::new(
-                    dcap,
-                    batch.block_size,
-                    batch.cache_blocks,
-                )?)),
-                target: Arc::new(Mutex::new(BlockPool::new(
-                    tcap,
-                    batch.block_size,
-                    batch.cache_blocks,
-                )?)),
-            }
+            let dpool = Arc::new(Mutex::new(BlockPool::new(
+                dcap,
+                batch.block_size,
+                batch.cache_blocks,
+            )?));
+            let tpool = Arc::new(Mutex::new(BlockPool::new(
+                tcap,
+                batch.block_size,
+                batch.cache_blocks,
+            )?));
+            // Cross-request prefix cache (DESIGN.md §12): one trie whose
+            // nodes carry a (drafter, target) block pair, so both sides'
+            // cached prompt K/V attach and evict in lockstep.
+            let prefix = batch
+                .prefix_cache
+                .then(|| PrefixCache::new(vec![dpool.clone(), tpool.clone()]))
+                .transpose()?
+                .map(|pc| Arc::new(Mutex::new(pc)));
+            SharedLayout::Paged { drafter: dpool, target: tpool, prefix }
         } else {
             SharedLayout::Equal {
                 drafter: Mutex::new(SlotPartition::new(dcap, batch.max_sessions)?),
@@ -124,13 +140,28 @@ impl SharedCachePool {
     /// equal-partition layout.
     pub fn block_occupancy(&self) -> Option<(usize, usize)> {
         match &self.layout {
-            SharedLayout::Paged { drafter, target } => {
+            SharedLayout::Paged { drafter, target, .. } => {
                 let d = drafter.lock().unwrap();
                 let t = target.lock().unwrap();
                 Some((d.blocks_in_use() + t.blocks_in_use(), d.num_blocks() + t.num_blocks()))
             }
             SharedLayout::Equal { .. } => None,
         }
+    }
+
+    /// The cross-request prefix cache, when this pool runs the paged
+    /// layout with prefix caching enabled (DESIGN.md §12).
+    pub fn prefix(&self) -> Option<&Arc<Mutex<PrefixCache>>> {
+        match &self.layout {
+            SharedLayout::Paged { prefix, .. } => prefix.as_ref(),
+            SharedLayout::Equal { .. } => None,
+        }
+    }
+
+    /// Counters of the prefix cache (hit rate, reused tokens, evictions)
+    /// for the serving layer's gauges; `None` without a prefix cache.
+    pub fn prefix_stats(&self) -> Option<PrefixCacheStats> {
+        self.prefix().map(|pc| pc.lock().unwrap().stats())
     }
 
     fn lease_pair(&self) -> Option<(SlotRange, SlotRange)> {
@@ -217,20 +248,22 @@ impl ModelSide {
     }
 
     /// A side over a shared *paged* cache: leases blocks of `pool` on
-    /// demand, pads to the pool's trash slot (DESIGN.md §10).
+    /// demand, pads to the pool's trash slot (DESIGN.md §10). With a
+    /// prefix cache, a dry pool evicts unreferenced cached prompt blocks
+    /// before an allocation fails (DESIGN.md §12).
     fn with_paged(
         rt: &Runtime,
         name: &str,
         cache: CacheId,
         pool: Arc<Mutex<BlockPool>>,
+        prefix: Option<Arc<Mutex<PrefixCache>>>,
     ) -> crate::Result<Self> {
         let spec = rt.spec(name)?.clone();
-        Ok(Self {
-            name: name.to_string(),
-            spec,
-            cache,
-            slots: SlotCache::paged(pool),
-        })
+        let slots = match prefix {
+            Some(pc) => SlotCache::paged_with_prefix(pool, pc),
+            None => SlotCache::paged(pool),
+        };
+        Ok(Self { name: name.to_string(), spec, cache, slots })
     }
 
     /// Builds a width-padded forward request for `n` real tokens. Padding
@@ -335,9 +368,21 @@ impl Session {
         compiled: bool,
     ) -> crate::Result<Self> {
         let (drafter, target, lease) = match &pool.layout {
-            SharedLayout::Paged { drafter: dp, target: tp } => (
-                ModelSide::with_paged(rt, &pool.drafter_name, pool.drafter_cache, dp.clone())?,
-                ModelSide::with_paged(rt, &pool.target_name, pool.target_cache, tp.clone())?,
+            SharedLayout::Paged { drafter: dp, target: tp, prefix } => (
+                ModelSide::with_paged(
+                    rt,
+                    &pool.drafter_name,
+                    pool.drafter_cache,
+                    dp.clone(),
+                    prefix.clone(),
+                )?,
+                ModelSide::with_paged(
+                    rt,
+                    &pool.target_name,
+                    pool.target_cache,
+                    tp.clone(),
+                    prefix.clone(),
+                )?,
                 SharedLease::Paged(Arc::clone(pool)),
             ),
             SharedLayout::Equal { .. } => {
@@ -374,9 +419,35 @@ impl Session {
         self.committed.len()
     }
 
+    /// Looks up the longest cached prefix of the *prefilled* prompt body
+    /// (`prompt[..P-1]`) in the cross-request prefix cache and maps its
+    /// blocks read-shared into both sides' block tables (refcounts
+    /// bumped; DESIGN.md §12). [`Session::prefill`] then starts at the
+    /// first uncached token. Returns the number of reused tokens — 0
+    /// outside the paged+prefix layout, and for prompts shorter than one
+    /// block.
+    pub fn attach_prefix(&mut self, prompt: &[u32]) -> usize {
+        if prompt.len() < 2 {
+            return 0;
+        }
+        let Some(SharedLease::Paged(pool)) = &self.shared else { return 0 };
+        let Some(pc) = pool.prefix() else { return 0 };
+        let body = &prompt[..prompt.len() - 1];
+        let hit = pc.lock().unwrap().acquire(body);
+        if hit.tokens == 0 {
+            return 0;
+        }
+        self.drafter.slots.attach_prefix(&hit.blocks[0]);
+        self.target.slots.attach_prefix(&hit.blocks[1]);
+        hit.tokens
+    }
+
     /// Prefills `prompt[..P-1]` into both caches and seeds `committed`
-    /// with the whole prompt. Returns the verifier reply of the last
-    /// prefill chunk (its hidden state seeds the depth predictor).
+    /// with the whole prompt. When a cached prefix was attached
+    /// ([`Session::attach_prefix`]), each side resumes at its first
+    /// uncached token instead of token zero. Returns the verifier reply
+    /// of the last prefill chunk (its hidden state seeds the depth
+    /// predictor); `None` when the whole body came from cache.
     pub fn prefill(&mut self, prompt: &[u32]) -> crate::Result<Option<ForwardReply>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(self.committed.is_empty(), "session already prefilled");
@@ -387,6 +458,23 @@ impl Session {
         let mode = self.exec_mode;
         prefill_side(&rt, &mut self.drafter, body, mode)?;
         prefill_side(&rt, &mut self.target, body, mode)
+    }
+
+    /// Prompt tokens both sides hold committed before any prefill call —
+    /// the cached-prefix resume point (0 without an attached prefix).
+    pub fn attached_prefix_len(&self) -> usize {
+        self.drafter.slots.committed_len().min(self.target.slots.committed_len())
+    }
+
+    /// Counts this session's consumed prefix reuse into the cache's
+    /// hit-rate gauges. Called once by the task's prefill step — i.e.
+    /// only for *admitted* sessions — so rejected or parked admission
+    /// probes (whose acquired references release unused) never inflate
+    /// the stats. No-op outside the paged+prefix layout.
+    pub fn record_prefix_reuse(&self) {
+        let Some(SharedLease::Paged(pool)) = &self.shared else { return };
+        let Some(pc) = pool.prefix() else { return };
+        pc.lock().unwrap().record_reuse(self.attached_prefix_len());
     }
 
     /// Remaining generation headroom given a per-iteration tree budget.
@@ -416,14 +504,18 @@ impl Session {
     }
 }
 
-/// Streams `body` through one model side in width-padded chunks.
+/// Streams `body` through one model side in width-padded chunks. The
+/// side's already-committed slot count is the resume point: an attached
+/// cached prefix (DESIGN.md §12) covers tokens `0..committed_len`, so
+/// prefill starts there — positions continue the sequence, and the mask's
+/// prefix row already names the shared slots.
 fn prefill_side(
     rt: &Runtime,
     side: &mut ModelSide,
     body: &[u32],
     mode: ExecMode,
 ) -> crate::Result<Option<ForwardReply>> {
-    let mut pos = 0usize;
+    let mut pos = side.slots.committed_len();
     let mut reply = None;
     while pos < body.len() {
         let n = (body.len() - pos).min(64);
@@ -449,6 +541,29 @@ fn prefill_side(
 
 impl Drop for Session {
     fn drop(&mut self) {
+        // Prefix-cache insertion (DESIGN.md §12): completion, disconnect
+        // and preemption all land here. Fully-committed prompt blocks are
+        // donated to the trie instead of freed — committed slot j holds
+        // token committed[j] on both sides, so the trie is keyed by the
+        // exact token prefix. A preempted session's resumed incarnation
+        // re-prefills the same context and hits these blocks immediately.
+        if let Some(SharedLease::Paged(pool)) = &self.shared {
+            if let Some(pc) = pool.prefix() {
+                let n = self
+                    .drafter
+                    .slots
+                    .committed_len()
+                    .min(self.target.slots.committed_len())
+                    .min(self.committed.len());
+                if n > 0 {
+                    let tokens = self.committed[..n].to_vec();
+                    pc.lock().unwrap().insert(
+                        &tokens,
+                        &mut [&mut self.drafter.slots, &mut self.target.slots],
+                    );
+                }
+            }
+        }
         match self.shared.take() {
             // Shared caches outlive the session: just return the leases
             // (stale K/V stays in the buffer but no mask can see it).

@@ -510,6 +510,10 @@ pub struct SpecTask {
     max_new: usize,
     /// Keep enough headroom for one full tree + tail + bonus chain.
     tree_budget: usize,
+    /// Prompt tokens served by the cross-request prefix cache (DESIGN.md
+    /// §12): prefill resumes at this offset, and admission budgets only
+    /// for the remainder.
+    reused_prefix: usize,
     /// Per-session plan snapshot: a concurrent session finishing (and
     /// re-searching the shared plan) never changes this task mid-flight.
     plan: Plan,
@@ -1259,6 +1263,9 @@ impl SpecTask {
 
     fn step_prefill(&mut self) -> crate::Result<StepOutcome> {
         let prompt = std::mem::take(&mut self.prompt);
+        // This task was admitted: its attached prefix (if any) is now
+        // consumed, so it counts toward the cache's hit-rate gauges.
+        self.sess.record_prefix_reuse();
         let t_prefill = Instant::now();
         let prefill_reply = self.sess.prefill(&prompt)?;
         self.prefill_seconds = t_prefill.elapsed().as_secs_f64();
@@ -1413,6 +1420,13 @@ impl DecodeTask for SpecTask {
         self.sess.headroom(self.tree_budget)
     }
 
+    fn uncached_prompt_len(&self) -> Option<usize> {
+        // Admission budgets only for the prompt tail the prefix cache
+        // did not cover (DESIGN.md §12). `prompt` is drained by the
+        // prefill step, so this naturally reaches 0 afterwards.
+        Some(self.prompt.len().saturating_sub(self.reused_prefix))
+    }
+
     fn kv_slots_in_use(&self) -> usize {
         self.sess.drafter.slots.in_use() + self.sess.target.slots.in_use()
     }
@@ -1482,6 +1496,14 @@ impl StepEngine for SpecDecoder {
                 self.cfg.compiled,
             )?
         };
+        // Cross-request prefix reuse (DESIGN.md §12): map the longest
+        // cached prefix of the prompt read-shared into both sides before
+        // any budgeting, so the tree-budget clamp below and the server's
+        // admission check both see the *post-reuse* picture — attached
+        // blocks consume no new pool blocks and the prefill demand
+        // shrinks to the uncached tail.
+        let mut sess = sess;
+        let reused_prefix = sess.attach_prefix(prompt);
         // Keep enough headroom for one full tree + tail + bonus chain —
         // clamped to the shared pool's current headroom in paged mode, so
         // admission asks "does the pool cover prompt + tree budget", not
@@ -1505,6 +1527,7 @@ impl StepEngine for SpecDecoder {
             prompt: prompt.to_vec(),
             max_new,
             tree_budget,
+            reused_prefix,
             plan,
             head: None,
             depth_hint: None,
@@ -1962,6 +1985,10 @@ impl StepEngine for SpecDecoder {
             .as_ref()
             .and_then(|p| p.block_occupancy())
             .map(|(used, total)| (used as u64, total as u64))
+    }
+
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixCacheStats> {
+        self.pool.as_ref().and_then(|p| p.prefix_stats())
     }
 }
 

@@ -68,6 +68,15 @@ pub trait DecodeTask: Send + std::any::Any {
     /// checks this against the prompt length before scheduling a task.
     fn headroom(&self) -> usize;
 
+    /// Prompt tokens this task still has to prefill into *fresh* KV
+    /// slots — the prompt minus any prefix reused from a cross-request
+    /// prefix cache (DESIGN.md §12). `None` when the engine cannot tell;
+    /// admission then budgets for the whole prompt. Only meaningful
+    /// before the prefill step runs.
+    fn uncached_prompt_len(&self) -> Option<usize> {
+        None
+    }
+
     /// KV slots currently held by this task across both model sides
     /// (observability: the server surfaces the aggregate in its stats).
     fn kv_slots_in_use(&self) -> usize {
@@ -127,6 +136,15 @@ pub trait StepEngine: super::Engine {
     /// equal-partition layout). The serving layer mirrors this into its
     /// `ServerStats` occupancy gauges once per scheduling round.
     fn cache_occupancy(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// Counters of the engine's cross-request prefix cache (DESIGN.md
+    /// §12) — hit rate, reused tokens, evictions, cached-block gauge —
+    /// or `None` when the engine runs without one. Mirrored into the
+    /// serving stats once per scheduling round, like
+    /// [`StepEngine::cache_occupancy`].
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixCacheStats> {
         None
     }
 }

@@ -30,13 +30,34 @@
 //!   nothing about the static graph shapes changes.
 //!
 //! In both layouts a session's per-row masks reference only slots it owns
-//! ([`SlotOwnership::contains`]), which keeps cross-session batch masks
-//! block-diagonal — a session can never reference, let alone read, another
-//! session's slots.
+//! ([`SlotOwnership::contains`]): *writable* slot sets are disjoint, so a
+//! session can never reference another session's private slots and
+//! cross-session batch masks stay block-diagonal. The one deliberate
+//! exception is read-shared prefix blocks (§12 below): many sessions may
+//! *read* the same cached prompt blocks, whose K/V all of them agree on
+//! byte-for-byte.
+//!
+//! ## Cross-request prefix reuse (DESIGN.md §12)
+//!
+//! Paged blocks are **refcounted**: [`BlockPool::lease`] hands a block
+//! out at refcount 1, [`BlockPool::retain`] lets a second holder map the
+//! same block *read-shared*, and a block only returns to the free list
+//! when its last reference releases. On top of that sits the
+//! [`prefix::PrefixCache`] — a block-granularity radix trie keyed on
+//! token ids that keeps fully-committed prompt blocks alive across
+//! requests, so a request whose prompt starts with a cached prefix
+//! attaches those blocks read-shared ([`SlotCache::attach_prefix`]) and
+//! prefills only the uncached tail. Divergence is copy-on-write at block
+//! granularity: the first partially-matched block is never shared — its
+//! tokens re-prefill into the session's own exclusive blocks.
 
 use std::sync::{Arc, Mutex};
 
 use crate::tree::MaskBuilder;
+
+pub mod prefix;
+
+pub use prefix::{PrefixCache, PrefixCacheStats, PrefixHit};
 
 /// A contiguous run of slots inside a shared cache array — one session's
 /// lease from a [`SlotPartition`], or one block of a [`BlockPool`].
@@ -146,6 +167,44 @@ impl std::fmt::Display for PoolExhausted {
 
 impl std::error::Error for PoolExhausted {}
 
+/// Typed failure from [`BlockPool::try_release`]: the caller tried to
+/// return a block the pool never handed out, or one whose refcount is
+/// already zero (a double release). `release` debug-asserts on these and
+/// ignores them in release builds — the free list stays duplicate-free
+/// either way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockReleaseError {
+    /// `block` is not a block of this pool.
+    ForeignBlock {
+        /// The offending block id.
+        block: u32,
+        /// Blocks the pool actually has.
+        num_blocks: u32,
+    },
+    /// `block` is already fully released (refcount 0) — releasing it
+    /// again would underflow the refcount and duplicate it in the free
+    /// list.
+    NotLeased {
+        /// The offending block id.
+        block: u32,
+    },
+}
+
+impl std::fmt::Display for BlockReleaseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BlockReleaseError::ForeignBlock { block, num_blocks } => {
+                write!(f, "foreign block {block} returned to a {num_blocks}-block pool")
+            }
+            BlockReleaseError::NotLeased { block } => {
+                write!(f, "double release of block {block} (refcount already 0)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BlockReleaseError {}
+
 /// The slot set a session may reference — the confinement domain its mask
 /// rows are checked against ([`crate::tree::rows_owned`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -157,18 +216,26 @@ pub enum SlotOwnership {
     Blocks {
         /// Slots per block.
         block_size: u32,
-        /// Owned block indices.
+        /// Exclusively owned block indices (allocatable + referenceable).
         blocks: Vec<u32>,
+        /// Read-shared prefix-cache blocks (DESIGN.md §12): the session
+        /// may *reference* their slots in mask rows (they hold its
+        /// committed prompt prefix) but never allocates from them — the
+        /// blocks are refcounted in the pool and may be mapped into many
+        /// sessions at once.
+        shared: Vec<u32>,
     },
 }
 
 impl SlotOwnership {
-    /// True when `slot` is inside this ownership set.
+    /// True when `slot` is inside this ownership set (exclusive or
+    /// read-shared).
     pub fn contains(&self, slot: u32) -> bool {
         match self {
             SlotOwnership::Range(r) => r.contains(slot),
-            SlotOwnership::Blocks { block_size, blocks } => {
-                blocks.contains(&(slot / block_size))
+            SlotOwnership::Blocks { block_size, blocks, shared } => {
+                let b = slot / block_size;
+                blocks.contains(&b) || shared.contains(&b)
             }
         }
     }
@@ -259,12 +326,28 @@ impl SlotPartition {
 /// demand** through a paged [`SlotCache`] and return them the moment they
 /// are fully free, so capacity follows the actual token footprint instead
 /// of a worst-case per-session quota.
+///
+/// Blocks are **refcounted** (DESIGN.md §12): [`BlockPool::lease`] hands
+/// a block out at refcount 1 (exclusive), [`BlockPool::retain`] adds a
+/// read-shared reference (how the prefix cache maps one cached prompt
+/// block into many sessions), and a block only rejoins the free list when
+/// its last reference releases.
 #[derive(Debug)]
 pub struct BlockPool {
     total_capacity: usize,
     block_size: u32,
     num_blocks: u32,
     free: Vec<u32>,
+    /// Per-block reference count; 0 = in the free list.
+    refs: Vec<u32>,
+    /// True while the prefix trie holds a reference to the block — the
+    /// "cached, reclaimable once nobody else references it" flag the LRU
+    /// eviction pass and the admission signal read.
+    cached: Vec<bool>,
+    /// Maintained count of blocks with `cached && refs == 1`, so the
+    /// admission-path [`BlockPool::evictable_blocks`] gauge is O(1)
+    /// instead of a full-pool scan under the pool lock.
+    evictable: usize,
 }
 
 impl BlockPool {
@@ -296,6 +379,9 @@ impl BlockPool {
             block_size: block_size as u32,
             num_blocks: num as u32,
             free,
+            refs: vec![0; num],
+            cached: vec![false; num],
+            evictable: 0,
         })
     }
 
@@ -335,17 +421,101 @@ impl BlockPool {
         SlotRange { base: block * self.block_size, len: self.block_size }
     }
 
-    /// Leases one block, or `None` when the pool is dry (the serving
-    /// layer turns a dry pool mid-generation into a preemption).
+    /// Leases one block (refcount 0 → 1), or `None` when the pool is dry
+    /// (the serving layer evicts cached prefix blocks, then turns a
+    /// still-dry pool mid-generation into a preemption).
     pub fn lease(&mut self) -> Option<u32> {
-        self.free.pop()
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refs[b as usize], 0, "free block {b} had live refs");
+        self.refs[b as usize] = 1;
+        Some(b)
     }
 
-    /// Returns a leased block.
+    /// Re-derives the maintained evictable counter around a mutation of
+    /// block `i`'s refcount or cached flag: `before` is whether the block
+    /// counted as evictable (`cached && refs == 1`) going in.
+    fn fix_evictable(&mut self, i: usize, before: bool) {
+        let now = self.cached[i] && self.refs[i] == 1;
+        match (before, now) {
+            (false, true) => self.evictable += 1,
+            (true, false) => self.evictable -= 1,
+            _ => {}
+        }
+    }
+
+    /// Adds a read-shared reference to an already-leased block — how a
+    /// cached prefix block gets mapped into another session's block table
+    /// (DESIGN.md §12). Retaining a free block is a bug.
+    pub fn retain(&mut self, block: u32) {
+        debug_assert!(block < self.num_blocks, "foreign block retained: {block}");
+        debug_assert!(self.refs[block as usize] > 0, "retain of free block {block}");
+        let i = block as usize;
+        let before = self.cached[i] && self.refs[i] == 1;
+        self.refs[i] += 1;
+        self.fix_evictable(i, before);
+    }
+
+    /// Current reference count of `block` (0 = free).
+    pub fn ref_count(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+
+    /// Flags (or unflags) `block` as held by the prefix trie. Drives the
+    /// [`BlockPool::evictable_blocks`] reclaim signal; the trie sets it
+    /// when a block is donated and clears it on eviction.
+    pub fn mark_cached(&mut self, block: u32, cached: bool) {
+        debug_assert!(block < self.num_blocks, "foreign block flagged: {block}");
+        debug_assert!(!cached || self.refs[block as usize] > 0, "caching a free block");
+        let i = block as usize;
+        let before = self.cached[i] && self.refs[i] == 1;
+        self.cached[i] = cached;
+        self.fix_evictable(i, before);
+    }
+
+    /// True while the prefix trie holds a reference to `block`.
+    pub fn is_cached(&self, block: u32) -> bool {
+        self.cached[block as usize]
+    }
+
+    /// Blocks held *only* by the prefix trie (cached, refcount 1): what
+    /// an LRU eviction pass could free right now. Admission counts these
+    /// as reachable headroom — the pool reclaims them before any
+    /// preemption is considered (DESIGN.md §12). O(1): the count is
+    /// maintained across lease/retain/release/mark transitions, since
+    /// this gauge sits on the admission hot path under the pool lock.
+    pub fn evictable_blocks(&self) -> usize {
+        self.evictable
+    }
+
+    /// Drops one reference to a leased block; the block rejoins the free
+    /// list when the count hits zero. Double releases and foreign blocks
+    /// surface as a typed [`BlockReleaseError`] instead of corrupting the
+    /// free list.
+    pub fn try_release(&mut self, block: u32) -> Result<(), BlockReleaseError> {
+        if block >= self.num_blocks {
+            return Err(BlockReleaseError::ForeignBlock { block, num_blocks: self.num_blocks });
+        }
+        let i = block as usize;
+        if self.refs[i] == 0 {
+            return Err(BlockReleaseError::NotLeased { block });
+        }
+        let before = self.cached[i] && self.refs[i] == 1;
+        self.refs[i] -= 1;
+        if self.refs[i] == 0 {
+            debug_assert!(!self.free.contains(&block), "block {block} already in free list");
+            self.cached[i] = false;
+            self.free.push(block);
+        }
+        self.fix_evictable(i, before);
+        Ok(())
+    }
+
+    /// Returns a leased block ([`BlockPool::try_release`] with the error
+    /// path asserted away: callers that track their own block tables
+    /// cannot double-release except by bug).
     pub fn release(&mut self, block: u32) {
-        debug_assert!(block < self.num_blocks, "foreign block returned: {block}");
-        debug_assert!(!self.free.contains(&block), "double release of block {block}");
-        self.free.push(block);
+        let r = self.try_release(block);
+        debug_assert!(r.is_ok(), "{}", r.unwrap_err());
     }
 }
 
@@ -360,7 +530,15 @@ enum Backing {
     Paged {
         pool: Arc<Mutex<BlockPool>>,
         block_size: u32,
+        /// Exclusively owned (allocatable) blocks.
         blocks: Vec<u32>,
+        /// Read-shared prefix-cache blocks (DESIGN.md §12): referenced by
+        /// masks, never allocated from; one pool reference each, dropped
+        /// on reset/drop.
+        shared: Vec<u32>,
+        /// The cross-request prefix cache eviction routes through when
+        /// the pool runs dry.
+        prefix: Option<Arc<Mutex<PrefixCache>>>,
     },
 }
 
@@ -369,8 +547,11 @@ enum Backing {
 /// Owns a whole cache array ([`SlotCache::new`]), a leased [`SlotRange`]
 /// of a shared array ([`SlotCache::with_range`]), or a dynamic set of
 /// blocks of a shared [`BlockPool`] ([`SlotCache::paged`]); in every mode
-/// it only ever hands out slots it owns, which is what keeps
-/// cross-session masks block-diagonal in batched serving.
+/// it only ever hands out slots it owns exclusively, which is what keeps
+/// cross-session masks block-diagonal in batched serving. Read-shared
+/// prefix blocks ([`SlotCache::attach_prefix`], DESIGN.md §12) are
+/// additionally *referenceable* — but never allocated from — and may be
+/// mapped into many sessions at once.
 #[derive(Debug)]
 pub struct SlotCache {
     /// Size of the backing device array (the mask row width).
@@ -421,6 +602,19 @@ impl SlotCache {
     /// A cache leasing blocks of `pool` on demand (paged batching mode;
     /// DESIGN.md §10). Starts with no blocks: the first `alloc` leases.
     pub fn paged(pool: Arc<Mutex<BlockPool>>) -> Self {
+        Self::paged_inner(pool, None)
+    }
+
+    /// A paged cache wired to a cross-request [`PrefixCache`] (DESIGN.md
+    /// §12) that has this cache's pool as one of its sides. A dry pool
+    /// first evicts unreferenced cached prefix blocks (LRU) before an
+    /// allocation fails, and [`SlotCache::available`] counts those
+    /// evictable blocks as reachable headroom.
+    pub fn paged_with_prefix(pool: Arc<Mutex<BlockPool>>, prefix: Arc<Mutex<PrefixCache>>) -> Self {
+        Self::paged_inner(pool, Some(prefix))
+    }
+
+    fn paged_inner(pool: Arc<Mutex<BlockPool>>, prefix: Option<Arc<Mutex<PrefixCache>>>) -> Self {
         let (total_capacity, trash, block_size, limit) = {
             let p = pool.lock().unwrap();
             (
@@ -434,7 +628,13 @@ impl SlotCache {
             total_capacity,
             trash,
             lease_limit: limit,
-            backing: Backing::Paged { pool, block_size, blocks: Vec::new() },
+            backing: Backing::Paged {
+                pool,
+                block_size,
+                blocks: Vec::new(),
+                shared: Vec::new(),
+                prefix,
+            },
             free: Vec::new(),
             committed: Vec::new(),
             mask: MaskBuilder::new(total_capacity),
@@ -452,13 +652,14 @@ impl SlotCache {
         self.total_capacity
     }
 
-    /// Slots this cache currently owns (range length, or leased blocks ×
-    /// block size — grows and shrinks in paged mode).
+    /// Slots this cache currently owns or shares (range length, or
+    /// exclusive + read-shared blocks × block size — grows and shrinks in
+    /// paged mode).
     pub fn usable(&self) -> usize {
         match &self.backing {
             Backing::Fixed(r) => r.len as usize,
-            Backing::Paged { block_size, blocks, .. } => {
-                blocks.len() * *block_size as usize
+            Backing::Paged { block_size, blocks, shared, .. } => {
+                (blocks.len() + shared.len()) * *block_size as usize
             }
         }
     }
@@ -475,11 +676,20 @@ impl SlotCache {
         matches!(self.backing, Backing::Paged { .. })
     }
 
-    /// Blocks currently leased (paged mode; 0 otherwise).
+    /// Blocks currently leased exclusively (paged mode; 0 otherwise).
     pub fn owned_blocks(&self) -> usize {
         match &self.backing {
             Backing::Fixed(_) => 0,
             Backing::Paged { blocks, .. } => blocks.len(),
+        }
+    }
+
+    /// Read-shared prefix blocks currently attached (paged mode with a
+    /// prefix cache; 0 otherwise).
+    pub fn shared_blocks(&self) -> usize {
+        match &self.backing {
+            Backing::Fixed(_) => 0,
+            Backing::Paged { shared, .. } => shared.len(),
         }
     }
 
@@ -488,9 +698,11 @@ impl SlotCache {
     pub fn ownership(&self) -> SlotOwnership {
         match &self.backing {
             Backing::Fixed(r) => SlotOwnership::Range(*r),
-            Backing::Paged { block_size, blocks, .. } => {
-                SlotOwnership::Blocks { block_size: *block_size, blocks: blocks.clone() }
-            }
+            Backing::Paged { block_size, blocks, shared, .. } => SlotOwnership::Blocks {
+                block_size: *block_size,
+                blocks: blocks.clone(),
+                shared: shared.clone(),
+            },
         }
     }
 
@@ -501,12 +713,14 @@ impl SlotCache {
         slots.iter().all(|&s| self.owns(s))
     }
 
-    /// True when this cache currently owns `slot`.
+    /// True when this cache currently owns `slot` (exclusively, or as a
+    /// read-shared prefix block).
     pub fn owns(&self, slot: u32) -> bool {
         match &self.backing {
             Backing::Fixed(r) => r.contains(slot),
-            Backing::Paged { block_size, blocks, .. } => {
-                blocks.contains(&(slot / *block_size))
+            Backing::Paged { block_size, blocks, shared, .. } => {
+                let b = slot / *block_size;
+                blocks.contains(&b) || shared.contains(&b)
             }
         }
     }
@@ -517,15 +731,20 @@ impl SlotCache {
     }
 
     /// Slots allocatable *right now*: the local free list plus (in paged
-    /// mode) everything still leasable from the shared pool. This is the
-    /// token-level admission signal — the pool either covers a request's
-    /// prompt + tree budget or it does not, regardless of how the slots
-    /// fragment across blocks.
+    /// mode) everything still leasable from the shared pool — including
+    /// cached prefix blocks nobody references, which the LRU eviction
+    /// pass reclaims on demand before any preemption (DESIGN.md §12).
+    /// This is the token-level admission signal — the pool either covers
+    /// a request's prompt + tree budget or it does not, regardless of how
+    /// the slots fragment across blocks.
     pub fn available(&self) -> usize {
         let pooled = match &self.backing {
             Backing::Fixed(_) => 0,
-            Backing::Paged { pool, block_size, .. } => {
-                pool.lock().unwrap().free_blocks() * *block_size as usize
+            Backing::Paged { pool, block_size, prefix, .. } => {
+                let p = pool.lock().unwrap();
+                let reclaimable =
+                    p.free_blocks() + if prefix.is_some() { p.evictable_blocks() } else { 0 };
+                reclaimable * *block_size as usize
             }
         };
         self.free.len() + pooled
@@ -550,19 +769,31 @@ impl SlotCache {
     }
 
     /// Allocates `n` slots for draft/tree tokens, leasing blocks from the
-    /// shared pool on demand in paged mode. Returns `None` when the cache
-    /// (or pool) cannot host the tree — callers shrink the envelope, or
-    /// surface [`SlotCache::exhausted`] so the serving layer can preempt.
+    /// shared pool on demand in paged mode. A dry pool first reclaims
+    /// unreferenced cached prefix blocks through the LRU eviction pass
+    /// (DESIGN.md §12: eviction strictly before preemption). Returns
+    /// `None` when the cache (or pool) still cannot host the tree —
+    /// callers shrink the envelope, or surface [`SlotCache::exhausted`]
+    /// so the serving layer can preempt.
     pub fn alloc(&mut self, n: usize) -> Option<Vec<u32>> {
         if self.free.len() < n {
-            if let Backing::Paged { pool, blocks, .. } = &mut self.backing {
-                let mut p = pool.lock().unwrap();
-                while self.free.len() < n {
-                    let Some(b) = p.lease() else { break };
-                    let r = p.range_of(b);
-                    blocks.push(b);
-                    // Low slots first, matching the fixed-mode bias.
-                    self.free.extend((r.base..r.base + r.len).rev());
+            self.lease_blocks(n);
+            if self.free.len() < n {
+                // Eviction before preemption: ask the prefix cache to
+                // free LRU blocks nobody references, then re-lease. The
+                // pool lock is not held here (the eviction pass takes
+                // prefix → pool itself).
+                let evict = match &self.backing {
+                    Backing::Paged { prefix: Some(pc), block_size, .. } => {
+                        Some((Arc::clone(pc), *block_size as usize))
+                    }
+                    _ => None,
+                };
+                if let Some((pc, bs)) = evict {
+                    let need = (n - self.free.len()).div_ceil(bs);
+                    if pc.lock().unwrap().evict(need) > 0 {
+                        self.lease_blocks(n);
+                    }
                 }
             }
             if self.free.len() < n {
@@ -574,6 +805,84 @@ impl SlotCache {
             }
         }
         Some((0..n).map(|_| self.free.pop().unwrap()).collect())
+    }
+
+    /// Leases pool blocks until the local free list covers `n` slots (or
+    /// the pool runs dry). No-op for fixed-range caches.
+    fn lease_blocks(&mut self, n: usize) {
+        if let Backing::Paged { pool, blocks, .. } = &mut self.backing {
+            let mut p = pool.lock().unwrap();
+            while self.free.len() < n {
+                let Some(b) = p.lease() else { break };
+                let r = p.range_of(b);
+                blocks.push(b);
+                // Low slots first, matching the fixed-mode bias.
+                self.free.extend((r.base..r.base + r.len).rev());
+            }
+        }
+    }
+
+    /// Maps cached prefix blocks read-shared into this cache (DESIGN.md
+    /// §12): every slot of every block becomes part of the committed
+    /// prefix (mask-visible to all future rows) without consuming any new
+    /// pool block. The pool references were already taken by
+    /// [`PrefixCache::acquire`] and transfer to this cache — reset/drop
+    /// releases them. Must run before any prefill commits (the committed
+    /// sequence must start with the shared prefix).
+    pub fn attach_prefix(&mut self, attach: &[u32]) {
+        let Backing::Paged { pool, shared, .. } = &mut self.backing else {
+            panic!("attach_prefix on a non-paged cache");
+        };
+        debug_assert!(self.committed.is_empty(), "prefix attach must precede prefill");
+        let p = pool.lock().unwrap();
+        for &b in attach {
+            let r = p.range_of(b);
+            shared.push(b);
+            for s in r.base..r.base + r.len {
+                self.committed.push(s);
+                self.mask.commit_slot(s);
+            }
+        }
+    }
+
+    /// The exclusively-owned block holding committed chunk `chunk` —
+    /// `Some` only when the chunk's `block_size` committed slots fill
+    /// exactly one owned block (the donation purity condition: nothing
+    /// else lives in the block, so its K/V is precisely those tokens).
+    fn chunk_block(&self, chunk: usize) -> Option<u32> {
+        let Backing::Paged { block_size, blocks, .. } = &self.backing else { return None };
+        let bs = *block_size as usize;
+        let lo = chunk * bs;
+        if self.committed.len() < lo + bs {
+            return None;
+        }
+        let slots = &self.committed[lo..lo + bs];
+        let b = slots[0] / *block_size;
+        if !blocks.contains(&b) {
+            return None; // shared or foreign: not ours to donate
+        }
+        // `block_size` distinct committed slots inside one block cover it
+        // entirely, so purity reduces to same-block membership.
+        slots.iter().all(|&s| s / *block_size == b).then_some(b)
+    }
+
+    /// True when committed chunk `chunk` (tokens `[chunk·bs, (chunk+1)·bs)`
+    /// of the committed sequence) could be donated to the prefix trie.
+    pub fn can_donate_chunk(&self, chunk: usize) -> bool {
+        self.chunk_block(chunk).is_some()
+    }
+
+    /// Splits committed chunk `chunk`'s block out of the owned set for
+    /// donation to the prefix trie: the pool reference moves to the trie
+    /// instead of being released. The cache must be reset or dropped
+    /// right after the insertion walk — its committed bookkeeping still
+    /// names the donated slots, which is only sound during teardown.
+    pub fn take_donated_chunk(&mut self, chunk: usize) -> Option<u32> {
+        let b = self.chunk_block(chunk)?;
+        let Backing::Paged { blocks, .. } = &mut self.backing else { unreachable!() };
+        let i = blocks.iter().position(|&x| x == b).unwrap();
+        blocks.swap_remove(i);
+        Some(b)
     }
 
     /// The error a failed [`SlotCache::alloc`] should surface: the typed
@@ -646,10 +955,15 @@ impl SlotCache {
             Backing::Fixed(r) => {
                 self.free = (r.base..r.base + r.len).rev().collect();
             }
-            Backing::Paged { pool, blocks, .. } => {
+            Backing::Paged { pool, blocks, shared, .. } => {
                 self.free.clear();
                 let mut p = pool.lock().unwrap();
                 for b in blocks.drain(..) {
+                    p.release(b);
+                }
+                // Shared prefix blocks: drop this session's read
+                // reference (the trie's own reference keeps them cached).
+                for b in shared.drain(..) {
                     p.release(b);
                 }
             }
@@ -672,12 +986,16 @@ impl SlotCache {
 
 impl Drop for SlotCache {
     fn drop(&mut self) {
-        // Paged sessions return every leased block on completion,
-        // cancellation or preemption; fixed ranges are returned by their
-        // partition's owner.
-        if let Backing::Paged { pool, blocks, .. } = &mut self.backing {
+        // Paged sessions return every leased block — and drop their
+        // read-shared prefix references — on completion, cancellation or
+        // preemption; fixed ranges are returned by their partition's
+        // owner.
+        if let Backing::Paged { pool, blocks, shared, .. } = &mut self.backing {
             if let Ok(mut p) = pool.lock() {
                 for b in blocks.drain(..) {
+                    p.release(b);
+                }
+                for b in shared.drain(..) {
                     p.release(b);
                 }
             }
@@ -962,7 +1280,8 @@ mod tests {
 
     #[test]
     fn block_ownership_contains_matches_block_math() {
-        let own = SlotOwnership::Blocks { block_size: 4, blocks: vec![0, 3] };
+        let own =
+            SlotOwnership::Blocks { block_size: 4, blocks: vec![0, 3], shared: vec![] };
         for s in 0..4 {
             assert!(own.contains(s), "slot {s} is in block 0");
         }
@@ -972,6 +1291,118 @@ mod tests {
         for s in 12..16 {
             assert!(own.contains(s), "slot {s} is in block 3");
         }
+        // Read-shared prefix blocks count as referenceable too.
+        let own =
+            SlotOwnership::Blocks { block_size: 4, blocks: vec![0], shared: vec![2] };
+        assert!(own.contains(9), "slot 9 is in shared block 2");
+        assert!(!own.contains(5));
+    }
+
+    // ---------------------------------------------------------------
+    // Refcounted blocks + prefix attach/donate (DESIGN.md §12)
+    // ---------------------------------------------------------------
+
+    #[test]
+    fn block_release_is_hardened_against_double_release() {
+        let mut p = BlockPool::new(33, 8, None).unwrap();
+        let a = p.lease().unwrap();
+        assert_eq!(p.ref_count(a), 1);
+        assert!(p.try_release(a).is_ok());
+        assert_eq!(p.ref_count(a), 0);
+        // Second release: typed error, free list untouched.
+        assert_eq!(p.try_release(a), Err(BlockReleaseError::NotLeased { block: a }));
+        assert_eq!(
+            p.try_release(99),
+            Err(BlockReleaseError::ForeignBlock { block: 99, num_blocks: 4 })
+        );
+        // Free-list invariant: no block appears twice — leasing the whole
+        // pool yields each block exactly once.
+        let mut leased: Vec<u32> = (0..4).map(|_| p.lease().unwrap()).collect();
+        assert!(p.lease().is_none());
+        leased.sort_unstable();
+        leased.dedup();
+        assert_eq!(leased.len(), 4, "free list held a duplicate block");
+        // The error messages are informative.
+        let msg = BlockReleaseError::NotLeased { block: 7 }.to_string();
+        assert!(msg.contains('7') && msg.contains("release"), "uninformative: {msg}");
+    }
+
+    #[test]
+    fn retained_blocks_free_only_at_refcount_zero() {
+        let mut p = BlockPool::new(33, 8, None).unwrap();
+        let b = p.lease().unwrap();
+        p.retain(b);
+        assert_eq!(p.ref_count(b), 2);
+        p.release(b);
+        assert_eq!(p.ref_count(b), 1);
+        assert_eq!(p.free_blocks(), 3, "block stays leased while referenced");
+        p.release(b);
+        assert_eq!(p.free_blocks(), 4);
+        // Releasing past zero is the typed double-release error again.
+        assert!(p.try_release(b).is_err());
+    }
+
+    #[test]
+    fn cached_flag_drives_the_evictable_gauge() {
+        let mut p = BlockPool::new(33, 8, None).unwrap();
+        let a = p.lease().unwrap();
+        let b = p.lease().unwrap();
+        p.mark_cached(a, true);
+        p.mark_cached(b, true);
+        assert_eq!(p.evictable_blocks(), 2);
+        // A session attaching block `a` read-shared pins it.
+        p.retain(a);
+        assert_eq!(p.evictable_blocks(), 1);
+        p.release(a);
+        assert_eq!(p.evictable_blocks(), 2);
+        // Releasing the trie's reference clears the flag with the block.
+        p.release(b);
+        assert!(!p.is_cached(b));
+        assert_eq!(p.evictable_blocks(), 1);
+    }
+
+    #[test]
+    fn attach_prefix_commits_shared_slots_without_new_blocks() {
+        let p = pool(33, 8);
+        // Donor leases a block the "trie" will share out.
+        let cached = p.lock().unwrap().lease().unwrap();
+        p.lock().unwrap().retain(cached); // the attaching session's reference
+        let mut c = SlotCache::paged(p.clone());
+        c.attach_prefix(&[cached]);
+        assert_eq!(c.shared_blocks(), 1);
+        assert_eq!(c.owned_blocks(), 0, "attach consumes no new pool block");
+        assert_eq!(c.committed_len(), 8, "every shared slot is committed");
+        assert_eq!(c.mask_builder().committed_count(), 8);
+        let own = c.ownership();
+        let r = p.lock().unwrap().range_of(cached);
+        assert!((r.base..r.base + r.len).all(|s| own.contains(s) && c.owns(s)));
+        // Dropping the session releases only its read reference.
+        drop(c);
+        assert_eq!(p.lock().unwrap().ref_count(cached), 1);
+        p.lock().unwrap().release(cached);
+        assert_eq!(p.lock().unwrap().free_blocks(), 4);
+    }
+
+    #[test]
+    fn chunk_donation_requires_a_pure_fully_committed_block() {
+        let p = pool(33, 8);
+        let mut c = SlotCache::paged(p.clone());
+        let s = c.alloc(12).unwrap();
+        for &sl in &s[..10] {
+            c.commit(sl);
+        }
+        c.release(&s[10..]);
+        // Chunk 0: 8 committed slots filling one block — donatable.
+        assert!(c.can_donate_chunk(0));
+        // Chunk 1: only 2 committed slots — not a full chunk.
+        assert!(!c.can_donate_chunk(1));
+        let b = c.take_donated_chunk(0).unwrap();
+        assert_eq!(c.owned_blocks(), 1, "donated block left the owned set");
+        // The pool reference moved with the donation: dropping the cache
+        // must NOT free the donated block.
+        drop(c);
+        assert_eq!(p.lock().unwrap().ref_count(b), 1);
+        assert_eq!(p.lock().unwrap().free_blocks(), 3);
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Cross-request prefix cache: a block-granularity radix trie over
+//! refcounted paged KV blocks (DESIGN.md §12).
+//!
+//! Real serving traffic is dominated by shared system prompts and
+//! few-shot templates, yet every session used to prefill its prompt from
+//! token zero. The trie keeps **fully-committed prompt blocks** alive
+//! across requests: each node covers exactly one block —
+//! [`PrefixCache::block_size`] consecutive token ids — on *every* model
+//! side (drafter and verifier pools move in lockstep), so a lookup walks
+//! the prompt chunk by chunk and returns the longest cached prefix.
+//!
+//! * **Attach** ([`PrefixCache::acquire`] → [`SlotCache::attach_prefix`])
+//!   maps the matched blocks read-shared into a new session's block
+//!   tables, bumping each block's pool refcount; the session's prefill
+//!   then starts at the first uncached token. K/V reuse is sound because
+//!   positions are baked into the K/V at write time and a prompt prefix
+//!   always sits at positions `0..k`.
+//! * **Copy-on-write divergence** — sharing is whole-block: the first
+//!   partially-matched block is never attached; its tokens re-prefill
+//!   into the session's own exclusive blocks.
+//! * **Insert** ([`PrefixCache::insert`]) runs at session teardown
+//!   (completion, disconnect, preemption): chunks whose committed slots
+//!   fill exactly one exclusive block on every side are *donated* — the
+//!   session's pool reference transfers to the trie instead of being
+//!   released — so the next request with the same prefix hits.
+//! * **Evict** ([`PrefixCache::evict`]) reclaims least-recently-used leaf
+//!   nodes whose blocks nobody but the trie references, and runs whenever
+//!   the pool runs dry — strictly *before* the serving layer considers
+//!   preempting a live session.
+//!
+//! Lock order is always prefix-cache → block pool; [`SlotCache`] never
+//! holds a pool lock while entering the trie.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::{BlockPool, CacheConfigError, SlotCache};
+
+/// Aggregate counters of one [`PrefixCache`] — the serving layer mirrors
+/// these into its stats gauges once per scheduling round.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Consumed prefix lookups ([`PrefixCache::record_reuse`] calls: one
+    /// per admitted request's prefill; admission probes whose acquired
+    /// references release unused are not counted).
+    pub lookups: u64,
+    /// Consumed lookups that matched at least one cached block.
+    pub hits: u64,
+    /// Prompt tokens served from cache instead of prefilled.
+    pub tokens_reused: u64,
+    /// Blocks donated into the trie (per side).
+    pub insertions: u64,
+    /// Blocks evicted by the LRU pass (per side).
+    pub evictions: u64,
+    /// Gauge: blocks currently cached (per side) — live trie nodes.
+    pub cached_blocks: u64,
+}
+
+/// The result of a prefix lookup: the longest cached prefix's blocks,
+/// one list per model side, with one pool reference per block already
+/// taken on the caller's behalf (transfer them to the session's
+/// [`SlotCache::attach_prefix`], whose reset/drop releases them).
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    /// Matched blocks per side, in prefix order (side order = the pool
+    /// order the cache was built with).
+    pub blocks: Vec<Vec<u32>>,
+    /// Prompt tokens the blocks cover (`matched chunks × block_size`).
+    pub tokens: usize,
+}
+
+/// One trie node: a full block of tokens plus the block holding its K/V
+/// on each model side.
+struct Node {
+    /// The `block_size` token ids this node covers.
+    chunk: Vec<u32>,
+    /// One block per side (same order as [`PrefixCache`]'s pools).
+    blocks: Vec<u32>,
+    /// Arena id of the parent node (`None` for depth-0 chunks).
+    parent: Option<usize>,
+    /// Children keyed by their token chunk.
+    children: HashMap<Vec<u32>, usize>,
+    /// LRU stamp (global tick at last lookup/insert touch).
+    last_used: u64,
+}
+
+/// The cross-request radix prefix cache (see the module docs).
+pub struct PrefixCache {
+    pools: Vec<Arc<Mutex<BlockPool>>>,
+    block_size: usize,
+    /// Node arena; `None` marks freed (evicted) entries.
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    /// Depth-0 children, keyed by token chunk.
+    roots: HashMap<Vec<u32>, usize>,
+    tick: u64,
+    lookups: u64,
+    hits: u64,
+    tokens_reused: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl PrefixCache {
+    /// A cache over one refcounted [`BlockPool`] per model side. All
+    /// pools must share one block size (a trie node is one block of
+    /// tokens on *every* side); mismatches are the typed
+    /// [`CacheConfigError::BadBlockSize`].
+    pub fn new(pools: Vec<Arc<Mutex<BlockPool>>>) -> Result<Self, CacheConfigError> {
+        assert!(!pools.is_empty(), "prefix cache needs at least one pool");
+        let sizes: Vec<(usize, usize)> = pools
+            .iter()
+            .map(|p| {
+                let p = p.lock().unwrap();
+                (p.block_size() as usize, p.total_capacity())
+            })
+            .collect();
+        let block_size = sizes[0].0;
+        for &(bs, cap) in &sizes {
+            if bs != block_size {
+                return Err(CacheConfigError::BadBlockSize { capacity: cap, block_size: bs });
+            }
+        }
+        Ok(Self {
+            pools,
+            block_size,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: HashMap::new(),
+            tick: 0,
+            lookups: 0,
+            hits: 0,
+            tokens_reused: 0,
+            insertions: 0,
+            evictions: 0,
+        })
+    }
+
+    /// Tokens per cached block (shared by every side's pool).
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Model sides (pools) each node carries a block for.
+    pub fn sides(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Gauge: blocks currently cached per side (live trie nodes).
+    pub fn cached_blocks(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
+
+    /// Point-in-time counters (see [`PrefixCacheStats`]).
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            lookups: self.lookups,
+            hits: self.hits,
+            tokens_reused: self.tokens_reused,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            cached_blocks: self.cached_blocks() as u64,
+        }
+    }
+
+    /// Looks up the longest cached prefix of `tokens`, bumps each matched
+    /// node's LRU stamp, and takes one pool reference per matched block
+    /// on every side (see [`PrefixHit`] for the transfer contract).
+    ///
+    /// Deliberately does **not** count the hit-rate stats: admission
+    /// probes acquire and release prefixes without ever serving them
+    /// (parked resumes re-probe every few rounds), so the gauges are
+    /// counted by [`PrefixCache::record_reuse`] only once a task's
+    /// prefill actually consumes the attachment.
+    pub fn acquire(&mut self, tokens: &[u32]) -> PrefixHit {
+        self.tick += 1;
+        let tick = self.tick;
+        let mut path: Vec<usize> = Vec::new();
+        let mut cur: Option<usize> = None;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            let children = match cur {
+                None => &self.roots,
+                Some(id) => &self.nodes[id].as_ref().unwrap().children,
+            };
+            match children.get(chunk) {
+                Some(&id) => {
+                    path.push(id);
+                    cur = Some(id);
+                }
+                None => break,
+            }
+        }
+        let mut blocks: Vec<Vec<u32>> = vec![Vec::with_capacity(path.len()); self.pools.len()];
+        for &id in &path {
+            let node = self.nodes[id].as_mut().unwrap();
+            node.last_used = tick;
+            for (side, &b) in node.blocks.iter().enumerate() {
+                blocks[side].push(b);
+            }
+        }
+        // One lock round-trip per side for the whole path (acquire sits
+        // on the admission hot path under the trie mutex).
+        for (side, pool) in self.pools.iter().enumerate() {
+            let mut p = pool.lock().unwrap();
+            for &b in &blocks[side] {
+                p.retain(b);
+            }
+        }
+        PrefixHit { blocks, tokens: path.len() * self.block_size }
+    }
+
+    /// Counts one consumed prefix lookup into the hit-rate gauges:
+    /// `tokens` cached prompt tokens actually served (0 = a miss). The
+    /// engine calls this when an *admitted* task starts its prefill, so
+    /// rejected or parked admission probes — whose acquired references
+    /// release unused — never inflate `lookups`/`hits`/`tokens_reused`.
+    pub fn record_reuse(&mut self, tokens: usize) {
+        self.lookups += 1;
+        if tokens > 0 {
+            self.hits += 1;
+            self.tokens_reused += tokens as u64;
+        }
+    }
+
+    /// Inserts the committed token sequence of a session being torn down.
+    /// `sides` are the session's slot caches in pool order (e.g. drafter,
+    /// target); committed slot *j* of each must hold token `tokens[j]`.
+    ///
+    /// Chunks already in the trie refresh their LRU stamp; from the first
+    /// missing chunk on, each chunk is **donated** when *every* side can
+    /// split off its fully-committed block
+    /// ([`SlotCache::take_donated_chunk`]) — the session's pool reference
+    /// transfers to the trie — and insertion stops at the first chunk
+    /// that cannot be donated whole. Returns the donated chunk count.
+    /// The caches must be reset or dropped right after (they are mid-
+    /// teardown; donated slots stay in their committed bookkeeping).
+    pub fn insert(&mut self, tokens: &[u32], sides: &mut [&mut SlotCache]) -> usize {
+        assert_eq!(sides.len(), self.pools.len(), "one slot cache per side");
+        self.tick += 1;
+        let tick = self.tick;
+        let mut cur: Option<usize> = None;
+        let mut donated = 0usize;
+        for (i, chunk) in tokens.chunks_exact(self.block_size).enumerate() {
+            let children = match cur {
+                None => &self.roots,
+                Some(id) => &self.nodes[id].as_ref().unwrap().children,
+            };
+            if let Some(&id) = children.get(chunk) {
+                self.nodes[id].as_mut().unwrap().last_used = tick;
+                cur = Some(id);
+                continue;
+            }
+            // Donation is all-or-nothing across sides: check every side
+            // before taking from any, so a half-donatable chunk leaks
+            // nothing.
+            if !sides.iter().all(|s| s.can_donate_chunk(i)) {
+                break;
+            }
+            let blocks: Vec<u32> = sides
+                .iter_mut()
+                .map(|s| s.take_donated_chunk(i).expect("checked donatable"))
+                .collect();
+            for (side, &b) in blocks.iter().enumerate() {
+                self.pools[side].lock().unwrap().mark_cached(b, true);
+            }
+            let node = Node {
+                chunk: chunk.to_vec(),
+                blocks,
+                parent: cur,
+                children: HashMap::new(),
+                last_used: tick,
+            };
+            let id = self.alloc_node(node);
+            match cur {
+                None => {
+                    self.roots.insert(chunk.to_vec(), id);
+                }
+                Some(p) => {
+                    self.nodes[p].as_mut().unwrap().children.insert(chunk.to_vec(), id);
+                }
+            }
+            cur = Some(id);
+            donated += 1;
+            self.insertions += 1;
+        }
+        donated
+    }
+
+    /// LRU eviction pass: removes leaf nodes whose blocks nobody but the
+    /// trie references (pool refcount 1 on every side), least recently
+    /// used first, until `need` nodes have been freed or nothing is
+    /// evictable. One node frees one block on each side. Called by a
+    /// paged [`SlotCache`] whose pool ran dry — strictly before the
+    /// serving layer considers preemption. Returns freed node count.
+    ///
+    /// Each round collects every evictable leaf in one arena pass
+    /// (locking each side's pool once for the whole scan; the caller
+    /// holds the trie mutex, and sessions can only *gain* references
+    /// through it, so a sole-referenced snapshot cannot go stale) and
+    /// evicts in LRU order; the outer loop re-runs only when emptied
+    /// leaves promote their parents into candidates.
+    pub fn evict(&mut self, need: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < need {
+            let mut candidates: Vec<(u64, usize)> = {
+                // Lock order: pools in side order, matching every other
+                // multi-pool site (drafter before target).
+                let guards: Vec<_> = self.pools.iter().map(|p| p.lock().unwrap()).collect();
+                self.nodes
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(id, node)| {
+                        let node = node.as_ref()?;
+                        if !node.children.is_empty() {
+                            return None; // interior: keeps its subtree reachable
+                        }
+                        let sole = node
+                            .blocks
+                            .iter()
+                            .enumerate()
+                            .all(|(side, &b)| guards[side].ref_count(b) == 1);
+                        sole.then_some((node.last_used, id))
+                    })
+                    .collect()
+            };
+            if candidates.is_empty() {
+                break;
+            }
+            candidates.sort_unstable();
+            for (_, id) in candidates {
+                if freed >= need {
+                    break;
+                }
+                self.remove_node(id);
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn remove_node(&mut self, id: usize) {
+        let node = self.nodes[id].take().expect("evicting a freed node");
+        debug_assert!(node.children.is_empty(), "evicting an interior node");
+        match node.parent {
+            None => {
+                self.roots.remove(&node.chunk);
+            }
+            Some(p) => {
+                self.nodes[p].as_mut().unwrap().children.remove(&node.chunk);
+            }
+        }
+        for (side, &b) in node.blocks.iter().enumerate() {
+            let mut pool = self.pools[side].lock().unwrap();
+            pool.mark_cached(b, false);
+            pool.release(b);
+        }
+        self.evictions += 1;
+        self.free_nodes.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(capacity: usize, block_size: usize) -> Arc<Mutex<BlockPool>> {
+        Arc::new(Mutex::new(BlockPool::new(capacity, block_size, None).unwrap()))
+    }
+
+    /// Prefills `tokens` worth of committed slots into a fresh paged
+    /// cache (one committed slot per token, in order) and returns it.
+    fn committed_cache(p: &Arc<Mutex<BlockPool>>, n: usize) -> SlotCache {
+        let mut c = SlotCache::paged(p.clone());
+        let slots = c.alloc(n).unwrap();
+        for &s in &slots {
+            c.commit(s);
+        }
+        c
+    }
+
+    #[test]
+    fn insert_then_acquire_roundtrips_the_shared_prefix() {
+        let p = pool(65, 8); // 8 blocks
+        let mut pc = PrefixCache::new(vec![p.clone()]).unwrap();
+        let tokens: Vec<u32> = (100..120).collect(); // 2 full chunks + 4
+        let mut donor = committed_cache(&p, tokens.len());
+        assert_eq!(pc.insert(&tokens, &mut [&mut donor]), 2, "two pure chunks donated");
+        drop(donor); // donated blocks must survive the donor
+        assert_eq!(pc.cached_blocks(), 2);
+        assert_eq!(p.lock().unwrap().evictable_blocks(), 2);
+
+        // A new request with the same prompt start hits both chunks…
+        let hit = pc.acquire(&tokens);
+        pc.record_reuse(hit.tokens); // the "task" was admitted
+        assert_eq!(hit.tokens, 16);
+        assert_eq!(hit.blocks[0].len(), 2);
+        let mut user = SlotCache::paged(p.clone());
+        user.attach_prefix(&hit.blocks[0]);
+        assert_eq!(user.committed_len(), 16, "prefill starts at token 16");
+        // …and pins them against eviction while attached.
+        assert_eq!(p.lock().unwrap().evictable_blocks(), 0);
+        assert_eq!(pc.evict(2), 0, "referenced blocks are not evictable");
+        drop(user);
+        assert_eq!(p.lock().unwrap().evictable_blocks(), 2);
+
+        // A diverging prompt matches only the common chunk.
+        let mut other: Vec<u32> = tokens[..8].to_vec();
+        other.extend(900..908);
+        let hit = pc.acquire(&other);
+        pc.record_reuse(hit.tokens);
+        assert_eq!(hit.tokens, 8, "divergent second chunk is copy-on-write");
+        for side in hit.blocks {
+            for b in side {
+                p.lock().unwrap().release(b);
+            }
+        }
+        // An admission probe that acquires but is parked/rejected (refs
+        // released unused) must not count toward the hit-rate gauges.
+        let probe = pc.acquire(&tokens);
+        for side in probe.blocks {
+            for b in side {
+                p.lock().unwrap().release(b);
+            }
+        }
+        let s = pc.stats();
+        assert_eq!(s.lookups, 2, "probe acquires are not lookups");
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.tokens_reused, 24);
+        assert_eq!(s.insertions, 2);
+    }
+
+    #[test]
+    fn insert_refreshes_existing_chunks_and_extends_with_new_ones() {
+        let p = pool(129, 8); // 16 blocks
+        let mut pc = PrefixCache::new(vec![p.clone()]).unwrap();
+        let base: Vec<u32> = (0..16).collect();
+        let mut a = committed_cache(&p, 16);
+        assert_eq!(pc.insert(&base, &mut [&mut a]), 2);
+        drop(a);
+        // A longer committed sequence with the same start donates only
+        // the new deeper chunk; the existing ones keep their blocks.
+        let longer: Vec<u32> = (0..24).collect();
+        let mut b = committed_cache(&p, 24);
+        assert_eq!(pc.insert(&longer, &mut [&mut b]), 1, "only the third chunk is new");
+        drop(b);
+        assert_eq!(pc.cached_blocks(), 3);
+        assert_eq!(pc.acquire(&longer).tokens, 24);
+        // Release the acquire's references so the pool balances.
+        // (3 blocks at ref 2 → back to 1.)
+        let held = p.lock().unwrap().num_blocks() - p.lock().unwrap().free_blocks();
+        assert_eq!(held, 3, "only the cached blocks stay leased");
+    }
+
+    #[test]
+    fn evict_reclaims_lru_leaves_first_and_keeps_the_trie_prefix_closed() {
+        let p = pool(129, 8);
+        let mut pc = PrefixCache::new(vec![p.clone()]).unwrap();
+        let chain: Vec<u32> = (0..24).collect(); // 3 chained chunks
+        let mut a = committed_cache(&p, 24);
+        pc.insert(&chain, &mut [&mut a]);
+        drop(a);
+        let lone: Vec<u32> = (500..508).collect(); // an unrelated root chunk
+        let mut b = committed_cache(&p, 8);
+        pc.insert(&lone, &mut [&mut b]);
+        drop(b);
+        // Touch the lone chunk so the chain's leaf is the LRU leaf.
+        let h = pc.acquire(&lone);
+        for side in h.blocks {
+            for blk in side {
+                p.lock().unwrap().release(blk);
+            }
+        }
+        assert_eq!(pc.evict(1), 1);
+        // The chain lost its deepest chunk (leaf-first), not an interior
+        // node: the remaining prefix still resolves.
+        assert_eq!(pc.acquire(&chain).tokens, 16, "interior chunks survive");
+        assert_eq!(pc.cached_blocks(), 3);
+        assert_eq!(pc.stats().evictions, 1);
+        // Evicting everything drains back to an empty trie.
+        // (Drop the acquire refs first so the blocks are sole-referenced.)
+        let held: Vec<u32> = {
+            let pl = p.lock().unwrap();
+            (0..pl.num_blocks() as u32).filter(|&blk| pl.ref_count(blk) > 1).collect()
+        };
+        for blk in held {
+            p.lock().unwrap().release(blk);
+        }
+        assert_eq!(pc.evict(usize::MAX - 1), 3);
+        assert_eq!(pc.cached_blocks(), 0);
+        assert_eq!(p.lock().unwrap().free_blocks(), 16, "all blocks back in the pool");
+    }
+
+    #[test]
+    fn two_sided_cache_moves_block_pairs_in_lockstep() {
+        let dp = pool(65, 8);
+        let tp = pool(129, 8); // different capacity, same block size: fine
+        let mut pc = PrefixCache::new(vec![dp.clone(), tp.clone()]).unwrap();
+        let tokens: Vec<u32> = (40..56).collect();
+        let mut d = committed_cache(&dp, 16);
+        let mut t = committed_cache(&tp, 16);
+        assert_eq!(pc.insert(&tokens, &mut [&mut d, &mut t]), 2);
+        drop(d);
+        drop(t);
+        let hit = pc.acquire(&tokens);
+        assert_eq!(hit.blocks.len(), 2, "one block list per side");
+        assert_eq!((hit.blocks[0].len(), hit.blocks[1].len()), (2, 2));
+        let mut du = SlotCache::paged(dp.clone());
+        let mut tu = SlotCache::paged(tp.clone());
+        du.attach_prefix(&hit.blocks[0]);
+        tu.attach_prefix(&hit.blocks[1]);
+        assert_eq!(du.committed_len(), 16);
+        assert_eq!(tu.committed_len(), 16);
+        drop(du);
+        drop(tu);
+        assert_eq!(pc.evict(2), 2);
+        assert_eq!(dp.lock().unwrap().free_blocks(), 8);
+        assert_eq!(tp.lock().unwrap().free_blocks(), 16);
+    }
+
+    #[test]
+    fn mismatched_block_sizes_are_a_typed_config_error() {
+        let a = pool(65, 8);
+        let b = pool(65, 16);
+        assert!(matches!(
+            PrefixCache::new(vec![a, b]),
+            Err(CacheConfigError::BadBlockSize { .. })
+        ));
+    }
+
+    #[test]
+    fn donation_stops_at_the_first_impure_chunk_on_any_side() {
+        let p = pool(65, 8);
+        let mut pc = PrefixCache::new(vec![p.clone()]).unwrap();
+        // Donor committed 12 tokens: chunk 0 pure, chunk 1 incomplete.
+        let mut donor = committed_cache(&p, 12);
+        let tokens: Vec<u32> = (0..12).collect();
+        assert_eq!(pc.insert(&tokens, &mut [&mut donor]), 1);
+        assert_eq!(donor.owned_blocks(), 1, "impure chunk's block stays with the donor");
+        drop(donor);
+        assert_eq!(pc.cached_blocks(), 1);
+    }
+}

@@ -34,6 +34,8 @@ const FLAGS: &[&str] = &[
     "paged",
     "equal-partition",
     "no-batch-draft",
+    "prefix-cache",
+    "no-prefix-cache",
     "help",
 ];
 
@@ -258,6 +260,13 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
             // calls issue serially; only the verify stage packs.
             app.engine.batch.batch_draft = false;
         }
+        if args.flag("no-prefix-cache") {
+            // Every request prefills its whole prompt (DESIGN.md §12 off).
+            app.engine.batch.prefix_cache = false;
+        }
+        if args.flag("prefix-cache") {
+            app.engine.batch.prefix_cache = true;
+        }
         app.engine.batch.block_size =
             args.usize_or("block-size", app.engine.batch.block_size)?;
         if let Some(b) = args.get("cache-blocks") {
@@ -279,13 +288,21 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         ..ServeOpts::default()
     };
     let max_sessions = opts.max_sessions;
-    let layout = match (batched, app.engine.batch.paged, app.engine.batch.batch_draft) {
+    let mut layout = match (batched, app.engine.batch.paged, app.engine.batch.batch_draft) {
         (false, _, _) => "round-robin",
         (true, true, true) => "batched+paged",
         (true, true, false) => "batched+paged (verify-only)",
         (true, false, true) => "batched+equal-partition",
         (true, false, false) => "batched+equal-partition (verify-only)",
-    };
+    }
+    .to_string();
+    if batched && app.engine.batch.paged {
+        layout.push_str(if app.engine.batch.prefix_cache {
+            "+prefix-cache"
+        } else {
+            " (prefix cache off)"
+        });
+    }
     let srv = Server::spawn(&addr, engine, opts)?;
     eprintln!(
         "serving on {} (stream={stream}, max_sessions={max_sessions}, \
@@ -411,6 +428,10 @@ COMMON OPTIONS
   --equal-partition   fall back to equal fixed per-session cache regions
   --block-size N      slots per paged cache block (default 16)
   --cache-blocks N    cap the paged pool below device capacity
+  --no-prefix-cache   prefill every prompt from token zero instead of
+                      reusing cached cross-request prefix blocks
+                      (serve; the paged default caches shared prefixes)
+  --prefix-cache      re-enable the prefix cache over a config file
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

@@ -296,6 +296,13 @@ pub fn resolve_batched(
 /// request cleanly) rather than a 2-slot budget that guarantees an
 /// immediate `PoolExhausted` → preemption churn loop bounded only by
 /// `max_resumes`.
+///
+/// Under the cross-request prefix cache (DESIGN.md §12) the `available`
+/// argument is already *post-reuse*: an attached cached prefix consumes
+/// no free blocks, and blocks held only by the trie count as reclaimable
+/// (the LRU eviction pass frees them before any preemption), so a warm
+/// request's speculation budget reflects the headroom it actually has
+/// after reuse rather than a cold-prefill worst case.
 pub fn clamp_tree_budget(envelope: usize, available: usize) -> usize {
     envelope.min((available / 2).max(2.min(available)))
 }

@@ -104,6 +104,17 @@ pub struct ServerStats {
     pub blocks_in_use: AtomicU64,
     /// Gauge: total shared-pool blocks (paged layout only; 0 otherwise).
     pub blocks_total: AtomicU64,
+    /// Prefix-cache lookups: one per *admitted* request's prefill —
+    /// rejected/parked admission probes don't count (DESIGN.md §12).
+    pub prefix_lookups: AtomicU64,
+    /// Prefix-cache lookups that matched ≥ 1 cached block.
+    pub prefix_hits: AtomicU64,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_tokens_reused: AtomicU64,
+    /// Cached blocks reclaimed by the LRU eviction pass (per side).
+    pub prefix_evictions: AtomicU64,
+    /// Gauge: blocks currently held by the prefix trie (per side).
+    pub prefix_cached_blocks: AtomicU64,
     /// Per-request serving series: `server.queue_delay_s`,
     /// `server.ttft_s`, `server.tok_per_s`, `server.resume_delay_s`.
     pub recorder: Mutex<Recorder>,
@@ -136,6 +147,16 @@ pub struct StatsSnapshot {
     pub blocks_in_use: u64,
     /// Total shared-pool blocks (paged layout only).
     pub blocks_total: u64,
+    /// Prefix-cache lookups (DESIGN.md §12; 0 without a prefix cache).
+    pub prefix_lookups: u64,
+    /// Prefix-cache lookups that matched ≥ 1 cached block.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_tokens_reused: u64,
+    /// Cached blocks reclaimed by the LRU eviction pass.
+    pub prefix_evictions: u64,
+    /// Blocks currently held by the prefix trie (per side).
+    pub prefix_cached_blocks: u64,
     /// Mean queueing delay (ms).
     pub queue_delay_ms_mean: f64,
     /// Median time-to-first-token (ms).
@@ -163,6 +184,11 @@ impl ServerStats {
             kv_slots_in_use: self.kv_slots_in_use.load(Ordering::Relaxed),
             blocks_in_use: self.blocks_in_use.load(Ordering::Relaxed),
             blocks_total: self.blocks_total.load(Ordering::Relaxed),
+            prefix_lookups: self.prefix_lookups.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_tokens_reused: self.prefix_tokens_reused.load(Ordering::Relaxed),
+            prefix_evictions: self.prefix_evictions.load(Ordering::Relaxed),
+            prefix_cached_blocks: self.prefix_cached_blocks.load(Ordering::Relaxed),
             queue_delay_ms_mean: rec.mean("server.queue_delay_s") * 1e3,
             ttft_ms_p50: rec.percentile("server.ttft_s", 50.0) * 1e3,
             tok_per_s_mean: rec.mean("server.tok_per_s"),
@@ -189,6 +215,11 @@ impl StatsSnapshot {
             ("kv_slots_in_use", Json::Num(self.kv_slots_in_use as f64)),
             ("blocks_in_use", Json::Num(self.blocks_in_use as f64)),
             ("blocks_total", Json::Num(self.blocks_total as f64)),
+            ("prefix_lookups", Json::Num(self.prefix_lookups as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_tokens_reused", Json::Num(self.prefix_tokens_reused as f64)),
+            ("prefix_evictions", Json::Num(self.prefix_evictions as f64)),
+            ("prefix_cached_blocks", Json::Num(self.prefix_cached_blocks as f64)),
             ("queue_delay_ms_mean", num(self.queue_delay_ms_mean)),
             ("ttft_ms_p50", num(self.ttft_ms_p50)),
             ("tok_per_s_mean", num(self.tok_per_s_mean)),
@@ -688,8 +719,16 @@ pub struct MockStepEngine {
     /// (every built row is checked against the session's ownership;
     /// tests assert this stays 0).
     pub violations: Arc<std::sync::atomic::AtomicUsize>,
+    /// Prompt tokens actually prefilled into fresh KV slots across all
+    /// sessions (the prefix cache's saving shows up here: attached
+    /// prefix tokens are never counted).
+    pub prefilled_tokens: Arc<std::sync::atomic::AtomicUsize>,
+    /// Simulated prefill device time per *uncached* prompt token —
+    /// makes TTFT visibly track the prefix cache's savings.
+    pub prefill_cost: std::time::Duration,
     paged_pool: Option<Arc<Mutex<crate::kvcache::BlockPool>>>,
     equal_part: Option<Arc<Mutex<crate::kvcache::SlotPartition>>>,
+    prefix: Option<Arc<Mutex<crate::kvcache::PrefixCache>>>,
 }
 
 impl MockStepEngine {
@@ -704,8 +743,11 @@ impl MockStepEngine {
             capacity,
             slots_in_use: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
             violations: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            prefilled_tokens: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            prefill_cost: std::time::Duration::ZERO,
             paged_pool: None,
             equal_part: None,
+            prefix: None,
         }
     }
 
@@ -733,6 +775,27 @@ impl MockStepEngine {
         let mut e = Self::new(step_delay_ms, tokens_per_step, capacity);
         e.paged_pool = Some(Arc::new(Mutex::new(pool)));
         Ok(e)
+    }
+
+    /// Layers the cross-request prefix cache (DESIGN.md §12) over the
+    /// mock's paged pool: completed sessions donate fully-committed
+    /// prompt blocks into the radix trie and later sessions with a
+    /// shared prompt prefix attach them instead of prefilling. Requires
+    /// [`MockStepEngine::with_paged_pool`].
+    pub fn with_prefix_cache(mut self) -> Self {
+        let pool = self.paged_pool.as_ref().expect("prefix cache requires a paged pool");
+        let pc = crate::kvcache::PrefixCache::new(vec![pool.clone()])
+            .expect("single-pool prefix cache cannot mismatch block sizes");
+        self.prefix = Some(Arc::new(Mutex::new(pc)));
+        self
+    }
+
+    /// Charges `us_per_token` microseconds of simulated device time per
+    /// *uncached* prompt token during the prefill step, so TTFT reflects
+    /// how much prompt the prefix cache actually skipped.
+    pub fn with_prefill_cost(mut self, us_per_token: u64) -> Self {
+        self.prefill_cost = std::time::Duration::from_micros(us_per_token);
+        self
     }
 
     /// A mock whose sessions share one cache split into `sessions` equal
@@ -767,6 +830,17 @@ struct MockTask {
     /// incarnation — whose prompt grew by the generated prefix —
     /// continues the exact same sequence.
     seed_tok: u32,
+    /// The full prompt (kept for prefix-trie keying; committed slot `j`
+    /// holds token `prompt[j]` then generated token `j - prompt_len`).
+    prompt: Vec<u32>,
+    /// Prompt tokens served by the prefix cache: prefill starts here.
+    prefill_skip: usize,
+    /// Simulated device time per uncached prefill token.
+    prefill_cost: std::time::Duration,
+    /// Uncached-prefill-token counter (engine-wide).
+    prefilled: Arc<std::sync::atomic::AtomicUsize>,
+    /// The engine's prefix cache, for teardown donation.
+    prefix: Option<Arc<Mutex<crate::kvcache::PrefixCache>>>,
     /// Slots this task holds (mirrored into the engine gauge).
     held: usize,
     gauge: Arc<std::sync::atomic::AtomicUsize>,
@@ -843,11 +917,23 @@ impl MockTask {
         match self.state {
             TaskState::Done => Ok(StepOutcome { tokens: vec![], state: TaskState::Done }),
             TaskState::Prefill => {
-                if !self.kv_take(self.prompt_len, self.prompt_len)? {
+                // Prefill only the prompt tail the prefix cache did not
+                // cover (DESIGN.md §12): attached tokens are already
+                // committed in the slot cache.
+                let need = self.prompt_len - self.prefill_skip;
+                if !self.kv_take(need, need)? {
                     anyhow::bail!(
                         "mock KV cannot host a {}-token prompt",
                         self.prompt_len
                     );
+                }
+                // Admitted: the attached prefix is consumed — count it.
+                if let Some(pc) = &self.prefix {
+                    pc.lock().unwrap().record_reuse(self.prefill_skip);
+                }
+                self.prefilled.fetch_add(need, Ordering::Relaxed);
+                if !self.prefill_cost.is_zero() && need > 0 {
+                    std::thread::sleep(self.prefill_cost * need as u32);
                 }
                 self.state = if self.max_new == 0 || self.kv_headroom() == 0 {
                     TaskState::Done
@@ -885,8 +971,29 @@ impl MockTask {
 
 impl Drop for MockTask {
     fn drop(&mut self) {
+        // Prefix-cache insertion (DESIGN.md §12): donate fully-committed
+        // prompt blocks to the trie before the reset would free them.
+        // Committed slot j holds token (prompt ++ generated)[j].
+        if let (Some(pc), MockKv::Cache { cache, .. }) = (&self.prefix, &mut self.kv) {
+            let n = cache.committed_len().min(self.prompt_len + self.produced);
+            if n > 0 {
+                let tokens: Vec<u32> = (0..n)
+                    .map(|j| {
+                        if j < self.prompt_len {
+                            self.prompt[j]
+                        } else {
+                            // token_at(j - prompt_len), inlined to keep
+                            // the borrow of `cache` field-disjoint.
+                            self.seed_tok.wrapping_add((j - 1) as u32)
+                        }
+                    })
+                    .collect();
+                pc.lock().unwrap().insert(&tokens, &mut [cache]);
+            }
+        }
         // "Free the KV caches": return every held slot (and the equal-
-        // partition lease; a paged SlotCache returns its own blocks).
+        // partition lease; a paged SlotCache returns its own blocks and
+        // drops its read-shared prefix references).
         self.gauge.fetch_sub(self.held, Ordering::Relaxed);
         if let MockKv::Cache { cache, lease } = &mut self.kv {
             cache.reset();
@@ -917,6 +1024,10 @@ impl DecodeTask for MockTask {
         self.kv_headroom()
     }
 
+    fn uncached_prompt_len(&self) -> Option<usize> {
+        Some(self.prompt_len - self.prefill_skip)
+    }
+
     fn kv_slots_in_use(&self) -> usize {
         self.held
     }
@@ -935,8 +1046,26 @@ impl DecodeTask for MockTask {
 impl StepEngine for MockStepEngine {
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut prefill_skip = 0usize;
         let kv = if let Some(pool) = &self.paged_pool {
-            MockKv::Cache { cache: crate::kvcache::SlotCache::paged(pool.clone()), lease: None }
+            let cache = match &self.prefix {
+                Some(pc) => {
+                    // Attach the longest cached prefix read-shared and
+                    // start the prefill at the first uncached token
+                    // (the mock commits every prompt token, so the whole
+                    // prompt keys the trie).
+                    let mut cache =
+                        crate::kvcache::SlotCache::paged_with_prefix(pool.clone(), pc.clone());
+                    let hit = pc.lock().unwrap().acquire(prompt);
+                    if hit.tokens > 0 {
+                        cache.attach_prefix(&hit.blocks[0]);
+                        prefill_skip = hit.tokens;
+                    }
+                    cache
+                }
+                None => crate::kvcache::SlotCache::paged(pool.clone()),
+            };
+            MockKv::Cache { cache, lease: None }
         } else if let Some(part) = &self.equal_part {
             let (leased, total) = {
                 let mut p = part.lock().unwrap();
@@ -966,6 +1095,11 @@ impl StepEngine for MockStepEngine {
             delay: self.step_delay,
             draft_delay: self.draft_delay,
             seed_tok: prompt[0],
+            prompt: prompt.to_vec(),
+            prefill_skip,
+            prefill_cost: self.prefill_cost,
+            prefilled: self.prefilled_tokens.clone(),
+            prefix: self.prefix.clone(),
             held: 0,
             gauge: self.slots_in_use.clone(),
             violations: self.violations.clone(),
@@ -1007,6 +1141,10 @@ impl StepEngine for MockStepEngine {
             let p = p.lock().unwrap();
             (p.blocks_in_use() as u64, p.num_blocks() as u64)
         })
+    }
+
+    fn prefix_stats(&self) -> Option<crate::kvcache::PrefixCacheStats> {
+        self.prefix.as_ref().map(|pc| pc.lock().unwrap().stats())
     }
 }
 

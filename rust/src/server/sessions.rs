@@ -295,6 +295,13 @@ pub(super) fn run_worker(
             stats.blocks_in_use.store(used, Ordering::Relaxed);
             stats.blocks_total.store(total, Ordering::Relaxed);
         }
+        if let Some(ps) = engine.prefix_stats() {
+            stats.prefix_lookups.store(ps.lookups, Ordering::Relaxed);
+            stats.prefix_hits.store(ps.hits, Ordering::Relaxed);
+            stats.prefix_tokens_reused.store(ps.tokens_reused, Ordering::Relaxed);
+            stats.prefix_evictions.store(ps.evictions, Ordering::Relaxed);
+            stats.prefix_cached_blocks.store(ps.cached_blocks, Ordering::Relaxed);
+        }
     }
     // Dropping `live` drops every task → all session KV caches freed.
     // Parked resume jobs drop with their reply senders (connections see
@@ -329,18 +336,23 @@ fn admit(
     let remaining = job.max_new.saturating_sub(job.resumed.len());
     match engine.begin(&job.prompt, remaining) {
         Ok(task) => {
-            // Fresh jobs admit optimistically: pool covers prompt + tree
-            // budget (headroom already subtracts the budget). A *resumed*
-            // job re-admits only when the pool covers its whole remaining
-            // footprint beyond what live sessions are still projected to
-            // claim — optimistic re-admission of mutually-starved
-            // sessions would ping-pong through preempt/resume without
-            // anyone progressing.
+            // Token-level admission counts only *new* blocks: a prompt
+            // prefix served by the cross-request prefix cache (DESIGN.md
+            // §12) is already resident, so the footprint to budget for is
+            // the uncached tail.
+            let need = task.uncached_prompt_len().unwrap_or(job.prompt.len());
+            // Fresh jobs admit optimistically: pool covers the uncached
+            // prompt + tree budget (headroom already subtracts the
+            // budget). A *resumed* job re-admits only when the pool
+            // covers its whole remaining footprint beyond what live
+            // sessions are still projected to claim — optimistic
+            // re-admission of mutually-starved sessions would ping-pong
+            // through preempt/resume without anyone progressing.
             let fits = if fresh {
-                task.headroom() >= job.prompt.len() + 1
+                task.headroom() >= need + 1
             } else {
                 let outstanding: usize = live.iter().map(projected_demand).sum();
-                task.headroom() >= job.prompt.len() + remaining + 1 + outstanding
+                task.headroom() >= need + remaining + 1 + outstanding
             };
             if !fits {
                 if !fresh {

@@ -241,7 +241,11 @@ mod tests {
     fn rows_owned_checks_block_sets() {
         // Capacity 8, blocks of 2; session owns blocks 0 and 3
         // (slots 0, 1, 6, 7).
-        let own = crate::kvcache::SlotOwnership::Blocks { block_size: 2, blocks: vec![0, 3] };
+        let own = crate::kvcache::SlotOwnership::Blocks {
+            block_size: 2,
+            blocks: vec![0, 3],
+            shared: vec![],
+        };
         let ok = [1.0f32, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0];
         let bad = [1.0f32, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]; // slot 3 foreign
         assert!(rows_owned(&ok, 8, &own));
@@ -249,6 +253,15 @@ mod tests {
         // Multiple rows: one escape anywhere fails the whole block.
         let two = [1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         assert!(!rows_owned(&two, 8, &own), "row 2 references foreign slot 2");
+        // Read-shared prefix blocks are referenceable, exactly like owned
+        // ones (DESIGN.md §12): a committed shared-prefix slot in a mask
+        // row is not an escape.
+        let own = crate::kvcache::SlotOwnership::Blocks {
+            block_size: 2,
+            blocks: vec![3],
+            shared: vec![0],
+        };
+        assert!(rows_owned(&ok, 8, &own), "shared block 0 must be referenceable");
     }
 
     #[test]

@@ -293,17 +293,28 @@ fn prop_induced_subtree_preserves_probs() {
     );
 }
 
-/// Paged-cache safety (DESIGN.md §10): under random interleavings of
-/// session admit / alloc / reject-release / preempt / disconnect over one
-/// shared [`BlockPool`], every built (and packed) verify row's mask
-/// references only slots in blocks *currently owned* by that session —
-/// the block-ownership generalization of `rows_confined` — and the pool's
-/// block accounting never leaks or double-frees.
+/// Paged-cache safety (DESIGN.md §10 + §12): under random interleavings
+/// of session admit / prefix-attach / alloc / reject-release / preempt /
+/// disconnect-with-donation / LRU-evict over one shared refcounted
+/// [`BlockPool`] with a [`PrefixCache`] layered on top, every built (and
+/// packed) verify row's mask references only slots in blocks *currently
+/// owned or shared* by that session, block refcounts never drift or
+/// underflow (every reference — exclusive, read-shared, or trie-held —
+/// is accounted for exactly), the free list never disagrees with the
+/// refcounts, and an evicted (freed) block is never referenced by any
+/// live session's ownership set.
 #[test]
 fn prop_paged_masks_reference_only_owned_blocks() {
+    use yggdrasil::kvcache::{PrefixCache, SlotOwnership};
     struct Sim {
         cache: SlotCache,
         outstanding: Vec<u32>,
+    }
+    // The global token stream every session commits along: committed
+    // slot j of any session holds token seq(j), so sessions share
+    // prefixes and the radix trie gets genuine hits.
+    fn seq(j: usize) -> u32 {
+        (j as u32).wrapping_mul(31).wrapping_add(7) % 256
     }
     run_prop(
         "paged-block-ownership",
@@ -318,21 +329,32 @@ fn prop_paged_masks_reference_only_owned_blocks() {
             let pool = Arc::new(Mutex::new(
                 BlockPool::new(capacity, block_size, Some(nblocks)).map_err(|e| e.to_string())?,
             ));
+            let prefix = Arc::new(Mutex::new(
+                PrefixCache::new(vec![pool.clone()]).map_err(|e| e.to_string())?,
+            ));
             let mut sims: Vec<Option<Sim>> = (0..4).map(|_| None).collect();
             for _ in 0..(40 + rng.next_range(60)) {
                 let k = rng.next_range(sims.len());
-                match rng.next_range(5) {
-                    // Admit: open a paged session in a free seat.
+                match rng.next_range(7) {
+                    // Admit: open a paged session in a free seat and try
+                    // to attach a cached prefix of the shared stream.
                     0 => {
                         if sims[k].is_none() {
-                            sims[k] = Some(Sim {
-                                cache: SlotCache::paged(pool.clone()),
-                                outstanding: Vec::new(),
-                            });
+                            let mut cache =
+                                SlotCache::paged_with_prefix(pool.clone(), prefix.clone());
+                            let want = rng.next_range(4) * block_size;
+                            let tokens: Vec<u32> = (0..want).map(seq).collect();
+                            let hit = prefix.lock().unwrap().acquire(&tokens);
+                            if hit.tokens > 0 {
+                                cache.attach_prefix(&hit.blocks[0]);
+                            }
+                            sims[k] = Some(Sim { cache, outstanding: Vec::new() });
                         }
                     }
-                    // Alloc: lease on demand, build rows, check ownership,
-                    // commit a random prefix, keep the rest outstanding.
+                    // Alloc: lease on demand (evicting LRU cached blocks
+                    // when dry), build rows, check ownership, commit the
+                    // next run of the shared stream, keep the rest
+                    // outstanding.
                     1 => {
                         if let Some(s) = &mut sims[k] {
                             let n = 1 + rng.next_range(2 * block_size);
@@ -366,9 +388,34 @@ fn prop_paged_masks_reference_only_owned_blocks() {
                             s.cache.release(&out);
                         }
                     }
-                    // Preempt / disconnect: drop the session whole.
+                    // Preempt / disconnect: drop the session whole —
+                    // usually donating its committed prefix blocks into
+                    // the trie first (completion), sometimes not (a
+                    // session that never reached teardown insertion).
                     3 => {
-                        sims[k] = None;
+                        if let Some(mut s) = sims[k].take() {
+                            if rng.next_f32() < 0.7 {
+                                let n = s.cache.committed_len();
+                                let tokens: Vec<u32> = (0..n).map(seq).collect();
+                                prefix.lock().unwrap().insert(&tokens, &mut [&mut s.cache]);
+                            }
+                        }
+                    }
+                    // LRU eviction pass, as a dry pool would trigger it.
+                    4 => {
+                        prefix.lock().unwrap().evict(1 + rng.next_range(3));
+                    }
+                    // Prefix re-lookup on a live session's stream: takes
+                    // and immediately drops read references (an admission
+                    // probe whose task was rejected).
+                    5 => {
+                        let want = rng.next_range(5) * block_size;
+                        let tokens: Vec<u32> = (0..want).map(seq).collect();
+                        let hit = prefix.lock().unwrap().acquire(&tokens);
+                        let mut p = pool.lock().unwrap();
+                        for b in &hit.blocks[0] {
+                            p.try_release(*b).map_err(|e| format!("probe refs: {e}"))?;
+                        }
                     }
                     // Packed verify: one row per live session, packed
                     // block-diagonally; re-check each row against its
@@ -409,13 +456,51 @@ fn prop_paged_masks_reference_only_owned_blocks() {
                         }
                     }
                 }
-                // Accounting invariant: free + owned == total, always.
-                let owned: usize =
-                    sims.iter().flatten().map(|s| s.cache.owned_blocks()).sum();
-                let free = pool.lock().unwrap().free_blocks();
-                if free + owned != nblocks {
+                // Accounting invariant: every block's refcount equals
+                // exactly the references we can enumerate — one per
+                // session owning/sharing it plus one when the trie holds
+                // it — so refcounts can never have underflowed; the free
+                // list agrees with the zero-ref set; and no freed
+                // (evicted) block is referenced by any live ownership.
+                let mut expected: Vec<u32> = vec![0; nblocks];
+                for s in sims.iter().flatten() {
+                    if let SlotOwnership::Blocks { blocks, shared, .. } = s.cache.ownership() {
+                        for b in blocks.iter().chain(shared.iter()) {
+                            expected[*b as usize] += 1;
+                        }
+                    }
+                }
+                let p = pool.lock().unwrap();
+                let mut zero_refs = 0usize;
+                for b in 0..nblocks as u32 {
+                    let want = expected[b as usize] + u32::from(p.is_cached(b));
+                    let got = p.ref_count(b);
+                    if got != want {
+                        return Err(format!(
+                            "block {b}: refcount {got} != {want} enumerated references"
+                        ));
+                    }
+                    if got == 0 {
+                        zero_refs += 1;
+                    } else if expected[b as usize] == 0 && !p.is_cached(b) {
+                        return Err(format!("block {b}: refs held by nobody"));
+                    }
+                }
+                if p.free_blocks() != zero_refs {
                     return Err(format!(
-                        "block leak: free {free} + owned {owned} != {nblocks}"
+                        "free list {} blocks != {zero_refs} zero-ref blocks",
+                        p.free_blocks()
+                    ));
+                }
+                // The O(1) maintained evictable gauge must agree with a
+                // from-scratch recount at every step.
+                let recount = (0..nblocks as u32)
+                    .filter(|&b| p.is_cached(b) && p.ref_count(b) == 1)
+                    .count();
+                if p.evictable_blocks() != recount {
+                    return Err(format!(
+                        "evictable gauge {} != recount {recount}",
+                        p.evictable_blocks()
                     ));
                 }
             }

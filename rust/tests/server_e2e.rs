@@ -479,6 +479,130 @@ fn lone_oversized_paged_request_fails_cleanly_instead_of_livelocking() {
     assert_eq!(r.tokens, expected_tokens(&[5, 6], 4));
 }
 
+// ---------------------------------------------------------------------------
+// Cross-request prefix cache (DESIGN.md §12, mock).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_cache_halves_prefill_and_improves_warm_ttft() {
+    // The acceptance scenario: a shared system prompt 5 blocks long
+    // (40 tokens ≥ 4× the 8-slot block size) in front of distinct
+    // per-client suffixes, across 1 cold + 4 warm clients. With the
+    // prefix cache on, the warm clients attach the cached system blocks
+    // and prefill only their suffixes: total prefilled tokens must drop
+    // ≥ 2× vs cache-off, warm TTFT must improve (each uncached prefill
+    // token costs 1 ms of simulated device time), ownership violations
+    // must stay zero, and every stream must stay bit-exact.
+    let block = 8usize;
+    let sys: Vec<u32> = (0..40u32).map(|i| 5000 + i).collect();
+    let mk_prompt = |c: u32| -> Vec<u32> {
+        let mut p = sys.clone();
+        p.extend([100 * (c + 1), 100 * (c + 1) + 1, 100 * (c + 1) + 2]);
+        p
+    };
+    let mut prefilled = Vec::new();
+    let mut warm_ttft = Vec::new();
+    for prefix_on in [false, true] {
+        let mut engine = MockStepEngine::with_paged_pool(2, 2, 24 * block + 1, block)
+            .unwrap()
+            .with_prefill_cost(1000);
+        if prefix_on {
+            engine = engine.with_prefix_cache();
+        }
+        let counter = engine.prefilled_tokens.clone();
+        let violations = engine.violations.clone();
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 32, max_sessions: 8, ..ServeOpts::default() },
+        )
+        .unwrap();
+        // Cold client seeds the trie (its task's teardown donates the
+        // fully-committed system-prompt blocks).
+        let mut c0 = Client::connect(&srv.addr).unwrap();
+        let p0 = mk_prompt(0);
+        let r0 = c0.generate(0, &p0, 8).unwrap();
+        assert_eq!(r0.tokens, expected_tokens(&p0, 8));
+        // Warm wave: four concurrent clients share the system prompt.
+        let addr = srv.addr;
+        let handles: Vec<_> = (1..5u32)
+            .map(|c| {
+                let p = mk_prompt(c);
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&addr).unwrap();
+                    let r = cl.generate(c as u64, &p, 8).unwrap();
+                    (p, r)
+                })
+            })
+            .collect();
+        let mut ttft = 0.0f64;
+        for h in handles {
+            let (p, r) = h.join().unwrap();
+            assert_eq!(
+                r.tokens,
+                expected_tokens(&p, 8),
+                "prefix_on={prefix_on}: reused prefix corrupted the stream"
+            );
+            ttft += r.ttft_ms;
+        }
+        assert_eq!(
+            violations.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "prefix_on={prefix_on}: mask rows escaped their owned/shared blocks"
+        );
+        if prefix_on {
+            let snap = srv.stats.snapshot();
+            assert!(
+                snap.prefix_hits >= 4,
+                "all four warm admissions should hit, got {}",
+                snap.prefix_hits
+            );
+            assert!(snap.prefix_tokens_reused >= 4 * 40, "warm waves reuse the system prompt");
+            assert!(snap.prefix_cached_blocks >= 5, "system blocks stay cached");
+        }
+        prefilled.push(counter.load(std::sync::atomic::Ordering::Relaxed));
+        warm_ttft.push(ttft / 4.0);
+    }
+    let (off, on) = (prefilled[0], prefilled[1]);
+    assert!(
+        off >= 2 * on,
+        "prefix cache must cut total prefilled tokens ≥ 2×: {on} on vs {off} off"
+    );
+    assert!(
+        warm_ttft[1] < warm_ttft[0],
+        "warm TTFT must improve with the prefix cache: {:.1} ms on vs {:.1} ms off",
+        warm_ttft[1],
+        warm_ttft[0]
+    );
+}
+
+#[test]
+fn prefix_cache_on_off_streams_are_bit_identical() {
+    // Satellite parity check: the same prompt served twice with the
+    // prefix cache on (the second run attaches the first run's blocks —
+    // the stats prove it hit) must produce exactly the stream a
+    // cache-off server produces.
+    let prompt: Vec<u32> = (0..20u32).map(|i| 7000 + i).collect();
+    let mut streams: Vec<Vec<u32>> = Vec::new();
+    for prefix_on in [false, true] {
+        let mut engine = MockStepEngine::with_paged_pool(2, 2, 129, 8).unwrap();
+        if prefix_on {
+            engine = engine.with_prefix_cache();
+        }
+        let srv = Server::spawn("127.0.0.1:0", Box::new(engine), opts(4, true)).unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        let r1 = c.generate(1, &prompt, 10).unwrap();
+        let r2 = c.generate(2, &prompt, 10).unwrap();
+        assert_eq!(r1.tokens, r2.tokens, "prefix_on={prefix_on}: repeat run diverged");
+        if prefix_on {
+            let snap = srv.stats.snapshot();
+            assert!(snap.prefix_hits >= 1, "second identical prompt must hit the cache");
+        }
+        streams.push(r1.tokens);
+    }
+    assert_eq!(streams[0], streams[1], "cache on vs off streams diverged");
+}
+
 #[test]
 fn paged_stats_expose_block_occupancy_gauges() {
     let engine = MockStepEngine::with_paged_pool(5, 1, 65, 8).unwrap();
@@ -600,6 +724,63 @@ fn batched_draft_real_engine_matches_solo_paged() {
     // Stage-aligned batched drafting over the paged pool — packed draft
     // rows confined to owned blocks, bit-exact greedy output.
     assert_batched_matches_solo(true, true);
+}
+
+#[test]
+fn prefix_cache_real_engine_parity_with_cache_off() {
+    // Artifact-gated twin of the mock parity test: the same prompt served
+    // twice on a paged prefix-cache server (second run attaches the first
+    // run's donated blocks) must match a cache-off server bit-exactly —
+    // reused K/V is the same K/V.
+    let dir = Path::new("artifacts");
+    if !(dir.join("manifest.json").exists()
+        && dir.join("dft-xs.weights.bin").exists()
+        && dir.join("tgt-lg.weights.bin").exists())
+    {
+        return;
+    }
+    let rt = Runtime::load(dir, &["dft-xs", "tgt-sm"]).unwrap();
+    let lat =
+        profiling::load_or_profile(&rt, "dft-xs", "tgt-sm", Some(&dir.join("profile.json")), 2)
+            .unwrap();
+    let prompt: Vec<u32> = (0..24).map(|i| (i * 37 + 5) % 1024).collect();
+    let mut streams: Vec<Vec<u32>> = Vec::new();
+    for prefix_on in [false, true] {
+        let mut cfg = EngineConfig::default();
+        cfg.use_depth_predictor = false;
+        cfg.max_depth = 3;
+        cfg.max_width = 4;
+        cfg.max_verify = 16;
+        cfg.batch.enabled = true;
+        cfg.batch.max_sessions = 4;
+        cfg.batch.paged = true;
+        cfg.batch.block_size = 8;
+        cfg.batch.prefix_cache = prefix_on;
+        let engine = SpecDecoder::new(&rt, cfg, lat.clone(), None);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 32, max_sessions: 4, ..ServeOpts::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        let r1 = c.generate(1, &prompt, 12).unwrap();
+        let r2 = c.generate(2, &prompt, 12).unwrap();
+        assert_eq!(
+            r1.tokens, r2.tokens,
+            "prefix_on={prefix_on}: repeat of the same prompt diverged"
+        );
+        if prefix_on {
+            let snap = srv.stats.snapshot();
+            assert!(
+                snap.prefix_hits >= 1,
+                "second identical prompt must hit the prefix cache"
+            );
+            assert!(snap.prefix_tokens_reused >= 8, "at least one block reused");
+        }
+        streams.push(r1.tokens);
+    }
+    assert_eq!(streams[0], streams[1], "prefix cache changed the decoded stream");
 }
 
 #[test]
