@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix bench-maskpath
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -52,3 +52,9 @@ smoke:
 # runs this too — enforces the ≥2× prefill-reduction bar).
 smoke-prefix:
 	cd rust && cargo run --release -- figures --exp serving_prefix_mock
+
+# Boolean-vs-bit-packed mask/walk microbench sweep (DESIGN.md §13):
+# asserts bit-exact parity, then writes results/BENCH_maskpath.json.
+# CI runs this in smoke mode (YGG_BENCH_QUICK=1).
+bench-maskpath:
+	cd rust && cargo bench --bench tree_ops

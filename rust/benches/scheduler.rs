@@ -10,9 +10,11 @@ fn main() {
         head_draft: 1.0e-3,
         tree_draft: 4.0e-3,
         cpu_build: 0.5e-3,
+        cpu_mask: 0.1e-3,
         verify: 6.0e-3,
         tail_draft: 1.2e-3,
-        accept: 0.8e-3,
+        cpu_walk: 0.5e-3,
+        accept: 0.3e-3,
         bookkeep: 0.7e-3,
         tail_hit_rate: 0.6,
     };

@@ -2,15 +2,26 @@
 //! building, the pruning DP, Sequoia construction, sampling kernels.
 //! These are the components the §5 scheduler must overlap with device
 //! work, so their absolute costs matter (EXPERIMENTS.md §Perf).
+//!
+//! The maskpath sweep (mask build/pack + acceptance walk, boolean vs
+//! bit-packed, 1–8 sessions × depth 2–6) first asserts the bit-packed
+//! path is bit-exact against the f32 reference — CI runs this bench in
+//! smoke mode (`YGG_BENCH_QUICK=1`) and a parity mismatch panics the
+//! run — then emits `results/BENCH_maskpath.json` with the measured
+//! speedups.
 
 use yggdrasil::objective::{LatencyCurve, LatencyModel};
 use yggdrasil::pruning::{prune_for_objective, SubtreeDp};
 use yggdrasil::sampling::{softmax_inplace, top_k, XorShiftRng};
-use yggdrasil::tree::{grow_step, Frontier, MaskBuilder, TokenTree, TreeShape};
+use yggdrasil::tree::{
+    grow_step, pack_block_diagonal, pack_block_diagonal_bits, BitMask, Frontier, MaskBuilder,
+    RoundArena, TokenTree, TreeShape,
+};
 use yggdrasil::util::benchkit::{black_box, Bench};
+use yggdrasil::util::json::Json;
 
-fn grown_tree(depth: usize, width: usize, branch: usize) -> TokenTree {
-    let mut rng = XorShiftRng::new(7);
+fn grown_tree_seeded(depth: usize, width: usize, branch: usize, seed: u64) -> TokenTree {
+    let mut rng = XorShiftRng::new(seed);
     let mut tree = TokenTree::new(0);
     let mut frontier = Frontier::new(depth);
     let cands = |rng: &mut XorShiftRng| {
@@ -29,6 +40,145 @@ fn grown_tree(depth: usize, width: usize, branch: usize) -> TokenTree {
         }
     }
     tree
+}
+
+fn grown_tree(depth: usize, width: usize, branch: usize) -> TokenTree {
+    grown_tree_seeded(depth, width, branch, 7)
+}
+
+/// One batched-round mask workload: `sessions` trees over disjoint slot
+/// regions of a shared 640-slot cache, each session with a 16-slot
+/// committed prefix (the shapes `step_batch` packs per round).
+struct MaskSetup {
+    trees: Vec<TokenTree>,
+    builders: Vec<MaskBuilder>,
+    node_lists: Vec<Vec<usize>>,
+    slot_ofs: Vec<Vec<Option<u32>>>,
+    keeps: Vec<Vec<usize>>,
+    total_rows: usize,
+}
+
+const CAPACITY: usize = 640;
+
+fn mask_setup(sessions: usize, depth: usize) -> MaskSetup {
+    let mut s = MaskSetup {
+        trees: Vec::new(),
+        builders: Vec::new(),
+        node_lists: Vec::new(),
+        slot_ofs: Vec::new(),
+        keeps: Vec::new(),
+        total_rows: 0,
+    };
+    for i in 0..sessions {
+        let tree = grown_tree_seeded(depth, 4, 4, 7 + i as u64);
+        let base = (i * 70) as u32;
+        let mut mb = MaskBuilder::new(CAPACITY);
+        for p in 0..16u32 {
+            mb.commit_slot(base + p);
+        }
+        let nodes: Vec<usize> = (0..tree.len()).collect();
+        let slot_of: Vec<Option<u32>> =
+            (0..tree.len()).map(|j| Some(base + 16 + j as u32)).collect();
+        // A non-trivial pruned set (root always kept) so the walks filter.
+        let keep: Vec<usize> = (0..tree.len()).filter(|&j| j == 0 || j % 3 != 2).collect();
+        s.total_rows += tree.len();
+        s.trees.push(tree);
+        s.builders.push(mb);
+        s.node_lists.push(nodes);
+        s.slot_ofs.push(slot_of);
+        s.keeps.push(keep);
+    }
+    s
+}
+
+/// The pre-arena acceptance-walk shape: a `keep.position` scan per row
+/// lookup and fresh `kids`/`kid_tokens` Vecs per visited node. Descends
+/// to the largest-token in-keep child (a deterministic surrogate for the
+/// acceptance rule) and folds the visited rows into a checksum.
+fn walk_linear(tree: &TokenTree, keep: &[usize]) -> u64 {
+    let row_of = |node: usize| keep.iter().position(|&k| k == node).unwrap();
+    let mut acc = 0u64;
+    let mut cur = 0usize;
+    loop {
+        acc += row_of(cur) as u64;
+        let kids: Vec<usize> =
+            tree.children(cur).iter().copied().filter(|c| keep.contains(c)).collect();
+        let kid_tokens: Vec<u32> = kids.iter().map(|&k| tree.token(k)).collect();
+        let Some((i, _)) = kid_tokens.iter().enumerate().max_by_key(|&(_, &t)| t) else {
+            break;
+        };
+        acc += kid_tokens[i] as u64;
+        cur = kids[i];
+    }
+    acc
+}
+
+/// The arena walk of `complete_verify`: O(1) row lookups through the
+/// node→row table and reused kid/token stacks. Must compute exactly what
+/// [`walk_linear`] computes (parity-asserted before the timed runs).
+fn walk_arena(tree: &TokenTree, keep: &[usize], arena: &mut RoundArena) -> u64 {
+    arena.row_of.clear();
+    arena.row_of.resize(tree.len(), -1);
+    for (r, &node) in keep.iter().enumerate() {
+        arena.row_of[node] = r as i32;
+    }
+    arena.walk_path.clear();
+    arena.walk_path.push(0);
+    let mut acc = 0u64;
+    let mut cur = 0usize;
+    loop {
+        acc += arena.row_of[cur] as u64;
+        arena.walk_kids.clear();
+        arena.walk_tokens.clear();
+        for &c in tree.children(cur) {
+            if arena.row_of[c] >= 0 {
+                arena.walk_kids.push(c);
+                arena.walk_tokens.push(tree.token(c));
+            }
+        }
+        let Some((i, _)) = arena.walk_tokens.iter().enumerate().max_by_key(|&(_, &t)| t)
+        else {
+            break;
+        };
+        acc += arena.walk_tokens[i] as u64;
+        cur = arena.walk_kids[i];
+        arena.walk_path.push(cur);
+    }
+    acc
+}
+
+/// Panics unless the bit-packed build/pack/walk agree bit-exactly with
+/// the boolean/f32 reference on this workload.
+fn assert_parity(s: &mut MaskSetup, label: &str) {
+    let mut arena = RoundArena::new();
+    let mut bit_blocks: Vec<BitMask> = Vec::new();
+    let mut f32_blocks: Vec<Vec<f32>> = Vec::new();
+    for i in 0..s.trees.len() {
+        let mb = &mut s.builders[i];
+        let dense = mb
+            .build(&s.trees[i], &s.node_lists[i], &s.slot_ofs[i], s.trees[i].len())
+            .to_vec();
+        let bits =
+            mb.build_bits(&s.trees[i], &s.node_lists[i], &s.slot_ofs[i], s.trees[i].len());
+        assert_eq!(bits.to_f32(), dense, "mask build parity broke at {label} session {i}");
+        bit_blocks.push(bits.clone());
+        f32_blocks.push(dense);
+        assert_eq!(
+            walk_linear(&s.trees[i], &s.keeps[i]),
+            walk_arena(&s.trees[i], &s.keeps[i], &mut arena),
+            "acceptance-walk parity broke at {label} session {i}",
+        );
+    }
+    let f32_refs: Vec<&[f32]> = f32_blocks.iter().map(|v| v.as_slice()).collect();
+    let dense_packed = pack_block_diagonal(&f32_refs, CAPACITY, s.total_rows);
+    let bit_refs: Vec<&BitMask> = bit_blocks.iter().collect();
+    let mut packed = BitMask::new(CAPACITY);
+    pack_block_diagonal_bits(&bit_refs, CAPACITY, s.total_rows, &mut packed);
+    assert_eq!(packed.to_f32(), dense_packed, "block-diagonal pack parity broke at {label}");
+}
+
+fn mean_of(b: &Bench, name: &str) -> f64 {
+    b.results.iter().find(|r| r.name == name).map(|r| r.mean_s).expect("case ran")
 }
 
 fn main() {
@@ -73,6 +223,129 @@ fn main() {
         l[0]
     });
     b.run("top_k_8_of_1024", || top_k(black_box(&logits), 8).len());
+
+    // ---------------- maskpath sweep (boolean vs bit-packed) ----------------
+    for &sessions in &[1usize, 2, 4, 8] {
+        for &depth in &[2usize, 4, 6] {
+            let mut s = mask_setup(sessions, depth);
+            assert_parity(&mut s, &format!("s{sessions} d{depth}"));
+            let total_rows = s.total_rows;
+
+            b.run(&format!("mask_build+pack bool s{sessions} d{depth}"), || {
+                let blocks: Vec<Vec<f32>> = s
+                    .builders
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, mb)| {
+                        mb.build(
+                            &s.trees[i],
+                            &s.node_lists[i],
+                            &s.slot_ofs[i],
+                            s.trees[i].len(),
+                        )
+                        .to_vec()
+                    })
+                    .collect();
+                let refs: Vec<&[f32]> = blocks.iter().map(|v| v.as_slice()).collect();
+                pack_block_diagonal(&refs, CAPACITY, total_rows).len()
+            });
+
+            let mut packed = BitMask::new(CAPACITY);
+            b.run(&format!("mask_build+pack bits s{sessions} d{depth}"), || {
+                let blocks: Vec<&BitMask> = s
+                    .builders
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, mb)| {
+                        &*mb.build_bits(
+                            &s.trees[i],
+                            &s.node_lists[i],
+                            &s.slot_ofs[i],
+                            s.trees[i].len(),
+                        )
+                    })
+                    .collect();
+                pack_block_diagonal_bits(&blocks, CAPACITY, total_rows, &mut packed);
+                packed.words().len()
+            });
+        }
+    }
+
+    // The call-boundary expansion the engine pays once per packed call.
+    {
+        let mut s = mask_setup(8, 6);
+        let total_rows = s.total_rows;
+        let mut packed = BitMask::new(CAPACITY);
+        {
+            let blocks: Vec<&BitMask> = s
+                .builders
+                .iter_mut()
+                .enumerate()
+                .map(|(i, mb)| {
+                    &*mb.build_bits(
+                        &s.trees[i],
+                        &s.node_lists[i],
+                        &s.slot_ofs[i],
+                        s.trees[i].len(),
+                    )
+                })
+                .collect();
+            pack_block_diagonal_bits(&blocks, CAPACITY, total_rows, &mut packed);
+        }
+        let mut arena = RoundArena::new();
+        let mut dense = arena.take_f32();
+        b.run("bit_expand_to_f32 s8 d6", || {
+            packed.expand_into(&mut dense);
+            dense.len()
+        });
+        arena.put_f32(dense);
+
+        b.run("accept_walk linear s8 d6", || {
+            let mut acc = 0u64;
+            for (t, keep) in s.trees.iter().zip(&s.keeps) {
+                acc += walk_linear(t, keep);
+            }
+            acc
+        });
+        b.run("accept_walk arena s8 d6", || {
+            let mut acc = 0u64;
+            for (t, keep) in s.trees.iter().zip(&s.keeps) {
+                acc += walk_arena(t, keep, &mut arena);
+            }
+            acc
+        });
+    }
+
+    let speedup = mean_of(&b, "mask_build+pack bool s8 d6")
+        / mean_of(&b, "mask_build+pack bits s8 d6");
+    let walk_speedup =
+        mean_of(&b, "accept_walk linear s8 d6") / mean_of(&b, "accept_walk arena s8 d6");
+    println!("maskpath: bit-packed build+pack speedup s8 d6 = {speedup:.1}x");
+    println!("maskpath: arena acceptance-walk speedup s8 d6 = {walk_speedup:.1}x");
+
+    let cases: Vec<Json> = b
+        .results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("median_s", Json::Num(r.median_s)),
+                ("p99_s", Json::Num(r.p99_s)),
+                ("min_s", Json::Num(r.min_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("suite", Json::Str("maskpath".to_string())),
+        // Reaching this point means every parity assert above passed.
+        ("parity_ok", Json::Bool(true)),
+        ("speedup_bits_s8_d6", Json::Num(speedup)),
+        ("walk_speedup_s8_d6", Json::Num(walk_speedup)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    doc.save(std::path::Path::new("results/BENCH_maskpath.json")).unwrap();
 
     b.save_csv(std::path::Path::new("results/bench_tree_ops.csv")).unwrap();
 }

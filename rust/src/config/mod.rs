@@ -104,6 +104,12 @@ pub struct BatchConfig {
     /// requests sharing the prefix attach them read-only, prefilling
     /// only the uncached tail. Only meaningful when `paged`.
     pub prefix_cache: bool,
+    /// CPU worker threads for the per-session CPU stages of a batched
+    /// round (`--cpu-threads`): `1` runs them serially (the default),
+    /// `0` auto-sizes to the machine's available parallelism, `N > 1`
+    /// fans the pruning stage across sessions on `N` scoped threads
+    /// (DESIGN.md §13).
+    pub cpu_threads: usize,
 }
 
 impl Default for BatchConfig {
@@ -116,6 +122,7 @@ impl Default for BatchConfig {
             block_size: 16,
             cache_blocks: None,
             prefix_cache: true,
+            cpu_threads: 1,
         }
     }
 }
@@ -403,6 +410,7 @@ impl EngineConfig {
                 },
             ),
             ("batch_prefix_cache", Json::Bool(self.batch.prefix_cache)),
+            ("batch_cpu_threads", Json::Num(self.batch.cpu_threads as f64)),
         ])
     }
 
@@ -438,6 +446,7 @@ impl EngineConfig {
                 block_size: get_u("batch_block_size", d.batch.block_size),
                 cache_blocks: j.get("batch_cache_blocks").and_then(|v| v.as_usize()),
                 prefix_cache: get_b("batch_prefix_cache", d.batch.prefix_cache),
+                cpu_threads: get_u("batch_cpu_threads", d.batch.cpu_threads),
             },
         })
     }
@@ -563,6 +572,7 @@ mod tests {
             block_size: 8,
             cache_blocks: Some(12),
             prefix_cache: false,
+            cpu_threads: 3,
         };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
@@ -582,12 +592,14 @@ mod tests {
         assert!(d.batch_draft, "stage-aligned batched drafting is the default");
         assert!(d.prefix_cache, "cross-request prefix caching is the default");
         assert!(d.cache_blocks.is_none());
+        assert_eq!(d.cpu_threads, 1, "CPU stages run serially unless asked");
         let j = Json::parse(r#"{"engine": {"batch_enabled": true}}"#).unwrap();
         let cfg = AppConfig::from_json(&j).unwrap();
         assert!(cfg.engine.batch.enabled && cfg.engine.batch.paged);
         assert!(cfg.engine.batch.prefix_cache, "absent key keeps the prefix-cache default");
         assert_eq!(cfg.engine.batch.block_size, d.block_size);
         assert!(cfg.engine.batch.cache_blocks.is_none());
+        assert_eq!(cfg.engine.batch.cpu_threads, 1, "absent key keeps the serial default");
     }
 
     #[test]

@@ -50,7 +50,7 @@ use crate::sampling::{
     categorical, softmax_inplace, stochastic_accept, top_k, AcceptOutcome, XorShiftRng,
 };
 use crate::scheduler::{self, Plan, StageDurations};
-use crate::tree::{grow_step, Frontier, NodeId, TokenTree, TreeShape};
+use crate::tree::{grow_step, Frontier, NodeId, RoundArena, TokenTree, TreeShape};
 
 use super::session::{Session, SharedCachePool};
 use super::task::{self, DecodeTask, StepEngine, StepOutcome, TaskState};
@@ -336,6 +336,28 @@ fn temp_probs(temp: f32, logits: &[f32]) -> Vec<f32> {
     p
 }
 
+/// Verification-width pruning (O3) as a pure function of one session's
+/// grown tree, so the batched build phase can fan the per-session plans
+/// out across CPU threads without borrowing the tasks: the Eq. 3
+/// knapsack DP when pruning is on and the tree is non-trivial, otherwise
+/// the full keep-set (which must then fit a compiled width).
+fn plan_prune(
+    prune: bool,
+    tree: &TokenTree,
+    lat: &LatencyModel,
+    draft_widths: &[usize],
+    verify_budget: usize,
+) -> crate::Result<(Vec<NodeId>, usize)> {
+    if prune && tree.len() > 2 {
+        Ok(prune_for_objective(tree, lat, draft_widths, verify_budget))
+    } else {
+        let keep: Vec<NodeId> = (0..tree.len()).collect();
+        let w = width_for(keep.len())
+            .ok_or_else(|| anyhow::anyhow!("tree of {} nodes unverifiable", keep.len()))?;
+        Ok((keep, w))
+    }
+}
+
 /// Online adaptive state shared by every task of one engine: what one
 /// generation measures, the next (possibly concurrent) generation uses.
 struct SpecShared {
@@ -352,6 +374,11 @@ struct SpecShared {
     /// the depth predictor's training data.
     depth_samples: Vec<(Vec<f32>, usize)>,
     predictor: Option<DepthPredictor>,
+    /// Recycled per-round CPU scratch (DESIGN.md §13): dense-mask buffer
+    /// pool, acceptance-walk stacks, the node→row table, ownership
+    /// words. Lives here because every path that needs it already holds
+    /// the shared-state lock.
+    arena: RoundArena,
 }
 
 /// The packed-call shape a batched engine's plan search prices against
@@ -453,6 +480,7 @@ impl SpecDecoder {
                 sequoia_cache: None,
                 depth_samples: Vec::new(),
                 predictor,
+                arena: RoundArena::new(),
             })),
             pool: None,
             label,
@@ -566,7 +594,7 @@ impl SpecTask {
                 // Stranded deferred head (this session fell out of the
                 // batched round, or a solo driver stepped it): evaluate
                 // with its own width-1 call.
-                let parts = self.deferred_head_parts(head.slot, head.token);
+                let parts = self.deferred_head_parts(head.slot, head.token, &mut sh.arena);
                 let req = self.sess.drafter.padded_request(
                     1,
                     &parts.tokens,
@@ -575,6 +603,7 @@ impl SpecTask {
                     &parts.mask,
                     self.sess.exec_mode(),
                 );
+                sh.arena.put_f32(parts.mask);
                 let reply = self.rt.forward(req)?;
                 let v = self.sess.drafter.spec.vocab;
                 reply.logits[..v].to_vec()
@@ -678,6 +707,7 @@ impl SpecTask {
     fn next_draft_parts(
         &mut self,
         d: &mut DraftInFlight,
+        arena: &mut RoundArena,
     ) -> crate::Result<Option<DraftParts>> {
         if d.done {
             return Ok(None);
@@ -704,20 +734,33 @@ impl SpecTask {
         let tokens: Vec<u32> = ids.iter().map(|&id| d.st.tree.token(id)).collect();
         let positions: Vec<i32> =
             ids.iter().map(|&id| d.root_pos + d.st.tree.depth(id) as i32).collect();
-        let mask = self
+        // Word-wise mask build into the builder's bit scratch, expanded
+        // to dense f32 only at the device-call boundary — into a recycled
+        // arena buffer, so the steady-state round allocates nothing here.
+        let t_mask = Instant::now();
+        #[cfg(debug_assertions)]
+        crate::tree::owner_words(
+            &self.sess.drafter.slots.ownership(),
+            self.sess.drafter.spec.cache_capacity,
+            &mut arena.owner,
+        );
+        let mut mask = arena.take_f32();
+        let bits = self
             .sess
             .drafter
             .slots
             .mask_builder()
-            .build(&d.st.tree, &ids, &d.st.dslots, n)
-            .to_vec();
+            .build_bits(&d.st.tree, &ids, &d.st.dslots, n);
         // The drafter-side block-diagonal invariant batched drafting
-        // relies on: this session's rows reference only slots it owns.
-        debug_assert!(crate::tree::rows_owned(
-            &mask,
-            self.sess.drafter.spec.cache_capacity,
-            &self.sess.drafter.slots.ownership(),
-        ));
+        // relies on: this session's rows reference only slots it owns —
+        // checked word-wise on the packed rows.
+        debug_assert!(crate::tree::rows_owned_bits(bits, &arena.owner));
+        bits.expand_into(&mut mask);
+        self.rec.record_windowed(
+            "stage.cpu_mask",
+            t_mask.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
         d.pending_nodes = ids;
         Ok(Some(DraftParts { tokens, positions, slots, mask }))
     }
@@ -749,13 +792,19 @@ impl SpecTask {
     /// head was deferred, so prefix + self is exactly the visibility the
     /// eagerly-submitted AOT head would have had — bit-identical
     /// logits.)
-    fn deferred_head_parts(&mut self, slot: u32, token: u32) -> DraftParts {
+    fn deferred_head_parts(
+        &mut self,
+        slot: u32,
+        token: u32,
+        arena: &mut RoundArena,
+    ) -> DraftParts {
         let root_pos = (self.sess.committed_len() - 1) as i32;
         // One row: the committed prefix plus the head's own slot —
-        // assembled directly from the builder's prefix row (cloning the
-        // whole builder would copy its level-sized scratch buffer every
-        // round for nothing).
-        let mut mask = self.sess.drafter.slots.mask_builder().prefix_row().to_vec();
+        // assembled directly from the builder's prefix row into a
+        // recycled arena buffer (cloning the whole builder would copy its
+        // level-sized scratch buffer every round for nothing).
+        let mut mask = arena.take_f32();
+        mask.extend_from_slice(self.sess.drafter.slots.mask_builder().prefix_row());
         mask[slot as usize] = 1.0;
         debug_assert_eq!(mask.len(), self.sess.drafter.spec.cache_capacity);
         debug_assert!(crate::tree::rows_owned(
@@ -807,7 +856,7 @@ impl SpecTask {
     ) -> crate::Result<(VerifyPrep, VerifyParts)> {
         let mut d = self.begin_draft(head, sh)?;
         let t0 = Instant::now();
-        while let Some(parts) = self.next_draft_parts(&mut d)? {
+        while let Some(parts) = self.next_draft_parts(&mut d, &mut sh.arena)? {
             let n = parts.tokens.len();
             let width = width_for(n).expect("validated by next_draft_parts");
             let req = self.sess.drafter.padded_request(
@@ -818,6 +867,7 @@ impl SpecTask {
                 &parts.mask,
                 self.sess.exec_mode(),
             );
+            sh.arena.put_f32(parts.mask);
             let reply = self.rt.forward(req)?;
             let vocab = self.sess.drafter.spec.vocab;
             self.complete_draft_level(&mut d, &reply.logits[..n * vocab]);
@@ -838,34 +888,45 @@ impl SpecTask {
         d: DraftInFlight,
         sh: &mut SpecShared,
     ) -> crate::Result<(VerifyPrep, VerifyParts)> {
-        let DraftInFlight { mut st, root_pos, draft_widths, draft_width, .. } = d;
-        self.rec.record("tree_size", st.tree.len() as f64);
+        self.rec.record("tree_size", d.st.tree.len() as f64);
 
         // -------- pruning (O3) -------------------------------------------
         let t0 = Instant::now();
-        // Paged serving: the verification budget also clamps to what the
-        // shared pool can actually supply *right now*, so a crowded pool
-        // shrinks this session's tree instead of failing its verify
-        // (scheduler/plan interaction, DESIGN.md §10). Fixed-range caches
-        // see `available() == free`, preserving the solo behaviour.
-        let verify_budget = self
-            .cfg
-            .max_verify
-            .min(self.sess.target.slots.available())
-            .max(1);
-        let (keep, w_verify) = if self.cfg.prune && st.tree.len() > 2 {
-            prune_for_objective(&st.tree, &sh.lat, &draft_widths, verify_budget)
-        } else {
-            let keep: Vec<NodeId> = (0..st.tree.len()).collect();
-            let w = width_for(keep.len())
-                .ok_or_else(|| anyhow::anyhow!("tree of {} nodes unverifiable", keep.len()))?;
-            (keep, w)
-        };
+        let budget = self.verify_budget();
+        let planned = plan_prune(self.cfg.prune, &d.st.tree, &sh.lat, &d.draft_widths, budget);
         self.rec.record_windowed(
             "stage.cpu_build",
             t0.elapsed().as_secs_f64(),
             STAGE_WINDOW,
         );
+        let (keep, w_verify) = planned?;
+        self.finish_draft_pruned(d, sh, keep, w_verify)
+    }
+
+    /// The verification budget right now: the configured cap clamped to
+    /// what the target cache can actually supply. Paged serving: a
+    /// crowded shared pool shrinks this session's tree instead of failing
+    /// its verify (scheduler/plan interaction, DESIGN.md §10).
+    /// Fixed-range caches see `available() == free`, preserving the solo
+    /// behaviour.
+    fn verify_budget(&self) -> usize {
+        self.cfg
+            .max_verify
+            .min(self.sess.target.slots.available())
+            .max(1)
+    }
+
+    /// Verify-row assembly after the keep-set is decided — serially by
+    /// [`SpecTask::finish_draft`], or with the prune plans precomputed by
+    /// the `--cpu-threads` fan-out of the batched build phase.
+    fn finish_draft_pruned(
+        &mut self,
+        d: DraftInFlight,
+        sh: &mut SpecShared,
+        keep: Vec<NodeId>,
+        w_verify: usize,
+    ) -> crate::Result<(VerifyPrep, VerifyParts)> {
+        let DraftInFlight { mut st, root_pos, draft_widths, draft_width, .. } = d;
         self.rec.record("w_verify", w_verify as f64);
 
         // -------- verification row assembly ------------------------------
@@ -881,21 +942,33 @@ impl SpecTask {
         let vtokens: Vec<u32> = keep.iter().map(|&id| st.tree.token(id)).collect();
         let vpositions: Vec<i32> =
             keep.iter().map(|&id| root_pos + st.tree.depth(id) as i32).collect();
-        let vmask = self
+        // Word-wise mask build, expanded to dense f32 only at the
+        // device-call boundary, into a recycled arena buffer.
+        let t_mask = Instant::now();
+        #[cfg(debug_assertions)]
+        crate::tree::owner_words(
+            &self.sess.target.slots.ownership(),
+            self.sess.target.spec.cache_capacity,
+            &mut sh.arena.owner,
+        );
+        let mut vmask = sh.arena.take_f32();
+        let bits = self
             .sess
             .target
             .slots
             .mask_builder()
-            .build(&st.tree, &keep, &st.vslots, keep.len())
-            .to_vec();
+            .build_bits(&st.tree, &keep, &st.vslots, keep.len());
         // The block-diagonal invariant batched serving relies on: this
         // session's rows reference only slots it currently owns — a
-        // contiguous range, or its leased block set in paged mode.
-        debug_assert!(crate::tree::rows_owned(
-            &vmask,
-            self.sess.target.spec.cache_capacity,
-            &self.sess.target.slots.ownership(),
-        ));
+        // contiguous range, or its leased block set in paged mode —
+        // checked word-wise on the packed rows.
+        debug_assert!(crate::tree::rows_owned_bits(bits, &sh.arena.owner));
+        bits.expand_into(&mut vmask);
+        self.rec.record_windowed(
+            "stage.cpu_mask",
+            t_mask.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
         let parts =
             VerifyParts { tokens: vtokens, positions: vpositions, slots: vslots, mask: vmask };
         let prep = VerifyPrep {
@@ -1016,23 +1089,32 @@ impl SpecTask {
         // -------- acceptance walk ----------------------------------------
         let t0 = Instant::now();
         let vocab = self.sess.target.spec.vocab;
-        let row_of = |node: NodeId| -> usize { keep.iter().position(|&k| k == node).unwrap() };
-        let mut accepted_path: Vec<NodeId> = vec![0];
+        // Node id → verify-row index through the arena table: O(1)
+        // lookups instead of a `keep` scan per visited node, and the walk
+        // stacks reuse the arena's buffers across rounds.
+        sh.arena.row_of.clear();
+        sh.arena.row_of.resize(st.tree.len(), -1);
+        for (r, &node) in keep.iter().enumerate() {
+            sh.arena.row_of[node] = r as i32;
+        }
+        sh.arena.walk_path.clear();
+        sh.arena.walk_path.push(0);
         let mut cur = 0usize;
         let bonus: u32;
         loop {
-            let row = &logits[row_of(cur) * vocab..(row_of(cur) + 1) * vocab];
+            let r = sh.arena.row_of[cur] as usize;
+            let row = &logits[r * vocab..(r + 1) * vocab];
             // Children of cur inside the pruned set, in candidate order.
-            let kids: Vec<NodeId> = st
-                .tree
-                .children(cur)
-                .iter()
-                .copied()
-                .filter(|c| keep.contains(c))
-                .collect();
-            let kid_tokens: Vec<u32> = kids.iter().map(|&k| st.tree.token(k)).collect();
+            sh.arena.walk_kids.clear();
+            sh.arena.walk_tokens.clear();
+            for &c in st.tree.children(cur) {
+                if sh.arena.row_of[c] >= 0 {
+                    sh.arena.walk_kids.push(c);
+                    sh.arena.walk_tokens.push(st.tree.token(c));
+                }
+            }
             let outcome = if temp == 0.0 {
-                let (o, truth) = crate::sampling::greedy_accept(row, &kid_tokens);
+                let (o, truth) = crate::sampling::greedy_accept(row, &sh.arena.walk_tokens);
                 // Rank bookkeeping for Sequoia / Fig. 11.
                 let rank = st.cands[cur]
                     .as_ref()
@@ -1044,11 +1126,12 @@ impl SpecTask {
                 let q = st.dists[cur]
                     .clone()
                     .unwrap_or_else(|| vec![1.0 / vocab as f32; vocab]);
-                let o = stochastic_accept(&p, &q, &kid_tokens, &mut self.sess.rng);
+                let o = stochastic_accept(&p, &q, &sh.arena.walk_tokens, &mut self.sess.rng);
                 if let AcceptOutcome::Child(i) = o {
+                    let accepted_tok = sh.arena.walk_tokens[i];
                     let rank = st.cands[cur]
                         .as_ref()
-                        .and_then(|c| c.iter().position(|&(t, _)| t == kid_tokens[i]));
+                        .and_then(|c| c.iter().position(|&(t, _)| t == accepted_tok));
                     sh.stats.record_rank(rank);
                 } else {
                     sh.stats.record_rank(None);
@@ -1057,8 +1140,8 @@ impl SpecTask {
             };
             match outcome {
                 AcceptOutcome::Child(i) => {
-                    cur = kids[i];
-                    accepted_path.push(cur);
+                    cur = sh.arena.walk_kids[i];
+                    sh.arena.walk_path.push(cur);
                 }
                 AcceptOutcome::Bonus(b) => {
                     bonus = b;
@@ -1066,10 +1149,18 @@ impl SpecTask {
                 }
             }
         }
-        let accepted_draft = accepted_path.len() - 1; // excludes root
-        self.rec.record_windowed("stage.accept", t0.elapsed().as_secs_f64(), STAGE_WINDOW);
+        let accepted_draft = sh.arena.walk_path.len() - 1; // excludes root
+        self.rec.record_windowed(
+            "stage.cpu_walk",
+            t0.elapsed().as_secs_f64(),
+            STAGE_WINDOW,
+        );
         self.rec.record("accepted", (accepted_draft + 1) as f64);
 
+        // Post-walk acceptance bookkeeping — priced together with the
+        // walk by the scheduler (`plan_latency` folds `cpu_walk` +
+        // `accept` into one CPU term).
+        let t0 = Instant::now();
         // Coverage stats for the width selector: growth step d covered the
         // true continuation iff the walk descended at least d times.
         let steps_grown = draft_widths.len();
@@ -1080,7 +1171,7 @@ impl SpecTask {
         // Depth-predictor hint for the next iteration, from the hidden
         // state at the deepest accepted node (the bonus context).
         let d_model = self.sess.target.spec.d_model;
-        let hid_row = row_of(cur);
+        let hid_row = sh.arena.row_of[cur] as usize;
         let hidden = hidden_rows[hid_row * d_model..(hid_row + 1) * d_model].to_vec();
         if self.cfg.use_depth_predictor {
             if let Some(p) = &sh.predictor {
@@ -1089,6 +1180,7 @@ impl SpecTask {
                 }
             }
         }
+        self.rec.record_windowed("stage.accept", t0.elapsed().as_secs_f64(), STAGE_WINDOW);
 
         // -------- AOT head draft / tail-hit resolution --------------------
         let t0 = Instant::now();
@@ -1191,7 +1283,7 @@ impl SpecTask {
         let t0 = Instant::now();
         // Commit accepted slots on both sides; free the rest.
         for node in 0..st.tree.len() {
-            let on_path = accepted_path.contains(&node);
+            let on_path = sh.arena.walk_path.contains(&node);
             if let Some(s) = st.dslots[node] {
                 if on_path {
                     self.sess.drafter.slots.commit(s);
@@ -1214,7 +1306,8 @@ impl SpecTask {
                 self.sess.drafter.slots.release(&[slot]);
             }
         }
-        let mut out: Vec<u32> = accepted_path[1..].iter().map(|&n| st.tree.token(n)).collect();
+        let mut out: Vec<u32> =
+            sh.arena.walk_path[1..].iter().map(|&n| st.tree.token(n)).collect();
         out.push(bonus);
         self.sess.committed.extend_from_slice(&out);
         self.rec.record_windowed(
@@ -1337,6 +1430,9 @@ impl SpecTask {
             &parts.mask,
             self.sess.exec_mode(),
         );
+        // The request owns a padded copy of the rows; the dense mask
+        // buffer goes back to the arena pool.
+        sh.arena.put_f32(parts.mask);
         let t0 = Instant::now();
         let verify_pending = self.rt.submit(vreq)?;
         self.submit_tail(&mut prep)?;
@@ -1383,10 +1479,16 @@ impl SpecTask {
         self.head = next_head;
         if self.head.is_some() {
             // Refresh the measured CPU-overhead term of the objective.
-            let cpu = self.rec.mean("stage.cpu_build")
-                + self.rec.mean("stage.accept")
-                + self.rec.mean("stage.bookkeep");
-            if cpu.is_finite() {
+            // Absent series (NaN mean) count as zero: the mask/walk
+            // splits may lack samples when a generation ends after very
+            // few iterations.
+            let nz = |x: f64| if x.is_finite() { x } else { 0.0 };
+            let cpu = nz(self.rec.mean("stage.cpu_build"))
+                + nz(self.rec.mean("stage.cpu_mask"))
+                + nz(self.rec.mean("stage.cpu_walk"))
+                + nz(self.rec.mean("stage.accept"))
+                + nz(self.rec.mean("stage.bookkeep"));
+            if cpu > 0.0 {
                 sh.lat.cpu_overhead = 0.9 * sh.lat.cpu_overhead + 0.1 * cpu;
             }
         }
@@ -1670,7 +1772,7 @@ impl StepEngine for SpecDecoder {
                         (e.idx, h.slot, h.token)
                     };
                     let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
-                    head_parts.push(task.deferred_head_parts(slot, token));
+                    head_parts.push(task.deferred_head_parts(slot, token, &mut sh.arena));
                 }
                 let rows: Vec<usize> = head_parts.iter().map(|p| p.tokens.len()).collect();
                 let head_env = self.cfg.batch.max_sessions.min(max_w);
@@ -1731,6 +1833,11 @@ impl StepEngine for SpecDecoder {
                         }
                     }
                 }
+                // The packed calls own padded copies of every row; the
+                // dense head-mask buffers go back to the arena pool.
+                for p in head_parts {
+                    sh.arena.put_f32(p.mask);
+                }
             }
 
             // (b) Resolve heads and open each session's draft.
@@ -1767,7 +1874,7 @@ impl StepEngine for SpecDecoder {
                         let idx = en.idx;
                         let task =
                             tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
-                        (idx, task.next_draft_parts(en.d.as_mut().unwrap()))
+                        (idx, task.next_draft_parts(en.d.as_mut().unwrap(), &mut sh.arena))
                     };
                     match stepped {
                         (_, Ok(Some(p))) => lvl.push((k, p)),
@@ -1842,14 +1949,70 @@ impl StepEngine for SpecDecoder {
                         }
                     }
                 }
+                // Recycle the level's dense mask buffers (the packed
+                // calls own padded copies of the rows).
+                for (_, p) in lvl {
+                    sh.arena.put_f32(p.mask);
+                }
             }
 
             // ---------- build phase (CPU: prune + verify assembly) ----------
-            for en in dents.into_iter().flatten() {
-                let Drafting { idx, d, t_iter, draft_secs, .. } = en;
+            // With `--cpu-threads > 1`, the per-session prune plans — the
+            // knapsack DP, a pure function of each grown tree — fan out
+            // across scoped threads (DESIGN.md §13). Mask assembly and
+            // slot allocation stay serial: they mutate the shared caches.
+            let threads = crate::util::par::effective_threads(self.cfg.batch.cpu_threads);
+            let mut pre: Vec<Option<(crate::Result<(Vec<NodeId>, usize)>, f64)>> =
+                Vec::with_capacity(dents.len());
+            pre.resize_with(dents.len(), || None);
+            let live: Vec<usize> = (0..dents.len())
+                .filter(|&k| dents[k].as_ref().is_some_and(|e| e.d.is_some()))
+                .collect();
+            if threads > 1 && live.len() > 1 {
+                // Budgets read the shared caches, so they resolve in a
+                // serial pass before the fan-out.
+                let budgets: Vec<usize> = live
+                    .iter()
+                    .map(|&k| {
+                        let idx = dents[k].as_ref().unwrap().idx;
+                        tasks[idx]
+                            .as_any_mut()
+                            .downcast_mut::<SpecTask>()
+                            .unwrap()
+                            .verify_budget()
+                    })
+                    .collect();
+                let lat = sh.lat.clone();
+                let prune_cfg = self.cfg.prune;
+                let jobs: Vec<(&DraftInFlight, usize)> = live
+                    .iter()
+                    .zip(&budgets)
+                    .map(|(&k, &b)| (dents[k].as_ref().unwrap().d.as_ref().unwrap(), b))
+                    .collect();
+                let outs = crate::util::par::parallel_map(&jobs, threads, |&(d, budget)| {
+                    let t0 = Instant::now();
+                    let r = plan_prune(prune_cfg, &d.st.tree, &lat, &d.draft_widths, budget);
+                    (r, t0.elapsed().as_secs_f64())
+                });
+                for (&k, o) in live.iter().zip(outs) {
+                    pre[k] = Some(o);
+                }
+            }
+            for (k, en) in dents.into_iter().enumerate() {
+                let Some(Drafting { idx, d, t_iter, draft_secs, .. }) = en else { continue };
                 let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
                 task.rec.record_windowed("stage.tree_draft", draft_secs, STAGE_WINDOW);
-                match task.finish_draft(d.expect("draft opened in phase (b)"), &mut sh) {
+                let d = d.expect("draft opened in phase (b)");
+                let built = match pre[k].take() {
+                    Some((Ok((keep, w)), secs)) => {
+                        task.rec.record_windowed("stage.cpu_build", secs, STAGE_WINDOW);
+                        task.rec.record("tree_size", d.st.tree.len() as f64);
+                        task.finish_draft_pruned(d, &mut sh, keep, w)
+                    }
+                    Some((Err(e), _)) => Err(e),
+                    None => task.finish_draft(d, &mut sh),
+                };
+                match built {
                     Ok((prep, parts)) => {
                         entries.push(Some(Entry { idx, prep, parts, t_iter }))
                     }
@@ -1935,8 +2098,11 @@ impl StepEngine for SpecDecoder {
                     let dt = t0.elapsed().as_secs_f64();
                     let mut off = 0usize;
                     for &m in &g.members {
-                        let en = entries[m].take().unwrap();
+                        let mut en = entries[m].take().unwrap();
                         let nrows = en.parts.tokens.len();
+                        // The packed request owns a padded copy of the
+                        // rows; the dense mask goes back to the pool.
+                        sh.arena.put_f32(std::mem::take(&mut en.parts.mask));
                         let task =
                             tasks[en.idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
                         task.rec.record_windowed("stage.verify", dt, STAGE_WINDOW);

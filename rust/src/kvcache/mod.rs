@@ -340,10 +340,12 @@ pub struct BlockPool {
     free: Vec<u32>,
     /// Per-block reference count; 0 = in the free list.
     refs: Vec<u32>,
-    /// True while the prefix trie holds a reference to the block — the
-    /// "cached, reclaimable once nobody else references it" flag the LRU
-    /// eviction pass and the admission signal read.
-    cached: Vec<bool>,
+    /// Bit per block, set while the prefix trie holds a reference to it —
+    /// the "cached, reclaimable once nobody else references it" flag the
+    /// LRU eviction pass and the admission signal read. A u64 bitset
+    /// (`util::bits`) rather than `Vec<bool>`: 8× denser under the pool
+    /// lock, same O(1) reads.
+    cached: crate::util::bits::BitSet,
     /// Maintained count of blocks with `cached && refs == 1`, so the
     /// admission-path [`BlockPool::evictable_blocks`] gauge is O(1)
     /// instead of a full-pool scan under the pool lock.
@@ -380,7 +382,7 @@ impl BlockPool {
             num_blocks: num as u32,
             free,
             refs: vec![0; num],
-            cached: vec![false; num],
+            cached: crate::util::bits::BitSet::new(num),
             evictable: 0,
         })
     }
@@ -435,7 +437,7 @@ impl BlockPool {
     /// block `i`'s refcount or cached flag: `before` is whether the block
     /// counted as evictable (`cached && refs == 1`) going in.
     fn fix_evictable(&mut self, i: usize, before: bool) {
-        let now = self.cached[i] && self.refs[i] == 1;
+        let now = self.cached.get(i) && self.refs[i] == 1;
         match (before, now) {
             (false, true) => self.evictable += 1,
             (true, false) => self.evictable -= 1,
@@ -450,7 +452,7 @@ impl BlockPool {
         debug_assert!(block < self.num_blocks, "foreign block retained: {block}");
         debug_assert!(self.refs[block as usize] > 0, "retain of free block {block}");
         let i = block as usize;
-        let before = self.cached[i] && self.refs[i] == 1;
+        let before = self.cached.get(i) && self.refs[i] == 1;
         self.refs[i] += 1;
         self.fix_evictable(i, before);
     }
@@ -467,14 +469,14 @@ impl BlockPool {
         debug_assert!(block < self.num_blocks, "foreign block flagged: {block}");
         debug_assert!(!cached || self.refs[block as usize] > 0, "caching a free block");
         let i = block as usize;
-        let before = self.cached[i] && self.refs[i] == 1;
-        self.cached[i] = cached;
+        let before = self.cached.get(i) && self.refs[i] == 1;
+        self.cached.set(i, cached);
         self.fix_evictable(i, before);
     }
 
     /// True while the prefix trie holds a reference to `block`.
     pub fn is_cached(&self, block: u32) -> bool {
-        self.cached[block as usize]
+        self.cached.get(block as usize)
     }
 
     /// Blocks held *only* by the prefix trie (cached, refcount 1): what
@@ -499,11 +501,11 @@ impl BlockPool {
         if self.refs[i] == 0 {
             return Err(BlockReleaseError::NotLeased { block });
         }
-        let before = self.cached[i] && self.refs[i] == 1;
+        let before = self.cached.get(i) && self.refs[i] == 1;
         self.refs[i] -= 1;
         if self.refs[i] == 0 {
             debug_assert!(!self.free.contains(&block), "block {block} already in free list");
-            self.cached[i] = false;
+            self.cached.set(i, false);
             self.free.push(block);
         }
         self.fix_evictable(i, before);

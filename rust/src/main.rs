@@ -24,7 +24,7 @@ use yggdrasil::util::cli::Args;
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
-    "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks",
+    "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks", "cpu-threads",
 ];
 const FLAGS: &[&str] = &[
     "quick",
@@ -269,6 +269,10 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         }
         app.engine.batch.block_size =
             args.usize_or("block-size", app.engine.batch.block_size)?;
+        // Per-session CPU stages of a round: 1 = serial (default), 0 =
+        // auto, N = fan out across N scoped threads (DESIGN.md §13).
+        app.engine.batch.cpu_threads =
+            args.usize_or("cpu-threads", app.engine.batch.cpu_threads)?;
         if let Some(b) = args.get("cache-blocks") {
             let blocks: usize = b
                 .parse()

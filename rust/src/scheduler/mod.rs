@@ -68,13 +68,23 @@ pub struct StageDurations {
     pub head_draft: f64,
     /// All D equal-growth drafter calls together.
     pub tree_draft: f64,
-    /// CPU: frontier updates + pruning DP + mask building.
+    /// CPU: frontier updates + pruning DP.
     pub cpu_build: f64,
+    /// CPU: attention-mask assembly (bit-packed build + expansion),
+    /// measured as `stage.cpu_mask`. Serial between draft and verify, so
+    /// it is priced into every plan's core — previously this cost was
+    /// unmeasured and implicitly assumed free.
+    pub cpu_mask: f64,
     /// Verifier call on the pruned tree.
     pub verify: f64,
     /// Speculative tail-draft drafter call (only issued under AOT-tail).
     pub tail_draft: f64,
-    /// CPU acceptance walk.
+    /// CPU acceptance-walk loop over the verified tree, measured as
+    /// `stage.cpu_walk`. Priced together with `accept` (the two split
+    /// what used to be one blended stage).
+    pub cpu_walk: f64,
+    /// CPU post-walk acceptance bookkeeping (coverage stats, tail-hit
+    /// resolution, predictor features).
     pub accept: f64,
     /// CPU cache management / bookkeeping.
     pub bookkeep: f64,
@@ -97,8 +107,10 @@ impl StageDurations {
             head_draft: rec.mean("stage.head_draft").max(1e-6),
             tree_draft: rec.mean("stage.tree_draft").max(1e-6),
             cpu_build: rec.mean("stage.cpu_build").max(1e-7),
+            cpu_mask: rec.mean("stage.cpu_mask").max(1e-7),
             verify: rec.mean("stage.verify").max(1e-6),
             tail_draft: rec.mean("stage.tail_draft").max(1e-6),
+            cpu_walk: rec.mean("stage.cpu_walk").max(1e-7),
             accept: rec.mean("stage.accept").max(1e-7),
             bookkeep: rec.mean("stage.bookkeep").max(1e-7),
             tail_hit_rate,
@@ -113,13 +125,19 @@ impl StageDurations {
         w_verify: usize,
         tail_width: usize,
     ) -> Self {
+        // The splits preserve the measured-era sums the formulas price
+        // (`cpu_build + cpu_mask` in the core, `cpu_walk + accept` after
+        // the verify), so estimates predate measurement without shifting
+        // any plan's pre-profile latency.
         Self {
             head_draft: lat.t_draft(1),
             tree_draft: depth as f64 * lat.t_draft(width),
-            cpu_build: lat.cpu_overhead * 0.5,
+            cpu_build: lat.cpu_overhead * 0.4,
+            cpu_mask: lat.cpu_overhead * 0.1,
             verify: lat.t_verify(w_verify),
             tail_draft: lat.t_draft(tail_width),
-            accept: lat.cpu_overhead * 0.25,
+            cpu_walk: lat.cpu_overhead * 0.15,
+            accept: lat.cpu_overhead * 0.1,
             bookkeep: lat.cpu_overhead * 0.25,
             tail_hit_rate: 0.5,
         }
@@ -133,26 +151,27 @@ impl StageDurations {
 /// `max(device, cpu)` overlaps and discount the head draft by the tail
 /// hit rate:
 ///
+/// With `build = cpu_build + cpu_mask` (both serial between draft and
+/// verify) and `walk = cpu_walk + accept` (the split acceptance stage):
+///
 /// ```text
-/// sequential : head + tree + build + verify + accept + bookkeep
-/// aot_tail   : (1-hit)·head + tree + build + verify + max(tail, accept) + bookkeep
-/// aot_head   : tree + build + verify + accept + max(head, bookkeep)
-/// both       : (tree + build + verify + max(tail, accept)
+/// sequential : head + tree + build + verify + walk + bookkeep
+/// aot_tail   : (1-hit)·head + tree + build + verify + max(tail, walk) + bookkeep
+/// aot_head   : tree + build + verify + walk + max(head, bookkeep)
+/// both       : (tree + build + verify + max(tail, walk)
 ///               + max((1-hit)·head, bookkeep))
 /// ```
 pub fn plan_latency(d: &StageDurations, plan: Plan) -> f64 {
-    let core = d.tree_draft + d.cpu_build + d.verify;
+    let core = d.tree_draft + d.cpu_build + d.cpu_mask + d.verify;
+    let walk = d.cpu_walk + d.accept;
     match (plan.aot_tail, plan.aot_head) {
-        (false, false) => d.head_draft + core + d.accept + d.bookkeep,
+        (false, false) => d.head_draft + core + walk + d.bookkeep,
         (true, false) => {
-            (1.0 - d.tail_hit_rate) * d.head_draft
-                + core
-                + d.tail_draft.max(d.accept)
-                + d.bookkeep
+            (1.0 - d.tail_hit_rate) * d.head_draft + core + d.tail_draft.max(walk) + d.bookkeep
         }
-        (false, true) => core + d.accept + d.head_draft.max(d.bookkeep),
+        (false, true) => core + walk + d.head_draft.max(d.bookkeep),
         (true, true) => {
-            core + d.tail_draft.max(d.accept)
+            core + d.tail_draft.max(walk)
                 + ((1.0 - d.tail_hit_rate) * d.head_draft).max(d.bookkeep)
         }
     }
@@ -339,9 +358,11 @@ mod tests {
             head_draft: 1.0e-3,
             tree_draft: 4.0e-3,
             cpu_build: 0.5e-3,
+            cpu_mask: 0.1e-3,
             verify: 6.0e-3,
             tail_draft: 1.2e-3,
-            accept: 0.8e-3,
+            cpu_walk: 0.5e-3,
+            accept: 0.3e-3,
             bookkeep: 0.7e-3,
             tail_hit_rate: 0.6,
         }
@@ -378,8 +399,10 @@ mod tests {
             head_draft: 1e-3,
             tree_draft: 4e-3,
             cpu_build: 0.0,
+            cpu_mask: 0.0,
             verify: 6e-3,
             tail_draft: 2e-3,
+            cpu_walk: 0.0,
             accept: 0.0,
             bookkeep: 0.0,
             tail_hit_rate: 0.0,
@@ -405,12 +428,15 @@ mod tests {
         rec.record("stage.head_draft", 2e-3);
         rec.record("stage.tree_draft", 5e-3);
         rec.record("stage.verify", 7e-3);
-        // cpu_build / tail_draft / accept / bookkeep unmeasured.
+        // cpu_build / cpu_mask / tail_draft / cpu_walk / accept /
+        // bookkeep unmeasured.
         let d = StageDurations::from_recorder(&rec, 0.4);
         assert!((d.head_draft - 2e-3).abs() < 1e-12);
         assert!((d.tree_draft - 5e-3).abs() < 1e-12);
         assert!((d.verify - 7e-3).abs() < 1e-12);
         assert_eq!(d.cpu_build, 1e-7, "missing series floors, not NaN");
+        assert_eq!(d.cpu_mask, 1e-7);
+        assert_eq!(d.cpu_walk, 1e-7);
         assert_eq!(d.tail_draft, 1e-6);
         assert!((d.tail_hit_rate - 0.4).abs() < 1e-12);
         // The floored durations feed the search without poisoning it.
@@ -578,6 +604,8 @@ mod tests {
             rec.record_windowed("stage.head_draft", 1e-3, W);
             rec.record_windowed("stage.tree_draft", 4e-3, W);
             rec.record_windowed("stage.cpu_build", 0.5e-3, W);
+            rec.record_windowed("stage.cpu_mask", 0.1e-3, W);
+            rec.record_windowed("stage.cpu_walk", 0.4e-3, W);
         }
         let steady = StageDurations::from_recorder(&rec, 0.6);
         assert!(
@@ -602,5 +630,36 @@ mod tests {
         let d = StageDurations::estimate(&lat, 4, 8, 32, 4);
         assert!(d.tree_draft > d.head_draft);
         assert!(d.verify > 0.0);
+        // The CPU split sums to the full overhead — nothing dropped.
+        let cpu = d.cpu_build + d.cpu_mask + d.cpu_walk + d.accept + d.bookkeep;
+        assert!((cpu - lat.cpu_overhead).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_mask_is_priced_into_every_plan() {
+        // Mask assembly is serial between draft and verify: no plan can
+        // hide it, so adding Δ to cpu_mask adds exactly Δ to every plan.
+        let d = durations();
+        let mut heavier = d;
+        heavier.cpu_mask += 2e-3;
+        for p in Plan::ALL {
+            let delta = plan_latency(&heavier, p) - plan_latency(&d, p);
+            assert!((delta - 2e-3).abs() < 1e-12, "{} hid mask CPU", p.name());
+        }
+    }
+
+    #[test]
+    fn cpu_walk_prices_with_accept() {
+        // The split acceptance stage prices as a sum: moving cost between
+        // cpu_walk and accept changes no plan's latency.
+        let d = durations();
+        let mut moved = d;
+        moved.cpu_walk = d.accept;
+        moved.accept = d.cpu_walk;
+        for p in Plan::ALL {
+            let a = plan_latency(&d, p);
+            let b = plan_latency(&moved, p);
+            assert!((a - b).abs() < 1e-15, "{} distinguishes the split", p.name());
+        }
     }
 }

@@ -8,22 +8,32 @@
 //! the *shape* of every operator stays static (DESIGN.md §7). This mirrors
 //! the tree-dependency mask of §4.2 / FastTree.
 //!
-//! Mask building is on the per-iteration critical path, so the builder
-//! reuses one flat buffer and writes rows with `copy_from_slice` of a
-//! maintained prefix row (no per-call allocation after warm-up).
+//! Mask building is on the per-iteration critical path, so it runs
+//! bit-packed (DESIGN.md §13): a [`BitMask`] row is
+//! `capacity.div_ceil(64)` `u64` words — the dependency structure is pure
+//! ancestor reachability, so bits suffice (SpecInfer's tree-attention
+//! formulation; sglang's `eagle_utils` ships the same u64-word packing).
+//! Rows are built by whole-word prefix copies plus per-ancestor bit ORs,
+//! packed word-wise, ownership-checked word-wise, and expanded to the
+//! runtime's `Vec<f32>` only at the device-call boundary
+//! ([`BitMask::expand_into`]). The f32 builders below are kept as the
+//! reference path; property tests pin the two bit-exact.
 //!
 //! For cross-session batched verification (DESIGN.md §9) the per-session
 //! row blocks — each built by that session's own builder over its own
-//! leased slot set — are concatenated by [`pack_block_diagonal`] into
-//! one `[rows, capacity]` batch mask. Because every session's slots come
+//! leased slot set — are concatenated by [`pack_block_diagonal`] (or its
+//! word-wise form [`pack_block_diagonal_bits`]) into one
+//! `[rows, capacity]` batch mask. Because every session's slots come
 //! from a disjoint [`SlotOwnership`] set (a contiguous [`SlotRange`] in
 //! equal-partition mode, a set of owned blocks in paged mode, DESIGN.md
 //! §10), the packed mask is block-diagonal: session A's rows are
 //! structurally unable to attend to session B's slots ([`rows_owned`] is
 //! the checkable form of that invariant; [`rows_confined`] is its
-//! contiguous-range specialization).
+//! contiguous-range specialization, and [`rows_owned_bits`] /
+//! [`rows_confined_bits`] their word-test forms).
 
 use crate::kvcache::{SlotOwnership, SlotRange};
+use crate::util::bits::{self, WORD_BITS};
 
 use super::{NodeId, TokenTree};
 
@@ -64,20 +74,244 @@ pub fn rows_owned(block: &[f32], capacity: usize, owner: &SlotOwnership) -> bool
     })
 }
 
+/// A bit-packed `[rows, capacity]` attention mask: each row is
+/// `capacity.div_ceil(64)` `u64` words, bit *s* marking slot *s*
+/// visible. 32× denser than the f32 rows, built with whole-word copies,
+/// and convertible to the runtime's dense layout only at the call
+/// boundary via [`BitMask::expand_into`].
+#[derive(Debug, Clone)]
+pub struct BitMask {
+    capacity: usize,
+    words_per_row: usize,
+    rows: usize,
+    words: Vec<u64>,
+}
+
+impl BitMask {
+    /// An empty (0-row) mask over a `capacity`-slot cache.
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, words_per_row: bits::words_for(capacity), rows: 0, words: Vec::new() }
+    }
+
+    /// Mask row width in slots.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// `u64` words per row (`capacity.div_ceil(64)`).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Clears the mask to `rows` all-zero rows at the current capacity.
+    /// Reuses the word buffer: after warm-up this allocates nothing.
+    pub fn reset(&mut self, rows: usize) {
+        self.rows = rows;
+        self.words.clear();
+        self.words.resize(rows * self.words_per_row, 0);
+    }
+
+    /// Re-shapes to a (possibly different) capacity and `rows` all-zero
+    /// rows, still reusing the word buffer. Used by the packed batch
+    /// scratch in [`RoundArena`], which serves caches of both models.
+    pub fn reshape(&mut self, capacity: usize, rows: usize) {
+        self.capacity = capacity;
+        self.words_per_row = bits::words_for(capacity);
+        self.reset(rows);
+    }
+
+    /// The words of row `i`.
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Mutable words of row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [u64] {
+        let w = self.words_per_row;
+        &mut self.words[i * w..(i + 1) * w]
+    }
+
+    /// Sets bit `slot` of row `i`.
+    pub fn set(&mut self, i: usize, slot: usize) {
+        debug_assert!(slot < self.capacity);
+        bits::set_bit(self.row_mut(i), slot);
+    }
+
+    /// Reads bit `slot` of row `i`.
+    pub fn get(&self, i: usize, slot: usize) -> bool {
+        debug_assert!(slot < self.capacity);
+        bits::get_bit(self.row(i), slot)
+    }
+
+    /// All backing words, row-major.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Copies all of `src`'s rows into this mask starting at `at_row`
+    /// (whole-word `copy_from_slice`; capacities must match). This is the
+    /// incremental form of [`pack_block_diagonal_bits`] — the arena packs
+    /// one session at a time without holding borrows of every builder.
+    pub fn copy_rows_from(&mut self, src: &BitMask, at_row: usize) {
+        assert_eq!(src.capacity, self.capacity, "block capacity mismatch");
+        assert!(at_row + src.rows <= self.rows, "blocks exceed the batch width");
+        let w = self.words_per_row;
+        self.words[at_row * w..(at_row + src.rows) * w]
+            .copy_from_slice(&src.words[..src.rows * w]);
+    }
+
+    /// Expands into the dense `rows × capacity` f32 layout the runtime
+    /// consumes, reusing `out`'s storage (no allocation once `out` has
+    /// warmed up to capacity). Zero words are skipped wholesale.
+    pub fn expand_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.rows * self.capacity, 0.0);
+        for r in 0..self.rows {
+            let base = r * self.capacity;
+            let row = self.row(r);
+            for (wi, &word) in row.iter().enumerate() {
+                let mut w = word;
+                while w != 0 {
+                    let b = w.trailing_zeros() as usize;
+                    out[base + wi * WORD_BITS + b] = 1.0;
+                    w &= w - 1;
+                }
+            }
+        }
+    }
+
+    /// Allocating convenience form of [`BitMask::expand_into`].
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut v = Vec::new();
+        self.expand_into(&mut v);
+        v
+    }
+
+    /// Packs a dense `k × capacity` f32 block (the reference layout) into
+    /// bits — the test-side bridge for parity checks. Any non-zero entry
+    /// sets the bit.
+    pub fn from_f32(block: &[f32], capacity: usize) -> Self {
+        assert!(capacity > 0 && block.len() % capacity == 0, "block is not whole rows");
+        let mut m = Self::new(capacity);
+        m.reset(block.len() / capacity);
+        for (i, row) in block.chunks(capacity).enumerate() {
+            for (slot, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    m.set(i, slot);
+                }
+            }
+        }
+        m
+    }
+}
+
+/// Word-wise [`pack_block_diagonal`]: concatenates per-session
+/// [`BitMask`] row blocks into `out` (re-shaped to `rows` all-zero rows
+/// at `capacity`), copying whole words instead of `capacity` floats per
+/// row. Panics on capacity mismatch or overflow, like the f32 form.
+pub fn pack_block_diagonal_bits(
+    blocks: &[&BitMask],
+    capacity: usize,
+    rows: usize,
+    out: &mut BitMask,
+) {
+    out.reshape(capacity, rows);
+    let mut at = 0usize;
+    for b in blocks {
+        out.copy_rows_from(b, at);
+        at += b.rows();
+    }
+}
+
+/// Expands a [`SlotOwnership`] into its allowed-slot bit words
+/// (`capacity.div_ceil(64)` words written into `out`): the precomputable
+/// half of [`rows_owned_bits`], so a round derives it once per session
+/// and every ownership check becomes a pure `AND-NOT` word test.
+pub fn owner_words(owner: &SlotOwnership, capacity: usize, out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(bits::words_for(capacity), 0);
+    match owner {
+        SlotOwnership::Range(r) => {
+            let lo = (r.base as usize).min(capacity);
+            let hi = (r.base as usize + r.len as usize).min(capacity);
+            for (w, word) in out.iter_mut().enumerate() {
+                *word = bits::range_word_mask(w, lo, hi);
+            }
+        }
+        SlotOwnership::Blocks { block_size, blocks, shared } => {
+            let bs = *block_size as usize;
+            for &b in blocks.iter().chain(shared.iter()) {
+                let lo = (b as usize * bs).min(capacity);
+                let hi = (b as usize * bs + bs).min(capacity);
+                if lo >= hi {
+                    continue;
+                }
+                for w in lo / WORD_BITS..=(hi - 1) / WORD_BITS {
+                    out[w] |= bits::range_word_mask(w, lo, hi);
+                }
+            }
+        }
+    }
+}
+
+/// Word-wise [`rows_owned`]: true when every row of `m` references only
+/// slots allowed by `allowed` (from [`owner_words`]) — one `AND-NOT`
+/// test per word instead of `capacity` float compares per row.
+pub fn rows_owned_bits(m: &BitMask, allowed: &[u64]) -> bool {
+    debug_assert_eq!(allowed.len(), m.words_per_row());
+    m.words()
+        .chunks(m.words_per_row().max(1))
+        .all(|row| row.iter().zip(allowed).all(|(&w, &a)| w & !a == 0))
+}
+
+/// Word-wise [`rows_confined`]: pure arithmetic (no owner-word scratch
+/// needed) since a [`SlotRange`]'s allow mask per word is closed-form.
+pub fn rows_confined_bits(m: &BitMask, range: SlotRange) -> bool {
+    let lo = (range.base as usize).min(m.capacity());
+    let hi = (range.base as usize + range.len as usize).min(m.capacity());
+    for r in 0..m.rows() {
+        for (wi, &w) in m.row(r).iter().enumerate() {
+            if w & !bits::range_word_mask(wi, lo, hi) != 0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
 /// Reusable mask builder for one model instance (one cache).
+///
+/// Maintains the committed prefix in *both* layouts — the f32 row the
+/// reference path copies, and the bit words the packed path ORs — kept in
+/// lockstep by [`MaskBuilder::commit_slot`] / [`MaskBuilder::release_slot`].
 #[derive(Debug, Clone)]
 pub struct MaskBuilder {
     capacity: usize,
     /// 1.0 at slots holding committed (always-visible) tokens.
     prefix_row: Vec<f32>,
+    /// Bit-packed twin of `prefix_row` (bit = committed slot).
+    prefix_words: Vec<u64>,
     /// Scratch output buffer, `width × capacity`, reused across calls.
     buf: Vec<f32>,
+    /// Bit-packed scratch output, reused across calls.
+    bits: BitMask,
 }
 
 impl MaskBuilder {
     /// A builder for a `capacity`-slot cache (no slots committed yet).
     pub fn new(capacity: usize) -> Self {
-        Self { capacity, prefix_row: vec![0.0; capacity], buf: Vec::new() }
+        Self {
+            capacity,
+            prefix_row: vec![0.0; capacity],
+            prefix_words: vec![0; bits::words_for(capacity)],
+            buf: Vec::new(),
+            bits: BitMask::new(capacity),
+        }
     }
 
     /// Mask row width (the cache capacity).
@@ -88,16 +322,18 @@ impl MaskBuilder {
     /// Marks `slot` as committed (visible to all future tokens).
     pub fn commit_slot(&mut self, slot: u32) {
         self.prefix_row[slot as usize] = 1.0;
+        bits::set_bit(&mut self.prefix_words, slot as usize);
     }
 
     /// Unmarks a slot (used when a session resets or a cache is recycled).
     pub fn release_slot(&mut self, slot: u32) {
         self.prefix_row[slot as usize] = 0.0;
+        bits::clear_bit(&mut self.prefix_words, slot as usize);
     }
 
     /// Number of committed (always-visible) slots.
     pub fn committed_count(&self) -> usize {
-        self.prefix_row.iter().filter(|&&x| x > 0.0).count()
+        bits::count_ones(&self.prefix_words)
     }
 
     /// The maintained prefix row (`capacity` wide, 1.0 at committed
@@ -106,6 +342,11 @@ impl MaskBuilder {
     /// DESIGN.md §11) assemble it without cloning the whole builder.
     pub fn prefix_row(&self) -> &[f32] {
         &self.prefix_row
+    }
+
+    /// Bit-packed twin of [`MaskBuilder::prefix_row`].
+    pub fn prefix_words(&self) -> &[u64] {
+        &self.prefix_words
     }
 
     /// Builds the mask for evaluating tree `nodes` (in call order) whose
@@ -140,6 +381,31 @@ impl MaskBuilder {
         &self.buf[..rows * c]
     }
 
+    /// Word-wise [`MaskBuilder::build`]: each row is a whole-word copy of
+    /// the committed prefix words plus one bit OR per ancestor, into the
+    /// builder's reusable [`BitMask`] scratch. Bit-exact with `build`
+    /// (property-tested); ~`capacity/64` the writes per row.
+    pub fn build_bits(
+        &mut self,
+        tree: &TokenTree,
+        nodes: &[NodeId],
+        slot_of: &[Option<u32>],
+        rows: usize,
+    ) -> &BitMask {
+        assert!(nodes.len() <= rows);
+        self.bits.reset(rows);
+        for (i, &node) in nodes.iter().enumerate() {
+            let row = self.bits.row_mut(i);
+            row.copy_from_slice(&self.prefix_words);
+            for anc in tree.ancestors(node) {
+                if let Some(Some(slot)) = slot_of.get(anc) {
+                    bits::set_bit(row, *slot as usize);
+                }
+            }
+        }
+        &self.bits
+    }
+
     /// Builds the mask for a *linear* prefill chunk: token `i` of the chunk
     /// attends to the committed prefix plus chunk tokens `0..=i` (their
     /// slots given by `chunk_slots`). Rows beyond `n` are zero padding.
@@ -158,6 +424,82 @@ impl MaskBuilder {
             self.buf[i * c..(i + 1) * c].fill(0.0);
         }
         &self.buf[..rows * c]
+    }
+
+    /// Word-wise [`MaskBuilder::build_linear`]. Row `i` copies row `i-1`
+    /// (prefix words for row 0) and ORs one chunk-slot bit — the causal
+    /// staircase costs one word-copy + one OR per row.
+    pub fn build_linear_bits(&mut self, chunk_slots: &[u32], n: usize, rows: usize) -> &BitMask {
+        assert!(n <= chunk_slots.len() && n <= rows);
+        self.bits.reset(rows);
+        let w = self.bits.words_per_row();
+        for i in 0..n {
+            if i == 0 {
+                self.bits.row_mut(0).copy_from_slice(&self.prefix_words);
+            } else {
+                let (prev, cur) = self.bits.words.split_at_mut(i * w);
+                cur[..w].copy_from_slice(&prev[(i - 1) * w..i * w]);
+            }
+            bits::set_bit(self.bits.row_mut(i), chunk_slots[i] as usize);
+        }
+        &self.bits
+    }
+}
+
+/// Reusable per-decoder scratch for one scheduling round (DESIGN.md §13):
+/// recycled f32 mask buffers, the packed block-diagonal bit words, the
+/// acceptance-walk stacks and the node→row table. The decode hot loop
+/// borrows and resets these instead of allocating — after warm-up a
+/// steady-state round performs zero heap allocations on the CPU side
+/// (pinned by the `alloc_steady_state` integration test).
+#[derive(Debug, Default)]
+pub struct RoundArena {
+    /// Recycled dense-mask buffers: [`RoundArena::take_f32`] pops one
+    /// (cleared, capacity intact), [`RoundArena::put_f32`] returns it.
+    pool_f32: Vec<Vec<f32>>,
+    /// Packed block-diagonal batch-mask words (the batched call path).
+    pub packed: BitMask,
+    /// Acceptance walk: accepted node path, root first.
+    pub walk_path: Vec<usize>,
+    /// Acceptance walk: in-keep children of the current node.
+    pub walk_kids: Vec<usize>,
+    /// Acceptance walk: their tokens, parallel to `walk_kids`.
+    pub walk_tokens: Vec<u32>,
+    /// Node id → verify-row index (`-1` = pruned away), reset per walk.
+    pub row_of: Vec<i32>,
+    /// Ownership word scratch for word-wise confinement checks.
+    pub owner: Vec<u64>,
+}
+
+impl Default for BitMask {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl RoundArena {
+    /// A fresh arena; buffers warm up over the first rounds.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pops a recycled f32 buffer (cleared, capacity intact) or mints an
+    /// empty one. Pair with [`RoundArena::put_f32`] once the device call
+    /// that consumed the expansion has been issued.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        let mut v = self.pool_f32.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Returns a buffer to the pool, retaining its capacity.
+    pub fn put_f32(&mut self, v: Vec<f32>) {
+        self.pool_f32.push(v);
+    }
+
+    /// Number of pooled f32 buffers (diagnostics/tests).
+    pub fn pooled_f32(&self) -> usize {
+        self.pool_f32.len()
     }
 }
 
@@ -194,6 +536,10 @@ mod tests {
         assert_eq!(row(2), &[1., 1., 0., 0., 1., 0., 0., 0.]);
         // padding row all-zero
         assert_eq!(row(3), &[0.; 8]);
+
+        // The bit-packed build is bit-exact with the reference.
+        let mbits = mb.build_bits(&tree, &[a, b, c2], &slot_of, 4).to_f32();
+        assert_eq!(mbits, m);
     }
 
     #[test]
@@ -206,6 +552,8 @@ mod tests {
         assert_eq!(row(1), &[1., 1., 0., 0., 0., 1.]);
         assert_eq!(row(2), &[1., 1., 1., 0., 0., 1.]);
         assert_eq!(row(3), &[0.; 6]);
+        let mbits = mb.build_linear_bits(&[0, 1, 2], 3, 4).to_f32();
+        assert_eq!(mbits, m);
     }
 
     #[test]
@@ -213,8 +561,10 @@ mod tests {
         let mut mb = MaskBuilder::new(4);
         mb.commit_slot(2);
         assert_eq!(mb.committed_count(), 1);
+        assert_eq!(mb.prefix_words(), &[0b100]);
         mb.release_slot(2);
         assert_eq!(mb.committed_count(), 0);
+        assert_eq!(mb.prefix_words(), &[0]);
     }
 
     #[test]
@@ -229,12 +579,26 @@ mod tests {
     }
 
     #[test]
+    fn pack_block_diagonal_bits_matches_f32_pack() {
+        let a = [1.0f32, 0.0, 0.0, 0.0];
+        let b = [0.0f32, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0];
+        let reference = pack_block_diagonal(&[&a, &b], 4, 4);
+        let (ba, bb) = (BitMask::from_f32(&a, 4), BitMask::from_f32(&b, 4));
+        let mut packed = BitMask::new(4);
+        pack_block_diagonal_bits(&[&ba, &bb], 4, 4, &mut packed);
+        assert_eq!(packed.rows(), 4);
+        assert_eq!(packed.to_f32(), reference);
+    }
+
+    #[test]
     fn rows_confined_detects_escapes() {
         let range = SlotRange { base: 2, len: 2 };
         let ok = [0.0f32, 0.0, 1.0, 1.0, 0.0, 0.0];
         let bad = [0.0f32, 1.0, 1.0, 0.0, 0.0, 0.0];
         assert!(rows_confined(&ok, 6, range));
         assert!(!rows_confined(&bad, 6, range));
+        assert!(rows_confined_bits(&BitMask::from_f32(&ok, 6), range));
+        assert!(!rows_confined_bits(&BitMask::from_f32(&bad, 6), range));
     }
 
     #[test]
@@ -251,7 +615,8 @@ mod tests {
         assert!(rows_owned(&ok, 8, &own));
         assert!(!rows_owned(&bad, 8, &own));
         // Multiple rows: one escape anywhere fails the whole block.
-        let two = [1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let two =
+            [1.0f32, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
         assert!(!rows_owned(&two, 8, &own), "row 2 references foreign slot 2");
         // Read-shared prefix blocks are referenceable, exactly like owned
         // ones (DESIGN.md §12): a committed shared-prefix slot in a mask
@@ -265,6 +630,35 @@ mod tests {
     }
 
     #[test]
+    fn owner_words_and_word_checks_match_reference() {
+        let owners = [
+            SlotOwnership::Range(SlotRange { base: 2, len: 3 }),
+            SlotOwnership::Blocks { block_size: 2, blocks: vec![0, 3], shared: vec![] },
+            SlotOwnership::Blocks { block_size: 2, blocks: vec![3], shared: vec![0] },
+        ];
+        let rows: [&[f32]; 3] = [
+            &[1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0],
+            &[1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0],
+            &[0.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0],
+        ];
+        let mut allowed = Vec::new();
+        for own in &owners {
+            owner_words(own, 8, &mut allowed);
+            let bits_flat = allowed.iter().flat_map(|&w| (0..8).map(move |b| (w >> b) & 1));
+            for (slot, bit) in bits_flat.enumerate() {
+                assert_eq!(bit == 1, own.contains(slot as u32), "owner {own:?} slot {slot}");
+            }
+            for block in &rows {
+                assert_eq!(
+                    rows_owned_bits(&BitMask::from_f32(block, 8), &allowed),
+                    rows_owned(block, 8, own),
+                    "owner {own:?} block {block:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn rebuild_reuses_buffer_and_clears_stale_rows() {
         let tree = TokenTree::new(0);
         let mut mb = MaskBuilder::new(4);
@@ -274,5 +668,43 @@ mod tests {
         // second build with zero nodes: all rows must be padding
         let second = mb.build(&tree, &[], &slot_of, 2).to_vec();
         assert!(second.iter().all(|&x| x == 0.0));
+        // same for the bit path
+        let fb = mb.build_bits(&tree, &[0], &slot_of, 2).to_f32();
+        assert_eq!(&fb[0..4], &[1., 0., 0., 0.]);
+        let sb = mb.build_bits(&tree, &[], &slot_of, 2).to_f32();
+        assert!(sb.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn arena_recycles_f32_buffers() {
+        let mut arena = RoundArena::new();
+        let mut v = arena.take_f32();
+        v.resize(128, 1.0);
+        let cap = v.capacity();
+        arena.put_f32(v);
+        assert_eq!(arena.pooled_f32(), 1);
+        let v2 = arena.take_f32();
+        assert!(v2.is_empty() && v2.capacity() == cap, "capacity retained, contents cleared");
+        assert_eq!(arena.pooled_f32(), 0);
+    }
+
+    #[test]
+    fn expand_into_reuses_storage() {
+        let mut m = BitMask::new(70);
+        m.reset(2);
+        m.set(0, 0);
+        m.set(1, 69);
+        let mut out = Vec::new();
+        m.expand_into(&mut out);
+        assert_eq!(out.len(), 140);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[70 + 69], 1.0);
+        assert_eq!(out.iter().filter(|&&x| x != 0.0).count(), 2);
+        let cap = out.capacity();
+        m.reset(1);
+        m.expand_into(&mut out);
+        assert_eq!(out.len(), 70);
+        assert!(out.iter().all(|&x| x == 0.0));
+        assert_eq!(out.capacity(), cap);
     }
 }

@@ -17,7 +17,10 @@ pub mod mask;
 pub mod shapes;
 
 pub use egt::{grow_step, Expansion, Frontier};
-pub use mask::{pack_block_diagonal, rows_confined, rows_owned, MaskBuilder};
+pub use mask::{
+    owner_words, pack_block_diagonal, pack_block_diagonal_bits, rows_confined,
+    rows_confined_bits, rows_owned, rows_owned_bits, BitMask, MaskBuilder, RoundArena,
+};
 pub use shapes::TreeShape;
 
 /// Index of a node inside a [`TokenTree`].

@@ -78,11 +78,15 @@ impl TreeShape {
     pub fn sequoia(accept_by_rank: &[f64], budget: usize) -> Self {
         assert!(!accept_by_rank.is_empty());
         let rmax = accept_by_rank.len();
-        // s[m] for m in 0..=budget (s[0] = 0 unused), f[b][r].
+        // Row width of the flattened (budget+1) × (rmax+1) DP tables:
+        // entry (b, r) lives at b * rw + r — one allocation per table
+        // instead of budget+1 inner Vecs.
+        let rw = rmax + 1;
+        // s[m] for m in 0..=budget (s[0] = 0 unused), f[b * rw + r].
         let mut s = vec![0.0f64; budget + 1];
-        let mut f = vec![vec![0.0f64; rmax + 1]; budget + 1];
-        // choice[b][r] = number of nodes m given to the rank-r child.
-        let mut choice = vec![vec![0usize; rmax + 1]; budget + 1];
+        let mut f = vec![0.0f64; (budget + 1) * rw];
+        // choice[b * rw + r] = number of nodes m given to the rank-r child.
+        let mut choice = vec![0usize; (budget + 1) * rw];
 
         for m in 1..=budget {
             // F rows only depend on S(m') for m' < m? No: F(b,·) uses
@@ -91,36 +95,36 @@ impl TreeShape {
             // m over budgets 0..m-1 — budget ≤ 64 keeps this trivial.
             for b in 0..m {
                 for r in (0..rmax).rev() {
-                    let skip = f[b][r + 1];
+                    let skip = f[b * rw + r + 1];
                     let mut best = skip;
                     let mut best_m = 0usize;
                     for take in 1..=b {
-                        let v = accept_by_rank[r] * s[take] + f[b - take][r + 1];
+                        let v = accept_by_rank[r] * s[take] + f[(b - take) * rw + r + 1];
                         if v > best + 1e-12 {
                             best = v;
                             best_m = take;
                         }
                     }
-                    f[b][r] = best;
-                    choice[b][r] = best_m;
+                    f[b * rw + r] = best;
+                    choice[b * rw + r] = best_m;
                 }
             }
-            s[m] = 1.0 + f[m - 1][0];
+            s[m] = 1.0 + f[(m - 1) * rw];
         }
         // Final forest table for the root with the full budget.
         for r in (0..rmax).rev() {
-            let skip = f[budget][r + 1];
+            let skip = f[budget * rw + r + 1];
             let mut best = skip;
             let mut best_m = 0usize;
             for take in 1..=budget {
-                let v = accept_by_rank[r] * s[take] + f[budget - take][r + 1];
+                let v = accept_by_rank[r] * s[take] + f[(budget - take) * rw + r + 1];
                 if v > best + 1e-12 {
                     best = v;
                     best_m = take;
                 }
             }
-            f[budget][r] = best;
-            choice[budget][r] = best_m;
+            f[budget * rw + r] = best;
+            choice[budget * rw + r] = best_m;
         }
 
         // Reconstruct.
@@ -185,19 +189,20 @@ impl TreeShape {
     }
 }
 
-/// Recursively appends the best forest under `parent` using `choice`.
+/// Recursively appends the best forest under `parent` using `choice`
+/// (flattened row-major, `(rmax + 1)`-wide rows).
 fn build_forest(
     shape: &mut TreeShape,
     parent: usize,
     budget: usize,
     rank: usize,
-    choice: &[Vec<usize>],
+    choice: &[usize],
     rmax: usize,
 ) {
     if budget == 0 || rank >= rmax {
         return;
     }
-    let take = choice[budget][rank];
+    let take = choice[budget * (rmax + 1) + rank];
     if take > 0 {
         shape.nodes.push(ShapeNode { parent, rank });
         let id = shape.nodes.len();

@@ -1,0 +1,167 @@
+//! Bit-word utilities shared by the bit-packed mask path
+//! ([`crate::tree::BitMask`]) and the KV-cache block gauge
+//! ([`crate::kvcache::BlockPool`]): 64 slots per `u64` word, low bit of
+//! word 0 = bit 0 — the same encoding sglang's `eagle_utils` uses for
+//! its bit-packed tree masks (`QLEN_ONLY_BITPACKING`).
+
+/// Bits per storage word.
+pub const WORD_BITS: usize = 64;
+
+/// Words needed to hold `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(WORD_BITS)
+}
+
+/// Sets bit `i` in `words`.
+#[inline]
+pub fn set_bit(words: &mut [u64], i: usize) {
+    words[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+}
+
+/// Clears bit `i` in `words`.
+#[inline]
+pub fn clear_bit(words: &mut [u64], i: usize) {
+    words[i / WORD_BITS] &= !(1u64 << (i % WORD_BITS));
+}
+
+/// Reads bit `i` of `words`.
+#[inline]
+pub fn get_bit(words: &[u64], i: usize) -> bool {
+    (words[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1
+}
+
+/// Number of set bits across `words`.
+#[inline]
+pub fn count_ones(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// The mask selecting, within word `w`, the bits whose *absolute* index
+/// falls in `[lo, hi)`. Zero when the range misses the word entirely —
+/// this is how a contiguous slot range becomes a per-word allow mask.
+#[inline]
+pub fn range_word_mask(w: usize, lo: usize, hi: usize) -> u64 {
+    let base = w * WORD_BITS;
+    let a = lo.max(base);
+    let b = hi.min(base + WORD_BITS);
+    if a >= b {
+        return 0;
+    }
+    let span = b - a;
+    let ones = if span == WORD_BITS { u64::MAX } else { (1u64 << span) - 1 };
+    ones << (a - base)
+}
+
+/// A fixed-length bitset over `u64` words — the `Vec<bool>` replacement
+/// used by [`crate::kvcache::BlockPool`]'s cached-flag gauge (8× denser,
+/// word-at-a-time population counts).
+#[derive(Debug, Clone)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// A set of `len` bits, all clear.
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; words_for(len)], len }
+    }
+
+    /// Bit count (fixed at construction).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the set holds zero bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reads bit `i`. Panics when out of range.
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit {i} out of range ({})", self.len);
+        get_bit(&self.words, i)
+    }
+
+    /// Writes bit `i`. Panics when out of range.
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit {i} out of range ({})", self.len);
+        if v {
+            set_bit(&mut self.words, i);
+        } else {
+            clear_bit(&mut self.words, i);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        count_ones(&self.words)
+    }
+
+    /// Backing words (low bit of word 0 = bit 0).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_math_round_trips() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        let mut w = vec![0u64; 2];
+        set_bit(&mut w, 0);
+        set_bit(&mut w, 63);
+        set_bit(&mut w, 64);
+        assert!(get_bit(&w, 0) && get_bit(&w, 63) && get_bit(&w, 64));
+        assert!(!get_bit(&w, 1));
+        assert_eq!(count_ones(&w), 3);
+        clear_bit(&mut w, 63);
+        assert!(!get_bit(&w, 63));
+        assert_eq!(count_ones(&w), 2);
+    }
+
+    #[test]
+    fn range_word_mask_matches_per_bit_reference() {
+        for &(lo, hi) in &[(0usize, 0usize), (0, 64), (3, 7), (60, 70), (64, 128), (5, 200)] {
+            for w in 0..4 {
+                let mask = range_word_mask(w, lo, hi);
+                for b in 0..WORD_BITS {
+                    let abs = w * WORD_BITS + b;
+                    let expect = abs >= lo && abs < hi;
+                    assert_eq!((mask >> b) & 1 == 1, expect, "w={w} lo={lo} hi={hi} bit={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitset_get_set_count() {
+        let mut s = BitSet::new(130);
+        assert_eq!(s.len(), 130);
+        assert!(!s.is_empty());
+        assert!(!s.get(129));
+        s.set(129, true);
+        s.set(0, true);
+        s.set(64, true);
+        assert!(s.get(129) && s.get(0) && s.get(64));
+        assert_eq!(s.count_ones(), 3);
+        s.set(64, false);
+        assert!(!s.get(64));
+        assert_eq!(s.count_ones(), 2);
+        assert_eq!(s.words().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bitset_bounds_checked() {
+        let s = BitSet::new(10);
+        let _ = s.get(10);
+    }
+}

@@ -1,10 +1,13 @@
 //! Self-contained substrates the repository implements instead of pulling
 //! dependencies: JSON ([`json`]), CLI parsing ([`cli`]), a benchmark
-//! statistics harness ([`benchkit`]) and a mini property-testing helper
-//! ([`prop`]). The build is fully offline (see Cargo.toml); everything a
-//! deployment needs ships in-tree.
+//! statistics harness ([`benchkit`]), a mini property-testing helper
+//! ([`prop`]), bit-word utilities ([`bits`]) and scoped-thread fan-out
+//! ([`par`], the rayon substitute). The build is fully offline (see
+//! Cargo.toml); everything a deployment needs ships in-tree.
 
 pub mod benchkit;
+pub mod bits;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prop;

@@ -1,0 +1,87 @@
+//! Scoped-thread fan-out for the per-session CPU stages of a batched
+//! round (`--cpu-threads`). The build is fully offline (no rayon, see
+//! Cargo.toml), so this is the rayon-shaped substitute:
+//! `std::thread::scope` gives the same fork-join structure over borrowed
+//! inputs with deterministic, order-preserving output.
+
+/// Resolves a `--cpu-threads` request: `0` means auto (the machine's
+/// available parallelism), anything else is taken literally. `1` is the
+/// serial default.
+pub fn effective_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Maps `f` over `items` on up to `threads` OS threads (contiguous block
+/// partition, output order matches input order). With `threads <= 1` or
+/// fewer than two items the map runs inline on the caller thread — the
+/// serial path spawns nothing and allocates only the output Vec.
+///
+/// A worker panic propagates to the caller (the scope joins all threads
+/// first), so a panicking `f` cannot silently drop items.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let workers = threads.min(n);
+    let chunk = n.div_ceil(workers);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let fr = &f;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+            handles.push(s.spawn(move || {
+                let mut res = Vec::with_capacity(chunk_items.len());
+                for t in chunk_items {
+                    res.push(fr(t));
+                }
+                (ci, res)
+            }));
+        }
+        for h in handles {
+            let (ci, res) = h.join().expect("parallel_map worker panicked");
+            for (j, r) in res.into_iter().enumerate() {
+                out[ci * chunk + j] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|r| r.expect("every chunk joined")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_and_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let par = parallel_map(&items, threads, |&x| x * x + 1);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto() {
+        assert_eq!(effective_threads(3), 3);
+        assert!(effective_threads(0) >= 1);
+    }
+}

@@ -1,0 +1,199 @@
+//! Steady-state allocation audit of the per-round CPU path (DESIGN.md
+//! §13): after warm-up, one mock batched round — per-session word-wise
+//! mask build, ownership check, incremental block-diagonal pack, dense
+//! expansion at the call boundary, and the arena acceptance walk — must
+//! perform **zero** heap allocations. A counting `#[global_allocator]`
+//! enforces this; any new per-round `Vec` shows up as a test failure
+//! here before it shows up as a latency regression.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use yggdrasil::kvcache::{SlotOwnership, SlotRange};
+use yggdrasil::sampling::XorShiftRng;
+use yggdrasil::tree::{
+    grow_step, owner_words, rows_owned_bits, Frontier, MaskBuilder, RoundArena, TokenTree,
+};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Passthrough to the system allocator that counts every `alloc` and
+/// `realloc` (frees are irrelevant to the steady-state criterion).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+const CAPACITY: usize = 640;
+const SESSIONS: usize = 8;
+const DEPTH: usize = 6;
+
+fn grown_tree(seed: u64) -> TokenTree {
+    let mut rng = XorShiftRng::new(seed);
+    let mut tree = TokenTree::new(0);
+    let mut frontier = Frontier::new(DEPTH);
+    let cands = |rng: &mut XorShiftRng| {
+        let mut v: Vec<(u32, f32)> = (0..4)
+            .map(|_| (rng.next_u64() as u32 % 1024, rng.next_f32()))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    };
+    frontier.push_candidates(&tree, 0, cands(&mut rng));
+    for _ in 0..DEPTH {
+        let ids = grow_step(&mut tree, &mut frontier, 4);
+        for id in ids {
+            let c = cands(&mut rng);
+            frontier.push_candidates(&tree, id, c);
+        }
+    }
+    tree
+}
+
+/// Everything a round reads; built (and allowed to allocate) once.
+struct Fixture {
+    trees: Vec<TokenTree>,
+    builders: Vec<MaskBuilder>,
+    node_lists: Vec<Vec<usize>>,
+    slot_ofs: Vec<Vec<Option<u32>>>,
+    keeps: Vec<Vec<usize>>,
+    owners: Vec<Vec<u64>>,
+    total_rows: usize,
+}
+
+fn fixture() -> Fixture {
+    let mut fx = Fixture {
+        trees: Vec::new(),
+        builders: Vec::new(),
+        node_lists: Vec::new(),
+        slot_ofs: Vec::new(),
+        keeps: Vec::new(),
+        owners: Vec::new(),
+        total_rows: 0,
+    };
+    for i in 0..SESSIONS {
+        let tree = grown_tree(7 + i as u64);
+        let base = (i * 70) as u32;
+        let mut mb = MaskBuilder::new(CAPACITY);
+        for p in 0..16u32 {
+            mb.commit_slot(base + p);
+        }
+        let nodes: Vec<usize> = (0..tree.len()).collect();
+        let slot_of: Vec<Option<u32>> =
+            (0..tree.len()).map(|j| Some(base + 16 + j as u32)).collect();
+        let keep: Vec<usize> = (0..tree.len()).filter(|&j| j == 0 || j % 3 != 2).collect();
+        let owner = SlotOwnership::Range(SlotRange { base, len: 70 });
+        let mut words = Vec::new();
+        owner_words(&owner, CAPACITY, &mut words);
+        fx.total_rows += tree.len();
+        fx.trees.push(tree);
+        fx.builders.push(mb);
+        fx.node_lists.push(nodes);
+        fx.slot_ofs.push(slot_of);
+        fx.keeps.push(keep);
+        fx.owners.push(words);
+    }
+    fx
+}
+
+/// One mock batched round over every borrow the engine's round loop
+/// takes from its [`RoundArena`]. Returns a checksum so nothing is
+/// optimised away.
+fn round(fx: &Fixture, builders: &mut [MaskBuilder], arena: &mut RoundArena) -> u64 {
+    // Mask half: word-wise per-session build, ownership word-test,
+    // incremental block-diagonal pack, one dense expansion at the end.
+    arena.packed.reshape(CAPACITY, fx.total_rows);
+    let mut at = 0usize;
+    for i in 0..fx.trees.len() {
+        let bits = builders[i].build_bits(
+            &fx.trees[i],
+            &fx.node_lists[i],
+            &fx.slot_ofs[i],
+            fx.trees[i].len(),
+        );
+        assert!(rows_owned_bits(bits, &fx.owners[i]));
+        arena.packed.copy_rows_from(bits, at);
+        at += fx.trees[i].len();
+    }
+    let mut dense = arena.take_f32();
+    arena.packed.expand_into(&mut dense);
+    let mut acc = dense.iter().filter(|&&v| v != 0.0).count() as u64;
+    arena.put_f32(dense);
+
+    // Walk half: the arena acceptance walk (node→row table + reused
+    // stacks), descending to the largest-token kept child.
+    for (tree, keep) in fx.trees.iter().zip(&fx.keeps) {
+        arena.row_of.clear();
+        arena.row_of.resize(tree.len(), -1);
+        for (r, &node) in keep.iter().enumerate() {
+            arena.row_of[node] = r as i32;
+        }
+        arena.walk_path.clear();
+        arena.walk_path.push(0);
+        let mut cur = 0usize;
+        loop {
+            acc += arena.row_of[cur] as u64;
+            arena.walk_kids.clear();
+            arena.walk_tokens.clear();
+            for &c in tree.children(cur) {
+                if arena.row_of[c] >= 0 {
+                    arena.walk_kids.push(c);
+                    arena.walk_tokens.push(tree.token(c));
+                }
+            }
+            let Some((i, _)) = arena.walk_tokens.iter().enumerate().max_by_key(|&(_, &t)| t)
+            else {
+                break;
+            };
+            cur = arena.walk_kids[i];
+            arena.walk_path.push(cur);
+        }
+        acc += arena.walk_path.len() as u64;
+    }
+    acc
+}
+
+#[test]
+fn round_loop_has_zero_steady_state_allocations() {
+    let mut fx = fixture();
+    let mut builders = std::mem::take(&mut fx.builders);
+    let mut arena = RoundArena::new();
+
+    // Warm-up: the first rounds grow the builder scratch, the packed
+    // words, the f32 pool entry, and the walk stacks to their final
+    // capacities.
+    let mut sink = 0u64;
+    for _ in 0..3 {
+        sink += round(&fx, &mut builders, &mut arena);
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..50 {
+        sink += round(&fx, &mut builders, &mut arena);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+
+    assert!(sink > 0, "rounds must do observable work");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state rounds must not touch the heap (got {} allocations over 50 rounds)",
+        after - before,
+    );
+}

@@ -5,12 +5,13 @@
 
 use std::sync::{Arc, Mutex};
 
-use yggdrasil::kvcache::{BlockPool, SlotCache, SlotPartition, SlotRange};
+use yggdrasil::kvcache::{BlockPool, SlotCache, SlotOwnership, SlotPartition, SlotRange};
 use yggdrasil::pruning::SubtreeDp;
 use yggdrasil::sampling::XorShiftRng;
 use yggdrasil::scheduler::{plan_latency, search_best_plan, Plan, StageDurations};
 use yggdrasil::tree::{
-    grow_step, pack_block_diagonal, rows_confined, rows_owned, Frontier, MaskBuilder, TokenTree,
+    grow_step, owner_words, pack_block_diagonal, pack_block_diagonal_bits, rows_confined,
+    rows_confined_bits, rows_owned, rows_owned_bits, BitMask, Frontier, MaskBuilder, TokenTree,
     TreeShape,
 };
 use yggdrasil::util::json::Json;
@@ -186,8 +187,10 @@ fn prop_plan_search_is_argmin() {
             head_draft: rng.next_f64() * 5e-3,
             tree_draft: rng.next_f64() * 2e-2,
             cpu_build: rng.next_f64() * 2e-3,
+            cpu_mask: rng.next_f64() * 1e-3,
             verify: rng.next_f64() * 2e-2,
             tail_draft: rng.next_f64() * 5e-3,
+            cpu_walk: rng.next_f64() * 2e-3,
             accept: rng.next_f64() * 3e-3,
             bookkeep: rng.next_f64() * 3e-3,
             tail_hit_rate: rng.next_f64(),
@@ -717,6 +720,92 @@ fn prop_block_diagonal_masks_never_cross_sessions() {
                 if packed[r * capacity..(r + 1) * capacity].iter().any(|&v| v != 0.0) {
                     return Err(format!("padding row {r} is not all-zero"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bitmask_paths_match_f32_reference() {
+    run_prop(
+        "bitmask-parity",
+        PropConfig { cases: 96, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |seed| {
+            let cap = 320usize;
+            let mut rng = XorShiftRng::new(*seed);
+            let sessions = 1 + rng.next_range(3);
+            let mut f32_blocks: Vec<Vec<f32>> = Vec::new();
+            let mut bit_blocks: Vec<BitMask> = Vec::new();
+            for s in 0..sessions {
+                let tree = random_tree(&mut rng);
+                let base = (s * 100) as u32;
+                let mut mb = MaskBuilder::new(cap);
+                for _ in 0..rng.next_range(24) {
+                    mb.commit_slot(base + 60 + rng.next_range(40) as u32);
+                }
+                let nodes: Vec<usize> = (0..tree.len()).collect();
+                let slot_of: Vec<Option<u32>> = (0..tree.len())
+                    .map(|j| if j % 7 == 6 { None } else { Some(base + (j % 60) as u32) })
+                    .collect();
+                let rows = tree.len() + rng.next_range(3);
+                let dense = mb.build(&tree, &nodes, &slot_of, rows).to_vec();
+                let bits = mb.build_bits(&tree, &nodes, &slot_of, rows).clone();
+                if bits.to_f32() != dense {
+                    return Err(format!("tree build parity broke (session {s})"));
+                }
+
+                // Ownership / confinement answers must agree in both layouts,
+                // for passing and failing owners alike.
+                let owner = if rng.next_f32() < 0.5 {
+                    SlotOwnership::Range(SlotRange { base, len: 40 + rng.next_range(80) as u32 })
+                } else {
+                    let blocks: Vec<u32> =
+                        (0..(cap / 16) as u32).filter(|_| rng.next_f32() < 0.5).collect();
+                    let shared: Vec<u32> =
+                        (0..(cap / 16) as u32).filter(|_| rng.next_f32() < 0.1).collect();
+                    SlotOwnership::Blocks { block_size: 16, blocks, shared }
+                };
+                let mut allowed = Vec::new();
+                owner_words(&owner, cap, &mut allowed);
+                if rows_owned(&dense, cap, &owner) != rows_owned_bits(&bits, &allowed) {
+                    return Err(format!("rows_owned parity broke (session {s}, {owner:?})"));
+                }
+                let cr = SlotRange {
+                    base: rng.next_range(cap) as u32,
+                    len: rng.next_range(cap) as u32,
+                };
+                if rows_confined(&dense, cap, cr) != rows_confined_bits(&bits, cr) {
+                    return Err(format!("rows_confined parity broke (session {s}, {cr:?})"));
+                }
+
+                // The linear prefill-chunk builder, same builder instance.
+                let k = 1 + rng.next_range(40);
+                let chunk_slots: Vec<u32> = (0..k).map(|j| base + j as u32).collect();
+                let n = rng.next_range(k + 1);
+                let rows_l = n + rng.next_range(3);
+                let dl = mb.build_linear(&chunk_slots, n, rows_l).to_vec();
+                let bl = mb.build_linear_bits(&chunk_slots, n, rows_l);
+                if bl.to_f32() != dl {
+                    return Err(format!("linear build parity broke (session {s})"));
+                }
+
+                f32_blocks.push(dense);
+                bit_blocks.push(bits);
+            }
+
+            // Block-diagonal pack parity across the whole batch.
+            let total: usize = f32_blocks.iter().map(|b| b.len() / cap).sum();
+            let width = total + rng.next_range(4);
+            let refs: Vec<&[f32]> = f32_blocks.iter().map(|b| b.as_slice()).collect();
+            let dense_packed = pack_block_diagonal(&refs, cap, width);
+            let bit_refs: Vec<&BitMask> = bit_blocks.iter().collect();
+            let mut packed = BitMask::new(cap);
+            pack_block_diagonal_bits(&bit_refs, cap, width, &mut packed);
+            if packed.to_f32() != dense_packed {
+                return Err("block-diagonal pack parity broke".to_string());
             }
             Ok(())
         },
