@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix bench-maskpath
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol bench-maskpath
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -52,6 +52,11 @@ smoke:
 # runs this too — enforces the ≥2× prefill-reduction bar).
 smoke-prefix:
 	cd rust && cargo run --release -- figures --exp serving_prefix_mock
+
+# Headless head-of-line-blocking smoke (DESIGN.md §14; CI runs this
+# too — a mid-wave long prompt must leave warm p95 ITL ≤ 1.5× baseline).
+smoke-hol:
+	cd rust && cargo run --release -- figures --exp serving_hol_mock
 
 # Boolean-vs-bit-packed mask/walk microbench sweep (DESIGN.md §13):
 # asserts bit-exact parity, then writes results/BENCH_maskpath.json.

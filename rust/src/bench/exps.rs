@@ -850,6 +850,112 @@ pub fn serving_prefix_mock(opts: &super::BenchOpts) -> crate::Result<()> {
     Ok(())
 }
 
+/// Headless head-of-line-blocking smoke (`--exp serving_hol_mock`, no
+/// AOT artifacts): three latency-class warm streams run a steady decode
+/// wave while one 8×-block-size cold prompt (128 tokens, throughput
+/// class) arrives mid-wave. With chunked prefill (DESIGN.md §14) the
+/// cold prompt's simulated prefill cost is spread one chunk per round,
+/// so the warm streams' p95 inter-token latency must stay within 1.5×
+/// the no-long-prompt baseline — the ROADMAP acceptance bar this smoke
+/// enforces in CI. A monolithic-prefill phase (chunking off) is
+/// reported alongside for contrast, and every stream in every phase
+/// must stay bit-exact.
+pub fn serving_hol_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::server::{Client, MockStepEngine, ServeOpts, Server, SloClass};
+
+    let block = 16usize;
+    let warm_clients = 3usize;
+    let warm_new = 40usize;
+    let cold_prompt: Vec<u32> = (0..8 * block as u32).map(|i| 7000 + i).collect();
+    let expected = |p: &[u32], n: usize| -> Vec<u32> {
+        (0..n).map(|i| p[0].wrapping_add((p.len() - 1 + i) as u32)).collect()
+    };
+
+    let mut rows: Vec<(&str, f64, f64, u64)> = Vec::new();
+    for (mode, inject, chunk) in
+        [("baseline", false, block), ("hol_chunked", true, block), ("hol_monolithic", true, 0)]
+    {
+        // 10 ms verify rounds; each prefilled token costs 150 µs of
+        // simulated device time, so the 128-token cold prompt is a
+        // ~19 ms monolithic stall but only ~2.4 ms per 16-token chunk.
+        let engine = MockStepEngine::with_paged_pool(10, 2, 64 * block + 1, block)?
+            .with_prefill_chunk(chunk)
+            .with_prefill_cost(150);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: 4, ..ServeOpts::default() },
+        )?;
+        let addr = srv.addr;
+        let warm: Vec<_> = (0..warm_clients)
+            .map(|c| {
+                let p = vec![1000 * (c as u32 + 1), 1000 * (c as u32 + 1) + 7];
+                let want = expected(&p, warm_new);
+                std::thread::spawn(move || -> crate::Result<()> {
+                    let mut cl = Client::connect(&addr)?;
+                    let r = cl.generate(c as u64, &p, warm_new)?;
+                    anyhow::ensure!(r.tokens == want, "warm stream not bit-exact");
+                    Ok(())
+                })
+            })
+            .collect();
+        let cold = inject.then(|| {
+            let p = cold_prompt.clone();
+            let want = expected(&p, 4);
+            std::thread::spawn(move || -> crate::Result<()> {
+                // Mid-wave arrival: the warm streams are in steady-state
+                // decode when the long prompt shows up.
+                std::thread::sleep(std::time::Duration::from_millis(80));
+                let mut cl = Client::connect(&addr)?;
+                let r = cl.generate_classed(100, &p, 4, SloClass::Throughput)?;
+                anyhow::ensure!(r.tokens == want, "cold stream not bit-exact");
+                Ok(())
+            })
+        });
+        for h in warm {
+            h.join().map_err(|_| anyhow::anyhow!("warm client panicked"))??;
+        }
+        if let Some(h) = cold {
+            h.join().map_err(|_| anyhow::anyhow!("cold client panicked"))??;
+        }
+        let snap = srv.stats.snapshot();
+        rows.push((mode, snap.itl_ms_p50_latency, snap.itl_ms_p95_latency, snap.prefill_chunks));
+    }
+    let mut t = Table::new(&["mode", "warm_clients", "itl_ms_p50", "itl_ms_p95", "prefill_chunks"])
+        .with_title("Serving smoke (HOL) — chunked prefill vs a mid-wave long prompt (headless)");
+    for (mode, p50, p95, chunks) in &rows {
+        t.row(&[
+            mode.to_string(),
+            warm_clients.to_string(),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+            chunks.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_hol_mock.csv"))?;
+    // The acceptance bar (ROADMAP): a mid-wave long prompt may not
+    // degrade warm p95 inter-token latency beyond 1.5× the baseline.
+    let (base, hol) = (&rows[0], &rows[1]);
+    anyhow::ensure!(
+        base.2.is_finite() && hol.2.is_finite(),
+        "warm ITL series missing from the stats snapshot"
+    );
+    anyhow::ensure!(
+        hol.2 <= 1.5 * base.2,
+        "head-of-line blocking: warm p95 ITL {:.1} ms with a chunked long prompt vs {:.1} ms \
+         baseline (> 1.5x)",
+        hol.2,
+        base.2
+    );
+    anyhow::ensure!(
+        hol.3 >= (cold_prompt.len() / block) as u64,
+        "long prompt was not chunked: {} prefill chunks",
+        hol.3
+    );
+    Ok(())
+}
+
 /// Heterogeneous-prompt sweep at fixed total cache capacity: paged
 /// block-granular leasing vs the equal-partition baseline (DESIGN.md
 /// §10). Long prompts strand an equal-partition cache — every region

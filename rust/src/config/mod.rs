@@ -110,6 +110,12 @@ pub struct BatchConfig {
     /// fans the pruning stage across sessions on `N` scoped threads
     /// (DESIGN.md §13).
     pub cpu_threads: usize,
+    /// Prefill chunk size in tokens (`--prefill-chunk`): when > 0, cold
+    /// prompts prefill at most this many tokens per side per batched
+    /// round instead of in one shot, so a long prompt cannot stall the
+    /// warm sessions packed into the same wave (DESIGN.md §14). `0`
+    /// (the default) keeps one-shot prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for BatchConfig {
@@ -123,6 +129,7 @@ impl Default for BatchConfig {
             cache_blocks: None,
             prefix_cache: true,
             cpu_threads: 1,
+            prefill_chunk: 0,
         }
     }
 }
@@ -411,6 +418,7 @@ impl EngineConfig {
             ),
             ("batch_prefix_cache", Json::Bool(self.batch.prefix_cache)),
             ("batch_cpu_threads", Json::Num(self.batch.cpu_threads as f64)),
+            ("batch_prefill_chunk", Json::Num(self.batch.prefill_chunk as f64)),
         ])
     }
 
@@ -447,6 +455,7 @@ impl EngineConfig {
                 cache_blocks: j.get("batch_cache_blocks").and_then(|v| v.as_usize()),
                 prefix_cache: get_b("batch_prefix_cache", d.batch.prefix_cache),
                 cpu_threads: get_u("batch_cpu_threads", d.batch.cpu_threads),
+                prefill_chunk: get_u("batch_prefill_chunk", d.batch.prefill_chunk),
             },
         })
     }
@@ -573,6 +582,7 @@ mod tests {
             cache_blocks: Some(12),
             prefix_cache: false,
             cpu_threads: 3,
+            prefill_chunk: 24,
         };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
@@ -600,6 +610,8 @@ mod tests {
         assert_eq!(cfg.engine.batch.block_size, d.block_size);
         assert!(cfg.engine.batch.cache_blocks.is_none());
         assert_eq!(cfg.engine.batch.cpu_threads, 1, "absent key keeps the serial default");
+        assert_eq!(d.prefill_chunk, 0, "one-shot prefill is the default");
+        assert_eq!(cfg.engine.batch.prefill_chunk, 0, "absent key keeps one-shot prefill");
     }
 
     #[test]

@@ -460,6 +460,42 @@ impl Session {
         prefill_side(&rt, &mut self.target, body, mode)
     }
 
+    /// Chunked prefill (DESIGN.md §14): advances each side's prefill by
+    /// at most `limit` tokens and returns `(done, reply)`. The first call
+    /// seeds `committed` with the whole prompt (like [`Session::prefill`]);
+    /// each later call resumes from the sides' committed slot counts —
+    /// the same resume point preemption and cached-prefix attach use —
+    /// so a cold prompt interleaves with warm sessions one chunk per
+    /// scheduling round instead of stalling the wave. `done` turns true
+    /// once both sides committed the whole body `prompt[..P-1]`; `reply`
+    /// is the verifier reply of the last chunk this call ran (`None`
+    /// when the verifier side had nothing left to prefill).
+    pub fn prefill_chunk(
+        &mut self,
+        prompt: &[u32],
+        limit: usize,
+    ) -> crate::Result<(bool, Option<ForwardReply>)> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(limit > 0, "prefill chunk must be > 0");
+        if self.committed.is_empty() {
+            self.committed = prompt.to_vec();
+            self.prompt_len = prompt.len();
+        } else {
+            anyhow::ensure!(
+                self.prompt_len == prompt.len() && self.committed.len() == prompt.len(),
+                "prefill_chunk resumed with a different prompt"
+            );
+        }
+        let body = &prompt[..prompt.len() - 1];
+        let rt = self.rt.clone();
+        let mode = self.exec_mode;
+        prefill_side_capped(&rt, &mut self.drafter, body, limit, mode)?;
+        let reply = prefill_side_capped(&rt, &mut self.target, body, limit, mode)?;
+        let done = self.drafter.slots.committed_len() >= body.len()
+            && self.target.slots.committed_len() >= body.len();
+        Ok((done, reply))
+    }
+
     /// Prompt tokens both sides hold committed before any prefill call —
     /// the cached-prefix resume point (0 without an attached prefix).
     pub fn attached_prefix_len(&self) -> usize {
@@ -515,10 +551,25 @@ fn prefill_side(
     body: &[u32],
     mode: ExecMode,
 ) -> crate::Result<Option<ForwardReply>> {
+    prefill_side_capped(rt, side, body, usize::MAX, mode)
+}
+
+/// [`prefill_side`] advancing at most `limit` tokens past the side's
+/// committed resume point — the per-round unit of chunked prefill
+/// (DESIGN.md §14). Tokens already committed (prior chunks, or an
+/// attached cached prefix) never re-run.
+fn prefill_side_capped(
+    rt: &Runtime,
+    side: &mut ModelSide,
+    body: &[u32],
+    limit: usize,
+    mode: ExecMode,
+) -> crate::Result<Option<ForwardReply>> {
     let mut pos = side.slots.committed_len();
+    let end = body.len().min(pos.saturating_add(limit));
     let mut reply = None;
-    while pos < body.len() {
-        let n = (body.len() - pos).min(64);
+    while pos < end {
+        let n = (end - pos).min(64);
         let width = crate::config::width_for(n).unwrap();
         let chunk = &body[pos..pos + n];
         let slots = side
@@ -625,6 +676,28 @@ mod tests {
         let prompt: Vec<u32> = (0..100).map(|i| (i % 50) as u32).collect();
         s.prefill(&prompt).unwrap();
         assert_eq!(s.target.slots.committed_len(), 99);
+    }
+
+    #[test]
+    fn prefill_chunk_matches_one_shot_commit_counts() {
+        let Some(rt) = runtime() else { return };
+        let mut s = Session::new(&rt, "dft-xs", "tgt-sm", 0, true).unwrap();
+        let prompt: Vec<u32> = (0..30).map(|i| (i % 11) as u32).collect();
+        let mut rounds = 0usize;
+        loop {
+            let (done, _) = s.prefill_chunk(&prompt, 7).unwrap();
+            rounds += 1;
+            if done {
+                break;
+            }
+        }
+        assert_eq!(rounds, 29usize.div_ceil(7), "29-token body at 7/chunk");
+        assert_eq!(s.committed_len(), 30);
+        assert_eq!(s.drafter.slots.committed_len(), 29);
+        assert_eq!(s.target.slots.committed_len(), 29);
+        // Re-stepping a finished prefill is a done no-op.
+        let (done, reply) = s.prefill_chunk(&prompt, 7).unwrap();
+        assert!(done && reply.is_none());
     }
 
     #[test]

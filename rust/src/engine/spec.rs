@@ -34,6 +34,7 @@
 //! all concurrent tasks. [`SpecDecoder`] itself is just configuration +
 //! that shared state; `generate_with` drives one task to completion.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -427,6 +428,10 @@ pub struct SpecDecoder {
     /// Shared device caches for cross-session batching; created lazily on
     /// the first `begin()` when `cfg.batch.enabled` (DESIGN.md §9).
     pool: Option<Arc<SharedCachePool>>,
+    /// The serving layer's overload-degradation rung (DESIGN.md §14),
+    /// cloned into every task. An atomic — not a `SpecShared` field —
+    /// because tasks read it while holding the shared-state lock.
+    degrade: Arc<AtomicU8>,
     label: String,
 }
 
@@ -483,6 +488,7 @@ impl SpecDecoder {
                 arena: RoundArena::new(),
             })),
             pool: None,
+            degrade: Arc::new(AtomicU8::new(0)),
             label,
         }
     }
@@ -542,6 +548,13 @@ pub struct SpecTask {
     /// §12): prefill resumes at this offset, and admission budgets only
     /// for the remainder.
     reused_prefix: usize,
+    /// The engine-wide degradation rung (DESIGN.md §14), shared with
+    /// [`SpecDecoder::set_degradation`]'s atomic.
+    degrade: Arc<AtomicU8>,
+    /// SLO class (DESIGN.md §14): `true` = latency-class (protected by
+    /// the degradation ladder), `false` = throughput-class (drafting is
+    /// shed first under pressure).
+    latency_class: bool,
     /// Per-session plan snapshot: a concurrent session finishing (and
     /// re-searching the shared plan) never changes this task mid-flight.
     plan: Plan,
@@ -661,6 +674,15 @@ impl SpecTask {
                 }
             }
             _ => (self.cfg.max_depth, self.cfg.max_width),
+        };
+        // Degradation rung 2+ (DESIGN.md §14): throughput-class sessions
+        // stop drafting entirely — a root-only tree still commits one
+        // bonus token per round — so latency-class sessions keep their
+        // speculative speedup under pressure.
+        let depth = if self.degrade_rung() >= scheduler::RUNG_SKIP_DRAFT && !self.latency_class {
+            0
+        } else {
+            depth
         };
         self.rec.record("depth", depth as f64);
         self.rec.record("width", width as f64);
@@ -910,10 +932,18 @@ impl SpecTask {
     /// Fixed-range caches see `available() == free`, preserving the solo
     /// behaviour.
     fn verify_budget(&self) -> usize {
-        self.cfg
-            .max_verify
-            .min(self.sess.target.slots.available())
-            .max(1)
+        let mut cap = self.cfg.max_verify;
+        // Degradation rung 1+ (DESIGN.md §14): halve the verify envelope
+        // so every session's tree shrinks before anything is preempted.
+        if self.degrade_rung() >= scheduler::RUNG_SHRINK_BUDGET {
+            cap = (cap / 2).max(1);
+        }
+        cap.min(self.sess.target.slots.available()).max(1)
+    }
+
+    /// The engine-wide overload-degradation rung right now (0 = none).
+    fn degrade_rung(&self) -> u8 {
+        self.degrade.load(Ordering::Relaxed)
     }
 
     /// Verify-row assembly after the keep-set is decided — serially by
@@ -1355,13 +1385,40 @@ impl SpecTask {
     // ------------------------------------------------------------------
 
     fn step_prefill(&mut self) -> crate::Result<StepOutcome> {
+        // Chunked prefill (DESIGN.md §14): with `--prefill-chunk` set,
+        // each step advances the prompt by one chunk and stays in
+        // `Prefill` until the body is committed, so a long cold prompt
+        // interleaves with warm sessions round by round instead of
+        // stalling the wave. Rung 3+ of the degradation ladder halves
+        // the chunk to shed prefill work harder.
+        let mut chunk = self.cfg.batch.prefill_chunk;
+        if chunk > 0 && self.degrade_rung() >= scheduler::RUNG_CHUNK_HARDER {
+            chunk = (chunk / 2).max(1);
+        }
+        if self.sess.committed_len() == 0 {
+            // This task was admitted: its attached prefix (if any) is now
+            // consumed, so it counts toward the cache's hit-rate gauges.
+            self.sess.record_prefix_reuse();
+        }
         let prompt = std::mem::take(&mut self.prompt);
-        // This task was admitted: its attached prefix (if any) is now
-        // consumed, so it counts toward the cache's hit-rate gauges.
-        self.sess.record_prefix_reuse();
         let t_prefill = Instant::now();
-        let prefill_reply = self.sess.prefill(&prompt)?;
-        self.prefill_seconds = t_prefill.elapsed().as_secs_f64();
+        let step = if chunk == 0 {
+            self.sess.prefill(&prompt).map(|r| (true, r))
+        } else {
+            self.sess.prefill_chunk(&prompt, chunk)
+        };
+        self.prefill_seconds += t_prefill.elapsed().as_secs_f64();
+        let (done, prefill_reply) = match step {
+            Ok(x) => x,
+            Err(e) => {
+                self.prompt = prompt;
+                return Err(e);
+            }
+        };
+        if !done {
+            self.prompt = prompt;
+            return Ok(StepOutcome { tokens: vec![], state: TaskState::Prefill });
+        }
 
         let d = self.sess.target.spec.d_model;
         // Seed the depth hint from the prefill hidden state.
@@ -1524,9 +1581,16 @@ impl DecodeTask for SpecTask {
 
     fn uncached_prompt_len(&self) -> Option<usize> {
         // Admission budgets only for the prompt tail the prefix cache
-        // did not cover (DESIGN.md §12). `prompt` is drained by the
-        // prefill step, so this naturally reaches 0 afterwards.
-        Some(self.prompt.len().saturating_sub(self.reused_prefix))
+        // did not cover (DESIGN.md §12). `prompt` is drained once the
+        // prefill completes, so this naturally reaches 0 afterwards; a
+        // chunked prefill in flight (DESIGN.md §14) shrinks it chunk by
+        // chunk via the sides' committed resume point.
+        let covered = self.reused_prefix.max(self.sess.attached_prefix_len());
+        Some(self.prompt.len().saturating_sub(covered))
+    }
+
+    fn set_slo_class(&mut self, latency: bool) {
+        self.latency_class = latency;
     }
 
     fn kv_slots_in_use(&self) -> usize {
@@ -1554,6 +1618,10 @@ impl DecodeTask for SpecTask {
 }
 
 impl StepEngine for SpecDecoder {
+    fn set_degradation(&mut self, rung: u8) {
+        self.degrade.store(rung, Ordering::Relaxed);
+    }
+
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let sess = if self.cfg.batch.enabled {
@@ -1630,6 +1698,8 @@ impl StepEngine for SpecDecoder {
             max_new,
             tree_budget,
             reused_prefix,
+            degrade: Arc::clone(&self.degrade),
+            latency_class: true,
             plan,
             head: None,
             depth_hint: None,

@@ -83,6 +83,22 @@ pub trait DecodeTask: Send + std::any::Any {
         0
     }
 
+    /// Tags the task with its request's SLO class (DESIGN.md §14):
+    /// `latency = true` for interactive requests whose inter-token
+    /// latency the server protects, `false` for throughput-class batch
+    /// work the degradation ladder sheds first. Default: ignored —
+    /// engines without per-class behavior need no plumbing.
+    fn set_slo_class(&mut self, _latency: bool) {}
+
+    /// Whether a failed `step()` left the task in a consistent state it
+    /// can retry from on a later round (e.g. pool exhaustion detected
+    /// *before* any cache mutation). `false` — the conservative default —
+    /// makes the serving layer preempt or fail the task immediately
+    /// instead of re-stepping it under the degradation ladder.
+    fn retryable(&self) -> bool {
+        false
+    }
+
     /// Consumes the task and returns the completed [`Generation`].
     /// Callers normally invoke this once `step()` reports `Done`, but it
     /// is valid earlier (early client disconnect): the generation then
@@ -147,6 +163,13 @@ pub trait StepEngine: super::Engine {
     fn prefix_stats(&self) -> Option<crate::kvcache::PrefixCacheStats> {
         None
     }
+
+    /// Applies the serving layer's overload-degradation rung (DESIGN.md
+    /// §14): `0` = no pressure; higher rungs progressively shrink verify
+    /// budgets, skip drafting for throughput-class sessions, and halve
+    /// the prefill chunk (see `scheduler::DegradationLadder`). Default:
+    /// ignored — engines without degradation hooks run at full budgets.
+    fn set_degradation(&mut self, _rung: u8) {}
 }
 
 #[cfg(test)]

@@ -18,13 +18,14 @@ use yggdrasil::corpus::PromptSet;
 use yggdrasil::engine::{profiling, Engine, SpecDecoder, StepEngine};
 use yggdrasil::predictor::{DepthPredictor, DepthSample};
 use yggdrasil::runtime::Runtime;
-use yggdrasil::server::{ServeOpts, Server};
+use yggdrasil::server::{ServeOpts, Server, SloClass};
 use yggdrasil::util::cli::Args;
 
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
     "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks", "cpu-threads",
+    "prefill-chunk", "slo-class",
 ];
 const FLAGS: &[&str] = &[
     "quick",
@@ -273,6 +274,10 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         // auto, N = fan out across N scoped threads (DESIGN.md §13).
         app.engine.batch.cpu_threads =
             args.usize_or("cpu-threads", app.engine.batch.cpu_threads)?;
+        // Chunked prefill (DESIGN.md §14): cap cold-prompt prefill work
+        // per batched round; 0 prefills whole prompts in one shot.
+        app.engine.batch.prefill_chunk =
+            args.usize_or("prefill-chunk", app.engine.batch.prefill_chunk)?;
         if let Some(b) = args.get("cache-blocks") {
             let blocks: usize = b
                 .parse()
@@ -289,6 +294,10 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         max_sessions,
         stream,
         batched,
+        default_class: match args.get("slo-class") {
+            Some(s) => SloClass::from_str(s)?,
+            None => ServeOpts::default().default_class,
+        },
         ..ServeOpts::default()
     };
     let max_sessions = opts.max_sessions;
@@ -436,6 +445,11 @@ COMMON OPTIONS
                       reusing cached cross-request prefix blocks
                       (serve; the paged default caches shared prefixes)
   --prefix-cache      re-enable the prefix cache over a config file
+  --prefill-chunk N   cap cold-prompt prefill tokens per batched round
+                      so long prompts cannot stall warm streams
+                      (serve; 0 = whole prompt in one round)
+  --slo-class CLASS   default SLO class for untagged requests:
+                      latency (default) or throughput (serve)
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

@@ -326,6 +326,85 @@ pub fn clamp_tree_budget(envelope: usize, available: usize) -> usize {
     envelope.min((available / 2).max(2.min(available)))
 }
 
+/// How many exhaustion-free rounds walk the overload ladder back down
+/// one rung (hysteresis: pressure must stay gone for a while before the
+/// scheduler re-arms full speculation).
+pub const LADDER_RELAX_ROUNDS: u32 = 8;
+
+/// Rung 1: shrink per-session tree budgets (halved verify envelope).
+pub const RUNG_SHRINK_BUDGET: u8 = 1;
+/// Rung 2: skip drafting for throughput-class sessions (verify-only,
+/// one token per round — no speculative slots at all).
+pub const RUNG_SKIP_DRAFT: u8 = 2;
+/// Rung 3: chunk cold-prompt prefill harder (halved chunk size).
+pub const RUNG_CHUNK_HARDER: u8 = 3;
+/// Rung 4: preemption — the last resort the ladder exists to delay.
+pub const RUNG_PREEMPT: u8 = 4;
+
+/// Overload-degradation ladder (DESIGN.md §14): when the shared pool
+/// runs dry mid-round the server escalates one rung per pressured round
+/// — shrink tree budgets → skip drafting for low-priority sessions →
+/// chunk prefill harder → only then preempt — instead of jumping
+/// straight to preemption and its re-prefill churn. Each rung strictly
+/// reduces the speculative/cold slot demand of the next round, so most
+/// pressure spikes drain without ever reaching [`RUNG_PREEMPT`].
+/// Exhaustion-free rounds relax the ladder back down with hysteresis
+/// ([`LADDER_RELAX_ROUNDS`]).
+#[derive(Debug, Clone, Default)]
+pub struct DegradationLadder {
+    rung: u8,
+    clean_rounds: u32,
+}
+
+impl DegradationLadder {
+    /// A fresh, un-pressured ladder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current rung (0 = no degradation, [`RUNG_PREEMPT`] = worst).
+    pub fn rung(&self) -> u8 {
+        self.rung
+    }
+
+    /// One pool-exhaustion event: climb one rung (saturating at
+    /// [`RUNG_PREEMPT`]) and reset the relax hysteresis. Returns the new
+    /// rung.
+    pub fn escalate(&mut self) -> u8 {
+        self.clean_rounds = 0;
+        if self.rung < RUNG_PREEMPT {
+            self.rung += 1;
+        }
+        self.rung
+    }
+
+    /// Whether any degradation is currently active.
+    pub fn pressured(&self) -> bool {
+        self.rung > 0
+    }
+
+    /// Whether the ladder has exhausted its gentler rungs — only now may
+    /// the scheduler preempt.
+    pub fn at_preempt(&self) -> bool {
+        self.rung >= RUNG_PREEMPT
+    }
+
+    /// One exhaustion-free round: after [`LADDER_RELAX_ROUNDS`] in a row,
+    /// step back down one rung. Returns true when the rung changed.
+    pub fn relax(&mut self) -> bool {
+        if self.rung == 0 {
+            return false;
+        }
+        self.clean_rounds += 1;
+        if self.clean_rounds >= LADDER_RELAX_ROUNDS {
+            self.clean_rounds = 0;
+            self.rung -= 1;
+            return true;
+        }
+        false
+    }
+}
+
 /// Exhaustive profile-guided plan search (§5.2).
 pub fn search_best_plan(d: &StageDurations) -> (Plan, f64) {
     // Most-overlapping plans first so exact ties resolve toward overlap
@@ -618,6 +697,47 @@ mod tests {
         // justifies (expensive CPU, cheap tail draft).
         let (p, _) = search_best_plan(&steady);
         assert!(p.aot_tail, "stale outlier would have vetoed AOT-tail: {}", p.name());
+    }
+
+    #[test]
+    fn ladder_escalates_one_rung_at_a_time_and_saturates() {
+        let mut l = DegradationLadder::new();
+        assert!(!l.pressured());
+        assert_eq!(l.escalate(), RUNG_SHRINK_BUDGET);
+        assert_eq!(l.escalate(), RUNG_SKIP_DRAFT);
+        assert_eq!(l.escalate(), RUNG_CHUNK_HARDER);
+        assert!(!l.at_preempt(), "three gentle rungs before preemption");
+        assert_eq!(l.escalate(), RUNG_PREEMPT);
+        assert!(l.at_preempt());
+        assert_eq!(l.escalate(), RUNG_PREEMPT, "saturates at the top");
+    }
+
+    #[test]
+    fn ladder_relaxes_with_hysteresis() {
+        let mut l = DegradationLadder::new();
+        l.escalate();
+        l.escalate();
+        // One clean round is not enough to step down…
+        assert!(!l.relax());
+        assert_eq!(l.rung(), RUNG_SKIP_DRAFT);
+        // …an exhaustion resets the streak…
+        for _ in 0..LADDER_RELAX_ROUNDS - 2 {
+            assert!(!l.relax());
+        }
+        l.escalate();
+        assert_eq!(l.rung(), RUNG_CHUNK_HARDER);
+        // …and a full clean streak steps down exactly one rung.
+        for _ in 0..LADDER_RELAX_ROUNDS - 1 {
+            assert!(!l.relax());
+        }
+        assert!(l.relax());
+        assert_eq!(l.rung(), RUNG_SKIP_DRAFT);
+        // Fully relaxing reaches rung 0 and stays there.
+        for _ in 0..3 * LADDER_RELAX_ROUNDS {
+            l.relax();
+        }
+        assert_eq!(l.rung(), 0);
+        assert!(!l.relax(), "rung 0 never underflows");
     }
 
     #[test]

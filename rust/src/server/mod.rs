@@ -32,7 +32,7 @@ pub mod sessions;
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -47,6 +47,42 @@ pub use sessions::{DoneSummary, Job, ServerEvent};
 
 /// Connection-level cancellation flag, shared with the worker.
 pub type CancelFlag = Arc<AtomicBool>;
+
+/// Per-request priority/SLO class (DESIGN.md §14). The scheduler packs
+/// latency-class cold prompts first and sheds throughput-class drafting
+/// first when the degradation ladder engages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    /// Interactive: inter-token latency is protected (the default).
+    #[default]
+    Latency,
+    /// Batch work: throughput matters; degraded first under overload.
+    Throughput,
+}
+
+impl SloClass {
+    /// Stable wire/CLI string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloClass::Latency => "latency",
+            SloClass::Throughput => "throughput",
+        }
+    }
+
+    /// Parses the wire/CLI string form.
+    pub fn from_str(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "latency" => SloClass::Latency,
+            "throughput" => SloClass::Throughput,
+            _ => anyhow::bail!("unknown SLO class '{s}' (expected latency|throughput)"),
+        })
+    }
+
+    /// True for the latency (interactive) class.
+    pub fn is_latency(&self) -> bool {
+        matches!(self, SloClass::Latency)
+    }
+}
 
 /// Serving limits.
 #[derive(Debug, Clone)]
@@ -67,11 +103,25 @@ pub struct ServeOpts {
     /// DESIGN.md §10) and requeued for a re-prefill resume before the
     /// scheduler gives up with a terminal error.
     pub max_resumes: usize,
+    /// SLO class assigned to requests that do not name one
+    /// (`--slo-class`; per-request `"class"` overrides it).
+    pub default_class: SloClass,
+    /// Latency-class inter-token gap (ms) beyond which the scheduler
+    /// counts an SLO violation (DESIGN.md §14).
+    pub slo_target_ms: f64,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { max_queue: 64, max_sessions: 4, stream: true, batched: true, max_resumes: 8 }
+        Self {
+            max_queue: 64,
+            max_sessions: 4,
+            stream: true,
+            batched: true,
+            max_resumes: 8,
+            default_class: SloClass::Latency,
+            slo_target_ms: 250.0,
+        }
     }
 }
 
@@ -115,8 +165,21 @@ pub struct ServerStats {
     pub prefix_evictions: AtomicU64,
     /// Gauge: blocks currently held by the prefix trie (per side).
     pub prefix_cached_blocks: AtomicU64,
+    /// Prefill chunks stepped under chunked prefill (DESIGN.md §14) —
+    /// one per cold-prompt round, so a prompt whose prefill spans N
+    /// chunk-capped rounds counts N here (1 per prompt when unchunked).
+    pub prefill_chunks: AtomicU64,
+    /// Scheduling rounds run under a non-zero degradation rung.
+    pub degraded_rounds: AtomicU64,
+    /// Latency-class inter-token gaps that exceeded the SLO target.
+    pub slo_violations: AtomicU64,
+    /// Gauge: current overload-degradation rung (0 = no pressure; see
+    /// [`crate::scheduler::DegradationLadder`]).
+    pub degrade_rung: AtomicU64,
     /// Per-request serving series: `server.queue_delay_s`,
-    /// `server.ttft_s`, `server.tok_per_s`, `server.resume_delay_s`.
+    /// `server.ttft_s`, `server.tok_per_s`, `server.resume_delay_s`,
+    /// and the per-class inter-token series `server.itl_s.latency` /
+    /// `server.itl_s.throughput`.
     pub recorder: Mutex<Recorder>,
 }
 
@@ -157,6 +220,22 @@ pub struct StatsSnapshot {
     pub prefix_evictions: u64,
     /// Blocks currently held by the prefix trie (per side).
     pub prefix_cached_blocks: u64,
+    /// Prefill chunks stepped (DESIGN.md §14).
+    pub prefill_chunks: u64,
+    /// Rounds run under a non-zero degradation rung.
+    pub degraded_rounds: u64,
+    /// Latency-class inter-token gaps beyond the SLO target.
+    pub slo_violations: u64,
+    /// Current overload-degradation rung (0 = none).
+    pub degrade_rung: u64,
+    /// Latency-class inter-token latency p50 (ms; NaN with no samples).
+    pub itl_ms_p50_latency: f64,
+    /// Latency-class inter-token latency p95 (ms; NaN with no samples).
+    pub itl_ms_p95_latency: f64,
+    /// Throughput-class inter-token latency p50 (ms; NaN with no samples).
+    pub itl_ms_p50_throughput: f64,
+    /// Throughput-class inter-token latency p95 (ms; NaN with no samples).
+    pub itl_ms_p95_throughput: f64,
     /// Mean queueing delay (ms).
     pub queue_delay_ms_mean: f64,
     /// Median time-to-first-token (ms).
@@ -189,6 +268,14 @@ impl ServerStats {
             prefix_tokens_reused: self.prefix_tokens_reused.load(Ordering::Relaxed),
             prefix_evictions: self.prefix_evictions.load(Ordering::Relaxed),
             prefix_cached_blocks: self.prefix_cached_blocks.load(Ordering::Relaxed),
+            prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
+            degraded_rounds: self.degraded_rounds.load(Ordering::Relaxed),
+            slo_violations: self.slo_violations.load(Ordering::Relaxed),
+            degrade_rung: self.degrade_rung.load(Ordering::Relaxed),
+            itl_ms_p50_latency: rec.percentile("server.itl_s.latency", 50.0) * 1e3,
+            itl_ms_p95_latency: rec.percentile("server.itl_s.latency", 95.0) * 1e3,
+            itl_ms_p50_throughput: rec.percentile("server.itl_s.throughput", 50.0) * 1e3,
+            itl_ms_p95_throughput: rec.percentile("server.itl_s.throughput", 95.0) * 1e3,
             queue_delay_ms_mean: rec.mean("server.queue_delay_s") * 1e3,
             ttft_ms_p50: rec.percentile("server.ttft_s", 50.0) * 1e3,
             tok_per_s_mean: rec.mean("server.tok_per_s"),
@@ -220,6 +307,14 @@ impl StatsSnapshot {
             ("prefix_tokens_reused", Json::Num(self.prefix_tokens_reused as f64)),
             ("prefix_evictions", Json::Num(self.prefix_evictions as f64)),
             ("prefix_cached_blocks", Json::Num(self.prefix_cached_blocks as f64)),
+            ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
+            ("degraded_rounds", Json::Num(self.degraded_rounds as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
+            ("degrade_rung", Json::Num(self.degrade_rung as f64)),
+            ("itl_ms_p50_latency", num(self.itl_ms_p50_latency)),
+            ("itl_ms_p95_latency", num(self.itl_ms_p95_latency)),
+            ("itl_ms_p50_throughput", num(self.itl_ms_p50_throughput)),
+            ("itl_ms_p95_throughput", num(self.itl_ms_p95_throughput)),
             ("queue_delay_ms_mean", num(self.queue_delay_ms_mean)),
             ("ttft_ms_p50", num(self.ttft_ms_p50)),
             ("tok_per_s_mean", num(self.tok_per_s_mean)),
@@ -267,6 +362,7 @@ impl Server {
         let astop = stop.clone();
         let astats = stats.clone();
         let stream = opts.stream;
+        let default_class = opts.default_class;
         let accept_thread = std::thread::Builder::new().name("ygg-accept".into()).spawn(
             move || {
                 while !astop.load(Ordering::Relaxed) {
@@ -276,7 +372,9 @@ impl Server {
                             let stats = astats.clone();
                             let _ = std::thread::Builder::new()
                                 .name("ygg-conn".into())
-                                .spawn(move || handle_conn(sock, tx, stats, stream));
+                                .spawn(move || {
+                                    handle_conn(sock, tx, stats, stream, default_class)
+                                });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(std::time::Duration::from_millis(20));
@@ -319,6 +417,7 @@ fn handle_conn(
     jobs: mpsc::SyncSender<Job>,
     stats: Arc<ServerStats>,
     stream: bool,
+    default_class: SloClass,
 ) {
     let Ok(wsock) = sock.try_clone() else { return };
     let cancelled: CancelFlag = Arc::new(AtomicBool::new(false));
@@ -365,9 +464,16 @@ fn handle_conn(
             Ok(Req::Stats) => {
                 let _ = ev_tx.send(ServerEvent::Stats(stats.snapshot()));
             }
-            Ok(Req::Generate { id, prompt, max_new }) => {
-                let job =
-                    Job::new(id, prompt, max_new, ev_tx.clone(), stream, cancelled.clone());
+            Ok(Req::Generate { id, prompt, max_new, class }) => {
+                let job = Job::new(
+                    id,
+                    prompt,
+                    max_new,
+                    class.unwrap_or(default_class),
+                    ev_tx.clone(),
+                    stream,
+                    cancelled.clone(),
+                );
                 if jobs.try_send(job).is_err() {
                     let _ = ev_tx.send(ServerEvent::Error {
                         id: Some(id),
@@ -387,7 +493,7 @@ fn handle_conn(
 }
 
 enum Req {
-    Generate { id: u64, prompt: Vec<u32>, max_new: usize },
+    Generate { id: u64, prompt: Vec<u32>, max_new: usize, class: Option<SloClass> },
     Stats,
 }
 
@@ -417,7 +523,19 @@ fn parse_request(line: &str) -> crate::Result<Req> {
     };
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
     let max_new = j.get("max_new").and_then(|v| v.as_usize()).unwrap_or(32);
-    Ok(Req::Generate { id, prompt, max_new })
+    // Optional per-request SLO class (DESIGN.md §14); absent falls back
+    // to the server's `--slo-class` default. A present-but-bogus value
+    // is a hard error, not a silent default.
+    let class = match j.get("class") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'class' must be a string"))?;
+            Some(SloClass::from_str(s)?)
+        }
+    };
+    Ok(Req::Generate { id, prompt, max_new, class })
 }
 
 /// Minimal blocking client for tests, benches and the e2e example.
@@ -461,11 +579,37 @@ impl Client {
         prompt: &[u32],
         max_new: usize,
     ) -> crate::Result<ClientResult> {
-        let req = Json::obj(vec![
+        self.request(id, prompt, max_new, None)
+    }
+
+    /// Like [`Client::generate`] but tags the request with an explicit
+    /// SLO class (DESIGN.md §14) instead of the server default.
+    pub fn generate_classed(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+        class: SloClass,
+    ) -> crate::Result<ClientResult> {
+        self.request(id, prompt, max_new, Some(class))
+    }
+
+    fn request(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        max_new: usize,
+        class: Option<SloClass>,
+    ) -> crate::Result<ClientResult> {
+        let mut fields = vec![
             ("id", Json::from_u64(id)),
             ("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
             ("max_new", Json::Num(max_new as f64)),
-        ]);
+        ];
+        if let Some(c) = class {
+            fields.push(("class", Json::Str(c.as_str().into())));
+        }
+        let req = Json::obj(fields);
         writeln!(self.writer, "{}", req.to_string())?;
         let mut stream_events = 0usize;
         loop {
@@ -726,9 +870,32 @@ pub struct MockStepEngine {
     /// Simulated prefill device time per *uncached* prompt token —
     /// makes TTFT visibly track the prefix cache's savings.
     pub prefill_cost: std::time::Duration,
+    /// Max prompt tokens a task prefills per step (0 = one-shot; the
+    /// mock analog of `BatchConfig::prefill_chunk`, DESIGN.md §14).
+    pub prefill_chunk: usize,
+    /// Engine-wide degradation rung shared with every task (the mock's
+    /// [`StepEngine::set_degradation`] state).
+    degrade: Arc<AtomicU8>,
+    /// Every rung [`StepEngine::set_degradation`] received, in order —
+    /// the ladder-walk-order assertion hook for fault-injection tests.
+    pub rungs_seen: Arc<Mutex<Vec<u8>>>,
+    /// Per-[`StepEngine::step_batch`] latency accounting: one record per
+    /// call, so headless harnesses can assert how rounds spent their
+    /// simulated device time.
+    pub calls: Arc<Mutex<Vec<MockCall>>>,
     paged_pool: Option<Arc<Mutex<crate::kvcache::BlockPool>>>,
     equal_part: Option<Arc<Mutex<crate::kvcache::SlotPartition>>>,
     prefix: Option<Arc<Mutex<crate::kvcache::PrefixCache>>>,
+}
+
+/// One [`MockStepEngine::step_batch`] call's latency accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct MockCall {
+    /// Live (not-Done) tasks stepped by this round.
+    pub live: usize,
+    /// Wall-clock seconds the call took (simulated device time +
+    /// per-task bookkeeping).
+    pub seconds: f64,
 }
 
 impl MockStepEngine {
@@ -745,10 +912,21 @@ impl MockStepEngine {
             violations: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
             prefilled_tokens: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
             prefill_cost: std::time::Duration::ZERO,
+            prefill_chunk: 0,
+            degrade: Arc::new(AtomicU8::new(0)),
+            rungs_seen: Arc::new(Mutex::new(Vec::new())),
+            calls: Arc::new(Mutex::new(Vec::new())),
             paged_pool: None,
             equal_part: None,
             prefix: None,
         }
+    }
+
+    /// Caps each task's prefill at `chunk` prompt tokens per step (0 =
+    /// one-shot), the mock analog of `--prefill-chunk` (DESIGN.md §14).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.prefill_chunk = chunk;
+        self
     }
 
     /// Adds a simulated draft stage: `draft_delay_ms` of drafter device
@@ -835,6 +1013,18 @@ struct MockTask {
     prompt: Vec<u32>,
     /// Prompt tokens served by the prefix cache: prefill starts here.
     prefill_skip: usize,
+    /// Prompt tokens prefilled so far (the chunk resume point; starts
+    /// at `prefill_skip`).
+    prefill_pos: usize,
+    /// Max prompt tokens prefilled per step (0 = one-shot).
+    prefill_chunk: usize,
+    /// The attached prefix was counted into the cache's hit gauges
+    /// (once, on the first successful prefill chunk).
+    reuse_counted: bool,
+    /// SLO class: `true` = latency (drafting protected under pressure).
+    latency_class: bool,
+    /// Engine-wide degradation rung (DESIGN.md §14).
+    degrade: Arc<AtomicU8>,
     /// Simulated device time per uncached prefill token.
     prefill_cost: std::time::Duration,
     /// Uncached-prefill-token counter (engine-wide).
@@ -919,21 +1109,38 @@ impl MockTask {
             TaskState::Prefill => {
                 // Prefill only the prompt tail the prefix cache did not
                 // cover (DESIGN.md §12): attached tokens are already
-                // committed in the slot cache.
-                let need = self.prompt_len - self.prefill_skip;
+                // committed in the slot cache. With a chunk cap set the
+                // tail advances at most `chunk` tokens per step and the
+                // task stays in `Prefill` until done (DESIGN.md §14);
+                // rung 3+ of the degradation ladder halves the chunk.
+                let rung = self.degrade.load(Ordering::Relaxed);
+                let mut chunk = self.prefill_chunk;
+                if chunk > 0 && rung >= crate::scheduler::RUNG_CHUNK_HARDER {
+                    chunk = (chunk / 2).max(1);
+                }
+                let remaining = self.prompt_len - self.prefill_pos;
+                let need = if chunk == 0 { remaining } else { remaining.min(chunk) };
                 if !self.kv_take(need, need)? {
                     anyhow::bail!(
                         "mock KV cannot host a {}-token prompt",
                         self.prompt_len
                     );
                 }
-                // Admitted: the attached prefix is consumed — count it.
-                if let Some(pc) = &self.prefix {
-                    pc.lock().unwrap().record_reuse(self.prefill_skip);
+                // Admitted: the attached prefix is consumed — count it
+                // (once, with the first chunk).
+                if !self.reuse_counted {
+                    self.reuse_counted = true;
+                    if let Some(pc) = &self.prefix {
+                        pc.lock().unwrap().record_reuse(self.prefill_skip);
+                    }
                 }
                 self.prefilled.fetch_add(need, Ordering::Relaxed);
                 if !self.prefill_cost.is_zero() && need > 0 {
                     std::thread::sleep(self.prefill_cost * need as u32);
+                }
+                self.prefill_pos += need;
+                if self.prefill_pos < self.prompt_len {
+                    return Ok(StepOutcome { tokens: vec![], state: TaskState::Prefill });
                 }
                 self.state = if self.max_new == 0 || self.kv_headroom() == 0 {
                     TaskState::Done
@@ -943,10 +1150,26 @@ impl MockTask {
                 Ok(StepOutcome { tokens: vec![], state: self.state })
             }
             TaskState::Iterate => {
-                let want = self.per_step.min(self.max_new - self.produced);
-                // Model a draft step: `want` accepted slots plus two
-                // rejected draft slots that release right back.
-                let n = if self.kv_take(want + 2, want)? {
+                // Degradation (DESIGN.md §14): rung 2+ stops drafting
+                // for throughput-class sessions (one token per round);
+                // rung 1+ stops over-allocating rejected-draft slots.
+                let rung = self.degrade.load(Ordering::Relaxed);
+                let per = if rung >= crate::scheduler::RUNG_SKIP_DRAFT && !self.latency_class {
+                    1
+                } else {
+                    self.per_step
+                };
+                let want = per.min(self.max_new - self.produced);
+                // Model a draft step: `want` accepted slots plus rejected
+                // draft slots that release right back — two at full
+                // budget, one under a shrunk verify tree (rung 1+). The
+                // over-allocation never drops to zero: exhaustion must
+                // keep surfacing as the typed error *before* the last
+                // slack slot commits, or a starved session would end
+                // `Done` with a silently truncated stream instead of
+                // preempting.
+                let extra = if rung >= crate::scheduler::RUNG_SHRINK_BUDGET { 1 } else { 2 };
+                let n = if self.kv_take(want + extra, want)? {
                     want
                 } else {
                     // Session-local capacity exhausted: commit what fits.
@@ -1025,11 +1248,23 @@ impl DecodeTask for MockTask {
     }
 
     fn uncached_prompt_len(&self) -> Option<usize> {
-        Some(self.prompt_len - self.prefill_skip)
+        // Shrinks chunk by chunk while a chunked prefill is in flight.
+        Some(self.prompt_len - self.prefill_pos)
     }
 
     fn kv_slots_in_use(&self) -> usize {
         self.held
+    }
+
+    fn set_slo_class(&mut self, latency: bool) {
+        self.latency_class = latency;
+    }
+
+    fn retryable(&self) -> bool {
+        // A failed `kv_take` allocates nothing, so a pool-exhausted mock
+        // step can simply re-run on a later round — letting the
+        // scheduler walk the whole degradation ladder before preempting.
+        self.state != TaskState::Done
     }
 
     fn finish(self: Box<Self>) -> Generation {
@@ -1097,6 +1332,11 @@ impl StepEngine for MockStepEngine {
             seed_tok: prompt[0],
             prompt: prompt.to_vec(),
             prefill_skip,
+            prefill_pos: prefill_skip,
+            prefill_chunk: self.prefill_chunk,
+            reuse_counted: false,
+            latency_class: true,
+            degrade: self.degrade.clone(),
             prefill_cost: self.prefill_cost,
             prefilled: self.prefilled_tokens.clone(),
             prefix: self.prefix.clone(),
@@ -1117,6 +1357,7 @@ impl StepEngine for MockStepEngine {
         &mut self,
         tasks: &mut [&mut dyn DecodeTask],
     ) -> Vec<crate::Result<StepOutcome>> {
+        let t0 = Instant::now();
         let live = tasks.iter().filter(|t| t.state() != TaskState::Done).count();
         if live > 0 {
             std::thread::sleep(self.step_delay);
@@ -1125,7 +1366,7 @@ impl StepEngine for MockStepEngine {
                 std::thread::sleep(self.draft_delay * rides);
             }
         }
-        tasks
+        let outs: Vec<crate::Result<StepOutcome>> = tasks
             .iter_mut()
             .map(|t| {
                 if let Some(m) = t.as_any_mut().downcast_mut::<MockTask>() {
@@ -1133,7 +1374,17 @@ impl StepEngine for MockStepEngine {
                 }
                 t.step()
             })
-            .collect()
+            .collect();
+        self.calls
+            .lock()
+            .unwrap()
+            .push(MockCall { live, seconds: t0.elapsed().as_secs_f64() });
+        outs
+    }
+
+    fn set_degradation(&mut self, rung: u8) {
+        self.degrade.store(rung, Ordering::Relaxed);
+        self.rungs_seen.lock().unwrap().push(rung);
     }
 
     fn cache_occupancy(&self) -> Option<(u64, u64)> {

@@ -61,11 +61,12 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::engine::{DecodeTask, StepEngine, StepOutcome};
+use crate::engine::{DecodeTask, StepEngine, StepOutcome, TaskState};
 use crate::kvcache::PoolExhausted;
+use crate::scheduler::DegradationLadder;
 use crate::util::json::Json;
 
-use super::{CancelFlag, ServeOpts, ServerStats, StatsSnapshot};
+use super::{CancelFlag, ServeOpts, ServerStats, SloClass, StatsSnapshot};
 
 /// Sliding window for the per-request serving series: bounds the stats
 /// recorder's memory (and each snapshot's percentile scan) on servers
@@ -171,6 +172,10 @@ pub struct Job {
     pub prompt: Vec<u32>,
     /// Generation budget (total across incarnations).
     pub max_new: usize,
+    /// SLO class (DESIGN.md §14): latency-class requests get protected
+    /// inter-token latency; throughput-class requests absorb degradation
+    /// first when the pool runs dry.
+    pub class: SloClass,
     /// Event channel back to the owning connection's writer pump.
     pub reply: mpsc::Sender<ServerEvent>,
     /// Emit per-step `tokens` events.
@@ -188,6 +193,9 @@ pub struct Job {
     pub preempted_at: Option<Instant>,
     /// When the first token was committed (survives preemptions).
     pub first_token: Option<Instant>,
+    /// When the latest token batch was committed — the anchor for the
+    /// per-class inter-token-latency series and SLO-violation counting.
+    pub last_token: Option<Instant>,
     /// Admitted seconds accumulated by earlier incarnations.
     pub active_s: f64,
     /// Enqueue → *first* admission, in seconds (set once; re-admissions
@@ -201,6 +209,7 @@ impl Job {
         id: u64,
         prompt: Vec<u32>,
         max_new: usize,
+        class: SloClass,
         reply: mpsc::Sender<ServerEvent>,
         stream: bool,
         cancelled: CancelFlag,
@@ -209,6 +218,7 @@ impl Job {
             id,
             prompt,
             max_new,
+            class,
             reply,
             stream,
             cancelled,
@@ -217,6 +227,7 @@ impl Job {
             preempts: 0,
             preempted_at: None,
             first_token: None,
+            last_token: None,
             active_s: 0.0,
             queue_s: None,
         }
@@ -245,6 +256,9 @@ pub(super) fn run_worker(
     // admissions (their clients are already mid-stream).
     let mut resume: VecDeque<Job> = VecDeque::new();
     let mut resume_backoff: u32 = 0;
+    // Overload-degradation state (DESIGN.md §14): escalates one rung per
+    // pool-exhausted round, relaxes after a clean streak.
+    let mut ladder = DegradationLadder::new();
     while !stop.load(Ordering::Relaxed) {
         resume_backoff = resume_backoff.saturating_sub(1);
         // Admission: fill free session slots — resumes first, then queue.
@@ -287,7 +301,7 @@ pub(super) fn run_worker(
             }
             continue;
         }
-        round(&mut engine, &mut live, &mut resume, &stats, &opts);
+        round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
         let kv: usize = live.iter().map(|s| s.task.kv_slots_in_use()).sum();
         stats.active_sessions.store(live.len() as u64, Ordering::Relaxed);
         stats.kv_slots_in_use.store(kv as u64, Ordering::Relaxed);
@@ -335,7 +349,8 @@ fn admit(
     }
     let remaining = job.max_new.saturating_sub(job.resumed.len());
     match engine.begin(&job.prompt, remaining) {
-        Ok(task) => {
+        Ok(mut task) => {
+            task.set_slo_class(job.class.is_latency());
             // Token-level admission counts only *new* blocks: a prompt
             // prefix served by the cross-request prefix cache (DESIGN.md
             // §12) is already resident, so the footprint to budget for is
@@ -450,22 +465,37 @@ fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats) {
     resume.push_back(job);
 }
 
-/// One scheduling round over every live session, removing sessions as
-/// they cancel, finish, preempt, or fail.
+/// One scheduling round over the live set, removing sessions as they
+/// cancel, finish, preempt, or fail.
 ///
-/// In round-robin mode each task takes exactly one serial `step()` (the
-/// time-sliced discipline). In batched mode the whole round goes through
-/// [`StepEngine::step_batch`] *once*, so the engine sees every live
-/// session together and can run the round stage-aligned — packing the
-/// sessions' same-level draft rows and their verification rows into one
-/// device call per stage (DESIGN.md §9 + §11) — outcomes still arrive
-/// one per session and are applied identically.
+/// The round is *packed* (DESIGN.md §14): every warm (non-`Prefill`)
+/// session steps, plus at most **one** cold session doing prompt work —
+/// with [`BatchConfig::prefill_chunk`](crate::config::BatchConfig) set,
+/// that is one chunk of one cold prompt per round, so a long arrival
+/// never stalls the warm sessions behind a monolithic prefill call.
+/// Latency-class cold sessions take the slot ahead of throughput-class
+/// ones.
+///
+/// In round-robin mode each stepped task takes one serial `step()` (the
+/// time-sliced discipline). In batched mode the packed subset goes
+/// through [`StepEngine::step_batch`] *once*, so the engine sees the
+/// round together and runs it stage-aligned (DESIGN.md §9 + §11) —
+/// outcomes still arrive one per stepped task and are applied
+/// identically.
+///
+/// A pool-exhausted step escalates the [`DegradationLadder`] one rung
+/// (per round) and republishes the rung to the engine; tasks that report
+/// [`DecodeTask::retryable`] stay live and simply re-step next round
+/// under the shed budgets — preemption happens only at
+/// [`RUNG_PREEMPT`](crate::scheduler::RUNG_PREEMPT) or for
+/// non-retryable tasks. Exhaustion-free rounds relax the ladder.
 fn round(
     engine: &mut Box<dyn StepEngine + Send>,
     live: &mut Vec<ServeSession>,
     resume: &mut VecDeque<Job>,
     stats: &ServerStats,
     opts: &ServeOpts,
+    ladder: &mut DegradationLadder,
 ) {
     // Drop cancelled sessions first: frees their KV immediately and
     // keeps them out of this round's batch.
@@ -481,23 +511,58 @@ fn round(
     if live.is_empty() {
         return;
     }
+    // Pack the round: all warm sessions + at most one cold prefill.
+    let mut cold: Option<usize> = None;
+    let mut stepped: Vec<usize> = Vec::with_capacity(live.len());
+    for (i, s) in live.iter().enumerate() {
+        if s.task.state() == TaskState::Prefill {
+            let better = match cold {
+                None => true,
+                Some(j) => s.job.class.is_latency() && !live[j].job.class.is_latency(),
+            };
+            if better {
+                cold = Some(i);
+            }
+        } else {
+            stepped.push(i);
+        }
+    }
+    if let Some(c) = cold {
+        stepped.push(c);
+        stepped.sort_unstable();
+    }
     let outcomes: Vec<crate::Result<StepOutcome>> = if opts.batched {
-        let mut refs: Vec<&mut dyn DecodeTask> =
-            live.iter_mut().map(|s| s.task.as_mut()).collect();
+        let mut want = stepped.iter().copied().peekable();
+        let mut refs: Vec<&mut dyn DecodeTask> = Vec::with_capacity(stepped.len());
+        for (i, s) in live.iter_mut().enumerate() {
+            if want.peek() == Some(&i) {
+                want.next();
+                refs.push(s.task.as_mut());
+            }
+        }
         engine.step_batch(&mut refs)
     } else {
-        live.iter_mut().map(|s| s.task.step()).collect()
+        stepped.iter().map(|&i| live[i].task.step()).collect()
     };
-    // Apply outcomes back-to-front so removals keep earlier indices valid.
-    debug_assert_eq!(outcomes.len(), live.len());
-    for (i, outcome) in outcomes.into_iter().enumerate().rev() {
+    // Apply outcomes back-to-front so removals keep earlier indices valid
+    // (`stepped` is ascending).
+    debug_assert_eq!(outcomes.len(), stepped.len());
+    let now = Instant::now();
+    let mut exhausted_this_round = false;
+    for (k, outcome) in outcomes.into_iter().enumerate().rev() {
+        let i = stepped[k];
         match outcome {
             Ok(out) => {
+                if cold == Some(i) {
+                    // The cold session advanced one unit of prefill work
+                    // (a chunk, or the whole prompt when unchunked).
+                    stats.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                }
                 let done = out.done();
                 if !out.tokens.is_empty() {
                     let s = &mut live[i];
                     if s.job.first_token.is_none() {
-                        s.job.first_token = Some(Instant::now());
+                        s.job.first_token = Some(now);
                         let ttft = s.job.enqueued.elapsed().as_secs_f64();
                         stats
                             .recorder
@@ -505,6 +570,25 @@ fn round(
                             .unwrap()
                             .record_windowed("server.ttft_s", ttft, STATS_WINDOW);
                     }
+                    if let Some(prev) = s.job.last_token {
+                        // Per-class inter-token latency: the metric the
+                        // SLO classes and the degradation ladder protect.
+                        let gap = now.duration_since(prev).as_secs_f64();
+                        let series = if s.job.class.is_latency() {
+                            "server.itl_s.latency"
+                        } else {
+                            "server.itl_s.throughput"
+                        };
+                        stats
+                            .recorder
+                            .lock()
+                            .unwrap()
+                            .record_windowed(series, gap, STATS_WINDOW);
+                        if s.job.class.is_latency() && gap * 1e3 > opts.slo_target_ms {
+                            stats.slo_violations.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    s.job.last_token = Some(now);
                     if s.job.stream {
                         let ev = ServerEvent::Tokens { id: s.job.id, tokens: out.tokens };
                         if s.job.reply.send(ev).is_err() {
@@ -522,27 +606,57 @@ fn round(
             }
             Err(e) => {
                 // A dry shared pool is a scheduling condition, not a
-                // request failure: preempt the session so its blocks
-                // drain to the survivors (or to parked resumes), unless
-                // it is truly alone — nothing live or parked could ever
-                // free a block for it — or out of resume budget.
-                if is_pool_exhausted(&e)
-                    && (live.len() > 1 || !resume.is_empty())
-                    && live[i].job.preempts < opts.max_resumes
-                {
-                    let s = live.remove(i);
-                    preempt(s, resume, stats);
-                    continue;
+                // request failure. Walk the degradation ladder before
+                // reaching for preemption: escalate one rung (once per
+                // round), republish it to the engine, and — if the task
+                // can safely re-step — keep it live so the shed budgets
+                // (shrunk verify trees, skipped throughput-class drafts,
+                // harder chunking) get a chance to drain the pressure.
+                if is_pool_exhausted(&e) {
+                    if !exhausted_this_round {
+                        exhausted_this_round = true;
+                        let rung = ladder.escalate();
+                        engine.set_degradation(rung);
+                        stats.degraded_rounds.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if live[i].task.retryable() && !ladder.at_preempt() {
+                        continue;
+                    }
+                    // Top rung (or a task that cannot re-step): preempt so
+                    // its blocks drain to the survivors (or to parked
+                    // resumes), unless it is truly alone — nothing live or
+                    // parked could ever free a block for it — or out of
+                    // resume budget.
+                    if (live.len() > 1 || !resume.is_empty())
+                        && live[i].job.preempts < opts.max_resumes
+                    {
+                        let s = live.remove(i);
+                        preempt(s, resume, stats);
+                        continue;
+                    }
                 }
                 let s = live.remove(i);
                 stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = s
-                    .job
-                    .reply
-                    .send(ServerEvent::Error { id: Some(s.job.id), message: format!("{e:#}") });
+                // A request that already survived preemptions dies here
+                // because its resume budget (or sole tenancy) ran out —
+                // surface that as the typed terminal-resume error instead
+                // of a raw engine failure mid-stream.
+                let message = if s.job.preempts > 0 {
+                    format!(
+                        "preempted request cannot resume: {e:#} (after {} preemptions)",
+                        s.job.preempts
+                    )
+                } else {
+                    format!("{e:#}")
+                };
+                let _ = s.job.reply.send(ServerEvent::Error { id: Some(s.job.id), message });
             }
         }
     }
+    if !exhausted_this_round && ladder.relax() {
+        engine.set_degradation(ladder.rung());
+    }
+    stats.degrade_rung.store(ladder.rung() as u64, Ordering::Relaxed);
 }
 
 /// Completes a session: final metrics + the typed `done` event. Tokens
@@ -589,7 +703,106 @@ fn finish_session(s: ServeSession, stats: &ServerStats) {
 
 #[cfg(test)]
 mod tests {
+    use super::super::MockStepEngine;
     use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn test_job(
+        id: u64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        class: SloClass,
+    ) -> (Job, mpsc::Receiver<ServerEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        (Job::new(id, prompt, max_new, class, tx, false, cancel), rx)
+    }
+
+    /// Fault injection (DESIGN.md §14): with the shared pool held dry by
+    /// two greedy sessions, the scheduler must walk the degradation
+    /// ladder in order — shrink budgets, skip drafts, chunk harder — and
+    /// preempt only once the top rung is reached, never before.
+    #[test]
+    fn exhaustion_walks_the_ladder_before_preempting() {
+        // block_size 1: every allocation draws on the shared pool, so
+        // the two sessions keep it dry round after round.
+        let mock = MockStepEngine::with_paged_pool(0, 4, 12, 1).unwrap();
+        let rungs = mock.rungs_seen.clone();
+        let mut engine: Box<dyn StepEngine + Send> = Box::new(mock);
+        let stats = ServerStats::default();
+        let opts = ServeOpts::default();
+        let mut live: Vec<ServeSession> = Vec::new();
+        let mut resume: VecDeque<Job> = VecDeque::new();
+        let mut ladder = DegradationLadder::new();
+        let mut rxs = Vec::new();
+        for id in 0..2u64 {
+            let (job, rx) = test_job(id, vec![100 * (id as u32 + 1); 5], 8, SloClass::Latency);
+            rxs.push(rx);
+            assert!(admit(&mut engine, job, &mut live, &stats, true).is_none());
+        }
+        assert_eq!(live.len(), 2, "both sessions admitted");
+        for _ in 0..24 {
+            round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+            let preempted = stats.preemptions.load(Ordering::Relaxed);
+            if !rungs.lock().unwrap().contains(&crate::scheduler::RUNG_PREEMPT) {
+                assert_eq!(preempted, 0, "preempted before the ladder's top rung");
+            }
+            if preempted > 0 {
+                break;
+            }
+        }
+        assert_eq!(
+            rungs.lock().unwrap().clone(),
+            vec![
+                crate::scheduler::RUNG_SHRINK_BUDGET,
+                crate::scheduler::RUNG_SKIP_DRAFT,
+                crate::scheduler::RUNG_CHUNK_HARDER,
+                crate::scheduler::RUNG_PREEMPT,
+            ],
+            "one rung per exhausted round, in ladder order"
+        );
+        let preempted = stats.preemptions.load(Ordering::Relaxed);
+        assert!(preempted > 0, "the top rung finally preempts");
+        assert_eq!(resume.len(), preempted as usize, "preempted jobs parked for resume");
+        assert!(stats.degraded_rounds.load(Ordering::Relaxed) >= 4);
+    }
+
+    /// Round packing (DESIGN.md §14): at most one cold session prefills
+    /// per round — a chunk at a time — and a latency-class cold prompt
+    /// takes the slot ahead of a throughput-class one.
+    #[test]
+    fn one_cold_prefill_chunk_per_round_prefers_latency_class() {
+        let mock = MockStepEngine::new(0, 2, 1024).with_prefill_chunk(4);
+        let mut engine: Box<dyn StepEngine + Send> = Box::new(mock);
+        let stats = ServerStats::default();
+        let opts = ServeOpts::default();
+        let mut live: Vec<ServeSession> = Vec::new();
+        let mut resume: VecDeque<Job> = VecDeque::new();
+        let mut ladder = DegradationLadder::new();
+        let (tp, _rx0) = test_job(0, vec![10; 9], 4, SloClass::Throughput);
+        let (lat, _rx1) = test_job(1, vec![20; 9], 4, SloClass::Latency);
+        assert!(admit(&mut engine, tp, &mut live, &stats, true).is_none());
+        assert!(admit(&mut engine, lat, &mut live, &stats, true).is_none());
+        round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+        assert_eq!(stats.prefill_chunks.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            live[1].task.uncached_prompt_len(),
+            Some(5),
+            "the latency-class prompt advanced one 4-token chunk"
+        );
+        assert_eq!(
+            live[0].task.uncached_prompt_len(),
+            Some(9),
+            "the throughput-class prompt waited"
+        );
+        // 9 tokens at chunk 4 = 3 chunks per prompt, interleaved one per
+        // round with the finished session's decode steps.
+        for _ in 0..6 {
+            round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+        }
+        assert_eq!(stats.prefill_chunks.load(Ordering::Relaxed), 6);
+        assert!(live.iter().all(|s| s.task.state() != TaskState::Prefill));
+    }
 
     #[test]
     fn events_serialize_with_ids_and_kind() {

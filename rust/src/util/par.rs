@@ -84,4 +84,24 @@ mod tests {
         assert_eq!(effective_threads(3), 3);
         assert!(effective_threads(0) >= 1);
     }
+
+    #[test]
+    #[should_panic(expected = "parallel_map worker panicked")]
+    fn worker_panic_propagates_to_the_caller() {
+        let items: Vec<usize> = (0..8).collect();
+        parallel_map(&items, 4, |&x| {
+            assert!(x != 5, "boom");
+            x
+        });
+    }
+
+    #[test]
+    fn auto_thread_count_matches_the_serial_map() {
+        // `--cpu-threads 0` resolves to the machine's parallelism; the
+        // fan-out must stay order-preserving whatever that lands on.
+        let items: Vec<usize> = (0..129).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * 3 + 7).collect();
+        let auto = parallel_map(&items, effective_threads(0), |&x| x * 3 + 7);
+        assert_eq!(auto, serial);
+    }
 }

@@ -726,6 +726,104 @@ fn prop_block_diagonal_masks_never_cross_sessions() {
     );
 }
 
+/// Chunked prefill (DESIGN.md §14): over random prompt lengths × chunk
+/// sizes × cache layouts (counted / shared-paged / equal-partition) ×
+/// mid-prefill preemption points, a chunked mock session must take
+/// exactly ⌈prompt/chunk⌉ prefill steps and stream the same tokens, bit
+/// for bit, as the one-shot baseline.
+#[test]
+fn prop_chunked_prefill_streams_bit_exact() {
+    use yggdrasil::engine::{DecodeTask, StepEngine, TaskState};
+    use yggdrasil::server::MockStepEngine;
+
+    fn drive(
+        engine: &mut MockStepEngine,
+        prompt: &[u32],
+        max_new: usize,
+        preempt_after: Option<usize>,
+    ) -> Result<(Vec<u32>, usize), String> {
+        let mut task = engine.begin(prompt, max_new).map_err(|e| e.to_string())?;
+        if let Some(k) = preempt_after {
+            for _ in 0..k {
+                if task.state() != TaskState::Prefill {
+                    break;
+                }
+                task.step().map_err(|e| e.to_string())?;
+            }
+            // Mid-prefill preemption: drop the task (every leased block
+            // or region returns) and re-begin the same prompt — the
+            // re-prefill resume path.
+            drop(task);
+            task = engine.begin(prompt, max_new).map_err(|e| e.to_string())?;
+        }
+        let mut stream = Vec::new();
+        let mut prefill_steps = 0usize;
+        loop {
+            let was_prefill = task.state() == TaskState::Prefill;
+            let out = task.step().map_err(|e| e.to_string())?;
+            if was_prefill {
+                prefill_steps += 1;
+            }
+            stream.extend_from_slice(&out.tokens);
+            if out.done() {
+                break;
+            }
+        }
+        Ok((stream, prefill_steps))
+    }
+
+    run_prop(
+        "chunked-prefill-bit-exact",
+        PropConfig { cases: 96, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let prompt_len = 1 + rng.next_range(40);
+            let max_new = rng.next_range(17);
+            let per_step = 1 + rng.next_range(4);
+            let chunk = 1 + rng.next_range(9);
+            let layout = rng.next_range(3);
+            let block_size = 1 + rng.next_range(8);
+            let capacity = prompt_len + max_new + per_step + 16;
+            let prompt: Vec<u32> = (0..prompt_len).map(|j| 5 + j as u32).collect();
+            let mk = |chunk: usize| -> Result<MockStepEngine, String> {
+                let e = match layout {
+                    0 => MockStepEngine::new(0, per_step, capacity),
+                    1 => MockStepEngine::with_paged_pool(0, per_step, capacity, block_size)
+                        .map_err(|e| e.to_string())?,
+                    _ => MockStepEngine::with_equal_partition(0, per_step, capacity, 1)
+                        .map_err(|e| e.to_string())?,
+                };
+                Ok(e.with_prefill_chunk(chunk))
+            };
+            let (baseline, base_steps) = drive(&mut mk(0)?, &prompt, max_new, None)?;
+            if base_steps != 1 {
+                return Err(format!("one-shot baseline took {base_steps} prefill steps"));
+            }
+            let want_steps = prompt_len.div_ceil(chunk);
+            let preempt_after = rng.next_range(want_steps);
+            let (chunked, steps) = drive(&mut mk(chunk)?, &prompt, max_new, Some(preempt_after))?;
+            if chunked != baseline {
+                return Err(format!(
+                    "stream mismatch (layout {layout}, chunk {chunk}, \
+                     preempted after {preempt_after}): {chunked:?} != {baseline:?}"
+                ));
+            }
+            if steps != want_steps {
+                return Err(format!(
+                    "{steps} prefill steps, want {want_steps} (prompt {prompt_len}, chunk {chunk})"
+                ));
+            }
+            let (unpreempted, steps2) = drive(&mut mk(chunk)?, &prompt, max_new, None)?;
+            if unpreempted != baseline || steps2 != want_steps {
+                return Err("unpreempted chunked run diverged from the baseline".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_bitmask_paths_match_f32_reference() {
     run_prop(

@@ -479,6 +479,46 @@ fn lone_oversized_paged_request_fails_cleanly_instead_of_livelocking() {
     assert_eq!(r.tokens, expected_tokens(&[5, 6], 4));
 }
 
+#[test]
+fn preempted_request_that_cannot_resume_gets_the_typed_terminal_error() {
+    // Two requests whose 6 + 40 footprints each exceed the whole 2-block
+    // pool. Under pressure the degradation ladder escalates to its top
+    // rung and preempts both; with `max_resumes: 1` neither can ever be
+    // re-admitted (an empty server still cannot host prompt + remaining
+    // budget). The terminal rejection must reach each client as the
+    // typed "preempted request cannot resume" error — not a raw engine
+    // failure that hides the preemption history. 10 ms steps leave a wide
+    // admission window so both requests are live before the pool drains.
+    let engine = MockStepEngine::with_paged_pool(10, 1, 17, 8).unwrap();
+    let srv = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(engine),
+        ServeOpts { max_queue: 8, max_sessions: 4, max_resumes: 1, ..ServeOpts::default() },
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let handles: Vec<_> = (0..2u64)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let prompt: Vec<u32> = (0..6).map(|j| 100 * (i as u32 + 1) + j).collect();
+                c.generate(i, &prompt, 40).unwrap_err()
+            })
+        })
+        .collect();
+    for h in handles {
+        let msg = format!("{:#}", h.join().unwrap());
+        assert!(
+            msg.contains("preempted request cannot resume"),
+            "expected the typed terminal-resume error, got: {msg}"
+        );
+    }
+    let preempts = srv.stats.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(preempts >= 2, "both oversized sessions must be preempted once, got {preempts}");
+    let degraded = srv.stats.degraded_rounds.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(degraded >= 4, "the ladder walks every rung before preempting, got {degraded}");
+}
+
 // ---------------------------------------------------------------------------
 // Cross-request prefix cache (DESIGN.md §12, mock).
 // ---------------------------------------------------------------------------
