@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol bench-maskpath
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol smoke-alloc bench-maskpath
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -57,6 +57,12 @@ smoke-prefix:
 # too — a mid-wave long prompt must leave warm p95 ITL ≤ 1.5× baseline).
 smoke-hol:
 	cd rust && cargo run --release -- figures --exp serving_hol_mock
+
+# Headless round-allocator smoke (DESIGN.md §15; CI runs this too —
+# adaptive budgets must beat uniform on tok/s at no worse p95 ITL, and
+# identical acceptance profiles must stay bit-exact with uniform).
+smoke-alloc:
+	cd rust && cargo run --release -- figures --exp serving_alloc_mock
 
 # Boolean-vs-bit-packed mask/walk microbench sweep (DESIGN.md §13):
 # asserts bit-exact parity, then writes results/BENCH_maskpath.json.

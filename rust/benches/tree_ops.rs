@@ -12,6 +12,7 @@
 
 use yggdrasil::objective::{LatencyCurve, LatencyModel};
 use yggdrasil::pruning::{prune_for_objective, SubtreeDp};
+use yggdrasil::scheduler::alloc::{allocate_verify_budget, SessionDemand};
 use yggdrasil::sampling::{softmax_inplace, top_k, XorShiftRng};
 use yggdrasil::tree::{
     grow_step, pack_block_diagonal, pack_block_diagonal_bits, BitMask, Frontier, MaskBuilder,
@@ -314,6 +315,34 @@ fn main() {
             }
             acc
         });
+    }
+
+    // ---------------- round allocator cost (DESIGN.md §15) ----------------
+    // One global allocation per batched round has to stay noise against
+    // the ~1 ms round floor of the serving mock: < 5% (50 µs) even at
+    // 16 packed sessions with curve pricing on.
+    {
+        let mut rng = XorShiftRng::new(11);
+        let demands: Vec<SessionDemand> = (0..16)
+            .map(|_| SessionDemand {
+                q: 0.05 + 0.9 * rng.next_f64(),
+                envelope: 64,
+                headroom: 512,
+                latency_class: rng.next_f32() < 0.5,
+            })
+            .collect();
+        let curve = LatencyCurve::new(&[(1, 5e-3), (16, 6e-3), (64, 1.5e-2)]);
+        b.run("round_alloc 16 sessions budget=128", || {
+            allocate_verify_budget(black_box(&demands), 128, 1024, Some(&curve))
+                .iter()
+                .sum::<usize>()
+        });
+        let mean = mean_of(&b, "round_alloc 16 sessions budget=128");
+        assert!(
+            mean < 50e-6,
+            "round allocation took {:.1} us at 16 sessions (> 5% of a 1 ms mock round)",
+            mean * 1e6
+        );
     }
 
     let speedup = mean_of(&b, "mask_build+pack bool s8 d6")

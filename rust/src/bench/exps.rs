@@ -956,6 +956,151 @@ pub fn serving_hol_mock(opts: &super::BenchOpts) -> crate::Result<()> {
     Ok(())
 }
 
+/// Headless round-allocator smoke (`--exp serving_alloc_mock`, no AOT
+/// artifacts): a mixed wave of easy (q = 0.9) and hard (q = 0.1)
+/// sessions runs against the alloc-model [`crate::server::MockStepEngine`],
+/// once with the uniform per-session budget split and once with the
+/// adaptive greedy allocator (DESIGN.md §15). Each granted verification
+/// row costs simulated device time, so concentrating rows on
+/// high-acceptance sessions must raise aggregate throughput at
+/// equal-or-better p95 inter-token latency — the ROADMAP acceptance bar
+/// this smoke enforces in CI. An identical-profiles phase pins the
+/// degenerate case: with every session at the same acceptance rate the
+/// adaptive streams must match the uniform streams exactly (the
+/// schedule-level twin lives in the server's unit tests).
+pub fn serving_alloc_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::server::{Client, MockStepEngine, ServeOpts, Server};
+
+    let easy = 4usize;
+    let hard = 4usize;
+    let clients = easy + hard;
+    let max_new = if opts.quick { 32 } else { 64 };
+    // Interleave easy/hard so client_wave's round-robin assignment
+    // splits the wave evenly; prompt[0] encodes the session's true
+    // acceptance rate as a percentage (90% vs 10%).
+    let prompts: Vec<Vec<u32>> = (0..clients)
+        .map(|c| {
+            if c % 2 == 0 {
+                vec![90, 200 + c as u32]
+            } else {
+                vec![10, 300 + c as u32]
+            }
+        })
+        .collect();
+
+    let mut rows: Vec<(&str, f64, f64, f64, f64, u64, u64)> = Vec::new();
+    for (mode, adaptive) in [("uniform", false), ("adaptive", true)] {
+        // 1 ms fixed round overhead + 100 µs of simulated device time
+        // per granted verification row, 8 rows/session baseline budget.
+        let engine = MockStepEngine::new(1, 2, 1 << 20).with_alloc_model(8, 100, adaptive);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: clients, ..ServeOpts::default() },
+        )?;
+        let w = crate::server::client_wave(srv.addr, clients, &prompts, max_new)?;
+        let snap = srv.stats.snapshot();
+        rows.push((
+            mode,
+            w.tok_per_s,
+            snap.itl_ms_p95_latency,
+            snap.accept_rate_p50,
+            snap.accept_rate_p95,
+            snap.alloc_budget_total,
+            snap.alloc_rounds,
+        ));
+    }
+
+    // Identical-profiles phase: every session at q = 0.5. The adaptive
+    // allocator must degenerate to the uniform water-fill, so each
+    // client's stream must be identical across the two modes.
+    let flat_new = 24usize;
+    let flat_prompts: Vec<Vec<u32>> = (0..4u32).map(|c| vec![50, 400 + c]).collect();
+    let mut flat_streams: Vec<Vec<Vec<u32>>> = Vec::new();
+    for adaptive in [false, true] {
+        let engine = MockStepEngine::new(0, 2, 1 << 20).with_alloc_model(4, 0, adaptive);
+        let srv = Server::spawn(
+            "127.0.0.1:0",
+            Box::new(engine),
+            ServeOpts { max_queue: 64, max_sessions: 4, ..ServeOpts::default() },
+        )?;
+        let addr = srv.addr;
+        let handles: Vec<_> = flat_prompts
+            .iter()
+            .enumerate()
+            .map(|(c, p)| {
+                let p = p.clone();
+                std::thread::spawn(move || -> crate::Result<Vec<u32>> {
+                    let mut cl = Client::connect(&addr)?;
+                    Ok(cl.generate(c as u64, &p, flat_new)?.tokens)
+                })
+            })
+            .collect();
+        let mut streams = Vec::new();
+        for h in handles {
+            streams.push(h.join().map_err(|_| anyhow::anyhow!("client panicked"))??);
+        }
+        flat_streams.push(streams);
+    }
+
+    let mut t = Table::new(&[
+        "mode",
+        "clients",
+        "tok_per_s",
+        "itl_ms_p95",
+        "accept_rate_p50",
+        "accept_rate_p95",
+        "alloc_budget_total",
+        "alloc_rounds",
+    ])
+    .with_title("Serving smoke (alloc) — adaptive vs uniform round budgets (headless)");
+    for (mode, tps, p95, a50, a95, budget, rounds) in &rows {
+        t.row(&[
+            mode.to_string(),
+            clients.to_string(),
+            format!("{tps:.1}"),
+            format!("{p95:.1}"),
+            format!("{a50:.3}"),
+            format!("{a95:.3}"),
+            budget.to_string(),
+            rounds.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_alloc_mock.csv"))?;
+
+    // The acceptance bars (ROADMAP): adaptive allocation must beat the
+    // uniform split on aggregate throughput at equal-or-better p95
+    // inter-token latency, the allocator must actually have run, and
+    // identical profiles must degenerate to the uniform streams.
+    let (uni, ada) = (&rows[0], &rows[1]);
+    anyhow::ensure!(
+        ada.6 > 0 && uni.6 > 0,
+        "the round allocator never resolved a batched round"
+    );
+    anyhow::ensure!(
+        ada.3.is_finite() && ada.4.is_finite(),
+        "accept_rate percentiles missing from the stats snapshot"
+    );
+    anyhow::ensure!(
+        ada.1 >= 1.1 * uni.1,
+        "adaptive allocation {:.1} tok/s < 1.1x uniform {:.1} tok/s on the mixed wave",
+        ada.1,
+        uni.1
+    );
+    anyhow::ensure!(
+        uni.2.is_finite() && ada.2 <= 1.15 * uni.2,
+        "adaptive p95 ITL {:.1} ms regressed past uniform {:.1} ms",
+        ada.2,
+        uni.2
+    );
+    anyhow::ensure!(
+        flat_streams[0] == flat_streams[1],
+        "identical acceptance profiles did not reproduce the uniform streams"
+    );
+    Ok(())
+}
+
 /// Heterogeneous-prompt sweep at fixed total cache capacity: paged
 /// block-granular leasing vs the equal-partition baseline (DESIGN.md
 /// §10). Long prompts strand an equal-partition cache — every region

@@ -116,6 +116,13 @@ pub struct BatchConfig {
     /// warm sessions packed into the same wave (DESIGN.md §14). `0`
     /// (the default) keeps one-shot prefill.
     pub prefill_chunk: usize,
+    /// Global round-level speculation allocator (DESIGN.md §15, the
+    /// default; `--no-global-alloc` disables): each batched round
+    /// distributes one round-wide verification-token budget across the
+    /// packed sessions by marginal expected-accepted-tokens — deep trees
+    /// for high-acceptance sessions, shallow or draft-skipped rounds for
+    /// low-acceptance ones — instead of the uniform per-session clamp.
+    pub global_alloc: bool,
 }
 
 impl Default for BatchConfig {
@@ -130,6 +137,7 @@ impl Default for BatchConfig {
             prefix_cache: true,
             cpu_threads: 1,
             prefill_chunk: 0,
+            global_alloc: true,
         }
     }
 }
@@ -419,6 +427,7 @@ impl EngineConfig {
             ("batch_prefix_cache", Json::Bool(self.batch.prefix_cache)),
             ("batch_cpu_threads", Json::Num(self.batch.cpu_threads as f64)),
             ("batch_prefill_chunk", Json::Num(self.batch.prefill_chunk as f64)),
+            ("batch_global_alloc", Json::Bool(self.batch.global_alloc)),
         ])
     }
 
@@ -456,6 +465,7 @@ impl EngineConfig {
                 prefix_cache: get_b("batch_prefix_cache", d.batch.prefix_cache),
                 cpu_threads: get_u("batch_cpu_threads", d.batch.cpu_threads),
                 prefill_chunk: get_u("batch_prefill_chunk", d.batch.prefill_chunk),
+                global_alloc: get_b("batch_global_alloc", d.batch.global_alloc),
             },
         })
     }
@@ -583,6 +593,7 @@ mod tests {
             prefix_cache: false,
             cpu_threads: 3,
             prefill_chunk: 24,
+            global_alloc: false,
         };
         let back = AppConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.engine.target, cfg.engine.target);
@@ -612,6 +623,8 @@ mod tests {
         assert_eq!(cfg.engine.batch.cpu_threads, 1, "absent key keeps the serial default");
         assert_eq!(d.prefill_chunk, 0, "one-shot prefill is the default");
         assert_eq!(cfg.engine.batch.prefill_chunk, 0, "absent key keeps one-shot prefill");
+        assert!(d.global_alloc, "the global round allocator is the default");
+        assert!(cfg.engine.batch.global_alloc, "absent key keeps the allocator on");
     }
 
     #[test]

@@ -40,7 +40,9 @@ use std::time::Instant;
 
 use crate::config::{width_for, EngineConfig, SchedulePlan, TreeStructure};
 use crate::metrics::Recorder;
-use crate::objective::{select_draft_width, AcceptanceStats, LatencyModel};
+use crate::objective::{
+    select_draft_width, AcceptanceEstimator, AcceptanceStats, LatencyModel,
+};
 use crate::predictor::DepthPredictor;
 use crate::pruning::prune_for_objective;
 use crate::runtime::{
@@ -555,6 +557,15 @@ pub struct SpecTask {
     /// the degradation ladder), `false` = throughput-class (drafting is
     /// shed first under pressure).
     latency_class: bool,
+    /// Per-session online acceptance estimate (DESIGN.md §15), seeded
+    /// from the shared stats and updated by every acceptance walk — the
+    /// global round allocator's input for this session.
+    accept_est: AcceptanceEstimator,
+    /// The global allocator's verification-row grant for the current
+    /// batched round; `None` outside allocator-driven rounds (solo
+    /// stepping, verify-only batching), which fall back to the
+    /// per-session clamp.
+    round_budget: Option<usize>,
     /// Per-session plan snapshot: a concurrent session finishing (and
     /// re-searching the shared plan) never changes this task mid-flight.
     plan: Plan,
@@ -646,6 +657,14 @@ impl SpecTask {
         // the profiled curves and the online acceptance stats. The AAL
         // objective (Fig. 14 ablation / baselines) degenerates to the
         // maximal envelope, reproducing prior work's behaviour.
+        //
+        // The global allocator's round grant (DESIGN.md §15), when one
+        // was resolved, caps the verify scope the selectors price: a
+        // session granted few rows stops growing trees those rows cannot
+        // verify. Without a grant (solo stepping, verify-only batching)
+        // the configured envelope applies unchanged.
+        let w_verify_budget =
+            self.round_budget.unwrap_or(self.cfg.max_verify).clamp(1, self.cfg.max_verify);
         let (depth, width) = match self.cfg.tree {
             TreeStructure::Egt => {
                 let hinted =
@@ -659,7 +678,7 @@ impl SpecTask {
                             self.cfg.objective,
                             d,
                             self.cfg.max_width,
-                            self.cfg.max_verify,
+                            w_verify_budget,
                         );
                         (d, w)
                     }
@@ -669,7 +688,7 @@ impl SpecTask {
                         self.cfg.objective,
                         self.cfg.max_depth,
                         self.cfg.max_width,
-                        self.cfg.max_verify,
+                        w_verify_budget,
                     ),
                 }
             }
@@ -678,8 +697,13 @@ impl SpecTask {
         // Degradation rung 2+ (DESIGN.md §14): throughput-class sessions
         // stop drafting entirely — a root-only tree still commits one
         // bonus token per round — so latency-class sessions keep their
-        // speculative speedup under pressure.
-        let depth = if self.degrade_rung() >= scheduler::RUNG_SKIP_DRAFT && !self.latency_class {
+        // speculative speedup under pressure. A floor-level allocator
+        // grant (≤ 1 verification row) skips drafting the same way: the
+        // row covers exactly the root, which still commits the bonus.
+        let depth = if (self.degrade_rung() >= scheduler::RUNG_SKIP_DRAFT
+            && !self.latency_class)
+            || self.round_budget.is_some_and(|b| b <= 1)
+        {
             0
         } else {
             depth
@@ -876,6 +900,10 @@ impl SpecTask {
         head: PendingHead,
         sh: &mut SpecShared,
     ) -> crate::Result<(VerifyPrep, VerifyParts)> {
+        // No global allocation ran for this iteration (solo stepping or
+        // verify-only batching): drop any stale grant from an earlier
+        // batched round so the per-session clamp applies.
+        self.round_budget = None;
         let mut d = self.begin_draft(head, sh)?;
         let t0 = Instant::now();
         while let Some(parts) = self.next_draft_parts(&mut d, &mut sh.arena)? {
@@ -932,13 +960,20 @@ impl SpecTask {
     /// Fixed-range caches see `available() == free`, preserving the solo
     /// behaviour.
     fn verify_budget(&self) -> usize {
+        self.verify_envelope().min(self.sess.target.slots.available()).max(1)
+    }
+
+    /// The static half of [`SpecTask::verify_budget`]: the configured
+    /// verify envelope after any degradation-rung shrink (DESIGN.md §14:
+    /// rung 1+ halves it so every tree shrinks before anything is
+    /// preempted), with **no** pool reads — the round allocator budgets
+    /// against one headroom snapshot instead (DESIGN.md §15).
+    fn verify_envelope(&self) -> usize {
         let mut cap = self.cfg.max_verify;
-        // Degradation rung 1+ (DESIGN.md §14): halve the verify envelope
-        // so every session's tree shrinks before anything is preempted.
         if self.degrade_rung() >= scheduler::RUNG_SHRINK_BUDGET {
             cap = (cap / 2).max(1);
         }
-        cap.min(self.sess.target.slots.available()).max(1)
+        cap
     }
 
     /// The engine-wide overload-degradation rung right now (0 = none).
@@ -1196,6 +1231,17 @@ impl SpecTask {
         let steps_grown = draft_widths.len();
         for d in 1..=steps_grown {
             sh.stats.record_step(draft_width, d <= accepted_draft);
+        }
+        // Session-local estimator (DESIGN.md §15): the same walk feeds
+        // this session's own acceptance estimate, which the global round
+        // allocator prices next round. A draft-skipped round (floor
+        // grant) carries no signal, so the estimate drifts up instead —
+        // the session periodically re-earns a probe tree rather than
+        // starving on a stale low estimate.
+        if steps_grown == 0 && self.round_budget.is_some_and(|b| b <= 1) {
+            self.accept_est.drift_up();
+        } else {
+            self.accept_est.record_round(accepted_draft, steps_grown);
         }
 
         // Depth-predictor hint for the next iteration, from the hidden
@@ -1597,6 +1643,14 @@ impl DecodeTask for SpecTask {
         self.sess.drafter.slots.in_use() + self.sess.target.slots.in_use()
     }
 
+    fn accept_rate(&self) -> Option<f64> {
+        Some(self.accept_est.q())
+    }
+
+    fn allocated_budget(&self) -> Option<usize> {
+        self.round_budget
+    }
+
     fn finish(self: Box<Self>) -> Generation {
         let mut this = *self;
         this.tokens.truncate(this.max_new);
@@ -1687,7 +1741,14 @@ impl StepEngine for SpecDecoder {
                 .min(sess.target.slots.available());
             tree_budget = scheduler::clamp_tree_budget(tree_budget, avail);
         }
-        let plan = self.shared.lock().unwrap().plan;
+        // Seed the session's acceptance estimator from the shared stats
+        // at its configured draft width (DESIGN.md §15): a fresh session
+        // inherits the fleet's current estimate, and the allocator's
+        // degenerate (all-equal) case keeps cold starts uniform.
+        let (plan, accept_seed) = {
+            let sh = self.shared.lock().unwrap();
+            (sh.plan, sh.stats.q(self.cfg.max_width))
+        };
         Ok(Box::new(SpecTask {
             rt: self.rt.clone(),
             cfg: self.cfg.clone(),
@@ -1700,6 +1761,8 @@ impl StepEngine for SpecDecoder {
             reused_prefix,
             degrade: Arc::clone(&self.degrade),
             latency_class: true,
+            accept_est: AcceptanceEstimator::seeded(accept_seed),
+            round_budget: None,
             plan,
             head: None,
             depth_hint: None,
@@ -1821,6 +1884,60 @@ impl StepEngine for SpecDecoder {
                     t_iter: Instant::now(),
                     draft_secs: 0.0,
                 }));
+            }
+
+            // ---------- round budget resolution (DESIGN.md §15) ----------
+            // One pool-headroom snapshot and one global allocation decide
+            // every session's verification budget *before* any tree is
+            // grown: the allocator (the default) splits a round-wide
+            // budget by marginal expected-accepted-tokens priced against
+            // the verifier curve; `--no-global-alloc` water-fills the
+            // same snapshot uniformly. Either way the grants sum to at
+            // most the snapshot, so a session pruned late in the build
+            // fan-out can no longer overestimate paged headroom consumed
+            // by an earlier one (typed preemption stays as the
+            // belt-and-braces fallback for anything else that moves).
+            {
+                let mut demands: Vec<scheduler::alloc::SessionDemand> =
+                    Vec::with_capacity(dents.len());
+                let mut pool_headroom = usize::MAX;
+                for dent in &dents {
+                    let idx = dent.as_ref().unwrap().idx;
+                    let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                    let headroom = task.sess.target.slots.available();
+                    if task.sess.is_paged() {
+                        // Paged sessions share one pool: every task
+                        // reports the same availability, which is also
+                        // the round's global constraint.
+                        pool_headroom = headroom;
+                    }
+                    demands.push(scheduler::alloc::SessionDemand {
+                        q: task.accept_est.q(),
+                        envelope: task.verify_envelope(),
+                        headroom,
+                        latency_class: task.latency_class,
+                    });
+                }
+                let global: usize =
+                    demands.iter().map(|dm| dm.envelope.min(dm.headroom).max(1)).sum();
+                let budgets = if self.cfg.batch.global_alloc {
+                    scheduler::alloc::allocate_verify_budget(
+                        &demands,
+                        global,
+                        pool_headroom,
+                        Some(&sh.lat.verifier),
+                    )
+                } else {
+                    scheduler::alloc::uniform_verify_budget(
+                        &demands,
+                        global.min(pool_headroom),
+                    )
+                };
+                for (k, &b) in budgets.iter().enumerate() {
+                    let idx = dents[k].as_ref().unwrap().idx;
+                    let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                    task.round_budget = Some(b);
+                }
             }
 
             // (a) Pack every deferred head into one drafter call: the
@@ -2038,20 +2155,24 @@ impl StepEngine for SpecDecoder {
             let live: Vec<usize> = (0..dents.len())
                 .filter(|&k| dents[k].as_ref().is_some_and(|e| e.d.is_some()))
                 .collect();
+            // Budgets are the round grants resolved against one headroom
+            // snapshot before drafting (DESIGN.md §15) — not live pool
+            // reads, so the fan-out below prices exactly what the
+            // round's grants sum to. The floor of 1 keeps a starved
+            // session's root-only verify; if even that overcommits, the
+            // typed-preemption fallback catches it at allocation time.
+            let budgets: Vec<usize> = live
+                .iter()
+                .map(|&k| {
+                    let idx = dents[k].as_ref().unwrap().idx;
+                    let task = tasks[idx].as_any_mut().downcast_mut::<SpecTask>().unwrap();
+                    match task.round_budget {
+                        Some(b) => b.max(1),
+                        None => task.verify_budget(),
+                    }
+                })
+                .collect();
             if threads > 1 && live.len() > 1 {
-                // Budgets read the shared caches, so they resolve in a
-                // serial pass before the fan-out.
-                let budgets: Vec<usize> = live
-                    .iter()
-                    .map(|&k| {
-                        let idx = dents[k].as_ref().unwrap().idx;
-                        tasks[idx]
-                            .as_any_mut()
-                            .downcast_mut::<SpecTask>()
-                            .unwrap()
-                            .verify_budget()
-                    })
-                    .collect();
                 let lat = sh.lat.clone();
                 let prune_cfg = self.cfg.prune;
                 let jobs: Vec<(&DraftInFlight, usize)> = live
@@ -2066,6 +2187,16 @@ impl StepEngine for SpecDecoder {
                 });
                 for (&k, o) in live.iter().zip(outs) {
                     pre[k] = Some(o);
+                }
+            } else {
+                // Serial build: same grants, same plan function — only
+                // the fan-out is skipped.
+                for (&k, &budget) in live.iter().zip(&budgets) {
+                    let d = dents[k].as_ref().unwrap().d.as_ref().unwrap();
+                    let t0 = Instant::now();
+                    let r =
+                        plan_prune(self.cfg.prune, &d.st.tree, &sh.lat, &d.draft_widths, budget);
+                    pre[k] = Some((r, t0.elapsed().as_secs_f64()));
                 }
             }
             for (k, en) in dents.into_iter().enumerate() {

@@ -99,6 +99,21 @@ pub trait DecodeTask: Send + std::any::Any {
         false
     }
 
+    /// This session's online per-level acceptance estimate in `[0, 1)`
+    /// (DESIGN.md §15), when the engine tracks one — the server mirrors
+    /// it into the `accept_rate` stats percentiles. Default: untracked.
+    fn accept_rate(&self) -> Option<f64> {
+        None
+    }
+
+    /// The verification-row budget the global round allocator granted
+    /// this task for its latest batched round (DESIGN.md §15), when one
+    /// ran — the server sums it into the `alloc_budget_total` gauge.
+    /// Default: no allocator.
+    fn allocated_budget(&self) -> Option<usize> {
+        None
+    }
+
     /// Consumes the task and returns the completed [`Generation`].
     /// Callers normally invoke this once `step()` reports `Done`, but it
     /// is valid earlier (early client disconnect): the generation then

@@ -37,6 +37,8 @@ const FLAGS: &[&str] = &[
     "no-batch-draft",
     "prefix-cache",
     "no-prefix-cache",
+    "global-alloc",
+    "no-global-alloc",
     "help",
 ];
 
@@ -268,6 +270,14 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         if args.flag("prefix-cache") {
             app.engine.batch.prefix_cache = true;
         }
+        if args.flag("no-global-alloc") {
+            // Per-session static verify budgets; no round-level
+            // redistribution across packed sessions (DESIGN.md §15 off).
+            app.engine.batch.global_alloc = false;
+        }
+        if args.flag("global-alloc") {
+            app.engine.batch.global_alloc = true;
+        }
         app.engine.batch.block_size =
             args.usize_or("block-size", app.engine.batch.block_size)?;
         // Per-session CPU stages of a round: 1 = serial (default), 0 =
@@ -450,6 +460,10 @@ COMMON OPTIONS
                       (serve; 0 = whole prompt in one round)
   --slo-class CLASS   default SLO class for untagged requests:
                       latency (default) or throughput (serve)
+  --no-global-alloc   give every packed session its own static verify
+                      budget instead of redistributing a round-wide
+                      budget by online acceptance rate (serve)
+  --global-alloc      re-enable the round allocator over a config file
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

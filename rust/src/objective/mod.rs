@@ -250,6 +250,65 @@ impl AcceptanceStats {
     }
 }
 
+/// Online per-*session* acceptance estimator (DESIGN.md §15): one EWMA
+/// over the session's own `complete_verify` accept counts, seeded from
+/// the engine-wide [`AcceptanceStats`] prior so a fresh session inherits
+/// the fleet's current estimate instead of a cold guess. The global
+/// round allocator reads `q()` to decide how many verification rows this
+/// session's next tree is worth.
+///
+/// The observable per round is `(accepted levels) / (offered levels)` —
+/// the maximum-likelihood per-level acceptance of the truncated
+/// geometric chain the Eq. 3 objective prices. A faster EWMA than the
+/// shared stats (`alpha = 0.15` vs `0.05`) is deliberate: the estimator
+/// must separate an easy prompt from a hard one within a few rounds of
+/// one request's lifetime, not over a whole serving epoch.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    q: f64,
+    /// EWMA smoothing factor for per-round updates.
+    alpha: f64,
+    rounds: u64,
+}
+
+impl AcceptanceEstimator {
+    /// A new estimator starting from the prior `q0` (typically the
+    /// shared [`AcceptanceStats::q`] at the session's draft width).
+    pub fn seeded(q0: f64) -> Self {
+        Self { q: q0.clamp(0.01, 0.999), alpha: 0.15, rounds: 0 }
+    }
+
+    /// Folds in one round: the acceptance walk descended `accepted` of
+    /// the `offered` drafted levels. Draft-skipped rounds (`offered ==
+    /// 0`) carry no signal and leave the estimate untouched.
+    pub fn record_round(&mut self, accepted: usize, offered: usize) {
+        if offered == 0 {
+            return;
+        }
+        let obs = (accepted.min(offered) as f64 / offered as f64).clamp(0.0, 1.0);
+        self.q = ((1.0 - self.alpha) * self.q + self.alpha * obs).clamp(0.01, 0.999);
+        self.rounds += 1;
+    }
+
+    /// A draft-skipped round (floor allocator grant) yields no
+    /// acceptance signal; drift the estimate up slightly instead, so a
+    /// low-acceptance session periodically re-earns a probe tree rather
+    /// than starving forever on a stale estimate.
+    pub fn drift_up(&mut self) {
+        self.q = (self.q + 0.01).clamp(0.01, 0.999);
+    }
+
+    /// The current per-level acceptance estimate.
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    /// How many informative rounds have been folded in.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+}
+
 /// Jointly selects draft depth and width under the configured objective —
 /// used when no depth predictor is available (the predictor, when present,
 /// supplies `depth` and only the width is selected). Under the AAL

@@ -1,0 +1,277 @@
+//! Round-level global speculation allocator (DESIGN.md §15).
+//!
+//! Every batched round packs several sessions' trees into shared device
+//! calls, so verification rows are a *round-wide* resource: a row spent
+//! on a low-acceptance session buys almost no accepted tokens but still
+//! widens (and slows) the packed verify call for everyone. This module
+//! solves one small allocation problem per round — distribute a global
+//! verification-token budget across the packed sessions by marginal
+//! expected-accepted-tokens per unit of packed-call latency — instead of
+//! handing every session the same uniform clamp.
+//!
+//! The model is the truncated-geometric acceptance chain the Eq. 3
+//! objective already uses: a session whose per-level acceptance estimate
+//! is `q` expects `q^(k+1)` additional accepted tokens from its
+//! `(k+1)`-th verification row, so marginal gains are decreasing and the
+//! greedy grant order is exactly optimal for the separable concave
+//! knapsack. Latency enters through the verifier's profiled
+//! [`LatencyCurve`]: a grant stops being worth buying once its expected
+//! gain falls below a small fraction of the marginal packed-row cost.
+//!
+//! Two invariants matter for correctness and reproducibility:
+//!
+//! * the total never exceeds the global budget or the pool headroom, and
+//!   no session exceeds its static call envelope — so the satellite
+//!   headroom-snapshot fix (one pool read per round, grants sum to at
+//!   most the snapshot) falls out of the allocator for free;
+//! * with indistinguishable sessions (equal acceptance estimates and
+//!   equal SLO class) the allocation degenerates to the deterministic
+//!   uniform water-fill, which is also the `--no-global-alloc` fallback
+//!   path — identical inputs therefore produce bit-identical streams.
+
+use crate::config::GRAPH_WIDTHS;
+use crate::objective::LatencyCurve;
+
+/// One packed session's claim on the round's verification budget.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionDemand {
+    /// Per-level acceptance estimate in `[0, 1)` (the probability that
+    /// one more tree level covers the verifier's next token).
+    pub q: f64,
+    /// Static per-session cap: the configured verify envelope after any
+    /// degradation-rung shrink (compiled graphs are sized for it).
+    pub envelope: usize,
+    /// This session's own KV headroom (paged sessions all report the
+    /// shared pool; equal-partition sessions report their lease).
+    pub headroom: usize,
+    /// `true` biases shares toward the latency SLO class.
+    pub latency_class: bool,
+}
+
+impl SessionDemand {
+    /// The hard per-session cap: envelope ∧ headroom.
+    fn cap(&self) -> usize {
+        self.envelope.min(self.headroom)
+    }
+}
+
+/// Multiplicative marginal-gain bias for latency-class sessions: under
+/// contention a latency-class session wins ties (and near-ties) for the
+/// next verification row over a throughput-class one.
+pub const LATENCY_BIAS: f64 = 1.25;
+
+/// A grant must buy at least this fraction of an accepted token per
+/// normalized marginal row cost before the greedy stops spending on it —
+/// rows cheaper than this are pure packed-call padding.
+const MIN_MARGINAL_GAIN: f64 = 0.02;
+
+/// Snaps a budget down to the static call envelopes: the largest
+/// compiled graph width that fits, so per-session row counts stay on
+/// the width grid the packed-call planner pads to. Budgets below the
+/// smallest width pass through (a 1-row root-only verify is always
+/// representable).
+pub fn snap_to_envelope(budget: usize, envelope: usize) -> usize {
+    let b = budget.min(envelope);
+    GRAPH_WIDTHS.iter().copied().filter(|&w| w <= b).max().unwrap_or(b)
+}
+
+/// The deterministic uniform fallback (`--no-global-alloc`, and the
+/// degenerate case of [`allocate_verify_budget`]): water-fill the
+/// budget one row at a time, round-robin over every session still under
+/// its cap. With an ample budget every session reaches its cap — the
+/// legacy per-session clamp — and under contention the shares differ by
+/// at most one row.
+pub fn uniform_verify_budget(demands: &[SessionDemand], global_budget: usize) -> Vec<usize> {
+    let n = demands.len();
+    let mut budgets = vec![0usize; n];
+    let mut remaining = global_budget;
+    let mut open = n;
+    while remaining > 0 && open > 0 {
+        open = 0;
+        for (b, d) in budgets.iter_mut().zip(demands) {
+            if *b >= d.cap() || remaining == 0 {
+                continue;
+            }
+            *b += 1;
+            remaining -= 1;
+            open += 1;
+        }
+    }
+    budgets
+}
+
+/// Solves the round's global allocation: distributes at most
+/// `min(global_budget, pool_headroom)` verification rows across
+/// `demands` by greedy marginal expected-accepted-tokens, biased by SLO
+/// class and priced against the verifier's latency `curve` when one is
+/// supplied. Returns one budget per demand, each snapped to the static
+/// call envelopes.
+///
+/// Guarantees (property-tested): `Σ budgets ≤ global_budget`,
+/// `Σ budgets ≤ pool_headroom`, `budgets[i] ≤ demands[i].envelope`, and
+/// equal acceptance estimates + equal SLO classes degenerate to
+/// [`uniform_verify_budget`] exactly.
+pub fn allocate_verify_budget(
+    demands: &[SessionDemand],
+    global_budget: usize,
+    pool_headroom: usize,
+    curve: Option<&LatencyCurve>,
+) -> Vec<usize> {
+    let n = demands.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let total = global_budget.min(pool_headroom);
+
+    // Indistinguishable sessions: the greedy would round-robin anyway;
+    // take the uniform path so the degenerate case is *exactly* the
+    // `--no-global-alloc` fallback (bit-identical budgets).
+    let uniform = demands.windows(2).all(|w| {
+        (w[0].q - w[1].q).abs() < 1e-9 && w[0].latency_class == w[1].latency_class
+    });
+    if uniform {
+        return uniform_verify_budget(demands, total);
+    }
+
+    // Floors: every live session gets one row (the root / bonus chain)
+    // as long as the budget covers it — a zero-row session could not
+    // commit even its bonus token.
+    let mut budgets = vec![0usize; n];
+    let mut granted = 0usize;
+    for (b, d) in budgets.iter_mut().zip(demands) {
+        if granted >= total || d.cap() == 0 {
+            continue;
+        }
+        *b = 1;
+        granted += 1;
+    }
+
+    // Greedy marginal grants: session `i` holding `b` rows values its
+    // next row at `bias_i · q_i^b` expected accepted tokens (the root
+    // row is certain; row `b+1` extends the acceptance chain by one
+    // level). Decreasing in `b`, so the argmax order is optimal.
+    let unit_cost = curve.map(|c| c.at(1.0).max(1e-12));
+    while granted < total {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, d) in demands.iter().enumerate() {
+            if budgets[i] >= d.cap() || budgets[i] == 0 {
+                continue;
+            }
+            let bias = if d.latency_class { LATENCY_BIAS } else { 1.0 };
+            let gain = bias * d.q.clamp(0.0, 0.999).powi(budgets[i] as i32);
+            let better = match best {
+                None => true,
+                // Strict improvement only: ties resolve to the lowest
+                // index, then the smallest holding (set by scan order).
+                Some((j, g)) => {
+                    gain > g + 1e-15 || (gain > g - 1e-15 && budgets[i] < budgets[j])
+                }
+            };
+            if better {
+                best = Some((i, gain));
+            }
+        }
+        let Some((i, gain)) = best else { break };
+        // Latency pricing: the marginal packed-row cost at the current
+        // total, normalized by the one-row call. Rows whose expected
+        // yield is under `MIN_MARGINAL_GAIN` of that cost are padding —
+        // stop (every later grant is worth even less).
+        if let (Some(c), Some(u)) = (curve, unit_cost) {
+            let w = granted as f64;
+            let marginal = (c.at(w + 1.0) - c.at(w)).max(0.0) / u;
+            if gain < MIN_MARGINAL_GAIN * marginal.max(1e-3) {
+                break;
+            }
+        } else if gain < MIN_MARGINAL_GAIN {
+            break;
+        }
+        budgets[i] += 1;
+        granted += 1;
+    }
+
+    // Snap to the compiled-width grid so packed verify calls keep
+    // hitting the static envelopes (never snaps *up*, so every bound
+    // above survives).
+    for (b, d) in budgets.iter_mut().zip(demands) {
+        *b = snap_to_envelope(*b, d.envelope);
+    }
+    budgets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(q: f64, envelope: usize, headroom: usize, latency: bool) -> SessionDemand {
+        SessionDemand { q, envelope, headroom, latency_class: latency }
+    }
+
+    #[test]
+    fn equal_profiles_degenerate_to_the_uniform_water_fill() {
+        let ds = vec![d(0.7, 16, 100, true); 4];
+        let got = allocate_verify_budget(&ds, 64, 1000, None);
+        assert_eq!(got, uniform_verify_budget(&ds, 64));
+        assert_eq!(got, vec![16; 4], "ample budget reaches every cap");
+    }
+
+    #[test]
+    fn high_acceptance_sessions_take_deeper_trees() {
+        let ds = vec![d(0.9, 64, 1000, false), d(0.05, 64, 1000, false)];
+        let got = allocate_verify_budget(&ds, 32, 1000, None);
+        assert!(
+            got[0] >= 8 * got[1].max(1),
+            "easy session should dominate the split, got {got:?}"
+        );
+        assert!(got[1] >= 1, "hard session keeps its bonus row");
+    }
+
+    #[test]
+    fn never_exceeds_budget_pool_or_envelope() {
+        let ds = vec![d(0.9, 8, 5, false), d(0.6, 64, 5, true), d(0.3, 4, 5, false)];
+        let got = allocate_verify_budget(&ds, 9, 5, None);
+        assert!(got.iter().sum::<usize>() <= 5, "pool bound, got {got:?}");
+        for (g, dd) in got.iter().zip(&ds) {
+            assert!(*g <= dd.envelope);
+        }
+    }
+
+    #[test]
+    fn latency_class_wins_near_ties() {
+        let ds = vec![d(0.5, 8, 100, true), d(0.5 + 1e-6, 8, 100, false)];
+        let got = allocate_verify_budget(&ds, 8, 100, None);
+        assert!(got[0] >= got[1], "bias must favor the latency class, got {got:?}");
+    }
+
+    #[test]
+    fn budgets_snap_to_the_width_grid() {
+        let ds = vec![d(0.95, 64, 1000, false), d(0.2, 64, 1000, false)];
+        let got = allocate_verify_budget(&ds, 40, 1000, None);
+        for &g in &got {
+            assert!(
+                g <= 1 || GRAPH_WIDTHS.contains(&g),
+                "budget {g} is off the compiled-width grid"
+            );
+        }
+    }
+
+    #[test]
+    fn curve_pricing_stops_buying_padding_rows() {
+        // Steep verifier curve: rows past the first widths cost a lot.
+        let curve = LatencyCurve::new(&[(1, 1e-3), (64, 1.0)]);
+        let ds = vec![d(0.3, 64, 1000, false), d(0.2, 64, 1000, false)];
+        let spent: usize =
+            allocate_verify_budget(&ds, 128, 1000, Some(&curve)).iter().sum();
+        let free: usize = allocate_verify_budget(&ds, 128, 1000, None).iter().sum();
+        assert!(spent <= free, "pricing can only trim the spend");
+        assert!(spent < 128, "a steep curve must leave budget unspent");
+    }
+
+    #[test]
+    fn uniform_water_fill_is_fair_under_contention() {
+        let ds = vec![d(0.5, 16, 100, false); 3];
+        let got = uniform_verify_budget(&ds, 10);
+        assert_eq!(got.iter().sum::<usize>(), 10);
+        let (lo, hi) = (got.iter().min().unwrap(), got.iter().max().unwrap());
+        assert!(hi - lo <= 1, "shares differ by at most one row, got {got:?}");
+    }
+}

@@ -30,6 +30,8 @@
 
 use crate::config::SchedulePlan;
 
+pub mod alloc;
+
 /// The concrete overlap decisions for one iteration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Plan {

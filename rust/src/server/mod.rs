@@ -176,10 +176,18 @@ pub struct ServerStats {
     /// Gauge: current overload-degradation rung (0 = no pressure; see
     /// [`crate::scheduler::DegradationLadder`]).
     pub degrade_rung: AtomicU64,
+    /// Gauge: verification rows the global round allocator granted
+    /// across the live sessions in the last batched round (DESIGN.md
+    /// §15; 0 when the allocator never ran).
+    pub alloc_budget_total: AtomicU64,
+    /// Rounds in which the global allocator resolved per-session
+    /// verification budgets (the allocator-decisions counter).
+    pub alloc_rounds: AtomicU64,
     /// Per-request serving series: `server.queue_delay_s`,
     /// `server.ttft_s`, `server.tok_per_s`, `server.resume_delay_s`,
-    /// and the per-class inter-token series `server.itl_s.latency` /
-    /// `server.itl_s.throughput`.
+    /// the per-class inter-token series `server.itl_s.latency` /
+    /// `server.itl_s.throughput`, and the per-round per-session
+    /// acceptance-estimate series `server.accept_rate` (DESIGN.md §15).
     pub recorder: Mutex<Recorder>,
 }
 
@@ -228,6 +236,17 @@ pub struct StatsSnapshot {
     pub slo_violations: u64,
     /// Current overload-degradation rung (0 = none).
     pub degrade_rung: u64,
+    /// Verification rows granted by the global allocator in the last
+    /// batched round (DESIGN.md §15; 0 when it never ran).
+    pub alloc_budget_total: u64,
+    /// Rounds the global allocator resolved budgets for.
+    pub alloc_rounds: u64,
+    /// Median per-session online acceptance estimate across recent
+    /// rounds (DESIGN.md §15; NaN with no samples).
+    pub accept_rate_p50: f64,
+    /// 95th-percentile per-session acceptance estimate (NaN with no
+    /// samples).
+    pub accept_rate_p95: f64,
     /// Latency-class inter-token latency p50 (ms; NaN with no samples).
     pub itl_ms_p50_latency: f64,
     /// Latency-class inter-token latency p95 (ms; NaN with no samples).
@@ -272,6 +291,10 @@ impl ServerStats {
             degraded_rounds: self.degraded_rounds.load(Ordering::Relaxed),
             slo_violations: self.slo_violations.load(Ordering::Relaxed),
             degrade_rung: self.degrade_rung.load(Ordering::Relaxed),
+            alloc_budget_total: self.alloc_budget_total.load(Ordering::Relaxed),
+            alloc_rounds: self.alloc_rounds.load(Ordering::Relaxed),
+            accept_rate_p50: rec.percentile("server.accept_rate", 50.0),
+            accept_rate_p95: rec.percentile("server.accept_rate", 95.0),
             itl_ms_p50_latency: rec.percentile("server.itl_s.latency", 50.0) * 1e3,
             itl_ms_p95_latency: rec.percentile("server.itl_s.latency", 95.0) * 1e3,
             itl_ms_p50_throughput: rec.percentile("server.itl_s.throughput", 50.0) * 1e3,
@@ -311,6 +334,10 @@ impl StatsSnapshot {
             ("degraded_rounds", Json::Num(self.degraded_rounds as f64)),
             ("slo_violations", Json::Num(self.slo_violations as f64)),
             ("degrade_rung", Json::Num(self.degrade_rung as f64)),
+            ("alloc_budget_total", Json::Num(self.alloc_budget_total as f64)),
+            ("alloc_rounds", Json::Num(self.alloc_rounds as f64)),
+            ("accept_rate_p50", num(self.accept_rate_p50)),
+            ("accept_rate_p95", num(self.accept_rate_p95)),
             ("itl_ms_p50_latency", num(self.itl_ms_p50_latency)),
             ("itl_ms_p95_latency", num(self.itl_ms_p95_latency)),
             ("itl_ms_p50_throughput", num(self.itl_ms_p50_throughput)),
@@ -886,6 +913,21 @@ pub struct MockStepEngine {
     paged_pool: Option<Arc<Mutex<crate::kvcache::BlockPool>>>,
     equal_part: Option<Arc<Mutex<crate::kvcache::SlotPartition>>>,
     prefix: Option<Arc<Mutex<crate::kvcache::PrefixCache>>>,
+    alloc: Option<MockAllocModel>,
+}
+
+/// The [`MockStepEngine`]'s simulated round-allocator regime
+/// (DESIGN.md §15): per-session acceptance rates, per-row verification
+/// pricing, and the adaptive-vs-uniform budget split.
+#[derive(Debug, Clone, Copy)]
+struct MockAllocModel {
+    /// Per-session baseline verification budget (the uniform share).
+    base_budget: usize,
+    /// Simulated device time per granted verification row.
+    row_cost: std::time::Duration,
+    /// Route budgets through the adaptive greedy allocator (`true`) or
+    /// the uniform water-fill baseline (`false`).
+    adaptive: bool,
 }
 
 /// One [`MockStepEngine::step_batch`] call's latency accounting.
@@ -919,7 +961,30 @@ impl MockStepEngine {
             paged_pool: None,
             equal_part: None,
             prefix: None,
+            alloc: None,
         }
+    }
+
+    /// Simulates the round-level speculation allocator (DESIGN.md §15):
+    /// every batched round distributes `base_budget` verification rows
+    /// per live session through [`crate::scheduler::alloc`] — the
+    /// adaptive greedy when `adaptive`, the uniform water-fill baseline
+    /// otherwise — charges `row_cost_us` of simulated device time per
+    /// granted row, and each task emits the truncated-geometric
+    /// expectation of its per-session acceptance rate, encoded in the
+    /// prompt's first token as a percentage (`prompt[0] % 100`).
+    pub fn with_alloc_model(
+        mut self,
+        base_budget: usize,
+        row_cost_us: u64,
+        adaptive: bool,
+    ) -> Self {
+        self.alloc = Some(MockAllocModel {
+            base_budget: base_budget.max(1),
+            row_cost: std::time::Duration::from_micros(row_cost_us),
+            adaptive,
+        });
+        self
     }
 
     /// Caps each task's prefill at `chunk` prompt tokens per step (0 =
@@ -1036,6 +1101,18 @@ struct MockTask {
     gauge: Arc<std::sync::atomic::AtomicUsize>,
     violations: Arc<std::sync::atomic::AtomicUsize>,
     kv: MockKv,
+    /// True per-level acceptance rate under the alloc-model regime
+    /// (`prompt[0] % 100` as a fraction; `None` outside the regime).
+    accept_q: Option<f64>,
+    /// Online acceptance estimate fed back to the round allocator and
+    /// mirrored into the server's `accept_rate` stats (DESIGN.md §15).
+    accept_est: crate::objective::AcceptanceEstimator,
+    /// Fractional-token accumulator: carries the non-integral part of
+    /// the truncated-geometric expectation across rounds so emission
+    /// stays deterministic.
+    frac: f64,
+    /// Verification rows the round allocator granted this round.
+    round_budget: Option<usize>,
 }
 
 impl MockTask {
@@ -1150,6 +1227,34 @@ impl MockTask {
                 Ok(StepOutcome { tokens: vec![], state: self.state })
             }
             TaskState::Iterate => {
+                if let (Some(q), Some(b)) = (self.accept_q, self.round_budget) {
+                    // Alloc-model regime (DESIGN.md §15): a grant of `b`
+                    // verify rows covers a depth-`b` draft chain, so
+                    // the round commits the truncated-geometric
+                    // expectation 1 + Σ_{d=1..b} q^d — accumulated
+                    // fractionally so emission stays deterministic.
+                    let mut expect = 1.0;
+                    let mut p = 1.0;
+                    for _ in 0..b {
+                        p *= q;
+                        expect += p;
+                    }
+                    self.frac += expect;
+                    let whole = self.frac.floor();
+                    self.frac -= whole;
+                    let want = (whole as usize).min(self.max_new - self.produced);
+                    let n = if want > 0 && !self.kv_take(want, want)? { 0 } else { want };
+                    // Feed the estimator the observed draft acceptances
+                    // (the bonus token is free) against the rows offered.
+                    self.accept_est.record_round(n.saturating_sub(1), b);
+                    let tokens: Vec<u32> =
+                        (self.produced..self.produced + n).map(|x| self.token_at(x)).collect();
+                    self.produced += n;
+                    if self.produced >= self.max_new || self.kv_headroom() == 0 {
+                        self.state = TaskState::Done;
+                    }
+                    return Ok(StepOutcome { tokens, state: self.state });
+                }
                 // Degradation (DESIGN.md §14): rung 2+ stops drafting
                 // for throughput-class sessions (one token per round);
                 // rung 1+ stops over-allocating rejected-draft slots.
@@ -1267,6 +1372,14 @@ impl DecodeTask for MockTask {
         self.state != TaskState::Done
     }
 
+    fn accept_rate(&self) -> Option<f64> {
+        self.accept_q.map(|_| self.accept_est.q())
+    }
+
+    fn allocated_budget(&self) -> Option<usize> {
+        self.round_budget
+    }
+
     fn finish(self: Box<Self>) -> Generation {
         Generation {
             tokens: (0..self.produced).map(|x| self.token_at(x)).collect(),
@@ -1344,6 +1457,12 @@ impl StepEngine for MockStepEngine {
             gauge: self.slots_in_use.clone(),
             violations: self.violations.clone(),
             kv,
+            accept_q: self
+                .alloc
+                .map(|_| ((prompt[0] % 100) as f64 / 100.0).clamp(0.01, 0.99)),
+            accept_est: crate::objective::AcceptanceEstimator::seeded(0.5),
+            frac: 0.0,
+            round_budget: None,
         }))
     }
 
@@ -1359,11 +1478,55 @@ impl StepEngine for MockStepEngine {
     ) -> Vec<crate::Result<StepOutcome>> {
         let t0 = Instant::now();
         let live = tasks.iter().filter(|t| t.state() != TaskState::Done).count();
+        // Round-budget resolution (DESIGN.md §15): one global allocation
+        // across the live iterate-stage sessions, priced per granted row.
+        let mut alloc_rows = 0usize;
+        if let Some(model) = self.alloc {
+            let mut idxs: Vec<usize> = Vec::new();
+            let mut demands: Vec<crate::scheduler::alloc::SessionDemand> = Vec::new();
+            for (i, t) in tasks.iter_mut().enumerate() {
+                let Some(m) = t.as_any_mut().downcast_mut::<MockTask>() else {
+                    continue;
+                };
+                if m.state != TaskState::Iterate || m.accept_q.is_none() {
+                    continue;
+                }
+                idxs.push(i);
+                demands.push(crate::scheduler::alloc::SessionDemand {
+                    q: m.accept_est.q(),
+                    envelope: model.base_budget * 2,
+                    headroom: m.kv_headroom().max(1),
+                    latency_class: m.latency_class,
+                });
+            }
+            if !demands.is_empty() {
+                let global = model.base_budget * demands.len();
+                let budgets = if model.adaptive {
+                    crate::scheduler::alloc::allocate_verify_budget(
+                        &demands,
+                        global,
+                        usize::MAX,
+                        None,
+                    )
+                } else {
+                    crate::scheduler::alloc::uniform_verify_budget(&demands, global)
+                };
+                alloc_rows = budgets.iter().sum();
+                for (k, &i) in idxs.iter().enumerate() {
+                    if let Some(m) = tasks[i].as_any_mut().downcast_mut::<MockTask>() {
+                        m.round_budget = Some(budgets[k]);
+                    }
+                }
+            }
+        }
         if live > 0 {
             std::thread::sleep(self.step_delay);
             if !self.draft_delay.is_zero() {
                 let rides = if self.batch_draft { 1 } else { live as u32 };
                 std::thread::sleep(self.draft_delay * rides);
+            }
+            if let Some(model) = self.alloc.filter(|_| alloc_rows > 0) {
+                std::thread::sleep(model.row_cost * alloc_rows as u32);
             }
         }
         let outs: Vec<crate::Result<StepOutcome>> = tasks
@@ -1560,6 +1723,54 @@ mod tests {
             "unexpected error: {err:#}"
         );
         server.join().unwrap();
+    }
+
+    /// Bit-exactness gate (DESIGN.md §15): with identical acceptance
+    /// profiles the adaptive allocator must early-return to the uniform
+    /// water-fill, so the per-round emission schedule — not just the
+    /// final streams — matches the uniform baseline exactly.
+    #[test]
+    fn alloc_mode_is_bit_exact_vs_uniform_for_identical_profiles() {
+        let run = |adaptive: bool| -> Vec<Vec<Vec<u32>>> {
+            let mut e = MockStepEngine::new(0, 2, 1 << 20).with_alloc_model(4, 0, adaptive);
+            let mut tasks: Vec<Box<dyn DecodeTask>> =
+                (0..3).map(|_| e.begin(&[50, 1, 2], 40).unwrap()).collect();
+            let mut streams = vec![Vec::new(); 3];
+            for _ in 0..64 {
+                let mut refs: Vec<&mut dyn DecodeTask> =
+                    tasks.iter_mut().map(|t| t.as_mut()).collect();
+                let outs = e.step_batch(&mut refs);
+                for (k, o) in outs.into_iter().enumerate() {
+                    streams[k].push(o.unwrap().tokens);
+                }
+            }
+            streams
+        };
+        assert_eq!(
+            run(true),
+            run(false),
+            "identical profiles must produce identical round schedules"
+        );
+    }
+
+    /// Adaptive skew (DESIGN.md §15): once the online estimators
+    /// diverge, the allocator gives the high-acceptance session deeper
+    /// trees and the low-acceptance one shallow probes, within the
+    /// shared global budget.
+    #[test]
+    fn alloc_mode_skews_budgets_toward_high_acceptance_sessions() {
+        let mut e = MockStepEngine::new(0, 2, 1 << 20).with_alloc_model(8, 0, true);
+        let mut easy = e.begin(&[90; 4], 400).unwrap();
+        let mut hard = e.begin(&[10; 4], 400).unwrap();
+        for _ in 0..40 {
+            let mut refs: Vec<&mut dyn DecodeTask> = vec![easy.as_mut(), hard.as_mut()];
+            let _ = e.step_batch(&mut refs);
+        }
+        let be = easy.allocated_budget().unwrap();
+        let bh = hard.allocated_budget().unwrap();
+        assert!(be > bh, "easy session got {be} rows vs hard {bh}");
+        assert!(be + bh <= 16, "global budget (2 × 8 rows) exceeded");
+        assert!(easy.accept_rate().unwrap() > hard.accept_rate().unwrap());
     }
 
     #[test]

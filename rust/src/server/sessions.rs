@@ -316,6 +316,27 @@ pub(super) fn run_worker(
             stats.prefix_evictions.store(ps.evictions, Ordering::Relaxed);
             stats.prefix_cached_blocks.store(ps.cached_blocks, Ordering::Relaxed);
         }
+        // Allocator observability (DESIGN.md §15): mirror each session's
+        // online acceptance estimate into the `accept_rate` percentile
+        // series and sum the round's granted verification rows.
+        let mut granted: u64 = 0;
+        let mut any_grant = false;
+        {
+            let mut rec = stats.recorder.lock().unwrap();
+            for s in live.iter() {
+                if let Some(r) = s.task.accept_rate() {
+                    rec.record_windowed("server.accept_rate", r, STATS_WINDOW);
+                }
+                if let Some(b) = s.task.allocated_budget() {
+                    granted += b as u64;
+                    any_grant = true;
+                }
+            }
+        }
+        if any_grant {
+            stats.alloc_budget_total.store(granted, Ordering::Relaxed);
+            stats.alloc_rounds.fetch_add(1, Ordering::Relaxed);
+        }
     }
     // Dropping `live` drops every task → all session KV caches freed.
     // Parked resume jobs drop with their reply senders (connections see

@@ -216,6 +216,89 @@ fn prop_plan_search_is_argmin() {
     );
 }
 
+/// Round-level allocator invariants (DESIGN.md §15): over random
+/// session mixes and budgets, the global allocation never exceeds the
+/// round budget, the pool-headroom snapshot, or any session's static
+/// envelope ∧ headroom; adaptive budgets land on the compiled-width
+/// grid; and indistinguishable sessions (equal acceptance estimates and
+/// SLO classes) degenerate bit-exactly to the uniform water-fill
+/// fallback.
+#[test]
+fn prop_round_allocator_respects_budget_envelope_and_uniform_degeneracy() {
+    use yggdrasil::config::GRAPH_WIDTHS;
+    use yggdrasil::scheduler::alloc::{
+        allocate_verify_budget, uniform_verify_budget, SessionDemand,
+    };
+    run_prop(
+        "round-allocator",
+        PropConfig { cases: 256, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+            let n = 1 + rng.next_range(8);
+            let demands: Vec<SessionDemand> = (0..n)
+                .map(|_| SessionDemand {
+                    q: rng.next_f64().clamp(0.01, 0.99),
+                    envelope: rng.next_range(65),
+                    headroom: rng.next_range(81),
+                    latency_class: rng.next_f32() < 0.5,
+                })
+                .collect();
+            let global = rng.next_range(257);
+            let pool = rng.next_range(257);
+            let got = allocate_verify_budget(&demands, global, pool, None);
+            if got.len() != n {
+                return Err(format!("{} budgets for {n} sessions", got.len()));
+            }
+            let total: usize = got.iter().sum();
+            if total > global || total > pool {
+                return Err(format!(
+                    "granted {total} rows > budget {global} / pool {pool}: {got:?}"
+                ));
+            }
+            for (b, d) in got.iter().zip(&demands) {
+                if *b > d.envelope.min(d.headroom) {
+                    return Err(format!(
+                        "budget {b} exceeds envelope {} / headroom {}",
+                        d.envelope, d.headroom
+                    ));
+                }
+            }
+            let distinguishable = demands.windows(2).any(|w| {
+                (w[0].q - w[1].q).abs() >= 1e-9 || w[0].latency_class != w[1].latency_class
+            });
+            if distinguishable {
+                for &b in &got {
+                    if b != 0 && !GRAPH_WIDTHS.contains(&b) {
+                        return Err(format!(
+                            "budget {b} off the compiled-width grid: {got:?}"
+                        ));
+                    }
+                }
+            }
+            // Flatten the mix to one acceptance estimate + one class: the
+            // adaptive path must reproduce the uniform water-fill exactly.
+            let flat: Vec<SessionDemand> = demands
+                .iter()
+                .map(|d| SessionDemand {
+                    q: demands[0].q,
+                    latency_class: demands[0].latency_class,
+                    ..*d
+                })
+                .collect();
+            let adaptive = allocate_verify_budget(&flat, global, pool, None);
+            let uniform = uniform_verify_budget(&flat, global.min(pool));
+            if adaptive != uniform {
+                return Err(format!(
+                    "equal profiles diverged: adaptive {adaptive:?} != uniform {uniform:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_json_roundtrip() {
     fn random_json(rng: &mut XorShiftRng, depth: usize) -> Json {
