@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol smoke-alloc bench-maskpath
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol smoke-alloc smoke-shard bench-maskpath
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -63,6 +63,12 @@ smoke-hol:
 # identical acceptance profiles must stay bit-exact with uniform).
 smoke-alloc:
 	cd rust && cargo run --release -- figures --exp serving_alloc_mock
+
+# Headless multi-worker sharding smoke (DESIGN.md §16; CI runs this
+# too — 4 mock workers must reach ≥3.5× one worker's tok/s, and
+# affinity routing ≥1.5× round-robin's prefix hit rate).
+smoke-shard:
+	cd rust && cargo run --release -- figures --exp serving_shard_mock
 
 # Boolean-vs-bit-packed mask/walk microbench sweep (DESIGN.md §13):
 # asserts bit-exact parity, then writes results/BENCH_maskpath.json.

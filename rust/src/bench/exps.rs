@@ -1210,3 +1210,224 @@ fn serving_paged_sweep(lab: &mut Lab) -> crate::Result<()> {
     }
     lab.emit("serving_paged", &t)
 }
+
+/// Multi-worker sharded serving smoke (DESIGN.md §16), fully headless.
+///
+/// Phase A (scaling): a uniform 16-client wave against 1 vs 4 mock
+/// workers under serial per-session stepping (`batched: false`) and
+/// round-robin placement — N workers divide the serial step budget N
+/// ways, so the 4-worker fleet must reach ≥ 3.5× one worker's aggregate
+/// throughput, with every client's stream bit-exact against the mock's
+/// closed form on both fleet sizes (the single-worker parity gate).
+///
+/// Phase B (affinity): a clustered-prefix wave — 4 groups sharing a
+/// 32-token system prompt — against 4 prefix-cached workers. After a
+/// seed pass donates each group's prefix somewhere, cache-aware affinity
+/// routing must land followers on their group's worker while round-robin
+/// scatters them, showing up as a ≥ 1.5× fleet prefix-hit-rate gap.
+pub fn serving_shard_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::engine::StepEngine;
+    use crate::server::{Client, MockStepEngine, RoutingPolicy, ServeOpts, Server};
+    use std::time::{Duration, Instant};
+
+    // --- Phase A: uniform wave, 1 worker vs 4 ---------------------------
+    let clients = 16usize;
+    let max_new = if opts.quick { 40 } else { 64 };
+    let prompts: Vec<Vec<u32>> = (0..clients).map(|i| vec![10 + i as u32, 3, 7]).collect();
+    let expected = |p: &[u32], n: usize| -> Vec<u32> {
+        (0..n).map(|k| p[0].wrapping_add((p.len() - 1 + k) as u32)).collect()
+    };
+    let mut scale: Vec<(usize, f64)> = Vec::new(); // (workers, tok_per_s)
+    for workers in [1usize, 4] {
+        let engines: Vec<Box<dyn StepEngine + Send>> = (0..workers)
+            .map(|_| Box::new(MockStepEngine::new(3, 1, 1 << 20)) as Box<dyn StepEngine + Send>)
+            .collect();
+        let srv = Server::spawn_fleet(
+            "127.0.0.1:0",
+            engines,
+            ServeOpts {
+                max_queue: 64,
+                max_sessions: clients,
+                batched: false,
+                routing: RoutingPolicy::RoundRobin,
+                ..ServeOpts::default()
+            },
+        )?;
+        let addr = srv.addr;
+        let t0 = Instant::now();
+        let handles: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let p = p.clone();
+                std::thread::spawn(move || -> crate::Result<Vec<u32>> {
+                    let mut c = Client::connect(&addr)?;
+                    Ok(c.generate(i as u64, &p, max_new)?.tokens)
+                })
+            })
+            .collect();
+        let mut tokens = 0usize;
+        for (i, h) in handles.into_iter().enumerate() {
+            let stream = h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+            anyhow::ensure!(
+                stream == expected(&prompts[i], max_new),
+                "client {i} stream diverged on the {workers}-worker fleet"
+            );
+            tokens += stream.len();
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        scale.push((workers, tokens as f64 / wall));
+    }
+
+    // --- Phase B: clustered-prefix wave, affinity vs round-robin --------
+    let groups = 4usize;
+    let per_group = 4usize;
+    let prefix_len = 32usize;
+    let wave_new = 6usize;
+    // Group g's prompt: a 32-token shared prefix (two 16-token blocks)
+    // plus a unique 1-token tail per request.
+    let clustered = |g: usize, tail: u32| -> Vec<u32> {
+        let mut p: Vec<u32> = (0..prefix_len).map(|i| 1000 * (g as u32 + 1) + i as u32).collect();
+        p.push(tail);
+        p
+    };
+    let total_requests = groups + groups * per_group;
+    let mut hit_rates: Vec<(&str, f64, u64, u64, u64)> = Vec::new();
+    for (mode, policy) in
+        [("round_robin", RoutingPolicy::RoundRobin), ("affinity", RoutingPolicy::Affinity)]
+    {
+        let engines: Vec<Box<dyn StepEngine + Send>> = (0..4)
+            .map(|_| {
+                Ok(Box::new(
+                    MockStepEngine::with_paged_pool(1, 2, 4096, 16)?.with_prefix_cache(),
+                ) as Box<dyn StepEngine + Send>)
+            })
+            .collect::<crate::Result<_>>()?;
+        let srv = Server::spawn_fleet(
+            "127.0.0.1:0",
+            engines,
+            ServeOpts {
+                max_queue: 64,
+                max_sessions: 8,
+                routing: policy,
+                affinity_chunk: 16,
+                ..ServeOpts::default()
+            },
+        )?;
+        let mut c = Client::connect(&srv.addr)?;
+        // Seed pass: one completed request per group donates its prefix
+        // blocks to whichever worker served it. Sequential, so placement
+        // and donation order are deterministic under both policies.
+        for g in 0..groups {
+            let p = clustered(g, 9_000 + g as u32);
+            let r = c.generate(g as u64, &p, wave_new)?;
+            anyhow::ensure!(r.tokens == expected(&p, wave_new), "seed {g} stream diverged");
+        }
+        // Clustered wave, group-major order: under round-robin, client i
+        // (group i/4) lands on worker i%4, matching its group's seeded
+        // worker only on the diagonal; affinity follows the prefix.
+        for i in 0..groups * per_group {
+            let p = clustered(i / per_group, 7_000 + i as u32);
+            let r = c.generate(100 + i as u64, &p, wave_new)?;
+            anyhow::ensure!(
+                r.tokens == expected(&p, wave_new),
+                "wave client {i} stream diverged under {mode} routing"
+            );
+        }
+        // The per-worker prefix gauges flush after the round that finishes
+        // a session; wait for every admission's lookup to land.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let snap = loop {
+            let s = srv.router.fleet_snapshot();
+            if s.merged.prefix_lookups >= total_requests as u64 || Instant::now() > deadline {
+                break s;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        anyhow::ensure!(
+            snap.merged.prefix_lookups == total_requests as u64,
+            "{mode}: expected {total_requests} prefix lookups, saw {}",
+            snap.merged.prefix_lookups
+        );
+        let rate = snap.merged.prefix_hits as f64 / snap.merged.prefix_lookups.max(1) as f64;
+        hit_rates.push((
+            mode,
+            rate,
+            snap.affinity_hits,
+            snap.fallback_placements,
+            snap.steals,
+        ));
+    }
+
+    let mut t = Table::new(&[
+        "phase",
+        "mode",
+        "workers",
+        "requests",
+        "tok_per_s",
+        "prefix_hit_rate",
+        "affinity_hits",
+        "fallback",
+        "steals",
+    ])
+    .with_title(
+        "Serving smoke (shard) — multi-worker scaling and prefix-affinity \
+         routing (headless)",
+    );
+    for (workers, tps) in &scale {
+        t.row(&[
+            "scaling".into(),
+            "round_robin".into(),
+            workers.to_string(),
+            clients.to_string(),
+            format!("{tps:.1}"),
+            "-".into(),
+            "0".into(),
+            "0".into(),
+            "0".into(),
+        ]);
+    }
+    for (mode, rate, aff, fb, steals) in &hit_rates {
+        t.row(&[
+            "clustered".into(),
+            mode.to_string(),
+            "4".into(),
+            total_requests.to_string(),
+            "-".into(),
+            format!("{rate:.3}"),
+            aff.to_string(),
+            fb.to_string(),
+            steals.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_shard_mock.csv"))?;
+
+    // The acceptance bars (ROADMAP): near-linear scaling on the uniform
+    // wave, and cache-aware routing must beat round-robin's fleet prefix
+    // hit rate by the paper-motivated margin.
+    let (one, four) = (&scale[0], &scale[1]);
+    anyhow::ensure!(
+        four.1 >= 3.5 * one.1,
+        "4-worker fleet {:.1} tok/s < 3.5x one worker's {:.1} tok/s on the uniform wave",
+        four.1,
+        one.1
+    );
+    let (rr, aff) = (&hit_rates[0], &hit_rates[1]);
+    anyhow::ensure!(
+        rr.2 == 0,
+        "round-robin placement must never count affinity hits, saw {}",
+        rr.2
+    );
+    anyhow::ensure!(
+        aff.1 >= 1.5 * rr.1.max(1e-9),
+        "affinity hit rate {:.3} < 1.5x round-robin {:.3} on the clustered wave",
+        aff.1,
+        rr.1
+    );
+    anyhow::ensure!(
+        aff.2 > 0,
+        "affinity routing never matched a prefix summary on the clustered wave"
+    );
+    Ok(())
+}

@@ -298,6 +298,11 @@ pub struct ServerConfig {
     /// Drive live sessions through the engine's batched round
     /// (`StepEngine::step_batch`) instead of serial round-robin stepping.
     pub batched: bool,
+    /// Data-parallel engine workers (`--workers`, DESIGN.md §16): each
+    /// owns its own cache pool, prefix trie, and scheduler thread.
+    pub workers: usize,
+    /// Request-placement policy across the worker fleet (`--routing`).
+    pub routing: crate::server::RoutingPolicy,
 }
 
 impl Default for ServerConfig {
@@ -308,6 +313,8 @@ impl Default for ServerConfig {
             max_sessions: 4,
             stream: true,
             batched: true,
+            workers: 1,
+            routing: crate::server::RoutingPolicy::Affinity,
         }
     }
 }
@@ -507,6 +514,8 @@ impl AppConfig {
                     ("max_sessions", Json::Num(self.server.max_sessions as f64)),
                     ("stream", Json::Bool(self.server.stream)),
                     ("batched", Json::Bool(self.server.batched)),
+                    ("workers", Json::Num(self.server.workers as f64)),
+                    ("routing", Json::Str(self.server.routing.as_str().into())),
                 ]),
             ),
         ])
@@ -544,6 +553,12 @@ impl AppConfig {
             }
             if let Some(b) = s.get("batched").and_then(|v| v.as_bool()) {
                 cfg.server.batched = b;
+            }
+            if let Some(w) = s.get("workers").and_then(|v| v.as_usize()) {
+                cfg.server.workers = w.max(1);
+            }
+            if let Some(r) = s.get("routing").and_then(|v| v.as_str()) {
+                cfg.server.routing = crate::server::RoutingPolicy::from_str(r)?;
             }
         }
         Ok(cfg)
@@ -583,6 +598,8 @@ mod tests {
         cfg.server.stream = false;
         cfg.server.max_sessions = 9;
         cfg.server.batched = false;
+        cfg.server.workers = 3;
+        cfg.server.routing = crate::server::RoutingPolicy::LeastLoaded;
         cfg.engine.batch = BatchConfig {
             enabled: true,
             max_sessions: 6,
@@ -603,6 +620,8 @@ mod tests {
         assert!(!back.server.stream);
         assert_eq!(back.server.max_sessions, 9);
         assert!(!back.server.batched);
+        assert_eq!(back.server.workers, 3);
+        assert_eq!(back.server.routing, crate::server::RoutingPolicy::LeastLoaded);
         assert_eq!(back.engine.batch, cfg.engine.batch);
     }
 

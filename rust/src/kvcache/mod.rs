@@ -57,7 +57,7 @@ use crate::tree::MaskBuilder;
 
 pub mod prefix;
 
-pub use prefix::{PrefixCache, PrefixCacheStats, PrefixHit};
+pub use prefix::{chunk_hashes, token_hash, PrefixCache, PrefixCacheStats, PrefixHit};
 
 /// A contiguous run of slots inside a shared cache array — one session's
 /// lease from a [`SlotPartition`], or one block of a [`BlockPool`].

@@ -372,6 +372,46 @@ impl PrefixCache {
     }
 }
 
+/// FNV-1a offset basis (64-bit).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// One FNV-1a step over a token id's four little-endian bytes.
+fn fnv_step(mut h: u64, tok: u32) -> u64 {
+    for b in tok.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Order-sensitive FNV-1a hash of a whole token sequence — the router's
+/// deterministic fallback spreader (DESIGN.md §16).
+pub fn token_hash(tokens: &[u32]) -> u64 {
+    tokens.iter().fold(FNV_OFFSET, |h, &t| fnv_step(h, t))
+}
+
+/// Cumulative prefix fingerprints at `chunk`-token boundaries: element
+/// `k` hashes `tokens[..(k + 1) * chunk]`, so two prompts agree on the
+/// first `k + 1` fingerprints iff they share that many whole chunks of
+/// prefix. These are the radix-trie path summaries prefix-affinity
+/// routing matches against per worker — a bounded stand-in for shipping
+/// each worker's whole trie to the router, sound because the trie itself
+/// caches at block (chunk) granularity. Empty when `tokens` is shorter
+/// than one chunk.
+pub fn chunk_hashes(tokens: &[u32], chunk: usize) -> Vec<u64> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::with_capacity(tokens.len() / chunk);
+    let mut h = FNV_OFFSET;
+    for (i, &t) in tokens.iter().enumerate() {
+        h = fnv_step(h, t);
+        if (i + 1) % chunk == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,5 +591,28 @@ mod tests {
         assert_eq!(donor.owned_blocks(), 1, "impure chunk's block stays with the donor");
         drop(donor);
         assert_eq!(pc.cached_blocks(), 1);
+    }
+
+    #[test]
+    fn chunk_hashes_are_prefix_closed_and_order_sensitive() {
+        let long: Vec<u32> = (0..40).collect();
+        let h = chunk_hashes(&long, 16);
+        assert_eq!(h.len(), 2, "two whole 16-token chunks in 40 tokens");
+        // Prefix closure: a shared prefix shares the leading fingerprints…
+        let mut fork = long.clone();
+        fork[35] ^= 1; // diverges inside the partial third chunk only
+        assert_eq!(chunk_hashes(&fork, 16), h);
+        let mut early = long.clone();
+        early[20] ^= 1; // diverges inside chunk 1
+        let he = chunk_hashes(&early, 16);
+        assert_eq!(he[0], h[0], "chunk 0 untouched");
+        assert_ne!(he[1], h[1], "chunk 1 fingerprint must diverge");
+        // …and order matters (a radix path, not a bag of tokens).
+        let mut swapped = long.clone();
+        swapped.swap(0, 1);
+        assert_ne!(chunk_hashes(&swapped, 16)[0], h[0]);
+        // Short prompts fingerprint nothing; the fallback hash still works.
+        assert!(chunk_hashes(&long[..7], 16).is_empty());
+        assert_ne!(token_hash(&long[..7]), token_hash(&long[..6]));
     }
 }

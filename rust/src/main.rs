@@ -18,14 +18,14 @@ use yggdrasil::corpus::PromptSet;
 use yggdrasil::engine::{profiling, Engine, SpecDecoder, StepEngine};
 use yggdrasil::predictor::{DepthPredictor, DepthSample};
 use yggdrasil::runtime::Runtime;
-use yggdrasil::server::{ServeOpts, Server, SloClass};
+use yggdrasil::server::{RoutingPolicy, ServeOpts, Server, SloClass};
 use yggdrasil::util::cli::Args;
 
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
     "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks", "cpu-threads",
-    "prefill-chunk", "slo-class",
+    "prefill-chunk", "slo-class", "workers", "routing",
 ];
 const FLAGS: &[&str] = &[
     "quick",
@@ -161,6 +161,22 @@ fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Resu
 /// Loads the runtime + latency model + optional trained predictor and
 /// builds the configured engine (step-driven, so it can serve).
 fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn StepEngine + Send>)> {
+    let (rt, mut engines) = build_fleet(app, args, 1)?;
+    Ok((rt, engines.pop().expect("build_fleet(1) returns one engine")))
+}
+
+/// Like [`build`], but constructs `workers` independent engines from one
+/// loaded runtime (DESIGN.md §16): the heavy pieces — weights, compiled
+/// executables, latency profile, trained predictor — load once and are
+/// shared/cloned, while each engine gets its own cache pool and prefix
+/// trie (that isolation is what the router's affinity placement routes
+/// around).
+fn build_fleet(
+    app: &AppConfig,
+    args: &Args,
+    workers: usize,
+) -> yggdrasil::Result<(Runtime, Vec<Box<dyn StepEngine + Send>>)> {
+    anyhow::ensure!(workers >= 1, "--workers must be at least 1");
     let dir = &app.runtime.artifacts_dir;
     let mut cfg = app.engine.clone();
     let rt = Runtime::load(dir, &[cfg.drafter.as_str(), cfg.target.as_str()])?;
@@ -173,41 +189,59 @@ fn build(app: &AppConfig, args: &Args) -> yggdrasil::Result<(Runtime, Box<dyn St
         app.runtime.profile_file.as_deref(),
         5,
     )?;
-    let boxed: Box<dyn StepEngine + Send> = if engine_name == "yggdrasil" {
-        let predictor = app
+    // Per-fleet one-time loads/validation, outside the per-worker loop.
+    let predictor = if engine_name == "yggdrasil" {
+        let p = app
             .runtime
             .predictor_file
             .as_ref()
             .map(|p| profiling::keyed_path(p, &cfg.drafter, &cfg.target))
             .filter(|p| p.exists())
             .and_then(|p| DepthPredictor::load(&p).ok());
-        if predictor.is_some() {
+        if p.is_some() {
             eprintln!("loaded trained depth predictor");
         }
-        Box::new(SpecDecoder::new(&rt, cfg.clone(), lat, predictor))
-    } else if engine_name == "vanilla" {
-        Box::new(yggdrasil::baselines::VanillaEngine::new(&rt, &cfg.target, true))
+        p
     } else {
-        // Validate via the factory, then rebuild the Send version with the
-        // session-level overrides applied.
-        let e = build_engine(&rt, &engine_name, (&cfg.drafter, &cfg.target), &lat)?;
-        drop(e);
-        let mut p = match engine_name.as_str() {
-            "seqspec" => EngineConfig::preset_seqspec(5),
-            "specinfer" => EngineConfig::preset_specinfer(4, 4, 64),
-            "sequoia" => EngineConfig::preset_sequoia(32),
-            "vllmspec" => EngineConfig::preset_vllmspec(5),
-            other => anyhow::bail!("unknown engine '{other}'"),
-        };
-        p.drafter = cfg.drafter.clone();
-        p.target = cfg.target.clone();
-        p.sampling = cfg.sampling.clone();
-        // Baseline presets keep owned caches (their envelopes outsize the
-        // shared-cache per-session quota); the server's batched rounds
-        // then fall back to serial stepping gracefully.
-        Box::new(SpecDecoder::new(&rt, p, lat, None))
+        None
     };
-    Ok((rt, boxed))
+    let preset = match engine_name.as_str() {
+        "yggdrasil" | "vanilla" => None,
+        name => {
+            // Validate via the factory, then rebuild the Send version
+            // with the session-level overrides applied.
+            let e = build_engine(&rt, name, (&cfg.drafter, &cfg.target), &lat)?;
+            drop(e);
+            let mut p = match name {
+                "seqspec" => EngineConfig::preset_seqspec(5),
+                "specinfer" => EngineConfig::preset_specinfer(4, 4, 64),
+                "sequoia" => EngineConfig::preset_sequoia(32),
+                "vllmspec" => EngineConfig::preset_vllmspec(5),
+                other => anyhow::bail!("unknown engine '{other}'"),
+            };
+            p.drafter = cfg.drafter.clone();
+            p.target = cfg.target.clone();
+            p.sampling = cfg.sampling.clone();
+            Some(p)
+        }
+    };
+    let engines = (0..workers)
+        .map(|_| -> Box<dyn StepEngine + Send> {
+            if engine_name == "yggdrasil" {
+                Box::new(SpecDecoder::new(&rt, cfg.clone(), lat.clone(), predictor.clone()))
+            } else if engine_name == "vanilla" {
+                Box::new(yggdrasil::baselines::VanillaEngine::new(&rt, &cfg.target, true))
+            } else {
+                // Baseline presets keep owned caches (their envelopes
+                // outsize the shared-cache per-session quota); the
+                // server's batched rounds then fall back to serial
+                // stepping gracefully.
+                let p = preset.clone().expect("preset resolved above");
+                Box::new(SpecDecoder::new(&rt, p, lat.clone(), None))
+            }
+        })
+        .collect();
+    Ok((rt, engines))
 }
 
 fn cmd_generate(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
@@ -296,7 +330,14 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         }
     }
     let app = &app;
-    let (_rt, engine) = build(app, args)?;
+    // Data-parallel sharding (DESIGN.md §16): N engine workers behind one
+    // listener, each with its own cache pool and prefix trie.
+    let workers = args.usize_or("workers", app.server.workers)?.max(1);
+    let routing = match args.get("routing") {
+        Some(r) => RoutingPolicy::from_str(r)?,
+        None => app.server.routing,
+    };
+    let (_rt, engines) = build_fleet(app, args, workers)?;
     let addr = args.str_or("addr", &app.server.addr);
     let stream = app.server.stream && !args.flag("no-stream");
     let opts = ServeOpts {
@@ -304,6 +345,7 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         max_sessions,
         stream,
         batched,
+        routing,
         default_class: match args.get("slo-class") {
             Some(s) => SloClass::from_str(s)?,
             None => ServeOpts::default().default_class,
@@ -326,11 +368,12 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
             " (prefix cache off)"
         });
     }
-    let srv = Server::spawn(&addr, engine, opts)?;
+    let srv = Server::spawn_fleet(&addr, engines, opts)?;
     eprintln!(
         "serving on {} (stream={stream}, max_sessions={max_sessions}, \
-         mode={layout}) — Ctrl-C to stop",
-        srv.addr
+         workers={workers}, routing={}, mode={layout}) — Ctrl-C to stop",
+        srv.addr,
+        routing.as_str(),
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -460,6 +503,12 @@ COMMON OPTIONS
                       (serve; 0 = whole prompt in one round)
   --slo-class CLASS   default SLO class for untagged requests:
                       latency (default) or throughput (serve)
+  --workers N         data-parallel engine workers behind one listener,
+                      each with its own cache pool and prefix trie
+                      (serve; default 1)
+  --routing POLICY    request placement across workers: affinity
+                      (default; prefix-cache-aware), round-robin, or
+                      least-loaded (serve)
   --no-global-alloc   give every packed session its own static verify
                       budget instead of redistributing a round-wide
                       budget by online acceptance rate (serve)

@@ -302,6 +302,28 @@ mod tests {
     }
 
     #[test]
+    fn merge_concatenates_series_for_fleet_percentiles() {
+        // Fleet stats merge per-worker recorders by concatenating samples,
+        // so a merged percentile ranks over *all* observations — not an
+        // average of per-worker percentiles (which would hide a slow
+        // worker's tail behind fast workers' medians).
+        let mut fast = Recorder::new();
+        for _ in 0..9 {
+            fast.record("itl", 1.0);
+        }
+        let mut slow = Recorder::new();
+        slow.record("itl", 100.0);
+        let mut merged = Recorder::new();
+        merged.merge(&fast);
+        merged.merge(&slow);
+        assert_eq!(merged.get("itl").unwrap().len(), 10);
+        // p95 over the pooled samples lands on the slow worker's outlier;
+        // averaging per-recorder p95s (≈ 50.5) would not.
+        assert_eq!(merged.percentile("itl", 95.0), 100.0);
+        assert_eq!(merged.percentile("itl", 50.0), 1.0);
+    }
+
+    #[test]
     fn table_renders_markdown_and_csv() {
         let mut t = Table::new(&["a", "b"]).with_title("T");
         t.row(&["1", "2"]);

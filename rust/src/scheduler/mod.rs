@@ -407,6 +407,42 @@ impl DegradationLadder {
     }
 }
 
+/// Work-stealing rebalance policy (DESIGN.md §16): given each worker's
+/// pending backlog and total routing load (backlog + live sessions),
+/// picks one job migration `(src, dst)` — from the back of the deepest
+/// backlog to the least-loaded other worker — or `None` when the fleet
+/// is balanced. A move requires the source backlog to exceed
+/// `threshold` *and* the destination to stay strictly lighter than the
+/// source even after the move (`loads[dst] + 1 < loads[src]`), so
+/// repeated application terminates instead of ping-ponging one job
+/// between two equally-loaded workers. Pure — the router applies the
+/// decision; determinism (ties break toward the lowest index) keeps
+/// seeded routing sweeps reproducible.
+pub fn steal_move(backlogs: &[usize], loads: &[usize], threshold: usize) -> Option<(usize, usize)> {
+    debug_assert_eq!(backlogs.len(), loads.len());
+    if backlogs.len() < 2 {
+        return None;
+    }
+    // Deepest backlog, lowest index on ties (max_by_key prefers later
+    // elements on ties, so scan explicitly).
+    let mut src = 0;
+    for (i, &b) in backlogs.iter().enumerate() {
+        if b > backlogs[src] {
+            src = i;
+        }
+    }
+    if backlogs[src] <= threshold {
+        return None;
+    }
+    let mut dst = src;
+    for (i, &l) in loads.iter().enumerate() {
+        if i != src && (dst == src || l < loads[dst]) {
+            dst = i;
+        }
+    }
+    (dst != src && loads[dst] + 1 < loads[src]).then_some((src, dst))
+}
+
 /// Exhaustive profile-guided plan search (§5.2).
 pub fn search_best_plan(d: &StageDurations) -> (Plan, f64) {
     // Most-overlapping plans first so exact ties resolve toward overlap
@@ -783,5 +819,22 @@ mod tests {
             let b = plan_latency(&moved, p);
             assert!((a - b).abs() < 1e-15, "{} distinguishes the split", p.name());
         }
+    }
+
+    #[test]
+    fn steal_move_targets_deep_backlogs_and_light_destinations() {
+        // Worker 1's backlog (6) exceeds the threshold (2); worker 2 is
+        // the lightest destination.
+        assert_eq!(steal_move(&[1, 6, 0], &[3, 6, 1], 2), Some((1, 2)));
+        // Under the threshold: balanced, no move.
+        assert_eq!(steal_move(&[1, 2, 0], &[3, 6, 1], 2), None);
+        // A move that would not leave the destination strictly lighter
+        // is refused (no ping-pong between near-equal workers).
+        assert_eq!(steal_move(&[0, 5], &[4, 5], 2), None);
+        // Ties break toward the lowest index on both sides.
+        assert_eq!(steal_move(&[5, 5, 0], &[9, 9, 0], 2), Some((0, 2)));
+        // Degenerate fleets never move anything.
+        assert_eq!(steal_move(&[9], &[9], 2), None);
+        assert_eq!(steal_move(&[], &[], 0), None);
     }
 }

@@ -2,13 +2,16 @@
 //!
 //! The paper's core results target the latency-optimal single-request
 //! regime (§9); the server generalizes that to **continuous multi-session
-//! serving** without giving up the single-tenant device: one worker thread
-//! owns the engine and round-robins one [`crate::engine::DecodeTask::step`]
-//! across up to `max_sessions` live sessions per scheduling round (see
-//! [`sessions`]). Requests beyond the live set queue; admission is gated
-//! on KV-cache headroom; a client disconnect cancels its session and frees
-//! its caches mid-generation. Concurrency still lives at the edges — one
-//! reader thread plus one writer-pump thread per connection — and a single
+//! serving** without giving up the single-tenant device: each
+//! [`EngineWorker`] owns one engine and round-robins one
+//! [`crate::engine::DecodeTask::step`] across up to `max_sessions` live
+//! sessions per scheduling round (see [`sessions`]), and a fleet of such
+//! workers (`--workers N`, DESIGN.md §16) sits behind one listener with
+//! the [`Router`] placing requests by prefix-cache affinity. Requests
+//! beyond the live set queue; admission is gated on KV-cache headroom; a
+//! client disconnect cancels its session and frees its caches
+//! mid-generation. Concurrency still lives at the edges — one reader
+//! thread plus one writer-pump thread per connection — and a single
 //! connection may multiplex many concurrent requests, demuxed by `id`.
 //!
 //! ## Protocol (one JSON object per line)
@@ -27,7 +30,9 @@
 //! Internally every event is a typed [`sessions::ServerEvent`]; JSON only
 //! materializes at the connection writer.
 
+pub mod router;
 pub mod sessions;
+pub mod worker;
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -43,7 +48,9 @@ use crate::engine::{
 use crate::metrics::Recorder;
 use crate::util::json::Json;
 
+pub use router::{FleetSnapshot, Placer, Router, RoutingPolicy, Ticket};
 pub use sessions::{DoneSummary, Job, ServerEvent};
+pub use worker::{EngineWorker, JobQueue};
 
 /// Connection-level cancellation flag, shared with the worker.
 pub type CancelFlag = Arc<AtomicBool>;
@@ -109,6 +116,15 @@ pub struct ServeOpts {
     /// Latency-class inter-token gap (ms) beyond which the scheduler
     /// counts an SLO violation (DESIGN.md §14).
     pub slo_target_ms: f64,
+    /// Request-placement policy across the worker fleet (`--routing`,
+    /// DESIGN.md §16). Irrelevant with one worker.
+    pub routing: RoutingPolicy,
+    /// Backlog depth beyond which the router's work-stealing rebalance
+    /// migrates queued jobs to lighter workers (DESIGN.md §16).
+    pub steal_threshold: usize,
+    /// Prompt-chunk size (tokens) for the affinity router's prefix
+    /// fingerprints; normally the prefix cache's block size.
+    pub affinity_chunk: usize,
 }
 
 impl Default for ServeOpts {
@@ -121,6 +137,9 @@ impl Default for ServeOpts {
             max_resumes: 8,
             default_class: SloClass::Latency,
             slo_target_ms: 250.0,
+            routing: RoutingPolicy::Affinity,
+            steal_threshold: 4,
+            affinity_chunk: 16,
         }
     }
 }
@@ -305,13 +324,54 @@ impl ServerStats {
             resume_delay_ms_mean: rec.mean("server.resume_delay_s") * 1e3,
         }
     }
+
+    /// Folds another worker's stats into this one (fleet aggregation,
+    /// DESIGN.md §16): counters and gauges sum, the degradation rung
+    /// takes the fleet max, and the serving series concatenate so merged
+    /// percentiles are computed over every worker's samples — not
+    /// averaged per-worker percentiles, which would be wrong for tails.
+    pub fn merge_from(&self, other: &ServerStats) {
+        let add = |dst: &AtomicU64, src: &AtomicU64| {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        };
+        add(&self.requests, &other.requests);
+        add(&self.tokens, &other.tokens);
+        add(&self.errors, &other.errors);
+        add(&self.cancelled, &other.cancelled);
+        add(&self.rejected, &other.rejected);
+        add(&self.preemptions, &other.preemptions);
+        add(&self.resumes, &other.resumes);
+        add(&self.active_sessions, &other.active_sessions);
+        add(&self.peak_sessions, &other.peak_sessions);
+        add(&self.kv_slots_in_use, &other.kv_slots_in_use);
+        add(&self.blocks_in_use, &other.blocks_in_use);
+        add(&self.blocks_total, &other.blocks_total);
+        add(&self.prefix_lookups, &other.prefix_lookups);
+        add(&self.prefix_hits, &other.prefix_hits);
+        add(&self.prefix_tokens_reused, &other.prefix_tokens_reused);
+        add(&self.prefix_evictions, &other.prefix_evictions);
+        add(&self.prefix_cached_blocks, &other.prefix_cached_blocks);
+        add(&self.prefill_chunks, &other.prefill_chunks);
+        add(&self.degraded_rounds, &other.degraded_rounds);
+        add(&self.slo_violations, &other.slo_violations);
+        add(&self.alloc_budget_total, &other.alloc_budget_total);
+        add(&self.alloc_rounds, &other.alloc_rounds);
+        self.degrade_rung
+            .fetch_max(other.degrade_rung.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.recorder.lock().unwrap().merge(&other.recorder.lock().unwrap());
+    }
 }
 
 impl StatsSnapshot {
     /// Wire form of the `stats` event.
+    ///
+    /// Per-class ITL keys appear only for classes that recorded at least
+    /// one sample: a class with zero samples has a NaN percentile, and
+    /// the old unconditional emission turned that into a misleading
+    /// `"itl_ms_p50_throughput": null` row on every latency-only server.
     pub fn to_json(&self) -> Json {
         let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
-        Json::obj(vec![
+        let mut fields = vec![
             ("event", Json::Str("stats".into())),
             ("requests", Json::Num(self.requests as f64)),
             ("tokens", Json::Num(self.tokens as f64)),
@@ -338,56 +398,81 @@ impl StatsSnapshot {
             ("alloc_rounds", Json::Num(self.alloc_rounds as f64)),
             ("accept_rate_p50", num(self.accept_rate_p50)),
             ("accept_rate_p95", num(self.accept_rate_p95)),
-            ("itl_ms_p50_latency", num(self.itl_ms_p50_latency)),
-            ("itl_ms_p95_latency", num(self.itl_ms_p95_latency)),
-            ("itl_ms_p50_throughput", num(self.itl_ms_p50_throughput)),
-            ("itl_ms_p95_throughput", num(self.itl_ms_p95_throughput)),
             ("queue_delay_ms_mean", num(self.queue_delay_ms_mean)),
             ("ttft_ms_p50", num(self.ttft_ms_p50)),
             ("tok_per_s_mean", num(self.tok_per_s_mean)),
             ("resume_delay_ms_mean", num(self.resume_delay_ms_mean)),
-        ])
+        ];
+        if !self.itl_ms_p50_latency.is_nan() {
+            fields.push(("itl_ms_p50_latency", num(self.itl_ms_p50_latency)));
+            fields.push(("itl_ms_p95_latency", num(self.itl_ms_p95_latency)));
+        }
+        if !self.itl_ms_p50_throughput.is_nan() {
+            fields.push(("itl_ms_p50_throughput", num(self.itl_ms_p50_throughput)));
+            fields.push(("itl_ms_p95_throughput", num(self.itl_ms_p95_throughput)));
+        }
+        Json::obj(fields)
     }
 }
 
-/// A running server; dropping it stops the accept loop and the scheduler
+/// A running server; dropping it stops the accept loop and every worker
 /// (live sessions are aborted and their caches freed).
+///
+/// The server is a pure frontend (DESIGN.md §16): it owns no engine
+/// state — only the TCP accept loop and the [`Router`], which owns the
+/// [`EngineWorker`] fleet. Each worker holds its own engine, cache pool,
+/// prefix trie, stats, and scheduler thread.
 pub struct Server {
     /// Bound socket address.
     pub addr: std::net::SocketAddr,
     stop: CancelFlag,
-    /// Shared serving statistics.
+    /// Worker 0's serving statistics (the whole fleet's when `--workers
+    /// 1`, which keeps single-worker callers bit-compatible). Fleet-wide
+    /// aggregates live in [`Router::fleet_snapshot`].
     pub stats: Arc<ServerStats>,
+    /// Placement/rebalance/aggregation hub owning the worker fleet.
+    pub router: Arc<Router>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    worker_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Binds `addr` ("127.0.0.1:0" picks a free port) and serves requests
-    /// with `engine` until dropped.
+    /// with `engine` until dropped — a one-worker [`Server::spawn_fleet`].
     pub fn spawn(
         addr: &str,
         engine: Box<dyn StepEngine + Send>,
         opts: ServeOpts,
     ) -> crate::Result<Self> {
+        Self::spawn_fleet(addr, vec![engine], opts)
+    }
+
+    /// Binds `addr` and serves requests across a fleet of workers, one
+    /// per engine (`--workers N`; DESIGN.md §16). Placement follows
+    /// `opts.routing`; the accept loop's poll tick doubles as the
+    /// work-stealing rebalance cadence.
+    pub fn spawn_fleet(
+        addr: &str,
+        engines: Vec<Box<dyn StepEngine + Send>>,
+        opts: ServeOpts,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!engines.is_empty(), "spawn_fleet needs at least one engine");
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop: CancelFlag = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(ServerStats::default());
-        let (job_tx, job_rx) = mpsc::sync_channel::<Job>(opts.max_queue.max(1));
 
-        // Worker: the continuous-serving scheduler (sessions.rs).
-        let wstats = stats.clone();
-        let wstop = stop.clone();
-        let wopts = opts.clone();
-        let worker_thread = std::thread::Builder::new().name("ygg-worker".into()).spawn(
-            move || sessions::run_worker(engine, job_rx, wstats, wstop, wopts),
-        )?;
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(id, engine)| EngineWorker::spawn(id, engine, &opts))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let router = Arc::new(Router::new(workers, &opts));
+        let stats = router.workers()[0].stats.clone();
 
-        // Accept loop: one reader + one writer pump per connection.
+        // Accept loop: one reader + one writer pump per connection. Its
+        // 20ms idle poll is also the rebalance tick.
         let astop = stop.clone();
-        let astats = stats.clone();
+        let arouter = router.clone();
         let stream = opts.stream;
         let default_class = opts.default_class;
         let accept_thread = std::thread::Builder::new().name("ygg-accept".into()).spawn(
@@ -395,15 +480,15 @@ impl Server {
                 while !astop.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((sock, _)) => {
-                            let tx = job_tx.clone();
-                            let stats = astats.clone();
+                            let router = arouter.clone();
                             let _ = std::thread::Builder::new()
                                 .name("ygg-conn".into())
                                 .spawn(move || {
-                                    handle_conn(sock, tx, stats, stream, default_class)
+                                    handle_conn(sock, router, stream, default_class)
                                 });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            arouter.rebalance();
                             std::thread::sleep(std::time::Duration::from_millis(20));
                         }
                         Err(_) => break,
@@ -412,13 +497,7 @@ impl Server {
             },
         )?;
 
-        Ok(Self {
-            addr: local,
-            stop,
-            stats,
-            accept_thread: Some(accept_thread),
-            worker_thread: Some(worker_thread),
-        })
+        Ok(Self { addr: local, stop, stats, router, accept_thread: Some(accept_thread) })
     }
 }
 
@@ -430,19 +509,17 @@ impl Drop for Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.worker_thread.take() {
-            let _ = t.join();
-        }
+        self.router.shutdown();
     }
 }
 
-/// Per-connection reader: parses request lines, enqueues jobs (the reply
-/// channel feeds this connection's writer pump), and on EOF raises the
-/// connection's cancel flag so the scheduler frees any in-flight session.
+/// Per-connection reader: parses request lines, routes jobs through the
+/// fleet's [`Router`] (the reply channel feeds this connection's writer
+/// pump), and on EOF raises the connection's cancel flag so the owning
+/// worker's scheduler frees any in-flight session.
 fn handle_conn(
     sock: TcpStream,
-    jobs: mpsc::SyncSender<Job>,
-    stats: Arc<ServerStats>,
+    router: Arc<Router>,
     stream: bool,
     default_class: SloClass,
 ) {
@@ -489,7 +566,7 @@ fn handle_conn(
         }
         match parse_request(&line) {
             Ok(Req::Stats) => {
-                let _ = ev_tx.send(ServerEvent::Stats(stats.snapshot()));
+                let _ = ev_tx.send(ServerEvent::Stats(router.fleet_snapshot()));
             }
             Ok(Req::Generate { id, prompt, max_new, class }) => {
                 let job = Job::new(
@@ -501,7 +578,7 @@ fn handle_conn(
                     stream,
                     cancelled.clone(),
                 );
-                if jobs.try_send(job).is_err() {
+                if router.submit(job).is_err() {
                     let _ = ev_tx.send(ServerEvent::Error {
                         id: Some(id),
                         message: "queue full".into(),
@@ -1771,6 +1848,56 @@ mod tests {
         assert!(be > bh, "easy session got {be} rows vs hard {bh}");
         assert!(be + bh <= 16, "global budget (2 × 8 rows) exceeded");
         assert!(easy.accept_rate().unwrap() > hard.accept_rate().unwrap());
+    }
+
+    /// Satellite: a class with zero ITL samples must not emit its keys
+    /// at all — the old unconditional emission serialized the NaN
+    /// percentile as `null` for every idle class.
+    #[test]
+    fn stats_json_omits_itl_keys_for_classes_without_samples() {
+        let stats = ServerStats::default();
+        let j = stats.snapshot().to_json();
+        assert!(j.get("itl_ms_p50_latency").is_none(), "no samples → no key");
+        assert!(j.get("itl_ms_p95_latency").is_none());
+        assert!(j.get("itl_ms_p50_throughput").is_none());
+        assert!(j.get("itl_ms_p95_throughput").is_none());
+        // Counters and means still emit (means degrade to null, which is
+        // meaningful for always-present keys).
+        assert_eq!(j.u64("requests").unwrap(), 0);
+        assert!(j.get("queue_delay_ms_mean").is_some());
+        // One latency-class sample: its keys appear, the idle class stays
+        // omitted.
+        stats.recorder.lock().unwrap().record("server.itl_s.latency", 0.5);
+        let j = stats.snapshot().to_json();
+        assert_eq!(j.f64("itl_ms_p50_latency").unwrap(), 500.0);
+        assert_eq!(j.f64("itl_ms_p95_latency").unwrap(), 500.0);
+        assert!(j.get("itl_ms_p50_throughput").is_none(), "idle class still omitted");
+    }
+
+    #[test]
+    fn merged_stats_sum_counters_max_rungs_and_concatenate_series() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let a = ServerStats::default();
+        let b = ServerStats::default();
+        a.requests.store(2, Relaxed);
+        b.requests.store(3, Relaxed);
+        a.tokens.store(40, Relaxed);
+        b.tokens.store(2, Relaxed);
+        a.degrade_rung.store(1, Relaxed);
+        b.degrade_rung.store(3, Relaxed);
+        a.recorder.lock().unwrap().record("server.ttft_s", 0.5);
+        b.recorder.lock().unwrap().record("server.ttft_s", 0.25);
+        b.recorder.lock().unwrap().record("server.ttft_s", 0.25);
+        let acc = ServerStats::default();
+        acc.merge_from(&a);
+        acc.merge_from(&b);
+        let s = acc.snapshot();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.tokens, 42);
+        assert_eq!(s.degrade_rung, 3, "fleet rung is the max, not a sum");
+        // Percentiles over the *concatenated* samples [0.5, 0.25, 0.25]:
+        // the median is 0.25s, not the mean of per-worker medians.
+        assert_eq!(s.ttft_ms_p50, 250.0);
     }
 
     #[test]

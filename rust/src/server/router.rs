@@ -1,0 +1,617 @@
+//! Prefix-affinity request routing across a fleet of engine workers
+//! (DESIGN.md §16).
+//!
+//! With N data-parallel [`EngineWorker`]s — each owning its own paged
+//! pool and radix prefix trie — *where* a request lands decides whether
+//! its prompt prefix is already resident. The [`Router`] therefore
+//! places each request by **prefix-cache affinity**: the prompt's
+//! cumulative chunk fingerprints ([`crate::kvcache::chunk_hashes`]) are
+//! matched against a bounded per-worker summary of the prefixes that
+//! worker has served (the SGLang-style cache-aware discipline), deepest
+//! match wins, ties break toward the lighter worker. Prompts no worker
+//! recognizes fall back to the least-loaded worker, tie-broken by a
+//! deterministic prompt hash so cold clustered workloads spread instead
+//! of piling onto worker 0. `--routing round-robin|least-loaded` swap
+//! the whole policy for the classical baselines.
+//!
+//! Affinity creates skew by design — popular prefixes concentrate. The
+//! counterweight is **work-stealing rebalance** ([`Router::rebalance`],
+//! policy in [`crate::scheduler::steal_move`]): when a worker's backlog
+//! exceeds a threshold, queued jobs migrate from the *back* of its
+//! inbox to the least-loaded worker. Only never-admitted jobs are
+//! stealable (the [`JobQueue`](super::worker::JobQueue) holds nothing
+//! else), so a migration can never strand prefilled KV state.
+//!
+//! The router also mints each job's fleet-unique `uid` — client ids are
+//! only unique per connection — and aggregates per-worker
+//! [`ServerStats`] into one [`FleetSnapshot`].
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::kvcache::{chunk_hashes, token_hash};
+use crate::util::json::Json;
+
+use super::worker::EngineWorker;
+use super::{Job, ServeOpts, ServerEvent, ServerStats, StatsSnapshot};
+
+/// Bits of a job uid holding the per-worker sequence number; the worker
+/// namespace (index + 1) lives above them.
+const UID_SEQ_BITS: u32 = 48;
+
+/// Per-worker cap on remembered prefix fingerprints. A bound, not an
+/// LRU: once a summary fills, new fingerprints are no longer recorded
+/// (deterministic, unlike random replacement) — misses then degrade to
+/// fallback placement, never to a wrong answer.
+const SUMMARY_CAP: usize = 1 << 16;
+
+/// Upper bound on jobs one [`Router::rebalance`] pass migrates, so a
+/// mis-tuned threshold cannot spin the accept loop.
+const MAX_STEALS_PER_PASS: usize = 64;
+
+/// Request-placement policy (`--routing`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Prefix-cache-affinity placement with least-loaded fallback (the
+    /// default; DESIGN.md §16).
+    #[default]
+    Affinity,
+    /// Strict rotation, blind to both cache state and load.
+    RoundRobin,
+    /// Always the lightest worker (queue + live sessions), blind to
+    /// cache state.
+    LeastLoaded,
+}
+
+impl RoutingPolicy {
+    /// Stable CLI/config string form.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingPolicy::Affinity => "affinity",
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// Parses the CLI/config string form.
+    pub fn from_str(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "affinity" => RoutingPolicy::Affinity,
+            "round-robin" => RoutingPolicy::RoundRobin,
+            "least-loaded" => RoutingPolicy::LeastLoaded,
+            _ => anyhow::bail!(
+                "unknown routing policy '{s}' (expected affinity|round-robin|least-loaded)"
+            ),
+        })
+    }
+}
+
+/// One placement decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Chosen worker index.
+    pub worker: usize,
+    /// The prompt matched the worker's prefix summary (affinity hit).
+    pub affinity: bool,
+    /// No summary matched: placed by the least-loaded fallback.
+    pub fallback: bool,
+    /// Whole prompt chunks the summary matched (0 on miss/other policy).
+    pub depth: usize,
+}
+
+/// The pure placement core: a function of (prompt, per-worker loads,
+/// accumulated summaries) with no clocks, threads, or randomness — the
+/// property the routing-determinism tests pin (same wave + same seed ⇒
+/// identical decisions).
+pub struct Placer {
+    policy: RoutingPolicy,
+    chunk: usize,
+    /// Per-worker set of cumulative prefix fingerprints this placer has
+    /// routed there (the radix-trie path summary).
+    summaries: Vec<HashSet<u64>>,
+    rr: usize,
+}
+
+impl Placer {
+    /// A placer for `workers` workers matching `chunk`-token prefix
+    /// fingerprints (normally the prefix cache's block size).
+    pub fn new(policy: RoutingPolicy, workers: usize, chunk: usize) -> Self {
+        Self {
+            policy,
+            chunk: chunk.max(1),
+            summaries: vec![HashSet::new(); workers.max(1)],
+            rr: 0,
+        }
+    }
+
+    /// Places one prompt given each worker's current load.
+    pub fn place(&mut self, prompt: &[u32], loads: &[usize]) -> Placement {
+        let n = self.summaries.len();
+        debug_assert_eq!(loads.len(), n);
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let worker = self.rr % n;
+                self.rr += 1;
+                Placement { worker, affinity: false, fallback: false, depth: 0 }
+            }
+            RoutingPolicy::LeastLoaded => {
+                let worker = argmin_load(loads, 0, 1);
+                Placement { worker, affinity: false, fallback: false, depth: 0 }
+            }
+            RoutingPolicy::Affinity => {
+                let hashes = chunk_hashes(prompt, self.chunk);
+                // Deepest summary match; ties toward (load, index).
+                let mut best: Option<(usize, usize)> = None; // (depth, worker)
+                for (w, summary) in self.summaries.iter().enumerate() {
+                    let depth = hashes
+                        .iter()
+                        .rposition(|h| summary.contains(h))
+                        .map(|i| i + 1)
+                        .unwrap_or(0);
+                    if depth == 0 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((d, bw)) => {
+                            depth > d
+                                || (depth == d && (loads[w], w) < (loads[bw], bw))
+                        }
+                    };
+                    if better {
+                        best = Some((depth, w));
+                    }
+                }
+                let p = match best {
+                    Some((depth, worker)) => {
+                        Placement { worker, affinity: true, fallback: false, depth }
+                    }
+                    None => {
+                        // Cold prompt: least-loaded, with ties spread by
+                        // a deterministic prompt hash (all-idle fleets
+                        // would otherwise funnel every cold cluster onto
+                        // worker 0).
+                        let ties = loads.iter().filter(|&&l| l == *loads.iter().min().unwrap()).count();
+                        let pick = (token_hash(prompt) % ties as u64) as usize;
+                        let worker = argmin_load(loads, pick, ties);
+                        Placement { worker, affinity: false, fallback: true, depth: 0 }
+                    }
+                };
+                self.remember(p.worker, &hashes);
+                p
+            }
+        }
+    }
+
+    /// Records `prompt`'s fingerprints against `worker` — used when a
+    /// job migrates (work stealing), so the summary tracks where the
+    /// prefix will actually be cached.
+    pub fn note(&mut self, worker: usize, prompt: &[u32]) {
+        let hashes = chunk_hashes(prompt, self.chunk);
+        self.remember(worker, &hashes);
+    }
+
+    fn remember(&mut self, worker: usize, hashes: &[u64]) {
+        let s = &mut self.summaries[worker];
+        for &h in hashes {
+            if s.len() >= SUMMARY_CAP {
+                break;
+            }
+            s.insert(h);
+        }
+    }
+}
+
+/// The `skip`-th worker (0-based, modulo `ties`) among those sharing the
+/// minimum load, scanning ascending indices — deterministic for both the
+/// plain least-loaded argmin (`skip = 0`) and the hashed tie spread.
+fn argmin_load(loads: &[usize], skip: usize, ties: usize) -> usize {
+    let min = *loads.iter().min().expect("non-empty fleet");
+    let mut seen = 0usize;
+    let mut last = 0usize;
+    for (w, &l) in loads.iter().enumerate() {
+        if l == min {
+            if seen == skip % ties.max(1) {
+                return w;
+            }
+            seen += 1;
+            last = w;
+        }
+    }
+    last
+}
+
+/// Fleet-level statistics: every worker's [`StatsSnapshot`] plus one
+/// merged view (summed counters/gauges, percentiles over the
+/// concatenated per-worker series, `degrade_rung` as the fleet max) and
+/// the routing counters.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    /// Cross-worker aggregate (what the wire `stats` event leads with).
+    pub merged: StatsSnapshot,
+    /// Per-worker snapshots, indexed by worker id.
+    pub workers: Vec<StatsSnapshot>,
+    /// Placements that matched a worker's prefix summary.
+    pub affinity_hits: u64,
+    /// Affinity-policy placements that fell back to least-loaded.
+    pub fallback_placements: u64,
+    /// Jobs migrated by work-stealing rebalance.
+    pub steals: u64,
+}
+
+impl FleetSnapshot {
+    /// Wire form: the merged snapshot's fields at the top level (so
+    /// single-worker stats consumers keep working unchanged), plus the
+    /// routing counters and a `workers` array of per-worker objects.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.merged.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("workers".into(), Json::Num(self.workers.len() as f64));
+            m.insert(
+                "worker_stats".into(),
+                Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()),
+            );
+            m.insert("affinity_hits".into(), Json::Num(self.affinity_hits as f64));
+            m.insert(
+                "fallback_placements".into(),
+                Json::Num(self.fallback_placements as f64),
+            );
+            m.insert("steals".into(), Json::Num(self.steals as f64));
+        }
+        j
+    }
+}
+
+/// The serving frontend's placement/rebalance/aggregation hub: owns the
+/// fleet's [`EngineWorker`]s and is shared (`Arc`) by every connection
+/// thread and the accept loop.
+pub struct Router {
+    workers: Vec<EngineWorker>,
+    placer: Mutex<Placer>,
+    steal_threshold: usize,
+    /// Placements that matched a worker's prefix summary.
+    pub affinity_hits: AtomicU64,
+    /// Affinity placements that fell back to least-loaded.
+    pub fallback_placements: AtomicU64,
+    /// Jobs migrated off an over-threshold backlog.
+    pub steals: AtomicU64,
+    /// Per-worker uid sequence counters (the low half of minted uids).
+    uid_seqs: Vec<AtomicU64>,
+}
+
+/// Receipt for a successfully routed job.
+#[derive(Debug, Clone, Copy)]
+pub struct Ticket {
+    /// Worker the job was queued on.
+    pub worker: usize,
+    /// The fleet-unique id minted for the job.
+    pub uid: u64,
+}
+
+impl Router {
+    /// A router over `workers` (placement state sized to the fleet).
+    pub fn new(workers: Vec<EngineWorker>, opts: &ServeOpts) -> Self {
+        let n = workers.len();
+        Self {
+            placer: Mutex::new(Placer::new(opts.routing, n, opts.affinity_chunk)),
+            steal_threshold: opts.steal_threshold.max(1),
+            affinity_hits: AtomicU64::new(0),
+            fallback_placements: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            uid_seqs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            workers,
+        }
+    }
+
+    /// The fleet, indexed by worker id.
+    pub fn workers(&self) -> &[EngineWorker] {
+        &self.workers
+    }
+
+    /// Mints a fleet-unique job id in `worker`'s namespace:
+    /// `(worker + 1) << 48 | seq`. Worker indices are far below 2^16 and
+    /// a u48 sequence outlives any realistic process, so uids never
+    /// collide across workers, reconnects, or restarts of the sequence's
+    /// owner connection — the regression the per-`Server` minting had.
+    pub fn mint_uid(&self, worker: usize) -> u64 {
+        let seq = self.uid_seqs[worker].fetch_add(1, Ordering::Relaxed);
+        ((worker as u64 + 1) << UID_SEQ_BITS) | (seq & ((1 << UID_SEQ_BITS) - 1))
+    }
+
+    fn loads(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.load()).collect()
+    }
+
+    /// Routes one job: place, mint its uid, enqueue. A full target queue
+    /// spills to the lightest worker with room; only a fleet-wide-full
+    /// (or shutting-down) state hands the job back for a `queue full`
+    /// rejection.
+    pub fn submit(&self, mut job: Job) -> Result<Ticket, Job> {
+        let loads = self.loads();
+        let p = self.placer.lock().unwrap().place(&job.prompt, &loads);
+        if p.affinity {
+            self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if p.fallback {
+            self.fallback_placements.fetch_add(1, Ordering::Relaxed);
+        }
+        let uid = self.mint_uid(p.worker);
+        job.uid = uid;
+        job = match self.workers[p.worker].queue().try_push(job) {
+            Ok(()) => return Ok(Ticket { worker: p.worker, uid }),
+            Err(j) => j,
+        };
+        // Spill: lightest other workers first, deterministic on ties.
+        let mut order: Vec<usize> =
+            (0..self.workers.len()).filter(|&w| w != p.worker).collect();
+        order.sort_by_key(|&w| (loads[w], w));
+        for w in order {
+            let uid = self.mint_uid(w);
+            job.uid = uid;
+            job = match self.workers[w].queue().try_push(job) {
+                Ok(()) => return Ok(Ticket { worker: w, uid }),
+                Err(j) => j,
+            };
+        }
+        Err(job)
+    }
+
+    /// One work-stealing pass (DESIGN.md §16): while some backlog
+    /// exceeds the threshold and a strictly lighter destination exists
+    /// ([`crate::scheduler::steal_move`]), migrate the *most recently
+    /// queued* job — never anything admitted or prefilled, by
+    /// [`JobQueue`](super::worker::JobQueue) construction. Returns the
+    /// number of jobs moved. Called from the accept loop's poll tick.
+    pub fn rebalance(&self) -> usize {
+        if self.workers.len() < 2 {
+            return 0;
+        }
+        let mut moved = 0;
+        while moved < MAX_STEALS_PER_PASS {
+            let backlogs: Vec<usize> = self.workers.iter().map(|w| w.backlog()).collect();
+            let loads = self.loads();
+            let Some((src, dst)) =
+                crate::scheduler::steal_move(&backlogs, &loads, self.steal_threshold)
+            else {
+                break;
+            };
+            let Some(job) = self.workers[src].queue().steal_back() else {
+                break;
+            };
+            // The prefix will now be cached on `dst`: update the summary
+            // so followers route after the migrated job, not before it.
+            // (The stolen job keeps its minted uid — uniqueness, not the
+            // namespace, is the contract.)
+            self.placer.lock().unwrap().note(dst, &job.prompt);
+            match self.workers[dst].queue().try_push(job) {
+                Ok(()) => {
+                    moved += 1;
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(job) => {
+                    // Destination refused (filled up / closing): put the
+                    // job back; if even that fails the fleet is shutting
+                    // down — reject rather than strand the client.
+                    if let Err(job) = self.workers[src].queue().try_push(job) {
+                        let _ = job.reply.send(ServerEvent::Error {
+                            id: Some(job.id),
+                            message: "queue full".into(),
+                        });
+                    }
+                    break;
+                }
+            }
+        }
+        moved
+    }
+
+    /// Aggregates every worker's stats into one [`FleetSnapshot`].
+    pub fn fleet_snapshot(&self) -> FleetSnapshot {
+        let workers: Vec<StatsSnapshot> =
+            self.workers.iter().map(|w| w.stats.snapshot()).collect();
+        let acc = ServerStats::default();
+        for w in &self.workers {
+            acc.merge_from(&w.stats);
+        }
+        FleetSnapshot {
+            merged: acc.snapshot(),
+            workers,
+            affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
+            fallback_placements: self.fallback_placements.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stops and joins every worker (idempotent).
+    pub fn shutdown(&self) {
+        for w in &self.workers {
+            w.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EchoEngine, SloClass};
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{mpsc, Arc};
+
+    fn policy_roundtrip(p: RoutingPolicy) {
+        assert_eq!(RoutingPolicy::from_str(p.as_str()).unwrap(), p);
+    }
+
+    #[test]
+    fn routing_policy_strings_roundtrip() {
+        policy_roundtrip(RoutingPolicy::Affinity);
+        policy_roundtrip(RoutingPolicy::RoundRobin);
+        policy_roundtrip(RoutingPolicy::LeastLoaded);
+        assert!(RoutingPolicy::from_str("bogus").is_err());
+    }
+
+    /// A clustered-prefix wave: `groups` system prompts of `prefix_len`
+    /// tokens, each followed by a unique per-request tail.
+    fn clustered_wave(groups: usize, per_group: usize, prefix_len: usize) -> Vec<Vec<u32>> {
+        let mut wave = Vec::new();
+        for g in 0..groups {
+            for c in 0..per_group {
+                let mut p: Vec<u32> = (0..prefix_len as u32)
+                    .map(|i| 1000 * (g as u32 + 1) + i)
+                    .collect();
+                p.push(7_000 + (g * per_group + c) as u32);
+                wave.push(p);
+            }
+        }
+        wave
+    }
+
+    #[test]
+    fn affinity_follows_the_seeded_prefix() {
+        let mut placer = Placer::new(RoutingPolicy::Affinity, 4, 16);
+        let wave = clustered_wave(4, 4, 32);
+        let loads = vec![0usize; 4];
+        // First client of each group lands somewhere (fallback)…
+        let seeds: Vec<Placement> =
+            (0..4).map(|g| placer.place(&wave[g * 4], &loads)).collect();
+        for s in &seeds {
+            assert!(s.fallback && !s.affinity);
+        }
+        // …and every later same-group client follows it, regardless of
+        // load skew.
+        let skewed = vec![9, 9, 9, 9];
+        for g in 0..4 {
+            for c in 1..4 {
+                let p = placer.place(&wave[g * 4 + c], &skewed);
+                assert!(p.affinity, "group {g} client {c} missed");
+                assert_eq!(p.worker, seeds[g].worker);
+                assert_eq!(p.depth, 2, "two whole 16-token chunks matched");
+            }
+        }
+    }
+
+    /// Satellite: same wave + same seed ⇒ identical placement decisions
+    /// (the placer is a pure function of its inputs — no clocks, no
+    /// thread timing, no randomness).
+    #[test]
+    fn affinity_placement_is_deterministic_across_runs() {
+        let run = |seed: u64| -> Vec<Placement> {
+            let mut placer = Placer::new(RoutingPolicy::Affinity, 4, 16);
+            // Seeded LCG wave: random group order + random load vectors.
+            let mut state = seed;
+            let mut next = move || {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 33) as usize
+            };
+            let wave = clustered_wave(4, 4, 32);
+            (0..64)
+                .map(|_| {
+                    let prompt = &wave[next() % wave.len()];
+                    let loads: Vec<usize> = (0..4).map(|_| next() % 8).collect();
+                    placer.place(prompt, &loads)
+                })
+                .collect()
+        };
+        assert_eq!(run(42), run(42), "same seed must replay identically");
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn cold_fallback_spreads_clusters_across_idle_workers() {
+        let mut placer = Placer::new(RoutingPolicy::Affinity, 4, 16);
+        let loads = vec![0usize; 4];
+        let wave = clustered_wave(4, 1, 32);
+        let picked: HashSet<usize> =
+            wave.iter().map(|p| placer.place(p, &loads).worker).collect();
+        assert!(
+            picked.len() >= 2,
+            "4 distinct cold prefixes funneled onto one worker: {picked:?}"
+        );
+    }
+
+    #[test]
+    fn round_robin_and_least_loaded_ignore_prefixes() {
+        let mut rr = Placer::new(RoutingPolicy::RoundRobin, 3, 16);
+        let loads = vec![5, 0, 5];
+        let seq: Vec<usize> =
+            (0..6).map(|_| rr.place(&[1, 2, 3], &loads).worker).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        let mut ll = Placer::new(RoutingPolicy::LeastLoaded, 3, 16);
+        assert_eq!(ll.place(&[1, 2, 3], &loads).worker, 1);
+        assert_eq!(ll.place(&[1, 2, 3], &[2, 2, 2]).worker, 0, "ties → lowest index");
+    }
+
+    fn echo_router(workers: usize, opts: &ServeOpts) -> Router {
+        let fleet: Vec<EngineWorker> = (0..workers)
+            .map(|i| EngineWorker::spawn(i, Box::new(EchoEngine), opts).unwrap())
+            .collect();
+        Router::new(fleet, opts)
+    }
+
+    fn test_job(id: u64, prompt: Vec<u32>) -> (Job, mpsc::Receiver<ServerEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        (Job::new(id, prompt, 2, SloClass::Latency, tx, false, cancel), rx)
+    }
+
+    /// Satellite regression: client ids are only unique per connection —
+    /// reconnecting clients (and distinct connections) may all send
+    /// `id: 0`. The router's minted uids must stay unique fleet-wide
+    /// anyway, namespaced by worker.
+    #[test]
+    fn uids_stay_unique_across_reconnects_and_workers() {
+        let opts = ServeOpts { max_queue: 64, ..ServeOpts::default() };
+        let router = echo_router(3, &opts);
+        let mut seen = HashSet::new();
+        let mut rxs = Vec::new();
+        for round in 0..30 {
+            // Every "reconnect" reuses the same client id on a fresh
+            // reply channel, with rotating prompts to hit every worker.
+            let (job, rx) = test_job(0, vec![round % 3 + 1; 40]);
+            rxs.push(rx);
+            let Ok(t) = router.submit(job) else { panic!("fleet has queue room") };
+            assert!(t.worker < 3);
+            assert_eq!(t.uid >> UID_SEQ_BITS, t.worker as u64 + 1, "worker namespace");
+            assert!(seen.insert(t.uid), "uid {:#x} collided", t.uid);
+        }
+        // Direct namespace check: same sequence number, different
+        // workers, still distinct.
+        assert_ne!(router.mint_uid(0), router.mint_uid(1));
+        router.shutdown();
+    }
+
+    #[test]
+    fn fleet_snapshot_merges_counters_and_series() {
+        let opts = ServeOpts { max_queue: 8, ..ServeOpts::default() };
+        let router = echo_router(2, &opts);
+        // Complete one request per worker (round-level determinism not
+        // needed — just traffic on both).
+        for w in 0..2 {
+            let (job, rx) = test_job(w as u64, vec![10 + w as u32, 11]);
+            router.workers()[w].queue().try_push(job).ok().unwrap();
+            loop {
+                match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                    ServerEvent::Done { .. } => break,
+                    ServerEvent::Error { message, .. } => panic!("error: {message}"),
+                    _ => {}
+                }
+            }
+        }
+        let snap = router.fleet_snapshot();
+        assert_eq!(snap.workers.len(), 2);
+        assert_eq!(snap.merged.requests, 2, "summed across workers");
+        assert_eq!(snap.merged.tokens, 4);
+        assert_eq!(
+            snap.merged.requests,
+            snap.workers.iter().map(|w| w.requests).sum::<u64>()
+        );
+        // Merged percentiles come from the concatenated series: two
+        // queue-delay samples total.
+        let j = snap.to_json();
+        assert_eq!(j.u64("requests").unwrap(), 2);
+        assert_eq!(j.u64("steals").unwrap(), 0);
+        assert_eq!(j.u64("workers").unwrap(), 2);
+        assert_eq!(j.arr("worker_stats").unwrap().len(), 2);
+        router.shutdown();
+    }
+}

@@ -66,7 +66,7 @@ use crate::kvcache::PoolExhausted;
 use crate::scheduler::DegradationLadder;
 use crate::util::json::Json;
 
-use super::{CancelFlag, ServeOpts, ServerStats, SloClass, StatsSnapshot};
+use super::{CancelFlag, FleetSnapshot, ServeOpts, ServerStats, SloClass};
 
 /// Sliding window for the per-request serving series: bounds the stats
 /// recorder's memory (and each snapshot's percentile scan) on servers
@@ -116,8 +116,9 @@ pub enum ServerEvent {
     /// Request-level failure. `id` is `None` for lines that never parsed
     /// far enough to have one.
     Error { id: Option<u64>, message: String },
-    /// Reply to a `{"stats": true}` request (produced connection-side).
-    Stats(StatsSnapshot),
+    /// Reply to a `{"stats": true}` request (produced connection-side;
+    /// fleet-wide, DESIGN.md §16).
+    Stats(FleetSnapshot),
 }
 
 impl ServerEvent {
@@ -166,6 +167,12 @@ impl ServerEvent {
 pub struct Job {
     /// Client-chosen request id (demux key).
     pub id: u64,
+    /// Fleet-unique internal id, minted by the router at placement time
+    /// (worker-scoped namespace: `(worker + 1) << 48 | seq`). Client ids
+    /// are only unique per connection — two reconnecting clients may both
+    /// send `id: 0` — so every cross-worker ledger keys on `uid`, never
+    /// on `id`. Zero until the job passes through a router.
+    pub uid: u64,
     /// Tokenized prompt. After a preemption this grows by the generated
     /// prefix, so the resumed incarnation re-prefills exactly the context
     /// it stopped at.
@@ -216,6 +223,7 @@ impl Job {
     ) -> Self {
         Self {
             id,
+            uid: 0,
             prompt,
             max_new,
             class,
@@ -242,9 +250,17 @@ struct ServeSession {
 }
 
 /// The continuous-serving scheduler loop (the worker thread body).
+///
+/// Jobs arrive through a [`JobQueue`](super::worker::JobQueue) rather
+/// than a plain channel so the router can *steal from the back* of the
+/// pending backlog (work-stealing rebalance, DESIGN.md §16). The
+/// structural invariant that makes stealing safe lives here: only
+/// never-admitted jobs sit in the queue — preempted (already-prefilled)
+/// jobs wait in this function's private `resume` deque, which the router
+/// cannot reach.
 pub(super) fn run_worker(
     engine: Box<dyn StepEngine + Send>,
-    job_rx: mpsc::Receiver<Job>,
+    queue: Arc<super::worker::JobQueue>,
     stats: Arc<ServerStats>,
     stop: CancelFlag,
     opts: ServeOpts,
@@ -264,9 +280,9 @@ pub(super) fn run_worker(
         // Admission: fill free session slots — resumes first, then queue.
         while live.len() < max_sessions {
             let (job, fresh) = if resume.is_empty() {
-                match job_rx.try_recv() {
-                    Ok(j) => (j, true),
-                    Err(_) => break,
+                match queue.try_pop() {
+                    Some(j) => (j, true),
+                    None => break,
                 }
             } else if resume_backoff == 0 {
                 (resume.pop_front().unwrap(), false)
@@ -292,12 +308,12 @@ pub(super) fn run_worker(
             stats.active_sessions.store(0, Ordering::Relaxed);
             stats.kv_slots_in_use.store(0, Ordering::Relaxed);
             // Idle: block for work (bounded, so `stop` stays responsive).
-            match job_rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(job) => {
+            match queue.pop_timeout(Duration::from_millis(20)) {
+                super::worker::Pop::Job(job) => {
                     let _ = admit(&mut engine, job, &mut live, &stats, true);
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                super::worker::Pop::Timeout => {}
+                super::worker::Pop::Closed => break,
             }
             continue;
         }

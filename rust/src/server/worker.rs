@@ -1,0 +1,308 @@
+//! The engine-worker boundary (DESIGN.md §16): one [`EngineWorker`] owns
+//! one `StepEngine` — and with it that engine's `SharedCachePool`, paged
+//! block pool, and radix prefix trie — plus the continuous-serving
+//! scheduler loop on a dedicated thread. The server frontend owns *no*
+//! engine state; it only talks to workers through their [`JobQueue`]s
+//! (command side) and each job's typed [`ServerEvent`](super::ServerEvent)
+//! reply channel (event side), mirroring the actor-runtime pattern of
+//! `runtime/actor.rs` (spawn → ready handshake → channel-driven loop →
+//! close-to-shutdown).
+//!
+//! ## Why a deque and not a channel
+//!
+//! The worker's inbox is a [`JobQueue`] — a condvar-signalled deque —
+//! instead of the previous `mpsc::sync_channel`, because the router's
+//! work-stealing rebalance must be able to *take jobs back* from an
+//! overloaded worker's backlog. The queue gives that operation a
+//! structural safety guarantee: it only ever holds jobs that no engine
+//! has touched (never admitted, never prefilled, no streamed tokens).
+//! Preempted jobs — which *have* streamed tokens and must resume on the
+//! worker that holds their state — live in the scheduler's private
+//! resume deque inside `run_worker`, unreachable from here. Stealing
+//! from the back (`steal_back`) while the worker pops from the front
+//! also means the jobs most likely to wait longest are the ones that
+//! migrate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::engine::StepEngine;
+
+use super::{sessions, CancelFlag, Job, ServeOpts, ServerStats};
+
+/// Result of a bounded blocking pop from a [`JobQueue`].
+pub enum Pop {
+    /// A job was dequeued.
+    Job(Job),
+    /// The timeout elapsed with the queue still empty.
+    Timeout,
+    /// The queue is closed and drained: the worker should exit.
+    Closed,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Bounded two-ended job inbox shared between one worker (front) and the
+/// router (back). See the module docs for why this replaces a channel.
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl JobQueue {
+    /// An open queue holding at most `cap` pending jobs.
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueues at the back. Returns the job on a full or closed queue so
+    /// the caller can spill it to another worker or reject it.
+    pub fn try_push(&self, job: Job) -> Result<(), Job> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.jobs.len() >= self.cap {
+            return Err(job);
+        }
+        s.jobs.push_back(job);
+        drop(s);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking pop from the front (the worker's admission path).
+    pub fn try_pop(&self) -> Option<Job> {
+        self.state.lock().unwrap().jobs.pop_front()
+    }
+
+    /// Blocking pop from the front, bounded by `timeout` so the worker's
+    /// stop flag stays responsive.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = s.jobs.pop_front() {
+                return Pop::Job(job);
+            }
+            if s.closed {
+                return Pop::Closed;
+            }
+            let (next, res) = self.ready.wait_timeout(s, timeout).unwrap();
+            s = next;
+            if res.timed_out() {
+                return match s.jobs.pop_front() {
+                    Some(job) => Pop::Job(job),
+                    None if s.closed => Pop::Closed,
+                    None => Pop::Timeout,
+                };
+            }
+        }
+    }
+
+    /// Pops from the *back* — the router's work-stealing side. Every job
+    /// here is still pending by construction; the debug assertion pins
+    /// the invariant that a stolen job was never admitted anywhere.
+    pub fn steal_back(&self) -> Option<Job> {
+        let job = self.state.lock().unwrap().jobs.pop_back()?;
+        debug_assert!(
+            job.queue_s.is_none() && job.first_token.is_none() && job.resumed.is_empty(),
+            "stolen job must be pending: never admitted, prefilled, or streamed"
+        );
+        Some(job)
+    }
+
+    /// Pending jobs (the worker's backlog).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// True when no jobs are pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Closes the queue: future pushes fail, pops drain what remains,
+    /// and a blocked worker wakes to exit.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+/// One data-parallel serving worker: a `StepEngine` (with its own cache
+/// pool and prefix trie), its [`JobQueue`] inbox, its own
+/// [`ServerStats`], and the scheduler loop on a named thread.
+pub struct EngineWorker {
+    /// Fleet-wide worker index (also the uid namespace, DESIGN.md §16).
+    pub id: usize,
+    /// This worker's serving statistics (aggregated fleet-wide by the
+    /// router's [`FleetSnapshot`](super::FleetSnapshot)).
+    pub stats: Arc<ServerStats>,
+    queue: Arc<JobQueue>,
+    stop: CancelFlag,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl EngineWorker {
+    /// Moves `engine` onto a dedicated scheduler thread (named
+    /// `ygg-worker-{id}`) and returns once the thread has signalled
+    /// ready, mirroring the actor-runtime spawn handshake.
+    pub fn spawn(
+        id: usize,
+        engine: Box<dyn StepEngine + Send>,
+        opts: &ServeOpts,
+    ) -> crate::Result<Self> {
+        let queue = Arc::new(JobQueue::new(opts.max_queue));
+        let stats = Arc::new(ServerStats::default());
+        let stop: CancelFlag = Arc::new(AtomicBool::new(false));
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        let (q, s, st, o) = (queue.clone(), stats.clone(), stop.clone(), opts.clone());
+        let thread = std::thread::Builder::new()
+            .name(format!("ygg-worker-{id}"))
+            .spawn(move || {
+                let _ = ready_tx.send(());
+                sessions::run_worker(engine, q, s, st, o);
+            })?;
+        let _ = ready_rx.recv();
+        Ok(Self { id, stats, queue, stop, thread: Mutex::new(Some(thread)) })
+    }
+
+    /// The worker's job inbox (the router pushes and steals here).
+    pub fn queue(&self) -> &Arc<JobQueue> {
+        &self.queue
+    }
+
+    /// Pending (not yet admitted) jobs.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Routing load: pending jobs plus live sessions. The gauge lags one
+    /// scheduling round, which is fine for placement — affinity routing
+    /// dominates ties and the backlog half updates synchronously.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.stats.active_sessions.load(Ordering::Relaxed) as usize
+    }
+
+    /// Stops the scheduler loop and joins the thread. Idempotent; live
+    /// sessions are aborted and their caches freed (task drop).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EngineWorker {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SloClass;
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    fn job(id: u64) -> (Job, mpsc::Receiver<super::super::ServerEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        (Job::new(id, vec![1, 2, 3], 4, SloClass::Latency, tx, false, cancel), rx)
+    }
+
+    #[test]
+    fn queue_is_fifo_for_the_worker_and_lifo_for_the_thief() {
+        let q = JobQueue::new(8);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let (j, rx) = job(i);
+                q.try_push(j).ok().unwrap();
+                rx
+            })
+            .collect();
+        assert_eq!(q.len(), 4);
+        // The worker drains oldest-first…
+        assert_eq!(q.try_pop().unwrap().id, 0);
+        // …the thief takes the youngest (longest expected wait).
+        assert_eq!(q.steal_back().unwrap().id, 3);
+        assert_eq!(q.steal_back().unwrap().id, 2);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
+        assert!(q.steal_back().is_none());
+        drop(rxs);
+    }
+
+    #[test]
+    fn full_and_closed_queues_hand_the_job_back() {
+        let q = JobQueue::new(1);
+        let (a, _ra) = job(0);
+        let (b, _rb) = job(1);
+        assert!(q.try_push(a).is_ok());
+        let Err(b) = q.try_push(b) else { panic!("full queue must refuse") };
+        assert_eq!(b.id, 1);
+        q.close();
+        assert!(q.try_push(b).is_err(), "closed queue must refuse");
+        // A closed queue still drains what it holds…
+        assert_eq!(q.try_pop().unwrap().id, 0);
+        // …then reports Closed rather than Timeout.
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)), Pop::Closed));
+    }
+
+    #[test]
+    fn stolen_jobs_are_always_pending() {
+        let q = JobQueue::new(4);
+        let (j, _rx) = job(7);
+        q.try_push(j).ok().unwrap();
+        let stolen = q.steal_back().unwrap();
+        assert!(stolen.queue_s.is_none(), "never admitted");
+        assert!(stolen.first_token.is_none(), "never streamed");
+        assert!(stolen.resumed.is_empty(), "never preempted");
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push() {
+        let q = Arc::new(JobQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || match q2.pop_timeout(Duration::from_secs(5)) {
+            Pop::Job(j) => j.id,
+            _ => u64::MAX,
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        let (j, _rx) = job(42);
+        q.try_push(j).ok().unwrap();
+        assert_eq!(t.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn worker_serves_jobs_pushed_straight_into_its_queue() {
+        let engine = Box::new(super::super::EchoEngine);
+        let w = EngineWorker::spawn(3, engine, &ServeOpts::default()).unwrap();
+        let (j, rx) = job(9);
+        w.queue().try_push(j).ok().unwrap();
+        let mut tokens = Vec::new();
+        loop {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                super::super::ServerEvent::Done { id, summary } => {
+                    assert_eq!(id, 9);
+                    tokens = summary.tokens;
+                    break;
+                }
+                super::super::ServerEvent::Tokens { .. } => {}
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(tokens, vec![1, 2, 3, 1]);
+        assert_eq!(w.stats.requests.load(Ordering::Relaxed), 1);
+        w.shutdown();
+    }
+}

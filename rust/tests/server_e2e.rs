@@ -13,9 +13,9 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use yggdrasil::config::EngineConfig;
-use yggdrasil::engine::{profiling, SpecDecoder};
+use yggdrasil::engine::{profiling, SpecDecoder, StepEngine};
 use yggdrasil::runtime::Runtime;
-use yggdrasil::server::{Client, MockStepEngine, ServeOpts, Server};
+use yggdrasil::server::{Client, MockStepEngine, RoutingPolicy, ServeOpts, Server};
 use yggdrasil::util::json::Json;
 
 fn opts(max_sessions: usize, stream: bool) -> ServeOpts {
@@ -876,4 +876,90 @@ fn concurrent_real_clients_interleave_streams() {
     }
     assert!(results[0].0 < results[1].1, "no interleaving: client 0 starved");
     assert!(results[1].0 < results[0].1, "no interleaving: client 1 starved");
+}
+
+// ---------------------------------------------------------------------------
+// Multi-worker fleet (DESIGN.md §16): sharded serving behind one listener.
+// ---------------------------------------------------------------------------
+
+fn mock_fleet(workers: usize, step_delay_ms: u64) -> Vec<Box<dyn StepEngine + Send>> {
+    (0..workers)
+        .map(|_| Box::new(MockStepEngine::new(step_delay_ms, 1, 10_000)) as Box<dyn StepEngine + Send>)
+        .collect()
+}
+
+#[test]
+fn four_worker_fleet_serves_a_wave_with_exact_streams_and_merged_stats() {
+    let opts = ServeOpts {
+        max_queue: 32,
+        max_sessions: 2,
+        stream: true,
+        routing: RoutingPolicy::RoundRobin,
+        ..ServeOpts::default()
+    };
+    let srv = Server::spawn_fleet("127.0.0.1:0", mock_fleet(4, 2), opts).unwrap();
+    let jobs: Vec<(Vec<u32>, usize)> =
+        (0..12).map(|i| ((0..8).map(|t| 100 * (i + 1) + t).collect(), 10)).collect();
+    for (p, n, r) in concurrent_wave(srv.addr, jobs) {
+        assert_eq!(r.tokens, expected_tokens(&p, n), "sharded stream diverged");
+    }
+    // A stats request over the wire reports the *fleet* merge, not one
+    // worker's slice.
+    let mut c = Client::connect(&srv.addr).unwrap();
+    let j = c.stats().unwrap();
+    assert_eq!(j.u64("requests").unwrap(), 12);
+    assert_eq!(j.u64("workers").unwrap(), 4);
+    assert_eq!(j.arr("worker_stats").unwrap().len(), 4);
+}
+
+#[test]
+fn one_worker_fleet_streams_bit_exact_with_single_engine_spawn() {
+    // `--workers 1` must be indistinguishable from the pre-fleet path:
+    // same wave, same streams, on both spawn entry points.
+    let wave: Vec<(Vec<u32>, usize)> =
+        (0..4).map(|i| ((0..10).map(|t| 7 * i + t + 3).collect(), 12)).collect();
+    let legacy = Server::spawn(
+        "127.0.0.1:0",
+        Box::new(MockStepEngine::new(2, 1, 10_000)),
+        opts(4, true),
+    )
+    .unwrap();
+    let fleet = Server::spawn_fleet("127.0.0.1:0", mock_fleet(1, 2), opts(4, true)).unwrap();
+    let run = |srv: &Server| -> Vec<Vec<u32>> {
+        concurrent_wave(srv.addr, wave.clone()).into_iter().map(|(_, _, r)| r.tokens).collect()
+    };
+    let a = run(&legacy);
+    let b = run(&fleet);
+    assert_eq!(a, b, "one-worker fleet diverged from the single-engine server");
+    for ((p, n), tokens) in wave.iter().zip(&a) {
+        assert_eq!(tokens, &expected_tokens(p, *n));
+    }
+}
+
+#[test]
+fn work_stealing_rebalances_queued_jobs_with_bit_exact_streams() {
+    // Every request shares one prompt, so affinity pins the whole wave to
+    // whichever worker saw the prefix first; with a single session slot
+    // per worker the rest sit *queued* (never prefilled) until the
+    // rebalancer steals them across. Stolen streams must be bit-exact —
+    // a steal moves only queue entries, never engine state.
+    let opts = ServeOpts {
+        max_queue: 64,
+        max_sessions: 1,
+        stream: true,
+        batched: false,
+        steal_threshold: 1,
+        ..ServeOpts::default()
+    };
+    let srv = Server::spawn_fleet("127.0.0.1:0", mock_fleet(2, 5), opts).unwrap();
+    let prompt: Vec<u32> = (0..20).map(|t| 40 + t).collect();
+    let jobs: Vec<_> = (0..8).map(|_| (prompt.clone(), 20)).collect();
+    for (p, n, r) in concurrent_wave(srv.addr, jobs) {
+        assert_eq!(r.tokens, expected_tokens(&p, n), "stolen stream diverged");
+    }
+    let steals = srv.router.steals.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(steals > 0, "backlogged queue was never rebalanced");
+    let snap = srv.router.fleet_snapshot();
+    assert_eq!(snap.merged.requests, 8);
+    assert_eq!(snap.steals, steals);
 }
