@@ -1,6 +1,6 @@
 # Convenience entry points; see README.md for the full tour.
 
-.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol smoke-alloc smoke-shard bench-maskpath
+.PHONY: artifacts test figures fmt doc serve serve-equal serve-nodraft serve-noprefix smoke smoke-prefix smoke-hol smoke-alloc smoke-shard smoke-trace bench-maskpath
 
 # AOT-compile the L2 model graphs + weights into rust/artifacts/ (one-off;
 # needs the Python toolchain with JAX). The root symlink keeps the Python
@@ -69,6 +69,12 @@ smoke-alloc:
 # affinity routing ≥1.5× round-robin's prefix hit rate).
 smoke-shard:
 	cd rust && cargo run --release -- figures --exp serving_shard_mock
+
+# Headless observability smoke (DESIGN.md §17; CI runs this too —
+# valid Prometheus exposition, balanced lifecycle/round/stage spans,
+# a round-tripping Chrome export, and recorder overhead < 5% wall).
+smoke-trace:
+	cd rust && cargo run --release -- figures --exp serving_trace_mock
 
 # Boolean-vs-bit-packed mask/walk microbench sweep (DESIGN.md §13):
 # asserts bit-exact parity, then writes results/BENCH_maskpath.json.

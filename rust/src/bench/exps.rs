@@ -1431,3 +1431,257 @@ pub fn serving_shard_mock(opts: &super::BenchOpts) -> crate::Result<()> {
     );
     Ok(())
 }
+
+/// Request-lifecycle tracing smoke (DESIGN.md §17), fully headless.
+///
+/// Phase A (capture): a 4-client wave against a 2-worker batched mock
+/// fleet with the flight recorder on. A live `{"metrics": true}` request
+/// must answer with parseable Prometheus text exposition, and after
+/// shutdown the per-worker rings must show (a) balanced `request` spans
+/// — every admitted uid opens exactly one span, closes it with the same
+/// span id, and is bracketed by one `admit` and one `done` instant; (b)
+/// every scheduling round as exactly one balanced `round` span per
+/// worker; (c) balanced engine stage spans; and (d) a Chrome trace-event
+/// export that round-trips through the in-tree JSON parser
+/// event-for-event.
+///
+/// Phase B (overhead): the same wave with the recorder on (default ring)
+/// vs off (`--trace-ring 0`), best-of-two walls each. The recorder's
+/// mutex pushes are nanoseconds against the mock's millisecond device
+/// sleeps, so the measured gap sits well under the 5% acceptance bar;
+/// the assertion adds a small absolute slack term so one scheduler
+/// hiccup on a ~100 ms wall cannot flake CI.
+pub fn serving_trace_mock(opts: &super::BenchOpts) -> crate::Result<()> {
+    use crate::engine::StepEngine;
+    use crate::server::{Client, MockStepEngine, ServeOpts, Server};
+    use crate::trace::{chrome_trace, validate_prometheus, Kind, Name, DEFAULT_RING};
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    let clients = 4usize;
+    let max_new = if opts.quick { 24 } else { 48 };
+    let prompts: Vec<Vec<u32>> = (0..clients).map(|i| vec![20 + i as u32, 3, 7]).collect();
+
+    // 1 ms verify + 1 ms batched draft per round: sleep-dominated, so the
+    // overhead phase measures the recorder against realistic stage costs.
+    let spawn = |trace_ring: usize| -> crate::Result<Server> {
+        let engines: Vec<Box<dyn StepEngine + Send>> = (0..2)
+            .map(|_| {
+                Box::new(MockStepEngine::new(1, 1, 1 << 20).with_draft_stage(1, true))
+                    as Box<dyn StepEngine + Send>
+            })
+            .collect();
+        Server::spawn_fleet(
+            "127.0.0.1:0",
+            engines,
+            ServeOpts {
+                max_queue: 16,
+                max_sessions: clients,
+                trace_ring,
+                ..ServeOpts::default()
+            },
+        )
+    };
+    let run_wave = |srv: &Server| -> crate::Result<f64> {
+        let addr = srv.addr;
+        let t0 = Instant::now();
+        let handles: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let p = p.clone();
+                std::thread::spawn(move || -> crate::Result<usize> {
+                    let mut c = Client::connect(&addr)?;
+                    Ok(c.generate(i as u64, &p, max_new)?.tokens.len())
+                })
+            })
+            .collect();
+        let mut tokens = 0usize;
+        for h in handles {
+            tokens += h.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+        }
+        anyhow::ensure!(
+            tokens == clients * max_new,
+            "wave produced {tokens} tokens, expected {}",
+            clients * max_new
+        );
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    // --- Phase A: capture, exposition, and trace invariants -------------
+    let srv = spawn(DEFAULT_RING)?;
+    let wall_capture = run_wave(&srv)?;
+    let mut c = Client::connect(&srv.addr)?;
+    let body = c.metrics()?;
+    validate_prometheus(&body)?;
+    anyhow::ensure!(
+        body.contains("ygg_requests_total{worker=\"fleet\"}"),
+        "exposition is missing the fleet-aggregated requests counter:\n{body}"
+    );
+    drop(c);
+    // Join the scheduler threads so every in-flight round has closed its
+    // span before the rings are read.
+    srv.router.shutdown();
+
+    let mut all: Vec<crate::trace::TraceEvent> = Vec::new();
+    for w in srv.router.workers() {
+        let evs = w.tracer.events();
+        // (b) every scheduling round is exactly one balanced span.
+        let mut rounds: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+        for e in &evs {
+            if e.name == Name::Round {
+                let ent = rounds.entry(e.round).or_default();
+                match e.kind {
+                    Kind::SpanBegin => ent.0 += 1,
+                    Kind::SpanEnd => ent.1 += 1,
+                    Kind::Instant => {}
+                }
+            }
+        }
+        anyhow::ensure!(!rounds.is_empty(), "worker {} traced no rounds", w.id);
+        for (r, (b, e)) in &rounds {
+            anyhow::ensure!(
+                *b == 1 && *e == 1,
+                "worker {}: round {r} has {b} begins / {e} ends (want exactly one span)",
+                w.id
+            );
+        }
+        // (c) engine stage spans balance (the mock records the draft and
+        // packed-verify stages).
+        for stage in [Name::TreeDraft, Name::Verify] {
+            let b = evs.iter().filter(|e| e.name == stage && e.kind == Kind::SpanBegin).count();
+            let e = evs.iter().filter(|e| e.name == stage && e.kind == Kind::SpanEnd).count();
+            anyhow::ensure!(
+                b == e && b > 0,
+                "worker {}: stage {} spans unbalanced ({b} begins / {e} ends)",
+                w.id,
+                stage.as_str()
+            );
+        }
+        all.extend(evs);
+    }
+
+    // (a) balanced request lifecycles: one span pair + one admit + one
+    // done per admitted uid, with matching span ids and ordered stamps.
+    #[derive(Default)]
+    struct ReqTrace {
+        begins: usize,
+        ends: usize,
+        admits: usize,
+        dones: usize,
+        begin_span: u32,
+        end_span: u32,
+        admit_us: u64,
+        done_us: u64,
+    }
+    let mut by_uid: BTreeMap<u64, ReqTrace> = BTreeMap::new();
+    for e in &all {
+        let t = by_uid.entry(e.uid).or_default();
+        match (e.name, e.kind) {
+            (Name::Request, Kind::SpanBegin) => {
+                t.begins += 1;
+                t.begin_span = e.span;
+            }
+            (Name::Request, Kind::SpanEnd) => {
+                t.ends += 1;
+                t.end_span = e.span;
+            }
+            (Name::Admit, _) => {
+                t.admits += 1;
+                t.admit_us = e.t_us;
+            }
+            (Name::Done, _) => {
+                t.dones += 1;
+                t.done_us = e.t_us;
+            }
+            _ => {}
+        }
+    }
+    let traced: Vec<(&u64, &ReqTrace)> =
+        by_uid.iter().filter(|(uid, _)| **uid != 0).collect();
+    anyhow::ensure!(
+        traced.len() == clients,
+        "expected {clients} traced requests, saw {}",
+        traced.len()
+    );
+    for (uid, t) in traced {
+        anyhow::ensure!(
+            t.begins == 1 && t.ends == 1 && t.admits == 1 && t.dones == 1,
+            "uid {uid}: request span/admit/done counts ({}, {}, {}, {}) — want 1 each",
+            t.begins,
+            t.ends,
+            t.admits,
+            t.dones
+        );
+        anyhow::ensure!(
+            t.begin_span == t.end_span,
+            "uid {uid}: request span ids diverge ({} vs {})",
+            t.begin_span,
+            t.end_span
+        );
+        anyhow::ensure!(
+            t.admit_us <= t.done_us,
+            "uid {uid}: done stamped before admit"
+        );
+    }
+
+    // (d) the Chrome export round-trips through the in-tree parser.
+    let doc = chrome_trace(&all);
+    let back = Json::parse(&doc.to_string())?;
+    let evs = back.arr("traceEvents")?;
+    anyhow::ensure!(
+        evs.len() == all.len(),
+        "chrome trace export dropped events ({} of {})",
+        evs.len(),
+        all.len()
+    );
+
+    // --- Phase B: recorder on/off overhead ------------------------------
+    let mut wall_on = wall_capture;
+    let mut wall_off = f64::MAX;
+    for _ in 0..2 {
+        let on = spawn(DEFAULT_RING)?;
+        wall_on = wall_on.min(run_wave(&on)?);
+        let off = spawn(0)?;
+        wall_off = wall_off.min(run_wave(&off)?);
+        anyhow::ensure!(
+            off.router.workers().iter().all(|w| w.tracer.pushed() == 0),
+            "a zero-capacity ring must record nothing"
+        );
+    }
+    let overhead = wall_on / wall_off.max(1e-9) - 1.0;
+
+    let mut t = Table::new(&["phase", "workers", "requests", "events", "wall_s", "overhead_pct"])
+        .with_title(
+            "Serving smoke (trace) — flight recorder, Chrome export, and \
+             Prometheus exposition (headless)",
+        );
+    t.row(&[
+        "capture".into(),
+        "2".into(),
+        clients.to_string(),
+        all.len().to_string(),
+        format!("{wall_capture:.3}"),
+        "-".into(),
+    ]);
+    t.row(&[
+        "overhead".into(),
+        "2".into(),
+        clients.to_string(),
+        "-".into(),
+        format!("{wall_on:.3}"),
+        format!("{:.2}", overhead * 100.0),
+    ]);
+    println!("{}", t.to_markdown());
+    t.save_csv(&opts.out_dir.join("serving_trace_mock.csv"))?;
+
+    // The acceptance bar: tracing must stay within 5% of the untraced
+    // round loop (plus 25 ms absolute slack for scheduler jitter on
+    // sub-second walls).
+    anyhow::ensure!(
+        wall_on <= wall_off * 1.05 + 0.025,
+        "recorder-on wall {wall_on:.3}s exceeds 5% over recorder-off {wall_off:.3}s"
+    );
+    Ok(())
+}

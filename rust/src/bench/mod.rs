@@ -232,20 +232,21 @@ pub fn artifacts_available(dir: &Path) -> bool {
 /// Every experiment name `--exp` accepts (also what `--exp all` runs).
 /// EXPERIMENTS.md's inventory table lists exactly these names — a unit
 /// test parses that table and fails on drift in either direction.
-pub const EXPERIMENTS: [&str; 17] = [
+pub const EXPERIMENTS: [&str; 18] = [
     "table1", "fig4", "fig5", "fig6", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
     "serving", "serving_mock", "serving_prefix", "serving_prefix_mock", "serving_hol_mock",
-    "serving_alloc_mock", "serving_shard_mock",
+    "serving_alloc_mock", "serving_shard_mock", "serving_trace_mock",
 ];
 
 /// Experiments that run without the AOT artifact bundle (mock-engine
 /// smokes CI runs headless).
-const ARTIFACT_FREE: [&str; 5] = [
+const ARTIFACT_FREE: [&str; 6] = [
     "serving_mock",
     "serving_prefix_mock",
     "serving_hol_mock",
     "serving_alloc_mock",
     "serving_shard_mock",
+    "serving_trace_mock",
 ];
 
 /// Runs one experiment (or `all`) by name. Artifact-backed experiments
@@ -286,6 +287,10 @@ pub fn run_experiment(name: &str, opts: BenchOpts) -> crate::Result<()> {
         }
         if exp == "serving_shard_mock" {
             exps::serving_shard_mock(&opts)?;
+            continue;
+        }
+        if exp == "serving_trace_mock" {
+            exps::serving_trace_mock(&opts)?;
             continue;
         }
         // Typed guard rather than a panic: if the artifact-free list and

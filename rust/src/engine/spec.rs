@@ -434,6 +434,12 @@ pub struct SpecDecoder {
     /// cloned into every task. An atomic — not a `SpecShared` field —
     /// because tasks read it while holding the shared-state lock.
     degrade: Arc<AtomicU8>,
+    /// The serving worker's flight recorder (DESIGN.md §17): batched
+    /// rounds wrap their packed phases — deferred-head draft, per-level
+    /// tree draft, CPU build, packed verify, accept walk — in uid-0
+    /// stage spans. `None` outside the serving stack (solo decode
+    /// records stage wall time into its task recorder instead).
+    tracer: Option<Arc<crate::trace::Tracer>>,
     label: String,
 }
 
@@ -491,6 +497,7 @@ impl SpecDecoder {
             })),
             pool: None,
             degrade: Arc::new(AtomicU8::new(0)),
+            tracer: None,
             label,
         }
     }
@@ -1676,6 +1683,10 @@ impl StepEngine for SpecDecoder {
         self.degrade.store(rung, Ordering::Relaxed);
     }
 
+    fn set_tracer(&mut self, tracer: Arc<crate::trace::Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
     fn begin(&mut self, prompt: &[u32], max_new: usize) -> crate::Result<Box<dyn DecodeTask>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let sess = if self.cfg.batch.enabled {
@@ -1850,6 +1861,11 @@ impl StepEngine for SpecDecoder {
         let mode =
             if self.cfg.compiled { ExecMode::Resident } else { ExecMode::WeightsByValue };
         let batch_draft = self.cfg.batch.batch_draft;
+        // Engine-side stage spans (DESIGN.md §17): uid 0 — each span
+        // covers the whole packed phase, not one request — and the round
+        // stamp the scheduler set groups them under the current round.
+        let tracer = self.tracer.clone();
+        let tr = tracer.as_deref();
         let shared = Arc::clone(&self.shared);
         let mut sh = shared.lock().unwrap();
 
@@ -1951,6 +1967,7 @@ impl StepEngine for SpecDecoder {
                 })
                 .collect();
             if !deferred.is_empty() {
+                let sp_head = tr.map(|t| t.begin(crate::trace::Name::HeadDraft, 0));
                 let mut head_parts: Vec<DraftParts> = Vec::with_capacity(deferred.len());
                 for &k in &deferred {
                     let (idx, slot, token) = {
@@ -2025,6 +2042,9 @@ impl StepEngine for SpecDecoder {
                 for p in head_parts {
                     sh.arena.put_f32(p.mask);
                 }
+                if let (Some(t), Some(s)) = (tr, sp_head) {
+                    t.end(crate::trace::Name::HeadDraft, 0, s);
+                }
             }
 
             // (b) Resolve heads and open each session's draft.
@@ -2053,6 +2073,7 @@ impl StepEngine for SpecDecoder {
             // group. The envelope pins the padded width so rounds whose
             // level sizes fluctuate reuse one compiled graph.
             let draft_env = (self.cfg.batch.max_sessions * self.cfg.max_width).min(max_w);
+            let sp_draft = tr.map(|t| t.begin(crate::trace::Name::TreeDraft, 0));
             loop {
                 let mut lvl: Vec<(usize, DraftParts)> = Vec::new();
                 for (k, dent) in dents.iter_mut().enumerate() {
@@ -2142,12 +2163,16 @@ impl StepEngine for SpecDecoder {
                     sh.arena.put_f32(p.mask);
                 }
             }
+            if let (Some(t), Some(s)) = (tr, sp_draft) {
+                t.end(crate::trace::Name::TreeDraft, 0, s);
+            }
 
             // ---------- build phase (CPU: prune + verify assembly) ----------
             // With `--cpu-threads > 1`, the per-session prune plans — the
             // knapsack DP, a pure function of each grown tree — fan out
             // across scoped threads (DESIGN.md §13). Mask assembly and
             // slot allocation stay serial: they mutate the shared caches.
+            let sp_build = tr.map(|t| t.begin(crate::trace::Name::CpuBuild, 0));
             let threads = crate::util::par::effective_threads(self.cfg.batch.cpu_threads);
             let mut pre: Vec<Option<(crate::Result<(Vec<NodeId>, usize)>, f64)>> =
                 Vec::with_capacity(dents.len());
@@ -2220,6 +2245,9 @@ impl StepEngine for SpecDecoder {
                     Err(e) => results[idx] = Some(Err(e)),
                 }
             }
+            if let (Some(t), Some(s)) = (tr, sp_build) {
+                t.end(crate::trace::Name::CpuBuild, 0, s);
+            }
         } else {
             // Verify-only batching (`--no-batch-draft`, the §9 regime):
             // every session drafts serially, only the verify packs.
@@ -2242,6 +2270,7 @@ impl StepEngine for SpecDecoder {
             .iter()
             .map(|e| e.as_ref().unwrap().parts.tokens.len())
             .collect();
+        let sp_verify = tr.map(|t| t.begin(crate::trace::Name::Verify, 0));
         for g in plan_batches(&rows, max_w) {
             let req = {
                 let member_parts: Vec<(&[u32], &[i32], &[u32], &[f32])> = g
@@ -2296,6 +2325,9 @@ impl StepEngine for SpecDecoder {
                     }
                 }
                 Ok(vreply) => {
+                    // The per-member reply handling below is the accept
+                    // walk (plus bookkeeping) — a nested uid-0 span.
+                    let sp_walk = tr.map(|t| t.begin(crate::trace::Name::AcceptWalk, 0));
                     let dt = t0.elapsed().as_secs_f64();
                     let mut off = 0usize;
                     for &m in &g.members {
@@ -2340,8 +2372,14 @@ impl StepEngine for SpecDecoder {
                         results[en.idx] = Some(r);
                         off += nrows;
                     }
+                    if let (Some(t), Some(s)) = (tr, sp_walk) {
+                        t.end(crate::trace::Name::AcceptWalk, 0, s);
+                    }
                 }
             }
+        }
+        if let (Some(t), Some(s)) = (tr, sp_verify) {
+            t.end(crate::trace::Name::Verify, 0, s);
         }
         drop(sh);
         results.into_iter().map(Option::unwrap).collect()

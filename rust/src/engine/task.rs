@@ -185,6 +185,15 @@ pub trait StepEngine: super::Engine {
     /// the prefill chunk (see `scheduler::DegradationLadder`). Default:
     /// ignored — engines without degradation hooks run at full budgets.
     fn set_degradation(&mut self, _rung: u8) {}
+
+    /// Hands the engine its worker's flight-recorder tracer (DESIGN.md
+    /// §17) so round-internal stage spans — deferred-head draft,
+    /// per-level tree draft, CPU build, packed verify, accept walk —
+    /// land in the same ring as the scheduler's lifecycle events.
+    /// Engine-side spans use uid 0 (they cover the whole batch) and
+    /// inherit the round stamp the scheduler set. Default: ignored —
+    /// engines without stage instrumentation need no plumbing.
+    fn set_tracer(&mut self, _tracer: std::sync::Arc<crate::trace::Tracer>) {}
 }
 
 #[cfg(test)]

@@ -36,6 +36,7 @@ pub mod sampling;
 pub mod scheduler;
 pub mod server;
 pub mod simulator;
+pub mod trace;
 pub mod tree;
 pub mod util;
 

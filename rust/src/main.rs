@@ -20,12 +20,13 @@ use yggdrasil::predictor::{DepthPredictor, DepthSample};
 use yggdrasil::runtime::Runtime;
 use yggdrasil::server::{RoutingPolicy, ServeOpts, Server, SloClass};
 use yggdrasil::util::cli::Args;
+use yggdrasil::util::log::{self, Level};
 
 const OPTS: &[&str] = &[
     "config", "artifacts", "engine", "drafter", "target", "prompt-dataset", "prompt-index",
     "max-new", "temperature", "seed", "addr", "reps", "steps", "exp", "out-dir", "max-depth",
     "max-width", "max-verify", "max-sessions", "block-size", "cache-blocks", "cpu-threads",
-    "prefill-chunk", "slo-class", "workers", "routing",
+    "prefill-chunk", "slo-class", "workers", "routing", "trace-out", "trace-ring", "log-level",
 ];
 const FLAGS: &[&str] = &[
     "quick",
@@ -45,13 +46,16 @@ const FLAGS: &[&str] = &[
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&argv) {
-        eprintln!("error: {e:#}");
+        log::error(&format!("{e:#}"));
         std::process::exit(1);
     }
 }
 
 fn run(argv: &[String]) -> yggdrasil::Result<()> {
     let args = Args::parse(argv, OPTS, FLAGS)?;
+    if let Some(l) = args.get("log-level") {
+        log::set_level(Level::parse(l)?);
+    }
     if args.flag("help") || args.subcommand.is_none() {
         print_help();
         return Ok(());
@@ -120,11 +124,11 @@ fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Resu
         // or the shared cache cannot be partitioned at all.
         let max_fit = (cap.saturating_sub(1) / 2).max(1);
         if cfg.batch.max_sessions > max_fit {
-            eprintln!(
+            log::warn(&format!(
                 "batched serving: {} sessions cannot share a {cap}-slot cache; \
                  capping at {max_fit}",
                 cfg.batch.max_sessions
-            );
+            ));
             cfg.batch.max_sessions = max_fit;
         }
         cap.saturating_sub(1) / cfg.batch.max_sessions.max(1)
@@ -149,11 +153,11 @@ fn fit_batched_envelope(cfg: &mut EngineConfig, rt: &Runtime) -> yggdrasil::Resu
                 cfg.max_depth -= 1;
             }
         }
-        eprintln!(
+        log::warn(&format!(
             "batched serving: tree envelope D{} W{} Wv{} oversizes the per-session \
              KV quota ({quota} slots); fitted to D{} W{} Wv{}",
             before.0, before.1, before.2, cfg.max_depth, cfg.max_width, cfg.max_verify
-        );
+        ));
     }
     Ok(())
 }
@@ -199,7 +203,7 @@ fn build_fleet(
             .filter(|p| p.exists())
             .and_then(|p| DepthPredictor::load(&p).ok());
         if p.is_some() {
-            eprintln!("loaded trained depth predictor");
+            log::info("loaded trained depth predictor");
         }
         p
     } else {
@@ -254,8 +258,8 @@ fn cmd_generate(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         .get(idx)
         .ok_or_else(|| anyhow::anyhow!("prompt index {idx} out of range"))?;
     let max_new = app.engine.max_new_tokens;
-    eprintln!("engine: {}", engine.name());
-    eprintln!("prompt ({ds}[{idx}]): {prompt:?}");
+    log::info(&format!("engine: {}", engine.name()));
+    log::info(&format!("prompt ({ds}[{idx}]): {prompt:?}"));
     let g = engine.generate_with(prompt, max_new, &mut |toks| {
         for t in toks {
             print!("{t} ");
@@ -264,14 +268,14 @@ fn cmd_generate(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         let _ = std::io::stdout().flush();
     })?;
     println!();
-    eprintln!(
+    log::info(&format!(
         "{} tokens in {} iterations — AAL {:.2}, {:.2} ms/token (prefill {:.1} ms)",
         g.tokens.len(),
         g.iterations,
         g.aal(),
         g.tpot() * 1e3,
         g.prefill_seconds * 1e3,
-    );
+    ));
     Ok(())
 }
 
@@ -350,6 +354,11 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
             Some(s) => SloClass::from_str(s)?,
             None => ServeOpts::default().default_class,
         },
+        // Observability (DESIGN.md §17): per-worker flight-recorder
+        // capacity (0 disables tracing) and an optional Chrome-trace
+        // dump written on shutdown.
+        trace_ring: args.usize_or("trace-ring", ServeOpts::default().trace_ring)?,
+        trace_out: args.get("trace-out").map(std::path::PathBuf::from),
         ..ServeOpts::default()
     };
     let max_sessions = opts.max_sessions;
@@ -369,12 +378,12 @@ fn cmd_serve(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
         });
     }
     let srv = Server::spawn_fleet(&addr, engines, opts)?;
-    eprintln!(
+    log::info(&format!(
         "serving on {} (stream={stream}, max_sessions={max_sessions}, \
          workers={workers}, routing={}, mode={layout}) — Ctrl-C to stop",
         srv.addr,
         routing.as_str(),
-    );
+    ));
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -432,7 +441,7 @@ fn cmd_train_predictor(app: &AppConfig, args: &Args) -> yggdrasil::Result<()> {
                     .map(|(hidden, accepted)| DepthSample { hidden, accepted }),
             );
         }
-        eprintln!("collected {} samples after {ds}", samples.len());
+        log::info(&format!("collected {} samples after {ds}", samples.len()));
     }
     anyhow::ensure!(samples.len() >= 32, "not enough samples ({})", samples.len());
     let dim = samples[0].hidden.len();
@@ -513,6 +522,13 @@ COMMON OPTIONS
                       budget instead of redistributing a round-wide
                       budget by online acceptance rate (serve)
   --global-alloc      re-enable the round allocator over a config file
+  --trace-ring N      per-worker flight-recorder capacity in events
+                      (serve; default 8192, 0 disables tracing)
+  --trace-out FILE    write the fleet's trace as Chrome trace-event JSON
+                      on shutdown — load it in Perfetto / chrome://tracing
+                      (serve)
+  --log-level LEVEL   stderr verbosity: error|warn|info|debug
+                      (default info)
   --exp EXP --quick --out-dir DIR   (figures)
 "
     );

@@ -11,9 +11,28 @@ use std::fmt::Write as _;
 use std::time::Instant;
 
 /// A named series of f64 samples (seconds, ratios, counts…).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Default)]
 pub struct Series {
     samples: Vec<f64>,
+    /// Retention bound set by [`Series::record_windowed`]; `None` means
+    /// the series keeps its full history. Combined on merge — see
+    /// [`Recorder::merge`].
+    window: Option<usize>,
+    /// Scratch for the percentile selection, reused across calls so
+    /// repeated percentile queries stop allocating once it has grown to
+    /// the series length.
+    scratch: std::sync::Mutex<Vec<f64>>,
+}
+
+impl Clone for Series {
+    fn clone(&self) -> Self {
+        // The scratch is a cache, not state: clones start cold.
+        Self {
+            samples: self.samples.clone(),
+            window: self.window,
+            scratch: std::sync::Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl Series {
@@ -25,13 +44,21 @@ impl Series {
     /// Records keeping only the most recent `window` samples — for
     /// indefinitely-running consumers (the serving stats) where an
     /// unbounded series would be a slow leak and percentile scans over
-    /// the full history would grow without bound.
+    /// the full history would grow without bound. The bound sticks to
+    /// the series (latest call wins) so merges can combine retention.
     pub fn record_windowed(&mut self, x: f64, window: usize) {
+        self.window = Some(window);
         self.samples.push(x);
         if self.samples.len() > window {
             let excess = self.samples.len() - window;
             self.samples.drain(..excess);
         }
+    }
+
+    /// The retention bound, if [`Series::record_windowed`] (or a merge
+    /// of windowed series) set one.
+    pub fn window(&self) -> Option<usize> {
+        self.window
     }
 
     /// Sample count.
@@ -58,14 +85,24 @@ impl Series {
     }
 
     /// Exact nearest-rank percentile, `p` in [0, 100] (NaN when empty).
+    ///
+    /// Selects the rank with `select_nth_unstable_by` over a reused
+    /// scratch buffer — O(n) per query instead of the previous
+    /// clone-and-full-sort O(n log n), and allocation-free once the
+    /// scratch has grown to the series length. The rank convention is
+    /// unchanged: index `round(p/100 · (n-1))` of the sorted samples.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        let n = self.samples.len();
+        if n == 0 {
             return f64::NAN;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        let idx = (((p / 100.0) * (n - 1) as f64).round() as usize).min(n - 1);
+        let mut scratch = self.scratch.lock().unwrap();
+        scratch.clear();
+        scratch.extend_from_slice(&self.samples);
+        let (_, nth, _) =
+            scratch.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+        *nth
     }
 
     /// Smallest sample (NaN when empty).
@@ -147,9 +184,27 @@ impl Recorder {
     }
 
     /// Concatenates every series of `other` onto this recorder.
+    ///
+    /// Pinned semantics (relied on by the fleet snapshot and the
+    /// Prometheus exposition): the merge **never drops samples** — a
+    /// pooled percentile must rank over every worker's observations,
+    /// even when the concatenation exceeds either side's window — and
+    /// windowed retention combines rather than clobbers:
+    ///
+    /// * a fresh (empty, unwindowed) destination adopts the source's
+    ///   window;
+    /// * two bounded series sum their windows, so the merged retention
+    ///   covers both sources' shares of the population;
+    /// * an unbounded participant on either side makes the result
+    ///   unbounded (its full history must survive future truncation).
     pub fn merge(&mut self, other: &Recorder) {
         for (k, v) in &other.series {
             let e = self.series.entry(k.clone()).or_default();
+            e.window = match (e.window, v.window) {
+                (None, w) if e.samples.is_empty() => w,
+                (Some(a), Some(b)) => Some(a + b),
+                _ => None,
+            };
             e.samples.extend_from_slice(&v.samples);
         }
     }
@@ -321,6 +376,65 @@ mod tests {
         // averaging per-recorder p95s (≈ 50.5) would not.
         assert_eq!(merged.percentile("itl", 95.0), 100.0);
         assert_eq!(merged.percentile("itl", 50.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_selection_matches_naive_clone_and_sort() {
+        // Regression pin for the select_nth_unstable rewrite: on a
+        // deterministic pseudo-random stream (an LCG — no RNG dep), the
+        // selected rank must equal what the old clone-and-full-sort
+        // implementation returned at every probed percentile.
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut s = Series::default();
+        let mut vals = Vec::new();
+        for _ in 0..257 {
+            state = state
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            let x = (state >> 11) as f64 / (1u64 << 53) as f64;
+            s.record(x);
+            vals.push(x);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+            let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+            assert_eq!(s.percentile(p), sorted[idx], "nearest-rank mismatch at p{p}");
+        }
+        // Repeated queries reuse the scratch and must agree.
+        assert_eq!(s.percentile(50.0), s.percentile(50.0));
+        // The samples themselves stay in record order (selection runs on
+        // the scratch, never on the series).
+        assert_eq!(s.samples(), vals.as_slice());
+    }
+
+    #[test]
+    fn merge_combines_windows_and_never_drops_samples() {
+        // Two workers each keep a 4-sample window of the same series;
+        // the fleet merge must pool *both* windows. A merged retention
+        // equal to one worker's window would silently discard the other
+        // worker's share of the percentile population.
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        for x in 0..10 {
+            a.record_windowed("itl", f64::from(x), 4);
+            b.record_windowed("itl", f64::from(100 + x), 4);
+        }
+        let mut fleet = Recorder::new();
+        fleet.merge(&a);
+        assert_eq!(fleet.get("itl").unwrap().window(), Some(4), "fresh dest adopts");
+        fleet.merge(&b);
+        let s = fleet.get("itl").unwrap();
+        assert_eq!(s.len(), 8, "both 4-sample windows survive the merge");
+        assert_eq!(s.window(), Some(8), "retention covers the sum of the parts");
+        assert_eq!(s.samples(), &[6.0, 7.0, 8.0, 9.0, 106.0, 107.0, 108.0, 109.0]);
+        // An unbounded participant makes the merged series unbounded —
+        // and still nothing is dropped.
+        let mut unbounded = Recorder::new();
+        unbounded.record("itl", 1.0);
+        fleet.merge(&unbounded);
+        assert_eq!(fleet.get("itl").unwrap().window(), None);
+        assert_eq!(fleet.count("itl"), 9);
     }
 
     #[test]

@@ -198,6 +198,54 @@ pub fn allocate_verify_budget(
     budgets
 }
 
+/// One round's grant vector rolled up for the observability layer
+/// (DESIGN.md §17): the serving scheduler mirrors each per-session grant
+/// as an `alloc_grant` trace instant and feeds this summary to the
+/// `ygg_alloc_budget_rows` gauge and the flight-recorder dump header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GrantSummary {
+    /// Sessions granted at least one verification row.
+    pub sessions: usize,
+    /// Total verification rows granted this round.
+    pub total: usize,
+    /// Smallest non-zero grant (0 when nothing was granted).
+    pub min: usize,
+    /// Largest grant.
+    pub max: usize,
+}
+
+impl GrantSummary {
+    /// Folds one session's grant in. Zero-row grants (sessions the
+    /// allocator skipped) are ignored — they would poison the min — and
+    /// the scheduler loop calls this per live session precisely so the
+    /// summary needs no intermediate `Vec` on the steady path.
+    pub fn add(&mut self, rows: usize) {
+        if rows == 0 {
+            return;
+        }
+        self.sessions += 1;
+        self.total += rows;
+        self.min = if self.min == 0 { rows } else { self.min.min(rows) };
+        self.max = self.max.max(rows);
+    }
+
+    /// True when no session received a grant this round.
+    pub fn is_empty(&self) -> bool {
+        self.sessions == 0
+    }
+}
+
+/// Rolls one round's per-session budgets up into a [`GrantSummary`].
+/// A wide `max - min` spread under a near-uniform acceptance profile is
+/// the telemetry smell that the greedy is starving someone.
+pub fn summarize_grants(budgets: &[usize]) -> GrantSummary {
+    let mut s = GrantSummary::default();
+    for &b in budgets {
+        s.add(b);
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +312,14 @@ mod tests {
         let free: usize = allocate_verify_budget(&ds, 128, 1000, None).iter().sum();
         assert!(spent <= free, "pricing can only trim the spend");
         assert!(spent < 128, "a steep curve must leave budget unspent");
+    }
+
+    #[test]
+    fn grant_summary_skips_zero_rows_and_tracks_the_spread() {
+        assert_eq!(summarize_grants(&[]), GrantSummary::default());
+        assert_eq!(summarize_grants(&[0, 0]), GrantSummary::default());
+        let s = summarize_grants(&[4, 0, 1, 8]);
+        assert_eq!(s, GrantSummary { sessions: 3, total: 13, min: 1, max: 8 });
     }
 
     #[test]

@@ -125,6 +125,14 @@ pub struct ServeOpts {
     /// Prompt-chunk size (tokens) for the affinity router's prefix
     /// fingerprints; normally the prefix cache's block size.
     pub affinity_chunk: usize,
+    /// Capacity (events) of each worker's flight-recorder ring
+    /// (`--trace-ring`, DESIGN.md §17). `0` disables tracing entirely —
+    /// every [`crate::trace::Tracer::push`] becomes a no-op.
+    pub trace_ring: usize,
+    /// Write a Chrome trace-event JSON file (Perfetto/`chrome://tracing`
+    /// loadable) of every worker's flight-recorder contents on server
+    /// shutdown (`--trace-out`, DESIGN.md §17).
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeOpts {
@@ -140,6 +148,8 @@ impl Default for ServeOpts {
             routing: RoutingPolicy::Affinity,
             steal_threshold: 4,
             affinity_chunk: 16,
+            trace_ring: crate::trace::DEFAULT_RING,
+            trace_out: None,
         }
     }
 }
@@ -433,6 +443,9 @@ pub struct Server {
     /// Placement/rebalance/aggregation hub owning the worker fleet.
     pub router: Arc<Router>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Where to dump the fleet's Chrome trace on shutdown (DESIGN.md
+    /// §17); `None` skips the export.
+    trace_out: Option<std::path::PathBuf>,
 }
 
 impl Server {
@@ -497,7 +510,14 @@ impl Server {
             },
         )?;
 
-        Ok(Self { addr: local, stop, stats, router, accept_thread: Some(accept_thread) })
+        Ok(Self {
+            addr: local,
+            stop,
+            stats,
+            router,
+            accept_thread: Some(accept_thread),
+            trace_out: opts.trace_out,
+        })
     }
 }
 
@@ -510,6 +530,26 @@ impl Drop for Server {
             let _ = t.join();
         }
         self.router.shutdown();
+        // Workers are joined: their rings are quiescent, so the Chrome
+        // trace export (DESIGN.md §17) sees every recorded event.
+        if let Some(path) = &self.trace_out {
+            let mut events = Vec::new();
+            for w in self.router.workers() {
+                events.extend(w.tracer.events());
+            }
+            let json = crate::trace::chrome_trace(&events).to_string();
+            match std::fs::write(path, json) {
+                Ok(()) => crate::util::log::info(&format!(
+                    "wrote Chrome trace ({} events) to {}",
+                    events.len(),
+                    path.display()
+                )),
+                Err(e) => crate::util::log::error(&format!(
+                    "failed to write Chrome trace to {}: {e}",
+                    path.display()
+                )),
+            }
+        }
     }
 }
 
@@ -568,6 +608,9 @@ fn handle_conn(
             Ok(Req::Stats) => {
                 let _ = ev_tx.send(ServerEvent::Stats(router.fleet_snapshot()));
             }
+            Ok(Req::Metrics) => {
+                let _ = ev_tx.send(ServerEvent::Metrics(router.metrics_text()));
+            }
             Ok(Req::Generate { id, prompt, max_new, class }) => {
                 let job = Job::new(
                     id,
@@ -599,12 +642,16 @@ fn handle_conn(
 enum Req {
     Generate { id: u64, prompt: Vec<u32>, max_new: usize, class: Option<SloClass> },
     Stats,
+    Metrics,
 }
 
 fn parse_request(line: &str) -> crate::Result<Req> {
     let j = Json::parse(line)?;
     if j.get("stats").is_some() {
         return Ok(Req::Stats);
+    }
+    if j.get("metrics").is_some() {
+        return Ok(Req::Metrics);
     }
     // Ids are u64 end-to-end; a fractional/negative/garbage id is a hard
     // error rather than a silent 0 (which would break client-side demux).
@@ -768,6 +815,21 @@ impl Client {
             let j = Json::parse(&line)?;
             if j.get("event").and_then(|v| v.as_str()) == Some("stats") {
                 return Ok(j);
+            }
+        }
+    }
+
+    /// Fetches the fleet's Prometheus text exposition (the body of a
+    /// `{"metrics": true}` reply; DESIGN.md §17).
+    pub fn metrics(&mut self) -> crate::Result<String> {
+        writeln!(self.writer, "{}", r#"{"metrics": true}"#)?;
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed connection");
+            let j = Json::parse(&line)?;
+            if j.get("event").and_then(|v| v.as_str()) == Some("metrics") {
+                return Ok(j.str("body")?.to_string());
             }
         }
     }
@@ -991,6 +1053,10 @@ pub struct MockStepEngine {
     equal_part: Option<Arc<Mutex<crate::kvcache::SlotPartition>>>,
     prefix: Option<Arc<Mutex<crate::kvcache::PrefixCache>>>,
     alloc: Option<MockAllocModel>,
+    /// The owning worker's flight recorder (DESIGN.md §17): batched
+    /// rounds wrap their simulated draft/verify sleeps in stage spans so
+    /// mock serving traces have the same shape as the real decoder's.
+    tracer: Option<Arc<crate::trace::Tracer>>,
 }
 
 /// The [`MockStepEngine`]'s simulated round-allocator regime
@@ -1039,6 +1105,7 @@ impl MockStepEngine {
             equal_part: None,
             prefix: None,
             alloc: None,
+            tracer: None,
         }
     }
 
@@ -1597,13 +1664,25 @@ impl StepEngine for MockStepEngine {
             }
         }
         if live > 0 {
-            std::thread::sleep(self.step_delay);
+            let tr = self.tracer.as_deref();
+            // Stage order mirrors the real round (DESIGN.md §11): the
+            // draft stage precedes the packed verify. Spans use uid 0 —
+            // they cover the whole batch, not one request.
             if !self.draft_delay.is_zero() {
+                let sp = tr.map(|t| t.begin(crate::trace::Name::TreeDraft, 0));
                 let rides = if self.batch_draft { 1 } else { live as u32 };
                 std::thread::sleep(self.draft_delay * rides);
+                if let (Some(t), Some(sp)) = (tr, sp) {
+                    t.end(crate::trace::Name::TreeDraft, 0, sp);
+                }
             }
+            let sp = tr.map(|t| t.begin(crate::trace::Name::Verify, 0));
+            std::thread::sleep(self.step_delay);
             if let Some(model) = self.alloc.filter(|_| alloc_rows > 0) {
                 std::thread::sleep(model.row_cost * alloc_rows as u32);
+            }
+            if let (Some(t), Some(sp)) = (tr, sp) {
+                t.end(crate::trace::Name::Verify, 0, sp);
             }
         }
         let outs: Vec<crate::Result<StepOutcome>> = tasks
@@ -1625,6 +1704,10 @@ impl StepEngine for MockStepEngine {
     fn set_degradation(&mut self, rung: u8) {
         self.degrade.store(rung, Ordering::Relaxed);
         self.rungs_seen.lock().unwrap().push(rung);
+    }
+
+    fn set_tracer(&mut self, tracer: Arc<crate::trace::Tracer>) {
+        self.tracer = Some(tracer);
     }
 
     fn cache_occupancy(&self) -> Option<(u64, u64)> {
@@ -1772,6 +1855,20 @@ mod tests {
         assert_eq!(s.u64("tokens").unwrap(), 6);
         assert_eq!(s.u64("cancelled").unwrap(), 0);
         assert!(s.f64("queue_delay_ms_mean").unwrap() >= 0.0);
+    }
+
+    /// Satellite: the `{"metrics": true}` reply's body must parse as
+    /// valid Prometheus text exposition (DESIGN.md §17).
+    #[test]
+    fn metrics_request_returns_valid_prometheus_text() {
+        let srv = Server::spawn("127.0.0.1:0", Box::new(EchoEngine), opts(false)).unwrap();
+        let mut c = Client::connect(&srv.addr).unwrap();
+        let _ = c.generate(1, &[4, 5], 6).unwrap();
+        let body = c.metrics().unwrap();
+        crate::trace::validate_prometheus(&body).unwrap();
+        assert!(body.contains(r#"ygg_requests_total{worker="fleet"} 1"#), "{body}");
+        assert!(body.contains(r#"ygg_tokens_total{worker="0"} 6"#));
+        assert!(body.contains("# TYPE ygg_queue_delay_seconds histogram"));
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::kvcache::{chunk_hashes, token_hash};
+use crate::trace::{prom_header, prom_histogram, prom_sample, Name};
 use crate::util::json::Json;
 
 use super::worker::EngineWorker;
@@ -339,7 +340,14 @@ impl Router {
         let uid = self.mint_uid(p.worker);
         job.uid = uid;
         job = match self.workers[p.worker].queue().try_push(job) {
-            Ok(()) => return Ok(Ticket { worker: p.worker, uid }),
+            Ok(()) => {
+                // Placement event into the *target* worker's ring
+                // (DESIGN.md §17): arg 1 = affinity hit, 0 = fallback.
+                self.workers[p.worker]
+                    .tracer
+                    .instant(Name::Place, uid, i64::from(p.affinity));
+                return Ok(Ticket { worker: p.worker, uid });
+            }
             Err(j) => j,
         };
         // Spill: lightest other workers first, deterministic on ties.
@@ -350,7 +358,10 @@ impl Router {
             let uid = self.mint_uid(w);
             job.uid = uid;
             job = match self.workers[w].queue().try_push(job) {
-                Ok(()) => return Ok(Ticket { worker: w, uid }),
+                Ok(()) => {
+                    self.workers[w].tracer.instant(Name::Place, uid, 0);
+                    return Ok(Ticket { worker: w, uid });
+                }
                 Err(j) => j,
             };
         }
@@ -384,10 +395,14 @@ impl Router {
             // (The stolen job keeps its minted uid — uniqueness, not the
             // namespace, is the contract.)
             self.placer.lock().unwrap().note(dst, &job.prompt);
+            let uid = job.uid;
             match self.workers[dst].queue().try_push(job) {
                 Ok(()) => {
                     moved += 1;
                     self.steals.fetch_add(1, Ordering::Relaxed);
+                    // Migration event into the *destination* worker's
+                    // ring; arg = the source worker it was stolen from.
+                    self.workers[dst].tracer.instant(Name::Steal, uid, src as i64);
                 }
                 Err(job) => {
                     // Destination refused (filled up / closing): put the
@@ -421,6 +436,127 @@ impl Router {
             fallback_placements: self.fallback_placements.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
         }
+    }
+
+    /// Renders the fleet's statistics in Prometheus text exposition
+    /// format (DESIGN.md §17): every [`ServerStats`] counter and gauge as
+    /// per-worker samples plus a `worker="fleet"` aggregate, the routing
+    /// counters, and latency histograms bucketed
+    /// ([`crate::trace::LATENCY_BUCKETS_S`]) from each worker's windowed
+    /// recorder series. The output passes
+    /// [`crate::trace::validate_prometheus`] by construction (pinned by a
+    /// unit test in the server module).
+    pub fn metrics_text(&self) -> String {
+        let snap = self.fleet_snapshot();
+        // One row per metric: (name, type, help, value-extractor). The
+        // same extractor runs on the merged snapshot and on every
+        // per-worker snapshot, so the fleet and worker samples can never
+        // drift apart.
+        type Row = (&'static str, &'static str, &'static str, fn(&StatsSnapshot) -> f64);
+        const ROWS: &[Row] = &[
+            ("ygg_requests_total", "counter",
+             "Requests dequeued (admitted or rejected).", |s| s.requests as f64),
+            ("ygg_tokens_total", "counter",
+             "Tokens committed across completed generations.", |s| s.tokens as f64),
+            ("ygg_errors_total", "counter",
+             "Request-level failures.", |s| s.errors as f64),
+            ("ygg_cancelled_total", "counter",
+             "Sessions dropped on client disconnect.", |s| s.cancelled as f64),
+            ("ygg_rejected_total", "counter",
+             "Requests refused by KV-headroom admission control.", |s| s.rejected as f64),
+            ("ygg_preemptions_total", "counter",
+             "Sessions preempted under paged pool exhaustion.", |s| s.preemptions as f64),
+            ("ygg_resumes_total", "counter",
+             "Preempted sessions successfully re-admitted.", |s| s.resumes as f64),
+            ("ygg_active_sessions", "gauge",
+             "Live sessions after the last scheduling round.", |s| s.active_sessions as f64),
+            ("ygg_peak_sessions", "gauge",
+             "High-water mark of concurrently admitted sessions.", |s| s.peak_sessions as f64),
+            ("ygg_kv_slots_in_use", "gauge",
+             "KV slots held across live sessions.", |s| s.kv_slots_in_use as f64),
+            ("ygg_blocks_in_use", "gauge",
+             "Shared-pool blocks currently leased.", |s| s.blocks_in_use as f64),
+            ("ygg_blocks_total", "gauge",
+             "Total shared-pool blocks (paged layout only).", |s| s.blocks_total as f64),
+            ("ygg_prefix_lookups_total", "counter",
+             "Prefix-cache lookups.", |s| s.prefix_lookups as f64),
+            ("ygg_prefix_hits_total", "counter",
+             "Prefix-cache lookups that matched a cached block.", |s| s.prefix_hits as f64),
+            ("ygg_prefix_tokens_reused_total", "counter",
+             "Prompt tokens served from the prefix cache.", |s| s.prefix_tokens_reused as f64),
+            ("ygg_prefix_evictions_total", "counter",
+             "Cached blocks reclaimed by LRU eviction.", |s| s.prefix_evictions as f64),
+            ("ygg_prefix_cached_blocks", "gauge",
+             "Blocks currently held by the prefix trie.", |s| s.prefix_cached_blocks as f64),
+            ("ygg_prefill_chunks_total", "counter",
+             "Prefill chunks stepped under chunked prefill.", |s| s.prefill_chunks as f64),
+            ("ygg_degraded_rounds_total", "counter",
+             "Scheduling rounds run under a non-zero degradation rung.",
+             |s| s.degraded_rounds as f64),
+            ("ygg_slo_violations_total", "counter",
+             "Latency-class inter-token gaps beyond the SLO target.",
+             |s| s.slo_violations as f64),
+            ("ygg_degrade_rung", "gauge",
+             "Current overload-degradation rung (0 = no pressure).", |s| s.degrade_rung as f64),
+            ("ygg_alloc_budget_rows", "gauge",
+             "Verify rows the round allocator granted in the last batched round.",
+             |s| s.alloc_budget_total as f64),
+            ("ygg_alloc_rounds_total", "counter",
+             "Rounds the global allocator resolved budgets for.", |s| s.alloc_rounds as f64),
+        ];
+        let mut out = String::with_capacity(1 << 14);
+        for &(name, kind, help, get) in ROWS {
+            prom_header(&mut out, name, kind, help);
+            for (w, ws) in snap.workers.iter().enumerate() {
+                let wl = w.to_string();
+                prom_sample(&mut out, name, &[("worker", &wl)], get(ws));
+            }
+            prom_sample(&mut out, name, &[("worker", "fleet")], get(&snap.merged));
+        }
+        // Routing counters (fleet-level by nature: the router owns them).
+        for (name, help, v) in [
+            ("ygg_affinity_hits_total",
+             "Placements that matched a worker's prefix summary.", snap.affinity_hits),
+            ("ygg_fallback_placements_total",
+             "Affinity placements that fell back to least-loaded.", snap.fallback_placements),
+            ("ygg_steals_total",
+             "Jobs migrated by work-stealing rebalance.", snap.steals),
+        ] {
+            prom_header(&mut out, name, "counter", help);
+            prom_sample(&mut out, name, &[], v as f64);
+        }
+        // Latency histograms from the windowed per-request series: the
+        // fleet variant buckets the *concatenated* per-worker samples,
+        // the same pooled-not-averaged discipline as the merged
+        // percentiles (windowed, so recent traffic — not all history).
+        for (name, series, help) in [
+            ("ygg_ttft_seconds", "server.ttft_s",
+             "Enqueue to first committed token, seconds."),
+            ("ygg_itl_latency_seconds", "server.itl_s.latency",
+             "Latency-class inter-token latency, seconds."),
+            ("ygg_itl_throughput_seconds", "server.itl_s.throughput",
+             "Throughput-class inter-token latency, seconds."),
+            ("ygg_queue_delay_seconds", "server.queue_delay_s",
+             "Queueing delay before admission, seconds."),
+        ] {
+            prom_header(&mut out, name, "histogram", help);
+            let mut fleet: Vec<f64> = Vec::new();
+            for (w, worker) in self.workers.iter().enumerate() {
+                let samples: Vec<f64> = worker
+                    .stats
+                    .recorder
+                    .lock()
+                    .unwrap()
+                    .get(series)
+                    .map(|s| s.samples().to_vec())
+                    .unwrap_or_default();
+                let wl = w.to_string();
+                prom_histogram(&mut out, name, &[("worker", &wl)], &samples);
+                fleet.extend_from_slice(&samples);
+            }
+            prom_histogram(&mut out, name, &[("worker", "fleet")], &fleet);
+        }
+        out
     }
 
     /// Stops and joins every worker (idempotent).
@@ -577,6 +713,34 @@ mod tests {
         // Direct namespace check: same sequence number, different
         // workers, still distinct.
         assert_ne!(router.mint_uid(0), router.mint_uid(1));
+        router.shutdown();
+    }
+
+    /// The wire `{"metrics": true}` body is rendered here: it must be
+    /// parseable Prometheus text exposition with per-worker and fleet
+    /// label variants for every metric family.
+    #[test]
+    fn metrics_text_is_valid_prometheus_with_worker_and_fleet_labels() {
+        let opts = ServeOpts { max_queue: 8, ..ServeOpts::default() };
+        let router = echo_router(2, &opts);
+        let (job, rx) = test_job(1, vec![8, 9]);
+        router.workers()[0].queue().try_push(job).ok().unwrap();
+        loop {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                ServerEvent::Done { .. } => break,
+                ServerEvent::Error { message, .. } => panic!("error: {message}"),
+                _ => {}
+            }
+        }
+        let text = router.metrics_text();
+        crate::trace::validate_prometheus(&text).unwrap();
+        assert!(text.contains(r#"ygg_requests_total{worker="0"} 1"#), "{text}");
+        assert!(text.contains(r#"ygg_requests_total{worker="1"} 0"#));
+        assert!(text.contains(r#"ygg_requests_total{worker="fleet"} 1"#));
+        assert!(text.contains("# TYPE ygg_ttft_seconds histogram"));
+        assert!(text.contains(r#"le="+Inf""#));
+        assert!(text.contains("ygg_ttft_seconds_count"));
+        assert!(text.contains("ygg_steals_total 0"));
         router.shutdown();
     }
 

@@ -64,7 +64,9 @@ use std::time::{Duration, Instant};
 use crate::engine::{DecodeTask, StepEngine, StepOutcome, TaskState};
 use crate::kvcache::PoolExhausted;
 use crate::scheduler::DegradationLadder;
+use crate::trace::{self, Name, Tracer};
 use crate::util::json::Json;
+use crate::util::log;
 
 use super::{CancelFlag, FleetSnapshot, ServeOpts, ServerStats, SloClass};
 
@@ -119,6 +121,10 @@ pub enum ServerEvent {
     /// Reply to a `{"stats": true}` request (produced connection-side;
     /// fleet-wide, DESIGN.md §16).
     Stats(FleetSnapshot),
+    /// Reply to a `{"metrics": true}` request: the fleet's counters,
+    /// gauges, and latency histograms rendered in Prometheus text
+    /// exposition format (DESIGN.md §17; produced connection-side).
+    Metrics(String),
 }
 
 impl ServerEvent {
@@ -157,6 +163,10 @@ impl ServerEvent {
                 Json::obj(fields)
             }
             ServerEvent::Stats(s) => s.to_json(),
+            ServerEvent::Metrics(body) => Json::obj(vec![
+                ("event", Json::Str("metrics".into())),
+                ("body", Json::Str(body.clone())),
+            ]),
         }
     }
 }
@@ -208,6 +218,11 @@ pub struct Job {
     /// Enqueue → *first* admission, in seconds (set once; re-admissions
     /// after a preemption must not inflate the queueing-delay metric).
     pub queue_s: Option<f64>,
+    /// Flight-recorder span id of this request's `request` span
+    /// (DESIGN.md §17), opened at first admission and closed at
+    /// completion/error/disconnect. Survives preemption so the span
+    /// covers the whole admit→done lifetime. Zero until admitted.
+    pub trace_span: u32,
 }
 
 impl Job {
@@ -238,6 +253,7 @@ impl Job {
             last_token: None,
             active_s: 0.0,
             queue_s: None,
+            trace_span: 0,
         }
     }
 }
@@ -262,6 +278,7 @@ pub(super) fn run_worker(
     engine: Box<dyn StepEngine + Send>,
     queue: Arc<super::worker::JobQueue>,
     stats: Arc<ServerStats>,
+    tracer: Arc<Tracer>,
     stop: CancelFlag,
     opts: ServeOpts,
 ) {
@@ -275,6 +292,9 @@ pub(super) fn run_worker(
     // Overload-degradation state (DESIGN.md §14): escalates one rung per
     // pool-exhausted round, relaxes after a clean streak.
     let mut ladder = DegradationLadder::new();
+    // Scheduling-round counter: stamps every trace event of a round and
+    // wraps each round in exactly one `round` span (DESIGN.md §17).
+    let mut round_no: u64 = 0;
     while !stop.load(Ordering::Relaxed) {
         resume_backoff = resume_backoff.saturating_sub(1);
         // Admission: fill free session slots — resumes first, then queue.
@@ -291,11 +311,11 @@ pub(super) fn run_worker(
                 // re-probes every few rounds (each probe costs a begin()).
                 break;
             };
-            if let Some(parked) = admit(&mut engine, job, &mut live, &stats, fresh) {
+            if let Some(parked) = admit(&mut engine, job, &mut live, &stats, &tracer, fresh) {
                 if live.is_empty() {
                     // Nothing live holds pool blocks, so headroom will
                     // never improve: the resumed request is unservable.
-                    reject_unadmittable(parked, &stats);
+                    reject_unadmittable(parked, &stats, &tracer);
                 } else {
                     resume.push_front(parked);
                     resume_backoff = RESUME_RETRY_ROUNDS;
@@ -310,14 +330,18 @@ pub(super) fn run_worker(
             // Idle: block for work (bounded, so `stop` stays responsive).
             match queue.pop_timeout(Duration::from_millis(20)) {
                 super::worker::Pop::Job(job) => {
-                    let _ = admit(&mut engine, job, &mut live, &stats, true);
+                    let _ = admit(&mut engine, job, &mut live, &stats, &tracer, true);
                 }
                 super::worker::Pop::Timeout => {}
                 super::worker::Pop::Closed => break,
             }
             continue;
         }
-        round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+        round_no += 1;
+        tracer.set_round(round_no);
+        let round_span = tracer.begin(Name::Round, 0);
+        round(&mut engine, &mut live, &mut resume, &stats, &tracer, &opts, &mut ladder);
+        tracer.end(Name::Round, 0, round_span);
         let kv: usize = live.iter().map(|s| s.task.kv_slots_in_use()).sum();
         stats.active_sessions.store(live.len() as u64, Ordering::Relaxed);
         stats.kv_slots_in_use.store(kv as u64, Ordering::Relaxed);
@@ -332,11 +356,13 @@ pub(super) fn run_worker(
             stats.prefix_evictions.store(ps.evictions, Ordering::Relaxed);
             stats.prefix_cached_blocks.store(ps.cached_blocks, Ordering::Relaxed);
         }
-        // Allocator observability (DESIGN.md §15): mirror each session's
-        // online acceptance estimate into the `accept_rate` percentile
-        // series and sum the round's granted verification rows.
-        let mut granted: u64 = 0;
-        let mut any_grant = false;
+        // Allocator observability (DESIGN.md §15, §17): mirror each
+        // session's online acceptance estimate into the `accept_rate`
+        // percentile series, each grant into an `alloc_grant` trace
+        // instant, and the round's rollup into the budget gauge. The
+        // summary is folded per session — no intermediate Vec — to keep
+        // the steady round loop allocation-free.
+        let mut grants = crate::scheduler::alloc::GrantSummary::default();
         {
             let mut rec = stats.recorder.lock().unwrap();
             for s in live.iter() {
@@ -344,13 +370,13 @@ pub(super) fn run_worker(
                     rec.record_windowed("server.accept_rate", r, STATS_WINDOW);
                 }
                 if let Some(b) = s.task.allocated_budget() {
-                    granted += b as u64;
-                    any_grant = true;
+                    grants.add(b);
+                    tracer.instant(Name::AllocGrant, s.job.uid, b as i64);
                 }
             }
         }
-        if any_grant {
-            stats.alloc_budget_total.store(granted, Ordering::Relaxed);
+        if !grants.is_empty() {
+            stats.alloc_budget_total.store(grants.total as u64, Ordering::Relaxed);
             stats.alloc_rounds.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -374,6 +400,7 @@ fn admit(
     job: Job,
     live: &mut Vec<ServeSession>,
     stats: &ServerStats,
+    tracer: &Tracer,
     fresh: bool,
 ) -> Option<Job> {
     if fresh {
@@ -382,6 +409,10 @@ fn admit(
     if job.cancelled.load(Ordering::Relaxed) {
         // Client vanished while the job sat in the queue.
         stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        tracer.instant(Name::Disconnect, job.uid, 0);
+        if job.trace_span != 0 {
+            tracer.end(Name::Request, job.uid, job.trace_span);
+        }
         return None;
     }
     let remaining = job.max_new.saturating_sub(job.resumed.len());
@@ -411,6 +442,7 @@ fn admit(
                     return Some(job); // park until blocks free up
                 }
                 stats.rejected.fetch_add(1, Ordering::Relaxed);
+                tracer.instant(Name::Reject, job.uid, task.headroom() as i64);
                 let message = format!(
                     "insufficient KV headroom for a {}-token prompt (headroom {})",
                     job.prompt.len(),
@@ -443,11 +475,27 @@ fn admit(
                     }
                 }
                 drop(rec);
+                if fresh {
+                    // The request span covers admit → done across any
+                    // preemptions; the prefix-attach instant records the
+                    // prompt tokens served from the radix trie.
+                    job.trace_span = tracer.begin(Name::Request, job.uid);
+                    tracer.instant(Name::Admit, job.uid, job.prompt.len() as i64);
+                    let reused = job.prompt.len().saturating_sub(need);
+                    if reused > 0 {
+                        tracer.instant(Name::PrefixAttach, job.uid, reused as i64);
+                    }
+                } else {
+                    tracer.instant(Name::Resume, job.uid, job.preempts as i64);
+                }
                 live.push(ServeSession { job, task, admitted: Instant::now() });
             }
         }
         Err(e) => {
             stats.errors.fetch_add(1, Ordering::Relaxed);
+            if job.trace_span != 0 {
+                tracer.end(Name::Request, job.uid, job.trace_span);
+            }
             let _ = job
                 .reply
                 .send(ServerEvent::Error { id: Some(job.id), message: format!("{e:#}") });
@@ -467,8 +515,12 @@ fn projected_demand(s: &ServeSession) -> usize {
 
 /// Terminal rejection of a resumed job that can never be re-admitted
 /// (empty pool still short of its prompt, or resume budget exceeded).
-fn reject_unadmittable(job: Job, stats: &ServerStats) {
+fn reject_unadmittable(job: Job, stats: &ServerStats, tracer: &Tracer) {
     stats.errors.fetch_add(1, Ordering::Relaxed);
+    tracer.instant(Name::Reject, job.uid, 0);
+    if job.trace_span != 0 {
+        tracer.end(Name::Request, job.uid, job.trace_span);
+    }
     let message = format!(
         "preempted request cannot resume: {}-token context exceeds the pool \
          (after {} preemptions)",
@@ -489,7 +541,7 @@ fn is_pool_exhausted(e: &anyhow::Error) -> bool {
 /// block returns to the shared pool immediately), fold the generated
 /// prefix into the saved prompt, and requeue the job for a re-prefill
 /// resume (DESIGN.md §10).
-fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats) {
+fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats, tracer: &Tracer) {
     let ServeSession { mut job, task, admitted } = s;
     let g = task.finish(); // consumes the task: blocks are freed here
     stats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
@@ -499,7 +551,32 @@ fn preempt(s: ServeSession, resume: &mut VecDeque<Job>, stats: &ServerStats) {
     job.preempts += 1;
     job.preempted_at = Some(Instant::now());
     stats.preemptions.fetch_add(1, Ordering::Relaxed);
+    tracer.instant(Name::Preempt, job.uid, job.preempts as i64);
+    dump_recent_window(tracer, "preemption", job.uid);
     resume.push_back(job);
+}
+
+/// Post-mortem aid (DESIGN.md §17): on degradation escalation or
+/// preemption, render the flight recorder's last-[`trace::DUMP_ROUNDS`]
+/// rounds to the log stream at Warn — the decisions leading up to the
+/// event survive without reproduction. Allocates; never on the clean
+/// round path.
+fn dump_recent_window(tracer: &Tracer, why: &str, uid: u64) {
+    if !log::enabled(log::Level::Warn) {
+        return;
+    }
+    let w = tracer.window(trace::DUMP_ROUNDS);
+    log::log(
+        log::Level::Warn,
+        Some(tracer.worker()),
+        Some(uid),
+        &format!(
+            "{why}: flight-recorder dump of the last {} rounds ({} events)\n{}",
+            trace::DUMP_ROUNDS,
+            w.len(),
+            trace::format_window(&w)
+        ),
+    );
 }
 
 /// One scheduling round over the live set, removing sessions as they
@@ -531,6 +608,7 @@ fn round(
     live: &mut Vec<ServeSession>,
     resume: &mut VecDeque<Job>,
     stats: &ServerStats,
+    tracer: &Tracer,
     opts: &ServeOpts,
     ladder: &mut DegradationLadder,
 ) {
@@ -539,7 +617,12 @@ fn round(
     let mut i = 0;
     while i < live.len() {
         if live[i].job.cancelled.load(Ordering::Relaxed) {
-            drop(live.remove(i)); // frees the task's KV caches now
+            let s = live.remove(i);
+            tracer.instant(Name::Disconnect, s.job.uid, 0);
+            if s.job.trace_span != 0 {
+                tracer.end(Name::Request, s.job.uid, s.job.trace_span);
+            }
+            drop(s); // frees the task's KV caches now
             stats.cancelled.fetch_add(1, Ordering::Relaxed);
         } else {
             i += 1;
@@ -594,6 +677,8 @@ fn round(
                     // The cold session advanced one unit of prefill work
                     // (a chunk, or the whole prompt when unchunked).
                     stats.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+                    let left = live[i].task.uncached_prompt_len().unwrap_or(0);
+                    tracer.instant(Name::PrefillChunk, live[i].job.uid, left as i64);
                 }
                 let done = out.done();
                 if !out.tokens.is_empty() {
@@ -630,7 +715,12 @@ fn round(
                         let ev = ServerEvent::Tokens { id: s.job.id, tokens: out.tokens };
                         if s.job.reply.send(ev).is_err() {
                             // Connection dropped between rounds.
-                            drop(live.remove(i));
+                            let s = live.remove(i);
+                            tracer.instant(Name::Disconnect, s.job.uid, 0);
+                            if s.job.trace_span != 0 {
+                                tracer.end(Name::Request, s.job.uid, s.job.trace_span);
+                            }
+                            drop(s);
                             stats.cancelled.fetch_add(1, Ordering::Relaxed);
                             continue;
                         }
@@ -638,7 +728,7 @@ fn round(
                 }
                 if done {
                     let s = live.remove(i);
-                    finish_session(s, stats);
+                    finish_session(s, stats, tracer);
                 }
             }
             Err(e) => {
@@ -655,6 +745,8 @@ fn round(
                         let rung = ladder.escalate();
                         engine.set_degradation(rung);
                         stats.degraded_rounds.fetch_add(1, Ordering::Relaxed);
+                        tracer.instant(Name::RungChange, live[i].job.uid, rung as i64);
+                        dump_recent_window(tracer, "degradation escalation", live[i].job.uid);
                     }
                     if live[i].task.retryable() && !ladder.at_preempt() {
                         continue;
@@ -668,12 +760,15 @@ fn round(
                         && live[i].job.preempts < opts.max_resumes
                     {
                         let s = live.remove(i);
-                        preempt(s, resume, stats);
+                        preempt(s, resume, stats, tracer);
                         continue;
                     }
                 }
                 let s = live.remove(i);
                 stats.errors.fetch_add(1, Ordering::Relaxed);
+                if s.job.trace_span != 0 {
+                    tracer.end(Name::Request, s.job.uid, s.job.trace_span);
+                }
                 // A request that already survived preemptions dies here
                 // because its resume budget (or sole tenancy) ran out —
                 // surface that as the typed terminal-resume error instead
@@ -692,6 +787,7 @@ fn round(
     }
     if !exhausted_this_round && ladder.relax() {
         engine.set_degradation(ladder.rung());
+        tracer.instant(Name::RungChange, 0, ladder.rung() as i64);
     }
     stats.degrade_rung.store(ladder.rung() as u64, Ordering::Relaxed);
 }
@@ -699,7 +795,7 @@ fn round(
 /// Completes a session: final metrics + the typed `done` event. Tokens
 /// generated before any preemption are prepended so the summary always
 /// carries the full sequence.
-fn finish_session(s: ServeSession, stats: &ServerStats) {
+fn finish_session(s: ServeSession, stats: &ServerStats, tracer: &Tracer) {
     let ServeSession { job, task, admitted } = s;
     let g = task.finish();
     stats.tokens.fetch_add(g.tokens.len() as u64, Ordering::Relaxed);
@@ -735,6 +831,10 @@ fn finish_session(s: ServeSession, stats: &ServerStats) {
         preemptions: job.preempts,
         tokens,
     };
+    tracer.instant(Name::Done, job.uid, summary.tokens.len() as i64);
+    if job.trace_span != 0 {
+        tracer.end(Name::Request, job.uid, job.trace_span);
+    }
     let _ = job.reply.send(ServerEvent::Done { id: job.id, summary });
 }
 
@@ -771,15 +871,16 @@ mod tests {
         let mut live: Vec<ServeSession> = Vec::new();
         let mut resume: VecDeque<Job> = VecDeque::new();
         let mut ladder = DegradationLadder::new();
+        let tracer = Tracer::new(0, 256);
         let mut rxs = Vec::new();
         for id in 0..2u64 {
             let (job, rx) = test_job(id, vec![100 * (id as u32 + 1); 5], 8, SloClass::Latency);
             rxs.push(rx);
-            assert!(admit(&mut engine, job, &mut live, &stats, true).is_none());
+            assert!(admit(&mut engine, job, &mut live, &stats, &tracer, true).is_none());
         }
         assert_eq!(live.len(), 2, "both sessions admitted");
         for _ in 0..24 {
-            round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+            round(&mut engine, &mut live, &mut resume, &stats, &tracer, &opts, &mut ladder);
             let preempted = stats.preemptions.load(Ordering::Relaxed);
             if !rungs.lock().unwrap().contains(&crate::scheduler::RUNG_PREEMPT) {
                 assert_eq!(preempted, 0, "preempted before the ladder's top rung");
@@ -816,11 +917,12 @@ mod tests {
         let mut live: Vec<ServeSession> = Vec::new();
         let mut resume: VecDeque<Job> = VecDeque::new();
         let mut ladder = DegradationLadder::new();
+        let tracer = Tracer::new(0, 256);
         let (tp, _rx0) = test_job(0, vec![10; 9], 4, SloClass::Throughput);
         let (lat, _rx1) = test_job(1, vec![20; 9], 4, SloClass::Latency);
-        assert!(admit(&mut engine, tp, &mut live, &stats, true).is_none());
-        assert!(admit(&mut engine, lat, &mut live, &stats, true).is_none());
-        round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+        assert!(admit(&mut engine, tp, &mut live, &stats, &tracer, true).is_none());
+        assert!(admit(&mut engine, lat, &mut live, &stats, &tracer, true).is_none());
+        round(&mut engine, &mut live, &mut resume, &stats, &tracer, &opts, &mut ladder);
         assert_eq!(stats.prefill_chunks.load(Ordering::Relaxed), 1);
         assert_eq!(
             live[1].task.uncached_prompt_len(),
@@ -835,7 +937,7 @@ mod tests {
         // 9 tokens at chunk 4 = 3 chunks per prompt, interleaved one per
         // round with the finished session's decode steps.
         for _ in 0..6 {
-            round(&mut engine, &mut live, &mut resume, &stats, &opts, &mut ladder);
+            round(&mut engine, &mut live, &mut resume, &stats, &tracer, &opts, &mut ladder);
         }
         assert_eq!(stats.prefill_chunks.load(Ordering::Relaxed), 6);
         assert!(live.iter().all(|s| s.task.state() != TaskState::Prefill));

@@ -29,6 +29,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::engine::StepEngine;
+use crate::trace::Tracer;
 
 use super::{sessions, CancelFlag, Job, ServeOpts, ServerStats};
 
@@ -145,6 +146,10 @@ pub struct EngineWorker {
     /// This worker's serving statistics (aggregated fleet-wide by the
     /// router's [`FleetSnapshot`](super::FleetSnapshot)).
     pub stats: Arc<ServerStats>,
+    /// This worker's flight recorder (DESIGN.md §17): the scheduler loop,
+    /// the engine's stage spans, and the router's placement/steal events
+    /// all record into it; exporters read it from here.
+    pub tracer: Arc<Tracer>,
     queue: Arc<JobQueue>,
     stop: CancelFlag,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
@@ -156,22 +161,25 @@ impl EngineWorker {
     /// ready, mirroring the actor-runtime spawn handshake.
     pub fn spawn(
         id: usize,
-        engine: Box<dyn StepEngine + Send>,
+        mut engine: Box<dyn StepEngine + Send>,
         opts: &ServeOpts,
     ) -> crate::Result<Self> {
         let queue = Arc::new(JobQueue::new(opts.max_queue));
         let stats = Arc::new(ServerStats::default());
+        let tracer = Arc::new(Tracer::new(id, opts.trace_ring));
         let stop: CancelFlag = Arc::new(AtomicBool::new(false));
         let (ready_tx, ready_rx) = mpsc::channel::<()>();
-        let (q, s, st, o) = (queue.clone(), stats.clone(), stop.clone(), opts.clone());
+        engine.set_tracer(tracer.clone());
+        let (q, s, tr, st, o) =
+            (queue.clone(), stats.clone(), tracer.clone(), stop.clone(), opts.clone());
         let thread = std::thread::Builder::new()
             .name(format!("ygg-worker-{id}"))
             .spawn(move || {
                 let _ = ready_tx.send(());
-                sessions::run_worker(engine, q, s, st, o);
+                sessions::run_worker(engine, q, s, tr, st, o);
             })?;
         let _ = ready_rx.recv();
-        Ok(Self { id, stats, queue, stop, thread: Mutex::new(Some(thread)) })
+        Ok(Self { id, stats, tracer, queue, stop, thread: Mutex::new(Some(thread)) })
     }
 
     /// The worker's job inbox (the router pushes and steals here).

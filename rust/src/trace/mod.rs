@@ -1,0 +1,677 @@
+//! Request-lifecycle tracing (DESIGN.md §17): a per-worker fixed-capacity
+//! **flight recorder** of structured [`TraceEvent`]s plus two export
+//! paths — Chrome trace-event JSON (Perfetto-loadable, `--trace-out`) and
+//! a Prometheus text-format exposition (the `{"metrics": true}` wire
+//! request).
+//!
+//! ## Why a ring buffer and not a log
+//!
+//! The serving round loop is allocation-audited (`tests/alloc_steady_state.rs`
+//! holds it to **zero** steady-state heap allocations), so the recorder
+//! cannot format strings, grow vectors, or touch a channel on the hot
+//! path. Instead every event is a fixed-size [`Copy`] record — an interned
+//! [`Name`] id, a [`Kind`], and five integers — written into a ring of
+//! preallocated slots under a brief mutex. Pushing is O(1), alloc-free,
+//! and oldest events are overwritten silently; the ring is a *flight
+//! recorder*, sized (`--trace-ring`) to hold the last few seconds of
+//! decisions so a post-mortem (degradation escalation, preemption) can
+//! dump the recent window without having paid for unbounded history.
+//!
+//! ## Event schema
+//!
+//! Every event is stamped `(worker, request uid, round, span id)`:
+//!
+//! * `worker` — fleet-wide worker index (one tracer per worker).
+//! * `uid` — the request uid minted by the router (`(worker+1) << 48 | seq`),
+//!   or 0 for round-wide events (stage spans cover the whole batch).
+//! * `round` — the worker's scheduling-round counter, set once per round
+//!   by the scheduler; engine-side stage spans inherit it.
+//! * `span` — pairs a [`Kind::SpanBegin`] with its [`Kind::SpanEnd`];
+//!   0 for instant events.
+//!
+//! `arg` carries one event-specific integer: tokens reused on
+//! [`Name::PrefixAttach`], pending prefill on [`Name::PrefillChunk`], granted
+//! budget on [`Name::AllocGrant`], the new rung on [`Name::RungChange`].
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default flight-recorder capacity (events per worker, `--trace-ring`).
+pub const DEFAULT_RING: usize = 8192;
+
+/// Rounds of history auto-dumped on degradation escalation / preemption.
+pub const DUMP_ROUNDS: u64 = 4;
+
+/// Interned event-name ids. The enum *is* the intern table: recording
+/// stores the discriminant, exporters call [`Name::as_str`] off the hot
+/// path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Name {
+    /// Whole-request span: opened at admission, closed at completion,
+    /// error, cancel, or shutdown-abort.
+    Request,
+    /// A request was admitted into the live set (instant).
+    Admit,
+    /// A request was rejected at admission (instant; arg = queue depth).
+    Reject,
+    /// Router placement decision (instant; arg = 1 for an affinity hit,
+    /// 0 for a load-based fallback).
+    Place,
+    /// Work-stealing migration into this worker (instant; arg = source
+    /// worker).
+    Steal,
+    /// Prefix-cache attach at admission (instant; arg = prompt tokens
+    /// reused from the radix trie).
+    PrefixAttach,
+    /// One chunked-prefill slice (instant; arg = uncached prompt tokens
+    /// still pending after the slice — 0 marks the final chunk).
+    PrefillChunk,
+    /// One scheduling round (span; uid 0).
+    Round,
+    /// Deferred-head draft stage (span; uid 0).
+    HeadDraft,
+    /// Per-level tree-draft stage (span; uid 0).
+    TreeDraft,
+    /// CPU mask/pack build stage (span; uid 0).
+    CpuBuild,
+    /// Packed tree-verification stage (span; uid 0).
+    Verify,
+    /// Arena acceptance-walk stage (span; uid 0).
+    AcceptWalk,
+    /// Per-session verify-budget grant (instant; arg = granted rows).
+    AllocGrant,
+    /// Degradation-ladder rung transition (instant; arg = new rung).
+    RungChange,
+    /// A session was preempted to the resume deque (instant).
+    Preempt,
+    /// A preempted session resumed (instant; arg = resume count).
+    Resume,
+    /// Client disconnect observed mid-stream (instant).
+    Disconnect,
+    /// A request finished and its summary was sent (instant; arg =
+    /// tokens generated).
+    Done,
+}
+
+impl Name {
+    /// Static display name (also the Chrome trace-event `name`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Name::Request => "request",
+            Name::Admit => "admit",
+            Name::Reject => "reject",
+            Name::Place => "place",
+            Name::Steal => "steal",
+            Name::PrefixAttach => "prefix_attach",
+            Name::PrefillChunk => "prefill_chunk",
+            Name::Round => "round",
+            Name::HeadDraft => "stage.head_draft",
+            Name::TreeDraft => "stage.tree_draft",
+            Name::CpuBuild => "stage.cpu_build",
+            Name::Verify => "stage.verify",
+            Name::AcceptWalk => "stage.accept_walk",
+            Name::AllocGrant => "alloc_grant",
+            Name::RungChange => "rung_change",
+            Name::Preempt => "preempt",
+            Name::Resume => "resume",
+            Name::Disconnect => "disconnect",
+            Name::Done => "done",
+        }
+    }
+}
+
+/// Event kind: paired span edges or a standalone instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// Opens a span; paired with the [`Kind::SpanEnd`] carrying the same
+    /// span id.
+    SpanBegin,
+    /// Closes the span opened with the same span id.
+    SpanEnd,
+    /// A point event (no duration).
+    Instant,
+}
+
+/// One fixed-size trace record (see the module docs for the schema).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Interned event name.
+    pub name: Name,
+    /// Span edge or instant.
+    pub kind: Kind,
+    /// Fleet-wide worker index.
+    pub worker: u16,
+    /// Request uid (0 for round-wide events).
+    pub uid: u64,
+    /// Scheduling round the event occurred in.
+    pub round: u64,
+    /// Span pairing id (0 for instants).
+    pub span: u32,
+    /// Microseconds since the tracer's epoch.
+    pub t_us: u64,
+    /// Event-specific argument (see [`Name`]).
+    pub arg: i64,
+}
+
+impl TraceEvent {
+    /// Placeholder filling preallocated ring slots; never observable
+    /// (the ring tracks its valid length separately).
+    pub const EMPTY: TraceEvent = TraceEvent {
+        name: Name::Request,
+        kind: Kind::Instant,
+        worker: 0,
+        uid: 0,
+        round: 0,
+        span: 0,
+        t_us: 0,
+        arg: 0,
+    };
+}
+
+/// Fixed-capacity ring of [`TraceEvent`]s. All slots are preallocated at
+/// construction; [`FlightRecorder::push`] never touches the heap.
+pub struct FlightRecorder {
+    buf: Vec<TraceEvent>,
+    /// Next slot to overwrite.
+    next: usize,
+    /// Valid events (≤ capacity).
+    len: usize,
+    /// Events ever pushed (monotone; `total - len` were overwritten).
+    total: u64,
+}
+
+impl FlightRecorder {
+    /// A recorder holding at most `capacity` events (0 disables it).
+    pub fn new(capacity: usize) -> Self {
+        Self { buf: vec![TraceEvent::EMPTY; capacity], next: 0, len: 0, total: 0 }
+    }
+
+    /// Appends one event, overwriting the oldest once full. O(1) and
+    /// allocation-free; a no-op at capacity 0.
+    pub fn push(&mut self, ev: TraceEvent) {
+        let cap = self.buf.len();
+        if cap == 0 {
+            return;
+        }
+        self.buf[self.next] = ev;
+        self.next = (self.next + 1) % cap;
+        self.len = (self.len + 1).min(cap);
+        self.total += 1;
+    }
+
+    /// Slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Valid (retained) events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing has been recorded (or capacity is 0).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Events ever pushed, including overwritten ones.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The retained events, oldest first (allocates; export path only).
+    pub fn to_vec(&self) -> Vec<TraceEvent> {
+        let cap = self.buf.len();
+        let mut out = Vec::with_capacity(self.len);
+        let start = (self.next + cap - self.len) % cap.max(1);
+        for i in 0..self.len {
+            out.push(self.buf[(start + i) % cap]);
+        }
+        out
+    }
+}
+
+/// Per-worker tracing handle: the flight-recorder ring plus the round
+/// counter and span-id mint. Shared (`Arc`) between the scheduler loop,
+/// the engine (stage spans), and the router (placement/steal events).
+pub struct Tracer {
+    worker: u16,
+    epoch: Instant,
+    ring: Mutex<FlightRecorder>,
+    round: AtomicU64,
+    next_span: AtomicU32,
+}
+
+impl Tracer {
+    /// A tracer for `worker` retaining the last `capacity` events.
+    /// Capacity 0 disables recording entirely (pushes return before
+    /// taking the lock).
+    pub fn new(worker: usize, capacity: usize) -> Self {
+        Self {
+            worker: worker as u16,
+            epoch: Instant::now(),
+            ring: Mutex::new(FlightRecorder::new(capacity)),
+            round: AtomicU64::new(0),
+            next_span: AtomicU32::new(1),
+        }
+    }
+
+    /// The worker index this tracer stamps on every event.
+    pub fn worker(&self) -> usize {
+        self.worker as usize
+    }
+
+    /// True when the ring has slots (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.ring.lock().unwrap().capacity() > 0
+    }
+
+    /// Sets the scheduling-round stamp for subsequent events. Called once
+    /// per round by the scheduler; engine-side stage spans inherit it.
+    pub fn set_round(&self, round: u64) {
+        self.round.store(round, Ordering::Relaxed);
+    }
+
+    /// The current scheduling-round stamp.
+    pub fn current_round(&self) -> u64 {
+        self.round.load(Ordering::Relaxed)
+    }
+
+    /// Total events ever pushed (monotone across overwrites).
+    pub fn pushed(&self) -> u64 {
+        self.ring.lock().unwrap().total()
+    }
+
+    fn push(&self, name: Name, kind: Kind, uid: u64, span: u32, arg: i64) {
+        let ev = TraceEvent {
+            name,
+            kind,
+            worker: self.worker,
+            uid,
+            round: self.round.load(Ordering::Relaxed),
+            span,
+            t_us: self.epoch.elapsed().as_micros() as u64,
+            arg,
+        };
+        let mut ring = self.ring.lock().unwrap();
+        ring.push(ev);
+    }
+
+    /// Records an instant event.
+    pub fn instant(&self, name: Name, uid: u64, arg: i64) {
+        self.push(name, Kind::Instant, uid, 0, arg);
+    }
+
+    /// Opens a span and returns its pairing id for [`Tracer::end`].
+    pub fn begin(&self, name: Name, uid: u64) -> u32 {
+        let span = self.next_span.fetch_add(1, Ordering::Relaxed);
+        self.push(name, Kind::SpanBegin, uid, span, 0);
+        span
+    }
+
+    /// Closes the span opened by [`Tracer::begin`].
+    pub fn end(&self, name: Name, uid: u64, span: u32) {
+        self.push(name, Kind::SpanEnd, uid, span, 0);
+    }
+
+    /// Closes a span carrying a result argument (e.g. accepted tokens).
+    pub fn end_with(&self, name: Name, uid: u64, span: u32, arg: i64) {
+        self.push(name, Kind::SpanEnd, uid, span, arg);
+    }
+
+    /// Snapshot of the retained events, oldest first (allocates).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring.lock().unwrap().to_vec()
+    }
+
+    /// Retained events from the most recent `rounds` scheduling rounds —
+    /// the auto-dump window on escalation / preemption (allocates).
+    pub fn window(&self, rounds: u64) -> Vec<TraceEvent> {
+        let cur = self.current_round();
+        let lo = cur.saturating_sub(rounds.saturating_sub(1));
+        self.events().into_iter().filter(|e| e.round >= lo).collect()
+    }
+}
+
+/// One-line rendering of a dumped flight-recorder window for the log
+/// stream (post-mortem context on escalation / preemption).
+pub fn format_window(events: &[TraceEvent]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for e in events {
+        let kind = match e.kind {
+            Kind::SpanBegin => "B",
+            Kind::SpanEnd => "E",
+            Kind::Instant => "i",
+        };
+        let _ = writeln!(
+            out,
+            "  [t={}us w{} uid={} r{}] {} {} span={} arg={}",
+            e.t_us,
+            e.worker,
+            e.uid,
+            e.round,
+            kind,
+            e.name.as_str(),
+            e.span,
+            e.arg
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------- Chrome
+
+/// Renders events as a Chrome trace-event JSON document (the
+/// `{"traceEvents": [...]}` object form; loadable in Perfetto /
+/// `chrome://tracing`). Spans become `B`/`E` pairs nested per worker
+/// track (`pid` = worker, `tid` = request uid, 0 for round-wide), and
+/// instants become thread-scoped `i` events. Each event's args carry the
+/// full `(uid, round, span, arg)` stamp, so the JSON round-trips the
+/// schema losslessly even where `tid` truncates the uid to 32 bits.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let ph = match e.kind {
+                Kind::SpanBegin => "B",
+                Kind::SpanEnd => "E",
+                Kind::Instant => "i",
+            };
+            let mut pairs = vec![
+                ("name", Json::Str(e.name.as_str().to_string())),
+                ("ph", Json::Str(ph.to_string())),
+                ("pid", Json::Num(e.worker as f64)),
+                ("tid", Json::Num((e.uid & 0xffff_ffff) as f64)),
+                ("ts", Json::Num(e.t_us as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("uid", Json::from_u64(e.uid)),
+                        ("round", Json::from_u64(e.round)),
+                        ("span", Json::Num(e.span as f64)),
+                        ("arg", Json::Num(e.arg as f64)),
+                    ]),
+                ),
+            ];
+            if matches!(e.kind, Kind::Instant) {
+                // Thread-scoped instant (draws at the event's track).
+                pairs.push(("s", Json::Str("t".to_string())));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+// ------------------------------------------------------------ Prometheus
+
+/// Histogram bucket upper bounds (seconds) for latency expositions —
+/// log-spaced from 0.5 ms to 2.5 s; `+Inf` is implicit.
+pub const LATENCY_BUCKETS_S: [f64; 12] =
+    [0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+
+fn write_labels(out: &mut String, labels: &[(&str, &str)]) {
+    use std::fmt::Write as _;
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""));
+    }
+    out.push('}');
+}
+
+/// Writes the `# HELP` / `# TYPE` header for a metric (once per name).
+pub fn prom_header(out: &mut String, name: &str, kind: &str, help: &str) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Writes one labelled sample line (`name{labels} value`).
+pub fn prom_sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    use std::fmt::Write as _;
+    out.push_str(name);
+    write_labels(out, labels);
+    if value.is_nan() {
+        let _ = writeln!(out, " NaN");
+    } else if value == f64::INFINITY {
+        let _ = writeln!(out, " +Inf");
+    } else {
+        let _ = writeln!(out, " {value}");
+    }
+}
+
+/// Writes a full histogram family member — cumulative `_bucket` lines
+/// over [`LATENCY_BUCKETS_S`] plus `+Inf`, `_sum`, and `_count` — from
+/// raw samples (the windowed `Recorder` series).
+pub fn prom_histogram(out: &mut String, name: &str, labels: &[(&str, &str)], samples: &[f64]) {
+    use std::fmt::Write as _;
+    for le in LATENCY_BUCKETS_S {
+        let cumulative = samples.iter().filter(|&&x| x <= le).count();
+        out.push_str(name);
+        out.push_str("_bucket");
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        let le_s = format!("{le}");
+        ls.push(("le", &le_s));
+        write_labels(out, &ls);
+        let _ = writeln!(out, " {cumulative}");
+    }
+    out.push_str(name);
+    out.push_str("_bucket");
+    let mut ls: Vec<(&str, &str)> = labels.to_vec();
+    ls.push(("le", "+Inf"));
+    write_labels(out, &ls);
+    let _ = writeln!(out, " {}", samples.len());
+    prom_sample(out, &format!("{name}_sum"), labels, samples.iter().sum());
+    prom_sample(out, &format!("{name}_count"), labels, samples.len() as f64);
+}
+
+/// Validates Prometheus text-exposition format line by line: `# HELP` /
+/// `# TYPE` comments, blank lines, and `name{labels} value` samples with
+/// legal metric-name characters and parseable values. Used by the unit
+/// tests and the `serving_trace_mock` acceptance check.
+pub fn validate_prometheus(text: &str) -> crate::Result<()> {
+    fn name_ok(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let what = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            anyhow::ensure!(
+                what == "HELP" || what == "TYPE",
+                "line {n}: comment must be HELP or TYPE"
+            );
+            anyhow::ensure!(name_ok(name), "line {n}: bad metric name '{name}'");
+            if what == "TYPE" {
+                let kind = parts.next().unwrap_or("");
+                anyhow::ensure!(
+                    matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                    "line {n}: bad metric type '{kind}'"
+                );
+            }
+            continue;
+        }
+        anyhow::ensure!(!line.starts_with('#'), "line {n}: malformed comment");
+        // Sample line: name[{labels}] value
+        let (head, value) = match line.find('}') {
+            Some(close) => {
+                let (h, rest) = line.split_at(close + 1);
+                (h, rest.trim_start())
+            }
+            None => {
+                let mut it = line.splitn(2, ' ');
+                (it.next().unwrap_or(""), it.next().unwrap_or("").trim_start())
+            }
+        };
+        let (name, labels) = match head.find('{') {
+            Some(open) => {
+                anyhow::ensure!(head.ends_with('}'), "line {n}: unterminated labels");
+                (&head[..open], Some(&head[open + 1..head.len() - 1]))
+            }
+            None => (head, None),
+        };
+        anyhow::ensure!(name_ok(name), "line {n}: bad metric name '{name}'");
+        if let Some(labels) = labels {
+            for pair in labels.split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("line {n}: label without '='"))?;
+                anyhow::ensure!(name_ok(k), "line {n}: bad label name '{k}'");
+                anyhow::ensure!(
+                    v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                    "line {n}: unquoted label value"
+                );
+            }
+        }
+        let ok = matches!(value, "+Inf" | "-Inf" | "NaN") || value.parse::<f64>().is_ok();
+        anyhow::ensure!(ok, "line {n}: unparseable value '{value}'");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(uid: u64, t: u64) -> TraceEvent {
+        TraceEvent { uid, t_us: t, ..TraceEvent::EMPTY }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_in_order() {
+        let mut r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.push(ev(i, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 10);
+        let uids: Vec<u64> = r.to_vec().iter().map(|e| e.uid).collect();
+        assert_eq!(uids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_below_capacity_keeps_everything() {
+        let mut r = FlightRecorder::new(8);
+        for i in 0..3u64 {
+            r.push(ev(i, i));
+        }
+        let uids: Vec<u64> = r.to_vec().iter().map(|e| e.uid).collect();
+        assert_eq!(uids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_inert() {
+        let mut r = FlightRecorder::new(0);
+        r.push(ev(1, 1));
+        assert!(r.is_empty());
+        assert_eq!(r.total(), 0);
+        assert!(r.to_vec().is_empty());
+    }
+
+    #[test]
+    fn tracer_stamps_worker_round_and_pairs_spans() {
+        let t = Tracer::new(3, 64);
+        t.set_round(7);
+        let s = t.begin(Name::Round, 0);
+        t.instant(Name::Admit, 42, 0);
+        t.end(Name::Round, 0, s);
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert!(evs.iter().all(|e| e.worker == 3 && e.round == 7));
+        assert_eq!(evs[0].kind, Kind::SpanBegin);
+        assert_eq!(evs[2].kind, Kind::SpanEnd);
+        assert_eq!(evs[0].span, evs[2].span);
+        assert_eq!(evs[1].uid, 42);
+    }
+
+    #[test]
+    fn window_selects_recent_rounds_only() {
+        let t = Tracer::new(0, 1024);
+        for round in 1..=10u64 {
+            t.set_round(round);
+            t.instant(Name::Admit, round, 0);
+        }
+        let w = t.window(3);
+        let rounds: Vec<u64> = w.iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![8, 9, 10]);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_parser() {
+        let t = Tracer::new(1, 64);
+        t.set_round(2);
+        let s = t.begin(Name::Verify, 0);
+        t.end(Name::Verify, 0, s);
+        t.instant(Name::Steal, 99, 0);
+        let doc = chrome_trace(&t.events());
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let evs = back.arr("traceEvents").unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].str("ph").unwrap(), "B");
+        assert_eq!(evs[1].str("ph").unwrap(), "E");
+        assert_eq!(evs[2].str("ph").unwrap(), "i");
+        assert_eq!(evs[2].str("s").unwrap(), "t");
+        assert_eq!(evs[2].req("args").unwrap().u64("uid").unwrap(), 99);
+        assert_eq!(evs[0].f64("pid").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn exposition_helpers_emit_valid_text() {
+        let mut out = String::new();
+        prom_header(&mut out, "ygg_requests_total", "counter", "Requests accepted.");
+        prom_sample(&mut out, "ygg_requests_total", &[("worker", "0")], 17.0);
+        prom_header(&mut out, "ygg_ttft_seconds", "histogram", "Time to first token.");
+        prom_histogram(
+            &mut out,
+            "ygg_ttft_seconds",
+            &[("worker", "fleet")],
+            &[0.002, 0.004, 0.3, 5.0],
+        );
+        validate_prometheus(&out).unwrap();
+        assert!(out.contains("ygg_ttft_seconds_bucket{worker=\"fleet\",le=\"+Inf\"} 4"));
+        assert!(out.contains("ygg_ttft_seconds_count{worker=\"fleet\"} 4"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate_prometheus("1bad_name 3").is_err());
+        assert!(validate_prometheus("x{le=unquoted} 3").is_err());
+        assert!(validate_prometheus("x three").is_err());
+        assert!(validate_prometheus("#! not a help").is_err());
+        assert!(validate_prometheus("# TYPE x flavour").is_err());
+        validate_prometheus("x{le=\"0.5\"} 3\n# HELP x h\n# TYPE x gauge\nx 1").unwrap();
+    }
+
+    #[test]
+    fn format_window_is_one_line_per_event() {
+        let t = Tracer::new(2, 16);
+        t.instant(Name::Preempt, 5, 0);
+        t.instant(Name::Resume, 5, 1);
+        let s = format_window(&t.events());
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.contains("preempt"));
+        assert!(s.contains("uid=5"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Tiny leveled logger (the in-tree `log`/`env_logger` substitute).
+//!
+//! One global level (an atomic, set once from `--log-level`), one-line
+//! output on stderr, and an optional `(worker, request uid)` context so
+//! log lines correlate with the trace spans of DESIGN.md §17:
+//!
+//! ```text
+//! [INFO w0 uid=281474976710657] admitted after 1.2ms queueing
+//! ```
+//!
+//! Call sites format their message eagerly; callers on hot paths must
+//! gate on [`enabled`] first (the serving round loop does not log at all
+//! — it records trace events instead).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Unrecoverable or data-losing conditions.
+    Error = 0,
+    /// Degraded operation (rung escalations, preemptions, spills).
+    Warn = 1,
+    /// Lifecycle milestones (startup banners, loaded artifacts).
+    Info = 2,
+    /// High-volume diagnostics (per-request, per-round).
+    Debug = 3,
+}
+
+impl Level {
+    /// Display tag, fixed-width enough for eyeballing.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    /// Parses a `--log-level` value (`error|warn|info|debug`).
+    pub fn parse(s: &str) -> crate::Result<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            _ => anyhow::bail!("--log-level must be error|warn|info|debug, got '{s}'"),
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Sets the global level (everything at or above it prints).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True when `level` would print — gate expensive formatting on this.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Core emitter: one line on stderr with optional worker / request-uid
+/// context. Prefer the [`error`]/[`warn`]/[`info`]/[`debug`] shorthands
+/// when there is no context to attach.
+pub fn log(level: Level, worker: Option<usize>, uid: Option<u64>, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let mut head = String::with_capacity(32);
+    head.push('[');
+    head.push_str(level.as_str());
+    if let Some(w) = worker {
+        head.push_str(" w");
+        head.push_str(&w.to_string());
+    }
+    if let Some(u) = uid {
+        head.push_str(" uid=");
+        head.push_str(&u.to_string());
+    }
+    head.push(']');
+    eprintln!("{head} {msg}");
+}
+
+/// Error-level line without context.
+pub fn error(msg: &str) {
+    log(Level::Error, None, None, msg);
+}
+
+/// Warn-level line without context.
+pub fn warn(msg: &str) {
+    log(Level::Warn, None, None, msg);
+}
+
+/// Info-level line without context.
+pub fn info(msg: &str) {
+    log(Level::Info, None, None, msg);
+}
+
+/// Debug-level line without context.
+pub fn debug(msg: &str) {
+    log(Level::Debug, None, None, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("warn").unwrap(), Level::Warn);
+        assert_eq!(Level::parse("WARNING").unwrap(), Level::Warn);
+        assert!(Level::parse("loud").is_err());
+        assert!(Level::Error < Level::Debug);
+    }
+
+    #[test]
+    fn enabled_respects_the_global_level() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore the default for other tests
+        assert!(enabled(Level::Info));
+    }
+}

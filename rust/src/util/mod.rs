@@ -1,13 +1,15 @@
 //! Self-contained substrates the repository implements instead of pulling
-//! dependencies: JSON ([`json`]), CLI parsing ([`cli`]), a benchmark
-//! statistics harness ([`benchkit`]), a mini property-testing helper
-//! ([`prop`]), bit-word utilities ([`bits`]) and scoped-thread fan-out
-//! ([`par`], the rayon substitute). The build is fully offline (see
-//! Cargo.toml); everything a deployment needs ships in-tree.
+//! dependencies: JSON ([`json`]), CLI parsing ([`cli`]), a leveled logger
+//! ([`log`]), a benchmark statistics harness ([`benchkit`]), a mini
+//! property-testing helper ([`prop`]), bit-word utilities ([`bits`]) and
+//! scoped-thread fan-out ([`par`], the rayon substitute). The build is
+//! fully offline (see Cargo.toml); everything a deployment needs ships
+//! in-tree.
 
 pub mod benchkit;
 pub mod bits;
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod par;
 pub mod prop;

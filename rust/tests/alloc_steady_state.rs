@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use yggdrasil::kvcache::{SlotOwnership, SlotRange};
 use yggdrasil::sampling::XorShiftRng;
+use yggdrasil::trace::{Name, Tracer};
 use yggdrasil::tree::{
     grow_step, owner_words, rows_owned_bits, Frontier, MaskBuilder, RoundArena, TokenTree,
 };
@@ -115,9 +116,23 @@ fn fixture() -> Fixture {
 /// One mock batched round over every borrow the engine's round loop
 /// takes from its [`RoundArena`]. Returns a checksum so nothing is
 /// optimised away.
-fn round(fx: &Fixture, builders: &mut [MaskBuilder], arena: &mut RoundArena) -> u64 {
+///
+/// The flight recorder is **on** for the audit (DESIGN.md §17): the
+/// round records the same span/instant mix the serving scheduler does —
+/// a round span, stage spans, and per-session grant instants — so any
+/// allocation the tracer sneaks onto the hot path fails this test too.
+fn round(
+    fx: &Fixture,
+    builders: &mut [MaskBuilder],
+    arena: &mut RoundArena,
+    tracer: &Tracer,
+    round_no: u64,
+) -> u64 {
+    tracer.set_round(round_no);
+    let round_span = tracer.begin(Name::Round, 0);
     // Mask half: word-wise per-session build, ownership word-test,
     // incremental block-diagonal pack, one dense expansion at the end.
+    let build_span = tracer.begin(Name::CpuBuild, 0);
     arena.packed.reshape(CAPACITY, fx.total_rows);
     let mut at = 0usize;
     for i in 0..fx.trees.len() {
@@ -130,14 +145,17 @@ fn round(fx: &Fixture, builders: &mut [MaskBuilder], arena: &mut RoundArena) -> 
         assert!(rows_owned_bits(bits, &fx.owners[i]));
         arena.packed.copy_rows_from(bits, at);
         at += fx.trees[i].len();
+        tracer.instant(Name::AllocGrant, i as u64 + 1, fx.trees[i].len() as i64);
     }
     let mut dense = arena.take_f32();
     arena.packed.expand_into(&mut dense);
     let mut acc = dense.iter().filter(|&&v| v != 0.0).count() as u64;
     arena.put_f32(dense);
+    tracer.end(Name::CpuBuild, 0, build_span);
 
     // Walk half: the arena acceptance walk (node→row table + reused
     // stacks), descending to the largest-token kept child.
+    let walk_span = tracer.begin(Name::AcceptWalk, 0);
     for (tree, keep) in fx.trees.iter().zip(&fx.keeps) {
         arena.row_of.clear();
         arena.row_of.resize(tree.len(), -1);
@@ -166,6 +184,8 @@ fn round(fx: &Fixture, builders: &mut [MaskBuilder], arena: &mut RoundArena) -> 
         }
         acc += arena.walk_path.len() as u64;
     }
+    tracer.end(Name::AcceptWalk, 0, walk_span);
+    tracer.end(Name::Round, 0, round_span);
     acc
 }
 
@@ -174,18 +194,21 @@ fn round_loop_has_zero_steady_state_allocations() {
     let mut fx = fixture();
     let mut builders = std::mem::take(&mut fx.builders);
     let mut arena = RoundArena::new();
+    // A small ring so the measured rounds also exercise wraparound
+    // overwrites; the slots preallocate here, before the audit window.
+    let tracer = Tracer::new(0, 256);
 
     // Warm-up: the first rounds grow the builder scratch, the packed
     // words, the f32 pool entry, and the walk stacks to their final
     // capacities.
     let mut sink = 0u64;
-    for _ in 0..3 {
-        sink += round(&fx, &mut builders, &mut arena);
+    for r in 0..3 {
+        sink += round(&fx, &mut builders, &mut arena, &tracer, r + 1);
     }
 
     let before = ALLOCS.load(Ordering::Relaxed);
-    for _ in 0..50 {
-        sink += round(&fx, &mut builders, &mut arena);
+    for r in 0..50 {
+        sink += round(&fx, &mut builders, &mut arena, &tracer, r + 4);
     }
     let after = ALLOCS.load(Ordering::Relaxed);
 
@@ -193,7 +216,11 @@ fn round_loop_has_zero_steady_state_allocations() {
     assert_eq!(
         after - before,
         0,
-        "steady-state rounds must not touch the heap (got {} allocations over 50 rounds)",
+        "steady-state rounds must not touch the heap (got {} allocations over 50 rounds \
+         with tracing enabled)",
         after - before,
     );
+    // The recorder really ran: every round pushed its span edges and
+    // per-session grant instants.
+    assert_eq!(tracer.pushed(), 53 * (6 + SESSIONS as u64));
 }

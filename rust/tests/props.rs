@@ -216,6 +216,122 @@ fn prop_plan_search_is_argmin() {
     );
 }
 
+/// Flight-recorder ring invariants (DESIGN.md §17): over random event
+/// streams and ring capacities (including the inert capacity-0 ring),
+/// the dump equals the most recent ≤ capacity events in push order
+/// (checked against an unbounded model vector) and `total()` counts
+/// every push (none on the inert capacity-0 ring); and over random
+/// interleavings of span begin/end and
+/// instant records through a roomy [`Tracer`], the retained stream keeps
+/// every span balanced — each id begun once, ended once after its begin,
+/// with matching name and uid — while instants carry span id 0 and every
+/// event wears the tracer's worker stamp.
+#[test]
+fn prop_flight_recorder_ring_and_span_balance() {
+    use std::collections::BTreeMap;
+    use yggdrasil::trace::{FlightRecorder, Kind, Name, TraceEvent, Tracer};
+    run_prop(
+        "flight-recorder-ring",
+        PropConfig { cases: 128, ..Default::default() },
+        |rng| rng.next_u64(),
+        |_| vec![],
+        |&seed| {
+            let mut rng = XorShiftRng::new(seed);
+
+            // Half 1: wraparound against the unbounded model.
+            let cap = rng.next_range(33); // 0..=32
+            let n = rng.next_range(120);
+            let mut ring = FlightRecorder::new(cap);
+            let mut model: Vec<TraceEvent> = Vec::new();
+            for i in 0..n {
+                let ev = TraceEvent {
+                    uid: i as u64,
+                    t_us: rng.next_u64() % 1_000,
+                    arg: (rng.next_u64() % 64) as i64,
+                    ..TraceEvent::EMPTY
+                };
+                ring.push(ev);
+                model.push(ev);
+            }
+            // A capacity-0 ring is inert: pushes return before counting.
+            let want_total = if cap == 0 { 0 } else { n as u64 };
+            if ring.total() != want_total {
+                return Err(format!("total {} != {want_total} after {n} pushes", ring.total()));
+            }
+            let want: Vec<u64> = model.iter().rev().take(cap).rev().map(|e| e.uid).collect();
+            let got: Vec<u64> = ring.to_vec().iter().map(|e| e.uid).collect();
+            if got != want {
+                return Err(format!(
+                    "dump diverged from the most recent ≤{cap} (got {got:?}, want {want:?})"
+                ));
+            }
+
+            // Half 2: span balance through a Tracer that retains all.
+            let t = Tracer::new(3, 4096);
+            let names = [Name::Round, Name::HeadDraft, Name::TreeDraft, Name::Verify];
+            let mut open: Vec<(Name, u64, u32)> = Vec::new();
+            for _ in 0..(1 + rng.next_range(200)) {
+                match rng.next_range(3) {
+                    0 => {
+                        let nm = names[rng.next_range(names.len())];
+                        let uid = rng.next_u64() % 8;
+                        let span = t.begin(nm, uid);
+                        open.push((nm, uid, span));
+                    }
+                    1 => {
+                        if !open.is_empty() {
+                            let k = rng.next_range(open.len());
+                            let (nm, uid, span) = open.swap_remove(k);
+                            t.end(nm, uid, span);
+                        }
+                    }
+                    _ => t.instant(Name::Admit, rng.next_u64() % 8, 1),
+                }
+            }
+            for (nm, uid, span) in open.drain(..) {
+                t.end(nm, uid, span);
+            }
+            let evs = t.events();
+            let mut begun: BTreeMap<u32, usize> = BTreeMap::new();
+            let mut ended = 0usize;
+            for (i, e) in evs.iter().enumerate() {
+                if e.worker != 3 {
+                    return Err(format!("event {i} lost the worker stamp: {}", e.worker));
+                }
+                match e.kind {
+                    Kind::SpanBegin => {
+                        if begun.insert(e.span, i).is_some() {
+                            return Err(format!("span id {} begun twice", e.span));
+                        }
+                    }
+                    Kind::SpanEnd => {
+                        let Some(&bi) = begun.get(&e.span) else {
+                            return Err(format!("span id {} ended before its begin", e.span));
+                        };
+                        let b = &evs[bi];
+                        if b.name != e.name || b.uid != e.uid {
+                            return Err(format!(
+                                "span id {} closed under a different name/uid",
+                                e.span
+                            ));
+                        }
+                        ended += 1;
+                    }
+                    Kind::Instant => {
+                        if e.span != 0 {
+                            return Err(format!("instant {i} carries span id {}", e.span));
+                        }
+                    }
+                }
+            }
+            if begun.len() != ended {
+                return Err(format!("{} begins vs {ended} ends", begun.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Round-level allocator invariants (DESIGN.md §15): over random
 /// session mixes and budgets, the global allocation never exceeds the
 /// round budget, the pool-headroom snapshot, or any session's static
